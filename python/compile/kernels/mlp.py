@@ -1,0 +1,103 @@
+"""Pallas kernel: fused 3-hidden-layer ReLU MLP forward (the NN-OSE hot path).
+
+The paper's neural OSE maps a distance vector delta in R^L to coordinates in
+R^K through an MLP with three hidden layers (Sec. 4.2). At serving time this
+is the entire per-query compute, so instead of four library matmuls with
+three intermediate HBM round-trips we fuse the whole chain into one kernel:
+
+    grid over batch tiles; ALL weight matrices are pinned in VMEM
+    (index_map is constant in the grid index, so Mosaic hoists the copies
+    out of the loop). At the paper's largest setting (L = 2100, H = 256/128/64,
+    K = 7 -> padded 8) the resident weights are
+        2100*256 + 256*128 + 128*64 + 64*8 floats ~= 2.3 MB fp32,
+    comfortably inside a TensorCore's ~16 MB VMEM, leaving room for the
+    [bb, L] activation tile.
+
+Intermediate activations live in registers/VMEM scratch for the lifetime of
+a batch tile — nothing but the input tile and the [bb, K] result touches HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pallas_util import LANE_MIN, ceil_to, pad_axis, pick_block
+
+
+def _matmul(a, b):
+    return jax.lax.dot_general(
+        a, b, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _kernel(d_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref,
+            w4_ref, b4_ref, o_ref):
+    h = jnp.maximum(_matmul(d_ref[...], w1_ref[...]) + b1_ref[...], 0.0)
+    h = jnp.maximum(_matmul(h, w2_ref[...]) + b2_ref[...], 0.0)
+    h = jnp.maximum(_matmul(h, w3_ref[...]) + b3_ref[...], 0.0)
+    o_ref[...] = _matmul(h, w4_ref[...]) + b4_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def mlp_fwd(d: jnp.ndarray, params, *, block_b: int = 256) -> jnp.ndarray:
+    """Fused forward: d [B, L] -> [B, K].
+
+    params = (w1 [L,H1], b1 [H1], w2 [H1,H2], b2 [H2], w3 [H2,H3], b3 [H3],
+              w4 [H3,K], b4 [K]).
+    """
+    w1, b1, w2, b2, w3, b3, w4, b4 = params
+    b, l = d.shape
+    if w1.shape[0] != l:
+        raise ValueError(f"w1 rows {w1.shape[0]} != input width {l}")
+    h1, h2, h3 = w1.shape[1], w2.shape[1], w3.shape[1]
+    k = w4.shape[1]
+
+    lp = ceil_to(l, LANE_MIN)
+    kp = ceil_to(k, LANE_MIN)
+    bb = pick_block(b, block_b)
+    bp = ceil_to(b, bb)
+
+    f32 = jnp.float32
+    dp = pad_axis(pad_axis(d.astype(f32), 1, lp), 0, bp)
+    w1p = pad_axis(w1.astype(f32), 0, lp)
+    w4p = pad_axis(w4.astype(f32), 1, kp)
+    b4p = pad_axis(b4.astype(f32).reshape(1, -1), 1, kp)
+
+    def full(shape):
+        # Weight blocks: the whole array every grid step (constant index_map).
+        return pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, lp), lambda i: (i, 0)),
+            full((lp, h1)),
+            full((1, h1)),
+            full((h1, h2)),
+            full((1, h2)),
+            full((h2, h3)),
+            full((1, h3)),
+            full((h3, kp)),
+            full((1, kp)),
+        ],
+        out_specs=pl.BlockSpec((bb, kp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, kp), f32),
+        interpret=True,
+    )(
+        dp,
+        w1p,
+        b1.astype(f32).reshape(1, -1),
+        w2.astype(f32),
+        b2.astype(f32).reshape(1, -1),
+        w3.astype(f32),
+        b3.astype(f32).reshape(1, -1),
+        w4p,
+        b4p,
+    )
+    return out[:b, :k]

@@ -1,0 +1,115 @@
+"""Pallas kernel: batched gradient of the out-of-sample objective (Eq. 2).
+
+For B independent new points y_b (the only movable coordinates), L fixed
+landmark embeddings lm, and measured dissimilarities delta[b, i]:
+
+    sigma_hat(y_b) = sum_i (||lm_i - y_b|| - delta_bi)^2
+    grad_b         = 2 * sum_i (d_bi - delta_bi) * (y_b - lm_i) / d_bi
+
+Schedule: grid (B/bb, L/bl) with the landmark axis as the revisited-output
+reduction axis (same pattern as `stress.py`). Each program computes one
+[bb, bl] distance tile via the MXU decomposition and folds its contribution
+into the [bb, Kp] gradient accumulator. Padding landmarks are masked by a
+statically baked l_real.
+
+This kernel is what makes the "optimisation method" batched: the paper's R
+implementation moves one point at a time through `optim`; here a whole batch
+of independent Eq.-2 problems shares each landmark tile fetch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pallas_util import LANE_MIN, ceil_to, pad_axis, pick_block
+
+_EPS = 1e-12
+
+
+def _kernel(l_real, bl, y_ref, lm_ref, delta_ref, grad_ref, sres_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+        sres_ref[...] = jnp.zeros_like(sres_ref)
+
+    y = y_ref[...]  # [bb, Kp]
+    lm = lm_ref[...]  # [bl, Kp]
+    delta = delta_ref[...]  # [bb, bl]
+
+    y2 = jnp.sum(y * y, axis=-1, keepdims=True)
+    l2 = jnp.sum(lm * lm, axis=-1, keepdims=True).T
+    cross = jax.lax.dot_general(
+        y, lm, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    d = jnp.sqrt(jnp.maximum(y2 + l2 - 2.0 * cross, 0.0))  # [bb, bl]
+
+    cols = j * bl + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    valid = cols < l_real
+
+    resid = jnp.where(valid, d - delta, 0.0)
+    coef = jnp.where(valid, resid / jnp.maximum(d, _EPS), 0.0)
+
+    row = jnp.sum(coef, axis=1, keepdims=True)
+    grad_ref[...] += 2.0 * (
+        y * row
+        - jax.lax.dot_general(
+            coef, lm, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    )
+    sres_ref[...] += jnp.sum(resid * resid, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_l"))
+def ose_grad(
+    y: jnp.ndarray,
+    lm: jnp.ndarray,
+    delta: jnp.ndarray,
+    *,
+    block_b: int = 128,
+    block_l: int = 512,
+):
+    """Returns (grad [B, K], sres [B]) of Eq. 2 for each batched point."""
+    b, k = y.shape
+    l, k2 = lm.shape
+    if k != k2:
+        raise ValueError(f"coordinate dims differ: {k} vs {k2}")
+    if delta.shape != (b, l):
+        raise ValueError(f"delta shape {delta.shape} != ({b}, {l})")
+    kp = ceil_to(k, LANE_MIN)
+    bb = pick_block(b, block_b)
+    bl = pick_block(l, block_l)
+    bp = ceil_to(b, bb)
+    lp = ceil_to(l, bl)
+
+    yp = pad_axis(pad_axis(y.astype(jnp.float32), 1, kp), 0, bp)
+    lmp = pad_axis(pad_axis(lm.astype(jnp.float32), 1, kp), 0, lp)
+    dp = pad_axis(pad_axis(delta.astype(jnp.float32), 1, lp), 0, bp)
+
+    kern = functools.partial(_kernel, l, bl)
+    grad, sres = pl.pallas_call(
+        kern,
+        grid=(bp // bb, lp // bl),
+        in_specs=[
+            pl.BlockSpec((bb, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bl, kp), lambda i, j: (j, 0)),
+            pl.BlockSpec((bb, bl), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, kp), jnp.float32),
+            jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(yp, lmp, dp)
+    return grad[:b, :k], sres[:b, 0]

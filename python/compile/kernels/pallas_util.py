@@ -1,0 +1,47 @@
+"""Shared helpers for the Pallas kernels: padding and tiling arithmetic.
+
+TPU tiling note (DESIGN.md §Hardware-Adaptation): the embedding dimension of
+this paper is tiny (K = 7), far below the 128-lane VPU width, so every kernel
+pads K up to `LANE_MIN` sublanes and keeps the *point* dimension as the tiled
+axis. Interpret mode does not enforce tile alignment, but we keep the layout
+TPU-legal so the same BlockSpecs lower to Mosaic unchanged.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Minimal padding multiple for the trailing (lane) axis. Real TPU fp32 tiles
+# are (8, 128); we pad the coordinate axis to 8 which keeps VMEM cost ~zero
+# for K=7 while remaining a legal sublane multiple.
+LANE_MIN = 8
+
+
+def ceil_to(value: int, multiple: int) -> int:
+    """Smallest multiple of `multiple` that is >= value (and >= multiple)."""
+    if value <= 0:
+        return multiple
+    return ((value + multiple - 1) // multiple) * multiple
+
+
+def pad_axis(a: jnp.ndarray, axis: int, target: int) -> jnp.ndarray:
+    """Zero-pad `a` along `axis` up to length `target` (no-op if equal)."""
+    cur = a.shape[axis]
+    if cur == target:
+        return a
+    if cur > target:
+        raise ValueError(f"cannot pad axis {axis} from {cur} down to {target}")
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, target - cur)
+    return jnp.pad(a, widths)
+
+
+def pick_block(n: int, preferred: int) -> int:
+    """Block size for a padded axis: the preferred tile, shrunk for tiny n.
+
+    Keeps the grid non-trivial for test-sized inputs while using full tiles
+    for production shapes.
+    """
+    if n >= preferred:
+        return preferred
+    return max(LANE_MIN, ceil_to(n, LANE_MIN))

@@ -1,0 +1,96 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth the pytest suite checks the kernels against, and
+they double as the forward implementations used inside differentiated L2
+graphs (Pallas interpret-mode kernels are not differentiable without a custom
+VJP, so `mlp_train_step` traces the reference forward; the fused kernel is
+the *inference* hot path).
+
+All functions are shape-polymorphic and operate on float32 unless stated.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Numerical floor used wherever we divide by a pairwise distance. The stress
+# gradient has a removable singularity at d == 0 (the subgradient 0 is valid);
+# clamping the denominator reproduces the convention of SMACOF/R `smacof`.
+EPS = 1e-12
+
+
+def pairwise_dist(x: jnp.ndarray, lm: jnp.ndarray) -> jnp.ndarray:
+    """Euclidean distance matrix D[b, l] = ||x_b - lm_l||_2.
+
+    x:  [B, K] query/batch coordinates
+    lm: [L, K] landmark coordinates
+    """
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)  # [B, 1]
+    l2 = jnp.sum(lm * lm, axis=-1, keepdims=True).T  # [1, L]
+    cross = x @ lm.T  # [B, L]
+    sq = jnp.maximum(x2 + l2 - 2.0 * cross, 0.0)
+    return jnp.sqrt(sq)
+
+
+def stress_and_grad(x: jnp.ndarray, delta: jnp.ndarray):
+    """Raw stress and its gradient for a full configuration (LSMDS, Eq. 1).
+
+    sigma_raw(X) = sum_{i<j} (d_ij - delta_ij)^2
+    grad_i       = 2 * sum_j (d_ij - delta_ij) * (x_i - x_j) / d_ij
+
+    x:     [N, K] configuration
+    delta: [N, N] dissimilarities (symmetric, zero diagonal)
+    Returns (grad [N, K], row_sres [N]) where sum(row_sres) == 2 * sigma_raw
+    (each unordered pair counted twice).
+    """
+    d = pairwise_dist(x, x)  # [N, N]
+    n = x.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    resid = jnp.where(eye, 0.0, d - delta)  # [N, N]
+    coef = resid / jnp.maximum(d, EPS)  # [N, N]
+    coef = jnp.where(eye, 0.0, coef)
+    # grad_i = 2 * ( x_i * sum_j coef_ij - sum_j coef_ij x_j )
+    row = jnp.sum(coef, axis=1, keepdims=True)  # [N, 1]
+    grad = 2.0 * (x * row - coef @ x)  # [N, K]
+    row_sres = jnp.sum(resid * resid, axis=1)  # [N]
+    return grad, row_sres
+
+
+def ose_objective_and_grad(y: jnp.ndarray, lm: jnp.ndarray, delta: jnp.ndarray):
+    """Objective/gradient of the per-point OSE problem (paper Eq. 2), batched.
+
+    sigma_hat(y_b) = sum_i (||lm_i - y_b|| - delta_bi)^2
+    grad_b         = 2 * sum_i (d_bi - delta_bi) * (y_b - lm_i) / d_bi
+
+    y:     [B, K] candidate embeddings (the only movable points)
+    lm:    [L, K] fixed landmark embeddings
+    delta: [B, L] dissimilarities from each new object to each landmark
+    Returns (grad [B, K], sres [B]).
+    """
+    d = pairwise_dist(y, lm)  # [B, L]
+    resid = d - delta
+    coef = resid / jnp.maximum(d, EPS)  # [B, L]
+    row = jnp.sum(coef, axis=1, keepdims=True)  # [B, 1]
+    grad = 2.0 * (y * row - coef @ lm)  # [B, K]
+    sres = jnp.sum(resid * resid, axis=1)  # [B]
+    return grad, sres
+
+
+def mlp_fwd(d: jnp.ndarray, params) -> jnp.ndarray:
+    """3-hidden-layer ReLU MLP f_theta: R^L -> R^K (paper Sec. 4.2).
+
+    d:      [B, L] distances-to-landmarks input
+    params: tuple (w1, b1, w2, b2, w3, b3, w4, b4) with
+            w1 [L,H1], w2 [H1,H2], w3 [H2,H3], w4 [H3,K]
+    """
+    w1, b1, w2, b2, w3, b3, w4, b4 = params
+    h = jnp.maximum(d @ w1 + b1, 0.0)
+    h = jnp.maximum(h @ w2 + b2, 0.0)
+    h = jnp.maximum(h @ w3 + b3, 0.0)
+    return h @ w4 + b4
+
+
+def mae_loss(pred: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. 3: mean over the batch of the Euclidean residual norm."""
+    sq = jnp.sum((pred - target) ** 2, axis=-1)
+    return jnp.mean(jnp.sqrt(sq + EPS))

@@ -1,0 +1,106 @@
+"""Pallas kernel: gradient (and per-row residual) of the LSMDS raw stress.
+
+This is the O(N^2 K) hot spot of the landmark-embedding stage (paper Eq. 1).
+For a configuration X [N, K] and dissimilarities Delta [N, N]:
+
+    grad_i   = 2 * sum_j (d_ij - delta_ij) * (x_i - x_j) / d_ij
+    sres_i   = sum_j (d_ij - delta_ij)^2          (sum = 2 * sigma_raw)
+
+Schedule: grid (N/bi, N/bj). The j axis is the reduction axis — each (i, j)
+program adds its column-block contribution into the grad/sres tiles owned by
+row-block i (classic revisited-output accumulation; the j==0 program zeroes
+the accumulators). Row/column tiles of X are staged in VMEM; the [bi, bj]
+Delta tile streams through. The pairwise distances inside a tile use the same
+MXU decomposition as `pairwise.py`; the (x_i - x_j) contraction is again a
+matmul: sum_j coef_ij * (x_i - x_j) = x_i * rowsum(coef) - coef @ X_j.
+
+The diagonal and any padding columns are masked via global iota indices
+(n_real is baked statically at lowering time).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pallas_util import LANE_MIN, ceil_to, pad_axis, pick_block
+
+_EPS = 1e-12
+
+
+def _kernel(n_real, bi, bj, xi_ref, xj_ref, delta_ref, grad_ref, sres_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+        sres_ref[...] = jnp.zeros_like(sres_ref)
+
+    xi = xi_ref[...]  # [bi, Kp]
+    xj = xj_ref[...]  # [bj, Kp]
+    delta = delta_ref[...]  # [bi, bj]
+
+    x2 = jnp.sum(xi * xi, axis=-1, keepdims=True)
+    y2 = jnp.sum(xj * xj, axis=-1, keepdims=True).T
+    cross = jax.lax.dot_general(
+        xi, xj, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    d = jnp.sqrt(jnp.maximum(x2 + y2 - 2.0 * cross, 0.0))  # [bi, bj]
+
+    rows = i * bi + jax.lax.broadcasted_iota(jnp.int32, (bi, bj), 0)
+    cols = j * bj + jax.lax.broadcasted_iota(jnp.int32, (bi, bj), 1)
+    valid = (rows != cols) & (cols < n_real) & (rows < n_real)
+
+    resid = jnp.where(valid, d - delta, 0.0)
+    coef = jnp.where(valid, resid / jnp.maximum(d, _EPS), 0.0)
+
+    row = jnp.sum(coef, axis=1, keepdims=True)  # [bi, 1]
+    contrib = 2.0 * (
+        xi * row
+        - jax.lax.dot_general(
+            coef, xj, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    )
+    grad_ref[...] += contrib
+    sres_ref[...] += jnp.sum(resid * resid, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def stress_grad(x: jnp.ndarray, delta: jnp.ndarray, *, block: int = 256):
+    """Returns (grad [N, K], row_sres [N]) for configuration x, target delta."""
+    n, k = x.shape
+    if delta.shape != (n, n):
+        raise ValueError(f"delta shape {delta.shape} != ({n}, {n})")
+    kp = ceil_to(k, LANE_MIN)
+    b = pick_block(n, block)
+    np_ = ceil_to(n, b)
+
+    xp = pad_axis(pad_axis(x.astype(jnp.float32), 1, kp), 0, np_)
+    dp = pad_axis(pad_axis(delta.astype(jnp.float32), 1, np_), 0, np_)
+
+    kern = functools.partial(_kernel, n, b, b)
+    grad, sres = pl.pallas_call(
+        kern,
+        grid=(np_ // b, np_ // b),
+        in_specs=[
+            pl.BlockSpec((b, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((b, kp), lambda i, j: (j, 0)),
+            pl.BlockSpec((b, b), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((b, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, kp), jnp.float32),
+            jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(xp, xp, dp)
+    return grad[:n, :k], sres[:n, 0]

@@ -1,0 +1,152 @@
+"""L2: the paper's compute graphs in JAX, built on the L1 Pallas kernels.
+
+Four graph families are lowered by `aot.py` and executed from Rust:
+
+- `lsmds_steps`    — T gradient-descent steps on the raw stress (Eq. 1) of a
+                     full configuration. With lr = 1/(2N) on a centred
+                     configuration a step *is* the unweighted SMACOF/Guttman
+                     transform (see note below), so one artifact family covers
+                     both the paper's GD-LSMDS and the De Leeuw baseline.
+- `ose_opt`        — the paper's optimisation OSE (Eq. 2): T GD steps on a
+                     batch of independent single-point problems, landmarks
+                     fixed. lr = 1/(2L) likewise recovers the majorization
+                     update, which descends monotonically without tuning.
+- `mlp_fwd_infer`  — the NN-OSE serving path, the fused Pallas MLP kernel.
+- `mlp_train_step` — one Adam minibatch step on the Eq.-3 loss (mean
+                     Euclidean residual norm). Traces the *reference* forward
+                     (interpret-mode Pallas has no VJP); XLA fuses it fine and
+                     the fused kernel remains the inference hot path.
+
+GD <-> SMACOF equivalence used above: for raw stress with unit weights the
+Guttman transform of a centred configuration equals X - grad/(2N); for the
+single-movable-point objective (Eq. 2) it equals y - grad/(2L). We verify
+both identities in the pytest suite rather than trusting the algebra.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mlp_fwd, ose_grad, stress_grad
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# LSMDS: landmark/reference embedding (paper Sec. 2.1)
+# ---------------------------------------------------------------------------
+
+
+def lsmds_steps(x, delta, lr, *, steps: int, block: int = 256):
+    """Run `steps` GD iterations on sigma_raw(X); returns (X', sigma_raw).
+
+    x:     [N, K] current configuration
+    delta: [N, N] dissimilarity targets
+    lr:    scalar step size. 1/(2N) == SMACOF; the Rust driver owns policy.
+
+    The returned sigma_raw is the stress of the configuration *before* the
+    last update (the value the final gradient was computed at), which is what
+    a convergence check wants.
+    """
+
+    def body(_, carry):
+        xc, _ = carry
+        grad, sres = stress_grad(xc, delta, block=block)
+        sigma = 0.5 * jnp.sum(sres)
+        return xc - lr * grad, sigma
+
+    x0 = x.astype(jnp.float32)
+    xf, sigma = jax.lax.fori_loop(0, steps, body, (x0, jnp.float32(0.0)))
+    return xf, sigma
+
+
+def normalized_stress(x, delta):
+    """sigma = sqrt(sigma_raw / sum_{i<j} delta_ij^2) (paper Sec. 2.1)."""
+    d = ref.pairwise_dist(x, x)
+    n = x.shape[0]
+    mask = ~jnp.eye(n, dtype=bool)
+    num = jnp.sum(jnp.where(mask, (d - delta) ** 2, 0.0)) / 2.0
+    den = jnp.sum(jnp.where(mask, delta * delta, 0.0)) / 2.0
+    return jnp.sqrt(num / jnp.maximum(den, 1e-30))
+
+
+# ---------------------------------------------------------------------------
+# Optimisation OSE (paper Sec. 4.1, Eq. 2)
+# ---------------------------------------------------------------------------
+
+
+def ose_opt(xl, d, y0, lr, *, steps: int, block_b: int = 128, block_l: int = 512):
+    """T GD steps on a batch of Eq.-2 problems; returns (Y*, sres[B]).
+
+    xl: [L, K] fixed landmark embedding
+    d:  [B, L] dissimilarities new-object -> landmarks
+    y0: [B, K] initial guesses (paper uses zeros)
+    lr: scalar; 1/(2L) == per-point majorization (monotone)
+    Returned sres is Eq. 2 evaluated at the *final* iterate.
+    """
+
+    def body(_, y):
+        grad, _ = ose_grad(y, xl, d, block_b=block_b, block_l=block_l)
+        return y - lr * grad
+
+    yf = jax.lax.fori_loop(0, steps, body, y0.astype(jnp.float32))
+    _, sres = ose_grad(yf, xl, d, block_b=block_b, block_l=block_l)
+    return yf, sres
+
+
+# ---------------------------------------------------------------------------
+# Neural-network OSE (paper Sec. 4.2)
+# ---------------------------------------------------------------------------
+
+N_PARAMS = 8  # w1 b1 w2 b2 w3 b3 w4 b4
+
+
+def mlp_fwd_infer(d, *params, block_b: int = 256):
+    """Serving path: fused Pallas forward. d [B, L] -> coords [B, K]."""
+    return mlp_fwd(d, tuple(params), block_b=block_b)
+
+
+def _loss(params, d, x):
+    pred = ref.mlp_fwd(d, params)
+    return ref.mae_loss(pred, x)
+
+
+def mlp_train_step(*args):
+    """One Adam step on the Eq.-3 loss.
+
+    args = (w1,b1,...,b4, m1,...,m8, v1,...,v8, t, d, x, lr)
+           |---- 8 ----|  |-- 8 --|  |-- 8 --|
+    t:  scalar f32 step count *before* this update (0 on the first call)
+    d:  [B, L] inputs; x: [B, K] labels; lr: scalar
+    Returns (new_params..., new_m..., new_v..., t+1, loss) — 26 outputs.
+
+    Adam with the standard bias correction (Kingma & Ba; paper Sec. 4.2 uses
+    Keras defaults, which we mirror: beta1=0.9, beta2=0.999, eps=1e-7).
+    """
+    params = tuple(args[0:8])
+    m = tuple(args[8:16])
+    v = tuple(args[16:24])
+    t, d, x, lr = args[24], args[25], args[26], args[27]
+
+    beta1, beta2, eps = 0.9, 0.999, 1e-7
+    loss, grads = jax.value_and_grad(_loss)(params, d, x)
+    t1 = t + 1.0
+    bc1 = 1.0 - beta1**t1
+    bc2 = 1.0 - beta2**t1
+
+    new_p, new_m, new_v = [], [], []
+    for p, mi, vi, g in zip(params, m, v, grads):
+        mi = beta1 * mi + (1.0 - beta1) * g
+        vi = beta2 * vi + (1.0 - beta2) * (g * g)
+        step = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+        new_p.append(p - step)
+        new_m.append(mi)
+        new_v.append(vi)
+
+    return (*new_p, *new_m, *new_v, t1, loss)
+
+
+def mlp_loss(*args):
+    """Eq.-3 loss only (validation): args = (w1..b4, d, x) -> scalar."""
+    params = tuple(args[0:8])
+    d, x = args[8], args[9]
+    return _loss(params, d, x)

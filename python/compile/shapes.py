@@ -1,0 +1,108 @@
+"""Shape-variant registry: every AOT artifact this repo ships.
+
+Each variant pins the static dimensions of one graph (PJRT executables are
+shape-monomorphic). The registry is grouped into *scales*:
+
+- smoke: tiny shapes, always built; used by Rust integration tests.
+- small: the quick-CI experiment protocol (N=1200 reference points,
+         m=200 out-of-sample, L swept over 8 values).
+- paper: the paper's protocol (N=5000/m=500, L in [100, 2100], K=7).
+
+`make artifacts` builds all three (lowering is cheap — a few seconds);
+`python -m compile.aot --scales smoke,small` trims if needed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+K_DIM = 7  # paper Sec. 5.3: K = 7 recommended by [4] for name strings
+
+# Hidden sizes (paper: "estimates of the intrinsic dimension of the previous
+# layers"; we follow the conventional pyramid used with Keras defaults).
+HIDDEN = (256, 128, 64)
+HIDDEN_SMOKE = (32, 16, 8)
+
+# Landmark sweeps driving Figures 1-4.
+L_SWEEP_SMALL = [50, 100, 200, 300, 400, 600, 800, 1000]
+L_SWEEP_PAPER = [100, 300, 500, 700, 900, 1100, 1300, 1500, 1800, 2100]
+
+N_REF_SMALL = 1200
+N_REF_PAPER = 5000
+
+OSE_BATCHES = [1, 64, 256]  # single-query latency path + batched serving
+TRAIN_BATCH = 256
+OSE_STEPS = 60  # inner GD iterations per ose_opt call
+LSMDS_STEPS = 10  # GD iterations per lsmds_steps call (Rust loops + checks)
+
+
+@dataclass(frozen=True)
+class Variant:
+    graph: str  # lsmds_steps | ose_opt | mlp_fwd | mlp_train_step | mlp_loss
+    dims: Dict[str, int]  # static dims, e.g. {"N":.., "K":.., "T":..}
+    scale: str
+
+    @property
+    def key(self) -> str:
+        parts = [f"{k}{v}" for k, v in sorted(self.dims.items())]
+        return f"{self.graph}__" + "_".join(parts)
+
+    @property
+    def filename(self) -> str:
+        return f"{self.key}.hlo.txt"
+
+
+def _nn_dims(l: int, hidden: Tuple[int, int, int], b: int) -> Dict[str, int]:
+    h1, h2, h3 = hidden
+    return {"L": l, "K": K_DIM, "B": b, "H1": h1, "H2": h2, "H3": h3}
+
+
+def _scale_variants(scale: str, l_sweep: List[int], n_ref: int,
+                    hidden: Tuple[int, int, int]) -> List[Variant]:
+    out: List[Variant] = []
+    # Reference/full LSMDS embedding (creates the initial configuration).
+    out.append(Variant("lsmds_steps",
+                       {"N": n_ref, "K": K_DIM, "T": LSMDS_STEPS}, scale))
+    # Landmark-only LSMDS for the two-stage scaling pipeline.
+    for l in {l_sweep[1], l_sweep[3], l_sweep[-1]}:
+        out.append(Variant("lsmds_steps",
+                           {"N": l, "K": K_DIM, "T": LSMDS_STEPS}, scale))
+    for l in l_sweep:
+        for b in OSE_BATCHES:
+            out.append(Variant(
+                "ose_opt",
+                {"L": l, "K": K_DIM, "B": b, "T": OSE_STEPS}, scale))
+            out.append(Variant("mlp_fwd", _nn_dims(l, hidden, b), scale))
+        out.append(Variant("mlp_train_step",
+                           _nn_dims(l, hidden, TRAIN_BATCH), scale))
+        out.append(Variant("mlp_loss",
+                           _nn_dims(l, hidden, TRAIN_BATCH), scale))
+    return out
+
+
+def variants_for_scales(scales: List[str]) -> List[Variant]:
+    out: List[Variant] = []
+    if "smoke" in scales:
+        out += [
+            Variant("lsmds_steps", {"N": 64, "K": K_DIM, "T": 5}, "smoke"),
+            Variant("ose_opt", {"L": 32, "K": K_DIM, "B": 8, "T": 5}, "smoke"),
+            Variant("mlp_fwd", _nn_dims(32, HIDDEN_SMOKE, 8), "smoke"),
+            Variant("mlp_train_step", _nn_dims(32, HIDDEN_SMOKE, 16), "smoke"),
+            Variant("mlp_loss", _nn_dims(32, HIDDEN_SMOKE, 16), "smoke"),
+        ]
+    if "small" in scales:
+        out += _scale_variants("small", L_SWEEP_SMALL, N_REF_SMALL, HIDDEN)
+    if "paper" in scales:
+        out += _scale_variants("paper", L_SWEEP_PAPER, N_REF_PAPER, HIDDEN)
+    # de-dup (the same dims can appear in several scales)
+    seen, uniq = set(), []
+    for v in out:
+        if v.key not in seen:
+            seen.add(v.key)
+            uniq.append(v)
+    return uniq
+
+
+DEFAULT_SCALES = ["smoke", "small", "paper"]
+ALL_SCALES = ["smoke", "small", "paper"]

@@ -1,0 +1,100 @@
+"""AOT pipeline: variant registry sanity, lowering round-trip, manifest."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model, shapes
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_variant_keys_unique_and_stable():
+    vs = shapes.variants_for_scales(shapes.ALL_SCALES)
+    keys = [v.key for v in vs]
+    assert len(keys) == len(set(keys))
+    # key format round-trips the dims deterministically
+    v = shapes.Variant("ose_opt", {"L": 100, "K": 7, "B": 64, "T": 60}, "x")
+    assert v.key == "ose_opt__B64_K7_L100_T60"
+    assert v.filename.endswith(".hlo.txt")
+
+
+def test_every_scale_has_all_graph_families():
+    for scale in ["small", "paper"]:
+        vs = [v for v in shapes.variants_for_scales([scale])]
+        graphs = {v.graph for v in vs}
+        assert graphs == {"lsmds_steps", "ose_opt", "mlp_fwd",
+                          "mlp_train_step", "mlp_loss"}
+
+
+def test_build_fn_and_args_signature_consistency():
+    for v in shapes.variants_for_scales(["smoke"]):
+        fn, named = aot.build_fn_and_args(v)
+        out = jax.eval_shape(fn, *[s for _, s in named])
+        flat, _ = jax.tree_util.tree_flatten(out)
+        assert len(flat) >= 1
+        if v.graph == "mlp_train_step":
+            assert len(named) == 28
+            assert len(flat) == 26
+        if v.graph == "ose_opt":
+            b, k = v.dims["B"], v.dims["K"]
+            assert tuple(flat[0].shape) == (b, k)
+
+
+def test_lower_smoke_variant_produces_parseable_hlo(tmp_path):
+    v = shapes.Variant("ose_opt", {"L": 16, "K": 7, "B": 4, "T": 2}, "test")
+    entry = aot.lower_variant(v, str(tmp_path))
+    text = (tmp_path / v.filename).read_text()
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # ids in the text must be 32-bit safe for xla_extension 0.5.1
+    assert entry["args"][0]["name"] == "xl"
+    assert entry["outputs"][0]["shape"] == [4, 7]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_consistent_with_disk():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    assert man["k_dim"] == shapes.K_DIM
+    names = set()
+    for e in man["artifacts"]:
+        assert e["name"] not in names
+        names.add(e["name"])
+        assert os.path.exists(os.path.join(ART_DIR, e["file"])), e["file"]
+        assert e["graph"] in {"lsmds_steps", "ose_opt", "mlp_fwd",
+                              "mlp_train_step", "mlp_loss"}
+        for a in e["args"]:
+            assert a["dtype"] == "f32"
+            assert all(isinstance(x, int) and x >= 0 for x in a["shape"])
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_covers_smoke_scale():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        man = json.load(f)
+    names = {e["name"] for e in man["artifacts"]}
+    for v in shapes.variants_for_scales(["smoke"]):
+        assert v.key in names, f"missing smoke artifact {v.key}"
+
+
+def test_train_step_graph_executes_like_eager():
+    """Lowered-and-compiled train step == eager python call (same numerics)."""
+    v = shapes.variants_for_scales(["smoke"])
+    train = [x for x in v if x.graph == "mlp_train_step"][0]
+    fn, named = aot.build_fn_and_args(train)
+    rng = np.random.default_rng(0)
+    args = [np.asarray(rng.normal(size=s.shape), np.float32) * 0.1
+            for _, s in named]
+    eager = fn(*args)
+    jitted = jax.jit(fn)(*args)
+    for a, b in zip(jax.tree_util.tree_leaves(eager),
+                    jax.tree_util.tree_leaves(jitted)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,284 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+No `hypothesis` in this image, so coverage comes from dense
+`pytest.mark.parametrize` sweeps over shapes (aligned, ragged, degenerate),
+block sizes (dividing and non-dividing), seeds, and data regimes
+(coincident points, zero dissimilarities, large magnitudes).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import mlp_fwd, ose_grad, pairwise_dist, ref, stress_grad
+
+RTOL = 1e-5
+ATOL = 1e-4
+
+
+def rnd(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+def sym_delta(rng, n, scale=1.0):
+    d = np.abs(rng.normal(size=(n, n))).astype(np.float32) * scale
+    d = (d + d.T) / 2
+    np.fill_diagonal(d, 0.0)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# pairwise_dist
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,l,k", [
+    (1, 1, 1), (2, 3, 7), (8, 8, 8), (16, 16, 7), (37, 53, 7),
+    (64, 128, 7), (100, 100, 3), (128, 64, 16), (5, 200, 2), (200, 5, 2),
+])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_pairwise_matches_ref(b, l, k, seed):
+    rng = np.random.default_rng(seed)
+    x, lm = rnd(rng, b, k), rnd(rng, l, k)
+    got = np.asarray(pairwise_dist(x, lm, block_b=16, block_l=16))
+    want = np.asarray(ref.pairwise_dist(jnp.asarray(x), jnp.asarray(lm)))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("block_b,block_l", [(8, 8), (16, 32), (128, 128), (256, 512)])
+def test_pairwise_block_size_invariance(block_b, block_l):
+    rng = np.random.default_rng(2)
+    x, lm = rnd(rng, 45, 7), rnd(rng, 91, 7)
+    base = np.asarray(pairwise_dist(x, lm, block_b=8, block_l=8))
+    got = np.asarray(pairwise_dist(x, lm, block_b=block_b, block_l=block_l))
+    np.testing.assert_allclose(got, base, rtol=RTOL, atol=ATOL)
+
+
+def test_pairwise_self_distance_zero_diagonal():
+    rng = np.random.default_rng(3)
+    x = rnd(rng, 33, 7)
+    d = np.asarray(pairwise_dist(x, x, block_b=16, block_l=16))
+    # MXU decomposition ||x||^2+||y||^2-2<x,y> cancels catastrophically at
+    # x == y: the diagonal is sqrt(f32 cancellation noise) ~ 1e-3, not 0.
+    np.testing.assert_allclose(np.diag(d), np.zeros(33), atol=5e-3)
+    np.testing.assert_allclose(d, d.T, rtol=RTOL, atol=ATOL)
+
+
+def test_pairwise_coincident_points():
+    x = np.zeros((10, 7), dtype=np.float32)
+    lm = np.zeros((12, 7), dtype=np.float32)
+    d = np.asarray(pairwise_dist(x, lm, block_b=8, block_l=8))
+    np.testing.assert_allclose(d, np.zeros((10, 12)), atol=1e-6)
+
+
+def test_pairwise_large_magnitude():
+    rng = np.random.default_rng(4)
+    x, lm = rnd(rng, 20, 5) * 1e3, rnd(rng, 30, 5) * 1e3
+    got = np.asarray(pairwise_dist(x, lm, block_b=8, block_l=8))
+    want = np.asarray(ref.pairwise_dist(jnp.asarray(x), jnp.asarray(lm)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-1)
+
+
+def test_pairwise_known_values():
+    x = np.array([[0.0, 0.0], [3.0, 4.0]], dtype=np.float32)
+    lm = np.array([[0.0, 0.0], [6.0, 8.0]], dtype=np.float32)
+    d = np.asarray(pairwise_dist(x, lm, block_b=8, block_l=8))
+    np.testing.assert_allclose(d, [[0.0, 10.0], [5.0, 5.0]], atol=1e-5)
+
+
+def test_pairwise_rejects_dim_mismatch():
+    with pytest.raises(ValueError):
+        pairwise_dist(np.zeros((4, 3), np.float32), np.zeros((4, 2), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# stress_grad
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,k", [
+    (2, 1), (8, 7), (16, 7), (37, 7), (64, 3), (100, 7), (130, 2),
+])
+@pytest.mark.parametrize("seed", [0, 5])
+def test_stress_grad_matches_ref(n, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, n, k)
+    delta = sym_delta(rng, n)
+    g, s = stress_grad(x, delta, block=16)
+    gr, sr = ref.stress_and_grad(jnp.asarray(x), jnp.asarray(delta))
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("block", [8, 32, 64, 256])
+def test_stress_grad_block_invariance(block):
+    rng = np.random.default_rng(6)
+    x = rnd(rng, 70, 7)
+    delta = sym_delta(rng, 70)
+    g8, s8 = stress_grad(x, delta, block=8)
+    g, s = stress_grad(x, delta, block=block)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g8), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s8), rtol=1e-4, atol=1e-3)
+
+
+def test_stress_grad_matches_autodiff():
+    """grad from the kernel == jax.grad of the (masked) stress definition."""
+    rng = np.random.default_rng(7)
+    n, k = 24, 5
+    x = rnd(rng, n, k)
+    delta = sym_delta(rng, n)
+
+    import jax
+
+    def sigma_raw(xc):
+        # NaN-safe distances: mask *inside* the sqrt, otherwise autodiff of
+        # sqrt(0) on the diagonal poisons the whole gradient.
+        diff = xc[:, None, :] - xc[None, :, :]
+        sq = jnp.sum(diff * diff, axis=-1)
+        mask = ~jnp.eye(n, dtype=bool)
+        d = jnp.sqrt(jnp.where(mask, sq, 1.0))
+        return 0.5 * jnp.sum(jnp.where(mask, (d - delta) ** 2, 0.0))
+
+    want = np.asarray(jax.grad(sigma_raw)(jnp.asarray(x)))
+    got, _ = stress_grad(x, delta, block=8)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-3)
+
+
+def test_stress_grad_zero_at_perfect_embedding():
+    """If delta are exactly the Euclidean distances, stress = 0 and grad = 0."""
+    rng = np.random.default_rng(8)
+    x = rnd(rng, 30, 7)
+    delta = np.asarray(ref.pairwise_dist(jnp.asarray(x), jnp.asarray(x)))
+    g, s = stress_grad(x, delta, block=16)
+    assert float(jnp.sum(s)) < 1e-6
+    np.testing.assert_allclose(np.asarray(g), np.zeros_like(x), atol=1e-4)
+
+
+def test_stress_grad_sres_is_twice_sigma():
+    rng = np.random.default_rng(9)
+    n = 26
+    x = rnd(rng, n, 7)
+    delta = sym_delta(rng, n)
+    _, s = stress_grad(x, delta, block=8)
+    d = np.asarray(ref.pairwise_dist(jnp.asarray(x), jnp.asarray(x)))
+    mask = ~np.eye(n, dtype=bool)
+    sigma_raw = 0.5 * np.sum(((d - delta) ** 2)[mask])
+    np.testing.assert_allclose(0.5 * float(np.sum(np.asarray(s))), sigma_raw,
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ose_grad
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,l,k", [
+    (1, 1, 1), (1, 100, 7), (8, 32, 7), (37, 53, 7), (64, 500, 7), (256, 50, 3),
+])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_ose_grad_matches_ref(b, l, k, seed):
+    rng = np.random.default_rng(seed)
+    y, lm = rnd(rng, b, k), rnd(rng, l, k)
+    delta = np.abs(rnd(rng, b, l))
+    g, s = ose_grad(y, lm, delta, block_b=16, block_l=32)
+    gr, sr = ref.ose_objective_and_grad(
+        jnp.asarray(y), jnp.asarray(lm), jnp.asarray(delta))
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-4, atol=1e-3)
+
+
+def test_ose_grad_matches_autodiff():
+    rng = np.random.default_rng(11)
+    b, l, k = 9, 41, 7
+    y, lm = rnd(rng, b, k), rnd(rng, l, k)
+    delta = np.abs(rnd(rng, b, l))
+
+    import jax
+
+    def obj(yc):
+        d = ref.pairwise_dist(yc, jnp.asarray(lm))
+        return jnp.sum((d - delta) ** 2)
+
+    want = np.asarray(jax.grad(obj)(jnp.asarray(y)))
+    got, _ = ose_grad(y, lm, delta, block_b=8, block_l=8)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-3)
+
+
+def test_ose_grad_zero_at_exact_solution():
+    rng = np.random.default_rng(12)
+    lm = rnd(rng, 40, 7)
+    y = rnd(rng, 6, 7)
+    delta = np.asarray(ref.pairwise_dist(jnp.asarray(y), jnp.asarray(lm)))
+    g, s = ose_grad(y, lm, delta, block_b=8, block_l=16)
+    assert float(np.max(np.asarray(s))) < 1e-6
+    np.testing.assert_allclose(np.asarray(g), np.zeros_like(y), atol=1e-4)
+
+
+def test_ose_grad_batch_independence():
+    """Each row's gradient must not depend on other rows in the batch."""
+    rng = np.random.default_rng(13)
+    lm = rnd(rng, 30, 7)
+    y = rnd(rng, 12, 7)
+    delta = np.abs(rnd(rng, 12, 30))
+    g_full, s_full = ose_grad(y, lm, delta, block_b=8, block_l=8)
+    g_row, s_row = ose_grad(y[3:4], lm, delta[3:4], block_b=8, block_l=8)
+    np.testing.assert_allclose(np.asarray(g_full)[3:4], np.asarray(g_row),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_full)[3:4], np.asarray(s_row),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mlp_fwd
+# ---------------------------------------------------------------------------
+
+
+def make_params(rng, l, h1, h2, h3, k, scale=0.1):
+    shapes = [(l, h1), (h1,), (h1, h2), (h2,), (h2, h3), (h3,), (h3, k), (k,)]
+    return tuple(rnd(rng, *s) * scale for s in shapes)
+
+
+@pytest.mark.parametrize("b,l,hidden,k", [
+    (1, 10, (8, 8, 8), 2), (8, 32, (32, 16, 8), 7), (37, 100, (64, 32, 16), 7),
+    (256, 300, (256, 128, 64), 7), (5, 2100, (256, 128, 64), 7),
+])
+def test_mlp_fwd_matches_ref(b, l, hidden, k):
+    rng = np.random.default_rng(b + l)
+    params = make_params(rng, l, *hidden, k)
+    d = np.abs(rnd(rng, b, l))
+    got = np.asarray(mlp_fwd(d, params, block_b=16))
+    want = np.asarray(ref.mlp_fwd(jnp.asarray(d), tuple(map(jnp.asarray, params))))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_b", [8, 64, 256])
+def test_mlp_fwd_block_invariance(block_b):
+    rng = np.random.default_rng(21)
+    params = make_params(rng, 50, 32, 16, 8, 7)
+    d = np.abs(rnd(rng, 100, 50))
+    base = np.asarray(mlp_fwd(d, params, block_b=8))
+    got = np.asarray(mlp_fwd(d, params, block_b=block_b))
+    np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+
+def test_mlp_fwd_relu_clamps():
+    """All-negative first-layer output => result is exactly the later biases."""
+    rng = np.random.default_rng(22)
+    l, h1, h2, h3, k = 12, 8, 8, 8, 3
+    params = list(make_params(rng, l, h1, h2, h3, k))
+    params[0] = -np.abs(params[0])  # w1 <= 0
+    params[1] = -np.ones(h1, dtype=np.float32)  # b1 < 0
+    d = np.abs(rnd(rng, 6, l))
+    got = np.asarray(mlp_fwd(d, tuple(params), block_b=8))
+    # h1 = 0 -> h2 = relu(b2), deterministic chain
+    h = np.maximum(params[3], 0.0)
+    h = np.maximum(h @ params[4] + params[5], 0.0)
+    want = np.broadcast_to(h @ params[6] + params[7], (6, k))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_mlp_fwd_rejects_bad_input_width():
+    rng = np.random.default_rng(23)
+    params = make_params(rng, 50, 32, 16, 8, 7)
+    with pytest.raises(ValueError):
+        mlp_fwd(np.zeros((4, 49), np.float32), params)

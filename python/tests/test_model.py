@@ -1,0 +1,257 @@
+"""L2 graph semantics: LSMDS descent, SMACOF identity, OSE, Adam training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rnd(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+def config_delta(rng, n, k, noise=0.0):
+    """A realisable dissimilarity matrix: distances of a random config."""
+    x = rnd(rng, n, k)
+    d = np.asarray(ref.pairwise_dist(jnp.asarray(x), jnp.asarray(x)))
+    if noise:
+        e = np.abs(rng.normal(size=d.shape)).astype(np.float32) * noise
+        e = (e + e.T) / 2
+        np.fill_diagonal(e, 0.0)
+        d = d + e
+    return x, d
+
+
+def raw_stress(x, delta):
+    d = np.asarray(ref.pairwise_dist(jnp.asarray(x), jnp.asarray(x)))
+    mask = ~np.eye(x.shape[0], dtype=bool)
+    return 0.5 * float(np.sum(((d - delta) ** 2)[mask]))
+
+
+# ---------------------------------------------------------------------------
+# lsmds_steps
+# ---------------------------------------------------------------------------
+
+
+def test_lsmds_smacof_lr_descends_monotonically():
+    """lr = 1/(2N) is the Guttman transform: stress must never increase."""
+    rng = np.random.default_rng(0)
+    n, k = 40, 3
+    _, delta = config_delta(rng, n, k, noise=0.3)
+    x = rnd(rng, n, k)
+    x -= x.mean(axis=0)  # centred: GD(1/2N) == SMACOF
+    lr = 1.0 / (2 * n)
+    prev = raw_stress(x, delta)
+    for _ in range(10):
+        x1, _ = model.lsmds_steps(jnp.asarray(x), jnp.asarray(delta),
+                                  jnp.float32(lr), steps=5, block=16)
+        x = np.asarray(x1)
+        cur = raw_stress(x, delta)
+        assert cur <= prev + 1e-3, f"stress increased {prev} -> {cur}"
+        prev = cur
+
+
+def test_lsmds_gd_step_equals_guttman_transform():
+    """Explicit check of the GD(1/2N) == SMACOF identity used everywhere."""
+    rng = np.random.default_rng(1)
+    n, k = 18, 4
+    _, delta = config_delta(rng, n, k, noise=0.2)
+    x = rnd(rng, n, k)
+    x -= x.mean(axis=0)
+
+    x1, _ = model.lsmds_steps(jnp.asarray(x), jnp.asarray(delta),
+                              jnp.float32(1.0 / (2 * n)), steps=1, block=8)
+
+    # Guttman transform: x_i' = (1/n) [ x_i * sum_j (delta/d)_ij
+    #                                   - sum_{j != i} (delta/d)_ij x_j ]
+    d = np.array(ref.pairwise_dist(jnp.asarray(x), jnp.asarray(x)))
+    np.fill_diagonal(d, 1.0)
+    ratio = delta / np.maximum(d, 1e-12)
+    np.fill_diagonal(ratio, 0.0)
+    guttman = (x * ratio.sum(axis=1, keepdims=True) - ratio @ x) / n
+    np.testing.assert_allclose(np.asarray(x1), guttman, rtol=1e-4, atol=1e-4)
+
+
+def test_lsmds_recovers_exact_configuration():
+    """With realisable delta, stress should approach ~0."""
+    rng = np.random.default_rng(2)
+    n, k = 30, 2
+    _, delta = config_delta(rng, n, k)
+    x = rnd(rng, n, k) * 0.5
+    x -= x.mean(axis=0)
+    lr = 1.0 / (2 * n)
+    xj = jnp.asarray(x)
+    for _ in range(40):
+        xj, _ = model.lsmds_steps(xj, jnp.asarray(delta), jnp.float32(lr),
+                                  steps=10, block=16)
+    den = 0.5 * float(np.sum(delta**2))
+    sigma = np.sqrt(raw_stress(np.asarray(xj), delta) / den)
+    assert sigma < 0.05, f"normalized stress {sigma}"
+
+
+def test_lsmds_reported_sigma_matches_definition():
+    rng = np.random.default_rng(3)
+    n, k = 20, 3
+    _, delta = config_delta(rng, n, k, noise=0.5)
+    x = rnd(rng, n, k)
+    # steps=1: reported sigma is the stress at the pre-update configuration
+    _, sigma = model.lsmds_steps(jnp.asarray(x), jnp.asarray(delta),
+                                 jnp.float32(0.0), steps=1, block=8)
+    np.testing.assert_allclose(float(sigma), raw_stress(x, delta), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ose_opt
+# ---------------------------------------------------------------------------
+
+
+def test_ose_opt_majorization_descends():
+    rng = np.random.default_rng(4)
+    l, k, b = 60, 7, 16
+    lm = rnd(rng, l, k)
+    y_true = rnd(rng, b, k)
+    delta = np.asarray(ref.pairwise_dist(jnp.asarray(y_true), jnp.asarray(lm)))
+    y0 = jnp.zeros((b, k), jnp.float32)  # paper's initial guess
+    lr = jnp.float32(1.0 / (2 * l))
+
+    def sres_of(y):
+        _, s = ref.ose_objective_and_grad(y, jnp.asarray(lm), jnp.asarray(delta))
+        return np.asarray(s)
+
+    y1, s1 = model.ose_opt(jnp.asarray(lm), jnp.asarray(delta), y0, lr,
+                           steps=5, block_b=8, block_l=16)
+    y2, s2 = model.ose_opt(jnp.asarray(lm), jnp.asarray(delta), y1, lr,
+                           steps=25, block_b=8, block_l=16)
+    assert np.all(np.asarray(s2) <= np.asarray(s1) + 1e-4)
+    # with exact (realisable) delta the objective should get near zero
+    assert float(np.median(np.asarray(s2))) < 0.3 * float(np.median(sres_of(y0)))
+
+
+def test_ose_opt_reported_sres_is_final_objective():
+    rng = np.random.default_rng(5)
+    l, k, b = 25, 3, 4
+    lm, y0 = rnd(rng, l, k), rnd(rng, b, k)
+    delta = np.abs(rnd(rng, b, l))
+    yf, sres = model.ose_opt(jnp.asarray(lm), jnp.asarray(delta),
+                             jnp.asarray(y0), jnp.float32(1.0 / (2 * l)),
+                             steps=7, block_b=8, block_l=8)
+    _, want = ref.ose_objective_and_grad(yf, jnp.asarray(lm), jnp.asarray(delta))
+    np.testing.assert_allclose(np.asarray(sres), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ose_opt_zero_steps_returns_y0():
+    rng = np.random.default_rng(6)
+    lm, y0 = rnd(rng, 10, 2), rnd(rng, 3, 2)
+    delta = np.abs(rnd(rng, 3, 10))
+    yf, _ = model.ose_opt(jnp.asarray(lm), jnp.asarray(delta),
+                          jnp.asarray(y0), jnp.float32(0.05),
+                          steps=0, block_b=8, block_l=8)
+    np.testing.assert_allclose(np.asarray(yf), y0, atol=1e-7)
+
+
+def test_ose_opt_in_sample_point_recovers_position():
+    """OSE of a point that *is* a landmark should land on that landmark."""
+    rng = np.random.default_rng(7)
+    l, k = 80, 7
+    lm = rnd(rng, l, k)
+    target = lm[5:6]
+    delta = np.asarray(ref.pairwise_dist(jnp.asarray(target), jnp.asarray(lm)))
+    y0 = jnp.zeros((1, k), jnp.float32)
+    yf, sres = model.ose_opt(jnp.asarray(lm), jnp.asarray(delta), y0,
+                             jnp.float32(1.0 / (2 * l)), steps=400,
+                             block_b=8, block_l=16)
+    assert float(sres[0]) < 1e-2
+    np.testing.assert_allclose(np.asarray(yf), target, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# mlp_train_step / mlp_loss
+# ---------------------------------------------------------------------------
+
+
+def make_state(rng, l, h, k):
+    h1, h2, h3 = h
+    shapes = [(l, h1), (h1,), (h1, h2), (h2,), (h2, h3), (h3,), (h3, k), (k,)]
+    params = tuple(rnd(rng, *s) * 0.1 for s in shapes)
+    zeros = tuple(np.zeros(s, np.float32) for s in shapes)
+    return params, zeros, zeros
+
+
+def test_train_step_decreases_loss():
+    rng = np.random.default_rng(8)
+    l, h, k, b = 30, (32, 16, 8), 7, 64
+    params, m, v = make_state(rng, l, h, k)
+    d = np.abs(rnd(rng, b, l))
+    # learnable target: a linear map of the inputs (random labels would cap
+    # how far the loss can fall and make the test meaningless)
+    x = (d @ rnd(rng, l, k) * 0.3).astype(np.float32)
+
+    state = [jnp.asarray(a) for a in (*params, *m, *v)]
+    t = jnp.float32(0.0)
+    first_loss = None
+    for _ in range(120):
+        out = model.mlp_train_step(*state, t, jnp.asarray(d), jnp.asarray(x),
+                                   jnp.float32(1e-2))
+        state, t, loss = list(out[:24]), out[24], out[25]
+        if first_loss is None:
+            first_loss = float(loss)
+    assert float(loss) < 0.5 * first_loss, (first_loss, float(loss))
+
+
+def test_train_step_adam_matches_numpy_reference():
+    """One full Adam update cross-checked against a hand-written numpy Adam."""
+    rng = np.random.default_rng(9)
+    l, h, k, b = 12, (8, 8, 8), 3, 10
+    params, m, v = make_state(rng, l, h, k)
+    d = np.abs(rnd(rng, b, l))
+    x = rnd(rng, b, k)
+
+    grads = jax.grad(
+        lambda p: ref.mae_loss(ref.mlp_fwd(jnp.asarray(d), p), jnp.asarray(x))
+    )(tuple(map(jnp.asarray, params)))
+
+    out = model.mlp_train_step(*map(jnp.asarray, (*params, *m, *v)),
+                               jnp.float32(0.0), jnp.asarray(d),
+                               jnp.asarray(x), jnp.float32(1e-3))
+    got_params = [np.asarray(a) for a in out[:8]]
+
+    beta1, beta2, eps, lr, t1 = 0.9, 0.999, 1e-7, 1e-3, 1.0
+    for p, g, gp in zip(params, grads, got_params):
+        g = np.asarray(g)
+        mi = (1 - beta1) * g
+        vi = (1 - beta2) * g * g
+        step = lr * (mi / (1 - beta1**t1)) / (np.sqrt(vi / (1 - beta2**t1)) + eps)
+        np.testing.assert_allclose(gp, p - step, rtol=1e-4, atol=1e-6)
+
+
+def test_train_step_t_increments_and_loss_matches_mlp_loss():
+    rng = np.random.default_rng(10)
+    l, h, k, b = 16, (8, 8, 8), 2, 6
+    params, m, v = make_state(rng, l, h, k)
+    d = np.abs(rnd(rng, b, l))
+    x = rnd(rng, b, k)
+    out = model.mlp_train_step(*map(jnp.asarray, (*params, *m, *v)),
+                               jnp.float32(4.0), jnp.asarray(d),
+                               jnp.asarray(x), jnp.float32(1e-3))
+    assert float(out[24]) == 5.0
+    want = model.mlp_loss(*map(jnp.asarray, params), jnp.asarray(d),
+                          jnp.asarray(x))
+    np.testing.assert_allclose(float(out[25]), float(want), rtol=1e-6)
+
+
+def test_mae_loss_is_mean_euclidean_norm():
+    pred = jnp.asarray(np.array([[3.0, 4.0], [0.0, 0.0]], np.float32))
+    target = jnp.zeros((2, 2), jnp.float32)
+    np.testing.assert_allclose(float(ref.mae_loss(pred, target)), 2.5, rtol=1e-4)
+
+
+def test_normalized_stress_zero_for_perfect_config():
+    rng = np.random.default_rng(11)
+    x = rnd(rng, 15, 3)
+    delta = ref.pairwise_dist(jnp.asarray(x), jnp.asarray(x))
+    s = model.normalized_stress(jnp.asarray(x), delta)
+    assert float(s) < 1e-4

@@ -1,0 +1,46 @@
+//! Figure 1 reproduction bench: Err(m) vs L for both OSE methods.
+//!
+//!     cargo bench --bench bench_fig1
+//!
+//! Scale via env: LMDS_BENCH_SCALE=smoke|small|paper (default small) and
+//! LMDS_BENCH_EPOCHS (default 60). Writes results/fig1_<scale>.json.
+
+use lmds_ose::eval::figures;
+use lmds_ose::eval::protocol::{load_or_build, Scale};
+use lmds_ose::runtime::{default_artifact_dir, RuntimeThread};
+
+fn main() {
+    lmds_ose::util::logging::init();
+    let scale = std::env::var("LMDS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::from_name(&s))
+        .unwrap_or(Scale::Small);
+    let epochs: usize = std::env::var("LMDS_BENCH_EPOCHS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30);
+
+    let rt = RuntimeThread::spawn(&default_artifact_dir()).ok();
+    let handle = rt.as_ref().map(|r| r.handle());
+    if handle.is_none() {
+        eprintln!("(artifacts not built; pure-Rust fallback)");
+    }
+    let t0 = std::time::Instant::now();
+    let data = load_or_build(scale, 7, handle.as_ref()).expect("protocol data");
+    eprintln!("protocol data ready in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let rows = figures::fig1(&data, handle.as_ref(), epochs).expect("fig1");
+
+    // shape assertions mirroring the paper's qualitative claims
+    let first = &rows[0];
+    let last = &rows[rows.len() - 1];
+    eprintln!(
+        "\nshape checks: opt error falls {:.1}x from L={} to L={}; \
+         nn varies {:.1}x over the sweep",
+        first.err_opt / last.err_opt,
+        first.l,
+        last.l,
+        rows.iter().map(|r| r.err_nn).fold(0.0, f64::max)
+            / rows.iter().map(|r| r.err_nn).fold(f64::INFINITY, f64::min),
+    );
+}

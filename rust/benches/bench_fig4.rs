@@ -1,0 +1,40 @@
+//! Figure 4 reproduction bench: mean RT of mapping one out-of-sample point
+//! vs L, for both OSE methods, plus the Sec.-5.3.3 headline numbers.
+//!
+//!     cargo bench --bench bench_fig4
+//!
+//! Scale via LMDS_BENCH_SCALE (default small). Writes
+//! results/fig4_<scale>.json.
+
+use lmds_ose::eval::figures;
+use lmds_ose::eval::protocol::{load_or_build, Scale};
+use lmds_ose::runtime::{default_artifact_dir, RuntimeThread};
+
+fn main() {
+    lmds_ose::util::logging::init();
+    let scale = std::env::var("LMDS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::from_name(&s))
+        .unwrap_or(Scale::Small);
+    let epochs: usize = std::env::var("LMDS_BENCH_EPOCHS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12); // inference RT does not depend on training quality
+
+    let rt = RuntimeThread::spawn(&default_artifact_dir()).ok();
+    let handle = rt.as_ref().map(|r| r.handle());
+    let data = load_or_build(scale, 7, handle.as_ref()).expect("protocol data");
+
+    let rows = figures::fig4(&data, handle.as_ref(), epochs).expect("fig4");
+    figures::headline(&data, handle.as_ref(), epochs).expect("headline");
+
+    // paper shape: RT grows with L for the optimisation method; the NN is
+    // faster at every L
+    let slower = rows.iter().filter(|r| r.rt_opt > r.rt_nn).count();
+    eprintln!(
+        "\nshape checks: nn faster at {slower}/{} sweep points; \
+         opt RT grows {:.1}x across the sweep",
+        rows.len(),
+        rows.last().unwrap().rt_opt / rows.first().unwrap().rt_opt
+    );
+}

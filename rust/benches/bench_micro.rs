@@ -1,0 +1,158 @@
+//! Micro benchmarks of every hot-path component (custom harness — the
+//! image vendors no criterion). Prints one line per subject.
+//!
+//!     cargo bench --bench bench_micro
+
+use lmds_ose::data::{Geco, GecoConfig};
+use lmds_ose::mds::dissimilarity::{cross_matrix, full_matrix};
+use lmds_ose::mds::lsmds::stress_gradient;
+use lmds_ose::mds::Matrix;
+use lmds_ose::nn::{forward, MlpParams, MlpShape};
+use lmds_ose::ose::{embed_point, OseOptConfig};
+use lmds_ose::runtime::{default_artifact_dir, OwnedArg, RuntimeThread};
+use lmds_ose::strdist::{jaro_winkler_distance, levenshtein, levenshtein_dp, qgram_distance, Levenshtein};
+use lmds_ose::util::bench::{bench, BenchConfig};
+use lmds_ose::util::prng::Rng;
+
+fn main() {
+    lmds_ose::util::logging::init();
+    let cfg = BenchConfig::default();
+    let quick = BenchConfig {
+        measure: std::time::Duration::from_millis(500),
+        ..BenchConfig::default()
+    };
+    let mut rng = Rng::new(1);
+    let mut geco = Geco::new(GecoConfig { seed: 2, ..Default::default() });
+    let names = geco.generate_unique(2000);
+
+    println!("== string distances ==");
+    let mut i = 0usize;
+    let r = bench("levenshtein/myers (name pair)", &cfg, || {
+        i = (i + 1) % 1999;
+        levenshtein(&names[i], &names[i + 1])
+    });
+    println!("{}  ({:.1}M pairs/s)", r.report(), r.throughput(1) / 1e6);
+    let r2 = bench("levenshtein/dp (name pair)", &cfg, || {
+        i = (i + 1) % 1999;
+        levenshtein_dp(&names[i], &names[i + 1])
+    });
+    println!("{}  (myers speedup {:.1}x)", r2.report(), r2.median_s / r.median_s);
+    let r = bench("jaro-winkler (name pair)", &quick, || {
+        i = (i + 1) % 1999;
+        jaro_winkler_distance(&names[i], &names[i + 1])
+    });
+    println!("{}", r.report());
+    let r = bench("qgram2 (name pair)", &quick, || {
+        i = (i + 1) % 1999;
+        qgram_distance(&names[i], &names[i + 1], 2)
+    });
+    println!("{}", r.report());
+
+    println!("\n== dissimilarity engine ==");
+    let sub: Vec<&str> = names[..500].iter().map(|s| s.as_str()).collect();
+    let r = bench("full_matrix 500x500 (parallel)", &BenchConfig::heavy(), || {
+        full_matrix(&sub, &Levenshtein)
+    });
+    println!("{}  ({:.1}M dists/s)", r.report(), r.throughput(500 * 499 / 2) / 1e6);
+    let rows: Vec<&str> = names[500..756].iter().map(|s| s.as_str()).collect();
+    let r = bench("cross_matrix 256x500", &BenchConfig::heavy(), || {
+        cross_matrix(&rows, &sub, &Levenshtein)
+    });
+    println!("{}  ({:.1}M dists/s)", r.report(), r.throughput(256 * 500) / 1e6);
+
+    println!("\n== pure-Rust numeric kernels ==");
+    let x = Matrix::random_normal(&mut rng, 300, 7, 1.0);
+    let delta = {
+        let mut d = Matrix::zeros(300, 300);
+        for i in 0..300 {
+            for j in 0..300 {
+                d.set(i, j, lmds_ose::strdist::euclidean(x.row(i), x.row(j)) as f32);
+            }
+        }
+        d
+    };
+    let r = bench("stress_gradient N=300 K=7", &quick, || {
+        stress_gradient(&x, &delta)
+    });
+    println!("{}", r.report());
+    let lm = Matrix::random_normal(&mut rng, 300, 7, 1.0);
+    let dl: Vec<f32> = (0..300).map(|_| rng.next_f32() * 5.0).collect();
+    let r = bench("ose embed_point L=300 (rust)", &quick, || {
+        embed_point(&lm, &dl, None, &OseOptConfig::default())
+    });
+    println!("{}", r.report());
+    let params = MlpParams::init(
+        &MlpShape { input: 300, hidden: [256, 128, 64], output: 7 },
+        &mut rng,
+    );
+    let q = Matrix::from_vec(1, 300, dl.clone());
+    let r = bench("mlp forward B=1 L=300 (rust)", &quick, || {
+        forward(&params, &q)
+    });
+    println!("{}", r.report());
+
+    // PJRT exec latency (needs artifacts)
+    match RuntimeThread::spawn(&default_artifact_dir()) {
+        Ok(rt) => {
+            println!("\n== PJRT execution (L=300, paper-scale artifacts) ==");
+            let h = rt.handle();
+            let flat = params.flatten();
+            for b in [1usize, 64, 256] {
+                let Some(spec) = h
+                    .manifest()
+                    .find("mlp_fwd", &[("L", 300), ("B", b)])
+                    .cloned()
+                else {
+                    continue;
+                };
+                // bind weights once (positions 1..=8)
+                let mut bind_args = Vec::new();
+                for (i, p) in flat.iter().enumerate() {
+                    let sh = &spec.args[1 + i].shape;
+                    bind_args.push((
+                        1 + i,
+                        if sh.len() == 2 {
+                            OwnedArg::Mat(Matrix::from_vec(sh[0], sh[1], p.clone()))
+                        } else {
+                            OwnedArg::Vec1(p.clone())
+                        },
+                    ));
+                }
+                h.bind("bench-w", bind_args).unwrap();
+                let input = Matrix::from_vec(
+                    b,
+                    300,
+                    (0..b * 300).map(|_| rng.next_f32() * 5.0).collect(),
+                );
+                let r = bench(&format!("mlp_fwd exec B={b} (bound weights)"), &quick, || {
+                    h.execute_bound(&spec.name, "bench-w", vec![(0, OwnedArg::Mat(input.clone()))])
+                        .unwrap()
+                });
+                println!("{}  ({:.0} pts/s)", r.report(), r.throughput(b));
+            }
+            if let Some(spec) = h.manifest().find("ose_opt", &[("L", 300), ("B", 64)]) {
+                let spec = spec.clone();
+                let deltas = Matrix::from_vec(
+                    64,
+                    300,
+                    (0..64 * 300).map(|_| rng.next_f32() * 5.0).collect(),
+                );
+                h.bind("bench-lm", vec![(0, OwnedArg::Mat(lm.clone()))]).unwrap();
+                let r = bench("ose_opt exec B=64 T=60 (bound landmarks)", &quick, || {
+                    h.execute_bound(
+                        &spec.name,
+                        "bench-lm",
+                        vec![
+                            (1, OwnedArg::Mat(deltas.clone())),
+                            (2, OwnedArg::Mat(Matrix::zeros(64, 7))),
+                            (3, OwnedArg::Scalar(1.0 / 600.0)),
+                        ],
+                    )
+                    .unwrap()
+                });
+                println!("{}  ({:.0} pts/s)", r.report(), r.throughput(64));
+            }
+        }
+        Err(e) => println!("\n(PJRT benches skipped: {e:#})"),
+    }
+}

@@ -1,0 +1,115 @@
+//! End-to-end pipeline + serving benches: the wall-clock story a systems
+//! reader wants — how long each phase of the two-stage pipeline takes and
+//! what the serving layer sustains.
+//!
+//!     cargo bench --bench bench_pipeline
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lmds_ose::coordinator::embedder::{embed_dataset, OseBackend, PipelineConfig};
+use lmds_ose::coordinator::trainer::TrainConfig;
+use lmds_ose::coordinator::{BatcherConfig, Server};
+use lmds_ose::data::{Geco, GecoConfig};
+use lmds_ose::mds::LsmdsConfig;
+use lmds_ose::runtime::{default_artifact_dir, RuntimeThread};
+use lmds_ose::strdist::Levenshtein;
+
+fn main() {
+    lmds_ose::util::logging::init();
+    let n = 3000;
+    let mut geco = Geco::new(GecoConfig { seed: 0xbe9c, ..Default::default() });
+    let names = geco.generate_unique(n);
+    let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let rt = RuntimeThread::spawn(&default_artifact_dir()).ok();
+    let handle = rt.as_ref().map(|r| r.handle());
+
+    println!("== two-stage pipeline (N={n}, L=300, K=7) ==");
+    for backend in [OseBackend::Opt, OseBackend::Nn] {
+        let cfg = PipelineConfig {
+            dim: 7,
+            landmarks: 300,
+            backend,
+            lsmds: LsmdsConfig { dim: 7, max_iters: 250, ..Default::default() },
+            train: TrainConfig { epochs: 60, lr: 3e-3, ..Default::default() },
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let r = embed_dataset(&objs, &Levenshtein, &cfg, handle.as_ref()).unwrap();
+        let total = t0.elapsed().as_secs_f64();
+        let t = &r.timings;
+        println!(
+            "{:?} via {:<9} total {total:6.2}s | select {:.2}s dLL {:.2}s \
+             lsmds {:.2}s train {:.2}s dML {:.2}s ose {:.2}s | stress {:.4}",
+            backend, r.method.name(), t.select_s, t.delta_ll_s, t.lsmds_s,
+            t.train_s, t.delta_ml_s, t.ose_s, r.landmark_stress
+        );
+    }
+
+    println!("\n== serving throughput (NN backend, 8 clients) ==");
+    let cfg = PipelineConfig {
+        dim: 7,
+        landmarks: 300,
+        backend: OseBackend::Nn,
+        lsmds: LsmdsConfig { dim: 7, max_iters: 200, ..Default::default() },
+        train: TrainConfig { epochs: 60, lr: 3e-3, ..Default::default() },
+        ..Default::default()
+    };
+    let result = embed_dataset(&objs, &Levenshtein, &cfg, handle.as_ref()).unwrap();
+    let landmark_names: Vec<String> =
+        result.landmark_idx.iter().map(|&i| names[i].clone()).collect();
+    let server = Server::start(
+        landmark_names,
+        Arc::new(Levenshtein),
+        result.method,
+        BatcherConfig {
+            max_batch: 64,
+            max_delay: Duration::from_millis(2),
+            queue_cap: 8192,
+            frontend_threads: 8,
+        },
+    );
+    let h = server.handle();
+    for _ in 0..64 {
+        let _ = h.query_sync("warm up");
+    }
+    let queries = 10_000usize;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..8usize {
+            let h = h.clone();
+            let names = &names;
+            scope.spawn(move || {
+                let mut geco =
+                    Geco::new(GecoConfig { seed: 91 + c as u64, ..Default::default() });
+                let mut pending = Vec::with_capacity(64);
+                for q in 0..queries / 8 {
+                    let base = &names[(q * 37 + c * 101) % names.len()];
+                    pending.push(h.query(geco.corrupt(base)));
+                    if pending.len() >= 64 {
+                        for rx in pending.drain(..) {
+                            rx.recv().unwrap().unwrap();
+                        }
+                    }
+                }
+                for rx in pending {
+                    rx.recv().unwrap().unwrap();
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = h.metrics.snapshot();
+    println!(
+        "{} queries in {wall:.2}s -> {:.0} q/s | p50 {:.2}ms p99 {:.2}ms | \
+         mean batch {:.1}, exec {:.2}ms",
+        snap.completed,
+        snap.completed as f64 / wall,
+        snap.p50_s * 1e3,
+        snap.p99_s * 1e3,
+        snap.mean_batch_size,
+        snap.mean_batch_exec_s * 1e3
+    );
+    drop(h);
+    server.shutdown();
+}

@@ -1,0 +1,244 @@
+//! Run configuration: a typed view over a JSON config file with CLI
+//! overrides — the launcher-facing "config system" for experiments and the
+//! serving binary.
+//!
+//! Precedence: defaults < JSON file (`--config path`) < CLI flags.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::embedder::{OseBackend, PipelineConfig};
+use crate::coordinator::server::BatcherConfig;
+use crate::coordinator::trainer::TrainConfig;
+use crate::mds::{LandmarkMethod, LsmdsConfig};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dim: usize,
+    pub landmarks: usize,
+    pub landmark_method: LandmarkMethod,
+    pub backend: OseBackend,
+    pub metric: String,
+    pub seed: u64,
+    pub lsmds_iters: usize,
+    pub train_lr: f32,
+    pub train_epochs: usize,
+    pub hidden: [usize; 3],
+    pub max_batch: usize,
+    pub max_delay_ms: u64,
+    pub use_pjrt: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            dim: 7,
+            landmarks: 300,
+            landmark_method: LandmarkMethod::Fps,
+            backend: OseBackend::Nn,
+            metric: "levenshtein".into(),
+            seed: 1234,
+            lsmds_iters: 300,
+            train_lr: 1e-3,
+            train_epochs: 150,
+            hidden: [256, 128, 64],
+            max_batch: 64,
+            max_delay_ms: 2,
+            use_pjrt: true,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file (all keys optional).
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        let json = Json::parse(&text).context("parsing config JSON")?;
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&json)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_json(&mut self, json: &Json) -> Result<()> {
+        let usize_of = |j: &Json, key: &str| -> Result<Option<usize>> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => Ok(Some(
+                    v.as_usize().with_context(|| format!("config: bad {key}"))?,
+                )),
+            }
+        };
+        if let Some(v) = usize_of(json, "dim")? {
+            self.dim = v;
+        }
+        if let Some(v) = usize_of(json, "landmarks")? {
+            self.landmarks = v;
+        }
+        if let Some(v) = json.get("landmark_method").and_then(Json::as_str) {
+            self.landmark_method = LandmarkMethod::from_name(v)
+                .with_context(|| format!("config: unknown landmark_method {v}"))?;
+        }
+        if let Some(v) = json.get("backend").and_then(Json::as_str) {
+            self.backend = OseBackend::from_name(v)
+                .with_context(|| format!("config: unknown backend {v}"))?;
+        }
+        if let Some(v) = json.get("metric").and_then(Json::as_str) {
+            anyhow::ensure!(
+                crate::strdist::string_metric_by_name(v).is_some(),
+                "config: unknown metric {v}"
+            );
+            self.metric = v.to_string();
+        }
+        if let Some(v) = json.get("seed").and_then(Json::as_f64) {
+            self.seed = v as u64;
+        }
+        if let Some(v) = usize_of(json, "lsmds_iters")? {
+            self.lsmds_iters = v;
+        }
+        if let Some(v) = json.get("train_lr").and_then(Json::as_f64) {
+            self.train_lr = v as f32;
+        }
+        if let Some(v) = usize_of(json, "train_epochs")? {
+            self.train_epochs = v;
+        }
+        if let Some(h) = json.get("hidden").and_then(Json::as_arr) {
+            anyhow::ensure!(h.len() == 3, "config: hidden must have 3 entries");
+            for (i, v) in h.iter().enumerate() {
+                self.hidden[i] = v.as_usize().context("config: bad hidden entry")?;
+            }
+        }
+        if let Some(v) = usize_of(json, "max_batch")? {
+            self.max_batch = v;
+        }
+        if let Some(v) = json.get("max_delay_ms").and_then(Json::as_f64) {
+            self.max_delay_ms = v as u64;
+        }
+        if let Some(v) = json.get("use_pjrt").and_then(Json::as_bool) {
+            self.use_pjrt = v;
+        }
+        Ok(())
+    }
+
+    /// Apply CLI overrides (only flags that were explicitly given).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if args.get("dim").is_some() {
+            self.dim = args.usize("dim")?;
+        }
+        if args.get("landmarks").is_some() {
+            self.landmarks = args.usize("landmarks")?;
+        }
+        if let Some(v) = args.get("landmark-method") {
+            self.landmark_method = LandmarkMethod::from_name(v)
+                .with_context(|| format!("unknown landmark method {v}"))?;
+        }
+        if let Some(v) = args.get("backend") {
+            self.backend = OseBackend::from_name(v)
+                .with_context(|| format!("unknown backend {v}"))?;
+        }
+        if let Some(v) = args.get("metric") {
+            anyhow::ensure!(
+                crate::strdist::string_metric_by_name(v).is_some(),
+                "unknown metric {v}"
+            );
+            self.metric = v.to_string();
+        }
+        if args.get("seed").is_some() {
+            self.seed = args.u64("seed")?;
+        }
+        if args.flag("no-pjrt") {
+            self.use_pjrt = false;
+        }
+        Ok(())
+    }
+
+    pub fn pipeline(&self) -> PipelineConfig {
+        PipelineConfig {
+            dim: self.dim,
+            landmarks: self.landmarks,
+            landmark_method: self.landmark_method,
+            backend: self.backend,
+            lsmds: LsmdsConfig {
+                dim: self.dim,
+                max_iters: self.lsmds_iters,
+                seed: self.seed,
+                ..Default::default()
+            },
+            train: TrainConfig {
+                lr: self.train_lr,
+                epochs: self.train_epochs,
+                seed: self.seed ^ 0x7121, // independent training stream
+                ..Default::default()
+            },
+            hidden: self.hidden,
+            nn_bootstrap: true,
+            seed: self.seed,
+        }
+    }
+
+    pub fn batcher(&self) -> BatcherConfig {
+        BatcherConfig {
+            max_batch: self.max_batch,
+            max_delay: Duration::from_millis(self.max_delay_ms),
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::OptSpec;
+
+    #[test]
+    fn defaults_then_json_then_cli() {
+        let mut cfg = RunConfig::default();
+        let json = Json::parse(
+            r#"{"dim": 5, "landmarks": 100, "backend": "opt",
+                "hidden": [32, 16, 8], "max_delay_ms": 7}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&json).unwrap();
+        assert_eq!(cfg.dim, 5);
+        assert_eq!(cfg.backend, OseBackend::Opt);
+        assert_eq!(cfg.hidden, [32, 16, 8]);
+        assert_eq!(cfg.max_delay_ms, 7);
+
+        let specs = vec![
+            OptSpec { name: "dim", help: "", takes_value: true, default: None },
+            OptSpec { name: "backend", help: "", takes_value: true, default: None },
+            OptSpec { name: "no-pjrt", help: "", takes_value: false, default: None },
+        ];
+        let argv: Vec<String> =
+            ["--dim", "3", "--backend", "nn", "--no-pjrt"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv, &specs).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.dim, 3);
+        assert_eq!(cfg.backend, OseBackend::Nn);
+        assert!(!cfg.use_pjrt);
+        // untouched values survive
+        assert_eq!(cfg.landmarks, 100);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.apply_json(&Json::parse(r#"{"backend": "bogus"}"#).unwrap()).is_err());
+        assert!(cfg.apply_json(&Json::parse(r#"{"metric": "bogus"}"#).unwrap()).is_err());
+        assert!(cfg.apply_json(&Json::parse(r#"{"hidden": [1, 2]}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn derived_configs_consistent() {
+        let cfg = RunConfig::default();
+        let p = cfg.pipeline();
+        assert_eq!(p.dim, cfg.dim);
+        assert_eq!(p.landmarks, cfg.landmarks);
+        let b = cfg.batcher();
+        assert_eq!(b.max_batch, cfg.max_batch);
+    }
+}

@@ -1,0 +1,368 @@
+//! The two-stage large-scale pipeline (paper Sec. 4): (1) LSMDS on the
+//! landmarks (O(L^2)), (2) OSE of the remaining M = N - L objects using
+//! only their distances to the landmarks (O(L·M)). This is what makes
+//! LSMDS practical beyond ~10^4 points.
+
+use anyhow::{Context, Result};
+
+use crate::mds::dissimilarity::{cross_matrix, full_matrix};
+use crate::mds::landmarks::select_landmarks;
+use crate::mds::{lsmds_from, LandmarkMethod, LsmdsConfig, Matrix};
+use crate::nn::MlpShape;
+use crate::ose::{OseMethod, OseOptConfig, RustNn, RustOptimise};
+use crate::runtime::{OwnedArg, RuntimeHandle};
+use crate::strdist::Dissimilarity;
+use crate::util::prng::Rng;
+
+use super::methods::{PjrtNn, PjrtOpt};
+use super::trainer::{train_pjrt, train_rust, TrainConfig};
+
+/// Which OSE technique maps the non-landmark points.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OseBackend {
+    /// Neural network via the PJRT fused-MLP artifact (falls back to Rust
+    /// if no runtime handle is supplied).
+    Nn,
+    /// Optimisation method via the batched PJRT artifact (or pure Rust).
+    Opt,
+}
+
+impl OseBackend {
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "nn" | "neural" => Some(Self::Nn),
+            "opt" | "optimisation" | "optimization" => Some(Self::Opt),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub dim: usize,
+    pub landmarks: usize,
+    pub landmark_method: LandmarkMethod,
+    pub backend: OseBackend,
+    pub lsmds: LsmdsConfig,
+    pub train: TrainConfig,
+    /// Hidden sizes of the NN head.
+    pub hidden: [usize; 3],
+    /// NN backend only: bootstrap the training set by first mapping the
+    /// non-landmark points with the optimisation OSE and using those
+    /// coordinates as labels. This recovers the paper's protocol (the NN
+    /// trains on the distance rows of ALL N points, Sec. 4.2) in the
+    /// two-stage pipeline where only landmarks have LSMDS coordinates.
+    /// Off, the NN trains on the L landmark rows alone — much weaker.
+    pub nn_bootstrap: bool,
+    pub seed: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            dim: 7,
+            landmarks: 300,
+            landmark_method: LandmarkMethod::Fps,
+            backend: OseBackend::Nn,
+            lsmds: LsmdsConfig::default(),
+            train: TrainConfig::default(),
+            hidden: [256, 128, 64],
+            nn_bootstrap: true,
+            seed: 1234,
+        }
+    }
+}
+
+/// Everything a downstream consumer needs from a pipeline run.
+pub struct PipelineResult {
+    /// Indices (into the input object list) of the selected landmarks.
+    pub landmark_idx: Vec<usize>,
+    /// L x K landmark configuration.
+    pub landmark_config: Matrix,
+    /// N x K coordinates for every input object (landmarks at their LSMDS
+    /// positions, the rest OSE-mapped).
+    pub coords: Matrix,
+    /// The OSE method, ready to map future streaming queries.
+    pub method: Box<dyn OseMethod>,
+    /// Normalised stress of the landmark configuration.
+    pub landmark_stress: f64,
+    pub timings: PipelineTimings,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct PipelineTimings {
+    pub select_s: f64,
+    pub delta_ll_s: f64,
+    pub lsmds_s: f64,
+    pub train_s: f64,
+    pub delta_ml_s: f64,
+    pub ose_s: f64,
+}
+
+/// Run LSMDS on a landmark dissimilarity matrix, preferring the PJRT
+/// artifact when one exists for this size.
+pub fn lsmds_landmarks(
+    delta: &Matrix,
+    cfg: &LsmdsConfig,
+    handle: Option<&RuntimeHandle>,
+) -> Result<(Matrix, f64)> {
+    let n = delta.rows;
+    if let Some(h) = handle {
+        if let Some(spec) = h.manifest().find("lsmds_steps", &[("N", n)]) {
+            let steps = spec.dim("T").unwrap_or(10);
+            let mut rng = Rng::new(cfg.seed);
+            let mut x = Matrix::random_normal(&mut rng, n, cfg.dim, cfg.init_sigma);
+            x.center_columns();
+            let lr = cfg.lr.unwrap_or(1.0 / (2.0 * n as f64)) as f32;
+            let mut prev = f64::INFINITY;
+            let mut calls = 0usize;
+            let max_calls = cfg.max_iters.div_ceil(steps);
+            let spec_name = spec.name.clone();
+            // the N x N dissimilarity matrix (100 MB at N = 5000) crosses
+            // host->device ONCE; only the N x K configuration moves per call
+            let binding = format!("lsmds-delta-{n}-{:x}", cfg.seed);
+            h.bind(&binding, vec![(1, OwnedArg::Mat(delta.clone()))])?;
+            loop {
+                let out = h.execute_bound(
+                    &spec_name,
+                    &binding,
+                    vec![(0, OwnedArg::Mat(x)), (2, OwnedArg::Scalar(lr))],
+                )?;
+                let mut it = out.into_iter();
+                x = it.next().context("missing X output")?.into_matrix();
+                let sigma = it.next().context("missing sigma output")?.scalar() as f64;
+                calls += 1;
+                if prev.is_finite()
+                    && (prev - sigma) / prev.max(1e-30) < cfg.rel_tol * steps as f64
+                {
+                    break;
+                }
+                prev = sigma;
+                if calls >= max_calls {
+                    break;
+                }
+            }
+            let stress = crate::mds::stress::normalized_stress(&x, delta);
+            return Ok((x, stress));
+        }
+        log::debug!("no lsmds_steps artifact for N={n}; using pure-Rust LSMDS");
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let mut x0 = Matrix::random_normal(&mut rng, n, cfg.dim, cfg.init_sigma);
+    x0.center_columns();
+    let r = lsmds_from(delta, x0, cfg);
+    Ok((r.config, r.normalized_stress))
+}
+
+/// The full pipeline over string objects.
+pub fn embed_dataset<T: Sync + ?Sized>(
+    objects: &[&T],
+    metric: &dyn Dissimilarity<T>,
+    cfg: &PipelineConfig,
+    handle: Option<&RuntimeHandle>,
+) -> Result<PipelineResult> {
+    anyhow::ensure!(
+        cfg.landmarks <= objects.len(),
+        "more landmarks ({}) than objects ({})",
+        cfg.landmarks,
+        objects.len()
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let mut timings = PipelineTimings::default();
+
+    // 1. landmark selection
+    let t0 = std::time::Instant::now();
+    let landmark_idx =
+        select_landmarks(cfg.landmark_method, &mut rng, objects, cfg.landmarks, metric);
+    timings.select_s = t0.elapsed().as_secs_f64();
+    let landmark_objs: Vec<&T> = landmark_idx.iter().map(|&i| objects[i]).collect();
+
+    // 2. L x L dissimilarities + LSMDS
+    let t0 = std::time::Instant::now();
+    let delta_ll = full_matrix(&landmark_objs, metric);
+    timings.delta_ll_s = t0.elapsed().as_secs_f64();
+
+    let t0 = std::time::Instant::now();
+    let mut lcfg = cfg.lsmds.clone();
+    lcfg.dim = cfg.dim;
+    lcfg.seed = cfg.seed ^ 0x5eed;
+    let (landmark_config, landmark_stress) = lsmds_landmarks(&delta_ll, &lcfg, handle)?;
+    timings.lsmds_s = t0.elapsed().as_secs_f64();
+
+    // 3. distances from every object to the landmarks (training inputs for
+    //    the NN; query rows for the optimiser)
+    let t0 = std::time::Instant::now();
+    let rest_idx: Vec<usize> = (0..objects.len())
+        .filter(|i| landmark_idx.binary_search(i).is_err())
+        .collect();
+    let rest_objs: Vec<&T> = rest_idx.iter().map(|&i| objects[i]).collect();
+    let delta_ml = cross_matrix(&rest_objs, &landmark_objs, metric);
+    timings.delta_ml_s = t0.elapsed().as_secs_f64();
+
+    // 4. build the OSE method
+    let t0 = std::time::Instant::now();
+    let mut method: Box<dyn OseMethod> = match (cfg.backend, handle) {
+        (OseBackend::Nn, h) => {
+            // Training set (paper Sec. 4.2: distance rows of ALL N points):
+            // landmarks carry exact LSMDS coordinates; when bootstrapping,
+            // the remaining points are labelled by the optimisation OSE
+            // (the NN then amortises that optimiser at serving time).
+            let shape = MlpShape {
+                input: cfg.landmarks,
+                hidden: cfg.hidden,
+                output: cfg.dim,
+            };
+            let (inputs, labels) = if cfg.nn_bootstrap && delta_ml.rows > 0 {
+                let rest_labels: Matrix = match h {
+                    Some(h) if h
+                        .manifest()
+                        .find("ose_opt", &[("L", cfg.landmarks)])
+                        .is_some() =>
+                    {
+                        PjrtOpt::with_defaults(h.clone(), landmark_config.clone())
+                            .embed(&delta_ml)?
+                    }
+                    _ => RustOptimise {
+                        landmarks: landmark_config.clone(),
+                        cfg: OseOptConfig::default(),
+                    }
+                    .embed(&delta_ml)?,
+                };
+                (delta_ll.vstack(&delta_ml), landmark_config.vstack(&rest_labels))
+            } else {
+                (delta_ll.clone(), landmark_config.clone())
+            };
+            let constraints = super::trainer::train_constraints(&shape);
+            let (params, report) = match h {
+                Some(h) if h.manifest().find("mlp_train_step", &constraints).is_some() => {
+                    train_pjrt(h, &shape, &inputs, &labels, &cfg.train)?
+                }
+                _ => train_rust(&shape, &inputs, &labels, 256, &cfg.train),
+            };
+            log::info!(
+                "nn-ose trained: epochs={} loss={:.4} ({:.2}s)",
+                report.epochs_run,
+                report.final_loss,
+                report.wall_s
+            );
+            timings.train_s = report.wall_s;
+            match h {
+                Some(h) if h.manifest().find("mlp_fwd", &constraints).is_some() => {
+                    Box::new(PjrtNn::new(h.clone(), &params))
+                }
+                _ => Box::new(RustNn { params }),
+            }
+        }
+        (OseBackend::Opt, Some(h))
+            if h.manifest().find("ose_opt", &[("L", cfg.landmarks)]).is_some() =>
+        {
+            Box::new(PjrtOpt::with_defaults(h.clone(), landmark_config.clone()))
+        }
+        (OseBackend::Opt, _) => Box::new(RustOptimise {
+            landmarks: landmark_config.clone(),
+            cfg: OseOptConfig::default(),
+        }),
+    };
+    if cfg.backend == OseBackend::Nn {
+        // training time is inside train_s; avoid double counting
+    } else {
+        timings.train_s = 0.0;
+    }
+
+    // 5. OSE the remaining points
+    let rest_coords = if rest_idx.is_empty() {
+        Matrix::zeros(0, cfg.dim)
+    } else {
+        method.embed(&delta_ml)?
+    };
+    timings.ose_s = t0.elapsed().as_secs_f64() - timings.train_s;
+
+    // 6. assemble the full coordinate table
+    let mut coords = Matrix::zeros(objects.len(), cfg.dim);
+    for (r, &i) in landmark_idx.iter().enumerate() {
+        coords.row_mut(i).copy_from_slice(landmark_config.row(r));
+    }
+    for (r, &i) in rest_idx.iter().enumerate() {
+        coords.row_mut(i).copy_from_slice(rest_coords.row(r));
+    }
+
+    Ok(PipelineResult {
+        landmark_idx,
+        landmark_config,
+        coords,
+        method,
+        landmark_stress,
+        timings,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Geco, GecoConfig};
+    use crate::strdist::Levenshtein;
+
+    #[test]
+    fn pipeline_runs_pure_rust_nn() {
+        let mut geco = Geco::new(GecoConfig { seed: 11, ..Default::default() });
+        let names = geco.generate_unique(120);
+        let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let cfg = PipelineConfig {
+            dim: 3,
+            landmarks: 40,
+            backend: OseBackend::Nn,
+            hidden: [32, 16, 8],
+            train: TrainConfig { epochs: 30, ..Default::default() },
+            lsmds: LsmdsConfig { max_iters: 120, dim: 3, ..Default::default() },
+            ..Default::default()
+        };
+        let r = embed_dataset(&objs, &Levenshtein, &cfg, None).unwrap();
+        assert_eq!(r.coords.rows, 120);
+        assert_eq!(r.coords.cols, 3);
+        assert_eq!(r.landmark_idx.len(), 40);
+        assert!(r.coords.data.iter().all(|v| v.is_finite()));
+        assert!(r.landmark_stress < 0.6, "stress {}", r.landmark_stress);
+    }
+
+    #[test]
+    fn pipeline_runs_pure_rust_opt() {
+        let mut geco = Geco::new(GecoConfig { seed: 12, ..Default::default() });
+        let names = geco.generate_unique(80);
+        let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let cfg = PipelineConfig {
+            dim: 3,
+            landmarks: 30,
+            backend: OseBackend::Opt,
+            lsmds: LsmdsConfig { max_iters: 120, dim: 3, ..Default::default() },
+            ..Default::default()
+        };
+        let mut r = embed_dataset(&objs, &Levenshtein, &cfg, None).unwrap();
+        assert_eq!(r.coords.rows, 80);
+        // the returned method can embed fresh queries
+        let q = crate::mds::dissimilarity::cross_matrix(
+            &["newname sample"],
+            &r.landmark_idx.iter().map(|&i| objs[i]).collect::<Vec<_>>(),
+            &Levenshtein,
+        );
+        let y = r.method.embed(&q).unwrap();
+        assert_eq!((y.rows, y.cols), (1, 3));
+    }
+
+    #[test]
+    fn landmark_positions_preserved_in_output() {
+        let mut geco = Geco::new(GecoConfig { seed: 13, ..Default::default() });
+        let names = geco.generate_unique(60);
+        let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let cfg = PipelineConfig {
+            dim: 2,
+            landmarks: 20,
+            backend: OseBackend::Opt,
+            lsmds: LsmdsConfig { max_iters: 60, dim: 2, ..Default::default() },
+            ..Default::default()
+        };
+        let r = embed_dataset(&objs, &Levenshtein, &cfg, None).unwrap();
+        for (row, &i) in r.landmark_idx.iter().enumerate() {
+            assert_eq!(r.coords.row(i), r.landmark_config.row(row));
+        }
+    }
+}

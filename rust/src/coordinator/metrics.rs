@@ -1,0 +1,139 @@
+//! Serving metrics: request counters, latency distributions, queue gauges.
+//! Shared (`Arc<Metrics>`) between the frontend, batcher and executor.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::{percentiles, Running};
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_points: AtomicU64,
+    /// per-request end-to-end latency samples (seconds)
+    latency: Mutex<Vec<f64>>,
+    /// per-batch execute latency (seconds)
+    batch_latency: Mutex<Vec<f64>>,
+    /// distance-computation latency (seconds)
+    dist_latency: Mutex<Vec<f64>>,
+    batch_sizes: Mutex<Running>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_completed(&self, latency: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latency.lock().unwrap().push(latency.as_secs_f64());
+    }
+
+    pub fn record_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize, exec: Duration) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_points.fetch_add(size as u64, Ordering::Relaxed);
+        self.batch_latency.lock().unwrap().push(exec.as_secs_f64());
+        self.batch_sizes.lock().unwrap().push(size as f64);
+    }
+
+    pub fn record_dist(&self, d: Duration) {
+        self.dist_latency.lock().unwrap().push(d.as_secs_f64());
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let lat = self.latency.lock().unwrap().clone();
+        let (p50, p95, p99) = if lat.is_empty() {
+            (f64::NAN, f64::NAN, f64::NAN)
+        } else {
+            percentiles(&lat)
+        };
+        let batch_lat = self.batch_latency.lock().unwrap().clone();
+        let sizes = self.batch_sizes.lock().unwrap().clone();
+        Snapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            p50_s: p50,
+            p95_s: p95,
+            p99_s: p99,
+            mean_batch_size: sizes.mean(),
+            mean_batch_exec_s: crate::util::stats::mean(&batch_lat),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub mean_batch_size: f64,
+    pub mean_batch_exec_s: f64,
+}
+
+impl Snapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} completed={} failed={} batches={} \
+             latency p50={:.3}ms p95={:.3}ms p99={:.3}ms \
+             mean_batch={:.1} mean_exec={:.3}ms",
+            self.requests,
+            self.completed,
+            self.failed,
+            self.batches,
+            self.p50_s * 1e3,
+            self.p95_s * 1e3,
+            self.p99_s * 1e3,
+            self.mean_batch_size,
+            self.mean_batch_exec_s * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = Metrics::new();
+        for i in 0..100 {
+            m.record_request();
+            m.record_completed(Duration::from_micros(100 + i));
+        }
+        m.record_batch(32, Duration::from_millis(2));
+        m.record_batch(16, Duration::from_millis(1));
+        m.record_failed();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_size - 24.0).abs() < 1e-9);
+        assert!(s.p50_s > 0.0 && s.p50_s <= s.p99_s);
+        assert!(s.report().contains("requests=100"));
+    }
+
+    #[test]
+    fn empty_snapshot_is_nan_not_panic() {
+        let s = Metrics::new().snapshot();
+        assert!(s.p50_s.is_nan());
+    }
+}

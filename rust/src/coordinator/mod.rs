@@ -1,0 +1,19 @@
+//! L3 coordinator — the paper's system layer: the two-stage large-scale
+//! embedding pipeline, the NN-OSE trainer, the streaming service with
+//! dynamic batching, run configuration and serving metrics.
+
+pub mod config;
+pub mod embedder;
+pub mod methods;
+pub mod metrics;
+pub mod server;
+pub mod stream;
+pub mod trainer;
+
+pub use config::RunConfig;
+pub use embedder::{embed_dataset, OseBackend, PipelineConfig, PipelineResult};
+pub use methods::{PjrtNn, PjrtOpt};
+pub use metrics::{Metrics, Snapshot};
+pub use server::{BatcherConfig, QueryResult, Server, ServerHandle};
+pub use stream::{DriftConfig, DriftMonitor, DriftStatus};
+pub use trainer::{train_pjrt, train_rust, TrainConfig, TrainReport};

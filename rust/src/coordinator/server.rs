@@ -1,0 +1,382 @@
+//! Streaming OSE service: the "high performance" serving half of the paper
+//! (fast DR on streaming datasets). vLLM-router-shaped:
+//!
+//! ```text
+//!  clients --query--> [frontend pool: Levenshtein distances to landmarks]
+//!          --delta row--> [bounded queue] --> [batcher thread]
+//!          --batch (padded to artifact shape)--> [OSE method / PJRT]
+//!          --coords--> per-request reply channels
+//! ```
+//!
+//! Dynamic batching: a batch is dispatched when it reaches `max_batch` or
+//! when its oldest member has waited `max_delay`, whichever first. The
+//! bounded queue applies backpressure to the frontend.
+
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::mds::Matrix;
+use crate::ose::OseMethod;
+use crate::strdist::Dissimilarity;
+use crate::util::threadpool::WorkerPool;
+
+use super::metrics::Metrics;
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Dispatch as soon as this many requests are pending.
+    pub max_batch: usize,
+    /// ... or when the oldest pending request has waited this long.
+    pub max_delay: Duration,
+    /// Bounded queue capacity between frontend and batcher (backpressure).
+    pub queue_cap: usize,
+    /// Frontend worker threads (distance computation).
+    pub frontend_threads: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 64,
+            max_delay: Duration::from_millis(2),
+            queue_cap: 4096,
+            frontend_threads: 4,
+        }
+    }
+}
+
+/// A completed query.
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    pub coords: Vec<f32>,
+    pub latency: Duration,
+}
+
+struct WorkItem {
+    delta: Vec<f32>,
+    started: Instant,
+    reply: Sender<Result<QueryResult, String>>,
+}
+
+/// The OSE serving coordinator for string objects.
+///
+/// Shutdown semantics: the batcher thread exits when every sender into its
+/// queue is gone — i.e. when the server's own handle AND all caller-held
+/// clones have been dropped. `shutdown()`/`Drop` releases the server's
+/// handle and joins; callers must drop their clones first (or the join
+/// blocks until they do).
+pub struct Server {
+    handle: Option<ServerHandle>,
+    batcher: Option<JoinHandle<()>>,
+    // keep the pool alive; dropped (and joined) before the batcher
+    _frontend: Arc<WorkerPool>,
+}
+
+#[derive(Clone)]
+pub struct ServerHandle {
+    landmarks: Arc<Vec<String>>,
+    metric: Arc<dyn Dissimilarity<str> + Send + Sync>,
+    pool: Arc<WorkerPool>,
+    tx: SyncSender<WorkItem>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Server {
+    /// Start the service. `method` runs on the batcher thread (it may hold
+    /// a `RuntimeHandle`, which is Send).
+    pub fn start(
+        landmarks: Vec<String>,
+        metric: Arc<dyn Dissimilarity<str> + Send + Sync>,
+        mut method: Box<dyn OseMethod>,
+        cfg: BatcherConfig,
+    ) -> Server {
+        assert_eq!(
+            landmarks.len(),
+            method.landmarks(),
+            "landmark count must match the OSE method"
+        );
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = std::sync::mpsc::sync_channel::<WorkItem>(cfg.queue_cap);
+        let pool = Arc::new(WorkerPool::new(cfg.frontend_threads));
+        let m2 = Arc::clone(&metrics);
+        let bcfg = cfg.clone();
+        let batcher = std::thread::Builder::new()
+            .name("ose-batcher".into())
+            .spawn(move || batcher_loop(rx, &mut *method, &bcfg, &m2))
+            .expect("spawning batcher");
+
+        let handle = ServerHandle {
+            landmarks: Arc::new(landmarks),
+            metric,
+            pool: Arc::clone(&pool),
+            tx,
+            metrics,
+        };
+        Server { handle: Some(handle), batcher: Some(batcher), _frontend: pool }
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone().expect("server already shut down")
+    }
+
+    /// Graceful shutdown: waits for in-flight work to drain. All caller
+    /// handles must be dropped first, or this blocks until they are.
+    pub fn shutdown(mut self) {
+        self.join_inner();
+    }
+
+    fn join_inner(&mut self) {
+        // Release our sender; the batcher exits once all handles are gone.
+        self.handle.take();
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.join_inner();
+    }
+}
+
+fn batcher_loop(
+    rx: Receiver<WorkItem>,
+    method: &mut dyn OseMethod,
+    cfg: &BatcherConfig,
+    metrics: &Metrics,
+) {
+    let l = method.landmarks();
+    let k = method.dim();
+    loop {
+        // block for the first item of the next batch
+        let first = match rx.recv() {
+            Ok(item) => item,
+            Err(_) => return, // all senders gone
+        };
+        let mut items = vec![first];
+        // greedily drain the backlog first: under load the queue already
+        // holds a full batch and waiting would only add latency
+        while items.len() < cfg.max_batch {
+            match rx.try_recv() {
+                Ok(item) => items.push(item),
+                Err(_) => break,
+            }
+        }
+        // under light load, wait up to max_delay (from NOW — not from the
+        // request's submit time, which may already be in the past after a
+        // queue wait) for stragglers to share the execution
+        if items.len() < cfg.max_batch {
+            let deadline = Instant::now() + cfg.max_delay;
+            while items.len() < cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(item) => items.push(item),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+
+        // assemble the batch
+        let mut deltas = Matrix::zeros(items.len(), l);
+        for (r, item) in items.iter().enumerate() {
+            deltas.row_mut(r).copy_from_slice(&item.delta);
+        }
+        let t0 = Instant::now();
+        match method.embed(&deltas) {
+            Ok(coords) => {
+                metrics.record_batch(items.len(), t0.elapsed());
+                debug_assert_eq!(coords.cols, k);
+                for (r, item) in items.into_iter().enumerate() {
+                    let latency = item.started.elapsed();
+                    metrics.record_completed(latency);
+                    let _ = item.reply.send(Ok(QueryResult {
+                        coords: coords.row(r).to_vec(),
+                        latency,
+                    }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("embed failed: {e:#}");
+                log::error!("{msg}");
+                for item in items {
+                    metrics.record_failed();
+                    let _ = item.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+impl ServerHandle {
+    /// Async query: returns a receiver that yields the result.
+    pub fn query(&self, name: String) -> Receiver<Result<QueryResult, String>> {
+        let (reply, rx) = channel();
+        let started = Instant::now();
+        self.metrics.record_request();
+        let landmarks = Arc::clone(&self.landmarks);
+        let metric = Arc::clone(&self.metric);
+        let tx = self.tx.clone();
+        let metrics = Arc::clone(&self.metrics);
+        self.pool.submit(move || {
+            let t0 = Instant::now();
+            let delta: Vec<f32> = landmarks
+                .iter()
+                .map(|lm| metric.dist(&name, lm) as f32)
+                .collect();
+            metrics.record_dist(t0.elapsed());
+            let item = WorkItem { delta, started, reply };
+            // backpressure: block if the queue is full
+            if let Err(e) = tx.send(item) {
+                let WorkItem { reply, .. } = e.0;
+                metrics.record_failed();
+                let _ = reply.send(Err("server shutting down".into()));
+            }
+        });
+        rx
+    }
+
+    /// Query with a precomputed distance row (bypasses the frontend).
+    pub fn query_delta(
+        &self,
+        delta: Vec<f32>,
+    ) -> Receiver<Result<QueryResult, String>> {
+        let (reply, rx) = channel();
+        self.metrics.record_request();
+        let item = WorkItem { delta, started: Instant::now(), reply };
+        match self.tx.try_send(item) {
+            Ok(()) => {}
+            Err(TrySendError::Full(item)) => {
+                // blocking fallback under overload
+                let _ = self.tx.send(item);
+            }
+            Err(TrySendError::Disconnected(item)) => {
+                self.metrics.record_failed();
+                let _ = item.reply.send(Err("server shutting down".into()));
+            }
+        }
+        rx
+    }
+
+    /// Blocking query.
+    pub fn query_sync(&self, name: &str) -> Result<QueryResult, String> {
+        self.query(name.to_string())
+            .recv()
+            .map_err(|_| "server dropped the request".to_string())?
+    }
+
+    pub fn landmark_names(&self) -> &[String] {
+        &self.landmarks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{MlpParams, MlpShape};
+    use crate::ose::RustNn;
+    use crate::util::prng::Rng;
+
+    fn tiny_server(max_batch: usize, delay_ms: u64) -> Server {
+        let mut rng = Rng::new(1);
+        let landmarks: Vec<String> =
+            (0..16).map(|i| format!("landmark{i:02}")).collect();
+        let params = MlpParams::init(
+            &MlpShape { input: 16, hidden: [8, 8, 8], output: 3 },
+            &mut rng,
+        );
+        Server::start(
+            landmarks,
+            Arc::new(crate::strdist::Levenshtein),
+            Box::new(RustNn { params }),
+            BatcherConfig {
+                max_batch,
+                max_delay: Duration::from_millis(delay_ms),
+                queue_cap: 128,
+                frontend_threads: 2,
+            },
+        )
+    }
+
+    #[test]
+    fn serves_queries_end_to_end() {
+        let server = tiny_server(8, 2);
+        let h = server.handle();
+        let mut rxs = Vec::new();
+        for i in 0..40 {
+            rxs.push(h.query(format!("query name {i}")));
+        }
+        for rx in rxs {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.coords.len(), 3);
+            assert!(r.coords.iter().all(|c| c.is_finite()));
+        }
+        let snap = h.metrics.snapshot();
+        assert_eq!(snap.completed, 40);
+        assert_eq!(snap.failed, 0);
+        assert!(snap.batches <= 40);
+        drop(h);
+        server.shutdown();
+    }
+
+    #[test]
+    fn single_query_latency_bounded_by_max_delay() {
+        let server = tiny_server(64, 5);
+        let h = server.handle();
+        let r = h.query_sync("solo query").unwrap();
+        // a lone request must be dispatched by the deadline, not wait for
+        // a full batch
+        assert!(
+            r.latency < Duration::from_millis(200),
+            "latency {:?}",
+            r.latency
+        );
+        drop(h);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batching_actually_batches() {
+        let server = tiny_server(32, 20);
+        let h = server.handle();
+        let rxs: Vec<_> = (0..64)
+            .map(|_| h.query_delta(vec![1.0; 16]))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let snap = h.metrics.snapshot();
+        assert!(
+            snap.mean_batch_size > 1.5,
+            "no batching: mean={}",
+            snap.mean_batch_size
+        );
+        drop(h);
+        server.shutdown();
+    }
+
+    #[test]
+    fn results_are_request_specific() {
+        // two very different queries must not get each other's coordinates
+        let server = tiny_server(2, 50);
+        let h = server.handle();
+        let rx_a = h.query("aaaaaaaaaaaaaaaa".to_string());
+        let rx_b = h.query("zz".to_string());
+        let a = rx_a.recv().unwrap().unwrap();
+        let b = rx_b.recv().unwrap().unwrap();
+        // deterministic MLP: same input -> same output; check self-consistency
+        let a2 = h.query_sync("aaaaaaaaaaaaaaaa").unwrap();
+        assert_eq!(a.coords, a2.coords);
+        assert_ne!(a.coords, b.coords);
+        drop(h);
+        server.shutdown();
+    }
+}

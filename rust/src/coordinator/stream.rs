@@ -1,0 +1,194 @@
+//! Streaming drift monitor — operational support for the paper's "fast DR
+//! on streaming datasets" scenario.
+//!
+//! An OSE configuration is only as good as its landmarks: if the incoming
+//! query distribution drifts away from the data the landmarks were chosen
+//! from (new name ethnicities, new sensor region, ...), per-query
+//! objectives rise and the embedding silently degrades. This module keeps
+//! a sliding window over a cheap per-query quality proxy (the Eq.-2
+//! objective of the mapped point against the landmarks, normalised) and
+//! raises a re-embedding signal when the recent window deviates from the
+//! calibration baseline — the operational answer to "when do we need to
+//! recompute the landmark configuration?", which the paper leaves open.
+
+use std::collections::VecDeque;
+
+use crate::mds::Matrix;
+use crate::ose::optimise::objective_and_grad;
+
+/// Decision emitted by the monitor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftStatus {
+    /// Not enough samples yet to judge.
+    Warmup,
+    /// Recent quality consistent with the calibration window.
+    Healthy,
+    /// Recent quality degraded beyond the threshold: re-embed landmarks.
+    Drifted,
+}
+
+#[derive(Clone, Debug)]
+pub struct DriftConfig {
+    /// Sliding-window length (queries).
+    pub window: usize,
+    /// Calibration sample count (the first `calibration` queries define
+    /// the baseline).
+    pub calibration: usize,
+    /// Signal when the window median exceeds baseline median by this
+    /// factor.
+    pub degrade_factor: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        Self { window: 256, calibration: 256, degrade_factor: 1.5 }
+    }
+}
+
+/// Sliding-window drift monitor over normalised per-query OSE objectives.
+pub struct DriftMonitor {
+    cfg: DriftConfig,
+    calibration: Vec<f64>,
+    baseline_median: Option<f64>,
+    window: VecDeque<f64>,
+}
+
+impl DriftMonitor {
+    pub fn new(cfg: DriftConfig) -> Self {
+        Self {
+            calibration: Vec::with_capacity(cfg.calibration),
+            baseline_median: None,
+            window: VecDeque::with_capacity(cfg.window),
+            cfg,
+        }
+    }
+
+    /// Quality proxy for one served query: Eq.-2 objective of the mapped
+    /// point, normalised by the sum of its landmark dissimilarities (the
+    /// same normalisation as the paper's PErr plots).
+    pub fn score(landmarks: &Matrix, deltas: &[f32], mapped: &[f32]) -> f64 {
+        let (obj, _) = objective_and_grad(landmarks, deltas, mapped);
+        let denom: f64 = deltas.iter().map(|d| *d as f64).sum();
+        if denom > 0.0 {
+            obj / denom
+        } else {
+            obj
+        }
+    }
+
+    /// Feed one query's score; returns the current status.
+    pub fn push(&mut self, score: f64) -> DriftStatus {
+        if self.baseline_median.is_none() {
+            self.calibration.push(score);
+            if self.calibration.len() >= self.cfg.calibration {
+                self.baseline_median =
+                    Some(crate::util::stats::median(&self.calibration));
+            }
+            return DriftStatus::Warmup;
+        }
+        if self.window.len() == self.cfg.window {
+            self.window.pop_front();
+        }
+        self.window.push_back(score);
+        if self.window.len() < self.cfg.window / 2 {
+            return DriftStatus::Warmup;
+        }
+        let recent: Vec<f64> = self.window.iter().copied().collect();
+        let med = crate::util::stats::median(&recent);
+        let base = self.baseline_median.unwrap();
+        if med > base * self.cfg.degrade_factor {
+            DriftStatus::Drifted
+        } else {
+            DriftStatus::Healthy
+        }
+    }
+
+    /// Reset after a re-embedding (new landmarks => new baseline).
+    pub fn reset(&mut self) {
+        self.calibration.clear();
+        self.baseline_median = None;
+        self.window.clear();
+    }
+
+    pub fn baseline(&self) -> Option<f64> {
+        self.baseline_median
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn cfg() -> DriftConfig {
+        DriftConfig { window: 50, calibration: 50, degrade_factor: 1.5 }
+    }
+
+    #[test]
+    fn warms_up_then_reports_healthy_on_stationary_stream() {
+        let mut m = DriftMonitor::new(cfg());
+        let mut rng = Rng::new(1);
+        let mut statuses = Vec::new();
+        for _ in 0..200 {
+            statuses.push(m.push(0.3 + rng.next_f64() * 0.02));
+        }
+        assert!(statuses[..49].iter().all(|s| *s == DriftStatus::Warmup));
+        assert_eq!(*statuses.last().unwrap(), DriftStatus::Healthy);
+        assert!(m.baseline().unwrap() > 0.29);
+    }
+
+    #[test]
+    fn detects_sustained_degradation() {
+        let mut m = DriftMonitor::new(cfg());
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            m.push(0.3 + rng.next_f64() * 0.02);
+        }
+        // drift: scores double
+        let mut last = DriftStatus::Healthy;
+        for _ in 0..60 {
+            last = m.push(0.65 + rng.next_f64() * 0.02);
+        }
+        assert_eq!(last, DriftStatus::Drifted);
+    }
+
+    #[test]
+    fn tolerates_transient_spikes() {
+        let mut m = DriftMonitor::new(cfg());
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            m.push(0.3 + rng.next_f64() * 0.02);
+        }
+        // a handful of outliers must NOT flip the median-based signal
+        for _ in 0..5 {
+            assert_ne!(m.push(5.0), DriftStatus::Drifted);
+        }
+        let mut rng2 = Rng::new(4);
+        assert_eq!(m.push(0.3 + rng2.next_f64() * 0.02), DriftStatus::Healthy);
+    }
+
+    #[test]
+    fn reset_requires_recalibration() {
+        let mut m = DriftMonitor::new(cfg());
+        for _ in 0..120 {
+            m.push(0.3);
+        }
+        m.reset();
+        assert_eq!(m.push(0.3), DriftStatus::Warmup);
+        assert!(m.baseline().is_none());
+    }
+
+    #[test]
+    fn score_normalises_by_delta_mass() {
+        let mut rng = Rng::new(5);
+        let lm = Matrix::random_normal(&mut rng, 10, 3, 1.0);
+        let deltas = vec![1.0f32; 10];
+        let y = vec![0.0f32; 3];
+        let s = DriftMonitor::score(&lm, &deltas, &y);
+        assert!(s.is_finite() && s >= 0.0);
+        // doubling all dissimilarities roughly rescales the proxy
+        let deltas2 = vec![2.0f32; 10];
+        let s2 = DriftMonitor::score(&lm, &deltas2, &y);
+        assert!(s2.is_finite());
+    }
+}

@@ -1,0 +1,133 @@
+//! Built-in name corpora for the Geco-style generator.
+//!
+//! The paper generates entity names with the Geco tool from FEBRL
+//! (Christen & Vatsalan, CIKM'13), which samples given/surnames from
+//! frequency tables. We embed compact frequency-weighted tables (top
+//! Anglo-Australian names, matching FEBRL's shipped lookup files in spirit)
+//! so data generation needs no external files. Frequencies are Zipf-like
+//! ranks, not exact census counts — only the *distance distribution between
+//! name strings* matters for MDS behaviour.
+
+/// (name, relative frequency weight)
+pub const GIVEN_NAMES: &[(&str, f64)] = &[
+    ("james", 100.0), ("john", 97.0), ("robert", 95.0), ("michael", 93.0),
+    ("william", 90.0), ("david", 88.0), ("richard", 80.0), ("joseph", 78.0),
+    ("thomas", 76.0), ("charles", 74.0), ("christopher", 72.0), ("daniel", 70.0),
+    ("matthew", 68.0), ("anthony", 66.0), ("mark", 64.0), ("donald", 62.0),
+    ("steven", 60.0), ("paul", 58.0), ("andrew", 56.0), ("joshua", 54.0),
+    ("kenneth", 52.0), ("kevin", 50.0), ("brian", 49.0), ("george", 48.0),
+    ("timothy", 47.0), ("ronald", 46.0), ("edward", 45.0), ("jason", 44.0),
+    ("jeffrey", 43.0), ("ryan", 42.0), ("jacob", 41.0), ("gary", 40.0),
+    ("nicholas", 39.0), ("eric", 38.0), ("jonathan", 37.0), ("stephen", 36.0),
+    ("larry", 35.0), ("justin", 34.0), ("scott", 33.0), ("brandon", 32.0),
+    ("benjamin", 31.0), ("samuel", 30.0), ("gregory", 29.0), ("alexander", 28.0),
+    ("patrick", 27.0), ("frank", 26.0), ("raymond", 25.0), ("jack", 24.0),
+    ("dennis", 23.0), ("jerry", 22.0), ("tyler", 21.0), ("aaron", 20.0),
+    ("mary", 100.0), ("patricia", 96.0), ("jennifer", 94.0), ("linda", 92.0),
+    ("elizabeth", 90.0), ("barbara", 88.0), ("susan", 84.0), ("jessica", 82.0),
+    ("sarah", 80.0), ("karen", 78.0), ("lisa", 76.0), ("nancy", 74.0),
+    ("betty", 72.0), ("margaret", 70.0), ("sandra", 68.0), ("ashley", 66.0),
+    ("kimberly", 64.0), ("emily", 62.0), ("donna", 60.0), ("michelle", 58.0),
+    ("carol", 56.0), ("amanda", 54.0), ("dorothy", 52.0), ("melissa", 50.0),
+    ("deborah", 48.0), ("stephanie", 46.0), ("rebecca", 44.0), ("sharon", 42.0),
+    ("laura", 40.0), ("cynthia", 38.0), ("kathleen", 36.0), ("amy", 34.0),
+    ("angela", 32.0), ("shirley", 30.0), ("anna", 28.0), ("brenda", 26.0),
+    ("pamela", 24.0), ("emma", 22.0), ("nicole", 20.0), ("helen", 18.0),
+    ("samantha", 16.0), ("katherine", 14.0), ("christine", 12.0), ("debra", 10.0),
+    ("rachel", 9.0), ("carolyn", 8.0), ("janet", 7.0), ("catherine", 6.0),
+    ("maria", 5.0), ("heather", 4.0), ("diane", 3.0), ("ruth", 2.0),
+];
+
+pub const SURNAMES: &[(&str, f64)] = &[
+    ("smith", 100.0), ("jones", 95.0), ("williams", 92.0), ("brown", 90.0),
+    ("wilson", 88.0), ("taylor", 86.0), ("johnson", 82.0), ("white", 80.0),
+    ("martin", 78.0), ("anderson", 76.0), ("thompson", 74.0), ("nguyen", 72.0),
+    ("thomas", 70.0), ("walker", 68.0), ("harris", 66.0), ("lee", 64.0),
+    ("ryan", 62.0), ("robinson", 60.0), ("kelly", 58.0), ("king", 56.0),
+    ("davis", 54.0), ("wright", 52.0), ("evans", 50.0), ("roberts", 48.0),
+    ("green", 46.0), ("hall", 44.0), ("wood", 42.0), ("jackson", 40.0),
+    ("clarke", 38.0), ("patel", 36.0), ("khan", 34.0), ("lewis", 32.0),
+    ("james", 30.0), ("phillips", 29.0), ("mason", 28.0), ("mitchell", 27.0),
+    ("rose", 26.0), ("davies", 25.0), ("rodriguez", 24.0), ("cox", 23.0),
+    ("alexander", 22.0), ("garden", 21.0), ("campbell", 20.0), ("johnston", 19.0),
+    ("moore", 18.0), ("smyth", 17.0), ("oneill", 16.0), ("doyle", 15.0),
+    ("mcdonald", 14.0), ("stewart", 13.0), ("quinn", 12.0), ("murphy", 11.0),
+    ("graham", 10.0), ("mclean", 9.5), ("hernandez", 9.0), ("fernandez", 8.5),
+    ("lopez", 8.0), ("gonzalez", 7.5), ("perez", 7.0), ("sanchez", 6.5),
+    ("ramirez", 6.0), ("torres", 5.5), ("flores", 5.0), ("rivera", 4.5),
+    ("gomez", 4.0), ("diaz", 3.5), ("reyes", 3.0), ("morales", 2.8),
+    ("cruz", 2.6), ("ortiz", 2.4), ("gutierrez", 2.2), ("chavez", 2.0),
+    ("ramos", 1.9), ("gonzales", 1.8), ("ruiz", 1.7), ("alvarez", 1.6),
+    ("mendoza", 1.5), ("vasquez", 1.4), ("castillo", 1.3), ("jimenez", 1.2),
+    ("moreno", 1.1), ("romero", 1.0), ("herrera", 0.9), ("medina", 0.8),
+    ("aguilar", 0.7), ("garza", 0.6), ("castro", 0.5), ("vargas", 0.4),
+];
+
+/// Keyboard-adjacency table for realistic typographic substitutions
+/// (FEBRL's `qwerty` corruption model).
+pub fn keyboard_neighbours(c: char) -> &'static str {
+    match c {
+        'a' => "qwsz", 'b' => "vghn", 'c' => "xdfv", 'd' => "serfcx",
+        'e' => "wsdr", 'f' => "drtgvc", 'g' => "ftyhbv", 'h' => "gyujnb",
+        'i' => "ujko", 'j' => "huikmn", 'k' => "jiolm", 'l' => "kop",
+        'm' => "njk", 'n' => "bhjm", 'o' => "iklp", 'p' => "ol",
+        'q' => "wa", 'r' => "edft", 's' => "awedxz", 't' => "rfgy",
+        'u' => "yhji", 'v' => "cfgb", 'w' => "qase", 'x' => "zsdc",
+        'y' => "tghu", 'z' => "asx",
+        _ => "",
+    }
+}
+
+/// OCR confusion pairs (FEBRL's `ocr` corruption model, abridged).
+pub const OCR_CONFUSIONS: &[(&str, &str)] = &[
+    ("m", "rn"), ("rn", "m"), ("cl", "d"), ("d", "cl"), ("w", "vv"),
+    ("l", "1"), ("1", "l"), ("o", "0"), ("0", "o"), ("s", "5"), ("5", "s"),
+    ("b", "6"), ("g", "9"), ("i", "l"), ("e", "c"), ("c", "e"), ("u", "v"),
+    ("v", "u"), ("nn", "m"), ("ri", "n"),
+];
+
+/// Phonetic substitution rules (FEBRL's `phonetic` model, abridged):
+/// (pattern, replacement).
+pub const PHONETIC_RULES: &[(&str, &str)] = &[
+    ("ph", "f"), ("f", "ph"), ("ck", "k"), ("k", "ck"), ("wr", "r"),
+    ("gh", "g"), ("ee", "ea"), ("ea", "ee"), ("ie", "y"), ("y", "ie"),
+    ("mb", "m"), ("dg", "g"), ("tio", "sho"), ("ough", "off"), ("qu", "kw"),
+    ("x", "ks"), ("z", "s"), ("s", "z"), ("ai", "ay"), ("ay", "ai"),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpora_nonempty_and_weighted() {
+        assert!(GIVEN_NAMES.len() >= 100);
+        assert!(SURNAMES.len() >= 80);
+        assert!(GIVEN_NAMES.iter().all(|(n, w)| !n.is_empty() && *w > 0.0));
+        assert!(SURNAMES.iter().all(|(n, w)| !n.is_empty() && *w > 0.0));
+    }
+
+    #[test]
+    fn names_are_lowercase_ascii() {
+        for (n, _) in GIVEN_NAMES.iter().chain(SURNAMES.iter()) {
+            assert!(n.chars().all(|c| c.is_ascii_lowercase()), "{n}");
+        }
+    }
+
+    #[test]
+    fn keyboard_neighbours_are_symmetric_enough() {
+        // spot-check symmetry for a few canonical pairs
+        assert!(keyboard_neighbours('a').contains('s'));
+        assert!(keyboard_neighbours('s').contains('a'));
+        assert!(keyboard_neighbours('q').contains('w'));
+        assert!(keyboard_neighbours('w').contains('q'));
+        assert_eq!(keyboard_neighbours('é'), "");
+    }
+
+    #[test]
+    fn rules_have_nonempty_sides() {
+        for (a, b) in OCR_CONFUSIONS.iter().chain(PHONETIC_RULES.iter()) {
+            assert!(!a.is_empty() && !b.is_empty());
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! Geco/FEBRL-style synthetic entity-name generation (paper Sec. 5.1).
+//!
+//! The paper's datasets are "entity name strings … generated using the Geco
+//! tool in FEBRL", with controllable size, duplicate rate, and error
+//! characteristics. This module reproduces that behaviour: frequency-
+//! weighted sampling of `given-name surname` pairs, plus FEBRL's corruption
+//! operator families (keyboard typos, OCR confusions, phonetic respellings,
+//! character edits) for generating duplicate records with errors.
+//!
+//! DESIGN.md §Substitutions records why this stands in for the original
+//! tool: MDS only consumes the pairwise distance distribution of the
+//! strings, which this generator matches in kind (realistic name lengths,
+//! shared prefixes/suffixes, Zipf-weighted repetition of components).
+
+use std::collections::HashSet;
+
+use crate::util::prng::Rng;
+
+use super::corpora;
+
+/// Corruption operator families, mirroring FEBRL's corruptor classes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Corruption {
+    /// Substitute a character with a keyboard neighbour.
+    KeyboardSub,
+    /// Insert a keyboard-neighbour character.
+    Insert,
+    /// Delete a character.
+    Delete,
+    /// Transpose two adjacent characters.
+    Transpose,
+    /// Apply an OCR confusion (e.g. "m" -> "rn").
+    Ocr,
+    /// Apply a phonetic respelling (e.g. "ph" -> "f").
+    Phonetic,
+}
+
+pub const ALL_CORRUPTIONS: &[Corruption] = &[
+    Corruption::KeyboardSub,
+    Corruption::Insert,
+    Corruption::Delete,
+    Corruption::Transpose,
+    Corruption::Ocr,
+    Corruption::Phonetic,
+];
+
+/// Generator configuration (mirrors the Geco CLI knobs we need).
+#[derive(Clone, Debug)]
+pub struct GecoConfig {
+    pub seed: u64,
+    /// Probability that a generated record is a corrupted duplicate of an
+    /// earlier record (0.0 = all unique entities, the paper's main setting).
+    pub duplicate_rate: f64,
+    /// Number of corruption operations applied to each duplicate.
+    pub corruptions_per_duplicate: usize,
+    /// Enabled corruption families.
+    pub corruptions: Vec<Corruption>,
+}
+
+impl Default for GecoConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0x9ec0,
+            duplicate_rate: 0.0,
+            corruptions_per_duplicate: 2,
+            corruptions: ALL_CORRUPTIONS.to_vec(),
+        }
+    }
+}
+
+/// A generated record: the name string plus provenance for evaluation.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub name: String,
+    /// Index of the original record this is a duplicate of (None = original).
+    pub duplicate_of: Option<usize>,
+}
+
+pub struct Geco {
+    cfg: GecoConfig,
+    rng: Rng,
+    given_weights: Vec<f64>,
+    surname_weights: Vec<f64>,
+}
+
+impl Geco {
+    pub fn new(cfg: GecoConfig) -> Self {
+        let rng = Rng::new(cfg.seed);
+        Self {
+            given_weights: corpora::GIVEN_NAMES.iter().map(|(_, w)| *w).collect(),
+            surname_weights: corpora::SURNAMES.iter().map(|(_, w)| *w).collect(),
+            cfg,
+            rng,
+        }
+    }
+
+    /// Sample one clean `given surname` string.
+    pub fn sample_name(&mut self) -> String {
+        let g = corpora::GIVEN_NAMES[self.rng.weighted_index(&self.given_weights)].0;
+        let s = corpora::SURNAMES[self.rng.weighted_index(&self.surname_weights)].0;
+        format!("{g} {s}")
+    }
+
+    /// Generate `n` records. With `duplicate_rate == 0` all records are
+    /// *unique* entity names (the paper's setting: "We will be mainly using
+    /// unique entity names").
+    pub fn generate(&mut self, n: usize) -> Vec<Record> {
+        let mut out: Vec<Record> = Vec::with_capacity(n);
+        let mut seen: HashSet<String> = HashSet::with_capacity(n);
+        let mut attempts = 0usize;
+        while out.len() < n {
+            attempts += 1;
+            let make_dup = !out.is_empty()
+                && self.rng.next_f64() < self.cfg.duplicate_rate;
+            if make_dup {
+                let src = self.rng.index(out.len());
+                let mut name = out[src].name.clone();
+                for _ in 0..self.cfg.corruptions_per_duplicate {
+                    name = self.corrupt(&name);
+                }
+                out.push(Record { name, duplicate_of: Some(src) });
+            } else {
+                let name = self.sample_name();
+                // uniqueness matters only for originals; a bounded number of
+                // retries keeps generation total even for large n (the name
+                // space is ~ 10^4; beyond that we disambiguate numerically,
+                // like Geco's record-id suffixing)
+                if seen.contains(&name) && attempts < n * 20 {
+                    continue;
+                }
+                let name = if seen.contains(&name) {
+                    format!("{name} {}", out.len())
+                } else {
+                    name
+                };
+                seen.insert(name.clone());
+                out.push(Record { name, duplicate_of: None });
+            }
+        }
+        out
+    }
+
+    /// Convenience: `n` unique clean names only.
+    pub fn generate_unique(&mut self, n: usize) -> Vec<String> {
+        let saved = self.cfg.duplicate_rate;
+        self.cfg.duplicate_rate = 0.0;
+        let recs = self.generate(n);
+        self.cfg.duplicate_rate = saved;
+        recs.into_iter().map(|r| r.name).collect()
+    }
+
+    /// Apply one randomly chosen corruption operation.
+    pub fn corrupt(&mut self, s: &str) -> String {
+        let op = *self
+            .cfg
+            .corruptions
+            .get(self.rng.index(self.cfg.corruptions.len().max(1)))
+            .unwrap_or(&Corruption::KeyboardSub);
+        self.apply(op, s)
+    }
+
+    fn apply(&mut self, op: Corruption, s: &str) -> String {
+        let chars: Vec<char> = s.chars().collect();
+        match op {
+            Corruption::KeyboardSub => {
+                // pick a letter position with non-empty neighbours
+                let idxs: Vec<usize> = (0..chars.len())
+                    .filter(|&i| !corpora::keyboard_neighbours(chars[i]).is_empty())
+                    .collect();
+                if idxs.is_empty() {
+                    return s.to_string();
+                }
+                let i = idxs[self.rng.index(idxs.len())];
+                let nbrs: Vec<char> =
+                    corpora::keyboard_neighbours(chars[i]).chars().collect();
+                let mut out = chars.clone();
+                out[i] = nbrs[self.rng.index(nbrs.len())];
+                out.into_iter().collect()
+            }
+            Corruption::Insert => {
+                let i = self.rng.index(chars.len() + 1);
+                let c = (b'a' + self.rng.index(26) as u8) as char;
+                let mut out = chars.clone();
+                out.insert(i, c);
+                out.into_iter().collect()
+            }
+            Corruption::Delete => {
+                if chars.len() <= 1 {
+                    return s.to_string();
+                }
+                let i = self.rng.index(chars.len());
+                let mut out = chars.clone();
+                out.remove(i);
+                out.into_iter().collect()
+            }
+            Corruption::Transpose => {
+                if chars.len() < 2 {
+                    return s.to_string();
+                }
+                let i = self.rng.index(chars.len() - 1);
+                let mut out = chars.clone();
+                out.swap(i, i + 1);
+                out.into_iter().collect()
+            }
+            Corruption::Ocr => self.rule_sub(s, corpora::OCR_CONFUSIONS),
+            Corruption::Phonetic => self.rule_sub(s, corpora::PHONETIC_RULES),
+        }
+    }
+
+    /// Apply one applicable (pattern -> replacement) rule at a random
+    /// occurrence; identity if no rule matches.
+    fn rule_sub(&mut self, s: &str, rules: &[(&str, &str)]) -> String {
+        let applicable: Vec<&(&str, &str)> =
+            rules.iter().filter(|(p, _)| s.contains(p)).collect();
+        if applicable.is_empty() {
+            return s.to_string();
+        }
+        let (pat, rep) = *applicable[self.rng.index(applicable.len())];
+        // choose a random occurrence
+        let positions: Vec<usize> = s
+            .match_indices(pat)
+            .map(|(i, _)| i)
+            .collect();
+        let pos = positions[self.rng.index(positions.len())];
+        let mut out = String::with_capacity(s.len());
+        out.push_str(&s[..pos]);
+        out.push_str(rep);
+        out.push_str(&s[pos + pat.len()..]);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strdist::levenshtein;
+    use crate::util::quickcheck::{prop_assert, property};
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Geco::new(GecoConfig { seed: 1, ..Default::default() });
+        let mut b = Geco::new(GecoConfig { seed: 1, ..Default::default() });
+        assert_eq!(a.generate_unique(50), b.generate_unique(50));
+    }
+
+    #[test]
+    fn unique_generation_has_no_duplicates() {
+        let mut g = Geco::new(GecoConfig::default());
+        let names = g.generate_unique(2000);
+        let set: HashSet<&String> = names.iter().collect();
+        assert_eq!(set.len(), names.len());
+        assert!(names.iter().all(|n| n.contains(' ')));
+    }
+
+    #[test]
+    fn duplicate_rate_produces_duplicates() {
+        let mut g = Geco::new(GecoConfig {
+            seed: 3,
+            duplicate_rate: 0.4,
+            ..Default::default()
+        });
+        let recs = g.generate(500);
+        let dups = recs.iter().filter(|r| r.duplicate_of.is_some()).count();
+        assert!((100..300).contains(&dups), "dups = {dups}");
+        // a duplicate should be close (in edit distance) to its source
+        for r in recs.iter().filter(|r| r.duplicate_of.is_some()).take(50) {
+            let src = &recs[r.duplicate_of.unwrap()].name;
+            let d = levenshtein(&r.name, src);
+            assert!(d <= 2 * 4, "{src:?} -> {:?} (d={d})", r.name);
+        }
+    }
+
+    #[test]
+    fn corruptions_change_little() {
+        property("corruption is a small edit", 200, |g| {
+            let seed = g.u64();
+            let mut geco = Geco::new(GecoConfig { seed, ..Default::default() });
+            let name = geco.sample_name();
+            let corrupted = geco.corrupt(&name);
+            let d = levenshtein(&name, &corrupted);
+            // every operator family changes at most ~4 code points
+            prop_assert(d <= 4, &format!("{name:?} -> {corrupted:?} d={d}"))
+        });
+    }
+
+    #[test]
+    fn each_operator_applies() {
+        let mut geco = Geco::new(GecoConfig { seed: 9, ..Default::default() });
+        for op in ALL_CORRUPTIONS {
+            // find some input it actually changes
+            let mut changed = false;
+            for _ in 0..50 {
+                let name = geco.sample_name();
+                if geco.apply(*op, &name) != name {
+                    changed = true;
+                    break;
+                }
+            }
+            assert!(changed, "{op:?} never fired");
+        }
+    }
+
+    #[test]
+    fn name_lengths_realistic() {
+        let mut g = Geco::new(GecoConfig::default());
+        let names = g.generate_unique(1000);
+        let lens: Vec<usize> = names.iter().map(|n| n.chars().count()).collect();
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        assert!((8.0..20.0).contains(&mean), "mean len {mean}");
+        assert!(lens.iter().all(|&l| l < 64), "Myers fast path holds");
+    }
+}

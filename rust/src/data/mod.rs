@@ -1,0 +1,9 @@
+//! Dataset substrates: the Geco/FEBRL-style name generator the paper's
+//! evaluation uses (Sec. 5.1) and synthetic metric-space workloads for the
+//! examples.
+
+pub mod corpora;
+pub mod geco;
+pub mod synthetic;
+
+pub use geco::{Geco, GecoConfig, Record};

@@ -1,0 +1,117 @@
+//! Synthetic metric-space datasets: Gaussian mixtures for generic DR tests
+//! and a noisy sensor-network scenario (the paper's motivating application
+//! [1]: map sensors from pairwise distances, then localise new targets).
+
+use crate::util::prng::Rng;
+
+/// Points drawn from `clusters` spherical Gaussians in R^dim.
+pub fn gaussian_clusters(
+    rng: &mut Rng,
+    n: usize,
+    dim: usize,
+    clusters: usize,
+    spread: f64,
+) -> Vec<Vec<f32>> {
+    assert!(clusters > 0 && dim > 0);
+    let centers: Vec<Vec<f64>> = (0..clusters)
+        .map(|_| (0..dim).map(|_| rng.next_normal() * 5.0).collect())
+        .collect();
+    (0..n)
+        .map(|i| {
+            let c = &centers[i % clusters];
+            c.iter()
+                .map(|&m| (m + rng.next_normal() * spread) as f32)
+                .collect()
+        })
+        .collect()
+}
+
+/// A grid of sensors in the unit square with jitter, in row-major order.
+/// Returns 2-D ground-truth positions.
+pub fn sensor_grid(rng: &mut Rng, side: usize, jitter: f64) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(side * side);
+    for i in 0..side {
+        for j in 0..side {
+            let x = (i as f64 + 0.5) / side as f64 + rng.next_normal() * jitter;
+            let y = (j as f64 + 0.5) / side as f64 + rng.next_normal() * jitter;
+            out.push(vec![x as f32, y as f32]);
+        }
+    }
+    out
+}
+
+/// Noisy range measurement between two positions: multiplicative log-normal
+/// noise, the standard ranging model in sensor-localisation work.
+pub fn noisy_range(rng: &mut Rng, a: &[f32], b: &[f32], noise: f64) -> f64 {
+    let d = crate::strdist::euclidean(a, b);
+    d * (rng.next_normal() * noise).exp()
+}
+
+/// Swiss-roll-like curve embedded in 3-D (a classic non-linear manifold for
+/// DR sanity checks): returns points and their 1-D manifold parameter.
+pub fn swiss_roll(rng: &mut Rng, n: usize, noise: f64) -> (Vec<Vec<f32>>, Vec<f64>) {
+    let mut pts = Vec::with_capacity(n);
+    let mut ts = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t = 1.5 * std::f64::consts::PI * (1.0 + 2.0 * rng.next_f64());
+        let h = rng.next_f64() * 10.0;
+        let x = t * t.cos() + rng.next_normal() * noise;
+        let y = h + rng.next_normal() * noise;
+        let z = t * t.sin() + rng.next_normal() * noise;
+        pts.push(vec![x as f32, y as f32, z as f32]);
+        ts.push(t);
+    }
+    (pts, ts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strdist::euclidean;
+
+    #[test]
+    fn clusters_have_expected_shape() {
+        let mut rng = Rng::new(1);
+        let pts = gaussian_clusters(&mut rng, 120, 4, 3, 0.5);
+        assert_eq!(pts.len(), 120);
+        assert!(pts.iter().all(|p| p.len() == 4));
+        // same-cluster points should on average be closer than cross-cluster
+        let same = euclidean(&pts[0], &pts[3]); // both cluster 0
+        let cross = euclidean(&pts[0], &pts[1]); // clusters 0 vs 1
+        // statistical, but with 5-sigma-separated centers it's near-certain
+        assert!(same < cross * 3.0);
+    }
+
+    #[test]
+    fn sensor_grid_covers_unit_square() {
+        let mut rng = Rng::new(2);
+        let pts = sensor_grid(&mut rng, 8, 0.0);
+        assert_eq!(pts.len(), 64);
+        for p in &pts {
+            assert!((0.0..=1.0).contains(&p[0]) && (0.0..=1.0).contains(&p[1]));
+        }
+        // distinct cells are distinct points when jitter = 0
+        assert!(euclidean(&pts[0], &pts[1]) > 0.0);
+    }
+
+    #[test]
+    fn noisy_range_unbiased_in_log() {
+        let mut rng = Rng::new(3);
+        let a = [0.0f32, 0.0];
+        let b = [1.0f32, 0.0];
+        let mut sum_log = 0.0;
+        let n = 20_000;
+        for _ in 0..n {
+            sum_log += noisy_range(&mut rng, &a, &b, 0.1).ln();
+        }
+        assert!((sum_log / n as f64).abs() < 0.01);
+    }
+
+    #[test]
+    fn swiss_roll_parameter_orders_arclength() {
+        let mut rng = Rng::new(4);
+        let (pts, ts) = swiss_roll(&mut rng, 200, 0.0);
+        assert_eq!(pts.len(), ts.len());
+        assert!(ts.iter().all(|t| *t >= 1.5 * std::f64::consts::PI - 1e-9));
+    }
+}

@@ -1,0 +1,512 @@
+//! Figure harnesses: one function per figure/table of the paper's Sec. 5,
+//! each printing the same rows/series the paper reports and writing a JSON
+//! record under `results/`.
+//!
+//! | paper artifact | function    | what it reports                        |
+//! |----------------|-------------|----------------------------------------|
+//! | Figure 1       | `fig1`      | Err(m) vs L, both OSE methods          |
+//! | Figures 2 & 3  | `fig23`     | per-point PErr pairs + distributions   |
+//! | Figure 4       | `fig4`      | mean RT of mapping one point vs L      |
+//! | Sec. 5.3.3     | `headline`  | NN/opt speed ratio, train time, <1 ms  |
+
+use anyhow::Result;
+
+use crate::coordinator::methods::{PjrtNn, PjrtOpt};
+use crate::coordinator::trainer::{train_pjrt, train_rust, TrainConfig, TrainReport};
+use crate::mds::stress::{point_error_normalized, total_error};
+use crate::mds::Matrix;
+use crate::nn::MlpShape;
+use crate::ose::{embed_point, OseMethod, OseOptConfig, RustNn, RustOptimise};
+use crate::runtime::RuntimeHandle;
+use crate::util::bench::{bench, fmt_duration, BenchConfig};
+use crate::util::json::Json;
+use crate::util::stats::{mean, median, percentiles, Histogram};
+
+use super::protocol::{results_dir, ExperimentData};
+
+/// Hidden sizes used at each scale (must match shapes.py for PJRT use).
+fn hidden_for(data: &ExperimentData) -> [usize; 3] {
+    match data.scale {
+        super::Scale::Smoke => [32, 16, 8],
+        _ => [256, 128, 64],
+    }
+}
+
+/// Train the NN head for a landmark set; PJRT artifact when available.
+pub fn train_nn(
+    data: &ExperimentData,
+    landmark_idx: &[usize],
+    handle: Option<&RuntimeHandle>,
+    epochs: usize,
+) -> Result<(crate::nn::MlpParams, TrainReport)> {
+    let l = landmark_idx.len();
+    let shape = MlpShape { input: l, hidden: hidden_for(data), output: data.dim };
+    let inputs = data.train_inputs(landmark_idx);
+    let labels = &data.config_ref;
+    let cfg = TrainConfig {
+        epochs,
+        lr: 3e-3, // tuned: Keras-default 1e-3 underfits in this epoch budget
+        rel_tol: 1e-5,
+        patience: 12,
+        seed: 0x42 ^ l as u64,
+    };
+    let constraints = crate::coordinator::trainer::train_constraints(&shape);
+    match handle {
+        Some(h) if h.manifest().find("mlp_train_step", &constraints).is_some() => {
+            train_pjrt(h, &shape, &inputs, labels, &cfg)
+        }
+        _ => Ok(train_rust(&shape, &inputs, labels, 256, &cfg)),
+    }
+}
+
+/// Map the held-out points with the NN method. Returns (coords, method).
+pub fn run_nn(
+    data: &ExperimentData,
+    landmark_idx: &[usize],
+    handle: Option<&RuntimeHandle>,
+    epochs: usize,
+) -> Result<(Matrix, Box<dyn OseMethod>, TrainReport)> {
+    let (params, report) = train_nn(data, landmark_idx, handle, epochs)?;
+    let constraints =
+        crate::coordinator::trainer::train_constraints(&params.shape);
+    let mut method: Box<dyn OseMethod> = match handle {
+        Some(h) if h.manifest().find("mlp_fwd", &constraints).is_some() => {
+            Box::new(PjrtNn::new(h.clone(), &params))
+        }
+        _ => Box::new(RustNn { params }),
+    };
+    let queries = data.query_inputs(landmark_idx);
+    let y = method.embed(&queries)?;
+    Ok((y, method, report))
+}
+
+/// Map the held-out points with the optimisation method.
+pub fn run_opt(
+    data: &ExperimentData,
+    landmark_idx: &[usize],
+    handle: Option<&RuntimeHandle>,
+) -> Result<(Matrix, Box<dyn OseMethod>)> {
+    let l = landmark_idx.len();
+    let lm_config = data.landmark_config(landmark_idx);
+    let mut method: Box<dyn OseMethod> = match handle {
+        Some(h) if h.manifest().find("ose_opt", &[("L", l)]).is_some() => {
+            Box::new(PjrtOpt::with_defaults(h.clone(), lm_config))
+        }
+        _ => Box::new(RustOptimise {
+            landmarks: lm_config,
+            cfg: OseOptConfig::default(),
+        }),
+    };
+    let queries = data.query_inputs(landmark_idx);
+    let y = method.embed(&queries)?;
+    Ok((y, method))
+}
+
+// ---------------------------------------------------------------------------
+// Figure 1: Err(m) vs L
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Fig1Row {
+    pub l: usize,
+    pub err_opt: f64,
+    pub err_nn: f64,
+}
+
+pub fn fig1(
+    data: &ExperimentData,
+    handle: Option<&RuntimeHandle>,
+    epochs: usize,
+) -> Result<Vec<Fig1Row>> {
+    let mut rows = Vec::new();
+    println!("# Figure 1 — total error Err(m) vs number of landmarks L");
+    println!("# scale={} N={} m={} K={} (ref stress {:.4})",
+             data.scale.name(), data.names_ref.len(), data.names_new.len(),
+             data.dim, data.ref_stress);
+    println!("{:>6} {:>14} {:>14} {:>10}", "L", "Err_opt(m)", "Err_nn(m)", "nn/opt");
+    for l in data.scale.sweep() {
+        let lm = data.landmarks(l);
+        let (y_opt, _) = run_opt(data, &lm, handle)?;
+        let (y_nn, _, _) = run_nn(data, &lm, handle, epochs)?;
+        let err_opt = total_error(&data.config_ref, &data.delta_new, &y_opt);
+        let err_nn = total_error(&data.config_ref, &data.delta_new, &y_nn);
+        println!(
+            "{l:>6} {err_opt:>14.4} {err_nn:>14.4} {:>10.3}",
+            err_nn / err_opt
+        );
+        rows.push(Fig1Row { l, err_opt, err_nn });
+    }
+    let json = Json::obj(vec![
+        ("figure", Json::Str("fig1".into())),
+        ("scale", Json::Str(data.scale.name().into())),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("L", Json::Num(r.l as f64)),
+                            ("err_opt", Json::Num(r.err_opt)),
+                            ("err_nn", Json::Num(r.err_nn)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(
+        results_dir().join(format!("fig1_{}.json", data.scale.name())),
+        json.to_string_pretty(),
+    )?;
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Figures 2 & 3: per-point errors and their distributions
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Fig23Result {
+    pub l: usize,
+    /// normalised PErr per out-of-sample point, optimisation method
+    pub perr_opt: Vec<f64>,
+    /// normalised PErr per out-of-sample point, NN method
+    pub perr_nn: Vec<f64>,
+}
+
+pub fn fig23(
+    data: &ExperimentData,
+    handle: Option<&RuntimeHandle>,
+    epochs: usize,
+) -> Result<Vec<Fig23Result>> {
+    let (lo, hi) = data.scale.contrast_pair();
+    let mut out = Vec::new();
+    println!("# Figures 2-3 — per-point errors PErr(y), L in {{{lo}, {hi}}}");
+    for l in [lo, hi] {
+        let lm = data.landmarks(l);
+        let (y_opt, _) = run_opt(data, &lm, handle)?;
+        let (y_nn, _, _) = run_nn(data, &lm, handle, epochs)?;
+        let m = data.names_new.len();
+        let mut perr_opt = Vec::with_capacity(m);
+        let mut perr_nn = Vec::with_capacity(m);
+        for j in 0..m {
+            perr_opt.push(point_error_normalized(
+                &data.config_ref,
+                data.delta_new.row(j),
+                y_opt.row(j),
+            ));
+            perr_nn.push(point_error_normalized(
+                &data.config_ref,
+                data.delta_new.row(j),
+                y_nn.row(j),
+            ));
+        }
+        let below = perr_nn
+            .iter()
+            .zip(perr_opt.iter())
+            .filter(|(nn, opt)| nn < opt)
+            .count();
+        println!("\n## L = {l}");
+        println!(
+            "  opt: median {:.4}  p95 {:.4}  max {:.4}",
+            median(&perr_opt),
+            percentiles(&perr_opt).1,
+            perr_opt.iter().cloned().fold(0.0, f64::max)
+        );
+        println!(
+            "  nn : median {:.4}  p95 {:.4}  max {:.4}",
+            median(&perr_nn),
+            percentiles(&perr_nn).1,
+            perr_nn.iter().cloned().fold(0.0, f64::max)
+        );
+        println!(
+            "  NN better on {below}/{m} points ({:.0}%)",
+            100.0 * below as f64 / m as f64
+        );
+        let max_all = perr_opt
+            .iter()
+            .chain(perr_nn.iter())
+            .cloned()
+            .fold(0.0, f64::max)
+            .max(1e-9);
+        let mut h_opt = Histogram::new(0.0, max_all, 40);
+        let mut h_nn = Histogram::new(0.0, max_all, 40);
+        perr_opt.iter().for_each(|&x| h_opt.push(x));
+        perr_nn.iter().for_each(|&x| h_nn.push(x));
+        println!("  opt dist [0,{max_all:.3}]: {}", h_opt.render(40));
+        println!("  nn  dist [0,{max_all:.3}]: {}", h_nn.render(40));
+        out.push(Fig23Result { l, perr_opt, perr_nn });
+    }
+    let json = Json::obj(vec![
+        ("figure", Json::Str("fig2_fig3".into())),
+        ("scale", Json::Str(data.scale.name().into())),
+        (
+            "results",
+            Json::Arr(
+                out.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("L", Json::Num(r.l as f64)),
+                            ("perr_opt", Json::arr_f64(&r.perr_opt)),
+                            ("perr_nn", Json::arr_f64(&r.perr_nn)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(
+        results_dir().join(format!("fig23_{}.json", data.scale.name())),
+        json.to_string_pretty(),
+    )?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 4: average RT of mapping a single point vs L
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Fig4Row {
+    pub l: usize,
+    /// seconds per single-point mapping
+    pub rt_opt: f64,
+    pub rt_nn: f64,
+}
+
+pub fn fig4(
+    data: &ExperimentData,
+    handle: Option<&RuntimeHandle>,
+    epochs: usize,
+) -> Result<Vec<Fig4Row>> {
+    let cfg = BenchConfig {
+        warmup: std::time::Duration::from_millis(50),
+        measure: std::time::Duration::from_millis(400),
+        max_iters: 2000,
+        min_iters: 5,
+    };
+    let mut rows = Vec::new();
+    println!("# Figure 4 — mean RT of mapping ONE out-of-sample point vs L");
+    println!("{:>6} {:>14} {:>14} {:>12}", "L", "RT_opt", "RT_nn", "opt/nn");
+    for l in data.scale.sweep() {
+        let lm = data.landmarks(l);
+        let queries = data.query_inputs(&lm);
+        let lm_config = data.landmark_config(&lm);
+        let m = queries.rows;
+
+        // --- optimisation method, single-point protocol
+        let rt_opt = match handle {
+            Some(h) if h.manifest().find("ose_opt", &[("L", l), ("B", 1)]).is_some() => {
+                let mut method =
+                    PjrtOpt::with_defaults(h.clone(), lm_config.clone());
+                let mut j = 0usize;
+                bench(&format!("opt-pjrt L={l}"), &cfg, || {
+                    let row =
+                        Matrix::from_vec(1, l, queries.row(j % m).to_vec());
+                    j += 1;
+                    method.embed(&row).unwrap()
+                })
+                .median_s
+            }
+            _ => {
+                let ocfg = OseOptConfig::default();
+                let mut j = 0usize;
+                bench(&format!("opt-rust L={l}"), &cfg, || {
+                    let p = embed_point(&lm_config, queries.row(j % m), None, &ocfg);
+                    j += 1;
+                    p
+                })
+                .median_s
+            }
+        };
+
+        // --- NN method (training amortised, as in the paper's protocol)
+        let (params, _) = train_nn(data, &lm, handle, epochs)?;
+        let rt_nn = match handle {
+            Some(h) if h.manifest().find("mlp_fwd", &{
+                let mut c = crate::coordinator::trainer::train_constraints(&params.shape);
+                c.push(("B", 1));
+                c
+            }).is_some() => {
+                let mut method = PjrtNn::new(h.clone(), &params);
+                let mut j = 0usize;
+                bench(&format!("nn-pjrt L={l}"), &cfg, || {
+                    let row = Matrix::from_vec(1, l, queries.row(j % m).to_vec());
+                    j += 1;
+                    method.embed(&row).unwrap()
+                })
+                .median_s
+            }
+            _ => {
+                let mut j = 0usize;
+                bench(&format!("nn-rust L={l}"), &cfg, || {
+                    let row = Matrix::from_vec(1, l, queries.row(j % m).to_vec());
+                    j += 1;
+                    crate::nn::forward(&params, &row)
+                })
+                .median_s
+            }
+        };
+
+        println!(
+            "{l:>6} {:>14} {:>14} {:>12.1}x",
+            fmt_duration(rt_opt),
+            fmt_duration(rt_nn),
+            rt_opt / rt_nn
+        );
+        rows.push(Fig4Row { l, rt_opt, rt_nn });
+    }
+    let json = Json::obj(vec![
+        ("figure", Json::Str("fig4".into())),
+        ("scale", Json::Str(data.scale.name().into())),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("L", Json::Num(r.l as f64)),
+                            ("rt_opt_s", Json::Num(r.rt_opt)),
+                            ("rt_nn_s", Json::Num(r.rt_nn)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(
+        results_dir().join(format!("fig4_{}.json", data.scale.name())),
+        json.to_string_pretty(),
+    )?;
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Headline numbers (Sec. 5.3.3 / Sec. 6)
+// ---------------------------------------------------------------------------
+
+pub fn headline(
+    data: &ExperimentData,
+    handle: Option<&RuntimeHandle>,
+    epochs: usize,
+) -> Result<()> {
+    // pick the two largest mid-sweep L values (the paper quotes L=1000,1500)
+    let sweep = data.scale.sweep();
+    let pick: Vec<usize> = sweep.iter().rev().take(2).rev().copied().collect();
+    println!("# Headline (paper Sec. 5.3.3): NN vs optimisation at L = {pick:?}");
+    let mut ratios = Vec::new();
+    for &l in &pick {
+        let rows = fig4_single(data, handle, epochs, l)?;
+        ratios.push(rows.rt_opt / rows.rt_nn);
+        println!(
+            "  L={l}: opt {} / nn {} -> ratio {:.0}x  (nn < 1ms: {})",
+            fmt_duration(rows.rt_opt),
+            fmt_duration(rows.rt_nn),
+            rows.rt_opt / rows.rt_nn,
+            rows.rt_nn < 1e-3
+        );
+    }
+    // training cost (the paper quotes ~1.2 s)
+    let lm = data.landmarks(pick[0]);
+    let t0 = std::time::Instant::now();
+    let (_, report) = train_nn(data, &lm, handle, epochs)?;
+    println!(
+        "  NN training at L={}: {:.2}s wall ({} epochs, loss {:.4}) [paper: ~1.2s]",
+        pick[0],
+        t0.elapsed().as_secs_f64(),
+        report.epochs_run,
+        report.final_loss
+    );
+    println!(
+        "  mean speed ratio opt/nn: {:.0}x [paper: 3.8e3 vs R optim]",
+        mean(&ratios)
+    );
+    Ok(())
+}
+
+fn fig4_single(
+    data: &ExperimentData,
+    handle: Option<&RuntimeHandle>,
+    epochs: usize,
+    l: usize,
+) -> Result<Fig4Row> {
+    let cfg = BenchConfig {
+        warmup: std::time::Duration::from_millis(50),
+        measure: std::time::Duration::from_millis(300),
+        max_iters: 1000,
+        min_iters: 5,
+    };
+    let lm = data.landmarks(l);
+    let queries = data.query_inputs(&lm);
+    let lm_config = data.landmark_config(&lm);
+    let m = queries.rows;
+    let ocfg = OseOptConfig::default();
+    let mut j = 0usize;
+    let rt_opt = bench("opt", &cfg, || {
+        let p = embed_point(&lm_config, queries.row(j % m), None, &ocfg);
+        j += 1;
+        p
+    })
+    .median_s;
+    let (params, _) = train_nn(data, &lm, handle, epochs)?;
+    let rt_nn = match handle {
+        Some(h) if h.manifest().find("mlp_fwd", &{
+                let mut c = crate::coordinator::trainer::train_constraints(&params.shape);
+                c.push(("B", 1));
+                c
+            }).is_some() => {
+            let mut method = PjrtNn::new(h.clone(), &params);
+            let mut j = 0usize;
+            bench("nn", &cfg, || {
+                let row = Matrix::from_vec(1, l, queries.row(j % m).to_vec());
+                j += 1;
+                method.embed(&row).unwrap()
+            })
+            .median_s
+        }
+        _ => {
+            let mut j = 0usize;
+            bench("nn", &cfg, || {
+                let row = Matrix::from_vec(1, l, queries.row(j % m).to_vec());
+                j += 1;
+                crate::nn::forward(&params, &row)
+            })
+            .median_s
+        }
+    };
+    Ok(Fig4Row { l, rt_opt, rt_nn })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::protocol::{load_or_build, Scale};
+
+    #[test]
+    fn fig1_smoke_shapes_hold() {
+        let data = load_or_build(Scale::Smoke, 3, None).unwrap();
+        let rows = fig1(&data, None, 15).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.err_opt.is_finite() && r.err_opt >= 0.0);
+            assert!(r.err_nn.is_finite() && r.err_nn >= 0.0);
+        }
+        // more landmarks must help the optimisation method
+        assert!(
+            rows[1].err_opt <= rows[0].err_opt * 1.2,
+            "opt error should not grow with L: {rows:?}"
+        );
+    }
+
+    #[test]
+    fn fig23_smoke_produces_per_point_errors() {
+        let data = load_or_build(Scale::Smoke, 3, None).unwrap();
+        let res = fig23(&data, None, 15).unwrap();
+        assert_eq!(res.len(), 2);
+        for r in &res {
+            assert_eq!(r.perr_opt.len(), 16);
+            assert_eq!(r.perr_nn.len(), 16);
+            assert!(r.perr_opt.iter().all(|x| x.is_finite() && *x >= 0.0));
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Experiment harness: regenerates every figure of the paper's evaluation
+//! (Sec. 5) and the headline numbers of Sec. 5.3.3.
+
+pub mod ablations;
+pub mod figures;
+pub mod protocol;
+
+pub use protocol::{ExperimentData, Scale};

@@ -1,0 +1,28 @@
+//! # lmds-ose
+//!
+//! Production-grade reproduction of *"High Performance Out-of-sample
+//! Embedding Techniques for Multidimensional Scaling"* (Herath, Roughan,
+//! Glonek, 2021) as a three-layer Rust + JAX/Pallas + PJRT system.
+//!
+//! - **L3 (this crate)**: dissimilarity engine, LSMDS/SMACOF/classical-MDS
+//!   solvers, landmark selection, the two OSE methods, a streaming
+//!   coordinator with dynamic batching, and the experiment harness for the
+//!   paper's Figures 1-4.
+//! - **L2/L1 (`python/compile/`)**: the stress/OSE/MLP compute graphs and
+//!   their Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt` once;
+//!   Python never runs on the request path.
+//! - **Runtime**: the [`runtime`] module loads artifacts through the PJRT
+//!   CPU client (`xla` crate) and executes them from the serving path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for measured
+//! reproductions of every figure.
+
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod mds;
+pub mod nn;
+pub mod ose;
+pub mod runtime;
+pub mod strdist;
+pub mod util;

@@ -1,0 +1,468 @@
+//! `lmds-ose` launcher: the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   generate   — emit Geco-style synthetic name data
+//!   embed      — run the two-stage large-scale pipeline on generated data
+//!   serve      — start the streaming OSE service and run a query workload
+//!   eval       — regenerate the paper's figures (fig1|fig23|fig4|headline|all)
+//!   info       — artifact/manifest inventory
+//!
+//! Run `lmds-ose <cmd> --help` for per-command options.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use lmds_ose::coordinator::{embed_dataset, BatcherConfig, RunConfig, Server};
+use lmds_ose::data::{Geco, GecoConfig};
+use lmds_ose::eval::figures;
+use lmds_ose::eval::protocol::{self, Scale};
+use lmds_ose::runtime::{default_artifact_dir, RuntimeThread};
+use lmds_ose::util::cli::{usage, Args, OptSpec};
+use lmds_ose::util::logging;
+
+fn main() {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_top_usage();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "generate" => cmd_generate(rest),
+        "embed" => cmd_embed(rest),
+        "serve" => cmd_serve(rest),
+        "eval" => cmd_eval(rest),
+        "plot" => cmd_plot(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_top_usage();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?} (try `lmds-ose help`)"),
+    }
+}
+
+fn print_top_usage() {
+    println!(
+        "lmds-ose — high-performance out-of-sample embedding for LSMDS\n\n\
+         USAGE: lmds-ose <command> [options]\n\n\
+         COMMANDS:\n\
+         \x20 generate   emit Geco-style synthetic name data\n\
+         \x20 embed      two-stage pipeline: landmark LSMDS + OSE of the rest\n\
+         \x20 serve      streaming OSE service + synthetic query workload\n\
+         \x20 eval       regenerate paper figures (fig1|fig23|fig4|headline|all)\n\
+         \x20 plot       render results/*.json into SVG figures\n\
+         \x20 info       artifact inventory\n"
+    );
+}
+
+// ---------------------------------------------------------------------------
+
+fn common_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "config", help: "JSON config file", takes_value: true, default: None },
+        OptSpec { name: "dim", help: "embedding dimension K", takes_value: true, default: None },
+        OptSpec { name: "landmarks", help: "number of landmarks L", takes_value: true, default: None },
+        OptSpec { name: "landmark-method", help: "random|fps|maxmin", takes_value: true, default: None },
+        OptSpec { name: "backend", help: "nn|opt", takes_value: true, default: None },
+        OptSpec { name: "metric", help: "levenshtein|osa|jw|qgram", takes_value: true, default: None },
+        OptSpec { name: "seed", help: "PRNG seed", takes_value: true, default: None },
+        OptSpec { name: "no-pjrt", help: "pure-Rust paths only (skip artifacts)", takes_value: false, default: None },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ]
+}
+
+fn load_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn maybe_runtime(cfg: &RunConfig) -> Option<RuntimeThread> {
+    if !cfg.use_pjrt {
+        return None;
+    }
+    let dir = default_artifact_dir();
+    match RuntimeThread::spawn(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            log::warn!(
+                "PJRT runtime unavailable ({e:#}); falling back to pure Rust. \
+                 Run `make artifacts` to enable artifacts."
+            );
+            None
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_generate(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "n", help: "number of records", takes_value: true, default: Some("1000") },
+        OptSpec { name: "duplicate-rate", help: "fraction of corrupted duplicates", takes_value: true, default: Some("0.0") },
+        OptSpec { name: "seed", help: "PRNG seed", takes_value: true, default: Some("40246") },
+        OptSpec { name: "out", help: "output path (- = stdout)", takes_value: true, default: Some("-") },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!("{}", usage("generate", "Generate Geco-style name data", &specs));
+        return Ok(());
+    }
+    let n = args.usize("n")?;
+    let mut geco = Geco::new(GecoConfig {
+        seed: args.u64("seed")?,
+        duplicate_rate: args.f64("duplicate-rate")?,
+        ..Default::default()
+    });
+    let recs = geco.generate(n);
+    let mut out = String::new();
+    for r in &recs {
+        out.push_str(&r.name);
+        out.push('\n');
+    }
+    match args.str("out").as_str() {
+        "-" => print!("{out}"),
+        path => std::fs::write(path, out).context("writing output")?,
+    }
+    Ok(())
+}
+
+fn cmd_embed(argv: &[String]) -> Result<()> {
+    let mut specs = common_specs();
+    specs.push(OptSpec { name: "n", help: "dataset size", takes_value: true, default: Some("2000") });
+    specs.push(OptSpec { name: "out", help: "coords output (JSON lines)", takes_value: true, default: None });
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!("{}", usage("embed", "Two-stage large-scale embedding pipeline", &specs));
+        return Ok(());
+    }
+    let cfg = load_config(&args)?;
+    let n = args.usize("n")?;
+
+    let mut geco = Geco::new(GecoConfig { seed: cfg.seed, ..Default::default() });
+    let names = geco.generate_unique(n);
+    let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let metric = lmds_ose::strdist::string_metric_by_name(&cfg.metric)
+        .context("unknown metric")?;
+
+    let rt = maybe_runtime(&cfg);
+    let handle = rt.as_ref().map(|r| r.handle());
+
+    let t0 = Instant::now();
+    let result = embed_dataset(&objs, metric.as_ref(), &cfg.pipeline(), handle.as_ref())?;
+    let total = t0.elapsed().as_secs_f64();
+
+    println!("embedded {n} objects into {}D in {total:.2}s", cfg.dim);
+    println!("  landmarks          : {} ({:?})", cfg.landmarks, cfg.landmark_method);
+    println!("  backend            : {:?} via {}", cfg.backend, result.method.name());
+    println!("  landmark stress    : {:.4}", result.landmark_stress);
+    let t = &result.timings;
+    println!(
+        "  phases: select {:.2}s | delta_LL {:.2}s | lsmds {:.2}s | train {:.2}s | delta_ML {:.2}s | ose {:.2}s",
+        t.select_s, t.delta_ll_s, t.lsmds_s, t.train_s, t.delta_ml_s, t.ose_s
+    );
+    if let Some(path) = args.get("out") {
+        let mut out = String::new();
+        for (i, name) in names.iter().enumerate() {
+            let coords: Vec<String> = result
+                .coords
+                .row(i)
+                .iter()
+                .map(|v| format!("{v}"))
+                .collect();
+            out.push_str(&format!(
+                "{{\"name\":\"{name}\",\"coords\":[{}]}}\n",
+                coords.join(",")
+            ));
+        }
+        std::fs::write(path, out)?;
+        println!("  wrote coordinates to {}", args.str("out"));
+    }
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let mut specs = common_specs();
+    specs.push(OptSpec { name: "n", help: "landmark-training dataset size", takes_value: true, default: Some("2000") });
+    specs.push(OptSpec { name: "queries", help: "number of workload queries", takes_value: true, default: Some("10000") });
+    specs.push(OptSpec { name: "clients", help: "concurrent client threads", takes_value: true, default: Some("4") });
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!("{}", usage("serve", "Streaming OSE service + query workload", &specs));
+        return Ok(());
+    }
+    let cfg = load_config(&args)?;
+    let n = args.usize("n")?;
+    let queries = args.usize("queries")?;
+    let clients = args.usize("clients")?.max(1);
+
+    // build the service state with the pipeline
+    let mut geco = Geco::new(GecoConfig { seed: cfg.seed, ..Default::default() });
+    let names = geco.generate_unique(n);
+    let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let metric = lmds_ose::strdist::string_metric_by_name(&cfg.metric)
+        .context("unknown metric")?;
+    let rt = maybe_runtime(&cfg);
+    let handle = rt.as_ref().map(|r| r.handle());
+    let result = embed_dataset(&objs, metric.as_ref(), &cfg.pipeline(), handle.as_ref())?;
+    let landmark_names: Vec<String> = result
+        .landmark_idx
+        .iter()
+        .map(|&i| names[i].clone())
+        .collect();
+
+    let metric_arc: Arc<dyn lmds_ose::strdist::Dissimilarity<str> + Send + Sync> =
+        Arc::new(lmds_ose::strdist::Levenshtein);
+    let server = Server::start(
+        landmark_names,
+        metric_arc,
+        result.method,
+        BatcherConfig { frontend_threads: clients, ..cfg.batcher() },
+    );
+    let h = server.handle();
+
+    // synthetic query workload (corrupted copies of known names = realistic
+    // near-duplicate queries)
+    log::info!("running {queries} queries from {clients} client threads");
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let h = h.clone();
+            let names = &names;
+            scope.spawn(move || {
+                let mut geco = Geco::new(GecoConfig { seed: 0xc11 + c as u64, ..Default::default() });
+                let per = queries / clients;
+                let mut pending = Vec::with_capacity(64);
+                for q in 0..per {
+                    let base = &names[(q * 31 + c) % names.len()];
+                    let query = geco.corrupt(base);
+                    pending.push(h.query(query));
+                    if pending.len() >= 64 {
+                        for rx in pending.drain(..) {
+                            let _ = rx.recv();
+                        }
+                    }
+                }
+                for rx in pending {
+                    let _ = rx.recv();
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = h.metrics.snapshot();
+    println!("workload done in {wall:.2}s  ({:.0} queries/s)", snap.completed as f64 / wall);
+    println!("  {}", snap.report());
+    drop(h);
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let mut specs = common_specs();
+    specs.push(OptSpec { name: "scale", help: "smoke|small|paper", takes_value: true, default: Some("small") });
+    specs.push(OptSpec { name: "epochs", help: "NN training epochs", takes_value: true, default: Some("60") });
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!("{}", usage("eval", "Regenerate the paper's figures", &specs));
+        return Ok(());
+    }
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let scale = Scale::from_name(&args.str("scale"))
+        .with_context(|| format!("unknown scale {:?}", args.str("scale")))?;
+    let epochs = args.usize("epochs")?;
+    let cfg = load_config(&args)?;
+    let rt = maybe_runtime(&cfg);
+    let handle = rt.as_ref().map(|r| r.handle());
+
+    let dim = if args.get("dim").is_some() { args.usize("dim")? } else { 7 };
+    let data = protocol::load_or_build(scale, dim, handle.as_ref())?;
+
+    match which {
+        "fig1" => {
+            figures::fig1(&data, handle.as_ref(), epochs)?;
+        }
+        "fig2" | "fig3" | "fig23" => {
+            figures::fig23(&data, handle.as_ref(), epochs)?;
+        }
+        "fig4" => {
+            figures::fig4(&data, handle.as_ref(), epochs)?;
+        }
+        "headline" => figures::headline(&data, handle.as_ref(), epochs)?,
+        "ablations" => {
+            let l = data.scale.sweep()[1];
+            lmds_ose::eval::ablations::landmark_methods(&data, handle.as_ref(), l)?;
+            lmds_ose::eval::ablations::ose_baselines(&data, handle.as_ref(), l, epochs)?;
+            lmds_ose::eval::ablations::step_size(&data, l)?;
+            lmds_ose::eval::ablations::nn_hidden(&data, l, epochs)?;
+        }
+        "all" => {
+            figures::fig1(&data, handle.as_ref(), epochs)?;
+            figures::fig23(&data, handle.as_ref(), epochs)?;
+            figures::fig4(&data, handle.as_ref(), epochs)?;
+            figures::headline(&data, handle.as_ref(), epochs)?;
+        }
+        other => anyhow::bail!("unknown figure {other:?} (fig1|fig23|fig4|headline|ablations|all)"),
+    }
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let specs = vec![OptSpec { name: "help", help: "show help", takes_value: false, default: None }];
+    let _ = Args::parse(argv, &specs)?;
+    let dir = default_artifact_dir();
+    println!("artifact dir: {dir:?}");
+    match lmds_ose::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("k_dim={} hidden={:?} artifacts={}", m.k_dim, m.hidden, m.artifacts.len());
+            let mut by_graph: std::collections::BTreeMap<&str, usize> = Default::default();
+            for a in &m.artifacts {
+                *by_graph.entry(a.graph.as_str()).or_default() += 1;
+            }
+            for (g, c) in by_graph {
+                println!("  {g:<16} {c} variants");
+            }
+        }
+        Err(e) => println!("no manifest: {e:#} (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn cmd_plot(argv: &[String]) -> Result<()> {
+    use lmds_ose::util::json::Json;
+    use lmds_ose::util::svgplot::Chart;
+    let specs = vec![
+        OptSpec { name: "scale", help: "smoke|small|paper", takes_value: true, default: Some("small") },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!("{}", usage("plot", "Render results/*.json into SVG figures", &specs));
+        return Ok(());
+    }
+    let scale = args.str("scale");
+    let dir = protocol::results_dir();
+
+    // Figure 1: Err(m) vs L
+    let fig1 = dir.join(format!("fig1_{scale}.json"));
+    if let Ok(text) = std::fs::read_to_string(&fig1) {
+        let v = Json::parse(&text)?;
+        let rows = v.get("rows").and_then(Json::as_arr).context("rows")?;
+        let mut c = Chart::line(
+            &format!("Figure 1 — Err(m) vs L ({scale})"),
+            "landmarks L",
+            "Err(m)",
+        );
+        let take = |key: &str| -> Vec<(f64, f64)> {
+            rows.iter()
+                .filter_map(|r| {
+                    Some((r.get("L")?.as_f64()?, r.get(key)?.as_f64()?))
+                })
+                .collect()
+        };
+        c.add("optimisation", "#d62728", take("err_opt"));
+        c.add("neural network", "#1f77b4", take("err_nn"));
+        let out = dir.join(format!("fig1_{scale}.svg"));
+        std::fs::write(&out, c.render())?;
+        println!("wrote {out:?}");
+    }
+
+    // Figure 4: RT vs L (log y)
+    let fig4 = dir.join(format!("fig4_{scale}.json"));
+    if let Ok(text) = std::fs::read_to_string(&fig4) {
+        let v = Json::parse(&text)?;
+        let rows = v.get("rows").and_then(Json::as_arr).context("rows")?;
+        let mut c = Chart::line(
+            &format!("Figure 4 — RT per point vs L ({scale})"),
+            "landmarks L",
+            "seconds per point (log)",
+        );
+        c.log_y = true;
+        let take = |key: &str| -> Vec<(f64, f64)> {
+            rows.iter()
+                .filter_map(|r| {
+                    Some((r.get("L")?.as_f64()?, r.get(key)?.as_f64()?))
+                })
+                .collect()
+        };
+        c.add("optimisation", "#d62728", take("rt_opt_s"));
+        c.add("neural network", "#1f77b4", take("rt_nn_s"));
+        let out = dir.join(format!("fig4_{scale}.svg"));
+        std::fs::write(&out, c.render())?;
+        println!("wrote {out:?}");
+    }
+
+    // Figure 2: per-point scatter nn vs opt
+    let fig23 = dir.join(format!("fig23_{scale}.json"));
+    if let Ok(text) = std::fs::read_to_string(&fig23) {
+        let v = Json::parse(&text)?;
+        for result in v.get("results").and_then(Json::as_arr).unwrap_or(&[]) {
+            let l = result.get("L").and_then(Json::as_usize).unwrap_or(0);
+            let opt: Vec<f64> = result
+                .get("perr_opt")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default();
+            let nn: Vec<f64> = result
+                .get("perr_nn")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default();
+            let mut c = Chart::line(
+                &format!("Figure 2 — PErr scatter, L={l} ({scale})"),
+                "PErr optimisation",
+                "PErr neural network",
+            );
+            c.scatter = true;
+            c.add(
+                "points",
+                "#1f77b4",
+                opt.iter().copied().zip(nn.iter().copied()).collect(),
+            );
+            // y = x reference line
+            let hi = opt
+                .iter()
+                .chain(nn.iter())
+                .cloned()
+                .fold(0.0f64, f64::max)
+                .max(1e-9);
+            c.scatter = true;
+            let mut yx = Chart::line("", "", "");
+            let _ = yx; // keep scatter; draw y=x as a 2-point series
+            c.series.push(lmds_ose::util::svgplot::Series {
+                label: "y = x".into(),
+                points: vec![(0.0, 0.0), (hi, hi)],
+                color: "#999999",
+            });
+            c.scatter = false; // lines allowed again so y=x renders
+            let out = dir.join(format!("fig2_L{l}_{scale}.svg"));
+            std::fs::write(&out, c.render())?;
+            println!("wrote {out:?}");
+        }
+    }
+    Ok(())
+}
+

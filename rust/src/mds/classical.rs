@@ -1,0 +1,178 @@
+//! Classical (Torgerson) MDS via double centering + power iteration.
+//!
+//! Two roles: (a) the baseline family that most prior OSE work targets
+//! (Trosset & Priebe, Bengio et al. — Sec. 3 of the paper), against which
+//! the LSMDS OSE is contrasted; (b) a cheap, deterministic initialiser for
+//! the iterative LSMDS/SMACOF solvers (starting near the classical solution
+//! cuts iteration counts substantially — used by the perf pass).
+//!
+//! Eigendecomposition is a from-scratch power iteration with deflation on
+//! the centred Gram matrix B = -1/2 J D^2 J (no LAPACK in the image).
+
+use crate::util::prng::Rng;
+
+use super::matrix::Matrix;
+
+/// Top-k eigenpairs of a symmetric matrix via power iteration + deflation.
+/// Returns (eigenvalues, eigenvectors as columns of an n x k matrix).
+pub fn symmetric_top_eigs(
+    a: &Matrix,
+    k: usize,
+    iters: usize,
+    seed: u64,
+) -> (Vec<f64>, Matrix) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let k = k.min(n);
+    let mut rng = Rng::new(seed);
+    let mut vals = Vec::with_capacity(k);
+    let mut vecs = Matrix::zeros(n, k);
+    // working copy we deflate in f64
+    let mut m: Vec<f64> = a.data.iter().map(|x| *x as f64).collect();
+
+    for kk in 0..k {
+        let mut v: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        normalize(&mut v);
+        let mut lambda = 0.0f64;
+        for _ in 0..iters {
+            let mut w = vec![0.0f64; n];
+            for i in 0..n {
+                let row = &m[i * n..(i + 1) * n];
+                let mut acc = 0.0;
+                for (j, r) in row.iter().enumerate() {
+                    acc += r * v[j];
+                }
+                w[i] = acc;
+            }
+            lambda = dot(&w, &v);
+            let norm = normalize(&mut w);
+            if norm < 1e-15 {
+                break;
+            }
+            v = w;
+        }
+        vals.push(lambda);
+        for i in 0..n {
+            vecs.set(i, kk, v[i] as f32);
+        }
+        // deflate: m -= lambda v v^T
+        for i in 0..n {
+            for j in 0..n {
+                m[i * n + j] -= lambda * v[i] * v[j];
+            }
+        }
+    }
+    (vals, vecs)
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn normalize(v: &mut [f64]) -> f64 {
+    let n = dot(v, v).sqrt();
+    if n > 0.0 {
+        v.iter_mut().for_each(|x| *x /= n);
+    }
+    n
+}
+
+/// Classical MDS: embed a dissimilarity matrix into k dimensions.
+/// Negative eigenvalues (non-Euclidean input) are clamped to zero, per
+/// Torgerson's original prescription.
+pub fn classical_mds(delta: &Matrix, k: usize) -> Matrix {
+    assert_eq!(delta.rows, delta.cols);
+    let n = delta.rows;
+    // B = -1/2 J D^2 J, J = I - 11^T/n
+    let mut d2 = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let d = delta.at(i, j) as f64;
+            d2[i * n + j] = d * d;
+        }
+    }
+    let row_means: Vec<f64> = (0..n)
+        .map(|i| d2[i * n..(i + 1) * n].iter().sum::<f64>() / n as f64)
+        .collect();
+    let grand = row_means.iter().sum::<f64>() / n as f64;
+    let mut b = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = -0.5 * (d2[i * n + j] - row_means[i] - row_means[j] + grand);
+            b.set(i, j, v as f32);
+        }
+    }
+    let (vals, vecs) = symmetric_top_eigs(&b, k, 200, 0xC1A5);
+    let mut out = Matrix::zeros(n, k);
+    for (c, lambda) in vals.iter().enumerate() {
+        let scale = lambda.max(0.0).sqrt();
+        for r in 0..n {
+            out.set(r, c, (vecs.at(r, c) as f64 * scale) as f32);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strdist::euclidean;
+
+    #[test]
+    fn power_iteration_finds_dominant_eig() {
+        // diag(5, 2, 1) with known eigenvectors
+        let a = Matrix::from_rows(&[
+            vec![5.0, 0.0, 0.0],
+            vec![0.0, 2.0, 0.0],
+            vec![0.0, 0.0, 1.0],
+        ]);
+        let (vals, vecs) = symmetric_top_eigs(&a, 2, 300, 1);
+        assert!((vals[0] - 5.0).abs() < 1e-6, "{vals:?}");
+        assert!((vals[1] - 2.0).abs() < 1e-5, "{vals:?}");
+        assert!(vecs.at(0, 0).abs() > 0.999);
+        assert!(vecs.at(1, 1).abs() > 0.999);
+    }
+
+    #[test]
+    fn classical_mds_recovers_euclidean_distances() {
+        let mut rng = Rng::new(2);
+        let x = Matrix::random_normal(&mut rng, 20, 3, 1.0);
+        let n = x.rows;
+        let mut delta = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                delta.set(i, j, euclidean(x.row(i), x.row(j)) as f32);
+            }
+        }
+        let y = classical_mds(&delta, 3);
+        // distances must be reproduced (configuration is only unique up to
+        // rotation/reflection, so compare distance matrices)
+        for i in 0..n {
+            for j in 0..n {
+                let got = euclidean(y.row(i), y.row(j));
+                assert!(
+                    (got - delta.at(i, j) as f64).abs() < 1e-2,
+                    "({i},{j}): {got} vs {}",
+                    delta.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn classical_mds_handles_non_euclidean_input() {
+        // Levenshtein distances are non-Euclidean; classical MDS must not
+        // produce NaNs (negative eigenvalues clamp to 0).
+        use crate::mds::dissimilarity::full_matrix;
+        use crate::strdist::Levenshtein;
+        let names = ["anna", "annie", "bob", "robert", "roberta", "bobby"];
+        let objs: Vec<&str> = names.to_vec();
+        let delta = full_matrix(&objs, &Levenshtein);
+        let y = classical_mds(&delta, 3);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        // similar names should embed nearer than dissimilar ones
+        let close = euclidean(y.row(0), y.row(1)); // anna/annie
+        let far = euclidean(y.row(0), y.row(3)); // anna/robert
+        assert!(close < far);
+    }
+}

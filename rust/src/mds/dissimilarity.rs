@@ -1,0 +1,135 @@
+//! Parallel dissimilarity-matrix construction — the O(L^2)/O(L·M) input
+//! stage of the two-phase pipeline. For string data this is millions of
+//! Levenshtein calls; rows are independent, so it parallelises perfectly
+//! over the thread pool.
+
+use crate::strdist::Dissimilarity;
+use crate::util::threadpool::{default_parallelism, parallel_for_chunks, SyncSlice};
+
+use super::matrix::Matrix;
+
+/// Full symmetric N x N matrix over one object set (zero diagonal).
+/// Computes only the upper triangle and mirrors it.
+pub fn full_matrix<T: Sync + ?Sized>(
+    objects: &[&T],
+    metric: &dyn Dissimilarity<T>,
+) -> Matrix {
+    let n = objects.len();
+    let mut out = Matrix::zeros(n, n);
+    {
+        let slots = SyncSlice::new(&mut out.data);
+        parallel_for_chunks(n, 8, default_parallelism(), |start, end| {
+            for i in start..end {
+                for j in (i + 1)..n {
+                    let d = metric.dist(objects[i], objects[j]) as f32;
+                    // SAFETY: (i, j) and (j, i) cells are owned by the chunk
+                    // that owns row i (j > i: the mirrored write targets row
+                    // j's column i, only ever written by row i's owner).
+                    unsafe {
+                        slots.write(i * n + j, d);
+                        slots.write(j * n + i, d);
+                    }
+                }
+            }
+        });
+    }
+    out
+}
+
+/// Rectangular matrix of distances from each of `rows` to each of `cols`
+/// (e.g. out-of-sample objects x landmarks). Row-parallel.
+pub fn cross_matrix<T: Sync + ?Sized>(
+    rows: &[&T],
+    cols: &[&T],
+    metric: &dyn Dissimilarity<T>,
+) -> Matrix {
+    let (nr, nc) = (rows.len(), cols.len());
+    let mut out = Matrix::zeros(nr, nc);
+    {
+        let slots = SyncSlice::new(&mut out.data);
+        parallel_for_chunks(nr, 8, default_parallelism(), |start, end| {
+            for i in start..end {
+                for j in 0..nc {
+                    let d = metric.dist(rows[i], cols[j]) as f32;
+                    unsafe { slots.write(i * nc + j, d) };
+                }
+            }
+        });
+    }
+    out
+}
+
+/// Distance vector from one object to a set (the serving-path primitive:
+/// a query against the landmarks).
+pub fn dist_vector<T: ?Sized>(
+    query: &T,
+    cols: &[&T],
+    metric: &dyn Dissimilarity<T>,
+) -> Vec<f32> {
+    cols.iter().map(|c| metric.dist(query, c) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strdist::{Euclidean, Levenshtein};
+
+    #[test]
+    fn full_matrix_symmetric_zero_diagonal() {
+        let names = ["anna", "bob", "carol", "dan", "erin"];
+        let objs: Vec<&str> = names.to_vec();
+        let m = full_matrix(&objs, &Levenshtein);
+        assert_eq!(m.rows, 5);
+        for i in 0..5 {
+            assert_eq!(m.at(i, i), 0.0);
+            for j in 0..5 {
+                assert_eq!(m.at(i, j), m.at(j, i));
+            }
+        }
+        assert_eq!(m.at(0, 1), 4.0); // anna -> bob
+    }
+
+    #[test]
+    fn full_matrix_matches_serial_large() {
+        // exercise the parallel path with enough rows for several chunks
+        let names: Vec<String> = (0..120).map(|i| format!("name{i:03}")).collect();
+        let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let m = full_matrix(&objs, &Levenshtein);
+        for i in (0..120).step_by(17) {
+            for j in (0..120).step_by(13) {
+                let want = crate::strdist::levenshtein(&names[i], &names[j]) as f32;
+                assert_eq!(m.at(i, j), want);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_matrix_values() {
+        let rows = ["abc", "abd"];
+        let cols = ["abc", "xyz", "ab"];
+        let m = cross_matrix(&rows, &cols, &Levenshtein);
+        assert_eq!(m.rows, 2);
+        assert_eq!(m.cols, 3);
+        assert_eq!(m.at(0, 0), 0.0);
+        assert_eq!(m.at(0, 1), 3.0);
+        assert_eq!(m.at(0, 2), 1.0);
+        assert_eq!(m.at(1, 0), 1.0);
+    }
+
+    #[test]
+    fn dist_vector_matches_cross_row() {
+        let cols = ["alpha", "beta", "gamma"];
+        let v = dist_vector("alda", &cols, &Levenshtein);
+        let m = cross_matrix(&["alda"], &cols, &Levenshtein);
+        assert_eq!(v, m.row(0));
+    }
+
+    #[test]
+    fn works_on_vectors_too() {
+        let a = vec![0.0f32, 0.0];
+        let b = vec![3.0f32, 4.0];
+        let objs: Vec<&[f32]> = vec![&a, &b];
+        let m = full_matrix(&objs, &Euclidean);
+        assert_eq!(m.at(0, 1), 5.0);
+    }
+}

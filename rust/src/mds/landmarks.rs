@@ -1,0 +1,234 @@
+//! Landmark selection (paper Sec. 4): random sampling (cheap, recommended
+//! for large-scale data) and farthest point sampling (FPS — controllable /
+//! reproducible, at the cost of O(L·N) distance evaluations), plus a
+//! hybrid "maxmin over a random candidate pool" that bounds FPS cost.
+
+use crate::strdist::Dissimilarity;
+use crate::util::prng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LandmarkMethod {
+    Random,
+    Fps,
+    /// FPS over a random candidate subsample of the given size factor
+    /// (candidates = factor * L), trading exactness for speed.
+    MaxMinPool,
+}
+
+impl LandmarkMethod {
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "random" => Some(Self::Random),
+            "fps" => Some(Self::Fps),
+            "maxmin" | "pool" => Some(Self::MaxMinPool),
+            _ => None,
+        }
+    }
+}
+
+/// Random selection of `l` distinct indices out of `n`.
+pub fn random_landmarks(rng: &mut Rng, n: usize, l: usize) -> Vec<usize> {
+    let mut idx = rng.sample_indices(n, l);
+    idx.sort_unstable();
+    idx
+}
+
+/// Farthest point sampling: start from a random point, then repeatedly add
+/// the point whose minimum distance to the selected set is largest.
+/// O(L·N) metric evaluations, O(N) memory.
+pub fn fps_landmarks<T: Sync + ?Sized>(
+    rng: &mut Rng,
+    objects: &[&T],
+    l: usize,
+    metric: &dyn Dissimilarity<T>,
+) -> Vec<usize> {
+    let n = objects.len();
+    assert!(l <= n, "l={l} > n={n}");
+    if l == 0 {
+        return vec![];
+    }
+    let mut selected = Vec::with_capacity(l);
+    let first = rng.index(n);
+    selected.push(first);
+    // min distance from each point to the selected set
+    let mut min_dist: Vec<f64> = (0..n)
+        .map(|i| metric.dist(objects[i], objects[first]))
+        .collect();
+    while selected.len() < l {
+        // argmax of min_dist
+        let (mut best, mut best_d) = (0usize, f64::NEG_INFINITY);
+        for (i, &d) in min_dist.iter().enumerate() {
+            if d > best_d {
+                best = i;
+                best_d = d;
+            }
+        }
+        selected.push(best);
+        for i in 0..n {
+            let d = metric.dist(objects[i], objects[best]);
+            if d < min_dist[i] {
+                min_dist[i] = d;
+            }
+        }
+    }
+    selected.sort_unstable();
+    selected.dedup();
+    // ties on duplicate objects can collapse; top up randomly
+    let mut extra = 0;
+    while selected.len() < l {
+        let cand = rng.index(n);
+        if !selected.contains(&cand) {
+            selected.push(cand);
+        }
+        extra += 1;
+        if extra > 10 * n {
+            break;
+        }
+    }
+    selected.sort_unstable();
+    selected
+}
+
+/// FPS restricted to a random candidate pool of `pool_factor * l` points —
+/// the standard trick for very large N where exact FPS's O(L·N) scans are
+/// the bottleneck.
+pub fn maxmin_pool_landmarks<T: Sync + ?Sized>(
+    rng: &mut Rng,
+    objects: &[&T],
+    l: usize,
+    pool_factor: usize,
+    metric: &dyn Dissimilarity<T>,
+) -> Vec<usize> {
+    let n = objects.len();
+    let pool_size = (l * pool_factor.max(2)).min(n);
+    let pool = rng.sample_indices(n, pool_size);
+    let pool_objs: Vec<&T> = pool.iter().map(|&i| objects[i]).collect();
+    let inner = fps_landmarks(rng, &pool_objs, l, metric);
+    let mut out: Vec<usize> = inner.into_iter().map(|i| pool[i]).collect();
+    out.sort_unstable();
+    out
+}
+
+/// Dispatch helper.
+pub fn select_landmarks<T: Sync + ?Sized>(
+    method: LandmarkMethod,
+    rng: &mut Rng,
+    objects: &[&T],
+    l: usize,
+    metric: &dyn Dissimilarity<T>,
+) -> Vec<usize> {
+    match method {
+        LandmarkMethod::Random => random_landmarks(rng, objects.len(), l),
+        LandmarkMethod::Fps => fps_landmarks(rng, objects, l, metric),
+        LandmarkMethod::MaxMinPool => {
+            maxmin_pool_landmarks(rng, objects, l, 4, metric)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strdist::{Euclidean, Levenshtein};
+
+    #[test]
+    fn random_landmarks_distinct_sorted() {
+        let mut rng = Rng::new(1);
+        let idx = random_landmarks(&mut rng, 100, 30);
+        assert_eq!(idx.len(), 30);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        assert!(idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn fps_spreads_points() {
+        // 1-D points on [0, 100]: whatever the random start, L = 5 FPS
+        // picks must be well separated (min pairwise gap >= 15) and must
+        // cover the line (no point farther than 25 from a landmark).
+        let coords: Vec<Vec<f32>> = (0..101).map(|i| vec![i as f32]).collect();
+        let objs: Vec<&[f32]> = coords.iter().map(|c| c.as_slice()).collect();
+        for seed in 0..8 {
+            let mut rng = Rng::new(seed);
+            let idx = fps_landmarks(&mut rng, &objs, 5, &Euclidean);
+            let mut min_gap = f64::INFINITY;
+            for (a, &i) in idx.iter().enumerate() {
+                for &j in &idx[a + 1..] {
+                    min_gap = min_gap.min((i as f64 - j as f64).abs());
+                }
+            }
+            assert!(min_gap >= 15.0, "seed {seed}: {idx:?} (gap {min_gap})");
+            let covering = (0..101)
+                .map(|p| {
+                    idx.iter()
+                        .map(|&i| (p as f64 - i as f64).abs())
+                        .fold(f64::INFINITY, f64::min)
+                })
+                .fold(0.0, f64::max);
+            assert!(covering <= 25.0, "seed {seed}: {idx:?} (cover {covering})");
+        }
+    }
+
+    #[test]
+    fn fps_min_separation_beats_random() {
+        // FPS's defining property: its selected set has a larger minimum
+        // pairwise distance than a random selection (on generic data).
+        let mut rng = Rng::new(3);
+        let coords: Vec<Vec<f32>> = (0..200)
+            .map(|_| vec![rng.next_f32() * 10.0, rng.next_f32() * 10.0])
+            .collect();
+        let objs: Vec<&[f32]> = coords.iter().map(|c| c.as_slice()).collect();
+        let min_sep = |idx: &[usize]| -> f64 {
+            let mut best = f64::INFINITY;
+            for (a, &i) in idx.iter().enumerate() {
+                for &j in &idx[a + 1..] {
+                    best = best.min(crate::strdist::euclidean(&coords[i], &coords[j]));
+                }
+            }
+            best
+        };
+        let fps = fps_landmarks(&mut rng, &objs, 20, &Euclidean);
+        let rnd = random_landmarks(&mut rng, 200, 20);
+        assert!(min_sep(&fps) > min_sep(&rnd), "{} vs {}", min_sep(&fps), min_sep(&rnd));
+    }
+
+    #[test]
+    fn fps_works_on_strings() {
+        let names = ["anna", "annie", "anne", "bob", "bobby", "robert",
+                     "christopher", "chris"];
+        let objs: Vec<&str> = names.to_vec();
+        let mut rng = Rng::new(4);
+        let idx = fps_landmarks(&mut rng, &objs, 4, &Levenshtein);
+        assert_eq!(idx.len(), 4);
+        // "christopher" is the most isolated name; FPS should pick it
+        assert!(idx.contains(&6), "{idx:?}");
+    }
+
+    #[test]
+    fn fps_handles_duplicates_by_topping_up() {
+        let names = ["same", "same", "same", "same", "other"];
+        let objs: Vec<&str> = names.to_vec();
+        let mut rng = Rng::new(5);
+        let idx = fps_landmarks(&mut rng, &objs, 3, &Levenshtein);
+        assert_eq!(idx.len(), 3);
+    }
+
+    #[test]
+    fn pool_variant_returns_l_valid_indices() {
+        let coords: Vec<Vec<f32>> = (0..500).map(|i| vec![(i % 37) as f32, (i / 37) as f32]).collect();
+        let objs: Vec<&[f32]> = coords.iter().map(|c| c.as_slice()).collect();
+        let mut rng = Rng::new(6);
+        let idx = maxmin_pool_landmarks(&mut rng, &objs, 25, 4, &Euclidean);
+        assert_eq!(idx.len(), 25);
+        assert!(idx.iter().all(|&i| i < 500));
+        let mut d = idx.clone();
+        d.dedup();
+        assert_eq!(d.len(), 25);
+    }
+
+    #[test]
+    fn method_from_name() {
+        assert_eq!(LandmarkMethod::from_name("fps"), Some(LandmarkMethod::Fps));
+        assert_eq!(LandmarkMethod::from_name("random"), Some(LandmarkMethod::Random));
+        assert_eq!(LandmarkMethod::from_name("nope"), None);
+    }
+}

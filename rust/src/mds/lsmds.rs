@@ -1,0 +1,233 @@
+//! Pure-Rust LSMDS: iterative gradient descent on the raw stress (Eq. 1).
+//!
+//! This is (a) the reference implementation the PJRT `lsmds_steps` artifact
+//! is cross-checked against, and (b) the fallback when no artifacts are
+//! built. The default step size 1/(2N) on a centred configuration makes
+//! each step exactly the unweighted SMACOF/Guttman transform, so descent is
+//! monotone without tuning (the identity is proven in `smacof.rs` tests).
+//!
+//! Gradient evaluation is O(N^2 K) and row-parallel.
+
+use crate::util::prng::Rng;
+use crate::util::threadpool::{default_parallelism, parallel_for_chunks, SyncSlice};
+
+use super::matrix::Matrix;
+use super::stress::raw_stress;
+
+#[derive(Clone, Debug)]
+pub struct LsmdsConfig {
+    /// Output dimension K.
+    pub dim: usize,
+    /// Maximum gradient-descent iterations.
+    pub max_iters: usize,
+    /// Stop when |sigma_prev - sigma| / sigma_prev falls below this.
+    pub rel_tol: f64,
+    /// Step size; `None` = 1/(2N) (SMACOF-equivalent, monotone).
+    pub lr: Option<f64>,
+    /// Scale of the random initial configuration.
+    pub init_sigma: f32,
+    pub seed: u64,
+}
+
+impl Default for LsmdsConfig {
+    fn default() -> Self {
+        Self {
+            dim: 7, // paper Sec. 5.3
+            max_iters: 500,
+            rel_tol: 1e-6,
+            lr: None,
+            init_sigma: 1.0,
+            seed: 7,
+        }
+    }
+}
+
+/// Result of an LSMDS run.
+#[derive(Clone, Debug)]
+pub struct LsmdsResult {
+    pub config: Matrix,
+    pub raw_stress: f64,
+    pub normalized_stress: f64,
+    pub iters: usize,
+}
+
+/// Gradient of the raw stress at `x` (row-parallel). Returns (grad, sigma).
+pub fn stress_gradient(x: &Matrix, delta: &Matrix) -> (Matrix, f64) {
+    let n = x.rows;
+    let k = x.cols;
+    let mut grad = Matrix::zeros(n, k);
+    let mut sres = vec![0.0f64; n];
+    {
+        let gslots = SyncSlice::new(&mut grad.data);
+        let sslots = SyncSlice::new(&mut sres);
+        parallel_for_chunks(n, 8, default_parallelism(), |start, end| {
+            let mut gi = vec![0.0f64; k];
+            for i in start..end {
+                gi.iter_mut().for_each(|v| *v = 0.0);
+                let xi = x.row(i);
+                let mut s = 0.0f64;
+                for j in 0..n {
+                    if j == i {
+                        continue;
+                    }
+                    let xj = x.row(j);
+                    let d = crate::strdist::euclidean(xi, xj);
+                    let delta_ij = delta.at(i, j) as f64;
+                    let resid = d - delta_ij;
+                    s += resid * resid;
+                    let coef = if d > 1e-12 { resid / d } else { 0.0 };
+                    for c in 0..k {
+                        gi[c] += 2.0 * coef * (xi[c] as f64 - xj[c] as f64);
+                    }
+                }
+                unsafe {
+                    sslots.write(i, s);
+                    for c in 0..k {
+                        gslots.write(i * k + c, gi[c] as f32);
+                    }
+                }
+            }
+        });
+    }
+    (grad, 0.5 * sres.iter().sum::<f64>())
+}
+
+/// Run LSMDS from a random (centred) initial configuration.
+pub fn lsmds(delta: &Matrix, cfg: &LsmdsConfig) -> LsmdsResult {
+    assert_eq!(delta.rows, delta.cols, "delta must be square");
+    let n = delta.rows;
+    let mut rng = Rng::new(cfg.seed);
+    let mut x = Matrix::random_normal(&mut rng, n, cfg.dim, cfg.init_sigma);
+    x.center_columns();
+    lsmds_from(delta, x, cfg)
+}
+
+/// Run LSMDS from a caller-supplied initial configuration.
+pub fn lsmds_from(delta: &Matrix, mut x: Matrix, cfg: &LsmdsConfig) -> LsmdsResult {
+    let n = delta.rows;
+    assert_eq!(x.rows, n);
+    let lr = cfg.lr.unwrap_or(1.0 / (2.0 * n as f64));
+    let mut prev_sigma = f64::INFINITY;
+    let mut iters = 0;
+    for it in 0..cfg.max_iters {
+        let (grad, sigma) = stress_gradient(&x, delta);
+        iters = it + 1;
+        if sigma < 1e-10 {
+            break; // absolute floor: relative checks are meaningless at ~0
+        }
+        if prev_sigma.is_finite() {
+            let rel = (prev_sigma - sigma) / prev_sigma.max(1e-30);
+            if rel.abs() < cfg.rel_tol {
+                break;
+            }
+        }
+        prev_sigma = sigma;
+        for (xi, gi) in x.data.iter_mut().zip(grad.data.iter()) {
+            *xi -= (lr * *gi as f64) as f32;
+        }
+    }
+    let sigma = raw_stress(&x, delta);
+    let norm = super::stress::normalized_stress(&x, delta);
+    LsmdsResult { config: x, raw_stress: sigma, normalized_stress: norm, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strdist::euclidean;
+
+    fn realizable_delta(rng: &mut Rng, n: usize, k: usize) -> (Matrix, Matrix) {
+        let x = Matrix::random_normal(rng, n, k, 1.0);
+        let mut d = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                d.set(i, j, euclidean(x.row(i), x.row(j)) as f32);
+            }
+        }
+        (x, d)
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let mut rng = Rng::new(1);
+        let (x, delta) = realizable_delta(&mut rng, 12, 3);
+        // perturb x so the gradient is non-zero
+        let mut xp = x.clone();
+        for v in xp.data.iter_mut() {
+            v.clone_from(&(*v + 0.1));
+        }
+        xp.set(0, 0, xp.at(0, 0) + 0.3);
+        let (grad, _) = stress_gradient(&xp, &delta);
+        let h = 1e-3f32;
+        for &(r, c) in &[(0usize, 0usize), (3, 1), (11, 2)] {
+            let mut plus = xp.clone();
+            plus.set(r, c, plus.at(r, c) + h);
+            let mut minus = xp.clone();
+            minus.set(r, c, minus.at(r, c) - h);
+            let fd = (raw_stress(&plus, &delta) - raw_stress(&minus, &delta))
+                / (2.0 * h as f64);
+            let g = grad.at(r, c) as f64;
+            assert!(
+                (fd - g).abs() < 2e-2 * (1.0 + g.abs()),
+                "({r},{c}): fd={fd} grad={g}"
+            );
+        }
+    }
+
+    #[test]
+    fn stress_descends_monotonically_with_default_lr() {
+        let mut rng = Rng::new(2);
+        let (_, delta) = realizable_delta(&mut rng, 30, 3);
+        let mut x = Matrix::random_normal(&mut rng, 30, 3, 1.0);
+        x.center_columns();
+        let mut prev = f64::INFINITY;
+        let lr = 1.0 / 60.0;
+        for _ in 0..30 {
+            let (grad, sigma) = stress_gradient(&x, &delta);
+            assert!(sigma <= prev + 1e-9, "stress rose: {prev} -> {sigma}");
+            prev = sigma;
+            for (xi, gi) in x.data.iter_mut().zip(grad.data.iter()) {
+                *xi -= (lr * *gi as f64) as f32;
+            }
+        }
+    }
+
+    #[test]
+    fn recovers_realizable_configuration() {
+        let mut rng = Rng::new(3);
+        let (_, delta) = realizable_delta(&mut rng, 40, 2);
+        let r = lsmds(&delta, &LsmdsConfig {
+            dim: 2,
+            max_iters: 2000,
+            rel_tol: 1e-9,
+            ..Default::default()
+        });
+        assert!(r.normalized_stress < 0.05, "sigma = {}", r.normalized_stress);
+    }
+
+    #[test]
+    fn embedding_dimension_controls_quality() {
+        // embedding 3-D distances into 1-D must be worse than into 3-D
+        let mut rng = Rng::new(4);
+        let (_, delta) = realizable_delta(&mut rng, 25, 3);
+        let lo = lsmds(&delta, &LsmdsConfig { dim: 1, max_iters: 300, ..Default::default() });
+        let hi = lsmds(&delta, &LsmdsConfig { dim: 3, max_iters: 300, ..Default::default() });
+        assert!(hi.normalized_stress < lo.normalized_stress);
+    }
+
+    #[test]
+    fn converges_early_on_tolerance() {
+        let mut rng = Rng::new(5);
+        let (x, delta) = realizable_delta(&mut rng, 20, 2);
+        // start AT the solution: should stop almost immediately
+        let r = lsmds_from(&delta, x, &LsmdsConfig {
+            dim: 2,
+            max_iters: 500,
+            rel_tol: 1e-6,
+            ..Default::default()
+        });
+        // at the optimum (stress ~ f32 noise) we must bail out quickly, not
+        // chase relative fluctuations of ~0 for 500 iterations
+        assert!(r.iters <= 10, "iters = {}", r.iters);
+    }
+}

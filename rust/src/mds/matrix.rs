@@ -1,0 +1,172 @@
+//! Dense row-major f32 matrix — the shared numeric container between the
+//! dissimilarity engine, the pure-Rust MDS/NN baselines and the PJRT
+//! runtime (whose literals are row-major f32 too, so hand-off is a memcpy).
+
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    /// iid N(0, sigma^2) entries.
+    pub fn random_normal(rng: &mut Rng, rows: usize, cols: usize, sigma: f32) -> Self {
+        Self { rows, cols, data: rng.normal_vec_f32(rows * cols, sigma) }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Select a subset of rows (e.g. the landmark coordinates).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Vertically stack two matrices with equal column counts.
+    pub fn vstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Matrix { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    /// Subtract the column means (centre the configuration). Returns the
+    /// means that were removed.
+    pub fn center_columns(&mut self) -> Vec<f32> {
+        let mut means = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for (c, m) in means.iter_mut().enumerate() {
+                *m += self.at(r, c);
+            }
+        }
+        for m in means.iter_mut() {
+            *m /= self.rows.max(1) as f32;
+        }
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let v = self.at(r, c) - means[c];
+                self.set(r, c, v);
+            }
+        }
+        means
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.at(0, 2), 3.0);
+        assert_eq!(m.at(1, 0), 4.0);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_validates_length() {
+        Matrix::from_vec(2, 2, vec![1.0]);
+    }
+
+    #[test]
+    fn select_rows_and_vstack() {
+        let m = Matrix::from_rows(&[
+            vec![1.0, 2.0],
+            vec![3.0, 4.0],
+            vec![5.0, 6.0],
+        ]);
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.row(0), &[5.0, 6.0]);
+        assert_eq!(s.row(1), &[1.0, 2.0]);
+        let v = s.vstack(&m);
+        assert_eq!(v.rows, 5);
+        assert_eq!(v.row(4), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn center_columns_zeroes_means() {
+        let mut m = Matrix::from_rows(&[vec![1.0, 10.0], vec![3.0, 20.0]]);
+        let means = m.center_columns();
+        assert_eq!(means, vec![2.0, 15.0]);
+        assert_eq!(m.row(0), &[-1.0, -5.0]);
+        assert_eq!(m.row(1), &[1.0, 5.0]);
+    }
+
+    #[test]
+    fn norms_and_diffs() {
+        let a = Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        let b = Matrix::from_vec(1, 2, vec![3.0, 5.0]);
+        assert_eq!(a.frobenius_norm(), 5.0);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+
+    #[test]
+    fn random_normal_is_seeded() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = Matrix::random_normal(&mut r1, 4, 3, 1.0);
+        let b = Matrix::random_normal(&mut r2, 4, 3, 1.0);
+        assert_eq!(a, b);
+    }
+}

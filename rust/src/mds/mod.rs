@@ -1,0 +1,17 @@
+//! Multidimensional scaling core: dissimilarity-matrix engine, the LSMDS
+//! gradient-descent solver (paper Sec. 2.1), the SMACOF and classical-MDS
+//! baselines, landmark selection (Sec. 4), and the paper's error metrics
+//! (Eqs. 1, 4, 5).
+
+pub mod classical;
+pub mod dissimilarity;
+pub mod landmarks;
+pub mod lsmds;
+pub mod matrix;
+pub mod smacof;
+pub mod stress;
+
+pub use landmarks::LandmarkMethod;
+pub use lsmds::{lsmds, lsmds_from, LsmdsConfig, LsmdsResult};
+pub use matrix::Matrix;
+pub use smacof::{smacof, SmacofConfig};

@@ -1,0 +1,178 @@
+//! SMACOF (De Leeuw & Mair) — stress majorization via the Guttman
+//! transform. The paper contrasts its gradient-descent LSMDS with the
+//! SMACOF implementation used by much of the literature (Sec. 2.1, [6]);
+//! we ship both and *prove* (in tests) the identity the whole artifact
+//! design relies on: for unit weights and a centred configuration,
+//!
+//! ```text
+//! Guttman(X) == X - grad sigma_raw(X) / (2N)
+//! ```
+//!
+//! i.e. SMACOF is plain GD with lr = 1/(2N).
+
+use super::matrix::Matrix;
+use super::stress::{normalized_stress, raw_stress};
+use crate::util::prng::Rng;
+
+/// One Guttman transform: X' = (1/n) B(X) X with
+/// B_ij = -delta_ij / d_ij (i != j), B_ii = sum_{j != i} delta_ij / d_ij.
+pub fn guttman_transform(x: &Matrix, delta: &Matrix) -> Matrix {
+    let n = x.rows;
+    let k = x.cols;
+    let mut out = Matrix::zeros(n, k);
+    for i in 0..n {
+        let xi = x.row(i);
+        let mut acc = vec![0.0f64; k];
+        let mut diag = 0.0f64;
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let xj = x.row(j);
+            let d = crate::strdist::euclidean(xi, xj);
+            let ratio = if d > 1e-12 { delta.at(i, j) as f64 / d } else { 0.0 };
+            diag += ratio;
+            for c in 0..k {
+                acc[c] -= ratio * xj[c] as f64;
+            }
+        }
+        for c in 0..k {
+            out.set(i, c, ((diag * xi[c] as f64 + acc[c]) / n as f64) as f32);
+        }
+    }
+    out
+}
+
+#[derive(Clone, Debug)]
+pub struct SmacofConfig {
+    pub dim: usize,
+    pub max_iters: usize,
+    pub rel_tol: f64,
+    pub seed: u64,
+}
+
+impl Default for SmacofConfig {
+    fn default() -> Self {
+        Self { dim: 7, max_iters: 500, rel_tol: 1e-6, seed: 7 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SmacofResult {
+    pub config: Matrix,
+    pub raw_stress: f64,
+    pub normalized_stress: f64,
+    pub iters: usize,
+}
+
+/// Full SMACOF run from a random centred start.
+pub fn smacof(delta: &Matrix, cfg: &SmacofConfig) -> SmacofResult {
+    let n = delta.rows;
+    let mut rng = Rng::new(cfg.seed);
+    let mut x = Matrix::random_normal(&mut rng, n, cfg.dim, 1.0);
+    x.center_columns();
+    let mut prev = f64::INFINITY;
+    let mut iters = 0;
+    for it in 0..cfg.max_iters {
+        x = guttman_transform(&x, delta);
+        iters = it + 1;
+        if it % 10 == 9 {
+            let sigma = raw_stress(&x, delta);
+            if prev.is_finite() && (prev - sigma) / prev.max(1e-30) < cfg.rel_tol {
+                break;
+            }
+            prev = sigma;
+        }
+    }
+    let sigma = raw_stress(&x, delta);
+    SmacofResult {
+        normalized_stress: normalized_stress(&x, delta),
+        raw_stress: sigma,
+        config: x,
+        iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lsmds::stress_gradient;
+    use super::*;
+    use crate::strdist::euclidean;
+
+    fn realizable(seed: u64, n: usize, k: usize) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::random_normal(&mut rng, n, k, 1.0);
+        let mut d = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                d.set(i, j, euclidean(x.row(i), x.row(j)) as f32);
+            }
+        }
+        (x, d)
+    }
+
+    #[test]
+    fn guttman_equals_gd_with_half_inverse_n_lr() {
+        // The identity every artifact relies on (see model.py docstring).
+        let (_, delta) = realizable(1, 22, 4);
+        let mut rng = Rng::new(2);
+        let mut x = Matrix::random_normal(&mut rng, 22, 4, 1.0);
+        x.center_columns();
+
+        let via_guttman = guttman_transform(&x, &delta);
+        let (grad, _) = stress_gradient(&x, &delta);
+        let lr = 1.0 / (2.0 * 22.0);
+        let mut via_gd = x.clone();
+        for (v, g) in via_gd.data.iter_mut().zip(grad.data.iter()) {
+            *v -= (lr * *g as f64) as f32;
+        }
+        assert!(
+            via_guttman.max_abs_diff(&via_gd) < 1e-5,
+            "identity violated: {}",
+            via_guttman.max_abs_diff(&via_gd)
+        );
+    }
+
+    #[test]
+    fn stress_never_increases() {
+        let (_, delta) = realizable(3, 35, 3);
+        let mut rng = Rng::new(4);
+        let mut x = Matrix::random_normal(&mut rng, 35, 3, 1.5);
+        x.center_columns();
+        let mut prev = raw_stress(&x, &delta);
+        for _ in 0..50 {
+            x = guttman_transform(&x, &delta);
+            let cur = raw_stress(&x, &delta);
+            assert!(cur <= prev + 1e-9, "{prev} -> {cur}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn smacof_recovers_realizable_config() {
+        let (_, delta) = realizable(5, 40, 2);
+        let r = smacof(&delta, &SmacofConfig {
+            dim: 2,
+            max_iters: 2000,
+            rel_tol: 1e-10,
+            seed: 6,
+        });
+        assert!(r.normalized_stress < 0.05, "sigma = {}", r.normalized_stress);
+    }
+
+    #[test]
+    fn smacof_and_lsmds_agree_on_stress_level() {
+        use super::super::lsmds::{lsmds, LsmdsConfig};
+        let (_, delta) = realizable(7, 30, 3);
+        let a = smacof(&delta, &SmacofConfig { dim: 3, max_iters: 800, rel_tol: 1e-9, seed: 8 });
+        let b = lsmds(&delta, &LsmdsConfig {
+            dim: 3,
+            max_iters: 800,
+            rel_tol: 1e-9,
+            seed: 9,
+            ..Default::default()
+        });
+        // different inits, same optimisation problem: final stress similar
+        assert!((a.normalized_stress - b.normalized_stress).abs() < 0.05);
+    }
+}

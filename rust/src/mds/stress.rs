@@ -1,0 +1,206 @@
+//! Stress and error metrics — Eq. 1 (raw/normalised stress), Eq. 4
+//! (point error PErr), Eq. 5 (total error Err(m)). These are the quantities
+//! every figure in the paper plots, so their definitions live in one place
+//! and are unit-tested against hand-computed values.
+
+use crate::strdist::euclidean;
+use crate::util::threadpool::{default_parallelism, parallel_for_chunks, SyncSlice};
+
+use super::matrix::Matrix;
+
+/// Raw stress (Eq. 1): sum over unordered pairs of (d_ij - delta_ij)^2.
+pub fn raw_stress(x: &Matrix, delta: &Matrix) -> f64 {
+    assert_eq!(x.rows, delta.rows);
+    assert_eq!(delta.rows, delta.cols);
+    let n = x.rows;
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = euclidean(x.row(i), x.row(j));
+            let r = d - delta.at(i, j) as f64;
+            acc += r * r;
+        }
+    }
+    acc
+}
+
+/// Normalised stress: sqrt(sigma_raw / sum_{i<j} delta_ij^2) (Sec. 2.1).
+pub fn normalized_stress(x: &Matrix, delta: &Matrix) -> f64 {
+    let num = raw_stress(x, delta);
+    let n = delta.rows;
+    let mut den = 0.0f64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = delta.at(i, j) as f64;
+            den += d * d;
+        }
+    }
+    if den <= 0.0 {
+        return 0.0;
+    }
+    (num / den).sqrt()
+}
+
+/// Point error (Eq. 4) for ONE embedded point `y_hat` against all N
+/// pre-mapped points: sum_i (delta_iy - ||x_i - y_hat||)^2.
+///
+/// `delta_to_all[i]` is the original-space dissimilarity from y to point i.
+pub fn point_error(config: &Matrix, delta_to_all: &[f32], y_hat: &[f32]) -> f64 {
+    assert_eq!(config.rows, delta_to_all.len());
+    let mut acc = 0.0f64;
+    for i in 0..config.rows {
+        let d = euclidean(config.row(i), y_hat);
+        let r = delta_to_all[i] as f64 - d;
+        acc += r * r;
+    }
+    acc
+}
+
+/// Normalised point error, as plotted in Figs. 2-3: PErr(y) divided by the
+/// sum of the dissimilarities from y to the existing points.
+pub fn point_error_normalized(
+    config: &Matrix,
+    delta_to_all: &[f32],
+    y_hat: &[f32],
+) -> f64 {
+    let denom: f64 = delta_to_all.iter().map(|d| *d as f64).sum();
+    if denom <= 0.0 {
+        return 0.0;
+    }
+    point_error(config, delta_to_all, y_hat) / denom
+}
+
+/// Total error Err(m) (Eq. 5) of embedding m new points:
+/// sum_{i,j} (delta_{i y_j} - ||x_i - y_hat_j||)^2 / delta_{i y_j}.
+///
+/// `delta_new[j][i]`: original dissimilarity from new point j to existing
+/// point i (an m x N matrix); `y_hat`: m x K embedded coordinates.
+/// Terms with delta == 0 contribute their squared residual un-normalised
+/// (the limit of the paper's expression as delta -> 0 is undefined; treating
+/// the weight as 1 keeps the metric finite and is how the R code behaves
+/// with its data, which has no zero dissimilarities across samples).
+pub fn total_error(config: &Matrix, delta_new: &Matrix, y_hat: &Matrix) -> f64 {
+    assert_eq!(delta_new.rows, y_hat.rows);
+    assert_eq!(delta_new.cols, config.rows);
+    let m = y_hat.rows;
+    let mut partials = vec![0.0f64; m];
+    {
+        let slots = SyncSlice::new(&mut partials);
+        parallel_for_chunks(m, 4, default_parallelism(), |start, end| {
+            for j in start..end {
+                let mut acc = 0.0f64;
+                for i in 0..config.rows {
+                    let d = euclidean(config.row(i), y_hat.row(j));
+                    let delta = delta_new.at(j, i) as f64;
+                    let r = delta - d;
+                    acc += if delta > 0.0 { r * r / delta } else { r * r };
+                }
+                unsafe { slots.write(j, acc) };
+            }
+        });
+    }
+    partials.iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn square_config() -> Matrix {
+        // unit square in R^2
+        Matrix::from_rows(&[
+            vec![0.0, 0.0],
+            vec![1.0, 0.0],
+            vec![0.0, 1.0],
+            vec![1.0, 1.0],
+        ])
+    }
+
+    fn square_delta() -> Matrix {
+        let x = square_config();
+        let n = x.rows;
+        let mut d = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                d.set(i, j, euclidean(x.row(i), x.row(j)) as f32);
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn perfect_embedding_has_zero_stress() {
+        let x = square_config();
+        let delta = square_delta();
+        assert!(raw_stress(&x, &delta) < 1e-12);
+        // delta stores f32 distances: the normalised ratio keeps sqrt of
+        // f32 quantisation noise, so ~1e-7 is the practical floor
+        assert!(normalized_stress(&x, &delta) < 1e-6);
+    }
+
+    #[test]
+    fn raw_stress_hand_value() {
+        // two points at distance 1, target distance 3 -> (1-3)^2 = 4
+        let x = Matrix::from_rows(&[vec![0.0], vec![1.0]]);
+        let mut delta = Matrix::zeros(2, 2);
+        delta.set(0, 1, 3.0);
+        delta.set(1, 0, 3.0);
+        assert!((raw_stress(&x, &delta) - 4.0).abs() < 1e-12);
+        // normalised: sqrt(4 / 9)
+        assert!((normalized_stress(&x, &delta) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn point_error_hand_value() {
+        let config = square_config();
+        let y_hat = [0.5f32, 0.5];
+        // all 4 distances are sqrt(0.5); pretend original deltas were 1.0
+        let deltas = [1.0f32; 4];
+        let want = 4.0 * (1.0 - 0.5f64.sqrt()).powi(2);
+        assert!((point_error(&config, &deltas, &y_hat) - want).abs() < 1e-9);
+        let norm = point_error_normalized(&config, &deltas, &y_hat);
+        assert!((norm - want / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn total_error_reduces_to_weighted_point_errors() {
+        let config = square_config();
+        let y_hat = Matrix::from_rows(&[vec![0.5, 0.5], vec![2.0, 2.0]]);
+        let delta_new = Matrix::from_rows(&[vec![1.0; 4], vec![2.0; 4]]);
+        let got = total_error(&config, &delta_new, &y_hat);
+        // manual: term = (delta - d)^2 / delta
+        let mut want = 0.0f64;
+        for j in 0..2 {
+            for i in 0..4 {
+                let d = euclidean(config.row(i), y_hat.row(j));
+                let delta = delta_new.at(j, i) as f64;
+                want += (delta - d).powi(2) / delta;
+            }
+        }
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn total_error_zero_delta_terms_stay_finite() {
+        let config = square_config();
+        let y_hat = Matrix::from_rows(&[vec![0.0, 0.0]]);
+        let delta_new = Matrix::from_rows(&[vec![0.0, 1.0, 1.0, 2.0f32.sqrt()]]);
+        let e = total_error(&config, &delta_new, &y_hat);
+        assert!(e.is_finite());
+        assert!(e < 1e-9); // the embedding is exact here
+    }
+
+    #[test]
+    fn stress_scales_quadratically_with_residual() {
+        let x = Matrix::from_rows(&[vec![0.0], vec![1.0]]);
+        let mut d2 = Matrix::zeros(2, 2);
+        d2.set(0, 1, 2.0);
+        d2.set(1, 0, 2.0);
+        let mut d3 = Matrix::zeros(2, 2);
+        d3.set(0, 1, 3.0);
+        d3.set(1, 0, 3.0);
+        let s2 = raw_stress(&x, &d2); // (1-2)^2 = 1
+        let s3 = raw_stress(&x, &d3); // (1-3)^2 = 4
+        assert!((s3 / s2 - 4.0).abs() < 1e-12);
+    }
+}

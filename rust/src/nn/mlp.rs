@@ -1,0 +1,457 @@
+//! Pure-Rust MLP (3 hidden layers, ReLU) with backprop and Adam — the
+//! paper's neural OSE model (Sec. 4.2) in its original Keras shape.
+//!
+//! Two roles:
+//! - numerical mirror of the `mlp_train_step` / `mlp_fwd` PJRT artifacts
+//!   (integration tests check both produce the same updates/predictions);
+//! - standalone fallback trainer/inferencer when artifacts are unavailable
+//!   (and the baseline that stands in for the authors' Keras setup).
+//!
+//! The loss is Eq. 3: mean over the batch of the Euclidean norm of the
+//! residual. Gradients are exact (the sqrt is smoothed with the same eps
+//! the JAX graph uses, so the two implementations match bit-for-bit-ish).
+
+use crate::mds::Matrix;
+use crate::util::prng::Rng;
+
+pub const EPS: f32 = 1e-12;
+
+/// Layer sizes: input L -> h1 -> h2 -> h3 -> K.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MlpShape {
+    pub input: usize,
+    pub hidden: [usize; 3],
+    pub output: usize,
+}
+
+impl MlpShape {
+    pub fn layer_dims(&self) -> [(usize, usize); 4] {
+        [
+            (self.input, self.hidden[0]),
+            (self.hidden[0], self.hidden[1]),
+            (self.hidden[1], self.hidden[2]),
+            (self.hidden[2], self.output),
+        ]
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layer_dims()
+            .iter()
+            .map(|(i, o)| i * o + o)
+            .sum()
+    }
+}
+
+/// Parameters: weights `w[l]` are (in x out) row-major, biases `b[l]`.
+#[derive(Clone, Debug)]
+pub struct MlpParams {
+    pub shape: MlpShape,
+    pub w: [Matrix; 4],
+    pub b: [Vec<f32>; 4],
+}
+
+impl MlpParams {
+    /// He-uniform initialisation (Keras `relu` default family).
+    pub fn init(shape: &MlpShape, rng: &mut Rng) -> Self {
+        let mk = |rng: &mut Rng, i: usize, o: usize| {
+            let limit = (6.0 / i as f64).sqrt() as f32;
+            let data = (0..i * o)
+                .map(|_| (rng.next_f32() * 2.0 - 1.0) * limit)
+                .collect();
+            Matrix::from_vec(i, o, data)
+        };
+        let dims = shape.layer_dims();
+        Self {
+            shape: shape.clone(),
+            w: [
+                mk(rng, dims[0].0, dims[0].1),
+                mk(rng, dims[1].0, dims[1].1),
+                mk(rng, dims[2].0, dims[2].1),
+                mk(rng, dims[3].0, dims[3].1),
+            ],
+            b: [
+                vec![0.0; dims[0].1],
+                vec![0.0; dims[1].1],
+                vec![0.0; dims[2].1],
+                vec![0.0; dims[3].1],
+            ],
+        }
+    }
+
+    /// Flatten in the artifact argument order (w1,b1,...,w4,b4).
+    pub fn flatten(&self) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(8);
+        for l in 0..4 {
+            out.push(self.w[l].data.clone());
+            out.push(self.b[l].clone());
+        }
+        out
+    }
+
+    /// Rebuild from flattened artifact outputs.
+    pub fn from_flat(shape: &MlpShape, flat: &[Vec<f32>]) -> Self {
+        assert_eq!(flat.len(), 8);
+        let dims = shape.layer_dims();
+        let w = [
+            Matrix::from_vec(dims[0].0, dims[0].1, flat[0].clone()),
+            Matrix::from_vec(dims[1].0, dims[1].1, flat[2].clone()),
+            Matrix::from_vec(dims[2].0, dims[2].1, flat[4].clone()),
+            Matrix::from_vec(dims[3].0, dims[3].1, flat[6].clone()),
+        ];
+        let b = [flat[1].clone(), flat[3].clone(), flat[5].clone(), flat[7].clone()];
+        Self { shape: shape.clone(), w, b }
+    }
+}
+
+/// x (B x in) @ w (in x out) + b, into `out` (B x out).
+fn affine(x: &Matrix, w: &Matrix, b: &[f32]) -> Matrix {
+    assert_eq!(x.cols, w.rows);
+    let mut out = Matrix::zeros(x.rows, w.cols);
+    for r in 0..x.rows {
+        let xr = x.row(r);
+        let or = out.row_mut(r);
+        or.copy_from_slice(b);
+        for (i, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = w.row(i);
+            for (o, wv) in or.iter_mut().zip(wr.iter()) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+fn relu_inplace(m: &mut Matrix) {
+    for v in m.data.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Forward pass: d (B x L) -> predictions (B x K).
+pub fn forward(params: &MlpParams, d: &Matrix) -> Matrix {
+    let mut h = affine(d, &params.w[0], &params.b[0]);
+    relu_inplace(&mut h);
+    let mut h2 = affine(&h, &params.w[1], &params.b[1]);
+    relu_inplace(&mut h2);
+    let mut h3 = affine(&h2, &params.w[2], &params.b[2]);
+    relu_inplace(&mut h3);
+    affine(&h3, &params.w[3], &params.b[3])
+}
+
+/// Eq. 3 loss: mean_i ||pred_i - target_i||_2 (eps-smoothed).
+pub fn mae_loss(pred: &Matrix, target: &Matrix) -> f64 {
+    assert_eq!((pred.rows, pred.cols), (target.rows, target.cols));
+    let mut acc = 0.0f64;
+    for r in 0..pred.rows {
+        let mut sq = 0.0f64;
+        for (p, t) in pred.row(r).iter().zip(target.row(r).iter()) {
+            let d = (*p - *t) as f64;
+            sq += d * d;
+        }
+        acc += (sq + EPS as f64).sqrt();
+    }
+    acc / pred.rows as f64
+}
+
+/// Gradients of the Eq.-3 loss w.r.t. every parameter (exact backprop).
+pub struct Gradients {
+    pub w: [Matrix; 4],
+    pub b: [Vec<f32>; 4],
+}
+
+pub fn backward(params: &MlpParams, d: &Matrix, target: &Matrix) -> (f64, Gradients) {
+    let batch = d.rows as f32;
+
+    // forward with cached activations
+    let mut a1 = affine(d, &params.w[0], &params.b[0]);
+    relu_inplace(&mut a1);
+    let mut a2 = affine(&a1, &params.w[1], &params.b[1]);
+    relu_inplace(&mut a2);
+    let mut a3 = affine(&a2, &params.w[2], &params.b[2]);
+    relu_inplace(&mut a3);
+    let pred = affine(&a3, &params.w[3], &params.b[3]);
+
+    // dL/dpred: residual / (B * ||residual||) per row
+    let mut delta = Matrix::zeros(pred.rows, pred.cols);
+    let mut loss = 0.0f64;
+    for r in 0..pred.rows {
+        let mut sq = 0.0f64;
+        for (p, t) in pred.row(r).iter().zip(target.row(r).iter()) {
+            let d = (*p - *t) as f64;
+            sq += d * d;
+        }
+        let norm = (sq + EPS as f64).sqrt();
+        loss += norm;
+        let scale = 1.0 / (batch as f64 * norm);
+        for c in 0..pred.cols {
+            let resid = pred.at(r, c) - target.at(r, c);
+            delta.set(r, c, (resid as f64 * scale) as f32);
+        }
+    }
+    loss /= batch as f64;
+
+    // backprop through the four affine layers
+    let (gw4, gb4, mut d3) = affine_backward(&a3, &params.w[3], &delta);
+    relu_backward(&a3, &mut d3);
+    let (gw3, gb3, mut d2) = affine_backward(&a2, &params.w[2], &d3);
+    relu_backward(&a2, &mut d2);
+    let (gw2, gb2, mut d1) = affine_backward(&a1, &params.w[1], &d2);
+    relu_backward(&a1, &mut d1);
+    let (gw1, gb1, _) = affine_backward(d, &params.w[0], &d1);
+
+    (
+        loss,
+        Gradients { w: [gw1, gw2, gw3, gw4], b: [gb1, gb2, gb3, gb4] },
+    )
+}
+
+/// Given input x, weights w and upstream delta (B x out), produce
+/// (dW (in x out), db (out), dx (B x in)).
+fn affine_backward(x: &Matrix, w: &Matrix, delta: &Matrix) -> (Matrix, Vec<f32>, Matrix) {
+    let mut gw = Matrix::zeros(w.rows, w.cols);
+    let mut gb = vec![0.0f32; w.cols];
+    let mut dx = Matrix::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let xr = x.row(r);
+        let dr = delta.row(r);
+        for (c, d) in dr.iter().enumerate() {
+            gb[c] += d;
+        }
+        for (i, &xv) in xr.iter().enumerate() {
+            if xv != 0.0 {
+                let gwr = gw.row_mut(i);
+                for (c, d) in dr.iter().enumerate() {
+                    gwr[c] += xv * d;
+                }
+            }
+        }
+        let dxr = dx.row_mut(r);
+        for (i, dxv) in dxr.iter_mut().enumerate() {
+            let wr = w.row(i);
+            let mut acc = 0.0f32;
+            for (c, d) in dr.iter().enumerate() {
+                acc += wr[c] * d;
+            }
+            *dxv = acc;
+        }
+    }
+    (gw, gb, dx)
+}
+
+/// Zero the upstream gradient where the forward activation was clamped.
+fn relu_backward(activated: &Matrix, delta: &mut Matrix) {
+    for (a, d) in activated.data.iter().zip(delta.data.iter_mut()) {
+        if *a == 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// Adam optimiser state (beta1 = 0.9, beta2 = 0.999, eps = 1e-7: the Keras
+/// defaults the paper used, mirrored by the JAX graph).
+pub struct Adam {
+    pub lr: f32,
+    pub t: f32,
+    m_w: [Matrix; 4],
+    v_w: [Matrix; 4],
+    m_b: [Vec<f32>; 4],
+    v_b: [Vec<f32>; 4],
+}
+
+pub const BETA1: f32 = 0.9;
+pub const BETA2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-7;
+
+impl Adam {
+    pub fn new(shape: &MlpShape, lr: f32) -> Self {
+        let dims = shape.layer_dims();
+        let zw = |i: usize| Matrix::zeros(dims[i].0, dims[i].1);
+        let zb = |i: usize| vec![0.0f32; dims[i].1];
+        Self {
+            lr,
+            t: 0.0,
+            m_w: [zw(0), zw(1), zw(2), zw(3)],
+            v_w: [zw(0), zw(1), zw(2), zw(3)],
+            m_b: [zb(0), zb(1), zb(2), zb(3)],
+            v_b: [zb(0), zb(1), zb(2), zb(3)],
+        }
+    }
+
+    pub fn step(&mut self, params: &mut MlpParams, grads: &Gradients) {
+        self.t += 1.0;
+        let bc1 = 1.0 - BETA1.powf(self.t);
+        let bc2 = 1.0 - BETA2.powf(self.t);
+        for l in 0..4 {
+            update(
+                &mut params.w[l].data,
+                &grads.w[l].data,
+                &mut self.m_w[l].data,
+                &mut self.v_w[l].data,
+                self.lr,
+                bc1,
+                bc2,
+            );
+            update(
+                &mut params.b[l],
+                &grads.b[l],
+                &mut self.m_b[l],
+                &mut self.v_b[l],
+                self.lr,
+                bc1,
+                bc2,
+            );
+        }
+    }
+}
+
+fn update(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], lr: f32, bc1: f32, bc2: f32) {
+    for i in 0..p.len() {
+        m[i] = BETA1 * m[i] + (1.0 - BETA1) * g[i];
+        v[i] = BETA2 * v[i] + (1.0 - BETA2) * g[i] * g[i];
+        let step = lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + ADAM_EPS);
+        p[i] -= step;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> MlpShape {
+        MlpShape { input: 10, hidden: [8, 8, 8], output: 3 }
+    }
+
+    fn random_batch(rng: &mut Rng, b: usize, l: usize, k: usize) -> (Matrix, Matrix) {
+        let d = Matrix::from_vec(
+            b,
+            l,
+            (0..b * l).map(|_| rng.next_f32() * 3.0).collect(),
+        );
+        // learnable target: linear function of input
+        let a = Matrix::random_normal(rng, l, k, 0.3);
+        let mut t = Matrix::zeros(b, k);
+        for r in 0..b {
+            for c in 0..k {
+                let mut acc = 0.0f32;
+                for i in 0..l {
+                    acc += d.at(r, i) * a.at(i, c);
+                }
+                t.set(r, c, acc);
+            }
+        }
+        (d, t)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(1);
+        let p = MlpParams::init(&shape(), &mut rng);
+        let d = Matrix::zeros(5, 10);
+        let y = forward(&p, &d);
+        assert_eq!((y.rows, y.cols), (5, 3));
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut rng = Rng::new(2);
+        let mut p = MlpParams::init(&shape(), &mut rng);
+        // keep every ReLU strictly active: positive weights and biases, so
+        // the finite-difference probe never crosses a kink (where one-sided
+        // derivatives make fd meaningless)
+        for l in 0..4 {
+            for v in p.w[l].data.iter_mut() {
+                *v = v.abs() * 0.5 + 0.01;
+            }
+            for v in p.b[l].iter_mut() {
+                *v = 0.5;
+            }
+        }
+        let (d, t) = random_batch(&mut rng, 6, 10, 3);
+        let (_, g) = backward(&p, &d, &t);
+
+        let h = 1e-3f32;
+        // check a few weight entries in every layer
+        for l in 0..4 {
+            for &(r, c) in &[(0usize, 0usize), (1, 1)] {
+                if r >= p.w[l].rows || c >= p.w[l].cols {
+                    continue;
+                }
+                let orig = p.w[l].at(r, c);
+                p.w[l].set(r, c, orig + h);
+                let lp = mae_loss(&forward(&p, &d), &t);
+                p.w[l].set(r, c, orig - h);
+                let lm = mae_loss(&forward(&p, &d), &t);
+                p.w[l].set(r, c, orig);
+                let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+                let an = g.w[l].at(r, c);
+                assert!(
+                    (fd - an).abs() < 1e-2 * (1.0 + an.abs()),
+                    "layer {l} ({r},{c}): fd={fd} analytic={an}"
+                );
+            }
+        }
+        // and a bias entry
+        let orig = p.b[1][2];
+        p.b[1][2] = orig + h;
+        let lp = mae_loss(&forward(&p, &d), &t);
+        p.b[1][2] = orig - h;
+        let lm = mae_loss(&forward(&p, &d), &t);
+        p.b[1][2] = orig;
+        let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+        assert!((fd - g.b[1][2]).abs() < 1e-2 * (1.0 + g.b[1][2].abs()));
+    }
+
+    #[test]
+    fn adam_training_converges_on_linear_map() {
+        let mut rng = Rng::new(3);
+        let sh = shape();
+        let mut p = MlpParams::init(&sh, &mut rng);
+        let (d, t) = random_batch(&mut rng, 64, 10, 3);
+        let mut opt = Adam::new(&sh, 5e-3);
+        let initial = mae_loss(&forward(&p, &d), &t);
+        let mut last = initial;
+        for _ in 0..300 {
+            let (loss, g) = backward(&p, &d, &t);
+            opt.step(&mut p, &g);
+            last = loss;
+        }
+        assert!(
+            last < 0.2 * initial,
+            "no convergence: {initial} -> {last}"
+        );
+    }
+
+    #[test]
+    fn flatten_round_trips() {
+        let mut rng = Rng::new(4);
+        let p = MlpParams::init(&shape(), &mut rng);
+        let flat = p.flatten();
+        assert_eq!(flat.len(), 8);
+        let q = MlpParams::from_flat(&shape(), &flat);
+        for l in 0..4 {
+            assert_eq!(p.w[l], q.w[l]);
+            assert_eq!(p.b[l], q.b[l]);
+        }
+    }
+
+    #[test]
+    fn param_count_formula() {
+        let sh = shape();
+        assert_eq!(
+            sh.param_count(),
+            10 * 8 + 8 + 8 * 8 + 8 + 8 * 8 + 8 + 8 * 3 + 3
+        );
+    }
+
+    #[test]
+    fn loss_known_value() {
+        let pred = Matrix::from_rows(&[vec![3.0, 4.0], vec![0.0, 0.0]]);
+        let target = Matrix::zeros(2, 2);
+        assert!((mae_loss(&pred, &target) - 2.5).abs() < 1e-5);
+    }
+}

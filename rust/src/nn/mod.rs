@@ -1,0 +1,8 @@
+//! Neural-network substrate: the pure-Rust MLP + Adam mirror of the PJRT
+//! training/inference artifacts (paper Sec. 4.2).
+
+pub mod mlp;
+
+pub use mlp::{
+    backward, forward, mae_loss, Adam, Gradients, MlpParams, MlpShape,
+};

@@ -1,0 +1,238 @@
+//! Trosset & Priebe (2008) classical-MDS out-of-sample baseline (paper
+//! Sec. 3): embed a new point into an existing *classical* MDS
+//! configuration by least-squares matching of pairwise inner products
+//! rather than distances.
+//!
+//! Given a centred configuration X (from classical MDS of Delta) and the
+//! squared dissimilarities d2 of the new point y to the configured points,
+//! the double-centred target inner products are
+//!
+//! ```text
+//! b_i = -1/2 (d2_i - mean_i(d2) - rowmean2_i + grand2)
+//! ```
+//!
+//! and the least-squares estimate solves  X^T X w = X^T b  (a K x K
+//! system), i.e. w = (X^T X)^{-1} X^T b — closed form, no iteration. The
+//! paper's criticism stands: it needs distances to ALL configured points
+//! (O(N) per query, not O(L)) and assumes the classical (inner-product)
+//! embedding, so it degrades on strongly non-Euclidean string data. Both
+//! effects are measured by the `ose-baselines` ablation.
+
+use anyhow::Result;
+
+use crate::mds::Matrix;
+
+use super::OseMethod;
+
+/// Solve the K x K normal equations via Gaussian elimination with partial
+/// pivoting (K <= ~10 here, numerical ceremony unnecessary).
+fn solve(a: &mut [f64], b: &mut [f64], k: usize) -> Option<Vec<f64>> {
+    for col in 0..k {
+        // pivot
+        let mut p = col;
+        for r in (col + 1)..k {
+            if a[r * k + col].abs() > a[p * k + col].abs() {
+                p = r;
+            }
+        }
+        if a[p * k + col].abs() < 1e-12 {
+            return None;
+        }
+        if p != col {
+            for c in 0..k {
+                a.swap(col * k + c, p * k + c);
+            }
+            b.swap(col, p);
+        }
+        let piv = a[col * k + col];
+        for r in (col + 1)..k {
+            let f = a[r * k + col] / piv;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..k {
+                a[r * k + c] -= f * a[col * k + c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0f64; k];
+    for col in (0..k).rev() {
+        let mut acc = b[col];
+        for c in (col + 1)..k {
+            acc -= a[col * k + c] * x[c];
+        }
+        x[col] = acc / a[col * k + col];
+    }
+    Some(x)
+}
+
+/// Classical-MDS OSE over a centred configuration.
+pub struct ClassicalOse {
+    /// Centred N x K configuration (classical MDS output).
+    pub config: Matrix,
+    /// Row means of the squared dissimilarity matrix of the configuration
+    /// (precomputed from the original Delta).
+    pub row_means_sq: Vec<f64>,
+    pub grand_mean_sq: f64,
+}
+
+impl ClassicalOse {
+    /// Build from the original dissimilarity matrix.
+    pub fn new(config: Matrix, delta: &Matrix) -> Self {
+        let n = delta.rows;
+        let mut row_means_sq = vec![0.0f64; n];
+        let mut grand = 0.0f64;
+        for i in 0..n {
+            let mut acc = 0.0f64;
+            for j in 0..n {
+                let d = delta.at(i, j) as f64;
+                acc += d * d;
+            }
+            row_means_sq[i] = acc / n as f64;
+            grand += acc;
+        }
+        Self {
+            config,
+            row_means_sq,
+            grand_mean_sq: grand / (n * n) as f64,
+        }
+    }
+
+    /// Embed one point from its dissimilarities to ALL configured points.
+    pub fn place(&self, deltas: &[f32]) -> Option<Vec<f32>> {
+        let n = self.config.rows;
+        let k = self.config.cols;
+        assert_eq!(deltas.len(), n);
+        let d2: Vec<f64> = deltas.iter().map(|d| (*d as f64) * (*d as f64)).collect();
+        let mean_d2 = d2.iter().sum::<f64>() / n as f64;
+        // target inner products b_i = x_i . y
+        let b: Vec<f64> = (0..n)
+            .map(|i| -0.5 * (d2[i] - mean_d2 - self.row_means_sq[i] + self.grand_mean_sq))
+            .collect();
+        // normal equations: (X^T X) w = X^T b
+        let mut xtx = vec![0.0f64; k * k];
+        let mut xtb = vec![0.0f64; k];
+        for i in 0..n {
+            let xi = self.config.row(i);
+            for a in 0..k {
+                xtb[a] += xi[a] as f64 * b[i];
+                for c in a..k {
+                    xtx[a * k + c] += xi[a] as f64 * xi[c] as f64;
+                }
+            }
+        }
+        for a in 0..k {
+            for c in 0..a {
+                xtx[a * k + c] = xtx[c * k + a];
+            }
+        }
+        solve(&mut xtx, &mut xtb, k).map(|w| w.iter().map(|v| *v as f32).collect())
+    }
+}
+
+impl OseMethod for ClassicalOse {
+    fn embed(&mut self, deltas: &Matrix) -> Result<Matrix> {
+        anyhow::ensure!(deltas.cols == self.config.rows, "bad input width");
+        let mut out = Matrix::zeros(deltas.rows, self.config.cols);
+        for r in 0..deltas.rows {
+            let y = self
+                .place(deltas.row(r))
+                .ok_or_else(|| anyhow::anyhow!("degenerate configuration"))?;
+            out.row_mut(r).copy_from_slice(&y);
+        }
+        Ok(out)
+    }
+
+    fn dim(&self) -> usize {
+        self.config.cols
+    }
+
+    fn landmarks(&self) -> usize {
+        self.config.rows
+    }
+
+    fn name(&self) -> &'static str {
+        "classical-tp"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mds::classical::classical_mds;
+    use crate::strdist::euclidean;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn solver_inverts_known_system() {
+        // A = [[2,1],[1,3]], b = [5, 10] -> x = [1, 3]
+        let mut a = vec![2.0, 1.0, 1.0, 3.0];
+        let mut b = vec![5.0, 10.0];
+        let x = solve(&mut a, &mut b, 2).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solver_rejects_singular() {
+        let mut a = vec![1.0, 2.0, 2.0, 4.0];
+        let mut b = vec![1.0, 2.0];
+        assert!(solve(&mut a, &mut b, 2).is_none());
+    }
+
+    #[test]
+    fn embeds_euclidean_point_exactly() {
+        // For truly Euclidean data, Trosset-Priebe recovers the point (up
+        // to the configuration's own reconstruction error).
+        let mut rng = Rng::new(1);
+        let n = 30;
+        let truth = Matrix::random_normal(&mut rng, n, 3, 1.0);
+        let mut delta = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                delta.set(i, j, euclidean(truth.row(i), truth.row(j)) as f32);
+            }
+        }
+        let config = classical_mds(&delta, 3);
+        let ose = ClassicalOse::new(config.clone(), &delta);
+
+        // new point = a held-out location; its distances to all configured
+        let y_true: Vec<f32> = (0..3).map(|_| rng.next_normal() as f32).collect();
+        let deltas: Vec<f32> = (0..n)
+            .map(|i| euclidean(truth.row(i), &y_true) as f32)
+            .collect();
+        let y = ose.place(&deltas).unwrap();
+        // compare DISTANCES (configuration is rotated vs truth)
+        for i in (0..n).step_by(7) {
+            let got = euclidean(&y, config.row(i));
+            let want = deltas[i] as f64;
+            assert!(
+                (got - want).abs() < 0.15 * (1.0 + want),
+                "i={i}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn in_sample_point_maps_onto_itself() {
+        let mut rng = Rng::new(2);
+        let n = 25;
+        let truth = Matrix::random_normal(&mut rng, n, 4, 1.0);
+        let mut delta = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                delta.set(i, j, euclidean(truth.row(i), truth.row(j)) as f32);
+            }
+        }
+        let config = classical_mds(&delta, 4);
+        let ose = ClassicalOse::new(config.clone(), &delta);
+        let y = ose.place(delta.row(5)).unwrap();
+        for c in 0..4 {
+            assert!(
+                (y[c] - config.at(5, c)).abs() < 0.05,
+                "{y:?} vs {:?}",
+                config.row(5)
+            );
+        }
+    }
+}

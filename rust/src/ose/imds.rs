@@ -1,0 +1,165 @@
+//! I-MDS interpolation baseline (Bae, Choi, Qiu & Fox, HPDC'10) — the
+//! prior large-scale OSE the paper positions itself against (Sec. 3).
+//!
+//! For each new point, find its k nearest neighbours among the landmarks
+//! (by original-space dissimilarity), then place the point by majorizing
+//! the stress to those k neighbours only (the paper's Eq. 2 restricted to
+//! the neighbour set, which is exactly Bae et al.'s per-point SMACOF).
+//!
+//! The limitations the paper calls out are visible in this implementation:
+//! accuracy depends on k, and the placement ignores all non-neighbour
+//! landmarks (global structure), which costs accuracy on non-Euclidean
+//! string data — quantified by the `ose-baselines` ablation bench.
+
+use anyhow::Result;
+
+use crate::mds::Matrix;
+
+use super::optimise::{embed_point, OseOptConfig};
+use super::OseMethod;
+
+#[derive(Clone, Debug)]
+pub struct ImdsConfig {
+    /// Number of nearest landmarks used per point.
+    pub k: usize,
+    pub opt: OseOptConfig,
+}
+
+impl Default for ImdsConfig {
+    fn default() -> Self {
+        Self { k: 10, opt: OseOptConfig::default() }
+    }
+}
+
+/// I-MDS interpolation over a fixed landmark configuration.
+pub struct Imds {
+    pub landmarks: Matrix,
+    pub cfg: ImdsConfig,
+}
+
+impl Imds {
+    /// Place one point from its distances to ALL landmarks (the method
+    /// itself then restricts to the k nearest).
+    pub fn place(&self, deltas: &[f32]) -> Vec<f32> {
+        assert_eq!(deltas.len(), self.landmarks.rows);
+        let k = self.cfg.k.min(self.landmarks.rows).max(1);
+        // indices of the k smallest dissimilarities
+        let mut idx: Vec<usize> = (0..deltas.len()).collect();
+        idx.sort_by(|&a, &b| deltas[a].partial_cmp(&deltas[b]).unwrap());
+        idx.truncate(k);
+        // restricted landmark set + dissimilarities
+        let sub = self.landmarks.select_rows(&idx);
+        let sub_d: Vec<f32> = idx.iter().map(|&i| deltas[i]).collect();
+        // init at the mean of the neighbour positions (Bae et al.), plus a
+        // deterministic nudge: starting exactly ON an anchor is a stationary
+        // point of Eq. 2 (d = 0 zeroes the gradient) and would never move
+        let k_dim = self.landmarks.cols;
+        let mut y0 = vec![0.0f32; k_dim];
+        for &i in &idx {
+            for (c, v) in y0.iter_mut().enumerate() {
+                *v += self.landmarks.at(i, c) / k as f32;
+            }
+        }
+        y0[0] += 1e-3;
+        embed_point(&sub, &sub_d, Some(&y0), &self.cfg.opt).coords
+    }
+}
+
+impl OseMethod for Imds {
+    fn embed(&mut self, deltas: &Matrix) -> Result<Matrix> {
+        anyhow::ensure!(deltas.cols == self.landmarks.rows, "bad input width");
+        let mut out = Matrix::zeros(deltas.rows, self.landmarks.cols);
+        for r in 0..deltas.rows {
+            let y = self.place(deltas.row(r));
+            out.row_mut(r).copy_from_slice(&y);
+        }
+        Ok(out)
+    }
+
+    fn dim(&self) -> usize {
+        self.landmarks.cols
+    }
+
+    fn landmarks(&self) -> usize {
+        self.landmarks.rows
+    }
+
+    fn name(&self) -> &'static str {
+        "imds-knn"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strdist::euclidean;
+    use crate::util::prng::Rng;
+
+    fn setup(seed: u64, l: usize, k: usize) -> (Matrix, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let lm = Matrix::random_normal(&mut rng, l, k, 1.0);
+        let target: Vec<f32> = (0..k).map(|_| rng.next_normal() as f32 * 0.5).collect();
+        let deltas: Vec<f32> = (0..l)
+            .map(|i| euclidean(lm.row(i), &target) as f32)
+            .collect();
+        (lm, target, deltas)
+    }
+
+    #[test]
+    fn recovers_point_with_enough_neighbours() {
+        let (lm, target, deltas) = setup(1, 40, 3);
+        let imds = Imds {
+            landmarks: lm,
+            cfg: ImdsConfig { k: 15, opt: OseOptConfig { max_iters: 2000, rel_tol: 1e-12 } },
+        };
+        let y = imds.place(&deltas);
+        for c in 0..3 {
+            assert!((y[c] - target[c]).abs() < 0.15, "{y:?} vs {target:?}");
+        }
+    }
+
+    #[test]
+    fn k_one_snaps_near_nearest_landmark() {
+        let (lm, _, deltas) = setup(2, 20, 3);
+        let nearest = (0..20)
+            .min_by(|&a, &b| deltas[a].partial_cmp(&deltas[b]).unwrap())
+            .unwrap();
+        let imds = Imds {
+            landmarks: lm.clone(),
+            cfg: ImdsConfig { k: 1, ..Default::default() },
+        };
+        let y = imds.place(&deltas);
+        // with a single anchor the point lies on the sphere around it
+        let d = euclidean(&y, lm.row(nearest));
+        assert!((d - deltas[nearest] as f64).abs() < 1e-2, "d={d}");
+    }
+
+    #[test]
+    fn trait_impl_batches() {
+        let (lm, _, deltas) = setup(3, 25, 4);
+        let mut m = Imds { landmarks: lm, cfg: ImdsConfig::default() };
+        let batch = Matrix::from_rows(&[deltas.clone(), deltas.clone()]);
+        let y = m.embed(&batch).unwrap();
+        assert_eq!((y.rows, y.cols), (2, 4));
+        assert_eq!(y.row(0), y.row(1));
+        assert_eq!(m.name(), "imds-knn");
+    }
+
+    #[test]
+    fn more_neighbours_cannot_hurt_on_realizable_data() {
+        let (lm, target, deltas) = setup(4, 60, 5);
+        let err_of = |k: usize| {
+            let imds = Imds {
+                landmarks: lm.clone(),
+                cfg: ImdsConfig {
+                    k,
+                    opt: OseOptConfig { max_iters: 1500, rel_tol: 1e-12 },
+                },
+            };
+            let y = imds.place(&deltas);
+            euclidean(&y, &target)
+        };
+        // realizable geometry: k=30 must beat k=2 clearly
+        assert!(err_of(30) < err_of(2) + 1e-6);
+    }
+}

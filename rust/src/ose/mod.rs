@@ -1,0 +1,132 @@
+//! Out-of-sample embedding methods (the paper's contribution, Sec. 4):
+//! the optimisation method (Eq. 2) and the neural-network method, behind a
+//! single [`OseMethod`] interface the coordinator routes requests to.
+
+pub mod classical_ose;
+pub mod imds;
+pub mod optimise;
+
+pub use classical_ose::ClassicalOse;
+pub use imds::{Imds, ImdsConfig};
+pub use optimise::{embed_batch, embed_point, OseOptConfig, OsePoint};
+
+use crate::mds::Matrix;
+
+/// A strategy for mapping new objects into an existing configuration.
+/// Inputs are always the distances from each new object to the landmarks
+/// (B x L); output is the B x K coordinates.
+pub trait OseMethod: Send {
+    /// Embed a batch of new points given their landmark-distance rows.
+    fn embed(&mut self, deltas: &Matrix) -> anyhow::Result<Matrix>;
+
+    /// Embedding dimension K.
+    fn dim(&self) -> usize;
+
+    /// Number of landmarks L this method expects.
+    fn landmarks(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust optimisation method (the serial R-protocol baseline).
+pub struct RustOptimise {
+    pub landmarks: Matrix,
+    pub cfg: OseOptConfig,
+}
+
+impl OseMethod for RustOptimise {
+    fn embed(&mut self, deltas: &Matrix) -> anyhow::Result<Matrix> {
+        anyhow::ensure!(
+            deltas.cols == self.landmarks.rows,
+            "expected {} landmark distances, got {}",
+            self.landmarks.rows,
+            deltas.cols
+        );
+        Ok(embed_batch(&self.landmarks, deltas, &self.cfg))
+    }
+
+    fn dim(&self) -> usize {
+        self.landmarks.cols
+    }
+
+    fn landmarks(&self) -> usize {
+        self.landmarks.rows
+    }
+
+    fn name(&self) -> &'static str {
+        "opt-rust"
+    }
+}
+
+/// Pure-Rust NN method over trained parameters.
+pub struct RustNn {
+    pub params: crate::nn::MlpParams,
+}
+
+impl OseMethod for RustNn {
+    fn embed(&mut self, deltas: &Matrix) -> anyhow::Result<Matrix> {
+        anyhow::ensure!(
+            deltas.cols == self.params.shape.input,
+            "expected {} landmark distances, got {}",
+            self.params.shape.input,
+            deltas.cols
+        );
+        Ok(crate::nn::forward(&self.params, deltas))
+    }
+
+    fn dim(&self) -> usize {
+        self.params.shape.output
+    }
+
+    fn landmarks(&self) -> usize {
+        self.params.shape.input
+    }
+
+    fn name(&self) -> &'static str {
+        "nn-rust"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{MlpParams, MlpShape};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn trait_objects_embed_with_consistent_shapes() {
+        let mut rng = Rng::new(1);
+        let lm = Matrix::random_normal(&mut rng, 12, 3, 1.0);
+        let deltas = Matrix::from_vec(
+            5,
+            12,
+            (0..60).map(|_| rng.next_f32() + 0.5).collect(),
+        );
+
+        let mut methods: Vec<Box<dyn OseMethod>> = vec![
+            Box::new(RustOptimise { landmarks: lm, cfg: OseOptConfig::default() }),
+            Box::new(RustNn {
+                params: MlpParams::init(
+                    &MlpShape { input: 12, hidden: [8, 8, 8], output: 3 },
+                    &mut rng,
+                ),
+            }),
+        ];
+        for m in methods.iter_mut() {
+            assert_eq!(m.landmarks(), 12);
+            assert_eq!(m.dim(), 3);
+            let y = m.embed(&deltas).unwrap();
+            assert_eq!((y.rows, y.cols), (5, 3), "{}", m.name());
+            assert!(y.data.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn embed_rejects_wrong_width() {
+        let mut rng = Rng::new(2);
+        let lm = Matrix::random_normal(&mut rng, 12, 3, 1.0);
+        let mut m = RustOptimise { landmarks: lm, cfg: OseOptConfig::default() };
+        let bad = Matrix::zeros(2, 11);
+        assert!(m.embed(&bad).is_err());
+    }
+}

@@ -1,0 +1,230 @@
+//! The paper's optimisation OSE (Sec. 4.1) in its original one-point-at-a-
+//! time form: minimise Eq. 2 for a single new object against the fixed
+//! landmarks. The update is the per-point majorization step, which (see
+//! `python/compile/model.py`) equals gradient descent with lr = 1/(2L) and
+//! descends monotonically — matching the R `optim` result without line
+//! searches.
+//!
+//! This pure-Rust path is (a) the single-query serving fallback, (b) the
+//! baseline that stands in for the authors' R implementation in the RT
+//! figures, and (c) the oracle the batched `ose_opt` PJRT artifact is
+//! cross-checked against.
+
+use crate::mds::Matrix;
+
+#[derive(Clone, Debug)]
+pub struct OseOptConfig {
+    /// Maximum majorization iterations per point.
+    pub max_iters: usize,
+    /// Stop when the objective's relative improvement drops below this.
+    pub rel_tol: f64,
+}
+
+impl Default for OseOptConfig {
+    fn default() -> Self {
+        Self { max_iters: 200, rel_tol: 1e-7 }
+    }
+}
+
+/// Objective (Eq. 2) and gradient at `y` for landmarks `lm` (L x K) and
+/// dissimilarities `delta` (len L).
+pub fn objective_and_grad(lm: &Matrix, delta: &[f32], y: &[f32]) -> (f64, Vec<f64>) {
+    let k = lm.cols;
+    let mut obj = 0.0f64;
+    let mut grad = vec![0.0f64; k];
+    for i in 0..lm.rows {
+        let li = lm.row(i);
+        let mut sq = 0.0f64;
+        for c in 0..k {
+            let d = y[c] as f64 - li[c] as f64;
+            sq += d * d;
+        }
+        let d = sq.sqrt();
+        let resid = d - delta[i] as f64;
+        obj += resid * resid;
+        if d > 1e-12 {
+            let coef = 2.0 * resid / d;
+            for c in 0..k {
+                grad[c] += coef * (y[c] as f64 - li[c] as f64);
+            }
+        }
+    }
+    (obj, grad)
+}
+
+/// Result of one embedding.
+#[derive(Clone, Debug)]
+pub struct OsePoint {
+    pub coords: Vec<f32>,
+    /// Final Eq.-2 objective value.
+    pub objective: f64,
+    pub iters: usize,
+}
+
+/// Embed one new point. `y0 = None` uses the paper's all-zeros initial
+/// guess (Sec. 6 discusses this choice).
+pub fn embed_point(
+    lm: &Matrix,
+    delta: &[f32],
+    y0: Option<&[f32]>,
+    cfg: &OseOptConfig,
+) -> OsePoint {
+    assert_eq!(lm.rows, delta.len());
+    let k = lm.cols;
+    let l = lm.rows as f64;
+    let mut y: Vec<f32> = match y0 {
+        Some(v) => v.to_vec(),
+        None => vec![0.0; k],
+    };
+    let lr = 1.0 / (2.0 * l); // majorization step
+    let mut prev = f64::INFINITY;
+    let mut obj = 0.0;
+    let mut iters = 0;
+    for it in 0..cfg.max_iters {
+        let (o, grad) = objective_and_grad(lm, delta, &y);
+        obj = o;
+        iters = it + 1;
+        if prev.is_finite() && (prev - o) / prev.max(1e-30) < cfg.rel_tol {
+            break;
+        }
+        prev = o;
+        for c in 0..k {
+            y[c] -= (lr * grad[c]) as f32;
+        }
+    }
+    OsePoint { coords: y, objective: obj, iters }
+}
+
+/// Embed a batch serially (the R protocol: "both methods map a single
+/// out-of-sample point at a time"). Returns an m x K matrix.
+pub fn embed_batch(lm: &Matrix, deltas: &Matrix, cfg: &OseOptConfig) -> Matrix {
+    assert_eq!(deltas.cols, lm.rows);
+    let mut out = Matrix::zeros(deltas.rows, lm.cols);
+    for r in 0..deltas.rows {
+        let p = embed_point(lm, deltas.row(r), None, cfg);
+        out.row_mut(r).copy_from_slice(&p.coords);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strdist::euclidean;
+    use crate::util::prng::Rng;
+
+    fn landmarks(seed: u64, l: usize, k: usize) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::random_normal(&mut rng, l, k, 1.0)
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let lm = landmarks(1, 20, 4);
+        let delta: Vec<f32> = (0..20).map(|i| 0.5 + (i as f32) * 0.1).collect();
+        let y = [0.3f32, -0.2, 0.7, 0.1];
+        let (_, grad) = objective_and_grad(&lm, &delta, &y);
+        let h = 1e-4f32;
+        for c in 0..4 {
+            let mut yp = y;
+            yp[c] += h;
+            let mut ym = y;
+            ym[c] -= h;
+            let (op, _) = objective_and_grad(&lm, &delta, &yp);
+            let (om, _) = objective_and_grad(&lm, &delta, &ym);
+            let fd = (op - om) / (2.0 * h as f64);
+            assert!(
+                (fd - grad[c]).abs() < 1e-2 * (1.0 + grad[c].abs()),
+                "c={c}: fd={fd} grad={}",
+                grad[c]
+            );
+        }
+    }
+
+    #[test]
+    fn recovers_exact_position_for_realisable_deltas() {
+        let lm = landmarks(2, 50, 7);
+        let mut rng = Rng::new(3);
+        let target: Vec<f32> = (0..7).map(|_| rng.next_normal() as f32).collect();
+        let delta: Vec<f32> = (0..50)
+            .map(|i| euclidean(lm.row(i), &target) as f32)
+            .collect();
+        let p = embed_point(&lm, &delta, None, &OseOptConfig {
+            max_iters: 3000,
+            rel_tol: 1e-14,
+        });
+        assert!(p.objective < 1e-6, "objective {}", p.objective);
+        for c in 0..7 {
+            assert!(
+                (p.coords[c] - target[c]).abs() < 0.02,
+                "coord {c}: {} vs {}",
+                p.coords[c],
+                target[c]
+            );
+        }
+    }
+
+    #[test]
+    fn objective_descends_monotonically() {
+        let lm = landmarks(4, 30, 5);
+        let delta: Vec<f32> = (0..30).map(|i| 1.0 + 0.05 * i as f32).collect();
+        let mut y = vec![0.0f32; 5];
+        let lr = 1.0 / 60.0;
+        let mut prev = f64::INFINITY;
+        for _ in 0..100 {
+            let (o, g) = objective_and_grad(&lm, &delta, &y);
+            assert!(o <= prev + 1e-9, "{prev} -> {o}");
+            prev = o;
+            for c in 0..5 {
+                y[c] -= (lr * g[c]) as f32;
+            }
+        }
+    }
+
+    #[test]
+    fn in_sample_landmark_embeds_onto_itself() {
+        let lm = landmarks(5, 40, 7);
+        let target = lm.row(7).to_vec();
+        let delta: Vec<f32> = (0..40)
+            .map(|i| euclidean(lm.row(i), &target) as f32)
+            .collect();
+        let p = embed_point(&lm, &delta, None, &OseOptConfig {
+            max_iters: 5000,
+            rel_tol: 1e-15,
+        });
+        for c in 0..7 {
+            assert!((p.coords[c] - target[c]).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn batch_matches_pointwise() {
+        let lm = landmarks(6, 25, 3);
+        let mut rng = Rng::new(7);
+        let deltas = Matrix::from_vec(
+            4,
+            25,
+            (0..100).map(|_| rng.next_f32() * 2.0 + 0.5).collect(),
+        );
+        let cfg = OseOptConfig::default();
+        let batch = embed_batch(&lm, &deltas, &cfg);
+        for r in 0..4 {
+            let p = embed_point(&lm, deltas.row(r), None, &cfg);
+            assert_eq!(batch.row(r), p.coords.as_slice());
+        }
+    }
+
+    #[test]
+    fn custom_initial_guess_is_used() {
+        // with only one iteration, different starting points must lead to
+        // different iterates (Sec. 6 discusses initial-guess sensitivity)
+        let lm = landmarks(8, 10, 2);
+        let delta = vec![1.0f32; 10];
+        let cfg = OseOptConfig { max_iters: 1, rel_tol: 0.0 };
+        let from_far = embed_point(&lm, &delta, Some(&[5.0, 5.0]), &cfg);
+        let from_zero = embed_point(&lm, &delta, None, &cfg);
+        assert_ne!(from_far.coords, from_zero.coords);
+        // and iters reports the single step taken
+        assert_eq!(from_far.iters, 1);
+    }
+}

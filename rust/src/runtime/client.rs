@@ -1,0 +1,316 @@
+//! PJRT runtime: load HLO-text artifacts, compile them on the CPU client,
+//! execute them with `Matrix`/scalar inputs. Compilation is lazy and cached
+//! per artifact (one compiled executable per model variant).
+//!
+//! NOTE ON THREADING: the `xla` crate's `PjRtClient` is `Rc`-based and not
+//! `Send`; a `Runtime` must stay on the thread that created it. The
+//! coordinator runs one dedicated executor thread that owns the `Runtime`
+//! (see `handle.rs`), which is also the natural serving architecture — a
+//! single compute stream fed by the batcher.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::mds::Matrix;
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// An input argument for an artifact execution.
+pub enum ArgValue<'a> {
+    Scalar(f32),
+    Mat(&'a Matrix),
+    /// 1-D vector.
+    Vec1(&'a [f32]),
+}
+
+impl ArgValue<'_> {
+    fn shape(&self) -> Vec<usize> {
+        match self {
+            ArgValue::Scalar(_) => vec![],
+            ArgValue::Mat(m) => vec![m.rows, m.cols],
+            ArgValue::Vec1(v) => vec![v.len()],
+        }
+    }
+}
+
+/// One output tensor: shape + row-major f32 data.
+#[derive(Clone, Debug)]
+pub struct OutValue {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl OutValue {
+    pub fn scalar(&self) -> f32 {
+        debug_assert_eq!(self.data.len(), 1);
+        self.data[0]
+    }
+
+    pub fn into_matrix(self) -> Matrix {
+        match self.shape.len() {
+            2 => Matrix::from_vec(self.shape[0], self.shape[1], self.data),
+            1 => Matrix::from_vec(self.shape[0], 1, self.data),
+            0 => Matrix::from_vec(1, 1, self.data),
+            _ => panic!("into_matrix on rank-{} output", self.shape.len()),
+        }
+    }
+}
+
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    compiled: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Device-resident argument sets (e.g. model weights) keyed by a
+    /// caller-chosen binding key: uploaded once, reused every execution.
+    bound: RefCell<HashMap<String, Vec<(usize, Rc<xla::PjRtBuffer>)>>>,
+}
+
+impl Runtime {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "runtime: platform={} artifacts={}",
+            client.platform_name(),
+            manifest.artifacts.len()
+        );
+        Ok(Runtime {
+            manifest,
+            client,
+            compiled: RefCell::new(HashMap::new()),
+            bound: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("unknown artifact {name:?}"))
+    }
+
+    /// Compile (or fetch the cached executable for) an artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.borrow().get(name) {
+            return Ok(Rc::clone(exe));
+        }
+        let spec = self.spec(name)?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        log::debug!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        let exe = Rc::new(exe);
+        self.compiled
+            .borrow_mut()
+            .insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (for tests/metrics).
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.borrow().len()
+    }
+
+    /// Execute an artifact with shape-checked inputs; returns all outputs.
+    pub fn execute(&self, name: &str, args: &[ArgValue<'_>]) -> Result<Vec<OutValue>> {
+        let spec = self.spec(name)?.clone();
+        if args.len() != spec.args.len() {
+            bail!(
+                "{name}: expected {} args, got {}",
+                spec.args.len(),
+                args.len()
+            );
+        }
+        for (i, (given, want)) in args.iter().zip(spec.args.iter()).enumerate() {
+            if given.shape() != want.shape {
+                bail!(
+                    "{name}: arg {i} ({}) shape {:?} != expected {:?}",
+                    want.name,
+                    given.shape(),
+                    want.shape
+                );
+            }
+        }
+        // All inputs go through explicitly Rust-owned PjRtBuffers +
+        // execute_b: buffers are freed by Drop when this frame returns.
+        // (The Literal-arg execute() path retains per-call allocations in
+        // the C wrapper — observed as unbounded RSS growth over thousands
+        // of training-step executions.)
+        let buffers = args
+            .iter()
+            .map(|a| self.upload(a))
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = buffers.iter().collect();
+        let exe = self.executable(name)?;
+        let outputs = exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
+        let result = outputs[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: the single result is a tuple
+        let parts = result.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (part, os) in parts.into_iter().zip(spec.outputs.iter()) {
+            let data = part.to_vec::<f32>().context("reading output as f32")?;
+            let expect: usize = os.shape.iter().product();
+            if data.len() != expect {
+                bail!(
+                    "{name}: output element count {} != manifest {}",
+                    data.len(),
+                    expect
+                );
+            }
+            out.push(OutValue { shape: os.shape.clone(), data });
+        }
+        Ok(out)
+    }
+
+    /// Host -> device transfer of one argument (freed by Drop).
+    fn upload(&self, v: &ArgValue<'_>) -> Result<xla::PjRtBuffer> {
+        Ok(match v {
+            ArgValue::Scalar(x) => {
+                self.client.buffer_from_host_buffer::<f32>(&[*x], &[], None)?
+            }
+            ArgValue::Mat(m) => self.client.buffer_from_host_buffer::<f32>(
+                &m.data,
+                &[m.rows, m.cols],
+                None,
+            )?,
+            ArgValue::Vec1(v) => {
+                self.client.buffer_from_host_buffer::<f32>(v, &[v.len()], None)?
+            }
+        })
+    }
+
+    /// Upload an argument set to the device once, under `key`. Each entry
+    /// is (argument position, value). Subsequent `execute_bound` calls
+    /// reuse the device buffers — this removes the per-request host->device
+    /// copy of model weights from the serving hot path.
+    pub fn bind(&self, key: &str, args: &[(usize, ArgValue<'_>)]) -> Result<()> {
+        let mut bufs = Vec::with_capacity(args.len());
+        for (pos, v) in args {
+            bufs.push((*pos, Rc::new(self.upload(v)?)));
+        }
+        self.bound.borrow_mut().insert(key.to_string(), bufs);
+        Ok(())
+    }
+
+    pub fn unbind(&self, key: &str) {
+        self.bound.borrow_mut().remove(key);
+    }
+
+    pub fn has_binding(&self, key: &str) -> bool {
+        self.bound.borrow().contains_key(key)
+    }
+
+    /// Execute with a mix of device-resident (bound) and fresh host
+    /// arguments. `dynamic` supplies (position, value) for every argument
+    /// position not covered by the binding.
+    pub fn execute_bound(
+        &self,
+        name: &str,
+        key: &str,
+        dynamic: &[(usize, ArgValue<'_>)],
+    ) -> Result<Vec<OutValue>> {
+        let spec = self.spec(name)?.clone();
+        let nargs = spec.args.len();
+        let mut slots: Vec<Option<Rc<xla::PjRtBuffer>>> = vec![None; nargs];
+        {
+            let bound = self.bound.borrow();
+            let set = bound
+                .get(key)
+                .with_context(|| format!("no binding {key:?}"))?;
+            for (pos, buf) in set {
+                anyhow::ensure!(*pos < nargs, "bound position {pos} out of range");
+                slots[*pos] = Some(Rc::clone(buf));
+            }
+        }
+        for (pos, v) in dynamic {
+            anyhow::ensure!(*pos < nargs, "dynamic position {pos} out of range");
+            if v.shape() != spec.args[*pos].shape {
+                anyhow::bail!(
+                    "{name}: arg {pos} shape {:?} != expected {:?}",
+                    v.shape(),
+                    spec.args[*pos].shape
+                );
+            }
+            slots[*pos] = Some(Rc::new(self.upload(v)?));
+        }
+        let buffers: Vec<Rc<xla::PjRtBuffer>> = slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| s.with_context(|| format!("{name}: arg {i} unset")))
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = buffers.iter().map(|b| b.as_ref()).collect();
+        let exe = self.executable(name)?;
+        let outputs = exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
+        let result = outputs[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = result.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != spec.outputs.len() {
+            bail!("{name}: expected {} outputs, got {}", spec.outputs.len(), parts.len());
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (part, os) in parts.into_iter().zip(spec.outputs.iter()) {
+            let data = part.to_vec::<f32>().context("reading output as f32")?;
+            out.push(OutValue { shape: os.shape.clone(), data });
+        }
+        Ok(out)
+    }
+
+    /// Convenience: find by graph + dims, then execute.
+    pub fn execute_graph(
+        &self,
+        graph: &str,
+        constraints: &[(&str, usize)],
+        args: &[ArgValue<'_>],
+    ) -> Result<Vec<OutValue>> {
+        let name = self
+            .manifest
+            .find(graph, constraints)
+            .with_context(|| format!("no artifact for {graph} {constraints:?}"))?
+            .name
+            .clone();
+        self.execute(&name, args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arg_shapes() {
+        let m = Matrix::zeros(3, 4);
+        assert_eq!(ArgValue::Mat(&m).shape(), vec![3, 4]);
+        assert_eq!(ArgValue::Scalar(1.0).shape(), Vec::<usize>::new());
+        assert_eq!(ArgValue::Vec1(&[1.0, 2.0]).shape(), vec![2]);
+    }
+
+    #[test]
+    fn out_value_conversions() {
+        let o = OutValue { shape: vec![2, 2], data: vec![1.0, 2.0, 3.0, 4.0] };
+        let m = o.into_matrix();
+        assert_eq!(m.at(1, 0), 3.0);
+        let s = OutValue { shape: vec![], data: vec![5.0] };
+        assert_eq!(s.scalar(), 5.0);
+    }
+}

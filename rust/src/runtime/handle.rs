@@ -1,0 +1,215 @@
+//! Cross-thread access to the (non-`Send`) PJRT runtime: a dedicated
+//! executor thread owns the [`Runtime`]; clonable [`RuntimeHandle`]s submit
+//! jobs over a channel and block on a reply. This single compute stream is
+//! the stage the dynamic batcher feeds.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::mds::Matrix;
+
+use super::client::{ArgValue, OutValue, Runtime};
+use super::manifest::Manifest;
+
+/// Owned argument (must cross the channel).
+#[derive(Clone, Debug)]
+pub enum OwnedArg {
+    Scalar(f32),
+    Mat(Matrix),
+    Vec1(Vec<f32>),
+}
+
+impl OwnedArg {
+    fn as_ref(&self) -> ArgValue<'_> {
+        match self {
+            OwnedArg::Scalar(x) => ArgValue::Scalar(*x),
+            OwnedArg::Mat(m) => ArgValue::Mat(m),
+            OwnedArg::Vec1(v) => ArgValue::Vec1(v),
+        }
+    }
+}
+
+enum Job {
+    Execute {
+        name: String,
+        args: Vec<OwnedArg>,
+        reply: Sender<Result<Vec<OutValue>>>,
+    },
+    /// Upload an argument set to the device once under a binding key.
+    Bind {
+        key: String,
+        args: Vec<(usize, OwnedArg)>,
+        reply: Sender<Result<()>>,
+    },
+    /// Execute with a device-resident binding + fresh dynamic args.
+    ExecuteBound {
+        name: String,
+        key: String,
+        dynamic: Vec<(usize, OwnedArg)>,
+        reply: Sender<Result<Vec<OutValue>>>,
+    },
+    /// Pre-compile an artifact (warmup).
+    Compile { name: String, reply: Sender<Result<()>> },
+    Shutdown,
+}
+
+/// Handle to the executor thread. Cloning is cheap; all clones feed the
+/// same single compute stream.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Job>,
+    manifest: std::sync::Arc<Manifest>,
+}
+
+// Sender<Job> is Send; Manifest is plain data.
+pub struct RuntimeThread {
+    handle: Option<JoinHandle<()>>,
+    tx: Sender<Job>,
+    manifest: std::sync::Arc<Manifest>,
+}
+
+impl RuntimeThread {
+    /// Spawn the executor thread and wait until the PJRT client is up.
+    pub fn spawn(artifact_dir: &Path) -> Result<RuntimeThread> {
+        let dir: PathBuf = artifact_dir.to_path_buf();
+        // parse the manifest on the caller thread too (cheap, Send) so
+        // handles can answer shape questions without a round-trip
+        let manifest = std::sync::Arc::new(Manifest::load(&dir)?);
+        let (tx, rx) = channel::<Job>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || {
+                let rt = match Runtime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Execute { name, args, reply } => {
+                            let refs: Vec<ArgValue<'_>> =
+                                args.iter().map(|a| a.as_ref()).collect();
+                            let _ = reply.send(rt.execute(&name, &refs));
+                        }
+                        Job::Bind { key, args, reply } => {
+                            let refs: Vec<(usize, ArgValue<'_>)> = args
+                                .iter()
+                                .map(|(p, a)| (*p, a.as_ref()))
+                                .collect();
+                            let _ = reply.send(rt.bind(&key, &refs));
+                        }
+                        Job::ExecuteBound { name, key, dynamic, reply } => {
+                            let refs: Vec<(usize, ArgValue<'_>)> = dynamic
+                                .iter()
+                                .map(|(p, a)| (*p, a.as_ref()))
+                                .collect();
+                            let _ = reply.send(rt.execute_bound(&name, &key, &refs));
+                        }
+                        Job::Compile { name, reply } => {
+                            let _ = reply.send(rt.executable(&name).map(|_| ()));
+                        }
+                        Job::Shutdown => break,
+                    }
+                }
+            })
+            .context("spawning pjrt-executor")?;
+        ready_rx
+            .recv()
+            .context("executor thread died during startup")??;
+        Ok(RuntimeThread { handle: Some(handle), tx, manifest })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        RuntimeHandle {
+            tx: self.tx.clone(),
+            manifest: std::sync::Arc::clone(&self.manifest),
+        }
+    }
+}
+
+impl Drop for RuntimeThread {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl RuntimeHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact by name (blocking).
+    pub fn execute(&self, name: &str, args: Vec<OwnedArg>) -> Result<Vec<OutValue>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::Execute { name: name.to_string(), args, reply })
+            .context("executor thread gone")?;
+        rx.recv().context("executor thread dropped the reply")?
+    }
+
+    /// Execute by graph family + dim constraints (blocking).
+    pub fn execute_graph(
+        &self,
+        graph: &str,
+        constraints: &[(&str, usize)],
+        args: Vec<OwnedArg>,
+    ) -> Result<Vec<OutValue>> {
+        let name = self
+            .manifest
+            .find(graph, constraints)
+            .with_context(|| format!("no artifact for {graph} {constraints:?}"))?
+            .name
+            .clone();
+        self.execute(&name, args)
+    }
+
+    /// Upload an argument set to the device once (e.g. model weights).
+    pub fn bind(&self, key: &str, args: Vec<(usize, OwnedArg)>) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::Bind { key: key.to_string(), args, reply })
+            .context("executor thread gone")?;
+        rx.recv().context("executor thread dropped the reply")?
+    }
+
+    /// Execute with a previously bound argument set + dynamic args.
+    pub fn execute_bound(
+        &self,
+        name: &str,
+        key: &str,
+        dynamic: Vec<(usize, OwnedArg)>,
+    ) -> Result<Vec<OutValue>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::ExecuteBound {
+                name: name.to_string(),
+                key: key.to_string(),
+                dynamic,
+                reply,
+            })
+            .context("executor thread gone")?;
+        rx.recv().context("executor thread dropped the reply")?
+    }
+
+    /// Pre-compile (warm) an artifact so the first request doesn't pay
+    /// compilation latency.
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::Compile { name: name.to_string(), reply })
+            .context("executor thread gone")?;
+        rx.recv().context("executor thread dropped the reply")?
+    }
+}

@@ -1,0 +1,257 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Rust discovers executables exclusively through
+//! `artifacts/manifest.json` — file names are never guessed.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct OutSpec {
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Graph family: lsmds_steps | ose_opt | mlp_fwd | mlp_train_step | mlp_loss.
+    pub graph: String,
+    pub scale: String,
+    pub file: PathBuf,
+    pub dims: BTreeMap<String, usize>,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<OutSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn dim(&self, key: &str) -> Option<usize> {
+        self.dims.get(key).copied()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub k_dim: usize,
+    pub hidden: Vec<usize>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let root = Json::parse(text).context("parsing manifest.json")?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_usize)
+            .context("manifest: missing version")?;
+        if version != 1 {
+            bail!("manifest version {version} unsupported (expected 1)");
+        }
+        let k_dim = root
+            .get("k_dim")
+            .and_then(Json::as_usize)
+            .context("manifest: missing k_dim")?;
+        let hidden = root
+            .get("hidden")
+            .and_then(Json::as_arr)
+            .context("manifest: missing hidden")?
+            .iter()
+            .map(|h| h.as_usize().context("bad hidden entry"))
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut artifacts = Vec::new();
+        for entry in root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest: missing artifacts")?
+        {
+            artifacts.push(parse_entry(entry, dir)?);
+        }
+        Ok(Manifest { k_dim, hidden, artifacts })
+    }
+
+    /// Find the artifact of a graph family whose dims contain all the given
+    /// (key, value) constraints.
+    pub fn find(&self, graph: &str, constraints: &[(&str, usize)]) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| {
+            a.graph == graph
+                && constraints.iter().all(|(k, v)| a.dim(k) == Some(*v))
+        })
+    }
+
+    /// All values of one dim across a graph family (e.g. available batch
+    /// sizes of `mlp_fwd` at a given L) — sorted ascending.
+    pub fn available_dims(
+        &self,
+        graph: &str,
+        key: &str,
+        constraints: &[(&str, usize)],
+    ) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.graph == graph
+                    && constraints.iter().all(|(k, v)| a.dim(k) == Some(*v))
+            })
+            .filter_map(|a| a.dim(key))
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+fn parse_entry(entry: &Json, dir: &Path) -> Result<ArtifactSpec> {
+    let name = entry
+        .get("name")
+        .and_then(Json::as_str)
+        .context("artifact: missing name")?
+        .to_string();
+    let graph = entry
+        .get("graph")
+        .and_then(Json::as_str)
+        .context("artifact: missing graph")?
+        .to_string();
+    let scale = entry
+        .get("scale")
+        .and_then(Json::as_str)
+        .unwrap_or("unknown")
+        .to_string();
+    let file = dir.join(
+        entry
+            .get("file")
+            .and_then(Json::as_str)
+            .context("artifact: missing file")?,
+    );
+
+    let mut dims = BTreeMap::new();
+    if let Some(Json::Obj(m)) = entry.get("dims") {
+        for (k, v) in m {
+            dims.insert(
+                k.clone(),
+                v.as_usize().with_context(|| format!("bad dim {k}"))?,
+            );
+        }
+    }
+
+    let parse_shape = |j: &Json| -> Result<Vec<usize>> {
+        j.get("shape")
+            .and_then(Json::as_arr)
+            .context("missing shape")?
+            .iter()
+            .map(|x| x.as_usize().context("bad shape entry"))
+            .collect()
+    };
+
+    let mut args = Vec::new();
+    for a in entry
+        .get("args")
+        .and_then(Json::as_arr)
+        .context("artifact: missing args")?
+    {
+        args.push(ArgSpec {
+            name: a
+                .get("name")
+                .and_then(Json::as_str)
+                .context("arg: missing name")?
+                .to_string(),
+            shape: parse_shape(a)?,
+        });
+    }
+
+    let mut outputs = Vec::new();
+    for o in entry
+        .get("outputs")
+        .and_then(Json::as_arr)
+        .context("artifact: missing outputs")?
+    {
+        outputs.push(OutSpec { shape: parse_shape(o)? });
+    }
+
+    Ok(ArtifactSpec { name, graph, scale, file, dims, args, outputs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "k_dim": 7, "hidden": [256, 128, 64],
+      "artifacts": [
+        {"name": "ose_opt__B8_K7_L32_T5", "graph": "ose_opt",
+         "scale": "smoke", "file": "ose_opt__B8_K7_L32_T5.hlo.txt",
+         "dims": {"B": 8, "K": 7, "L": 32, "T": 5},
+         "args": [{"name": "xl", "shape": [32, 7], "dtype": "f32"},
+                  {"name": "d", "shape": [8, 32], "dtype": "f32"},
+                  {"name": "y0", "shape": [8, 7], "dtype": "f32"},
+                  {"name": "lr", "shape": [], "dtype": "f32"}],
+         "outputs": [{"shape": [8, 7], "dtype": "f32"},
+                     {"shape": [8], "dtype": "f32"}]},
+        {"name": "ose_opt__B64_K7_L32_T5", "graph": "ose_opt",
+         "scale": "small", "file": "b.hlo.txt",
+         "dims": {"B": 64, "K": 7, "L": 32, "T": 5},
+         "args": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.k_dim, 7);
+        assert_eq!(m.hidden, vec![256, 128, 64]);
+        assert_eq!(m.artifacts.len(), 2);
+        let a = &m.artifacts[0];
+        assert_eq!(a.dim("L"), Some(32));
+        assert_eq!(a.args[0].shape, vec![32, 7]);
+        assert_eq!(a.args[3].shape, Vec::<usize>::new());
+        assert_eq!(a.outputs[1].shape, vec![8]);
+        assert!(a.file.starts_with("/tmp/a"));
+    }
+
+    #[test]
+    fn find_respects_constraints() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        let a = m.find("ose_opt", &[("L", 32), ("B", 8)]).unwrap();
+        assert_eq!(a.dim("B"), Some(8));
+        assert!(m.find("ose_opt", &[("L", 999)]).is_none());
+        assert!(m.find("nope", &[]).is_none());
+    }
+
+    #[test]
+    fn available_dims_sorted() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert_eq!(m.available_dims("ose_opt", "B", &[("L", 32)]), vec![8, 64]);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replacen("\"version\": 1", "\"version\": 9", 1);
+        assert!(Manifest::parse(&bad, Path::new("/x")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find("ose_opt", &[("L", 32)]).is_some());
+            assert_eq!(m.k_dim, 7);
+        }
+    }
+}

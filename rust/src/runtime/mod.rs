@@ -1,0 +1,19 @@
+//! PJRT runtime layer: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text + manifest) and executes them on the
+//! CPU PJRT client. The serving path never touches Python.
+
+pub mod client;
+pub mod handle;
+pub mod manifest;
+
+pub use client::{ArgValue, OutValue, Runtime};
+pub use handle::{OwnedArg, RuntimeHandle, RuntimeThread};
+pub use manifest::{ArtifactSpec, Manifest};
+
+/// Default artifact directory: `$LMDS_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("LMDS_ARTIFACTS") {
+        return p.into();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

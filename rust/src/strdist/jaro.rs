@@ -1,0 +1,141 @@
+//! Jaro and Jaro-Winkler similarity — the second string comparator family
+//! named by the paper (Sec. 2.2), equivalent to `stringdist(method="jw")`.
+//!
+//! Returned as *distances* in [0, 1] (1 - similarity) so they slot into the
+//! same `Dissimilarity` interface as the edit distances.
+
+/// Jaro similarity in [0, 1]; 1 means identical.
+pub fn jaro_similarity(a: &str, b: &str) -> f64 {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    if a.is_empty() || b.is_empty() {
+        return 0.0;
+    }
+    let window = (a.len().max(b.len()) / 2).saturating_sub(1);
+    let mut b_used = vec![false; b.len()];
+    let mut matches_a = Vec::with_capacity(a.len());
+
+    for (i, ca) in a.iter().enumerate() {
+        let lo = i.saturating_sub(window);
+        let hi = (i + window + 1).min(b.len());
+        for j in lo..hi {
+            if !b_used[j] && b[j] == *ca {
+                b_used[j] = true;
+                matches_a.push((i, j));
+                break;
+            }
+        }
+    }
+    let m = matches_a.len();
+    if m == 0 {
+        return 0.0;
+    }
+    // transpositions: matched chars of b in a-match order
+    let mut t = 0usize;
+    let mut b_seq: Vec<usize> = matches_a.iter().map(|&(_, j)| j).collect();
+    let b_sorted = {
+        let mut v = b_seq.clone();
+        v.sort_unstable();
+        v
+    };
+    // matches_a is already ordered by i; the b-side order determines t
+    b_seq.sort_by_key(|&j| {
+        matches_a.iter().position(|&(_, jj)| jj == j).unwrap()
+    });
+    for (x, y) in b_seq.iter().zip(b_sorted.iter()) {
+        if x != y {
+            t += 1;
+        }
+    }
+    let t = t as f64 / 2.0;
+    let m = m as f64;
+    (m / a.len() as f64 + m / b.len() as f64 + (m - t) / m) / 3.0
+}
+
+/// Jaro-Winkler similarity with the standard scaling p=0.1 and prefix cap 4.
+pub fn jaro_winkler_similarity(a: &str, b: &str) -> f64 {
+    let jaro = jaro_similarity(a, b);
+    let prefix = a
+        .chars()
+        .zip(b.chars())
+        .take(4)
+        .take_while(|(x, y)| x == y)
+        .count() as f64;
+    jaro + prefix * 0.1 * (1.0 - jaro)
+}
+
+/// Jaro distance = 1 - similarity.
+pub fn jaro_distance(a: &str, b: &str) -> f64 {
+    1.0 - jaro_similarity(a, b)
+}
+
+/// Jaro-Winkler distance = 1 - similarity.
+pub fn jaro_winkler_distance(a: &str, b: &str) -> f64 {
+    1.0 - jaro_winkler_similarity(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{prop_assert, property};
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-3
+    }
+
+    #[test]
+    fn textbook_values() {
+        // canonical examples used by Winkler / stringdist docs
+        assert!(close(jaro_similarity("MARTHA", "MARHTA"), 0.944_444));
+        assert!(close(jaro_similarity("DIXON", "DICKSONX"), 0.766_667));
+        assert!(close(jaro_similarity("JELLYFISH", "SMELLYFISH"), 0.896_296));
+        assert!(close(jaro_winkler_similarity("MARTHA", "MARHTA"), 0.961_111));
+        assert!(close(jaro_winkler_similarity("DIXON", "DICKSONX"), 0.813_333));
+    }
+
+    #[test]
+    fn edge_cases() {
+        assert_eq!(jaro_similarity("", ""), 1.0);
+        assert_eq!(jaro_similarity("a", ""), 0.0);
+        assert_eq!(jaro_similarity("abc", "abc"), 1.0);
+        assert_eq!(jaro_similarity("abc", "xyz"), 0.0);
+        assert_eq!(jaro_distance("abc", "abc"), 0.0);
+    }
+
+    #[test]
+    fn properties() {
+        property("jaro in [0,1], symmetric, identity", 300, |g| {
+            let a = g.unicode_string(0, 16);
+            let b = g.unicode_string(0, 16);
+            let s = jaro_similarity(&a, &b);
+            prop_assert((0.0..=1.0).contains(&s), "range")?;
+            prop_assert(
+                close(s, jaro_similarity(&b, &a)),
+                &format!("symmetry {a:?} {b:?}"),
+            )?;
+            prop_assert(
+                !(a == b) || close(s, 1.0),
+                "identical strings have similarity 1",
+            )
+        });
+    }
+
+    #[test]
+    fn winkler_boosts_common_prefix() {
+        property("jw >= jaro", 200, |g| {
+            let a = g.string(0, 12);
+            let b = g.string(0, 12);
+            prop_assert(
+                jaro_winkler_similarity(&a, &b) >= jaro_similarity(&a, &b) - 1e-12,
+                "prefix boost is non-negative",
+            )
+        });
+        // a shared prefix should strictly increase similarity
+        let plain = jaro_similarity("prefixed", "prefixxx");
+        let boosted = jaro_winkler_similarity("prefixed", "prefixxx");
+        assert!(boosted > plain);
+    }
+}

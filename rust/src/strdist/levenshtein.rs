@@ -1,0 +1,287 @@
+//! Levenshtein (edit) distance — the paper's primary dissimilarity for name
+//! strings (Sec. 2.2), equivalent to R's `stringdist(method = "lv")`.
+//!
+//! Three implementations:
+//! - `levenshtein_dp`: classic two-row dynamic program — the oracle.
+//! - `levenshtein_myers`: Myers' 1999 bit-parallel algorithm, O(N·M/64).
+//!   Entity names are short (< 64 chars), so the whole pattern fits one
+//!   machine word and the inner loop is ~10 instructions per text char.
+//!   This is the production path for the O(L·M) dissimilarity matrices.
+//! - `levenshtein_bounded`: DP with early exit once the band exceeds a
+//!   cutoff (used by FPS landmark selection where only comparisons against
+//!   the current maximum matter).
+//!
+//! All operate on Unicode scalar values (chars), matching `stringdist`'s
+//! default of comparing code points.
+
+/// Classic two-row DP. O(N*M) time, O(min(N,M)) space. The reference.
+pub fn levenshtein_dp(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let (short, long) = if a.len() <= b.len() { (&a, &b) } else { (&b, &a) };
+    if short.is_empty() {
+        return long.len();
+    }
+    let mut prev: Vec<usize> = (0..=short.len()).collect();
+    let mut cur = vec![0usize; short.len() + 1];
+    for (i, lc) in long.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, sc) in short.iter().enumerate() {
+            let sub = prev[j] + usize::from(lc != sc);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[short.len()]
+}
+
+/// Myers bit-parallel edit distance for patterns up to 64 chars; falls back
+/// to the DP for longer inputs. Exact (not approximate).
+pub fn levenshtein_myers(a: &str, b: &str) -> usize {
+    let pat: Vec<char> = a.chars().collect();
+    let txt: Vec<char> = b.chars().collect();
+    if pat.is_empty() {
+        return txt.len();
+    }
+    if txt.is_empty() {
+        return pat.len();
+    }
+    if pat.len() > 64 {
+        // rare for names; swap if the other side fits, else DP
+        if txt.len() <= 64 {
+            return levenshtein_myers(b, a);
+        }
+        return levenshtein_dp(a, b);
+    }
+
+    // Pattern-character bitmasks. Names draw from a small alphabet, so a
+    // tiny open-addressed probe over a fixed array beats a HashMap here.
+    let m = pat.len();
+    let mut keys = [0u32; 128];
+    let mut vals = [0u64; 128];
+    let mut used = [false; 128];
+    let mask_for = |keys: &[u32; 128], vals: &[u64; 128], used: &[bool; 128], c: char| -> u64 {
+        let mut h = (c as u32).wrapping_mul(2654435761) as usize % 128;
+        loop {
+            if !used[h] {
+                return 0;
+            }
+            if keys[h] == c as u32 {
+                return vals[h];
+            }
+            h = (h + 1) % 128;
+        }
+    };
+    for (i, &c) in pat.iter().enumerate() {
+        let mut h = (c as u32).wrapping_mul(2654435761) as usize % 128;
+        loop {
+            if !used[h] {
+                used[h] = true;
+                keys[h] = c as u32;
+                vals[h] = 1u64 << i;
+                break;
+            }
+            if keys[h] == c as u32 {
+                vals[h] |= 1u64 << i;
+                break;
+            }
+            h = (h + 1) % 128;
+        }
+    }
+
+    let mut pv = !0u64;
+    let mut mv = 0u64;
+    let mut score = m;
+    let high = 1u64 << (m - 1);
+
+    for &c in &txt {
+        let eq = mask_for(&keys, &vals, &used, c);
+        let xv = eq | mv;
+        let xh = (((eq & pv).wrapping_add(pv)) ^ pv) | eq;
+        let mut ph = mv | !(xh | pv);
+        let mut mh = pv & xh;
+        if ph & high != 0 {
+            score += 1;
+        }
+        if mh & high != 0 {
+            score -= 1;
+        }
+        ph = (ph << 1) | 1;
+        mh <<= 1;
+        pv = mh | !(xv | ph);
+        mv = ph & xv;
+    }
+    score
+}
+
+/// DP with early termination: returns `None` if the distance exceeds
+/// `bound`, else `Some(distance)`. Uses the fact that the minimum over a DP
+/// row never decreases.
+pub fn levenshtein_bounded(a: &str, b: &str, bound: usize) -> Option<usize> {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    if a.len().abs_diff(b.len()) > bound {
+        return None;
+    }
+    let (short, long) = if a.len() <= b.len() { (&a, &b) } else { (&b, &a) };
+    let mut prev: Vec<usize> = (0..=short.len()).collect();
+    let mut cur = vec![0usize; short.len() + 1];
+    for (i, lc) in long.iter().enumerate() {
+        cur[0] = i + 1;
+        let mut row_min = cur[0];
+        for (j, sc) in short.iter().enumerate() {
+            let sub = prev[j] + usize::from(lc != sc);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+            row_min = row_min.min(cur[j + 1]);
+        }
+        if row_min > bound {
+            return None;
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    let d = prev[short.len()];
+    (d <= bound).then_some(d)
+}
+
+/// Production entry point: Myers when possible, DP otherwise.
+#[inline]
+pub fn levenshtein(a: &str, b: &str) -> usize {
+    levenshtein_myers(a, b)
+}
+
+/// Damerau-Levenshtein (optimal string alignment variant): also counts a
+/// transposition of adjacent characters as one edit. Geco-style typo
+/// corruption generates exactly these, so the OSA distance is offered as an
+/// alternative dissimilarity.
+pub fn damerau_osa(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    if a.is_empty() {
+        return b.len();
+    }
+    if b.is_empty() {
+        return a.len();
+    }
+    let w = b.len() + 1;
+    let mut rows = vec![vec![0usize; w]; a.len() + 1];
+    for (j, row0) in rows[0].iter_mut().enumerate() {
+        *row0 = j;
+    }
+    for i in 1..=a.len() {
+        rows[i][0] = i;
+        for j in 1..=b.len() {
+            let cost = usize::from(a[i - 1] != b[j - 1]);
+            let mut d = (rows[i - 1][j] + 1)
+                .min(rows[i][j - 1] + 1)
+                .min(rows[i - 1][j - 1] + cost);
+            if i > 1 && j > 1 && a[i - 1] == b[j - 2] && a[i - 2] == b[j - 1] {
+                d = d.min(rows[i - 2][j - 2] + 1);
+            }
+            rows[i][j] = d;
+        }
+    }
+    rows[a.len()][b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{prop_assert, property};
+
+    #[test]
+    fn known_values() {
+        let cases = [
+            ("", "", 0),
+            ("abc", "", 3),
+            ("", "abc", 3),
+            ("kitten", "sitting", 3),
+            ("flaw", "lawn", 2),
+            ("gumbo", "gambol", 2),
+            ("saturday", "sunday", 3),
+            ("same", "same", 0),
+            ("a", "b", 1),
+        ];
+        for (a, b, want) in cases {
+            assert_eq!(levenshtein_dp(a, b), want, "dp {a:?} {b:?}");
+            assert_eq!(levenshtein_myers(a, b), want, "myers {a:?} {b:?}");
+            assert_eq!(levenshtein_bounded(a, b, 10), Some(want));
+        }
+    }
+
+    #[test]
+    fn unicode_code_points() {
+        assert_eq!(levenshtein_dp("café", "cafe"), 1);
+        assert_eq!(levenshtein_myers("café", "cafe"), 1);
+        assert_eq!(levenshtein_myers("日本語", "日本"), 1);
+    }
+
+    #[test]
+    fn myers_equals_dp_property() {
+        property("myers == dp", 400, |g| {
+            let a = g.unicode_string(0, 40);
+            let b = g.unicode_string(0, 40);
+            prop_assert(
+                levenshtein_myers(&a, &b) == levenshtein_dp(&a, &b),
+                &format!("{a:?} vs {b:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn myers_long_pattern_falls_back() {
+        let a: String = "ab".repeat(50); // 100 chars > 64
+        let b: String = "ba".repeat(50);
+        assert_eq!(levenshtein_myers(&a, &b), levenshtein_dp(&a, &b));
+        // one side fits in 64 -> swapped Myers path
+        let c: String = "ab".repeat(20);
+        assert_eq!(levenshtein_myers(&a, &c), levenshtein_dp(&a, &c));
+    }
+
+    #[test]
+    fn metric_axioms_property() {
+        property("levenshtein metric axioms", 200, |g| {
+            let a = g.string(0, 16);
+            let b = g.string(0, 16);
+            let c = g.string(0, 16);
+            let dab = levenshtein(&a, &b);
+            let dba = levenshtein(&b, &a);
+            let dac = levenshtein(&a, &c);
+            let dcb = levenshtein(&c, &b);
+            prop_assert(dab == dba, "symmetry")?;
+            prop_assert((dab == 0) == (a == b), "identity")?;
+            prop_assert(dab <= dac + dcb, "triangle inequality")
+        });
+    }
+
+    #[test]
+    fn bounded_agrees_or_exceeds() {
+        property("bounded == dp when within bound", 300, |g| {
+            let a = g.string(0, 20);
+            let b = g.string(0, 20);
+            let bound = g.usize_in(0, 8);
+            let d = levenshtein_dp(&a, &b);
+            match levenshtein_bounded(&a, &b, bound) {
+                Some(got) => prop_assert(got == d && d <= bound, "within-bound value"),
+                None => prop_assert(d > bound, "exceed claim"),
+            }
+        });
+    }
+
+    #[test]
+    fn osa_counts_transpositions() {
+        assert_eq!(damerau_osa("ab", "ba"), 1);
+        assert_eq!(levenshtein("ab", "ba"), 2);
+        assert_eq!(damerau_osa("smith", "simth"), 1);
+        assert_eq!(damerau_osa("abc", "abc"), 0);
+        assert_eq!(damerau_osa("", "xy"), 2);
+    }
+
+    #[test]
+    fn osa_never_exceeds_levenshtein() {
+        property("osa <= levenshtein", 300, |g| {
+            let a = g.string(0, 14);
+            let b = g.string(0, 14);
+            prop_assert(damerau_osa(&a, &b) <= levenshtein_dp(&a, &b), "osa bound")
+        });
+    }
+}

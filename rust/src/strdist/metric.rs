@@ -1,0 +1,129 @@
+//! Minkowski metrics on coordinate vectors (paper Sec. 2.2): the metric-
+//! space counterpart of the string comparators, used for the sensor-network
+//! example and any pre-vectorised input data.
+
+/// Euclidean distance (p = 2) — the paper's metric-space default.
+#[inline]
+pub fn euclidean(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc.sqrt()
+}
+
+/// Squared Euclidean distance (avoids the sqrt on hot comparison paths).
+#[inline]
+pub fn euclidean_sq(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Manhattan distance (p = 1).
+#[inline]
+pub fn manhattan(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| ((*x - *y) as f64).abs())
+        .sum()
+}
+
+/// Chebyshev distance (p = inf).
+#[inline]
+pub fn chebyshev(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| ((*x - *y) as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+/// General Minkowski L^p distance, p >= 1.
+pub fn minkowski(a: &[f32], b: &[f32], p: f64) -> f64 {
+    assert!(p >= 1.0, "minkowski requires p >= 1 (got {p})");
+    if p == 1.0 {
+        return manhattan(a, b);
+    }
+    if p == 2.0 {
+        return euclidean(a, b);
+    }
+    if p.is_infinite() {
+        return chebyshev(a, b);
+    }
+    let sum: f64 = a
+        .iter()
+        .zip(b.iter())
+        .map(|(x, y)| ((*x - *y) as f64).abs().powf(p))
+        .sum();
+    sum.powf(1.0 / p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{prop_assert, prop_assert_close, property};
+
+    #[test]
+    fn known_values() {
+        let a = [0.0f32, 0.0];
+        let b = [3.0f32, 4.0];
+        assert_eq!(euclidean(&a, &b), 5.0);
+        assert_eq!(euclidean_sq(&a, &b), 25.0);
+        assert_eq!(manhattan(&a, &b), 7.0);
+        assert_eq!(chebyshev(&a, &b), 4.0);
+        assert!((minkowski(&a, &b, 3.0) - 91.0f64.powf(1.0 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p_special_cases_dispatch() {
+        let a = [1.0f32, -2.0, 0.5];
+        let b = [0.0f32, 1.0, 2.5];
+        assert_eq!(minkowski(&a, &b, 1.0), manhattan(&a, &b));
+        assert_eq!(minkowski(&a, &b, 2.0), euclidean(&a, &b));
+        assert_eq!(minkowski(&a, &b, f64::INFINITY), chebyshev(&a, &b));
+    }
+
+    #[test]
+    fn metric_axioms() {
+        property("minkowski metric axioms", 200, |g| {
+            let k = g.usize_in(1, 6);
+            let a = g.vec_f32(k, k, 2.0);
+            let b = g.vec_f32(k, k, 2.0);
+            let c = g.vec_f32(k, k, 2.0);
+            let p = *g.choose(&[1.0, 1.5, 2.0, 3.0]);
+            let dab = minkowski(&a, &b, p);
+            prop_assert_close(dab, minkowski(&b, &a, p), 1e-9, "symmetry")?;
+            prop_assert(dab >= 0.0, "non-negativity")?;
+            prop_assert_close(minkowski(&a, &a, p), 0.0, 1e-9, "identity")?;
+            // f32 inputs: collinear points make the triangle inequality an
+            // exact equality, so allow f32-scale rounding slack
+            prop_assert(
+                dab <= minkowski(&a, &c, p) + minkowski(&c, &b, p)
+                    + 1e-5 * (1.0 + dab),
+                "triangle",
+            )
+        });
+    }
+
+    #[test]
+    fn minkowski_monotone_in_p() {
+        // L^p norms are non-increasing in p
+        property("||.||_p non-increasing in p", 100, |g| {
+            let k = g.usize_in(1, 5);
+            let a = g.vec_f32(k, k, 1.0);
+            let b = g.vec_f32(k, k, 1.0);
+            let d1 = minkowski(&a, &b, 1.0);
+            let d2 = minkowski(&a, &b, 2.0);
+            let d3 = minkowski(&a, &b, 4.0);
+            prop_assert(d1 >= d2 - 1e-9 && d2 >= d3 - 1e-9, "monotone")
+        });
+    }
+}

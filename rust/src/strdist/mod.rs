@@ -1,0 +1,154 @@
+//! String and vector dissimilarities (paper Sec. 2.2) — the Rust equivalent
+//! of the R `stringdist` package the authors used, plus Minkowski metrics.
+//!
+//! Everything implements [`Dissimilarity`], the single interface the MDS and
+//! OSE layers consume. MDS only ever sees a dissimilarity *function*, which
+//! is exactly the generality the paper leans on ("the only input is a
+//! dissimilarity function"; metric or non-metric).
+
+pub mod jaro;
+pub mod levenshtein;
+pub mod metric;
+pub mod phonetic;
+pub mod qgram;
+
+pub use jaro::{jaro_distance, jaro_winkler_distance};
+pub use levenshtein::{damerau_osa, levenshtein, levenshtein_bounded, levenshtein_dp};
+pub use metric::{chebyshev, euclidean, euclidean_sq, manhattan, minkowski};
+pub use phonetic::{nysiis, soundex, soundex_distance, SoundexDist};
+pub use qgram::{qgram_cosine_distance, qgram_distance};
+
+/// A dissimilarity over an object domain `T`.
+///
+/// Object-safe so heterogeneous configurations can box it; `Sync` so the
+/// parallel dissimilarity-matrix builder can share it across threads.
+pub trait Dissimilarity<T: ?Sized>: Sync {
+    fn dist(&self, a: &T, b: &T) -> f64;
+
+    /// Human-readable name (for configs, logs and reports).
+    fn name(&self) -> &'static str;
+}
+
+/// Levenshtein edit distance on strings (the paper's primary choice).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Levenshtein;
+
+impl Dissimilarity<str> for Levenshtein {
+    fn dist(&self, a: &str, b: &str) -> f64 {
+        levenshtein(a, b) as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "levenshtein"
+    }
+}
+
+/// Damerau (OSA) edit distance.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DamerauOsa;
+
+impl Dissimilarity<str> for DamerauOsa {
+    fn dist(&self, a: &str, b: &str) -> f64 {
+        damerau_osa(a, b) as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "damerau-osa"
+    }
+}
+
+/// Jaro-Winkler distance.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JaroWinkler;
+
+impl Dissimilarity<str> for JaroWinkler {
+    fn dist(&self, a: &str, b: &str) -> f64 {
+        jaro_winkler_distance(a, b)
+    }
+
+    fn name(&self) -> &'static str {
+        "jaro-winkler"
+    }
+}
+
+/// q-gram distance with configurable q.
+#[derive(Clone, Copy, Debug)]
+pub struct QGram(pub usize);
+
+impl Default for QGram {
+    fn default() -> Self {
+        QGram(2)
+    }
+}
+
+impl Dissimilarity<str> for QGram {
+    fn dist(&self, a: &str, b: &str) -> f64 {
+        qgram_distance(a, b, self.0) as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "qgram"
+    }
+}
+
+/// Euclidean distance on coordinate vectors.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Euclidean;
+
+impl Dissimilarity<[f32]> for Euclidean {
+    fn dist(&self, a: &[f32], b: &[f32]) -> f64 {
+        euclidean(a, b)
+    }
+
+    fn name(&self) -> &'static str {
+        "euclidean"
+    }
+}
+
+/// Look up a string comparator by config name.
+pub fn string_metric_by_name(
+    name: &str,
+) -> Option<Box<dyn Dissimilarity<str> + Send>> {
+    match name {
+        "levenshtein" | "lv" => Some(Box::new(Levenshtein)),
+        "damerau" | "osa" => Some(Box::new(DamerauOsa)),
+        "jaro-winkler" | "jw" => Some(Box::new(JaroWinkler)),
+        "qgram" | "qgram2" => Some(Box::new(QGram(2))),
+        "qgram3" => Some(Box::new(QGram(3))),
+        "soundex" => Some(Box::new(SoundexDist)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trait_objects_dispatch() {
+        let metrics: Vec<Box<dyn Dissimilarity<str> + Send>> = vec![
+            Box::new(Levenshtein),
+            Box::new(DamerauOsa),
+            Box::new(JaroWinkler),
+            Box::new(QGram(2)),
+        ];
+        for m in &metrics {
+            assert_eq!(m.dist("same", "same"), 0.0, "{}", m.name());
+            assert!(m.dist("abc", "xyz") > 0.0, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        for name in ["levenshtein", "lv", "jw", "qgram", "osa", "qgram3"] {
+            assert!(string_metric_by_name(name).is_some(), "{name}");
+        }
+        assert!(string_metric_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn euclidean_trait_impl() {
+        let e = Euclidean;
+        assert_eq!(e.dist(&[0.0, 0.0], &[3.0, 4.0]), 5.0);
+    }
+}

@@ -1,0 +1,293 @@
+//! Phonetic encodings — Soundex and NYSIIS, the comparator family FEBRL
+//! pairs with its name generator. Encoding-equality gives a cheap blocking
+//! predicate, and the edit distance between encodings is a (non-metric)
+//! dissimilarity robust to spelling variation — exactly the kind of
+//! non-metric input the paper's LSMDS pipeline is designed to accept.
+
+/// American Soundex (4-character code, e.g. "robert" -> "R163").
+pub fn soundex(s: &str) -> String {
+    let letters: Vec<char> = s
+        .chars()
+        .filter(|c| c.is_ascii_alphabetic())
+        .map(|c| c.to_ascii_uppercase())
+        .collect();
+    let Some(&first) = letters.first() else {
+        return String::new();
+    };
+
+    fn code(c: char) -> u8 {
+        match c {
+            'B' | 'F' | 'P' | 'V' => 1,
+            'C' | 'G' | 'J' | 'K' | 'Q' | 'S' | 'X' | 'Z' => 2,
+            'D' | 'T' => 3,
+            'L' => 4,
+            'M' | 'N' => 5,
+            'R' => 6,
+            _ => 0, // vowels + H/W/Y
+        }
+    }
+
+    let mut out = String::new();
+    out.push(first);
+    let mut prev = code(first);
+    for &c in &letters[1..] {
+        let d = code(c);
+        if d != 0 && d != prev {
+            out.push((b'0' + d) as char);
+            if out.len() == 4 {
+                break;
+            }
+        }
+        // H and W are transparent: the previous code survives across them
+        if !(c == 'H' || c == 'W') {
+            prev = d;
+        }
+    }
+    while out.len() < 4 {
+        out.push('0');
+    }
+    out
+}
+
+/// NYSIIS (New York State Identification and Intelligence System) encoding
+/// — better suited to non-Anglo surnames than Soundex. Standard algorithm,
+/// truncated to the conventional 6 characters.
+pub fn nysiis(s: &str) -> String {
+    let mut w: Vec<char> = s
+        .chars()
+        .filter(|c| c.is_ascii_alphabetic())
+        .map(|c| c.to_ascii_uppercase())
+        .collect();
+    if w.is_empty() {
+        return String::new();
+    }
+    // leading transformations
+    let prefix_rules: &[(&str, &str)] = &[
+        ("MAC", "MCC"),
+        ("KN", "NN"),
+        ("K", "C"),
+        ("PH", "FF"),
+        ("PF", "FF"),
+        ("SCH", "SSS"),
+    ];
+    for (pat, rep) in prefix_rules {
+        let p: Vec<char> = pat.chars().collect();
+        if w.len() >= p.len() && w[..p.len()] == p[..] {
+            let mut nw: Vec<char> = rep.chars().collect();
+            nw.extend_from_slice(&w[p.len()..]);
+            w = nw;
+            break;
+        }
+    }
+    // trailing transformations
+    let suffix_rules: &[(&str, &str)] = &[
+        ("EE", "Y"),
+        ("IE", "Y"),
+        ("DT", "D"),
+        ("RT", "D"),
+        ("RD", "D"),
+        ("NT", "D"),
+        ("ND", "D"),
+    ];
+    for (pat, rep) in suffix_rules {
+        let p: Vec<char> = pat.chars().collect();
+        if w.len() >= p.len() && w[w.len() - p.len()..] == p[..] {
+            w.truncate(w.len() - p.len());
+            w.extend(rep.chars());
+            break;
+        }
+    }
+
+    let first = w[0];
+    let mut key = vec![first];
+    let is_vowel = |c: char| matches!(c, 'A' | 'E' | 'I' | 'O' | 'U');
+    let mut i = 1;
+    while i < w.len() {
+        let c = w[i];
+        let mut repl: Vec<char> = match c {
+            'E' if i + 1 < w.len() && w[i + 1] == 'V' => {
+                i += 1;
+                vec!['A', 'F']
+            }
+            c if is_vowel(c) => vec!['A'],
+            'Q' => vec!['G'],
+            'Z' => vec!['S'],
+            'M' => vec!['N'],
+            'K' => {
+                if i + 1 < w.len() && w[i + 1] == 'N' {
+                    i += 1;
+                    vec!['N', 'N']
+                } else {
+                    vec!['C']
+                }
+            }
+            'S' if i + 2 < w.len() && w[i + 1] == 'C' && w[i + 2] == 'H' => {
+                i += 2;
+                vec!['S', 'S', 'S']
+            }
+            'P' if i + 1 < w.len() && w[i + 1] == 'H' => {
+                i += 1;
+                vec!['F', 'F']
+            }
+            'H' => {
+                let prev = *key.last().unwrap();
+                let next_v = i + 1 < w.len() && is_vowel(w[i + 1]);
+                if !is_vowel(prev) || !next_v {
+                    vec![prev]
+                } else {
+                    vec!['H']
+                }
+            }
+            'W' => {
+                let prev = *key.last().unwrap();
+                if is_vowel(prev) {
+                    vec![prev]
+                } else {
+                    vec!['W']
+                }
+            }
+            c => vec![c],
+        };
+        // append without immediate duplicates
+        for r in repl.drain(..) {
+            if *key.last().unwrap() != r {
+                key.push(r);
+            }
+        }
+        i += 1;
+    }
+    // terminal cleanups
+    if key.last() == Some(&'S') && key.len() > 1 {
+        key.pop();
+    }
+    if key.len() >= 2 && key[key.len() - 2..] == ['A', 'Y'] {
+        key.remove(key.len() - 2);
+    }
+    if key.last() == Some(&'A') && key.len() > 1 {
+        key.pop();
+    }
+    key.truncate(6);
+    key.into_iter().collect()
+}
+
+/// Non-metric dissimilarity: edit distance between Soundex codes (0..=4).
+pub fn soundex_distance(a: &str, b: &str) -> usize {
+    super::levenshtein(&soundex(a), &soundex(b))
+}
+
+/// Soundex-distance comparator for the `Dissimilarity` interface.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SoundexDist;
+
+impl super::Dissimilarity<str> for SoundexDist {
+    fn dist(&self, a: &str, b: &str) -> f64 {
+        soundex_distance(a, b) as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "soundex"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{prop_assert, property};
+
+    #[test]
+    fn soundex_canonical_values() {
+        // classic reference vectors (US National Archives)
+        for (name, code) in [
+            ("Robert", "R163"),
+            ("Rupert", "R163"),
+            ("Ashcraft", "A261"),
+            ("Ashcroft", "A261"),
+            ("Tymczak", "T522"),
+            ("Pfister", "P236"),
+            ("Washington", "W252"),
+            ("Lee", "L000"),
+            ("Gutierrez", "G362"),
+            ("Jackson", "J250"),
+        ] {
+            assert_eq!(soundex(name), code, "{name}");
+        }
+    }
+
+    #[test]
+    fn soundex_ignores_case_and_nonletters() {
+        assert_eq!(soundex("o'brien"), soundex("OBrien"));
+        assert_eq!(soundex("smith-jones"), soundex("smithjones"));
+        assert_eq!(soundex(""), "");
+        assert_eq!(soundex("123"), "");
+    }
+
+    #[test]
+    fn soundex_shape_property() {
+        property("soundex is letter + 3 digits", 300, |g| {
+            let s = g.string(1, 20);
+            let c = soundex(&s);
+            prop_assert(c.len() == 4, "length")?;
+            prop_assert(
+                c.chars().next().unwrap().is_ascii_uppercase(),
+                "leading letter",
+            )?;
+            prop_assert(
+                c.chars().skip(1).all(|d| d.is_ascii_digit()),
+                "digit tail",
+            )
+        });
+    }
+
+    #[test]
+    fn soundex_robust_to_phonetic_typos() {
+        // the whole point: common misspellings encode identically
+        assert_eq!(soundex("smith"), soundex("smyth"));
+        // the first letter is kept verbatim, so C/K variants share the
+        // digit tail only
+        assert_eq!(soundex("catherine")[1..], soundex("katherine")[1..]);
+        // Soundex treats ph/f identically (both code 1)
+        assert_eq!(soundex("philip")[1..], soundex("filip")[1..]);
+    }
+
+    #[test]
+    fn nysiis_known_values() {
+        // spot values consistent with the standard algorithm
+        assert_eq!(nysiis("knight"), "NAGT");
+        assert_eq!(nysiis("mitchell"), "MATCAL");
+        assert_eq!(nysiis("mcdonald"), "MCDANA");
+        assert_eq!(nysiis(""), "");
+    }
+
+    #[test]
+    fn nysiis_groups_spelling_variants() {
+        // classic equivalences the algorithm does guarantee
+        assert_eq!(nysiis("brian"), nysiis("brien"));
+        assert_eq!(nysiis("catherine"), nysiis("katherine"));
+        assert_eq!(nysiis("philip"), nysiis("filip"));
+    }
+
+    #[test]
+    fn nysiis_shape_property() {
+        property("nysiis <= 6 uppercase letters", 300, |g| {
+            let s = g.string(1, 20);
+            let c = nysiis(&s);
+            prop_assert(c.len() <= 6, "length")?;
+            prop_assert(c.chars().all(|d| d.is_ascii_uppercase()), "letters")
+        });
+    }
+
+    #[test]
+    fn soundex_distance_is_bounded_pseudometric() {
+        property("soundex distance bounds", 200, |g| {
+            let a = g.string(1, 14);
+            let b = g.string(1, 14);
+            let d = soundex_distance(&a, &b);
+            prop_assert(d <= 4, "bounded by code length")?;
+            prop_assert(
+                soundex_distance(&a, &a) == 0,
+                "identity of indiscernibles (weak)",
+            )?;
+            prop_assert(d == soundex_distance(&b, &a), "symmetry")
+        });
+    }
+}

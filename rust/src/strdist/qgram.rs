@@ -1,0 +1,110 @@
+//! q-gram distance — the third comparator family the paper names
+//! (Sec. 2.2): the L1 distance between the q-gram occurrence profiles of two
+//! strings (`stringdist(method = "qgram")`).
+
+use std::collections::HashMap;
+
+/// Multiset of q-grams of a string (as char windows).
+fn profile(s: &str, q: usize) -> HashMap<Vec<char>, i64> {
+    let chars: Vec<char> = s.chars().collect();
+    let mut map = HashMap::new();
+    if chars.len() >= q && q > 0 {
+        for w in chars.windows(q) {
+            *map.entry(w.to_vec()).or_insert(0) += 1;
+        }
+    }
+    map
+}
+
+/// q-gram distance: sum over all q-grams of |count_a - count_b|.
+pub fn qgram_distance(a: &str, b: &str, q: usize) -> usize {
+    assert!(q > 0, "q must be positive");
+    let pa = profile(a, q);
+    let pb = profile(b, q);
+    let mut total = 0i64;
+    for (g, ca) in &pa {
+        total += (ca - pb.get(g).copied().unwrap_or(0)).abs();
+    }
+    for (g, cb) in &pb {
+        if !pa.contains_key(g) {
+            total += cb.abs();
+        }
+    }
+    total as usize
+}
+
+/// Cosine distance between q-gram profiles (bonus comparator; useful when
+/// string lengths vary a lot).
+pub fn qgram_cosine_distance(a: &str, b: &str, q: usize) -> f64 {
+    let pa = profile(a, q);
+    let pb = profile(b, q);
+    if pa.is_empty() || pb.is_empty() {
+        return if a == b { 0.0 } else { 1.0 };
+    }
+    let dot: i64 = pa
+        .iter()
+        .filter_map(|(g, ca)| pb.get(g).map(|cb| ca * cb))
+        .sum();
+    let na: i64 = pa.values().map(|c| c * c).sum();
+    let nb: i64 = pb.values().map(|c| c * c).sum();
+    1.0 - dot as f64 / ((na as f64).sqrt() * (nb as f64).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{prop_assert, property};
+
+    #[test]
+    fn known_values() {
+        // profiles: "abc" {ab, bc}, "abd" {ab, bd} -> distance 2
+        assert_eq!(qgram_distance("abc", "abd", 2), 2);
+        assert_eq!(qgram_distance("abc", "abc", 2), 0);
+        assert_eq!(qgram_distance("aaaa", "aa", 2), 2); // counts matter
+        assert_eq!(qgram_distance("", "abc", 2), 2);
+        assert_eq!(qgram_distance("a", "b", 2), 0); // both too short: empty profiles
+    }
+
+    #[test]
+    fn symmetry_and_identity() {
+        property("qgram symmetric & identity", 300, |g| {
+            let a = g.string(0, 14);
+            let b = g.string(0, 14);
+            let q = g.usize_in(1, 3);
+            prop_assert(
+                qgram_distance(&a, &b, q) == qgram_distance(&b, &a, q),
+                "symmetry",
+            )?;
+            prop_assert(qgram_distance(&a, &a, q) == 0, "identity")
+        });
+    }
+
+    #[test]
+    fn triangle_inequality_property() {
+        // q-gram distance is an L1 distance between profiles => metric on
+        // profiles (pseudo-metric on strings).
+        property("qgram triangle", 200, |g| {
+            let a = g.string(0, 10);
+            let b = g.string(0, 10);
+            let c = g.string(0, 10);
+            let q = 2;
+            prop_assert(
+                qgram_distance(&a, &b, q)
+                    <= qgram_distance(&a, &c, q) + qgram_distance(&c, &b, q),
+                "triangle",
+            )
+        });
+    }
+
+    #[test]
+    fn cosine_range_and_identity() {
+        property("qgram cosine in [0,1]", 200, |g| {
+            let a = g.string(0, 12);
+            let b = g.string(0, 12);
+            let d = qgram_cosine_distance(&a, &b, 2);
+            prop_assert((-1e-12..=1.0 + 1e-12).contains(&d), "range")?;
+            let da = qgram_cosine_distance(&a, &a, 2);
+            prop_assert(da.abs() < 1e-9 || a.chars().count() < 2, "identity")
+        });
+    }
+}

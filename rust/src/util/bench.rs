@@ -1,0 +1,197 @@
+//! Micro/macro benchmark harness (no `criterion` in the offline image).
+//!
+//! Provides warmup, timed iterations with per-iteration samples, robust
+//! statistics (median + MAD rather than mean, so GC-less but
+//! scheduler-noisy CPU runs don't skew), and a uniform one-line report
+//! format that `cargo bench` targets print.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Minimum wall time to spend in warmup.
+    pub warmup: Duration,
+    /// Minimum wall time to spend measuring.
+    pub measure: Duration,
+    /// Hard cap on measured iterations (for very slow subjects).
+    pub max_iters: usize,
+    /// Minimum measured iterations (for very fast subjects).
+    pub min_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            max_iters: 10_000,
+            min_iters: 5,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick preset for heavy end-to-end subjects (one warmup pass,
+    /// a handful of samples).
+    pub fn heavy() -> Self {
+        Self {
+            warmup: Duration::from_millis(0),
+            measure: Duration::from_secs(2),
+            max_iters: 20,
+            min_iters: 3,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub samples_s: Vec<f64>,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} {:>12}/iter  (median; mad {}, min {}, n={})",
+            self.name,
+            fmt_duration(self.median_s),
+            fmt_duration(self.mad_s),
+            fmt_duration(self.min_s),
+            self.iters,
+        )
+    }
+
+    /// Throughput helper: items per second at the median sample.
+    pub fn throughput(&self, items_per_iter: usize) -> f64 {
+        items_per_iter as f64 / self.median_s
+    }
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if !s.is_finite() {
+        "n/a".into()
+    } else if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark `f`, which performs ONE logical iteration per call.
+/// The closure's return value is black-boxed to stop dead-code elimination.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup.
+    let start = Instant::now();
+    while start.elapsed() < cfg.warmup {
+        std::hint::black_box(f());
+    }
+    // Measure.
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < cfg.measure || samples.len() < cfg.min_iters)
+        && samples.len() < cfg.max_iters
+    {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+
+    let mut sorted = samples.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = stats::quantile(&sorted, 0.5);
+    let mut devs: Vec<f64> = sorted.iter().map(|x| (x - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = stats::quantile(&devs, 0.5);
+
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        median_s: median,
+        mad_s: mad,
+        mean_s: stats::mean(&samples),
+        min_s: sorted[0],
+        samples_s: samples,
+    }
+}
+
+/// Simple scope timer for ad-hoc profiling of pipeline phases.
+pub struct Timer {
+    label: String,
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start(label: &str) -> Self {
+        Self { label: label.to_string(), start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn stop(self) -> f64 {
+        let dt = self.elapsed_s();
+        log::debug!("{}: {}", self.label, fmt_duration(dt));
+        dt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(30),
+            max_iters: 1000,
+            min_iters: 5,
+        };
+        let r = bench("spin", &cfg, || {
+            let mut acc = 0u64;
+            for i in 0..2_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters >= 5);
+        assert!(r.median_s > 0.0);
+        assert!(r.min_s <= r.median_s);
+        assert!(r.median_s <= r.samples_s.iter().cloned().fold(0.0, f64::max));
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert!(fmt_duration(2.0).ends_with(" s"));
+        assert!(fmt_duration(2e-3).ends_with(" ms"));
+        assert!(fmt_duration(2e-6).ends_with(" µs"));
+        assert!(fmt_duration(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn throughput_inverts_median() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            samples_s: vec![0.5],
+            median_s: 0.5,
+            mad_s: 0.0,
+            mean_s: 0.5,
+            min_s: 0.5,
+        };
+        assert!((r.throughput(100) - 200.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,201 @@
+//! Command-line parsing (no `clap` in the offline image).
+//!
+//! Supports the subset this launcher needs: subcommands, `--flag`,
+//! `--key value` / `--key=value`, typed accessors with defaults, positional
+//! arguments, and auto-generated usage text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1:?} ({2})")]
+    BadValue(String, String, String),
+}
+
+/// Declarative option spec (used for usage text + unknown-option checking).
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` against `specs`. Flags are options with
+    /// `takes_value == false`.
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    out.values.insert(name, v);
+                } else {
+                    out.flags.push(name);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // install defaults
+        for s in specs {
+            if let Some(d) = s.default {
+                out.values.entry(s.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.get(name).unwrap_or_default().to_string()
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.typed(name, |v| v.parse::<usize>().ok())
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.typed(name, |v| v.parse::<u64>().ok())
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.typed(name, |v| v.parse::<f64>().ok())
+    }
+
+    /// Comma-separated list of usize, e.g. `--landmarks 100,300,1000`.
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, CliError> {
+        self.typed(name, |v| {
+            v.split(',')
+                .map(|p| p.trim().parse::<usize>().ok())
+                .collect::<Option<Vec<_>>>()
+        })
+    }
+
+    fn typed<T>(&self, name: &str, f: impl Fn(&str) -> Option<T>) -> Result<T, CliError> {
+        let raw = self.get(name).ok_or_else(|| CliError::MissingValue(name.into()))?;
+        f(raw).ok_or_else(|| {
+            CliError::BadValue(name.into(), raw.into(), "parse failed".into())
+        })
+    }
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{about}\n\nUSAGE:\n  lmds-ose {cmd} [OPTIONS]\n\nOPTIONS:\n");
+    for o in specs {
+        let val = if o.takes_value { " <value>" } else { "" };
+        let def = o
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{val}\n      {}{def}\n", o.name, o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "n", help: "count", takes_value: true, default: Some("10") },
+            OptSpec { name: "name", help: "label", takes_value: true, default: None },
+            OptSpec { name: "verbose", help: "talk", takes_value: false, default: None },
+            OptSpec { name: "ls", help: "list", takes_value: true, default: None },
+        ]
+    }
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let a = Args::parse(
+            &argv(&["--n", "42", "--verbose", "pos1", "--name=x y", "pos2"]),
+            &specs(),
+        )
+        .unwrap();
+        assert_eq!(a.usize("n").unwrap(), 42);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.str("name"), "x y");
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn defaults_apply_when_absent() {
+        let a = Args::parse(&argv(&[]), &specs()).unwrap();
+        assert_eq!(a.usize("n").unwrap(), 10);
+        assert_eq!(a.get("name"), None);
+    }
+
+    #[test]
+    fn unknown_and_missing_are_errors() {
+        assert!(matches!(
+            Args::parse(&argv(&["--bogus"]), &specs()),
+            Err(CliError::Unknown(_))
+        ));
+        assert!(matches!(
+            Args::parse(&argv(&["--name"]), &specs()),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn typed_accessors_validate() {
+        let a = Args::parse(&argv(&["--n", "abc"]), &specs()).unwrap();
+        assert!(matches!(a.usize("n"), Err(CliError::BadValue(..))));
+        let a = Args::parse(&argv(&["--ls", "1, 2,3"]), &specs()).unwrap();
+        assert_eq!(a.usize_list("ls").unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn usage_mentions_every_option() {
+        let u = usage("demo", "Demo command", &specs());
+        for o in specs() {
+            assert!(u.contains(o.name));
+        }
+    }
+}

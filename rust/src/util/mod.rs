@@ -1,0 +1,12 @@
+//! Support substrates built from scratch for the offline image (no tokio /
+//! clap / serde / rand / criterion / proptest in the vendored crate set).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod quickcheck;
+pub mod stats;
+pub mod svgplot;
+pub mod threadpool;

@@ -1,0 +1,194 @@
+//! Property-based testing mini-framework (no `proptest` in the image).
+//!
+//! Usage:
+//! ```ignore
+//! property("dist symmetry", 200, |g| {
+//!     let a = g.string(0..12);
+//!     let b = g.string(0..12);
+//!     prop_assert(levenshtein(&a, &b) == levenshtein(&b, &a), "symmetry")
+//! });
+//! ```
+//!
+//! On failure the framework re-runs the property on progressively simpler
+//! inputs by *re-generating with smaller size bounds* (size-based shrinking:
+//! cruder than structural shrinking, but effective because all our
+//! generators honour the `size` knob) and reports the smallest failing seed
+//! so the case can be replayed deterministically.
+
+use super::prng::Rng;
+
+/// Generator handle passed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Current size bound (shrunk on failure re-runs).
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self { rng: Rng::new(seed), size }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    /// Length in [lo, min(hi, lo + size)] — honours the shrink knob.
+    pub fn len_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size);
+        self.usize_in(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Lowercase ASCII string with length in `lo..=hi` (size-bounded).
+    pub fn string(&mut self, lo: usize, hi: usize) -> String {
+        let n = self.len_in(lo, hi);
+        (0..n)
+            .map(|_| (b'a' + self.rng.index(26) as u8) as char)
+            .collect()
+    }
+
+    /// Unicode-ish string mixing ASCII, accents and a few multibyte chars.
+    pub fn unicode_string(&mut self, lo: usize, hi: usize) -> String {
+        const POOL: &[char] = &[
+            'a', 'b', 'z', 'é', 'ü', 'ß', 'ñ', '中', '🙂', ' ', '-', '\'',
+        ];
+        let n = self.len_in(lo, hi);
+        (0..n).map(|_| POOL[self.rng.index(POOL.len())]).collect()
+    }
+
+    pub fn vec_f32(&mut self, lo: usize, hi: usize, scale: f32) -> Vec<f32> {
+        let n = self.len_in(lo, hi);
+        (0..n)
+            .map(|_| (self.rng.next_normal() as f32) * scale)
+            .collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.index(items.len())]
+    }
+}
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+pub fn prop_assert_close(a: f64, b: f64, tol: f64, msg: &str) -> PropResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Run `prop` for `cases` random cases. Panics with a replayable report on
+/// the first failure, after size-shrinking to the simplest failing size.
+pub fn property(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> PropResult) {
+    // Deterministic base seed per property name so failures replay.
+    let base = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+        });
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let size = 4 + (case % 64); // grow sizes over cases
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            // shrink: retry same seed with smaller sizes, keep smallest fail
+            let mut smallest = (size, msg);
+            let mut s = size / 2;
+            loop {
+                let mut g = Gen::new(seed, s);
+                if let Err(m) = prop(&mut g) {
+                    smallest = (s, m);
+                    if s == 0 {
+                        break;
+                    }
+                    s /= 2;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, \
+                 shrunk size {}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        property("add commutes", 50, |g| {
+            counter.set(counter.get() + 1);
+            let a = g.u64() >> 2;
+            let b = g.u64() >> 2;
+            prop_assert(a + b == b + a, "commutativity")
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_context() {
+        property("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_reports_small_size() {
+        let result = std::panic::catch_unwind(|| {
+            property("fails on len>=3", 100, |g| {
+                let s = g.string(0, 50);
+                prop_assert(s.len() < 3, "long string")
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // the shrink loop must have reduced the size bound below the start
+        assert!(msg.contains("shrunk size"), "{msg}");
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut g = Gen::new(1, 16);
+        for _ in 0..200 {
+            let n = g.usize_in(3, 9);
+            assert!((3..=9).contains(&n));
+            let s = g.string(2, 6);
+            assert!((2..=6).contains(&s.len()));
+            let x = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Summary statistics, quantiles and fixed-bucket histograms — the numeric
+//! backbone of the metrics module, the bench harness and the figure
+//! reproductions (Fig 3 needs PErr distributions, Fig 4 mean RTs).
+
+/// Streaming mean/variance (Welford) with min/max tracking.
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Quantile of a sample via linear interpolation (type-7, the R default —
+/// matches what the paper's R analysis would have produced).
+pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "quantile of empty sample");
+    assert!((0.0..=1.0).contains(&q), "q={q} out of range");
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let h = (n - 1) as f64 * q;
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    let frac = h - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Sorts a copy and returns (p50, p95, p99).
+pub fn percentiles(xs: &[f64]) -> (f64, f64, f64) {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (quantile(&v, 0.5), quantile(&v, 0.95), quantile(&v, 0.99))
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile(&v, 0.5)
+}
+
+/// Fixed-width histogram over [lo, hi); out-of-range values clamp to the
+/// edge buckets so nothing is silently dropped.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub buckets: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbuckets: usize) -> Self {
+        assert!(hi > lo && nbuckets > 0);
+        Self { lo, hi, buckets: vec![0; nbuckets] }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let nb = self.buckets.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * nb as f64).floor() as i64).clamp(0, nb as i64 - 1);
+        self.buckets[idx as usize] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn bucket_mid(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.buckets.len() as f64;
+        self.lo + w * (i as f64 + 0.5)
+    }
+
+    /// Terminal sparkline for quick visual checks in example binaries.
+    pub fn render(&self, width: usize) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.buckets.iter().copied().max().unwrap_or(0).max(1);
+        let step = (self.buckets.len() as f64 / width.max(1) as f64).max(1.0);
+        let mut out = String::new();
+        let mut i = 0.0;
+        while (i as usize) < self.buckets.len() && out.chars().count() < width {
+            let b = self.buckets[i as usize];
+            let level = ((b as f64 / max as f64) * 7.0).round() as usize;
+            out.push(BARS[level.min(7)]);
+            i += step;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_matches_direct() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut r = Running::new();
+        for x in xs {
+            r.push(x);
+        }
+        assert_eq!(r.count(), 8);
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - 5.0f64).powi(2)).sum::<f64>() / 7.0;
+        assert!((r.var() - var).abs() < 1e-12);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+    }
+
+    #[test]
+    fn quantile_type7_matches_r() {
+        // R: quantile(c(1,2,3,4), c(.25,.5,.9)) -> 1.75 2.50 3.70
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert!((quantile(&v, 0.25) - 1.75).abs() < 1e-12);
+        assert!((quantile(&v, 0.5) - 2.5).abs() < 1e-12);
+        assert!((quantile(&v, 0.9) - 3.7).abs() < 1e-9);
+        assert_eq!(quantile(&v, 0.0), 1.0);
+        assert_eq!(quantile(&v, 1.0), 4.0);
+    }
+
+    #[test]
+    fn percentiles_ordering() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let (p50, p95, p99) = percentiles(&xs);
+        assert!(p50 < p95 && p95 < p99);
+        assert!((p50 - 499.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_counts_and_clamping() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        for i in 0..100 {
+            h.push(i as f64 / 100.0);
+        }
+        h.push(-5.0); // clamps into bucket 0
+        h.push(5.0); // clamps into bucket 9
+        assert_eq!(h.total(), 102);
+        assert_eq!(h.buckets[0], 11);
+        assert_eq!(h.buckets[9], 11);
+        assert!((h.bucket_mid(0) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_has_requested_width() {
+        let mut h = Histogram::new(0.0, 1.0, 40);
+        for i in 0..1000 {
+            h.push((i % 40) as f64 / 40.0);
+        }
+        assert_eq!(h.render(20).chars().count(), 20);
+    }
+}

@@ -1,0 +1,255 @@
+//! Minimal SVG chart writer — renders the figure JSON under `results/`
+//! into actual figure files (line charts for Figs 1/4, scatter for Fig 2),
+//! since the image has no plotting stack.
+
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+    pub color: &'static str,
+}
+
+#[derive(Clone, Debug)]
+pub struct Chart {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub log_y: bool,
+    pub series: Vec<Series>,
+    /// scatter (markers only) vs line chart
+    pub scatter: bool,
+}
+
+const W: f64 = 640.0;
+const H: f64 = 420.0;
+const ML: f64 = 70.0; // margins
+const MR: f64 = 20.0;
+const MT: f64 = 40.0;
+const MB: f64 = 55.0;
+
+impl Chart {
+    pub fn line(title: &str, x_label: &str, y_label: &str) -> Chart {
+        Chart {
+            title: title.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            log_y: false,
+            series: vec![],
+            scatter: false,
+        }
+    }
+
+    pub fn add(&mut self, label: &str, color: &'static str, points: Vec<(f64, f64)>) {
+        self.series.push(Series { label: label.into(), points, color });
+    }
+
+    fn bounds(&self) -> (f64, f64, f64, f64) {
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                let y = if self.log_y { y.max(1e-12).log10() } else { y };
+                x0 = x0.min(x);
+                x1 = x1.max(x);
+                y0 = y0.min(y);
+                y1 = y1.max(y);
+            }
+        }
+        if !x0.is_finite() {
+            return (0.0, 1.0, 0.0, 1.0);
+        }
+        if (x1 - x0).abs() < 1e-12 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let pad = (y1 - y0) * 0.08;
+        (x0, x1, y0 - pad, y1 + pad)
+    }
+
+    pub fn render(&self) -> String {
+        let (x0, x1, y0, y1) = self.bounds();
+        let sx = |x: f64| ML + (x - x0) / (x1 - x0) * (W - ML - MR);
+        let sy = |y: f64| {
+            let y = if self.log_y { y.max(1e-12).log10() } else { y };
+            H - MB - (y - y0) / (y1 - y0) * (H - MT - MB)
+        };
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{W}" height="{H}" viewBox="0 0 {W} {H}">"#
+        );
+        let _ = write!(
+            s,
+            r#"<rect width="{W}" height="{H}" fill="white"/><text x="{:.0}" y="24" font-size="15" text-anchor="middle" font-family="sans-serif">{}</text>"#,
+            W / 2.0,
+            esc(&self.title)
+        );
+        // axes
+        let _ = write!(
+            s,
+            r#"<line x1="{ML}" y1="{MT}" x2="{ML}" y2="{:.1}" stroke="black"/><line x1="{ML}" y1="{:.1}" x2="{:.1}" y2="{:.1}" stroke="black"/>"#,
+            H - MB,
+            H - MB,
+            W - MR,
+            H - MB
+        );
+        // ticks (5 per axis)
+        for i in 0..=4 {
+            let fx = x0 + (x1 - x0) * i as f64 / 4.0;
+            let px = sx(fx);
+            let _ = write!(
+                s,
+                r#"<line x1="{px:.1}" y1="{:.1}" x2="{px:.1}" y2="{:.1}" stroke="black"/><text x="{px:.1}" y="{:.1}" font-size="11" text-anchor="middle" font-family="sans-serif">{}</text>"#,
+                H - MB,
+                H - MB + 5.0,
+                H - MB + 18.0,
+                fmt_tick(fx)
+            );
+            let fy = y0 + (y1 - y0) * i as f64 / 4.0;
+            let py = H - MB - (fy - y0) / (y1 - y0) * (H - MT - MB);
+            let label = if self.log_y { 10f64.powf(fy) } else { fy };
+            let _ = write!(
+                s,
+                r#"<line x1="{:.1}" y1="{py:.1}" x2="{ML}" y2="{py:.1}" stroke="black"/><text x="{:.1}" y="{:.1}" font-size="11" text-anchor="end" font-family="sans-serif">{}</text>"#,
+                ML - 5.0,
+                ML - 8.0,
+                py + 4.0,
+                fmt_tick(label)
+            );
+        }
+        // axis labels
+        let _ = write!(
+            s,
+            r#"<text x="{:.0}" y="{:.0}" font-size="13" text-anchor="middle" font-family="sans-serif">{}</text>"#,
+            (ML + W - MR) / 2.0,
+            H - 12.0,
+            esc(&self.x_label)
+        );
+        let _ = write!(
+            s,
+            r#"<text x="16" y="{:.0}" font-size="13" text-anchor="middle" font-family="sans-serif" transform="rotate(-90 16 {:.0})">{}</text>"#,
+            (MT + H - MB) / 2.0,
+            (MT + H - MB) / 2.0,
+            esc(&self.y_label)
+        );
+        // series
+        for (si, ser) in self.series.iter().enumerate() {
+            if !self.scatter && ser.points.len() > 1 {
+                let mut path = String::new();
+                for (i, &(x, y)) in ser.points.iter().enumerate() {
+                    let _ = write!(
+                        path,
+                        "{}{:.1},{:.1} ",
+                        if i == 0 { "M" } else { "L" },
+                        sx(x),
+                        sy(y)
+                    );
+                }
+                let _ = write!(
+                    s,
+                    r#"<path d="{path}" fill="none" stroke="{}" stroke-width="2"/>"#,
+                    ser.color
+                );
+            }
+            for &(x, y) in &ser.points {
+                let _ = write!(
+                    s,
+                    r#"<circle cx="{:.1}" cy="{:.1}" r="3" fill="{}"/>"#,
+                    sx(x),
+                    sy(y),
+                    ser.color
+                );
+            }
+            // legend
+            let ly = MT + 8.0 + si as f64 * 18.0;
+            let _ = write!(
+                s,
+                r#"<rect x="{:.1}" y="{:.1}" width="12" height="12" fill="{}"/><text x="{:.1}" y="{:.1}" font-size="12" font-family="sans-serif">{}</text>"#,
+                W - MR - 170.0,
+                ly - 10.0,
+                ser.color,
+                W - MR - 152.0,
+                ly,
+                esc(&ser.label)
+            );
+        }
+        s.push_str("</svg>");
+        s
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+fn fmt_tick(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1e5 || v.abs() < 1e-3 {
+        format!("{v:.1e}")
+    } else if v.fract().abs() < 1e-9 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chart() -> Chart {
+        let mut c = Chart::line("Test", "L", "Err");
+        c.add("opt", "#d62728", vec![(100.0, 90.0), (500.0, 75.0), (1000.0, 72.0)]);
+        c.add("nn", "#1f77b4", vec![(100.0, 88.0), (500.0, 89.0), (1000.0, 88.0)]);
+        c
+    }
+
+    #[test]
+    fn renders_valid_svg_skeleton() {
+        let svg = chart().render();
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>"));
+        assert!(svg.contains("Test"));
+        assert!(svg.contains("opt"));
+        assert!(svg.matches("<path").count() == 2);
+        assert!(svg.matches("<circle").count() == 6);
+    }
+
+    #[test]
+    fn log_scale_monotone_mapping() {
+        let mut c = chart();
+        c.log_y = true;
+        let svg = c.render();
+        assert!(svg.contains("<svg"));
+    }
+
+    #[test]
+    fn escapes_labels() {
+        let mut c = Chart::line("a<b & c", "x", "y");
+        c.add("s", "#000", vec![(0.0, 1.0)]);
+        let svg = c.render();
+        assert!(svg.contains("a&lt;b &amp; c"));
+        assert!(!svg.contains("a<b"));
+    }
+
+    #[test]
+    fn empty_chart_does_not_panic() {
+        let c = Chart::line("empty", "x", "y");
+        let svg = c.render();
+        assert!(svg.contains("</svg>"));
+    }
+
+    #[test]
+    fn scatter_mode_omits_paths() {
+        let mut c = chart();
+        c.scatter = true;
+        let svg = c.render();
+        assert_eq!(svg.matches("<path").count(), 0);
+        assert!(svg.matches("<circle").count() >= 6);
+    }
+}

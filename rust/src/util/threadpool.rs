@@ -1,0 +1,221 @@
+//! Scoped data-parallelism without rayon/tokio: a chunked parallel-for built
+//! on `std::thread::scope`, plus a small persistent worker pool for the
+//! coordinator's request handlers.
+//!
+//! The dissimilarity-matrix build (O(L·M) Levenshtein calls) and the batched
+//! OSE evaluation dominate CPU time outside PJRT; both are embarrassingly
+//! parallel over rows, which is exactly the shape `parallel_for_chunks`
+//! provides.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// Number of worker threads to use: all cores, capped (the PJRT CPU client
+/// also spins up its own pool; leaving a little headroom avoids thrash).
+pub fn default_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 32)
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n` on `threads` threads.
+/// Work is distributed dynamically (atomic cursor) so ragged per-item costs
+/// (e.g. Levenshtein on variable-length strings) balance automatically.
+pub fn parallel_for_chunks<F>(n: usize, chunk: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n.div_ceil(chunk).max(1));
+    if threads == 1 {
+        let mut start = 0;
+        while start < n {
+            f(start, (start + chunk).min(n));
+            start += chunk;
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                f(start, (start + chunk).min(n));
+            });
+        }
+    });
+}
+
+/// Map `0..n` in parallel into a pre-allocated output vector.
+/// `f(i)` must be pure w.r.t. index i.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots = SyncSlice::new(&mut out);
+        parallel_for_chunks(n, 64, threads, |start, end| {
+            for i in start..end {
+                // SAFETY: each index is written by exactly one chunk owner.
+                unsafe { slots.write(i, f(i)) };
+            }
+        });
+    }
+    out
+}
+
+/// Shared mutable slice with caller-guaranteed disjoint index ownership.
+pub struct SyncSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Sync for SyncSlice<'_, T> {}
+unsafe impl<T: Send> Send for SyncSlice<'_, T> {}
+
+impl<'a, T> SyncSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        Self {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// # Safety
+    /// Each index must be written by at most one thread, and not read while
+    /// the parallel section is live.
+    pub unsafe fn write(&self, i: usize, value: T) {
+        debug_assert!(i < self.len);
+        unsafe { self.ptr.add(i).write(value) };
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A small persistent worker pool (FIFO) for the serving path, where
+/// per-request `thread::scope` spawning would dominate the sub-millisecond
+/// latency budget.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> Self {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let handles = (0..threads.max(1))
+            .map(|_| {
+                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            job();
+                            queued.fetch_sub(1, Ordering::Relaxed);
+                        }
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Self { tx: Some(tx), handles, queued }
+    }
+
+    /// Queue depth (jobs submitted but not yet finished).
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker pool hung up");
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let n = 10_001;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_chunks(n, 37, 8, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_handles_empty_and_tiny() {
+        parallel_for_chunks(0, 16, 4, |_, _| panic!("should not run"));
+        let count = AtomicUsize::new(0);
+        parallel_for_chunks(1, 16, 4, |s, e| {
+            count.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let got = parallel_map(1000, 8, |i| (i * i) as u64);
+        let want: Vec<u64> = (0..1000u64).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn worker_pool_runs_all_jobs() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for i in 0..500u64 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(i, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // joins workers
+        assert_eq!(counter.load(Ordering::Relaxed), (0..500).sum::<u64>());
+    }
+}

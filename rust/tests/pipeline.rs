@@ -1,0 +1,136 @@
+//! Integration: the full two-stage pipeline over the PJRT runtime,
+//! exercising landmark selection -> LSMDS artifact -> NN training artifact
+//! -> OSE artifact as one composition (plus pure-Rust parity checks).
+
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+use lmds_ose::coordinator::embedder::{embed_dataset, OseBackend, PipelineConfig};
+use lmds_ose::coordinator::trainer::TrainConfig;
+use lmds_ose::data::{Geco, GecoConfig};
+use lmds_ose::mds::dissimilarity::cross_matrix;
+use lmds_ose::mds::stress::total_error;
+use lmds_ose::mds::LsmdsConfig;
+use lmds_ose::runtime::{default_artifact_dir, RuntimeHandle, RuntimeThread};
+use lmds_ose::strdist::Levenshtein;
+
+static RT: Lazy<Option<Mutex<RuntimeThread>>> = Lazy::new(|| {
+    RuntimeThread::spawn(&default_artifact_dir()).ok().map(Mutex::new)
+});
+
+fn handle() -> Option<RuntimeHandle> {
+    RT.as_ref().map(|m| m.lock().unwrap().handle())
+}
+
+fn smoke_cfg(backend: OseBackend) -> PipelineConfig {
+    PipelineConfig {
+        dim: 7,
+        landmarks: 32,
+        backend,
+        hidden: [32, 16, 8], // matches the smoke artifacts
+        lsmds: LsmdsConfig { dim: 7, max_iters: 100, ..Default::default() },
+        train: TrainConfig { epochs: 40, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn names(n: usize, seed: u64) -> Vec<String> {
+    let mut geco = Geco::new(GecoConfig { seed, ..Default::default() });
+    geco.generate_unique(n)
+}
+
+#[test]
+fn pjrt_pipeline_nn_backend_end_to_end() {
+    let Some(h) = handle() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let names = names(150, 21);
+    let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let mut r =
+        embed_dataset(&objs, &Levenshtein, &smoke_cfg(OseBackend::Nn), Some(&h))
+            .unwrap();
+    // the PJRT paths must actually have been taken
+    assert_eq!(r.method.name(), "nn-pjrt");
+    assert_eq!(r.coords.rows, 150);
+    assert!(r.coords.data.iter().all(|v| v.is_finite()));
+    // the returned method serves fresh queries through the artifact
+    let lm_names: Vec<&str> = r.landmark_idx.iter().map(|&i| objs[i]).collect();
+    let q = cross_matrix(&["john smith", "jessica nguyen"], &lm_names, &Levenshtein);
+    let y = r.method.embed(&q).unwrap();
+    assert_eq!((y.rows, y.cols), (2, 7));
+}
+
+#[test]
+fn pjrt_pipeline_opt_backend_end_to_end() {
+    let Some(h) = handle() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let names = names(150, 22);
+    let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let mut r =
+        embed_dataset(&objs, &Levenshtein, &smoke_cfg(OseBackend::Opt), Some(&h))
+            .unwrap();
+    assert_eq!(r.method.name(), "opt-pjrt");
+    assert_eq!(r.coords.rows, 150);
+    assert!(r.coords.data.iter().all(|v| v.is_finite()));
+    let lm_names: Vec<&str> = r.landmark_idx.iter().map(|&i| objs[i]).collect();
+    let q = cross_matrix(&["maria garcia"], &lm_names, &Levenshtein);
+    let y = r.method.embed(&q).unwrap();
+    assert_eq!((y.rows, y.cols), (1, 7));
+}
+
+#[test]
+fn pjrt_and_rust_opt_backends_agree_on_quality() {
+    let Some(h) = handle() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let all = names(180, 23);
+    let (train, test) = all.split_at(150);
+    let objs: Vec<&str> = train.iter().map(|s| s.as_str()).collect();
+    let cfg = smoke_cfg(OseBackend::Opt);
+
+    let mut with_pjrt = embed_dataset(&objs, &Levenshtein, &cfg, Some(&h)).unwrap();
+    let mut rust_only = embed_dataset(&objs, &Levenshtein, &cfg, None).unwrap();
+    assert_eq!(with_pjrt.method.name(), "opt-pjrt");
+    assert_eq!(rust_only.method.name(), "opt-rust");
+
+    // score both pipelines' OSE on held-out queries against their own
+    // configurations: quality (total error) must be comparable
+    let score = |r: &mut lmds_ose::coordinator::PipelineResult| {
+        let lm_names: Vec<&str> =
+            r.landmark_idx.iter().map(|&i| objs[i]).collect();
+        let test_refs: Vec<&str> = test.iter().map(|s| s.as_str()).collect();
+        let q = cross_matrix(&test_refs, &lm_names, &Levenshtein);
+        let y = r.method.embed(&q).unwrap();
+        let delta_new = cross_matrix(
+            &test_refs,
+            &objs.iter().copied().collect::<Vec<_>>(),
+            &Levenshtein,
+        );
+        total_error(&r.coords, &delta_new, &y)
+    };
+    let e_pjrt = score(&mut with_pjrt);
+    let e_rust = score(&mut rust_only);
+    assert!(e_pjrt.is_finite() && e_rust.is_finite());
+    // different inits/configs, same algorithm family: within 2x
+    assert!(
+        e_pjrt < 2.0 * e_rust + 1.0 && e_rust < 2.0 * e_pjrt + 1.0,
+        "quality diverges: pjrt {e_pjrt} vs rust {e_rust}"
+    );
+}
+
+#[test]
+fn pipeline_deterministic_for_seed() {
+    // pure-Rust path: identical seeds must give identical coordinates
+    let names = names(100, 24);
+    let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let cfg = smoke_cfg(OseBackend::Opt);
+    let a = embed_dataset(&objs, &Levenshtein, &cfg, None).unwrap();
+    let b = embed_dataset(&objs, &Levenshtein, &cfg, None).unwrap();
+    assert_eq!(a.landmark_idx, b.landmark_idx);
+    assert_eq!(a.coords.data, b.coords.data);
+}

@@ -1,0 +1,244 @@
+//! Cross-module property tests (the S6 mini-framework): invariants that
+//! span the dissimilarity engine, the MDS metrics, the OSE methods, the
+//! Geco generator and the serving path.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use lmds_ose::coordinator::{BatcherConfig, Server};
+use lmds_ose::data::{Geco, GecoConfig};
+use lmds_ose::mds::dissimilarity::{cross_matrix, full_matrix};
+use lmds_ose::mds::stress::{point_error, raw_stress, total_error};
+use lmds_ose::mds::Matrix;
+use lmds_ose::nn::{MlpParams, MlpShape};
+use lmds_ose::ose::{embed_point, OseOptConfig, RustNn};
+use lmds_ose::strdist::{euclidean, levenshtein, Levenshtein};
+use lmds_ose::util::json::Json;
+use lmds_ose::util::prng::Rng;
+use lmds_ose::util::quickcheck::{prop_assert, prop_assert_close, property, Gen};
+
+fn random_config(g: &mut Gen, n: usize, k: usize) -> Matrix {
+    Matrix::from_vec(n, k, (0..n * k).map(|_| g.f32_in(-3.0, 3.0)).collect())
+}
+
+fn distances_of(x: &Matrix) -> Matrix {
+    let n = x.rows;
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            d.set(i, j, euclidean(x.row(i), x.row(j)) as f32);
+        }
+    }
+    d
+}
+
+#[test]
+fn stress_zero_iff_realizable() {
+    property("stress == 0 iff delta realizable", 60, |g| {
+        let n = g.usize_in(3, 12);
+        let k = g.usize_in(1, 4);
+        let x = random_config(g, n, k);
+        let delta = distances_of(&x);
+        prop_assert(raw_stress(&x, &delta) < 1e-6, "realizable => zero stress")?;
+        // perturb one dissimilarity: stress must become positive
+        let mut bad = delta.clone();
+        let (i, j) = (0, n - 1);
+        if i != j {
+            bad.set(i, j, bad.at(i, j) + 1.0);
+            bad.set(j, i, bad.at(j, i) + 1.0);
+            prop_assert(raw_stress(&x, &bad) > 0.5, "perturbed => positive stress")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn total_error_decomposes_and_scales() {
+    property("Err(m) sums weighted point residuals", 40, |g| {
+        let n = g.usize_in(3, 10);
+        let m = g.usize_in(1, 5);
+        let k = g.usize_in(1, 3);
+        let config = random_config(g, n, k);
+        let y = random_config(g, m, k);
+        let delta = Matrix::from_vec(
+            m,
+            n,
+            (0..m * n).map(|_| g.f32_in(0.1, 5.0)).collect(),
+        );
+        let total = total_error(&config, &delta, &y);
+        prop_assert(total >= 0.0 && total.is_finite(), "non-negative finite")?;
+        // manual recomputation
+        let mut want = 0.0f64;
+        for j in 0..m {
+            for i in 0..n {
+                let d = euclidean(config.row(i), y.row(j));
+                let dl = delta.at(j, i) as f64;
+                want += (dl - d).powi(2) / dl;
+            }
+        }
+        prop_assert_close(total, want, 1e-6 * (1.0 + want), "decomposition")
+    });
+}
+
+#[test]
+fn ose_optimisation_never_worsens_objective() {
+    property("majorization monotone from any start", 40, |g| {
+        let l = g.usize_in(3, 30);
+        let k = g.usize_in(1, 5);
+        let lm = random_config(g, l, k);
+        let delta: Vec<f32> = (0..l).map(|_| g.f32_in(0.1, 6.0)).collect();
+        let y0: Vec<f32> = (0..k).map(|_| g.f32_in(-2.0, 2.0)).collect();
+        let p1 = embed_point(&lm, &delta, Some(&y0), &OseOptConfig {
+            max_iters: 1,
+            rel_tol: 0.0,
+        });
+        let p50 = embed_point(&lm, &delta, Some(&y0), &OseOptConfig {
+            max_iters: 50,
+            rel_tol: 0.0,
+        });
+        prop_assert(
+            p50.objective <= p1.objective + 1e-6 * (1.0 + p1.objective),
+            &format!("{} -> {}", p1.objective, p50.objective),
+        )
+    });
+}
+
+#[test]
+fn ose_point_error_bounded_by_objective_triangle() {
+    // PErr against the landmarks only (delta restricted) equals the Eq.-2
+    // objective at the final iterate
+    property("PErr over landmarks == objective", 40, |g| {
+        let l = g.usize_in(3, 20);
+        let k = g.usize_in(1, 4);
+        let lm = random_config(g, l, k);
+        let delta: Vec<f32> = (0..l).map(|_| g.f32_in(0.1, 6.0)).collect();
+        let p = embed_point(&lm, &delta, None, &OseOptConfig::default());
+        let perr = point_error(&lm, &delta, &p.coords);
+        prop_assert_close(perr, p.objective, 1e-4 * (1.0 + perr), "identity")
+    });
+}
+
+#[test]
+fn dissimilarity_matrices_consistent() {
+    property("full vs cross vs scalar agree", 30, |g| {
+        let n = g.usize_in(2, 12);
+        let mut geco = Geco::new(GecoConfig { seed: g.u64(), ..Default::default() });
+        let names = geco.generate_unique(n);
+        let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let full = full_matrix(&objs, &Levenshtein);
+        let cross = cross_matrix(&objs, &objs, &Levenshtein);
+        for i in 0..n {
+            for j in 0..n {
+                let want = levenshtein(&names[i], &names[j]) as f32;
+                prop_assert(full.at(i, j) == want, "full entry")?;
+                prop_assert(cross.at(i, j) == want, "cross entry")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn geco_corruption_edit_distance_bounded() {
+    property("k corruptions move <= 4k edits", 80, |g| {
+        let seed = g.u64();
+        let k = g.usize_in(1, 4);
+        let mut geco = Geco::new(GecoConfig { seed, ..Default::default() });
+        let name = geco.sample_name();
+        let mut s = name.clone();
+        for _ in 0..k {
+            s = geco.corrupt(&s);
+        }
+        let d = levenshtein(&name, &s);
+        prop_assert(d <= 4 * k, &format!("{name:?} -> {s:?}: d={d} k={k}"))
+    });
+}
+
+#[test]
+fn json_round_trips_arbitrary_values() {
+    property("json round-trip", 120, |g| {
+        // build a random JSON value of bounded depth
+        fn build(g: &mut Gen, depth: usize) -> Json {
+            match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+                3 => Json::Str(g.unicode_string(0, 12)),
+                4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| build(g, depth - 1)).collect()),
+                _ => {
+                    let mut m = std::collections::BTreeMap::new();
+                    for _ in 0..g.usize_in(0, 4) {
+                        m.insert(g.string(0, 8), build(g, depth - 1));
+                    }
+                    Json::Obj(m)
+                }
+            }
+        }
+        let v = build(g, 3);
+        let compact = Json::parse(&v.to_string()).map_err(|e| e.to_string())?;
+        let pretty = Json::parse(&v.to_string_pretty()).map_err(|e| e.to_string())?;
+        prop_assert(compact == v, "compact round-trip")?;
+        prop_assert(pretty == v, "pretty round-trip")
+    });
+}
+
+#[test]
+fn server_never_drops_or_duplicates() {
+    // fire N concurrent queries; exactly N distinct replies, none lost
+    let mut rng = Rng::new(99);
+    let landmarks: Vec<String> = (0..16).map(|i| format!("lm{i}")).collect();
+    let params = MlpParams::init(
+        &MlpShape { input: 16, hidden: [8, 8, 8], output: 3 },
+        &mut rng,
+    );
+    let server = Server::start(
+        landmarks,
+        Arc::new(Levenshtein),
+        Box::new(RustNn { params }),
+        BatcherConfig {
+            max_batch: 7, // deliberately not a divisor of the load
+            max_delay: Duration::from_millis(1),
+            queue_cap: 32, // small: exercises backpressure
+            frontend_threads: 3,
+        },
+    );
+    let sh = server.handle();
+    let n = 500;
+    let rxs: Vec<_> = (0..n).map(|i| sh.query(format!("query {i}"))).collect();
+    let mut ok = 0;
+    for rx in rxs {
+        // every receiver yields exactly one result
+        let r = rx.recv().expect("reply must arrive");
+        assert!(r.is_ok());
+        ok += 1;
+        assert!(rx.try_recv().is_err(), "duplicate reply");
+    }
+    assert_eq!(ok, n);
+    let snap = sh.metrics.snapshot();
+    assert_eq!(snap.completed, n as u64);
+    assert_eq!(snap.failed, 0);
+    drop(sh);
+    server.shutdown();
+}
+
+#[test]
+fn nn_embedding_is_lipschitz_in_input() {
+    // small input perturbations must not explode through the MLP (sanity
+    // bound on the learned map's continuity; catches NaN/inf weight bugs)
+    property("mlp forward is continuous", 40, |g| {
+        let l = g.usize_in(4, 24);
+        let mut rng = Rng::new(g.u64());
+        let params = MlpParams::init(
+            &MlpShape { input: l, hidden: [16, 16, 8], output: 3 },
+            &mut rng,
+        );
+        let base: Vec<f32> = (0..l).map(|_| g.f32_in(0.0, 5.0)).collect();
+        let mut pert = base.clone();
+        let idx = g.usize_in(0, l - 1);
+        pert[idx] += 0.01;
+        let a = lmds_ose::nn::forward(&params, &Matrix::from_vec(1, l, base));
+        let b = lmds_ose::nn::forward(&params, &Matrix::from_vec(1, l, pert));
+        let diff = a.max_abs_diff(&b);
+        prop_assert(diff.is_finite() && diff < 10.0, &format!("diff {diff}"))
+    });
+}

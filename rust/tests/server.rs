@@ -1,0 +1,145 @@
+//! Integration: the streaming OSE service over the PJRT NN method —
+//! requests flow frontend -> batcher -> PJRT executor and back.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use once_cell::sync::Lazy;
+
+use lmds_ose::coordinator::methods::PjrtNn;
+use lmds_ose::coordinator::{BatcherConfig, Server};
+use lmds_ose::data::{Geco, GecoConfig};
+use lmds_ose::nn::{MlpParams, MlpShape};
+use lmds_ose::runtime::{default_artifact_dir, RuntimeHandle, RuntimeThread};
+use lmds_ose::strdist::Levenshtein;
+use lmds_ose::util::prng::Rng;
+
+static RT: Lazy<Option<Mutex<RuntimeThread>>> = Lazy::new(|| {
+    RuntimeThread::spawn(&default_artifact_dir()).ok().map(Mutex::new)
+});
+
+fn handle() -> Option<RuntimeHandle> {
+    RT.as_ref().map(|m| m.lock().unwrap().handle())
+}
+
+fn start_pjrt_server(h: RuntimeHandle, max_batch: usize) -> Server {
+    let mut rng = Rng::new(31);
+    let mut geco = Geco::new(GecoConfig { seed: 77, ..Default::default() });
+    let landmarks = geco.generate_unique(32);
+    let params = MlpParams::init(
+        &MlpShape { input: 32, hidden: [32, 16, 8], output: 7 },
+        &mut rng,
+    );
+    Server::start(
+        landmarks,
+        Arc::new(Levenshtein),
+        Box::new(PjrtNn::new(h, &params)),
+        BatcherConfig {
+            max_batch,
+            max_delay: Duration::from_millis(2),
+            queue_cap: 512,
+            frontend_threads: 2,
+        },
+    )
+}
+
+#[test]
+fn pjrt_backed_service_serves_queries() {
+    let Some(h) = handle() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let server = start_pjrt_server(h, 8);
+    let sh = server.handle();
+    let mut geco = Geco::new(GecoConfig { seed: 78, ..Default::default() });
+    let rxs: Vec<_> = (0..100)
+        .map(|_| sh.query(geco.sample_name()))
+        .collect();
+    for rx in rxs {
+        let r = rx.recv().unwrap().unwrap();
+        assert_eq!(r.coords.len(), 7);
+        assert!(r.coords.iter().all(|c| c.is_finite()));
+    }
+    let snap = sh.metrics.snapshot();
+    assert_eq!(snap.completed, 100);
+    assert_eq!(snap.failed, 0);
+    assert!(snap.batches >= 100 / 8, "batches = {}", snap.batches);
+    drop(sh);
+    server.shutdown();
+}
+
+#[test]
+fn pjrt_service_batches_and_is_deterministic() {
+    let Some(h) = handle() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let server = start_pjrt_server(h, 8);
+    let sh = server.handle();
+    // identical queries must give identical coordinates regardless of the
+    // batch they landed in (padding must not leak)
+    let rx1: Vec<_> = (0..16).map(|_| sh.query("anna smith".into())).collect();
+    let first: Vec<Vec<f32>> = rx1
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().unwrap().coords)
+        .collect();
+    for c in &first {
+        assert_eq!(c, &first[0]);
+    }
+    // and a lone straggler (padded batch of 1) agrees too
+    std::thread::sleep(Duration::from_millis(10));
+    let solo = sh.query_sync("anna smith").unwrap();
+    let max_diff = solo
+        .coords
+        .iter()
+        .zip(first[0].iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "padding leaked into results: {max_diff}");
+    drop(sh);
+    server.shutdown();
+}
+
+#[test]
+fn service_single_query_latency_under_paper_bound() {
+    // paper Sec. 6: NN maps a new point in < 1 ms. Measure the steady-state
+    // single-query path (batcher delay excluded: use max_delay=0-ish).
+    let Some(h) = handle() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rng = Rng::new(41);
+    let mut geco = Geco::new(GecoConfig { seed: 79, ..Default::default() });
+    let landmarks = geco.generate_unique(32);
+    let params = MlpParams::init(
+        &MlpShape { input: 32, hidden: [32, 16, 8], output: 7 },
+        &mut rng,
+    );
+    let server = Server::start(
+        landmarks,
+        Arc::new(Levenshtein),
+        Box::new(PjrtNn::new(h, &params)),
+        BatcherConfig {
+            max_batch: 1,
+            max_delay: Duration::from_micros(100),
+            queue_cap: 64,
+            frontend_threads: 1,
+        },
+    );
+    let sh = server.handle();
+    // warm the executable
+    for _ in 0..20 {
+        sh.query_sync("warmup query").unwrap();
+    }
+    let mut lat = Vec::new();
+    for i in 0..50 {
+        let r = sh.query_sync(&format!("query {i}")).unwrap();
+        lat.push(r.latency.as_secs_f64());
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = lat[lat.len() / 2];
+    // generous CI bound; the bench harness reports the tight number
+    assert!(p50 < 0.05, "p50 single-query latency {p50}s");
+    drop(sh);
+    server.shutdown();
+}
