@@ -17,7 +17,8 @@ use lmds_ose::coordinator::trainer::TrainConfig;
 use lmds_ose::data::{Geco, GecoConfig};
 use lmds_ose::mds::dissimilarity::cross_matrix;
 use lmds_ose::mds::LsmdsConfig;
-use lmds_ose::runtime::{default_artifact_dir, RuntimeThread};
+use lmds_ose::ose::OseMethod;
+use lmds_ose::runtime::Backend;
 use lmds_ose::strdist::{levenshtein, Levenshtein};
 
 fn main() -> anyhow::Result<()> {
@@ -40,8 +41,7 @@ fn main() -> anyhow::Result<()> {
 
     // 2. embed the corpus (landmark LSMDS + NN OSE)
     let objs: Vec<&str> = corpus.iter().map(|s| s.as_str()).collect();
-    let rt = RuntimeThread::spawn(&default_artifact_dir()).ok();
-    let handle = rt.as_ref().map(|r| r.handle());
+    let backend = Backend::auto();
     let cfg = PipelineConfig {
         dim: 7,
         landmarks: 200,
@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let mut result = embed_dataset(&objs, &Levenshtein, &cfg, handle.as_ref())?;
+    let mut result = embed_dataset(&objs, &Levenshtein, &cfg, &backend)?;
     println!(
         "corpus embedded: {n} records, stress {:.4}, {:.1}s, method {}",
         result.landmark_stress,

@@ -3,15 +3,16 @@
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Uses the PJRT artifacts when `make artifacts` has been run, and falls
-//! back to the pure-Rust implementations otherwise.
+//! Runs on the native compute backend by default; with `--features pjrt`
+//! and built artifacts it uses the PJRT backend automatically.
 
 use lmds_ose::coordinator::embedder::{embed_dataset, OseBackend, PipelineConfig};
 use lmds_ose::coordinator::trainer::TrainConfig;
 use lmds_ose::data::{Geco, GecoConfig};
 use lmds_ose::mds::dissimilarity::cross_matrix;
 use lmds_ose::mds::LsmdsConfig;
-use lmds_ose::runtime::{default_artifact_dir, RuntimeThread};
+use lmds_ose::ose::OseMethod;
+use lmds_ose::runtime::{Backend, ComputeBackend};
 use lmds_ose::strdist::{levenshtein, Levenshtein};
 
 fn main() -> anyhow::Result<()> {
@@ -31,14 +32,11 @@ fn main() -> anyhow::Result<()> {
         train: TrainConfig { epochs: 300, lr: 3e-3, ..Default::default() },
         ..Default::default()
     };
-    let rt = RuntimeThread::spawn(&default_artifact_dir()).ok();
-    let handle = rt.as_ref().map(|r| r.handle());
-    if handle.is_none() {
-        println!("(no artifacts found — running pure-Rust fallback)");
-    }
+    let backend = Backend::auto();
+    println!("(compute backend: {})", backend.name());
 
     let t0 = std::time::Instant::now();
-    let mut result = embed_dataset(&objs, &Levenshtein, &cfg, handle.as_ref())?;
+    let mut result = embed_dataset(&objs, &Levenshtein, &cfg, &backend)?;
     println!(
         "embedded {} names into 7-D in {:.2}s (landmark stress {:.4}, method {})",
         names.len(),

@@ -21,7 +21,8 @@ use lmds_ose::coordinator::trainer::TrainConfig;
 use lmds_ose::coordinator::{BatcherConfig, Server};
 use lmds_ose::data::{Geco, GecoConfig};
 use lmds_ose::mds::LsmdsConfig;
-use lmds_ose::runtime::{default_artifact_dir, RuntimeThread};
+use lmds_ose::ose::OseMethod;
+use lmds_ose::runtime::{Backend, ComputeBackend};
 use lmds_ose::strdist::Levenshtein;
 
 fn main() -> anyhow::Result<()> {
@@ -38,12 +39,8 @@ fn main() -> anyhow::Result<()> {
     let names = geco.generate_unique(corpus_n);
     let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
 
-    let rt = RuntimeThread::spawn(&default_artifact_dir()).ok();
-    let handle = rt.as_ref().map(|r| r.handle());
-    println!(
-        "pjrt artifacts: {}",
-        if handle.is_some() { "LOADED" } else { "not built (pure-Rust fallback)" }
-    );
+    let backend = Backend::auto();
+    println!("compute backend: {}", backend.name());
 
     let cfg = PipelineConfig {
         dim: 7,
@@ -54,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let t0 = Instant::now();
-    let result = embed_dataset(&objs, &Levenshtein, &cfg, handle.as_ref())?;
+    let result = embed_dataset(&objs, &Levenshtein, &cfg, &backend)?;
     println!(
         "pipeline: {} names, L={landmarks}, stress {:.4}, method {}, {:.1}s \
          (select {:.2}s | dLL {:.2}s | lsmds {:.2}s | train {:.2}s | dML {:.2}s | ose {:.2}s)",

@@ -1,0 +1,33 @@
+"""Shape-registry contract tests — pure Python, no JAX required.
+
+These run in every environment (the JAX-dependent suites are skipped via
+conftest.py when the stack is missing), so the optional CI job always has
+something real to check: the variant registry the Rust runtime's manifest
+contract is built on.
+"""
+
+from compile import shapes
+
+
+def test_smoke_scale_covers_every_graph_family():
+    graphs = {v.graph for v in shapes.variants_for_scales(["smoke"])}
+    assert graphs == {
+        "lsmds_steps",
+        "ose_opt",
+        "mlp_fwd",
+        "mlp_train_step",
+        "mlp_loss",
+    }
+
+
+def test_variant_keys_are_unique_across_all_scales():
+    vs = shapes.variants_for_scales(shapes.ALL_SCALES)
+    keys = [v.key for v in vs]
+    assert len(keys) == len(set(keys))
+
+
+def test_sweeps_match_the_paper_protocol():
+    assert shapes.K_DIM == 7
+    assert shapes.L_SWEEP_PAPER[0] == 100
+    assert shapes.L_SWEEP_PAPER[-1] == 2100
+    assert len(shapes.L_SWEEP_SMALL) == 8

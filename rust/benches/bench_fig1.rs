@@ -7,7 +7,7 @@
 
 use lmds_ose::eval::figures;
 use lmds_ose::eval::protocol::{load_or_build, Scale};
-use lmds_ose::runtime::{default_artifact_dir, RuntimeThread};
+use lmds_ose::runtime::{Backend, ComputeBackend};
 
 fn main() {
     lmds_ose::util::logging::init();
@@ -20,16 +20,13 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(30);
 
-    let rt = RuntimeThread::spawn(&default_artifact_dir()).ok();
-    let handle = rt.as_ref().map(|r| r.handle());
-    if handle.is_none() {
-        eprintln!("(artifacts not built; pure-Rust fallback)");
-    }
+    let backend = Backend::auto();
+    eprintln!("compute backend: {}", backend.name());
     let t0 = std::time::Instant::now();
-    let data = load_or_build(scale, 7, handle.as_ref()).expect("protocol data");
+    let data = load_or_build(scale, 7, &backend).expect("protocol data");
     eprintln!("protocol data ready in {:.1}s", t0.elapsed().as_secs_f64());
 
-    let rows = figures::fig1(&data, handle.as_ref(), epochs).expect("fig1");
+    let rows = figures::fig1(&data, &backend, epochs).expect("fig1");
 
     // shape assertions mirroring the paper's qualitative claims
     let first = &rows[0];

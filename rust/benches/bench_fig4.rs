@@ -8,7 +8,7 @@
 
 use lmds_ose::eval::figures;
 use lmds_ose::eval::protocol::{load_or_build, Scale};
-use lmds_ose::runtime::{default_artifact_dir, RuntimeThread};
+use lmds_ose::runtime::{Backend, ComputeBackend};
 
 fn main() {
     lmds_ose::util::logging::init();
@@ -21,12 +21,12 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(12); // inference RT does not depend on training quality
 
-    let rt = RuntimeThread::spawn(&default_artifact_dir()).ok();
-    let handle = rt.as_ref().map(|r| r.handle());
-    let data = load_or_build(scale, 7, handle.as_ref()).expect("protocol data");
+    let backend = Backend::auto();
+    eprintln!("compute backend: {}", backend.name());
+    let data = load_or_build(scale, 7, &backend).expect("protocol data");
 
-    let rows = figures::fig4(&data, handle.as_ref(), epochs).expect("fig4");
-    figures::headline(&data, handle.as_ref(), epochs).expect("headline");
+    let rows = figures::fig4(&data, &backend, epochs).expect("fig4");
+    figures::headline(&data, &backend, epochs).expect("headline");
 
     // paper shape: RT grows with L for the optimisation method; the NN is
     // faster at every L

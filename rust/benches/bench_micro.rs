@@ -1,26 +1,90 @@
 //! Micro benchmarks of every hot-path component (custom harness — the
-//! image vendors no criterion). Prints one line per subject.
+//! image vendors no criterion). Prints one line per subject and writes a
+//! machine-readable JSON report for the CI perf trajectory.
 //!
 //!     cargo bench --bench bench_micro
+//!
+//! Env knobs:
+//!   LMDS_BENCH_QUICK=1        short measurement windows (CI smoke)
+//!   LMDS_BENCH_JSON=path.json where to write the report
+//!                             (default BENCH_pr1.json in the CWD)
 
+use lmds_ose::coordinator::methods::{BackendNn, BackendOpt};
 use lmds_ose::data::{Geco, GecoConfig};
 use lmds_ose::mds::dissimilarity::{cross_matrix, full_matrix};
 use lmds_ose::mds::lsmds::stress_gradient;
 use lmds_ose::mds::Matrix;
 use lmds_ose::nn::{forward, MlpParams, MlpShape};
-use lmds_ose::ose::{embed_point, OseOptConfig};
-use lmds_ose::runtime::{default_artifact_dir, OwnedArg, RuntimeThread};
-use lmds_ose::strdist::{jaro_winkler_distance, levenshtein, levenshtein_dp, qgram_distance, Levenshtein};
-use lmds_ose::util::bench::{bench, BenchConfig};
+use lmds_ose::ose::{embed_point, OseMethod, OseOptConfig};
+use lmds_ose::runtime::{Backend, ComputeBackend};
+use lmds_ose::strdist::{
+    jaro_winkler_distance, levenshtein, levenshtein_dp, qgram_distance, Levenshtein,
+};
+use lmds_ose::util::bench::{bench, BenchConfig, BenchResult};
+use lmds_ose::util::json::Json;
 use lmds_ose::util::prng::Rng;
+
+/// Collects results and renders the JSON report.
+struct Report {
+    results: Vec<BenchResult>,
+}
+
+impl Report {
+    fn push(&mut self, r: &BenchResult) {
+        self.results.push(r.clone());
+    }
+
+    fn write(&self, backend_name: &str) {
+        let path = std::env::var("LMDS_BENCH_JSON")
+            .unwrap_or_else(|_| "BENCH_pr1.json".to_string());
+        let rows: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("median_s", Json::Num(r.median_s)),
+                    ("mad_s", Json::Num(r.mad_s)),
+                    ("mean_s", Json::Num(r.mean_s)),
+                    ("min_s", Json::Num(r.min_s)),
+                    ("iters", Json::Num(r.iters as f64)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("bench_micro".into())),
+            ("backend", Json::Str(backend_name.into())),
+            ("results", Json::Arr(rows)),
+        ]);
+        match std::fs::write(&path, doc.to_string_pretty()) {
+            Ok(()) => println!("\nwrote {} results to {path}", self.results.len()),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}
 
 fn main() {
     lmds_ose::util::logging::init();
-    let cfg = BenchConfig::default();
-    let quick = BenchConfig {
+    let quick_mode = std::env::var("LMDS_BENCH_QUICK").is_ok();
+    let scale = |cfg: BenchConfig| -> BenchConfig {
+        if quick_mode {
+            BenchConfig {
+                warmup: std::time::Duration::from_millis(10),
+                measure: std::time::Duration::from_millis(120),
+                max_iters: cfg.max_iters.min(500),
+                min_iters: 3,
+            }
+        } else {
+            cfg
+        }
+    };
+    let cfg = scale(BenchConfig::default());
+    let quick = scale(BenchConfig {
         measure: std::time::Duration::from_millis(500),
         ..BenchConfig::default()
-    };
+    });
+    let heavy = scale(BenchConfig::heavy());
+    let mut report = Report { results: Vec::new() };
     let mut rng = Rng::new(1);
     let mut geco = Geco::new(GecoConfig { seed: 2, ..Default::default() });
     let names = geco.generate_unique(2000);
@@ -32,33 +96,39 @@ fn main() {
         levenshtein(&names[i], &names[i + 1])
     });
     println!("{}  ({:.1}M pairs/s)", r.report(), r.throughput(1) / 1e6);
+    report.push(&r);
     let r2 = bench("levenshtein/dp (name pair)", &cfg, || {
         i = (i + 1) % 1999;
         levenshtein_dp(&names[i], &names[i + 1])
     });
     println!("{}  (myers speedup {:.1}x)", r2.report(), r2.median_s / r.median_s);
+    report.push(&r2);
     let r = bench("jaro-winkler (name pair)", &quick, || {
         i = (i + 1) % 1999;
         jaro_winkler_distance(&names[i], &names[i + 1])
     });
     println!("{}", r.report());
+    report.push(&r);
     let r = bench("qgram2 (name pair)", &quick, || {
         i = (i + 1) % 1999;
         qgram_distance(&names[i], &names[i + 1], 2)
     });
     println!("{}", r.report());
+    report.push(&r);
 
     println!("\n== dissimilarity engine ==");
     let sub: Vec<&str> = names[..500].iter().map(|s| s.as_str()).collect();
-    let r = bench("full_matrix 500x500 (parallel)", &BenchConfig::heavy(), || {
+    let r = bench("full_matrix 500x500 (parallel)", &heavy, || {
         full_matrix(&sub, &Levenshtein)
     });
     println!("{}  ({:.1}M dists/s)", r.report(), r.throughput(500 * 499 / 2) / 1e6);
+    report.push(&r);
     let rows: Vec<&str> = names[500..756].iter().map(|s| s.as_str()).collect();
-    let r = bench("cross_matrix 256x500", &BenchConfig::heavy(), || {
+    let r = bench("cross_matrix 256x500", &heavy, || {
         cross_matrix(&rows, &sub, &Levenshtein)
     });
     println!("{}  ({:.1}M dists/s)", r.report(), r.throughput(256 * 500) / 1e6);
+    report.push(&r);
 
     println!("\n== pure-Rust numeric kernels ==");
     let x = Matrix::random_normal(&mut rng, 300, 7, 1.0);
@@ -75,84 +145,61 @@ fn main() {
         stress_gradient(&x, &delta)
     });
     println!("{}", r.report());
+    report.push(&r);
     let lm = Matrix::random_normal(&mut rng, 300, 7, 1.0);
     let dl: Vec<f32> = (0..300).map(|_| rng.next_f32() * 5.0).collect();
-    let r = bench("ose embed_point L=300 (rust)", &quick, || {
+    let r = bench("ose embed_point L=300 (serial oracle)", &quick, || {
         embed_point(&lm, &dl, None, &OseOptConfig::default())
     });
     println!("{}", r.report());
+    report.push(&r);
     let params = MlpParams::init(
         &MlpShape { input: 300, hidden: [256, 128, 64], output: 7 },
         &mut rng,
     );
     let q = Matrix::from_vec(1, 300, dl.clone());
-    let r = bench("mlp forward B=1 L=300 (rust)", &quick, || {
+    let r = bench("mlp forward B=1 L=300 (serial oracle)", &quick, || {
         forward(&params, &q)
     });
     println!("{}", r.report());
+    report.push(&r);
 
-    // PJRT exec latency (needs artifacts)
-    match RuntimeThread::spawn(&default_artifact_dir()) {
-        Ok(rt) => {
-            println!("\n== PJRT execution (L=300, paper-scale artifacts) ==");
-            let h = rt.handle();
-            let flat = params.flatten();
-            for b in [1usize, 64, 256] {
-                let Some(spec) = h
-                    .manifest()
-                    .find("mlp_fwd", &[("L", 300), ("B", b)])
-                    .cloned()
-                else {
-                    continue;
-                };
-                // bind weights once (positions 1..=8)
-                let mut bind_args = Vec::new();
-                for (i, p) in flat.iter().enumerate() {
-                    let sh = &spec.args[1 + i].shape;
-                    bind_args.push((
-                        1 + i,
-                        if sh.len() == 2 {
-                            OwnedArg::Mat(Matrix::from_vec(sh[0], sh[1], p.clone()))
-                        } else {
-                            OwnedArg::Vec1(p.clone())
-                        },
-                    ));
-                }
-                h.bind("bench-w", bind_args).unwrap();
-                let input = Matrix::from_vec(
-                    b,
-                    300,
-                    (0..b * 300).map(|_| rng.next_f32() * 5.0).collect(),
-                );
-                let r = bench(&format!("mlp_fwd exec B={b} (bound weights)"), &quick, || {
-                    h.execute_bound(&spec.name, "bench-w", vec![(0, OwnedArg::Mat(input.clone()))])
-                        .unwrap()
-                });
-                println!("{}  ({:.0} pts/s)", r.report(), r.throughput(b));
-            }
-            if let Some(spec) = h.manifest().find("ose_opt", &[("L", 300), ("B", 64)]) {
-                let spec = spec.clone();
-                let deltas = Matrix::from_vec(
-                    64,
-                    300,
-                    (0..64 * 300).map(|_| rng.next_f32() * 5.0).collect(),
-                );
-                h.bind("bench-lm", vec![(0, OwnedArg::Mat(lm.clone()))]).unwrap();
-                let r = bench("ose_opt exec B=64 T=60 (bound landmarks)", &quick, || {
-                    h.execute_bound(
-                        &spec.name,
-                        "bench-lm",
-                        vec![
-                            (1, OwnedArg::Mat(deltas.clone())),
-                            (2, OwnedArg::Mat(Matrix::zeros(64, 7))),
-                            (3, OwnedArg::Scalar(1.0 / 600.0)),
-                        ],
-                    )
-                    .unwrap()
-                });
-                println!("{}  ({:.0} pts/s)", r.report(), r.throughput(64));
-            }
-        }
-        Err(e) => println!("\n(PJRT benches skipped: {e:#})"),
+    // Compute-backend execution (native always; PJRT when built with
+    // --features pjrt and artifacts + bindings are available).
+    let backend = Backend::auto();
+    println!("\n== compute backend: {} (L=300) ==", backend.name());
+    for b in [1usize, 64, 256] {
+        let mut method = BackendNn::new(backend.clone(), params.clone());
+        let input = Matrix::from_vec(
+            b,
+            300,
+            (0..b * 300).map(|_| rng.next_f32() * 5.0).collect(),
+        );
+        let r = bench(
+            &format!("mlp_fwd exec B={b} ({})", backend.name()),
+            &quick,
+            || method.embed(&input).unwrap(),
+        );
+        println!("{}  ({:.0} pts/s)", r.report(), r.throughput(b));
+        report.push(&r);
     }
+    {
+        let mut method = BackendOpt::with_defaults(backend.clone(), lm.clone());
+        method.total_steps = 60;
+        method.rel_tol = 0.0; // fixed work per iteration: comparable across PRs
+        let deltas = Matrix::from_vec(
+            64,
+            300,
+            (0..64 * 300).map(|_| rng.next_f32() * 5.0).collect(),
+        );
+        let r = bench(
+            &format!("ose_opt exec B=64 T=60 ({})", backend.name()),
+            &quick,
+            || method.embed(&deltas).unwrap(),
+        );
+        println!("{}  ({:.0} pts/s)", r.report(), r.throughput(64));
+        report.push(&r);
+    }
+
+    report.write(backend.name());
 }

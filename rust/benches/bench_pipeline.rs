@@ -12,7 +12,8 @@ use lmds_ose::coordinator::trainer::TrainConfig;
 use lmds_ose::coordinator::{BatcherConfig, Server};
 use lmds_ose::data::{Geco, GecoConfig};
 use lmds_ose::mds::LsmdsConfig;
-use lmds_ose::runtime::{default_artifact_dir, RuntimeThread};
+use lmds_ose::ose::OseMethod;
+use lmds_ose::runtime::{Backend, ComputeBackend};
 use lmds_ose::strdist::Levenshtein;
 
 fn main() {
@@ -21,27 +22,26 @@ fn main() {
     let mut geco = Geco::new(GecoConfig { seed: 0xbe9c, ..Default::default() });
     let names = geco.generate_unique(n);
     let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
-    let rt = RuntimeThread::spawn(&default_artifact_dir()).ok();
-    let handle = rt.as_ref().map(|r| r.handle());
+    let backend = Backend::auto();
 
-    println!("== two-stage pipeline (N={n}, L=300, K=7) ==");
-    for backend in [OseBackend::Opt, OseBackend::Nn] {
+    println!("== two-stage pipeline (N={n}, L=300, K=7, backend={}) ==", backend.name());
+    for ose in [OseBackend::Opt, OseBackend::Nn] {
         let cfg = PipelineConfig {
             dim: 7,
             landmarks: 300,
-            backend,
+            backend: ose,
             lsmds: LsmdsConfig { dim: 7, max_iters: 250, ..Default::default() },
             train: TrainConfig { epochs: 60, lr: 3e-3, ..Default::default() },
             ..Default::default()
         };
         let t0 = Instant::now();
-        let r = embed_dataset(&objs, &Levenshtein, &cfg, handle.as_ref()).unwrap();
+        let r = embed_dataset(&objs, &Levenshtein, &cfg, &backend).unwrap();
         let total = t0.elapsed().as_secs_f64();
         let t = &r.timings;
         println!(
             "{:?} via {:<9} total {total:6.2}s | select {:.2}s dLL {:.2}s \
              lsmds {:.2}s train {:.2}s dML {:.2}s ose {:.2}s | stress {:.4}",
-            backend, r.method.name(), t.select_s, t.delta_ll_s, t.lsmds_s,
+            ose, r.method.name(), t.select_s, t.delta_ll_s, t.lsmds_s,
             t.train_s, t.delta_ml_s, t.ose_s, r.landmark_stress
         );
     }
@@ -55,7 +55,7 @@ fn main() {
         train: TrainConfig { epochs: 60, lr: 3e-3, ..Default::default() },
         ..Default::default()
     };
-    let result = embed_dataset(&objs, &Levenshtein, &cfg, handle.as_ref()).unwrap();
+    let result = embed_dataset(&objs, &Levenshtein, &cfg, &backend).unwrap();
     let landmark_names: Vec<String> =
         result.landmark_idx.iter().map(|&i| names[i].clone()).collect();
     let server = Server::start(

@@ -2,28 +2,32 @@
 //! landmarks (O(L^2)), (2) OSE of the remaining M = N - L objects using
 //! only their distances to the landmarks (O(L·M)). This is what makes
 //! LSMDS practical beyond ~10^4 points.
+//!
+//! All numeric work flows through the [`ComputeBackend`] seam, so the same
+//! pipeline runs on the pure-Rust native backend (default) or the PJRT
+//! artifact backend (`--features pjrt`) without a single branch here.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::mds::dissimilarity::{cross_matrix, full_matrix};
 use crate::mds::landmarks::select_landmarks;
-use crate::mds::{lsmds_from, LandmarkMethod, LsmdsConfig, Matrix};
+use crate::mds::{LandmarkMethod, LsmdsConfig, Matrix};
 use crate::nn::MlpShape;
-use crate::ose::{OseMethod, OseOptConfig, RustNn, RustOptimise};
-use crate::runtime::{OwnedArg, RuntimeHandle};
+use crate::ose::OseMethod;
+use crate::runtime::{Backend, ComputeBackend};
 use crate::strdist::Dissimilarity;
 use crate::util::prng::Rng;
 
-use super::methods::{PjrtNn, PjrtOpt};
-use super::trainer::{train_pjrt, train_rust, TrainConfig};
+use super::methods::{BackendNn, BackendOpt};
+use super::trainer::{train_backend, TrainConfig};
 
 /// Which OSE technique maps the non-landmark points.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OseBackend {
-    /// Neural network via the PJRT fused-MLP artifact (falls back to Rust
-    /// if no runtime handle is supplied).
+    /// Neural network (Sec. 4.2): train an MLP on distance rows, serve
+    /// with a single forward pass.
     Nn,
-    /// Optimisation method via the batched PJRT artifact (or pure Rust).
+    /// Optimisation method (Sec. 4.1): batched Eq.-2 majorization.
     Opt,
 }
 
@@ -99,59 +103,39 @@ pub struct PipelineTimings {
     pub ose_s: f64,
 }
 
-/// Run LSMDS on a landmark dissimilarity matrix, preferring the PJRT
-/// artifact when one exists for this size.
+/// Run LSMDS on a landmark dissimilarity matrix through a compute backend,
+/// checking convergence between backend-sized step chunks.
 pub fn lsmds_landmarks(
     delta: &Matrix,
     cfg: &LsmdsConfig,
-    handle: Option<&RuntimeHandle>,
+    backend: &Backend,
 ) -> Result<(Matrix, f64)> {
     let n = delta.rows;
-    if let Some(h) = handle {
-        if let Some(spec) = h.manifest().find("lsmds_steps", &[("N", n)]) {
-            let steps = spec.dim("T").unwrap_or(10);
-            let mut rng = Rng::new(cfg.seed);
-            let mut x = Matrix::random_normal(&mut rng, n, cfg.dim, cfg.init_sigma);
-            x.center_columns();
-            let lr = cfg.lr.unwrap_or(1.0 / (2.0 * n as f64)) as f32;
-            let mut prev = f64::INFINITY;
-            let mut calls = 0usize;
-            let max_calls = cfg.max_iters.div_ceil(steps);
-            let spec_name = spec.name.clone();
-            // the N x N dissimilarity matrix (100 MB at N = 5000) crosses
-            // host->device ONCE; only the N x K configuration moves per call
-            let binding = format!("lsmds-delta-{n}-{:x}", cfg.seed);
-            h.bind(&binding, vec![(1, OwnedArg::Mat(delta.clone()))])?;
-            loop {
-                let out = h.execute_bound(
-                    &spec_name,
-                    &binding,
-                    vec![(0, OwnedArg::Mat(x)), (2, OwnedArg::Scalar(lr))],
-                )?;
-                let mut it = out.into_iter();
-                x = it.next().context("missing X output")?.into_matrix();
-                let sigma = it.next().context("missing sigma output")?.scalar() as f64;
-                calls += 1;
-                if prev.is_finite()
-                    && (prev - sigma) / prev.max(1e-30) < cfg.rel_tol * steps as f64
-                {
-                    break;
-                }
-                prev = sigma;
-                if calls >= max_calls {
-                    break;
-                }
-            }
-            let stress = crate::mds::stress::normalized_stress(&x, delta);
-            return Ok((x, stress));
-        }
-        log::debug!("no lsmds_steps artifact for N={n}; using pure-Rust LSMDS");
-    }
     let mut rng = Rng::new(cfg.seed);
-    let mut x0 = Matrix::random_normal(&mut rng, n, cfg.dim, cfg.init_sigma);
-    x0.center_columns();
-    let r = lsmds_from(delta, x0, cfg);
-    Ok((r.config, r.normalized_stress))
+    let mut x = Matrix::random_normal(&mut rng, n, cfg.dim, cfg.init_sigma);
+    x.center_columns();
+    let lr = cfg.lr.unwrap_or(1.0 / (2.0 * n as f64)) as f32;
+    let chunk = backend.lsmds_step_chunk(n).max(1);
+    let mut prev = f64::INFINITY;
+    let mut done = 0usize;
+    while done < cfg.max_iters {
+        let steps = chunk.min(cfg.max_iters - done);
+        let (x2, sigma) = backend.lsmds_steps(&x, delta, lr, steps)?;
+        x = x2;
+        done += steps;
+        if sigma < 1e-10 {
+            break; // absolute floor: relative checks are meaningless at ~0
+        }
+        if prev.is_finite() {
+            let rel = (prev - sigma) / prev.max(1e-30);
+            if rel.abs() < cfg.rel_tol * steps as f64 {
+                break;
+            }
+        }
+        prev = sigma;
+    }
+    let stress = crate::mds::stress::normalized_stress(&x, delta);
+    Ok((x, stress))
 }
 
 /// The full pipeline over string objects.
@@ -159,7 +143,7 @@ pub fn embed_dataset<T: Sync + ?Sized>(
     objects: &[&T],
     metric: &dyn Dissimilarity<T>,
     cfg: &PipelineConfig,
-    handle: Option<&RuntimeHandle>,
+    backend: &Backend,
 ) -> Result<PipelineResult> {
     anyhow::ensure!(
         cfg.landmarks <= objects.len(),
@@ -186,7 +170,7 @@ pub fn embed_dataset<T: Sync + ?Sized>(
     let mut lcfg = cfg.lsmds.clone();
     lcfg.dim = cfg.dim;
     lcfg.seed = cfg.seed ^ 0x5eed;
-    let (landmark_config, landmark_stress) = lsmds_landmarks(&delta_ll, &lcfg, handle)?;
+    let (landmark_config, landmark_stress) = lsmds_landmarks(&delta_ll, &lcfg, backend)?;
     timings.lsmds_s = t0.elapsed().as_secs_f64();
 
     // 3. distances from every object to the landmarks (training inputs for
@@ -201,8 +185,8 @@ pub fn embed_dataset<T: Sync + ?Sized>(
 
     // 4. build the OSE method
     let t0 = std::time::Instant::now();
-    let mut method: Box<dyn OseMethod> = match (cfg.backend, handle) {
-        (OseBackend::Nn, h) => {
+    let mut method: Box<dyn OseMethod> = match cfg.backend {
+        OseBackend::Nn => {
             // Training set (paper Sec. 4.2: distance rows of ALL N points):
             // landmarks carry exact LSMDS coordinates; when bootstrapping,
             // the remaining points are labelled by the optimisation OSE
@@ -213,32 +197,15 @@ pub fn embed_dataset<T: Sync + ?Sized>(
                 output: cfg.dim,
             };
             let (inputs, labels) = if cfg.nn_bootstrap && delta_ml.rows > 0 {
-                let rest_labels: Matrix = match h {
-                    Some(h) if h
-                        .manifest()
-                        .find("ose_opt", &[("L", cfg.landmarks)])
-                        .is_some() =>
-                    {
-                        PjrtOpt::with_defaults(h.clone(), landmark_config.clone())
-                            .embed(&delta_ml)?
-                    }
-                    _ => RustOptimise {
-                        landmarks: landmark_config.clone(),
-                        cfg: OseOptConfig::default(),
-                    }
-                    .embed(&delta_ml)?,
-                };
+                let rest_labels =
+                    BackendOpt::with_defaults(backend.clone(), landmark_config.clone())
+                        .embed(&delta_ml)?;
                 (delta_ll.vstack(&delta_ml), landmark_config.vstack(&rest_labels))
             } else {
                 (delta_ll.clone(), landmark_config.clone())
             };
-            let constraints = super::trainer::train_constraints(&shape);
-            let (params, report) = match h {
-                Some(h) if h.manifest().find("mlp_train_step", &constraints).is_some() => {
-                    train_pjrt(h, &shape, &inputs, &labels, &cfg.train)?
-                }
-                _ => train_rust(&shape, &inputs, &labels, 256, &cfg.train),
-            };
+            let (params, report) =
+                train_backend(backend, &shape, &inputs, &labels, 256, &cfg.train)?;
             log::info!(
                 "nn-ose trained: epochs={} loss={:.4} ({:.2}s)",
                 report.epochs_run,
@@ -246,28 +213,12 @@ pub fn embed_dataset<T: Sync + ?Sized>(
                 report.wall_s
             );
             timings.train_s = report.wall_s;
-            match h {
-                Some(h) if h.manifest().find("mlp_fwd", &constraints).is_some() => {
-                    Box::new(PjrtNn::new(h.clone(), &params))
-                }
-                _ => Box::new(RustNn { params }),
-            }
+            Box::new(BackendNn::new(backend.clone(), params))
         }
-        (OseBackend::Opt, Some(h))
-            if h.manifest().find("ose_opt", &[("L", cfg.landmarks)]).is_some() =>
-        {
-            Box::new(PjrtOpt::with_defaults(h.clone(), landmark_config.clone()))
+        OseBackend::Opt => {
+            Box::new(BackendOpt::with_defaults(backend.clone(), landmark_config.clone()))
         }
-        (OseBackend::Opt, _) => Box::new(RustOptimise {
-            landmarks: landmark_config.clone(),
-            cfg: OseOptConfig::default(),
-        }),
     };
-    if cfg.backend == OseBackend::Nn {
-        // training time is inside train_s; avoid double counting
-    } else {
-        timings.train_s = 0.0;
-    }
 
     // 5. OSE the remaining points
     let rest_coords = if rest_idx.is_empty() {
@@ -303,7 +254,7 @@ mod tests {
     use crate::strdist::Levenshtein;
 
     #[test]
-    fn pipeline_runs_pure_rust_nn() {
+    fn pipeline_runs_native_nn() {
         let mut geco = Geco::new(GecoConfig { seed: 11, ..Default::default() });
         let names = geco.generate_unique(120);
         let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
@@ -316,16 +267,17 @@ mod tests {
             lsmds: LsmdsConfig { max_iters: 120, dim: 3, ..Default::default() },
             ..Default::default()
         };
-        let r = embed_dataset(&objs, &Levenshtein, &cfg, None).unwrap();
+        let r = embed_dataset(&objs, &Levenshtein, &cfg, &Backend::native()).unwrap();
         assert_eq!(r.coords.rows, 120);
         assert_eq!(r.coords.cols, 3);
         assert_eq!(r.landmark_idx.len(), 40);
+        assert_eq!(r.method.name(), "nn-native");
         assert!(r.coords.data.iter().all(|v| v.is_finite()));
         assert!(r.landmark_stress < 0.6, "stress {}", r.landmark_stress);
     }
 
     #[test]
-    fn pipeline_runs_pure_rust_opt() {
+    fn pipeline_runs_native_opt() {
         let mut geco = Geco::new(GecoConfig { seed: 12, ..Default::default() });
         let names = geco.generate_unique(80);
         let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
@@ -336,8 +288,10 @@ mod tests {
             lsmds: LsmdsConfig { max_iters: 120, dim: 3, ..Default::default() },
             ..Default::default()
         };
-        let mut r = embed_dataset(&objs, &Levenshtein, &cfg, None).unwrap();
+        let mut r =
+            embed_dataset(&objs, &Levenshtein, &cfg, &Backend::native()).unwrap();
         assert_eq!(r.coords.rows, 80);
+        assert_eq!(r.method.name(), "opt-native");
         // the returned method can embed fresh queries
         let q = crate::mds::dissimilarity::cross_matrix(
             &["newname sample"],
@@ -360,7 +314,7 @@ mod tests {
             lsmds: LsmdsConfig { max_iters: 60, dim: 2, ..Default::default() },
             ..Default::default()
         };
-        let r = embed_dataset(&objs, &Levenshtein, &cfg, None).unwrap();
+        let r = embed_dataset(&objs, &Levenshtein, &cfg, &Backend::native()).unwrap();
         for (row, &i) in r.landmark_idx.iter().enumerate() {
             assert_eq!(r.coords.row(i), r.landmark_config.row(row));
         }

@@ -1,290 +1,128 @@
-//! PJRT-backed OSE methods: the production implementations of the paper's
-//! two techniques, executing the AOT artifacts through the runtime handle.
-//!
-//! Both pad a request batch up to the nearest available artifact batch
-//! size (executables are shape-monomorphic) and slice the padding off the
-//! result. Padding rows are all-zeros — for `ose_opt` they converge to the
-//! landmark centroid, for `mlp_fwd` they cost one wasted row of matmul;
-//! either way they never escape the runtime boundary.
+//! Backend-generic OSE methods: the production implementations of the
+//! paper's two techniques, executing through the [`ComputeBackend`] seam.
+//! With the native backend they run batched, row-parallel pure-Rust math;
+//! with the PJRT backend (cargo feature `pjrt`) the same calls execute the
+//! AOT artifacts, padding/chunking and device-resident operand reuse
+//! handled inside the backend.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::mds::Matrix;
 use crate::nn::MlpParams;
 use crate::ose::OseMethod;
-use crate::runtime::{OwnedArg, RuntimeHandle};
+use crate::runtime::{Backend, ComputeBackend};
 
-/// Unique binding keys for device-resident argument sets.
-static BINDING_ID: AtomicU64 = AtomicU64::new(0);
-
-fn fresh_binding_key(prefix: &str) -> String {
-    format!("{prefix}-{}", BINDING_ID.fetch_add(1, Ordering::Relaxed))
+/// The neural-network OSE (paper Sec. 4.2): a trained MLP maps a row of
+/// landmark distances straight to coordinates.
+pub struct BackendNn {
+    pub backend: Backend,
+    pub params: MlpParams,
 }
 
-/// Select the smallest available batch-size variant >= n (or the largest
-/// one if n exceeds all variants — the caller then chunks).
-pub fn pick_batch(available: &[usize], n: usize) -> Option<usize> {
-    available
-        .iter()
-        .copied()
-        .filter(|b| *b >= n)
-        .min()
-        .or_else(|| available.iter().copied().max())
-}
-
-fn pad_rows(m: &Matrix, rows: usize) -> Matrix {
-    if m.rows == rows {
-        return m.clone();
-    }
-    let mut out = Matrix::zeros(rows, m.cols);
-    out.data[..m.data.len()].copy_from_slice(&m.data);
-    out
-}
-
-/// The neural-network OSE (paper Sec. 4.2) over the fused-MLP artifact.
-pub struct PjrtNn {
-    pub handle: RuntimeHandle,
-    /// Flattened parameters in artifact order (w1,b1,...,w4,b4).
-    pub params: Vec<Vec<f32>>,
-    pub l: usize,
-    pub k: usize,
-    pub hidden: [usize; 3],
-    /// Device binding for the weights (uploaded lazily, once; the argument
-    /// positions 1..=8 are identical across all B variants of `mlp_fwd`).
-    binding: String,
-    bound: bool,
-}
-
-impl PjrtNn {
-    pub fn new(handle: RuntimeHandle, params: &MlpParams) -> Self {
-        Self {
-            l: params.shape.input,
-            k: params.shape.output,
-            hidden: params.shape.hidden,
-            params: params.flatten(),
-            handle,
-            binding: fresh_binding_key("mlp-weights"),
-            bound: false,
-        }
-    }
-
-    /// Upload the weights to the device once (keyed per instance).
-    fn ensure_bound(&mut self, spec_args: &[crate::runtime::manifest::ArgSpec]) -> Result<()> {
-        if self.bound {
-            return Ok(());
-        }
-        let mut args = Vec::with_capacity(8);
-        for (i, p) in self.params.iter().enumerate() {
-            let sh = &spec_args[1 + i].shape;
-            let arg = if sh.len() == 2 {
-                OwnedArg::Mat(Matrix::from_vec(sh[0], sh[1], p.clone()))
-            } else {
-                OwnedArg::Vec1(p.clone())
-            };
-            args.push((1 + i, arg));
-        }
-        self.handle.bind(&self.binding, args)?;
-        self.bound = true;
-        Ok(())
-    }
-
-    /// Dim constraints identifying `mlp_fwd` artifacts of this shape.
-    fn constraints(&self) -> Vec<(&'static str, usize)> {
-        vec![
-            ("L", self.l),
-            ("H1", self.hidden[0]),
-            ("H2", self.hidden[1]),
-            ("H3", self.hidden[2]),
-            ("K", self.k),
-        ]
-    }
-
-    fn embed_chunk(&mut self, deltas: &Matrix) -> Result<Matrix> {
-        let avail = self
-            .handle
-            .manifest()
-            .available_dims("mlp_fwd", "B", &self.constraints());
-        let b = pick_batch(&avail, deltas.rows)
-            .with_context(|| format!("no mlp_fwd artifact for L={}", self.l))?;
-        let n = deltas.rows.min(b);
-        let padded = pad_rows(deltas, b);
-        let spec = self
-            .handle
-            .manifest()
-            .find("mlp_fwd", &{
-                let mut c = self.constraints();
-                c.push(("B", b));
-                c
-            })
-            .context("artifact vanished")?
-            .clone();
-        self.ensure_bound(&spec.args)?;
-        // hot path: only the input tile crosses host->device
-        let out = self
-            .handle
-            .execute_bound(&spec.name, &self.binding, vec![(0, OwnedArg::Mat(padded))])?
-            .remove(0)
-            .into_matrix();
-        let mut res = Matrix::zeros(n, self.k);
-        res.data.copy_from_slice(&out.data[..n * self.k]);
-        Ok(res)
+impl BackendNn {
+    pub fn new(backend: Backend, params: MlpParams) -> Self {
+        Self { backend, params }
     }
 }
 
-impl OseMethod for PjrtNn {
+impl OseMethod for BackendNn {
     fn embed(&mut self, deltas: &Matrix) -> Result<Matrix> {
-        anyhow::ensure!(deltas.cols == self.l, "bad input width");
-        let avail = self
-            .handle
-            .manifest()
-            .available_dims("mlp_fwd", "B", &self.constraints());
-        let max_b = avail.iter().copied().max().unwrap_or(0).max(1);
-        if deltas.rows <= max_b {
-            return self.embed_chunk(deltas);
-        }
-        // chunk oversized batches through the largest variant
-        let mut out = Matrix::zeros(deltas.rows, self.k);
-        let mut start = 0;
-        while start < deltas.rows {
-            let end = (start + max_b).min(deltas.rows);
-            let chunk = Matrix::from_vec(
-                end - start,
-                deltas.cols,
-                deltas.data[start * deltas.cols..end * deltas.cols].to_vec(),
-            );
-            let y = self.embed_chunk(&chunk)?;
-            out.data[start * self.k..end * self.k].copy_from_slice(&y.data);
-            start = end;
-        }
-        Ok(out)
+        anyhow::ensure!(
+            deltas.cols == self.params.shape.input,
+            "expected {} landmark distances, got {}",
+            self.params.shape.input,
+            deltas.cols
+        );
+        self.backend.mlp_fwd(&self.params, deltas)
     }
 
     fn dim(&self) -> usize {
-        self.k
+        self.params.shape.output
     }
 
     fn landmarks(&self) -> usize {
-        self.l
+        self.params.shape.input
     }
 
     fn name(&self) -> &'static str {
-        "nn-pjrt"
+        match self.backend.name() {
+            "pjrt" => "nn-pjrt",
+            _ => "nn-native",
+        }
     }
 }
 
-/// The optimisation OSE (paper Sec. 4.1) over the batched `ose_opt`
-/// artifact (T majorization steps per call, iterated to convergence).
-pub struct PjrtOpt {
-    pub handle: RuntimeHandle,
+/// The optimisation OSE (paper Sec. 4.1): batched majorization of Eq. 2
+/// against a fixed landmark configuration, with convergence-based early
+/// stopping over the per-chunk objectives the backend reports (matching
+/// the serial oracle's `rel_tol` behaviour at batch granularity).
+pub struct BackendOpt {
+    pub backend: Backend,
     pub landmarks: Matrix,
-    /// Total majorization steps to run per embedding; the artifact's T
-    /// inner steps are iterated ceil(total_steps / T) times.
+    /// Total majorization steps per embedding (iterated in backend-sized
+    /// chunks, warm-starting each chunk from the previous iterate).
     pub total_steps: usize,
     /// Step size; `None` = 1/(2L) majorization.
     pub lr: Option<f64>,
-    binding: String,
-    bound: bool,
+    /// Stop once the batch-mean Eq.-2 objective improves less than this
+    /// (relative, scaled by the steps per chunk). 0.0 disables early
+    /// stopping (always run `total_steps`).
+    pub rel_tol: f64,
 }
 
-impl PjrtOpt {
-    /// Defaults matching the pure-Rust optimiser's convergence budget.
-    pub fn with_defaults(handle: RuntimeHandle, landmarks: Matrix) -> Self {
-        Self {
-            handle,
-            landmarks,
-            total_steps: 200,
-            lr: None,
-            binding: fresh_binding_key("ose-landmarks"),
-            bound: false,
-        }
+impl BackendOpt {
+    /// Defaults matching the serial oracle's convergence budget
+    /// (`OseOptConfig::default()`: 200 steps, rel_tol 1e-7).
+    pub fn with_defaults(backend: Backend, landmarks: Matrix) -> Self {
+        Self { backend, landmarks, total_steps: 200, lr: None, rel_tol: 1e-7 }
     }
 }
 
-impl PjrtOpt {
-    fn embed_chunk(&mut self, deltas: &Matrix) -> Result<Matrix> {
-        let l = self.landmarks.rows;
-        let k = self.landmarks.cols;
-        let avail = self
-            .handle
-            .manifest()
-            .available_dims("ose_opt", "B", &[("L", l)]);
-        let b = pick_batch(&avail, deltas.rows)
-            .with_context(|| format!("no ose_opt artifact for L={l}"))?;
-        let spec_name = self
-            .handle
-            .manifest()
-            .find("ose_opt", &[("L", l), ("B", b)])
-            .context("artifact vanished")?
-            .name
-            .clone();
-        let inner_t = self
-            .handle
-            .manifest()
-            .find("ose_opt", &[("L", l), ("B", b)])
-            .and_then(|s| s.dim("T"))
-            .unwrap_or(60)
-            .max(1);
-        let outer = self.total_steps.div_ceil(inner_t).max(1);
-        let n = deltas.rows.min(b);
-        let padded = pad_rows(deltas, b);
-        let lr = self.lr.unwrap_or(1.0 / (2.0 * l as f64)) as f32;
-        // landmarks live on-device across all calls (position 0)
-        if !self.bound {
-            self.handle.bind(
-                &self.binding,
-                vec![(0, OwnedArg::Mat(self.landmarks.clone()))],
-            )?;
-            self.bound = true;
-        }
-        // paper's zero initial guess; subsequent outer iters warm-start
-        let mut y = Matrix::zeros(b, k);
-        for _ in 0..outer {
-            let out = self.handle.execute_bound(
-                &spec_name,
-                &self.binding,
-                vec![
-                    (1, OwnedArg::Mat(padded.clone())),
-                    (2, OwnedArg::Mat(y)),
-                    (3, OwnedArg::Scalar(lr)),
-                ],
-            )?;
-            y = out.into_iter().next().unwrap().into_matrix();
-        }
-        let mut res = Matrix::zeros(n, k);
-        res.data.copy_from_slice(&y.data[..n * k]);
-        Ok(res)
-    }
-}
-
-impl OseMethod for PjrtOpt {
+impl OseMethod for BackendOpt {
     fn embed(&mut self, deltas: &Matrix) -> Result<Matrix> {
-        anyhow::ensure!(deltas.cols == self.landmarks.rows, "bad input width");
+        anyhow::ensure!(
+            deltas.cols == self.landmarks.rows,
+            "expected {} landmark distances, got {}",
+            self.landmarks.rows,
+            deltas.cols
+        );
         let l = self.landmarks.rows;
         let k = self.landmarks.cols;
-        let avail = self
-            .handle
-            .manifest()
-            .available_dims("ose_opt", "B", &[("L", l)]);
-        let max_b = avail.iter().copied().max().unwrap_or(0).max(1);
-        if deltas.rows <= max_b {
-            return self.embed_chunk(deltas);
+        let lr = self.lr.unwrap_or(1.0 / (2.0 * l as f64)) as f32;
+        let total = self.total_steps.max(1);
+        // chunk = the backend's natural granularity (PJRT: the artifact's
+        // unrolled T; usize::MAX = no preference, see the trait docs), and
+        // a backend with no preference gets a chunk small enough for early
+        // stopping to bite
+        let backend_chunk = self.backend.ose_opt_step_chunk(l);
+        let chunk = if backend_chunk == usize::MAX {
+            25.min(total)
+        } else {
+            backend_chunk.max(1).min(total)
+        };
+        // paper's zero initial guess; chunks warm-start from the iterate
+        let mut y = Matrix::zeros(deltas.rows, k);
+        let mut prev = f64::INFINITY;
+        let mut done = 0usize;
+        while done < total {
+            let steps = chunk.min(total - done);
+            let (y2, obj) =
+                self.backend
+                    .ose_opt_steps(&self.landmarks, deltas, &y, lr, steps)?;
+            y = y2;
+            done += steps;
+            if self.rel_tol > 0.0 && !obj.is_empty() {
+                let mean =
+                    obj.iter().map(|o| *o as f64).sum::<f64>() / obj.len() as f64;
+                if prev.is_finite()
+                    && (prev - mean) / prev.max(1e-30) < self.rel_tol * steps as f64
+                {
+                    break;
+                }
+                prev = mean;
+            }
         }
-        let mut out = Matrix::zeros(deltas.rows, k);
-        let mut start = 0;
-        while start < deltas.rows {
-            let end = (start + max_b).min(deltas.rows);
-            let chunk = Matrix::from_vec(
-                end - start,
-                deltas.cols,
-                deltas.data[start * deltas.cols..end * deltas.cols].to_vec(),
-            );
-            let y = self.embed_chunk(&chunk)?;
-            out.data[start * k..end * k].copy_from_slice(&y.data);
-            start = end;
-        }
-        Ok(out)
+        Ok(y)
     }
 
     fn dim(&self) -> usize {
@@ -296,30 +134,96 @@ impl OseMethod for PjrtOpt {
     }
 
     fn name(&self) -> &'static str {
-        "opt-pjrt"
+        match self.backend.name() {
+            "pjrt" => "opt-pjrt",
+            _ => "opt-native",
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::MlpShape;
+    use crate::ose::optimise::{embed_point, OseOptConfig};
+    use crate::util::prng::Rng;
 
     #[test]
-    fn pick_batch_prefers_smallest_fit() {
-        assert_eq!(pick_batch(&[1, 64, 256], 1), Some(1));
-        assert_eq!(pick_batch(&[1, 64, 256], 2), Some(64));
-        assert_eq!(pick_batch(&[1, 64, 256], 64), Some(64));
-        assert_eq!(pick_batch(&[1, 64, 256], 65), Some(256));
-        assert_eq!(pick_batch(&[1, 64, 256], 1000), Some(256)); // chunked
-        assert_eq!(pick_batch(&[], 4), None);
+    fn backend_opt_matches_serial_oracle_budget() {
+        let mut rng = Rng::new(7);
+        let lm = Matrix::random_normal(&mut rng, 20, 3, 1.0);
+        let deltas = Matrix::from_vec(
+            5,
+            20,
+            (0..100).map(|_| rng.next_f32() * 2.0 + 0.5).collect(),
+        );
+        let mut method = BackendOpt::with_defaults(Backend::native(), lm.clone());
+        method.rel_tol = 0.0; // run the full budget for exact comparison
+        let y = method.embed(&deltas).unwrap();
+        assert_eq!((y.rows, y.cols), (5, 3));
+        // fixed-step majorization from zeros == the oracle run without
+        // early stopping for the same budget
+        let cfg = OseOptConfig { max_iters: 200, rel_tol: 0.0 };
+        for r in 0..5 {
+            let p = embed_point(&lm, deltas.row(r), None, &cfg);
+            for c in 0..3 {
+                assert!(
+                    (y.at(r, c) - p.coords[c]).abs() < 1e-5,
+                    "row {r} col {c}: {} vs {}",
+                    y.at(r, c),
+                    p.coords[c]
+                );
+            }
+        }
+        assert_eq!(method.name(), "opt-native");
+        assert_eq!(method.landmarks(), 20);
+        assert_eq!(method.dim(), 3);
     }
 
     #[test]
-    fn pad_rows_zero_fills() {
-        let m = Matrix::from_rows(&[vec![1.0, 2.0]]);
-        let p = pad_rows(&m, 3);
-        assert_eq!(p.rows, 3);
-        assert_eq!(p.row(0), &[1.0, 2.0]);
-        assert_eq!(p.row(2), &[0.0, 0.0]);
+    fn backend_opt_early_stopping_stays_close_to_full_budget() {
+        // realisable deltas converge quickly; the early-stopped run must
+        // land within numerical noise of the full 200-step run
+        let mut rng = Rng::new(9);
+        let lm = Matrix::random_normal(&mut rng, 15, 3, 1.0);
+        let target = [0.3f32, -0.4, 0.2];
+        let deltas = Matrix::from_vec(
+            1,
+            15,
+            (0..15)
+                .map(|i| crate::strdist::euclidean(lm.row(i), &target) as f32)
+                .collect(),
+        );
+        let mut early = BackendOpt::with_defaults(Backend::native(), lm.clone());
+        let mut full = BackendOpt::with_defaults(Backend::native(), lm);
+        full.rel_tol = 0.0;
+        let ye = early.embed(&deltas).unwrap();
+        let yf = full.embed(&deltas).unwrap();
+        assert!(
+            ye.max_abs_diff(&yf) < 1e-3,
+            "early stop diverged: {}",
+            ye.max_abs_diff(&yf)
+        );
+    }
+
+    #[test]
+    fn backend_nn_embeds_with_native_backend() {
+        let mut rng = Rng::new(8);
+        let params = MlpParams::init(
+            &MlpShape { input: 12, hidden: [8, 8, 8], output: 3 },
+            &mut rng,
+        );
+        let mut method = BackendNn::new(Backend::native(), params);
+        let deltas = Matrix::from_vec(
+            4,
+            12,
+            (0..48).map(|_| rng.next_f32() + 0.5).collect(),
+        );
+        let y = method.embed(&deltas).unwrap();
+        assert_eq!((y.rows, y.cols), (4, 3));
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        assert_eq!(method.name(), "nn-native");
+        // wrong width rejected
+        assert!(method.embed(&Matrix::zeros(2, 11)).is_err());
     }
 }

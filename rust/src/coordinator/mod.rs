@@ -1,6 +1,7 @@
 //! L3 coordinator — the paper's system layer: the two-stage large-scale
 //! embedding pipeline, the NN-OSE trainer, the streaming service with
-//! dynamic batching, run configuration and serving metrics.
+//! dynamic batching, run configuration and serving metrics. Every numeric
+//! graph executes through the [`crate::runtime::ComputeBackend`] seam.
 
 pub mod config;
 pub mod embedder;
@@ -12,8 +13,8 @@ pub mod trainer;
 
 pub use config::RunConfig;
 pub use embedder::{embed_dataset, OseBackend, PipelineConfig, PipelineResult};
-pub use methods::{PjrtNn, PjrtOpt};
+pub use methods::{BackendNn, BackendOpt};
 pub use metrics::{Metrics, Snapshot};
 pub use server::{BatcherConfig, QueryResult, Server, ServerHandle};
 pub use stream::{DriftConfig, DriftMonitor, DriftStatus};
-pub use trainer::{train_pjrt, train_rust, TrainConfig, TrainReport};
+pub use trainer::{train_backend, train_rust, TrainConfig, TrainReport};

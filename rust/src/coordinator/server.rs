@@ -87,7 +87,7 @@ pub struct ServerHandle {
 
 impl Server {
     /// Start the service. `method` runs on the batcher thread (it may hold
-    /// a `RuntimeHandle`, which is Send).
+    /// a [`crate::runtime::Backend`], which is Send).
     pub fn start(
         landmarks: Vec<String>,
         metric: Arc<dyn Dissimilarity<str> + Send + Sync>,

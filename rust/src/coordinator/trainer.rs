@@ -1,14 +1,19 @@
-//! NN-OSE training coordinator: drives the `mlp_train_step` artifact (or
-//! the pure-Rust mirror) over minibatches with shuffling, epochs and
-//! early stopping. Training data is the paper's recipe (Sec. 4.2): inputs
-//! are distances-to-landmarks of the N configured points, labels are their
+//! NN-OSE training coordinator: drives [`ComputeBackend::mlp_train_step`]
+//! over minibatches with shuffling, epochs and early stopping. Training
+//! data is the paper's recipe (Sec. 4.2): inputs are
+//! distances-to-landmarks of the N configured points, labels are their
 //! LSMDS coordinates.
+//!
+//! [`train_backend`] is the production path (native backend by default,
+//! PJRT artifacts when built with `--features pjrt` and available);
+//! [`train_rust`] is the structured-state oracle the backend path is
+//! cross-checked against in `tests/backend_parity.rs`.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::mds::Matrix;
 use crate::nn::{self, MlpParams, MlpShape};
-use crate::runtime::{OwnedArg, RuntimeHandle};
+use crate::runtime::{AdamState, Backend, ComputeBackend};
 use crate::util::prng::Rng;
 
 #[derive(Clone, Debug)]
@@ -28,17 +33,6 @@ impl Default for TrainConfig {
     }
 }
 
-/// Dim constraints identifying the artifact matching an MLP shape.
-pub fn train_constraints(shape: &MlpShape) -> Vec<(&'static str, usize)> {
-    vec![
-        ("L", shape.input),
-        ("H1", shape.hidden[0]),
-        ("H2", shape.hidden[1]),
-        ("H3", shape.hidden[2]),
-        ("K", shape.output),
-    ]
-}
-
 #[derive(Clone, Debug)]
 pub struct TrainReport {
     pub epochs_run: usize,
@@ -47,45 +41,37 @@ pub struct TrainReport {
     pub wall_s: f64,
 }
 
-/// Train via the PJRT `mlp_train_step` artifact. `inputs` is N x L
-/// (distances to landmarks), `labels` is N x K (LSMDS coordinates).
-pub fn train_pjrt(
-    handle: &RuntimeHandle,
+/// Train through a compute backend. `inputs` is N x L (distances to
+/// landmarks), `labels` is N x K (LSMDS coordinates). `batch` is the
+/// minibatch size used unless the backend pins one (PJRT train artifacts
+/// are batch-monomorphic). Batches are assembled at exactly the chosen
+/// size, wrapping around at the end of each epoch (drop-nothing
+/// minibatching), so every backend sees identical batch shapes.
+pub fn train_backend(
+    backend: &Backend,
     shape: &MlpShape,
     inputs: &Matrix,
     labels: &Matrix,
+    batch: usize,
     cfg: &TrainConfig,
 ) -> Result<(MlpParams, TrainReport)> {
-    let l = shape.input;
-    let spec = handle
-        .manifest()
-        .find("mlp_train_step", &train_constraints(shape))
-        .with_context(|| format!("no mlp_train_step artifact for L={l}"))?
-        .clone();
-    let b = spec.dim("B").context("train artifact missing B")?;
     anyhow::ensure!(inputs.rows == labels.rows, "inputs/labels row mismatch");
-    anyhow::ensure!(inputs.cols == l, "inputs width != L");
-
-    let mut rng = Rng::new(cfg.seed);
-    let params = MlpParams::init(shape, &mut rng);
-    let mut flat: Vec<Vec<f32>> = params.flatten();
-    let zeros: Vec<Vec<f32>> = flat.iter().map(|p| vec![0.0; p.len()]).collect();
-    let mut m = zeros.clone();
-    let mut v = zeros;
-    let mut t = 0.0f32;
-
-    // argument shapes for the 8 param slots (w matrices need 2-D literals)
-    let arg_shapes: Vec<Vec<usize>> =
-        spec.args.iter().map(|a| a.shape.clone()).collect();
-    let to_arg = |data: Vec<f32>, shape: &[usize]| -> OwnedArg {
-        if shape.len() == 2 {
-            OwnedArg::Mat(Matrix::from_vec(shape[0], shape[1], data))
-        } else {
-            OwnedArg::Vec1(data)
-        }
-    };
+    anyhow::ensure!(inputs.cols == shape.input, "inputs width != L");
+    anyhow::ensure!(labels.cols == shape.output, "labels width != K");
+    anyhow::ensure!(inputs.rows > 0, "empty training set");
 
     let n = inputs.rows;
+    // A backend-pinned batch (PJRT train artifacts are batch-monomorphic)
+    // is honoured even when n < B — the wraparound assembly below fills
+    // the batch, so the artifact still executes. Otherwise the caller's
+    // batch is clamped to the dataset.
+    let b = match backend.mlp_train_batch(shape) {
+        Some(pinned) => pinned.max(1),
+        None => batch.min(n).max(1),
+    };
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut state = AdamState::new(&MlpParams::init(shape, &mut rng));
     let mut order: Vec<usize> = (0..n).collect();
     let t_start = std::time::Instant::now();
     let mut history = Vec::new();
@@ -100,45 +86,15 @@ pub fn train_pjrt(
         let mut batches = 0usize;
         let mut start = 0;
         while start < n {
-            // assemble a batch of exactly `b` rows (wrap around at the end
-            // of the epoch, standard drop-nothing minibatching)
-            let mut d = Matrix::zeros(b, l);
-            let mut x = Matrix::zeros(b, labels.cols);
+            let mut d = Matrix::zeros(b, shape.input);
+            let mut x = Matrix::zeros(b, shape.output);
             for r in 0..b {
                 let src = order[(start + r) % n];
                 d.row_mut(r).copy_from_slice(inputs.row(src));
                 x.row_mut(r).copy_from_slice(labels.row(src));
             }
             start += b;
-
-            let mut args: Vec<OwnedArg> = Vec::with_capacity(28);
-            for (i, p) in flat.iter().enumerate() {
-                args.push(to_arg(p.clone(), &arg_shapes[i]));
-            }
-            for (i, p) in m.iter().enumerate() {
-                args.push(to_arg(p.clone(), &arg_shapes[8 + i]));
-            }
-            for (i, p) in v.iter().enumerate() {
-                args.push(to_arg(p.clone(), &arg_shapes[16 + i]));
-            }
-            args.push(OwnedArg::Scalar(t));
-            args.push(OwnedArg::Mat(d));
-            args.push(OwnedArg::Mat(x));
-            args.push(OwnedArg::Scalar(cfg.lr));
-
-            let out = handle.execute(&spec.name, args)?;
-            // outputs: 8 params, 8 m, 8 v, t, loss
-            for (i, o) in out.iter().take(8).enumerate() {
-                flat[i] = o.data.clone();
-            }
-            for (i, o) in out.iter().skip(8).take(8).enumerate() {
-                m[i] = o.data.clone();
-            }
-            for (i, o) in out.iter().skip(16).take(8).enumerate() {
-                v[i] = o.data.clone();
-            }
-            t = out[24].scalar();
-            epoch_loss += out[25].scalar() as f64;
+            epoch_loss += backend.mlp_train_step(&mut state, &d, &x, cfg.lr)? as f64;
             batches += 1;
         }
         let loss = epoch_loss / batches.max(1) as f64;
@@ -154,17 +110,18 @@ pub fn train_pjrt(
         }
     }
 
-    let trained = MlpParams::from_flat(shape, &flat);
     let report = TrainReport {
         epochs_run,
         final_loss: *history.last().unwrap_or(&f64::NAN),
         loss_history: history,
         wall_s: t_start.elapsed().as_secs_f64(),
     };
-    Ok((trained, report))
+    Ok((state.to_params(), report))
 }
 
-/// Pure-Rust fallback trainer (same protocol, same Adam constants).
+/// Pure-Rust oracle trainer over structured [`nn::Adam`] state (same
+/// protocol, same Adam constants, same batch assembly as
+/// [`train_backend`]).
 pub fn train_rust(
     shape: &MlpShape,
     inputs: &Matrix,
@@ -288,5 +245,28 @@ mod tests {
             },
         );
         assert!(report.epochs_run < 500, "never early-stopped");
+    }
+
+    #[test]
+    fn backend_trainer_runs_on_native() {
+        let mut rng = Rng::new(3);
+        let shape = MlpShape { input: 6, hidden: [8, 8, 8], output: 2 };
+        let inputs = Matrix::random_normal(&mut rng, 40, 6, 1.0);
+        let labels = Matrix::random_normal(&mut rng, 40, 2, 1.0);
+        let backend = Backend::native();
+        let (params, report) = train_backend(
+            &backend,
+            &shape,
+            &inputs,
+            &labels,
+            16,
+            &TrainConfig { epochs: 10, patience: 100, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(report.epochs_run, 10);
+        assert_eq!(report.loss_history.len(), 10);
+        assert!(report.final_loss.is_finite());
+        let y = nn::forward(&params, &inputs);
+        assert!(y.data.iter().all(|v| v.is_finite()));
     }
 }

@@ -17,10 +17,8 @@ use crate::mds::landmarks::{fps_landmarks, maxmin_pool_landmarks, random_landmar
 use crate::mds::stress::total_error;
 use crate::mds::Matrix;
 use crate::nn::MlpShape;
-use crate::ose::{
-    ClassicalOse, Imds, ImdsConfig, OseMethod, OseOptConfig, RustNn, RustOptimise,
-};
-use crate::runtime::RuntimeHandle;
+use crate::ose::{ClassicalOse, Imds, ImdsConfig, OseMethod, OseOptConfig, RustNn};
+use crate::runtime::Backend;
 use crate::strdist::Levenshtein;
 use crate::util::json::Json;
 use crate::util::prng::Rng;
@@ -32,7 +30,7 @@ use super::protocol::{results_dir, ExperimentData};
 /// three selection strategies at a fixed L.
 pub fn landmark_methods(
     data: &ExperimentData,
-    handle: Option<&RuntimeHandle>,
+    backend: &Backend,
     l: usize,
 ) -> Result<Vec<(String, f64)>> {
     println!("# Ablation — landmark selection at L = {l}");
@@ -45,7 +43,7 @@ pub fn landmark_methods(
             "fps" => fps_landmarks(&mut rng, &objs, l, &Levenshtein),
             _ => maxmin_pool_landmarks(&mut rng, &objs, l, 4, &Levenshtein),
         };
-        let (y, _) = run_opt_with_idx(data, &idx, handle)?;
+        let (y, _) = run_opt_with_idx(data, &idx, backend)?;
         let err = total_error(&data.config_ref, &data.delta_new, &y);
         println!("  {method:<12} Err(m) = {err:>12.2}");
         rows.push((method.to_string(), err));
@@ -57,15 +55,15 @@ pub fn landmark_methods(
 fn run_opt_with_idx(
     data: &ExperimentData,
     idx: &[usize],
-    handle: Option<&RuntimeHandle>,
+    backend: &Backend,
 ) -> Result<(Matrix, Box<dyn OseMethod>)> {
-    run_opt(data, idx, handle)
+    run_opt(data, idx, backend)
 }
 
 /// OSE-method shootout: paper's two methods vs I-MDS vs Trosset-Priebe.
 pub fn ose_baselines(
     data: &ExperimentData,
-    handle: Option<&RuntimeHandle>,
+    backend: &Backend,
     l: usize,
     epochs: usize,
 ) -> Result<Vec<(String, f64, f64)>> {
@@ -78,7 +76,7 @@ pub fn ose_baselines(
 
     // paper: optimisation method
     let t0 = std::time::Instant::now();
-    let (y_opt, _) = run_opt(data, &lm, handle)?;
+    let (y_opt, _) = run_opt(data, &lm, backend)?;
     rows.push((
         "opt (paper 4.1)".into(),
         total_error(&data.config_ref, &data.delta_new, &y_opt),
@@ -86,9 +84,9 @@ pub fn ose_baselines(
     ));
 
     // paper: NN method (training excluded from per-point cost, as amortised)
-    let (y_nn, _, _) = run_nn(data, &lm, handle, epochs)?;
+    let (y_nn, _, _) = run_nn(data, &lm, backend, epochs)?;
     let t0 = std::time::Instant::now();
-    let _ = run_nn_inference_only(data, &lm, handle, epochs);
+    let _ = run_nn_inference_only(data, &lm, backend, epochs);
     let nn_rt = t0.elapsed().as_secs_f64() / m;
     rows.push((
         "nn (paper 4.2)".into(),
@@ -133,20 +131,17 @@ pub fn ose_baselines(
 fn run_nn_inference_only(
     data: &ExperimentData,
     lm: &[usize],
-    handle: Option<&RuntimeHandle>,
+    backend: &Backend,
     _epochs: usize,
 ) -> Result<()> {
-    // cheap stand-in: single batched embed through the rust MLP to time the
-    // pure inference path without retraining
+    // cheap stand-in: single batched embed through the backend MLP to time
+    // the pure inference path without retraining
     let mut rng = Rng::new(1);
     let params = crate::nn::MlpParams::init(
         &MlpShape { input: lm.len(), hidden: [256, 128, 64], output: data.dim },
         &mut rng,
     );
-    let mut m: Box<dyn OseMethod> = match handle {
-        Some(h) => Box::new(crate::coordinator::PjrtNn::new(h.clone(), &params)),
-        None => Box::new(RustNn { params }),
-    };
+    let mut m = crate::coordinator::BackendNn::new(backend.clone(), params);
     let _ = m.embed(&data.query_inputs(lm))?;
     Ok(())
 }
@@ -256,7 +251,7 @@ mod tests {
 
     #[test]
     fn step_size_identifies_majorization_as_stable() {
-        let data = load_or_build(Scale::Smoke, 3, None).unwrap();
+        let data = load_or_build(Scale::Smoke, 3, &Backend::native()).unwrap();
         let rows = step_size(&data, 16).unwrap();
         // all candidate steps <= 2x majorization must stay finite, and the
         // majorization step must be at least as good as the 4x step
@@ -268,8 +263,9 @@ mod tests {
 
     #[test]
     fn ose_baselines_rank_sanely_on_smoke() {
-        let data = load_or_build(Scale::Smoke, 3, None).unwrap();
-        let rows = ose_baselines(&data, None, 16, 20).unwrap();
+        let backend = Backend::native();
+        let data = load_or_build(Scale::Smoke, 3, &backend).unwrap();
+        let rows = ose_baselines(&data, &backend, 16, 20).unwrap();
         let err_of = |name: &str| {
             rows.iter()
                 .find(|(n, _, _)| n.starts_with(name))

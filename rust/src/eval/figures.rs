@@ -1,6 +1,7 @@
 //! Figure harnesses: one function per figure/table of the paper's Sec. 5,
 //! each printing the same rows/series the paper reports and writing a JSON
-//! record under `results/`.
+//! record under `results/`. Everything runs through the compute backend
+//! (native by default, PJRT artifacts with `--features pjrt`).
 //!
 //! | paper artifact | function    | what it reports                        |
 //! |----------------|-------------|----------------------------------------|
@@ -11,13 +12,13 @@
 
 use anyhow::Result;
 
-use crate::coordinator::methods::{PjrtNn, PjrtOpt};
-use crate::coordinator::trainer::{train_pjrt, train_rust, TrainConfig, TrainReport};
+use crate::coordinator::methods::{BackendNn, BackendOpt};
+use crate::coordinator::trainer::{train_backend, TrainConfig, TrainReport};
 use crate::mds::stress::{point_error_normalized, total_error};
 use crate::mds::Matrix;
 use crate::nn::MlpShape;
-use crate::ose::{embed_point, OseMethod, OseOptConfig, RustNn, RustOptimise};
-use crate::runtime::RuntimeHandle;
+use crate::ose::OseMethod;
+use crate::runtime::{Backend, ComputeBackend};
 use crate::util::bench::{bench, fmt_duration, BenchConfig};
 use crate::util::json::Json;
 use crate::util::stats::{mean, median, percentiles, Histogram};
@@ -32,11 +33,11 @@ fn hidden_for(data: &ExperimentData) -> [usize; 3] {
     }
 }
 
-/// Train the NN head for a landmark set; PJRT artifact when available.
+/// Train the NN head for a landmark set through the backend.
 pub fn train_nn(
     data: &ExperimentData,
     landmark_idx: &[usize],
-    handle: Option<&RuntimeHandle>,
+    backend: &Backend,
     epochs: usize,
 ) -> Result<(crate::nn::MlpParams, TrainReport)> {
     let l = landmark_idx.len();
@@ -50,31 +51,19 @@ pub fn train_nn(
         patience: 12,
         seed: 0x42 ^ l as u64,
     };
-    let constraints = crate::coordinator::trainer::train_constraints(&shape);
-    match handle {
-        Some(h) if h.manifest().find("mlp_train_step", &constraints).is_some() => {
-            train_pjrt(h, &shape, &inputs, labels, &cfg)
-        }
-        _ => Ok(train_rust(&shape, &inputs, labels, 256, &cfg)),
-    }
+    train_backend(backend, &shape, &inputs, labels, 256, &cfg)
 }
 
 /// Map the held-out points with the NN method. Returns (coords, method).
 pub fn run_nn(
     data: &ExperimentData,
     landmark_idx: &[usize],
-    handle: Option<&RuntimeHandle>,
+    backend: &Backend,
     epochs: usize,
 ) -> Result<(Matrix, Box<dyn OseMethod>, TrainReport)> {
-    let (params, report) = train_nn(data, landmark_idx, handle, epochs)?;
-    let constraints =
-        crate::coordinator::trainer::train_constraints(&params.shape);
-    let mut method: Box<dyn OseMethod> = match handle {
-        Some(h) if h.manifest().find("mlp_fwd", &constraints).is_some() => {
-            Box::new(PjrtNn::new(h.clone(), &params))
-        }
-        _ => Box::new(RustNn { params }),
-    };
+    let (params, report) = train_nn(data, landmark_idx, backend, epochs)?;
+    let mut method: Box<dyn OseMethod> =
+        Box::new(BackendNn::new(backend.clone(), params));
     let queries = data.query_inputs(landmark_idx);
     let y = method.embed(&queries)?;
     Ok((y, method, report))
@@ -84,19 +73,11 @@ pub fn run_nn(
 pub fn run_opt(
     data: &ExperimentData,
     landmark_idx: &[usize],
-    handle: Option<&RuntimeHandle>,
+    backend: &Backend,
 ) -> Result<(Matrix, Box<dyn OseMethod>)> {
-    let l = landmark_idx.len();
     let lm_config = data.landmark_config(landmark_idx);
-    let mut method: Box<dyn OseMethod> = match handle {
-        Some(h) if h.manifest().find("ose_opt", &[("L", l)]).is_some() => {
-            Box::new(PjrtOpt::with_defaults(h.clone(), lm_config))
-        }
-        _ => Box::new(RustOptimise {
-            landmarks: lm_config,
-            cfg: OseOptConfig::default(),
-        }),
-    };
+    let mut method: Box<dyn OseMethod> =
+        Box::new(BackendOpt::with_defaults(backend.clone(), lm_config));
     let queries = data.query_inputs(landmark_idx);
     let y = method.embed(&queries)?;
     Ok((y, method))
@@ -115,7 +96,7 @@ pub struct Fig1Row {
 
 pub fn fig1(
     data: &ExperimentData,
-    handle: Option<&RuntimeHandle>,
+    backend: &Backend,
     epochs: usize,
 ) -> Result<Vec<Fig1Row>> {
     let mut rows = Vec::new();
@@ -126,8 +107,8 @@ pub fn fig1(
     println!("{:>6} {:>14} {:>14} {:>10}", "L", "Err_opt(m)", "Err_nn(m)", "nn/opt");
     for l in data.scale.sweep() {
         let lm = data.landmarks(l);
-        let (y_opt, _) = run_opt(data, &lm, handle)?;
-        let (y_nn, _, _) = run_nn(data, &lm, handle, epochs)?;
+        let (y_opt, _) = run_opt(data, &lm, backend)?;
+        let (y_nn, _, _) = run_nn(data, &lm, backend, epochs)?;
         let err_opt = total_error(&data.config_ref, &data.delta_new, &y_opt);
         let err_nn = total_error(&data.config_ref, &data.delta_new, &y_nn);
         println!(
@@ -139,6 +120,7 @@ pub fn fig1(
     let json = Json::obj(vec![
         ("figure", Json::Str("fig1".into())),
         ("scale", Json::Str(data.scale.name().into())),
+        ("backend", Json::Str(backend.name().into())),
         (
             "rows",
             Json::Arr(
@@ -176,7 +158,7 @@ pub struct Fig23Result {
 
 pub fn fig23(
     data: &ExperimentData,
-    handle: Option<&RuntimeHandle>,
+    backend: &Backend,
     epochs: usize,
 ) -> Result<Vec<Fig23Result>> {
     let (lo, hi) = data.scale.contrast_pair();
@@ -184,8 +166,8 @@ pub fn fig23(
     println!("# Figures 2-3 — per-point errors PErr(y), L in {{{lo}, {hi}}}");
     for l in [lo, hi] {
         let lm = data.landmarks(l);
-        let (y_opt, _) = run_opt(data, &lm, handle)?;
-        let (y_nn, _, _) = run_nn(data, &lm, handle, epochs)?;
+        let (y_opt, _) = run_opt(data, &lm, backend)?;
+        let (y_nn, _, _) = run_nn(data, &lm, backend, epochs)?;
         let m = data.names_new.len();
         let mut perr_opt = Vec::with_capacity(m);
         let mut perr_nn = Vec::with_capacity(m);
@@ -240,6 +222,7 @@ pub fn fig23(
     let json = Json::obj(vec![
         ("figure", Json::Str("fig2_fig3".into())),
         ("scale", Json::Str(data.scale.name().into())),
+        ("backend", Json::Str(backend.name().into())),
         (
             "results",
             Json::Arr(
@@ -274,9 +257,28 @@ pub struct Fig4Row {
     pub rt_nn: f64,
 }
 
+/// Bench the single-point mapping RT of one method (the paper's protocol:
+/// both methods map a single out-of-sample point at a time).
+fn bench_single_point(
+    name: &str,
+    cfg: &BenchConfig,
+    method: &mut dyn OseMethod,
+    queries: &Matrix,
+) -> f64 {
+    let m = queries.rows;
+    let l = queries.cols;
+    let mut j = 0usize;
+    bench(name, cfg, || {
+        let row = Matrix::from_vec(1, l, queries.row(j % m).to_vec());
+        j += 1;
+        method.embed(&row).unwrap()
+    })
+    .median_s
+}
+
 pub fn fig4(
     data: &ExperimentData,
-    handle: Option<&RuntimeHandle>,
+    backend: &Backend,
     epochs: usize,
 ) -> Result<Vec<Fig4Row>> {
     let cfg = BenchConfig {
@@ -292,61 +294,24 @@ pub fn fig4(
         let lm = data.landmarks(l);
         let queries = data.query_inputs(&lm);
         let lm_config = data.landmark_config(&lm);
-        let m = queries.rows;
 
-        // --- optimisation method, single-point protocol
-        let rt_opt = match handle {
-            Some(h) if h.manifest().find("ose_opt", &[("L", l), ("B", 1)]).is_some() => {
-                let mut method =
-                    PjrtOpt::with_defaults(h.clone(), lm_config.clone());
-                let mut j = 0usize;
-                bench(&format!("opt-pjrt L={l}"), &cfg, || {
-                    let row =
-                        Matrix::from_vec(1, l, queries.row(j % m).to_vec());
-                    j += 1;
-                    method.embed(&row).unwrap()
-                })
-                .median_s
-            }
-            _ => {
-                let ocfg = OseOptConfig::default();
-                let mut j = 0usize;
-                bench(&format!("opt-rust L={l}"), &cfg, || {
-                    let p = embed_point(&lm_config, queries.row(j % m), None, &ocfg);
-                    j += 1;
-                    p
-                })
-                .median_s
-            }
-        };
+        let mut opt = BackendOpt::with_defaults(backend.clone(), lm_config);
+        let rt_opt = bench_single_point(
+            &format!("opt-{} L={l}", backend.name()),
+            &cfg,
+            &mut opt,
+            &queries,
+        );
 
-        // --- NN method (training amortised, as in the paper's protocol)
-        let (params, _) = train_nn(data, &lm, handle, epochs)?;
-        let rt_nn = match handle {
-            Some(h) if h.manifest().find("mlp_fwd", &{
-                let mut c = crate::coordinator::trainer::train_constraints(&params.shape);
-                c.push(("B", 1));
-                c
-            }).is_some() => {
-                let mut method = PjrtNn::new(h.clone(), &params);
-                let mut j = 0usize;
-                bench(&format!("nn-pjrt L={l}"), &cfg, || {
-                    let row = Matrix::from_vec(1, l, queries.row(j % m).to_vec());
-                    j += 1;
-                    method.embed(&row).unwrap()
-                })
-                .median_s
-            }
-            _ => {
-                let mut j = 0usize;
-                bench(&format!("nn-rust L={l}"), &cfg, || {
-                    let row = Matrix::from_vec(1, l, queries.row(j % m).to_vec());
-                    j += 1;
-                    crate::nn::forward(&params, &row)
-                })
-                .median_s
-            }
-        };
+        // NN method (training amortised, as in the paper's protocol)
+        let (params, _) = train_nn(data, &lm, backend, epochs)?;
+        let mut nn = BackendNn::new(backend.clone(), params);
+        let rt_nn = bench_single_point(
+            &format!("nn-{} L={l}", backend.name()),
+            &cfg,
+            &mut nn,
+            &queries,
+        );
 
         println!(
             "{l:>6} {:>14} {:>14} {:>12.1}x",
@@ -359,6 +324,7 @@ pub fn fig4(
     let json = Json::obj(vec![
         ("figure", Json::Str("fig4".into())),
         ("scale", Json::Str(data.scale.name().into())),
+        ("backend", Json::Str(backend.name().into())),
         (
             "rows",
             Json::Arr(
@@ -387,7 +353,7 @@ pub fn fig4(
 
 pub fn headline(
     data: &ExperimentData,
-    handle: Option<&RuntimeHandle>,
+    backend: &Backend,
     epochs: usize,
 ) -> Result<()> {
     // pick the two largest mid-sweep L values (the paper quotes L=1000,1500)
@@ -396,7 +362,7 @@ pub fn headline(
     println!("# Headline (paper Sec. 5.3.3): NN vs optimisation at L = {pick:?}");
     let mut ratios = Vec::new();
     for &l in &pick {
-        let rows = fig4_single(data, handle, epochs, l)?;
+        let rows = fig4_single(data, backend, epochs, l)?;
         ratios.push(rows.rt_opt / rows.rt_nn);
         println!(
             "  L={l}: opt {} / nn {} -> ratio {:.0}x  (nn < 1ms: {})",
@@ -409,7 +375,7 @@ pub fn headline(
     // training cost (the paper quotes ~1.2 s)
     let lm = data.landmarks(pick[0]);
     let t0 = std::time::Instant::now();
-    let (_, report) = train_nn(data, &lm, handle, epochs)?;
+    let (_, report) = train_nn(data, &lm, backend, epochs)?;
     println!(
         "  NN training at L={}: {:.2}s wall ({} epochs, loss {:.4}) [paper: ~1.2s]",
         pick[0],
@@ -426,7 +392,7 @@ pub fn headline(
 
 fn fig4_single(
     data: &ExperimentData,
-    handle: Option<&RuntimeHandle>,
+    backend: &Backend,
     epochs: usize,
     l: usize,
 ) -> Result<Fig4Row> {
@@ -439,41 +405,11 @@ fn fig4_single(
     let lm = data.landmarks(l);
     let queries = data.query_inputs(&lm);
     let lm_config = data.landmark_config(&lm);
-    let m = queries.rows;
-    let ocfg = OseOptConfig::default();
-    let mut j = 0usize;
-    let rt_opt = bench("opt", &cfg, || {
-        let p = embed_point(&lm_config, queries.row(j % m), None, &ocfg);
-        j += 1;
-        p
-    })
-    .median_s;
-    let (params, _) = train_nn(data, &lm, handle, epochs)?;
-    let rt_nn = match handle {
-        Some(h) if h.manifest().find("mlp_fwd", &{
-                let mut c = crate::coordinator::trainer::train_constraints(&params.shape);
-                c.push(("B", 1));
-                c
-            }).is_some() => {
-            let mut method = PjrtNn::new(h.clone(), &params);
-            let mut j = 0usize;
-            bench("nn", &cfg, || {
-                let row = Matrix::from_vec(1, l, queries.row(j % m).to_vec());
-                j += 1;
-                method.embed(&row).unwrap()
-            })
-            .median_s
-        }
-        _ => {
-            let mut j = 0usize;
-            bench("nn", &cfg, || {
-                let row = Matrix::from_vec(1, l, queries.row(j % m).to_vec());
-                j += 1;
-                crate::nn::forward(&params, &row)
-            })
-            .median_s
-        }
-    };
+    let mut opt = BackendOpt::with_defaults(backend.clone(), lm_config);
+    let rt_opt = bench_single_point("opt", &cfg, &mut opt, &queries);
+    let (params, _) = train_nn(data, &lm, backend, epochs)?;
+    let mut nn = BackendNn::new(backend.clone(), params);
+    let rt_nn = bench_single_point("nn", &cfg, &mut nn, &queries);
     Ok(Fig4Row { l, rt_opt, rt_nn })
 }
 
@@ -484,8 +420,9 @@ mod tests {
 
     #[test]
     fn fig1_smoke_shapes_hold() {
-        let data = load_or_build(Scale::Smoke, 3, None).unwrap();
-        let rows = fig1(&data, None, 15).unwrap();
+        let backend = Backend::native();
+        let data = load_or_build(Scale::Smoke, 3, &backend).unwrap();
+        let rows = fig1(&data, &backend, 15).unwrap();
         assert_eq!(rows.len(), 2);
         for r in &rows {
             assert!(r.err_opt.is_finite() && r.err_opt >= 0.0);
@@ -500,8 +437,9 @@ mod tests {
 
     #[test]
     fn fig23_smoke_produces_per_point_errors() {
-        let data = load_or_build(Scale::Smoke, 3, None).unwrap();
-        let res = fig23(&data, None, 15).unwrap();
+        let backend = Backend::native();
+        let data = load_or_build(Scale::Smoke, 3, &backend).unwrap();
+        let res = fig23(&data, &backend, 15).unwrap();
         assert_eq!(res.len(), 2);
         for r in &res {
             assert_eq!(r.perr_opt.len(), 16);

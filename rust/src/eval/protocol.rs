@@ -18,7 +18,7 @@ use crate::data::{Geco, GecoConfig};
 use crate::mds::dissimilarity::{cross_matrix, full_matrix};
 use crate::mds::landmarks::fps_landmarks;
 use crate::mds::{LsmdsConfig, Matrix};
-use crate::runtime::RuntimeHandle;
+use crate::runtime::{Backend, ComputeBackend};
 use crate::strdist::Levenshtein;
 use crate::util::json::Json;
 use crate::util::prng::Rng;
@@ -157,7 +157,7 @@ pub fn results_dir() -> PathBuf {
 pub fn load_or_build(
     scale: Scale,
     dim: usize,
-    handle: Option<&RuntimeHandle>,
+    backend: &Backend,
 ) -> Result<ExperimentData> {
     let (n, m) = scale.sizes();
     let mut geco = Geco::new(GecoConfig { seed: 0x9ec0 + n as u64, ..Default::default() });
@@ -194,8 +194,14 @@ pub fn load_or_build(
             // the native row-parallel Rust gradient; see EXPERIMENTS.md
             // SSPerf. On real TPU hardware the artifact path wins — the
             // cutover is a CPU-testbed artifact.
-            let h = if n <= 2000 { handle } else { None };
-            let (cfg, stress) = lsmds_landmarks(&delta_ref, &lcfg, h)?;
+            let native;
+            let solve = if n > 2000 && backend.name() == "pjrt" {
+                native = Backend::native();
+                &native
+            } else {
+                backend
+            };
+            let (cfg, stress) = lsmds_landmarks(&delta_ref, &lcfg, solve)?;
             log::info!(
                 "LSMDS done in {:.1}s (normalized stress {:.4})",
                 t0.elapsed().as_secs_f64(),
@@ -258,7 +264,7 @@ mod tests {
 
     #[test]
     fn smoke_scale_builds_quickly() {
-        let data = load_or_build(Scale::Smoke, 3, None).unwrap();
+        let data = load_or_build(Scale::Smoke, 3, &Backend::native()).unwrap();
         assert_eq!(data.names_ref.len(), 64);
         assert_eq!(data.names_new.len(), 16);
         assert_eq!(data.delta_ref.rows, 64);
@@ -280,7 +286,7 @@ mod tests {
 
     #[test]
     fn landmark_selection_deterministic() {
-        let data = load_or_build(Scale::Smoke, 3, None).unwrap();
+        let data = load_or_build(Scale::Smoke, 3, &Backend::native()).unwrap();
         assert_eq!(data.landmarks(16), data.landmarks(16));
     }
 

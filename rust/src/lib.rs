@@ -2,20 +2,33 @@
 //!
 //! Production-grade reproduction of *"High Performance Out-of-sample
 //! Embedding Techniques for Multidimensional Scaling"* (Herath, Roughan,
-//! Glonek, 2021) as a three-layer Rust + JAX/Pallas + PJRT system.
+//! Glonek, 2021) as a Rust system with a pluggable compute backend.
 //!
 //! - **L3 (this crate)**: dissimilarity engine, LSMDS/SMACOF/classical-MDS
 //!   solvers, landmark selection, the two OSE methods, a streaming
 //!   coordinator with dynamic batching, and the experiment harness for the
 //!   paper's Figures 1-4.
-//! - **L2/L1 (`python/compile/`)**: the stress/OSE/MLP compute graphs and
-//!   their Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt` once;
-//!   Python never runs on the request path.
-//! - **Runtime**: the [`runtime`] module loads artifacts through the PJRT
-//!   CPU client (`xla` crate) and executes them from the serving path.
+//! - **Compute backends** ([`runtime`]): every numeric graph (LSMDS stress
+//!   descent, batched OSE optimisation, fused MLP forward/train) executes
+//!   through the [`runtime::ComputeBackend`] trait. The default **native**
+//!   backend is pure Rust and always available; the **pjrt** backend
+//!   (cargo feature `pjrt`) executes AOT artifacts lowered once by
+//!   `python/compile/aot.py` — Python never runs on the request path.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for measured
-//! reproductions of every figure.
+//! See README.md for the build matrix and DESIGN.md for the system
+//! inventory.
+
+// Style lints that fight the numeric-kernel idiom used throughout
+// (index-based loops over matrix rows/cols, 7-arg update kernels).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::manual_memcpy,
+    clippy::inherent_to_string_shadow_display,
+    clippy::new_without_default,
+    clippy::comparison_chain
+)]
 
 pub mod coordinator;
 pub mod data;

@@ -18,7 +18,8 @@ use lmds_ose::coordinator::{embed_dataset, BatcherConfig, RunConfig, Server};
 use lmds_ose::data::{Geco, GecoConfig};
 use lmds_ose::eval::figures;
 use lmds_ose::eval::protocol::{self, Scale};
-use lmds_ose::runtime::{default_artifact_dir, RuntimeThread};
+use lmds_ose::ose::OseMethod;
+use lmds_ose::runtime::{default_artifact_dir, Backend, ComputeBackend};
 use lmds_ose::util::cli::{usage, Args, OptSpec};
 use lmds_ose::util::logging;
 
@@ -81,7 +82,7 @@ fn common_specs() -> Vec<OptSpec> {
         OptSpec { name: "backend", help: "nn|opt", takes_value: true, default: None },
         OptSpec { name: "metric", help: "levenshtein|osa|jw|qgram", takes_value: true, default: None },
         OptSpec { name: "seed", help: "PRNG seed", takes_value: true, default: None },
-        OptSpec { name: "no-pjrt", help: "pure-Rust paths only (skip artifacts)", takes_value: false, default: None },
+        OptSpec { name: "no-pjrt", help: "force the native compute backend (skip PJRT artifacts)", takes_value: false, default: None },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ]
 }
@@ -95,21 +96,28 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     Ok(cfg)
 }
 
-fn maybe_runtime(cfg: &RunConfig) -> Option<RuntimeThread> {
-    if !cfg.use_pjrt {
-        return None;
-    }
-    let dir = default_artifact_dir();
-    match RuntimeThread::spawn(&dir) {
-        Ok(rt) => Some(rt),
-        Err(e) => {
-            log::warn!(
-                "PJRT runtime unavailable ({e:#}); falling back to pure Rust. \
-                 Run `make artifacts` to enable artifacts."
-            );
-            None
+/// Select the compute backend: PJRT artifacts when the `pjrt` feature is
+/// compiled in, requested and loadable; the native backend otherwise.
+fn select_backend(cfg: &RunConfig) -> Backend {
+    #[cfg(feature = "pjrt")]
+    {
+        if cfg.use_pjrt {
+            match Backend::pjrt(&default_artifact_dir()) {
+                Ok(b) => return b,
+                Err(e) => log::warn!(
+                    "PJRT backend unavailable ({e:#}); using the native backend. \
+                     Run `make artifacts` and link real xla bindings to enable it."
+                ),
+            }
         }
     }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        if cfg.use_pjrt {
+            log::debug!("built without the `pjrt` feature; using the native backend");
+        }
+    }
+    Backend::native()
 }
 
 // ---------------------------------------------------------------------------
@@ -164,16 +172,16 @@ fn cmd_embed(argv: &[String]) -> Result<()> {
     let metric = lmds_ose::strdist::string_metric_by_name(&cfg.metric)
         .context("unknown metric")?;
 
-    let rt = maybe_runtime(&cfg);
-    let handle = rt.as_ref().map(|r| r.handle());
+    let backend = select_backend(&cfg);
 
     let t0 = Instant::now();
-    let result = embed_dataset(&objs, metric.as_ref(), &cfg.pipeline(), handle.as_ref())?;
+    let result = embed_dataset(&objs, metric.as_ref(), &cfg.pipeline(), &backend)?;
     let total = t0.elapsed().as_secs_f64();
 
     println!("embedded {n} objects into {}D in {total:.2}s", cfg.dim);
     println!("  landmarks          : {} ({:?})", cfg.landmarks, cfg.landmark_method);
-    println!("  backend            : {:?} via {}", cfg.backend, result.method.name());
+    println!("  compute backend    : {}", backend.name());
+    println!("  ose method         : {:?} via {}", cfg.backend, result.method.name());
     println!("  landmark stress    : {:.4}", result.landmark_stress);
     let t = &result.timings;
     println!(
@@ -221,9 +229,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
     let metric = lmds_ose::strdist::string_metric_by_name(&cfg.metric)
         .context("unknown metric")?;
-    let rt = maybe_runtime(&cfg);
-    let handle = rt.as_ref().map(|r| r.handle());
-    let result = embed_dataset(&objs, metric.as_ref(), &cfg.pipeline(), handle.as_ref())?;
+    let backend = select_backend(&cfg);
+    let result = embed_dataset(&objs, metric.as_ref(), &cfg.pipeline(), &backend)?;
     let landmark_names: Vec<String> = result
         .landmark_idx
         .iter()
@@ -295,35 +302,34 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
         .with_context(|| format!("unknown scale {:?}", args.str("scale")))?;
     let epochs = args.usize("epochs")?;
     let cfg = load_config(&args)?;
-    let rt = maybe_runtime(&cfg);
-    let handle = rt.as_ref().map(|r| r.handle());
+    let backend = select_backend(&cfg);
 
     let dim = if args.get("dim").is_some() { args.usize("dim")? } else { 7 };
-    let data = protocol::load_or_build(scale, dim, handle.as_ref())?;
+    let data = protocol::load_or_build(scale, dim, &backend)?;
 
     match which {
         "fig1" => {
-            figures::fig1(&data, handle.as_ref(), epochs)?;
+            figures::fig1(&data, &backend, epochs)?;
         }
         "fig2" | "fig3" | "fig23" => {
-            figures::fig23(&data, handle.as_ref(), epochs)?;
+            figures::fig23(&data, &backend, epochs)?;
         }
         "fig4" => {
-            figures::fig4(&data, handle.as_ref(), epochs)?;
+            figures::fig4(&data, &backend, epochs)?;
         }
-        "headline" => figures::headline(&data, handle.as_ref(), epochs)?,
+        "headline" => figures::headline(&data, &backend, epochs)?,
         "ablations" => {
             let l = data.scale.sweep()[1];
-            lmds_ose::eval::ablations::landmark_methods(&data, handle.as_ref(), l)?;
-            lmds_ose::eval::ablations::ose_baselines(&data, handle.as_ref(), l, epochs)?;
+            lmds_ose::eval::ablations::landmark_methods(&data, &backend, l)?;
+            lmds_ose::eval::ablations::ose_baselines(&data, &backend, l, epochs)?;
             lmds_ose::eval::ablations::step_size(&data, l)?;
             lmds_ose::eval::ablations::nn_hidden(&data, l, epochs)?;
         }
         "all" => {
-            figures::fig1(&data, handle.as_ref(), epochs)?;
-            figures::fig23(&data, handle.as_ref(), epochs)?;
-            figures::fig4(&data, handle.as_ref(), epochs)?;
-            figures::headline(&data, handle.as_ref(), epochs)?;
+            figures::fig1(&data, &backend, epochs)?;
+            figures::fig23(&data, &backend, epochs)?;
+            figures::fig4(&data, &backend, epochs)?;
+            figures::headline(&data, &backend, epochs)?;
         }
         other => anyhow::bail!("unknown figure {other:?} (fig1|fig23|fig4|headline|ablations|all)"),
     }
@@ -334,6 +340,10 @@ fn cmd_info(argv: &[String]) -> Result<()> {
     let specs = vec![OptSpec { name: "help", help: "show help", takes_value: false, default: None }];
     let _ = Args::parse(argv, &specs)?;
     let dir = default_artifact_dir();
+    println!(
+        "compute backends: native (always){}",
+        if cfg!(feature = "pjrt") { ", pjrt (compiled in)" } else { " — rebuild with --features pjrt for artifacts" }
+    );
     println!("artifact dir: {dir:?}");
     match lmds_ose::runtime::Manifest::load(&dir) {
         Ok(m) => {

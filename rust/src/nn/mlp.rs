@@ -287,7 +287,7 @@ impl Adam {
         let bc1 = 1.0 - BETA1.powf(self.t);
         let bc2 = 1.0 - BETA2.powf(self.t);
         for l in 0..4 {
-            update(
+            adam_update(
                 &mut params.w[l].data,
                 &grads.w[l].data,
                 &mut self.m_w[l].data,
@@ -296,7 +296,7 @@ impl Adam {
                 bc1,
                 bc2,
             );
-            update(
+            adam_update(
                 &mut params.b[l],
                 &grads.b[l],
                 &mut self.m_b[l],
@@ -309,7 +309,19 @@ impl Adam {
     }
 }
 
-fn update(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], lr: f32, bc1: f32, bc2: f32) {
+/// One elementwise Adam update with externally-supplied bias corrections
+/// `bc1 = 1 - beta1^t`, `bc2 = 1 - beta2^t`. Shared by [`Adam::step`] and
+/// the native compute backend's flat-state train step, so both produce
+/// bit-identical parameter trajectories.
+pub fn adam_update(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lr: f32,
+    bc1: f32,
+    bc2: f32,
+) {
     for i in 0..p.len() {
         m[i] = BETA1 * m[i] + (1.0 - BETA1) * g[i];
         v[i] = BETA2 * v[i] + (1.0 - BETA2) * g[i] * g[i];

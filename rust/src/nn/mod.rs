@@ -4,5 +4,5 @@
 pub mod mlp;
 
 pub use mlp::{
-    backward, forward, mae_loss, Adam, Gradients, MlpParams, MlpShape,
+    adam_update, backward, forward, mae_loss, Adam, Gradients, MlpParams, MlpShape,
 };

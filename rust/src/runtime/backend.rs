@@ -1,0 +1,218 @@
+//! The compute-backend seam: every numeric graph the system executes —
+//! LSMDS stress descent, the batched OSE optimiser (Eq. 2), and the MLP
+//! forward/loss/Adam-train-step graphs (Sec. 4.2) — goes through
+//! [`ComputeBackend`]. Two implementations exist:
+//!
+//! - [`NativeBackend`](super::native::NativeBackend): pure Rust, always
+//!   available, row-parallel; the default.
+//! - `PjrtBackend` (behind the `pjrt` cargo feature): executes the
+//!   AOT-lowered HLO artifacts produced by `python/compile/aot.py` through
+//!   a PJRT client, transparently delegating to the native backend for any
+//!   shape it has no artifact for.
+//!
+//! Consumers (the pipeline, trainer, serving methods, figure harnesses)
+//! hold a clonable [`Backend`] and never know which implementation runs —
+//! this is the seam that later multi-backend/sharding work plugs into.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::mds::Matrix;
+use crate::nn::{MlpParams, MlpShape};
+
+/// Host-side Adam optimiser state threaded through
+/// [`ComputeBackend::mlp_train_step`], in the artifact's flat argument
+/// order (w1, b1, w2, b2, w3, b3, w4, b4). Both backends consume and
+/// update the same representation, so training can switch backends
+/// mid-run without conversion.
+pub struct AdamState {
+    pub shape: MlpShape,
+    /// Flattened parameters.
+    pub params: Vec<Vec<f32>>,
+    /// First-moment accumulators.
+    pub m: Vec<Vec<f32>>,
+    /// Second-moment accumulators.
+    pub v: Vec<Vec<f32>>,
+    /// Step counter (f32 to match the artifact's scalar slot).
+    pub t: f32,
+}
+
+impl AdamState {
+    /// Fresh state (zero moments, step 0) around initial parameters.
+    pub fn new(params: &MlpParams) -> AdamState {
+        let flat = params.flatten();
+        let zeros: Vec<Vec<f32>> = flat.iter().map(|p| vec![0.0; p.len()]).collect();
+        AdamState {
+            shape: params.shape.clone(),
+            params: flat,
+            m: zeros.clone(),
+            v: zeros,
+            t: 0.0,
+        }
+    }
+
+    /// Current parameters in structured form.
+    pub fn to_params(&self) -> MlpParams {
+        MlpParams::from_flat(&self.shape, &self.params)
+    }
+}
+
+/// A strategy for executing the system's compute graphs. Implementations
+/// must be thread-safe: the serving path calls them from the batcher
+/// thread while the pipeline may train on another.
+pub trait ComputeBackend: Send + Sync {
+    /// Short identifier ("native", "pjrt") for logs and method names.
+    fn name(&self) -> &'static str;
+
+    /// Run `steps` gradient-descent iterations on the raw stress (Eq. 1)
+    /// of configuration `x` (N x K) against dissimilarities `delta`
+    /// (N x N). Returns the updated configuration and the stress sigma
+    /// evaluated at the configuration the final step departed from (the
+    /// convergence signal the caller checks between calls).
+    fn lsmds_steps(
+        &self,
+        x: &Matrix,
+        delta: &Matrix,
+        lr: f32,
+        steps: usize,
+    ) -> Result<(Matrix, f64)>;
+
+    /// Natural step granularity for [`Self::lsmds_steps`] at size N: the
+    /// caller loops in chunks of this many steps, checking convergence in
+    /// between. PJRT returns the artifact's unrolled T; native defaults to
+    /// per-iteration checking.
+    fn lsmds_step_chunk(&self, _n: usize) -> usize {
+        1
+    }
+
+    /// Run `steps` majorization iterations of the batched OSE optimisation
+    /// (Eq. 2): embed `deltas.rows` new points (each row = distances to the
+    /// L landmarks) into the fixed `landmarks` (L x K) configuration,
+    /// starting from `y0` (B x K). Returns the final coordinates and the
+    /// Eq.-2 objective of every row at the final iterate.
+    fn ose_opt_steps(
+        &self,
+        landmarks: &Matrix,
+        deltas: &Matrix,
+        y0: &Matrix,
+        lr: f32,
+        steps: usize,
+    ) -> Result<(Matrix, Vec<f32>)>;
+
+    /// Natural step granularity for [`Self::ose_opt_steps`] at L landmarks.
+    /// PJRT returns the artifact's unrolled inner T; `usize::MAX` means
+    /// "no preference — any step count is equally cheap" (the native
+    /// default), letting callers pick a granularity that suits their
+    /// convergence checks.
+    fn ose_opt_step_chunk(&self, _l: usize) -> usize {
+        usize::MAX
+    }
+
+    /// MLP forward pass: `d` (B x L) -> predictions (B x K).
+    fn mlp_fwd(&self, params: &MlpParams, d: &Matrix) -> Result<Matrix>;
+
+    /// Eq.-3 loss of the forward pass against targets `x` (B x K).
+    fn mlp_loss(&self, params: &MlpParams, d: &Matrix, x: &Matrix) -> Result<f64>;
+
+    /// One fused forward/backward/Adam step on `state` for minibatch
+    /// (`d`, `x`); returns the batch loss (Eq. 3).
+    fn mlp_train_step(
+        &self,
+        state: &mut AdamState,
+        d: &Matrix,
+        x: &Matrix,
+        lr: f32,
+    ) -> Result<f32>;
+
+    /// Preferred minibatch size for [`Self::mlp_train_step`] at this shape
+    /// (PJRT: the fixed artifact batch; native: `None` = caller's choice).
+    fn mlp_train_batch(&self, _shape: &MlpShape) -> Option<usize> {
+        None
+    }
+}
+
+/// Clonable handle to a [`ComputeBackend`] — the type every consumer
+/// passes around.
+#[derive(Clone)]
+pub struct Backend(Arc<dyn ComputeBackend>);
+
+impl Backend {
+    /// Wrap any backend implementation.
+    pub fn new(backend: Arc<dyn ComputeBackend>) -> Backend {
+        Backend(backend)
+    }
+
+    /// The pure-Rust native backend (always available).
+    pub fn native() -> Backend {
+        Backend(Arc::new(super::native::NativeBackend::default()))
+    }
+
+    /// The PJRT artifact backend over `artifact_dir`. Fails when the
+    /// manifest is missing or the PJRT client cannot start (e.g. this
+    /// build links the in-tree `xla` stub).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(artifact_dir: &std::path::Path) -> anyhow::Result<Backend> {
+        Ok(Backend(Arc::new(super::pjrt::PjrtBackend::load(artifact_dir)?)))
+    }
+
+    /// Best available backend: PJRT when the feature is compiled in and
+    /// its artifacts load, the native backend otherwise.
+    pub fn auto() -> Backend {
+        #[cfg(feature = "pjrt")]
+        {
+            match Backend::pjrt(&super::default_artifact_dir()) {
+                Ok(b) => return b,
+                Err(e) => {
+                    log::debug!("pjrt backend unavailable ({e:#}); using native")
+                }
+            }
+        }
+        Backend::native()
+    }
+}
+
+impl std::ops::Deref for Backend {
+    type Target = dyn ComputeBackend;
+
+    fn deref(&self) -> &Self::Target {
+        self.0.as_ref()
+    }
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Backend({})", self.0.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn adam_state_round_trips_params() {
+        let mut rng = Rng::new(1);
+        let shape = MlpShape { input: 6, hidden: [5, 4, 3], output: 2 };
+        let params = MlpParams::init(&shape, &mut rng);
+        let state = AdamState::new(&params);
+        assert_eq!(state.params.len(), 8);
+        assert_eq!(state.t, 0.0);
+        assert!(state.m.iter().all(|v| v.iter().all(|x| *x == 0.0)));
+        let back = state.to_params();
+        for l in 0..4 {
+            assert_eq!(back.w[l], params.w[l]);
+            assert_eq!(back.b[l], params.b[l]);
+        }
+    }
+
+    #[test]
+    fn backend_handle_clones_share_the_implementation() {
+        let a = Backend::native();
+        let b = a.clone();
+        assert_eq!(a.name(), "native");
+        assert_eq!(b.name(), "native");
+        assert!(format!("{a:?}").contains("native"));
+    }
+}

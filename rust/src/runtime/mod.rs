@@ -1,14 +1,37 @@
-//! PJRT runtime layer: loads the AOT artifacts produced by
-//! `python/compile/aot.py` (HLO text + manifest) and executes them on the
-//! CPU PJRT client. The serving path never touches Python.
+//! Compute runtime: the [`ComputeBackend`] trait and its implementations.
+//!
+//! - [`native`]: the default pure-Rust backend — evaluates the LSMDS /
+//!   OSE-opt / MLP graphs directly, always available, no toolchain needed.
+//! - [`pjrt`] (cargo feature `pjrt`): loads the AOT artifacts produced by
+//!   `python/compile/aot.py` (HLO text + manifest) and executes them on a
+//!   PJRT client, delegating to the native backend for any shape without
+//!   an artifact. The serving path never touches Python either way.
+//!
+//! [`manifest`] (always compiled — it is plain data + hand-rolled JSON) is
+//! the contract between the AOT compiler and the artifact runtime; the
+//! `lmds-ose info` subcommand reads it without any PJRT dependency.
 
-pub mod client;
-pub mod handle;
+pub mod backend;
 pub mod manifest;
+pub mod native;
 
-pub use client::{ArgValue, OutValue, Runtime};
-pub use handle::{OwnedArg, RuntimeHandle, RuntimeThread};
+#[cfg(feature = "pjrt")]
+pub mod client;
+#[cfg(feature = "pjrt")]
+pub mod handle;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use backend::{AdamState, Backend, ComputeBackend};
 pub use manifest::{ArtifactSpec, Manifest};
+pub use native::NativeBackend;
+
+#[cfg(feature = "pjrt")]
+pub use client::{ArgValue, OutValue, Runtime};
+#[cfg(feature = "pjrt")]
+pub use handle::{OwnedArg, RuntimeHandle, RuntimeThread};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
 
 /// Default artifact directory: `$LMDS_ARTIFACTS` or `<repo>/artifacts`.
 pub fn default_artifact_dir() -> std::path::PathBuf {

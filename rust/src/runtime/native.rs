@@ -1,0 +1,260 @@
+//! The pure-Rust native compute backend: evaluates the same graphs the
+//! PJRT artifacts encode (LSMDS stress descent, batched OSE majorization,
+//! fused MLP forward / loss / Adam train step) directly on the CPU,
+//! row-parallel where the shape allows it.
+//!
+//! Numerics deliberately mirror the serial oracles in `ose::optimise` and
+//! `nn::mlp` operation-for-operation (same accumulation order, same eps),
+//! so the dedicated cross-check tests in `tests/backend_parity.rs` hold to
+//! tight tolerances — this backend is both the default production path and
+//! the reference the PJRT artifacts are validated against.
+
+use anyhow::Result;
+
+use crate::mds::lsmds::stress_gradient;
+use crate::mds::Matrix;
+use crate::nn::{self, MlpParams};
+use crate::ose::optimise::objective_and_grad;
+use crate::util::threadpool::{default_parallelism, parallel_for_chunks, SyncSlice};
+
+use super::backend::{AdamState, ComputeBackend};
+
+/// Pure-Rust backend. Stateless; cheap to construct.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    /// Forward one input row through the MLP. The per-output accumulation
+    /// order matches `nn::forward` exactly (ascending input index), so the
+    /// two paths agree to the last bit.
+    fn forward_row(params: &MlpParams, row: &[f32]) -> Vec<f32> {
+        let mut cur = row.to_vec();
+        for l in 0..4 {
+            let w = &params.w[l];
+            let b = &params.b[l];
+            let mut next = vec![0.0f32; w.cols];
+            for (c, out) in next.iter_mut().enumerate() {
+                let mut acc = b[c];
+                for (i, xv) in cur.iter().enumerate() {
+                    acc += xv * w.at(i, c);
+                }
+                *out = acc;
+            }
+            if l < 3 {
+                for v in next.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            cur = next;
+        }
+        cur
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn lsmds_steps(
+        &self,
+        x: &Matrix,
+        delta: &Matrix,
+        lr: f32,
+        steps: usize,
+    ) -> Result<(Matrix, f64)> {
+        anyhow::ensure!(delta.rows == delta.cols, "delta must be square");
+        anyhow::ensure!(x.rows == delta.rows, "x/delta row mismatch");
+        let lr = lr as f64;
+        let mut x = x.clone();
+        let mut sigma = f64::NAN;
+        for _ in 0..steps {
+            let (grad, s) = stress_gradient(&x, delta);
+            sigma = s;
+            for (xi, gi) in x.data.iter_mut().zip(grad.data.iter()) {
+                *xi -= (lr * *gi as f64) as f32;
+            }
+        }
+        Ok((x, sigma))
+    }
+
+    fn ose_opt_steps(
+        &self,
+        landmarks: &Matrix,
+        deltas: &Matrix,
+        y0: &Matrix,
+        lr: f32,
+        steps: usize,
+    ) -> Result<(Matrix, Vec<f32>)> {
+        let l = landmarks.rows;
+        let k = landmarks.cols;
+        anyhow::ensure!(deltas.cols == l, "deltas width {} != L {l}", deltas.cols);
+        anyhow::ensure!(
+            y0.rows == deltas.rows && y0.cols == k,
+            "y0 shape ({}, {}) != ({}, {k})",
+            y0.rows,
+            y0.cols,
+            deltas.rows
+        );
+        let b = deltas.rows;
+        let lrf = lr as f64;
+        let mut y = Matrix::zeros(b, k);
+        let mut obj = vec![0.0f32; b];
+        {
+            let yslots = SyncSlice::new(&mut y.data);
+            let oslots = SyncSlice::new(&mut obj);
+            parallel_for_chunks(b, 4, default_parallelism(), |start, end| {
+                for r in start..end {
+                    let mut yr: Vec<f32> = y0.row(r).to_vec();
+                    for _ in 0..steps {
+                        let (_, grad) =
+                            objective_and_grad(landmarks, deltas.row(r), &yr);
+                        for c in 0..k {
+                            yr[c] -= (lrf * grad[c]) as f32;
+                        }
+                    }
+                    let (o, _) = objective_and_grad(landmarks, deltas.row(r), &yr);
+                    unsafe {
+                        oslots.write(r, o as f32);
+                        for c in 0..k {
+                            yslots.write(r * k + c, yr[c]);
+                        }
+                    }
+                }
+            });
+        }
+        Ok((y, obj))
+    }
+
+    fn mlp_fwd(&self, params: &MlpParams, d: &Matrix) -> Result<Matrix> {
+        anyhow::ensure!(
+            d.cols == params.shape.input,
+            "input width {} != L {}",
+            d.cols,
+            params.shape.input
+        );
+        let k = params.shape.output;
+        let mut out = Matrix::zeros(d.rows, k);
+        {
+            let slots = SyncSlice::new(&mut out.data);
+            parallel_for_chunks(d.rows, 8, default_parallelism(), |start, end| {
+                for r in start..end {
+                    let y = Self::forward_row(params, d.row(r));
+                    unsafe {
+                        for c in 0..k {
+                            slots.write(r * k + c, y[c]);
+                        }
+                    }
+                }
+            });
+        }
+        Ok(out)
+    }
+
+    fn mlp_loss(&self, params: &MlpParams, d: &Matrix, x: &Matrix) -> Result<f64> {
+        let pred = self.mlp_fwd(params, d)?;
+        anyhow::ensure!(
+            (pred.rows, pred.cols) == (x.rows, x.cols),
+            "target shape mismatch"
+        );
+        Ok(nn::mae_loss(&pred, x))
+    }
+
+    fn mlp_train_step(
+        &self,
+        state: &mut AdamState,
+        d: &Matrix,
+        x: &Matrix,
+        lr: f32,
+    ) -> Result<f32> {
+        anyhow::ensure!(d.cols == state.shape.input, "input width != L");
+        anyhow::ensure!(x.cols == state.shape.output, "label width != K");
+        anyhow::ensure!(d.rows == x.rows, "batch mismatch");
+        let params = state.to_params();
+        let (loss, grads) = nn::backward(&params, d, x);
+        state.t += 1.0;
+        let bc1 = 1.0 - nn::mlp::BETA1.powf(state.t);
+        let bc2 = 1.0 - nn::mlp::BETA2.powf(state.t);
+        for layer in 0..4 {
+            let (wi, bi) = (2 * layer, 2 * layer + 1);
+            nn::adam_update(
+                &mut state.params[wi],
+                &grads.w[layer].data,
+                &mut state.m[wi],
+                &mut state.v[wi],
+                lr,
+                bc1,
+                bc2,
+            );
+            nn::adam_update(
+                &mut state.params[bi],
+                &grads.b[layer],
+                &mut state.m[bi],
+                &mut state.v[bi],
+                lr,
+                bc1,
+                bc2,
+            );
+        }
+        Ok(loss as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::MlpShape;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn ose_opt_zero_steps_returns_initial_guess() {
+        let mut rng = Rng::new(1);
+        let lm = Matrix::random_normal(&mut rng, 10, 3, 1.0);
+        let deltas = Matrix::from_vec(
+            2,
+            10,
+            (0..20).map(|_| rng.next_f32() + 0.5).collect(),
+        );
+        let y0 = Matrix::random_normal(&mut rng, 2, 3, 1.0);
+        let (y, obj) = NativeBackend
+            .ose_opt_steps(&lm, &deltas, &y0, 0.05, 0)
+            .unwrap();
+        assert_eq!(y.data, y0.data);
+        assert_eq!(obj.len(), 2);
+        assert!(obj.iter().all(|o| o.is_finite() && *o >= 0.0));
+    }
+
+    #[test]
+    fn mlp_fwd_rejects_wrong_width() {
+        let mut rng = Rng::new(2);
+        let params = MlpParams::init(
+            &MlpShape { input: 8, hidden: [4, 4, 4], output: 2 },
+            &mut rng,
+        );
+        assert!(NativeBackend.mlp_fwd(&params, &Matrix::zeros(3, 7)).is_err());
+    }
+
+    #[test]
+    fn lsmds_steps_reduce_stress() {
+        let mut rng = Rng::new(3);
+        let hidden = Matrix::random_normal(&mut rng, 20, 2, 1.0);
+        let mut delta = Matrix::zeros(20, 20);
+        for i in 0..20 {
+            for j in 0..20 {
+                let d = crate::strdist::euclidean(hidden.row(i), hidden.row(j));
+                delta.set(i, j, d as f32);
+            }
+        }
+        let mut x0 = Matrix::random_normal(&mut rng, 20, 2, 1.0);
+        x0.center_columns();
+        let before = crate::mds::stress::raw_stress(&x0, &delta);
+        let (x, sigma) = NativeBackend
+            .lsmds_steps(&x0, &delta, 1.0 / 40.0, 50)
+            .unwrap();
+        let after = crate::mds::stress::raw_stress(&x, &delta);
+        assert!(after < before, "{before} -> {after}");
+        assert!(sigma.is_finite());
+    }
+}

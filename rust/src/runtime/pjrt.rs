@@ -1,0 +1,509 @@
+//! The PJRT artifact backend (behind the `pjrt` cargo feature): implements
+//! [`ComputeBackend`] by executing the AOT-lowered HLO artifacts through
+//! the runtime executor thread.
+//!
+//! Artifact executables are shape-monomorphic, so each operation picks the
+//! smallest batch variant that fits, zero-pads the request up to it, and
+//! slices the padding off the result (padding rows never escape the
+//! runtime boundary). Large device-resident operands — the landmark
+//! configuration, MLP weights, the LSMDS dissimilarity matrix — are
+//! uploaded once per distinct value (content-keyed bindings) and reused by
+//! every subsequent execution.
+//!
+//! Any graph shape with no matching artifact delegates to the native
+//! backend, so a partially-built artifact set degrades gracefully instead
+//! of failing requests.
+
+use std::collections::HashSet;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::mds::Matrix;
+use crate::nn::{MlpParams, MlpShape};
+
+use super::backend::{AdamState, ComputeBackend};
+use super::handle::{OwnedArg, RuntimeHandle, RuntimeThread};
+use super::native::NativeBackend;
+
+/// Select the smallest available batch-size variant >= n (or the largest
+/// one if n exceeds all variants — the caller then chunks).
+pub fn pick_batch(available: &[usize], n: usize) -> Option<usize> {
+    available
+        .iter()
+        .copied()
+        .filter(|b| *b >= n)
+        .min()
+        .or_else(|| available.iter().copied().max())
+}
+
+/// Zero-pad a matrix to `rows` rows.
+pub fn pad_rows(m: &Matrix, rows: usize) -> Matrix {
+    if m.rows == rows {
+        return m.clone();
+    }
+    let mut out = Matrix::zeros(rows, m.cols);
+    out.data[..m.data.len()].copy_from_slice(&m.data);
+    out
+}
+
+/// Copy rows `start..end` out of a matrix.
+fn slice_rows(m: &Matrix, start: usize, end: usize) -> Matrix {
+    Matrix::from_vec(
+        end - start,
+        m.cols,
+        m.data[start * m.cols..end * m.cols].to_vec(),
+    )
+}
+
+/// Content key for a device binding: FNV-1a over the operand lengths +
+/// data, so identical operands across calls share one host->device upload.
+///
+/// The key is recomputed per call (the trait is stateless), so hashing is
+/// bounded: operands up to 4096 elements hash in full; larger ones hash a
+/// fixed stride sample plus their head and tail. Every producer of these
+/// operands (LSMDS solves, Adam training, distance-matrix builds) updates
+/// elements densely, so a changed operand always changes sampled
+/// positions — while the serving hot path pays microseconds, not a full
+/// pass over ~100k weight floats per request.
+const HASH_FULL_LIMIT: usize = 4096;
+const HASH_SAMPLES: usize = 1024;
+
+fn content_key(prefix: &str, parts: &[&[f32]]) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for part in parts {
+        let n = part.len();
+        eat(n as u64);
+        if n <= HASH_FULL_LIMIT {
+            for v in *part {
+                eat(v.to_bits() as u64);
+            }
+        } else {
+            let stride = n.div_ceil(HASH_SAMPLES);
+            let mut i = 0;
+            while i < n {
+                eat(part[i].to_bits() as u64);
+                i += stride;
+            }
+            // head and tail always participate
+            for v in &part[..64] {
+                eat(v.to_bits() as u64);
+            }
+            for v in &part[n - 64..] {
+                eat(v.to_bits() as u64);
+            }
+        }
+    }
+    format!("{prefix}-{h:016x}")
+}
+
+/// Dim constraints identifying the MLP artifacts of a given shape.
+fn mlp_constraints(shape: &MlpShape) -> Vec<(&'static str, usize)> {
+    vec![
+        ("L", shape.input),
+        ("H1", shape.hidden[0]),
+        ("H2", shape.hidden[1]),
+        ("H3", shape.hidden[2]),
+        ("K", shape.output),
+    ]
+}
+
+/// Weight arguments (positions 1..=8 of `mlp_fwd`, shared across all B
+/// variants) in artifact form.
+fn weight_args(
+    flat: &[Vec<f32>],
+    arg_shapes: &[Vec<usize>],
+    first_pos: usize,
+) -> Vec<(usize, OwnedArg)> {
+    flat.iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let sh = &arg_shapes[first_pos + i];
+            let arg = if sh.len() == 2 {
+                OwnedArg::Mat(Matrix::from_vec(sh[0], sh[1], p.clone()))
+            } else {
+                OwnedArg::Vec1(p.clone())
+            };
+            (first_pos + i, arg)
+        })
+        .collect()
+}
+
+pub struct PjrtBackend {
+    /// Executor-thread owner; a fresh [`RuntimeHandle`] is cloned out per
+    /// operation (the mutex makes the backend `Sync` regardless of the
+    /// standard library's `Sender` guarantees).
+    rt: Mutex<RuntimeThread>,
+    /// Delegation target for shapes with no artifact.
+    native: NativeBackend,
+    /// Content keys already uploaded to the device.
+    bound: Mutex<HashSet<String>>,
+}
+
+impl PjrtBackend {
+    /// Load the manifest and start the PJRT executor thread.
+    pub fn load(artifact_dir: &Path) -> Result<PjrtBackend> {
+        let rt = RuntimeThread::spawn(artifact_dir)?;
+        Ok(PjrtBackend {
+            rt: Mutex::new(rt),
+            native: NativeBackend,
+            bound: Mutex::new(HashSet::new()),
+        })
+    }
+
+    fn handle(&self) -> RuntimeHandle {
+        self.rt.lock().unwrap().handle()
+    }
+
+    /// Upload an argument set once per content key.
+    fn ensure_bound(
+        &self,
+        h: &RuntimeHandle,
+        key: &str,
+        args: Vec<(usize, OwnedArg)>,
+    ) -> Result<()> {
+        {
+            let bound = self.bound.lock().unwrap();
+            if bound.contains(key) {
+                return Ok(());
+            }
+        }
+        h.bind(key, args)?;
+        self.bound.lock().unwrap().insert(key.to_string());
+        Ok(())
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn lsmds_steps(
+        &self,
+        x: &Matrix,
+        delta: &Matrix,
+        lr: f32,
+        steps: usize,
+    ) -> Result<(Matrix, f64)> {
+        let h = self.handle();
+        let n = delta.rows;
+        let Some(spec) = h.manifest().find("lsmds_steps", &[("N", n)]).cloned() else {
+            log::debug!("no lsmds_steps artifact for N={n}; native fallback");
+            return self.native.lsmds_steps(x, delta, lr, steps);
+        };
+        let t = spec.dim("T").unwrap_or(1).max(1);
+        let execs = steps.div_ceil(t).max(1);
+        // the N x N dissimilarity matrix crosses host->device ONCE; only
+        // the N x K configuration moves per call
+        let key = content_key("lsmds-delta", &[&delta.data]);
+        self.ensure_bound(&h, &key, vec![(1, OwnedArg::Mat(delta.clone()))])?;
+        let mut xc = x.clone();
+        let mut sigma = f64::NAN;
+        for _ in 0..execs {
+            let out = h.execute_bound(
+                &spec.name,
+                &key,
+                vec![(0, OwnedArg::Mat(xc)), (2, OwnedArg::Scalar(lr))],
+            )?;
+            let mut it = out.into_iter();
+            xc = it.next().context("missing X output")?.into_matrix();
+            sigma = it.next().context("missing sigma output")?.scalar() as f64;
+        }
+        Ok((xc, sigma))
+    }
+
+    fn lsmds_step_chunk(&self, n: usize) -> usize {
+        self.handle()
+            .manifest()
+            .find("lsmds_steps", &[("N", n)])
+            .and_then(|s| s.dim("T"))
+            .unwrap_or(1)
+            .max(1)
+    }
+
+    fn ose_opt_steps(
+        &self,
+        landmarks: &Matrix,
+        deltas: &Matrix,
+        y0: &Matrix,
+        lr: f32,
+        steps: usize,
+    ) -> Result<(Matrix, Vec<f32>)> {
+        let l = landmarks.rows;
+        let k = landmarks.cols;
+        anyhow::ensure!(deltas.cols == l, "deltas width != L");
+        anyhow::ensure!(
+            y0.rows == deltas.rows && y0.cols == k,
+            "y0 shape ({}, {}) != ({}, {k})",
+            y0.rows,
+            y0.cols,
+            deltas.rows
+        );
+        let h = self.handle();
+        let avail = h.manifest().available_dims("ose_opt", "B", &[("L", l)]);
+        if avail.is_empty() {
+            log::debug!("no ose_opt artifact for L={l}; native fallback");
+            return self.native.ose_opt_steps(landmarks, deltas, y0, lr, steps);
+        }
+        // landmarks live on-device across all calls (position 0)
+        let key = content_key("ose-landmarks", &[&landmarks.data]);
+        self.ensure_bound(&h, &key, vec![(0, OwnedArg::Mat(landmarks.clone()))])?;
+
+        let max_b = avail.iter().copied().max().unwrap_or(1).max(1);
+        let mut y = Matrix::zeros(deltas.rows, k);
+        let mut obj = vec![0.0f32; deltas.rows];
+        let mut start = 0;
+        while start < deltas.rows {
+            let end = (start + max_b).min(deltas.rows);
+            let rows = end - start;
+            let b = pick_batch(&avail, rows).context("no ose_opt variant")?;
+            let spec = h
+                .manifest()
+                .find("ose_opt", &[("L", l), ("B", b)])
+                .context("ose_opt artifact vanished")?
+                .clone();
+            let t = spec.dim("T").unwrap_or(60).max(1);
+            let execs = steps.div_ceil(t).max(1);
+            let padded_d = pad_rows(&slice_rows(deltas, start, end), b);
+            let mut yp = pad_rows(&slice_rows(y0, start, end), b);
+            let mut last_obj = vec![0.0f32; b];
+            for _ in 0..execs {
+                let out = h.execute_bound(
+                    &spec.name,
+                    &key,
+                    vec![
+                        (1, OwnedArg::Mat(padded_d.clone())),
+                        (2, OwnedArg::Mat(yp)),
+                        (3, OwnedArg::Scalar(lr)),
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                yp = it.next().context("missing Y output")?.into_matrix();
+                if let Some(o) = it.next() {
+                    last_obj = o.data;
+                }
+            }
+            for r in 0..rows {
+                y.row_mut(start + r).copy_from_slice(yp.row(r));
+                obj[start + r] = last_obj[r];
+            }
+            start = end;
+        }
+        Ok((y, obj))
+    }
+
+    fn ose_opt_step_chunk(&self, l: usize) -> usize {
+        let h = self.handle();
+        let avail = h.manifest().available_dims("ose_opt", "B", &[("L", l)]);
+        avail
+            .first()
+            .and_then(|b| h.manifest().find("ose_opt", &[("L", l), ("B", *b)]))
+            .and_then(|s| s.dim("T"))
+            .unwrap_or(usize::MAX)
+            .max(1)
+    }
+
+    fn mlp_fwd(&self, params: &MlpParams, d: &Matrix) -> Result<Matrix> {
+        anyhow::ensure!(d.cols == params.shape.input, "input width != L");
+        let h = self.handle();
+        let constraints = mlp_constraints(&params.shape);
+        let avail = h.manifest().available_dims("mlp_fwd", "B", &constraints);
+        if avail.is_empty() {
+            log::debug!(
+                "no mlp_fwd artifact for L={}; native fallback",
+                params.shape.input
+            );
+            return self.native.mlp_fwd(params, d);
+        }
+        let flat = params.flatten();
+        let flat_refs: Vec<&[f32]> = flat.iter().map(|p| p.as_slice()).collect();
+        let key = content_key("mlp-weights", &flat_refs);
+        let k = params.shape.output;
+        let max_b = avail.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = Matrix::zeros(d.rows, k);
+        let mut start = 0;
+        while start < d.rows {
+            let end = (start + max_b).min(d.rows);
+            let rows = end - start;
+            let b = pick_batch(&avail, rows).context("no mlp_fwd variant")?;
+            let spec = h
+                .manifest()
+                .find("mlp_fwd", &{
+                    let mut c = constraints.clone();
+                    c.push(("B", b));
+                    c
+                })
+                .context("mlp_fwd artifact vanished")?
+                .clone();
+            let arg_shapes: Vec<Vec<usize>> =
+                spec.args.iter().map(|a| a.shape.clone()).collect();
+            self.ensure_bound(&h, &key, weight_args(&flat, &arg_shapes, 1))?;
+            let padded = pad_rows(&slice_rows(d, start, end), b);
+            // hot path: only the input tile crosses host->device
+            let y = h
+                .execute_bound(&spec.name, &key, vec![(0, OwnedArg::Mat(padded))])?
+                .swap_remove(0)
+                .into_matrix();
+            for r in 0..rows {
+                out.row_mut(start + r).copy_from_slice(y.row(r));
+            }
+            start = end;
+        }
+        Ok(out)
+    }
+
+    fn mlp_loss(&self, params: &MlpParams, d: &Matrix, x: &Matrix) -> Result<f64> {
+        let h = self.handle();
+        let mut constraints = mlp_constraints(&params.shape);
+        constraints.push(("B", d.rows));
+        let Some(spec) = h.manifest().find("mlp_loss", &constraints).cloned() else {
+            return self.native.mlp_loss(params, d, x);
+        };
+        let arg_shapes: Vec<Vec<usize>> =
+            spec.args.iter().map(|a| a.shape.clone()).collect();
+        let mut args: Vec<OwnedArg> = Vec::with_capacity(10);
+        for (i, p) in params.flatten().into_iter().enumerate() {
+            let sh = &arg_shapes[i];
+            args.push(if sh.len() == 2 {
+                OwnedArg::Mat(Matrix::from_vec(sh[0], sh[1], p))
+            } else {
+                OwnedArg::Vec1(p)
+            });
+        }
+        args.push(OwnedArg::Mat(d.clone()));
+        args.push(OwnedArg::Mat(x.clone()));
+        let out = h.execute(&spec.name, args)?;
+        Ok(out[0].scalar() as f64)
+    }
+
+    fn mlp_train_step(
+        &self,
+        state: &mut AdamState,
+        d: &Matrix,
+        x: &Matrix,
+        lr: f32,
+    ) -> Result<f32> {
+        let h = self.handle();
+        let constraints = mlp_constraints(&state.shape);
+        let spec = match h.manifest().find("mlp_train_step", &constraints) {
+            Some(s) if s.dim("B") == Some(d.rows) => s.clone(),
+            _ => {
+                log::debug!(
+                    "no mlp_train_step artifact for L={} B={}; native fallback",
+                    state.shape.input,
+                    d.rows
+                );
+                return self.native.mlp_train_step(state, d, x, lr);
+            }
+        };
+        let arg_shapes: Vec<Vec<usize>> =
+            spec.args.iter().map(|a| a.shape.clone()).collect();
+        let to_arg = |data: Vec<f32>, shape: &[usize]| -> OwnedArg {
+            if shape.len() == 2 {
+                OwnedArg::Mat(Matrix::from_vec(shape[0], shape[1], data))
+            } else {
+                OwnedArg::Vec1(data)
+            }
+        };
+        let mut args: Vec<OwnedArg> = Vec::with_capacity(28);
+        for (i, p) in state.params.iter().enumerate() {
+            args.push(to_arg(p.clone(), &arg_shapes[i]));
+        }
+        for (i, p) in state.m.iter().enumerate() {
+            args.push(to_arg(p.clone(), &arg_shapes[8 + i]));
+        }
+        for (i, p) in state.v.iter().enumerate() {
+            args.push(to_arg(p.clone(), &arg_shapes[16 + i]));
+        }
+        args.push(OwnedArg::Scalar(state.t));
+        args.push(OwnedArg::Mat(d.clone()));
+        args.push(OwnedArg::Mat(x.clone()));
+        args.push(OwnedArg::Scalar(lr));
+
+        let out = h.execute(&spec.name, args)?;
+        anyhow::ensure!(out.len() >= 26, "mlp_train_step: short output");
+        // outputs: 8 params, 8 m, 8 v, t, loss
+        for (i, o) in out.iter().take(8).enumerate() {
+            state.params[i] = o.data.clone();
+        }
+        for (i, o) in out.iter().skip(8).take(8).enumerate() {
+            state.m[i] = o.data.clone();
+        }
+        for (i, o) in out.iter().skip(16).take(8).enumerate() {
+            state.v[i] = o.data.clone();
+        }
+        state.t = out[24].scalar();
+        Ok(out[25].scalar())
+    }
+
+    fn mlp_train_batch(&self, shape: &MlpShape) -> Option<usize> {
+        self.handle()
+            .manifest()
+            .find("mlp_train_step", &mlp_constraints(shape))
+            .and_then(|s| s.dim("B"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_batch_prefers_smallest_fit() {
+        assert_eq!(pick_batch(&[1, 64, 256], 1), Some(1));
+        assert_eq!(pick_batch(&[1, 64, 256], 2), Some(64));
+        assert_eq!(pick_batch(&[1, 64, 256], 64), Some(64));
+        assert_eq!(pick_batch(&[1, 64, 256], 65), Some(256));
+        assert_eq!(pick_batch(&[1, 64, 256], 1000), Some(256)); // chunked
+        assert_eq!(pick_batch(&[], 4), None);
+    }
+
+    #[test]
+    fn pad_rows_zero_fills() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0]]);
+        let p = pad_rows(&m, 3);
+        assert_eq!(p.rows, 3);
+        assert_eq!(p.row(0), &[1.0, 2.0]);
+        assert_eq!(p.row(2), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn content_key_is_stable_and_content_sensitive() {
+        let a = [1.0f32, 2.0];
+        let b = [1.0f32, 2.0];
+        let c = [1.0f32, 3.0];
+        assert_eq!(
+            content_key("k", &[a.as_slice()]),
+            content_key("k", &[b.as_slice()])
+        );
+        assert_ne!(
+            content_key("k", &[a.as_slice()]),
+            content_key("k", &[c.as_slice()])
+        );
+        assert_ne!(
+            content_key("k", &[a.as_slice()]),
+            content_key("other", &[a.as_slice()])
+        );
+    }
+
+    #[test]
+    fn content_key_sampled_path_sees_head_and_tail() {
+        // operands above HASH_FULL_LIMIT take the strided-sample path;
+        // head/tail elements always participate
+        let big = vec![1.0f32; HASH_FULL_LIMIT * 2];
+        let mut tail_changed = big.clone();
+        *tail_changed.last_mut().unwrap() = 2.0;
+        let mut head_changed = big.clone();
+        head_changed[0] = 2.0;
+        let base = content_key("k", &[big.as_slice()]);
+        assert_eq!(base, content_key("k", &[big.clone().as_slice()]));
+        assert_ne!(base, content_key("k", &[tail_changed.as_slice()]));
+        assert_ne!(base, content_key("k", &[head_changed.as_slice()]));
+    }
+}

@@ -6,15 +6,28 @@
 
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     Unknown(String),
-    #[error("option --{0} expects a value")]
     MissingValue(String),
-    #[error("invalid value for --{0}: {1:?} ({2})")]
     BadValue(String, String, String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(name) => write!(f, "unknown option --{name}"),
+            CliError::MissingValue(name) => {
+                write!(f, "option --{name} expects a value")
+            }
+            CliError::BadValue(name, raw, why) => {
+                write!(f, "invalid value for --{name}: {raw:?} ({why})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Declarative option spec (used for usage text + unknown-option checking).
 #[derive(Clone, Debug)]

@@ -1,0 +1,246 @@
+//! Cross-checks of the native compute backend against the serial pure-Rust
+//! oracles — the correctness contract of the backend seam (and, with
+//! `--features pjrt` + real artifacts, the same contract the PJRT backend
+//! is held to):
+//!
+//! - `ose_opt_steps` vs `ose::optimise::embed_point` (same fixed step
+//!   budget): coordinates and Eq.-2 objective within 1e-5 relative.
+//! - `mlp_fwd` vs `nn::forward`: within 1e-5.
+//! - `lsmds_steps` vs an explicit `stress_gradient` descent loop.
+//! - `mlp_train_step` sequences vs `nn::Adam` over structured state.
+//! - `train_backend` (native) vs `train_rust`: identical trajectories.
+
+use lmds_ose::coordinator::trainer::{train_backend, train_rust, TrainConfig};
+use lmds_ose::mds::lsmds::stress_gradient;
+use lmds_ose::mds::Matrix;
+use lmds_ose::nn::{self, MlpParams, MlpShape};
+use lmds_ose::ose::optimise::{embed_point, objective_and_grad, OseOptConfig};
+use lmds_ose::runtime::{AdamState, Backend, ComputeBackend, NativeBackend};
+use lmds_ose::strdist::euclidean;
+use lmds_ose::util::prng::Rng;
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn ose_opt_steps_matches_embed_point_oracle() {
+    let mut rng = Rng::new(0xA);
+    for &(l, k, b, steps) in &[(32usize, 7usize, 8usize, 5usize), (50, 3, 17, 60)] {
+        let lm = Matrix::random_normal(&mut rng, l, k, 1.0);
+        let deltas = Matrix::from_vec(
+            b,
+            l,
+            (0..b * l).map(|_| rng.next_f32() * 3.0 + 0.5).collect(),
+        );
+        let y0 = Matrix::zeros(b, k);
+        let lr = (1.0 / (2.0 * l as f64)) as f32;
+        let (y, obj) = NativeBackend
+            .ose_opt_steps(&lm, &deltas, &y0, lr, steps)
+            .unwrap();
+        assert_eq!((y.rows, y.cols), (b, k));
+        assert_eq!(obj.len(), b);
+
+        // oracle: the serial per-point optimiser, early stopping disabled,
+        // driven for exactly the same number of majorization steps
+        for r in 0..b {
+            let p = embed_point(
+                &lm,
+                deltas.row(r),
+                None,
+                &OseOptConfig { max_iters: steps, rel_tol: -1.0 },
+            );
+            let coord_diff = max_abs_diff(y.row(r), &p.coords);
+            assert!(
+                coord_diff < 1e-5,
+                "L={l} B={b} row {r}: coords diverge by {coord_diff}"
+            );
+            // acceptance: objective within 1e-5 relative of the oracle's
+            let (oracle_obj, _) = objective_and_grad(&lm, deltas.row(r), &p.coords);
+            let rel = (obj[r] as f64 - oracle_obj).abs() / oracle_obj.max(1e-30);
+            assert!(
+                rel < 1e-5,
+                "L={l} B={b} row {r}: objective {} vs oracle {oracle_obj} (rel {rel})",
+                obj[r]
+            );
+        }
+    }
+}
+
+#[test]
+fn ose_opt_steps_warm_start_composes() {
+    // 2 x 30 steps from the chunked path == 60 straight steps
+    let mut rng = Rng::new(0xB);
+    let lm = Matrix::random_normal(&mut rng, 20, 4, 1.0);
+    let deltas = Matrix::from_vec(
+        6,
+        20,
+        (0..120).map(|_| rng.next_f32() * 2.0 + 0.5).collect(),
+    );
+    let y0 = Matrix::zeros(6, 4);
+    let lr = 1.0 / 40.0;
+    let (full, _) = NativeBackend.ose_opt_steps(&lm, &deltas, &y0, lr, 60).unwrap();
+    let (half, _) = NativeBackend.ose_opt_steps(&lm, &deltas, &y0, lr, 30).unwrap();
+    let (resumed, _) = NativeBackend.ose_opt_steps(&lm, &deltas, &half, lr, 30).unwrap();
+    assert!(
+        full.max_abs_diff(&resumed) < 1e-6,
+        "chunked warm start diverges: {}",
+        full.max_abs_diff(&resumed)
+    );
+}
+
+#[test]
+fn mlp_fwd_matches_oracle_forward() {
+    let mut rng = Rng::new(0xC);
+    for &(l, hidden, k, b) in &[
+        (32usize, [32usize, 16, 8], 7usize, 8usize),
+        (12, [16, 16, 8], 3, 33),
+    ] {
+        let params = MlpParams::init(
+            &MlpShape { input: l, hidden, output: k },
+            &mut rng,
+        );
+        let d = Matrix::from_vec(
+            b,
+            l,
+            (0..b * l).map(|_| rng.next_f32() * 4.0).collect(),
+        );
+        let y_backend = NativeBackend.mlp_fwd(&params, &d).unwrap();
+        let y_oracle = nn::forward(&params, &d);
+        let diff = y_backend.max_abs_diff(&y_oracle);
+        // acceptance: MLP forward within 1e-5 of the oracle
+        assert!(diff < 1e-5, "L={l} B={b}: forward diverges by {diff}");
+    }
+}
+
+#[test]
+fn mlp_loss_matches_oracle_loss() {
+    let mut rng = Rng::new(0xD);
+    let params = MlpParams::init(
+        &MlpShape { input: 16, hidden: [16, 8, 8], output: 3 },
+        &mut rng,
+    );
+    let d = Matrix::from_vec(10, 16, (0..160).map(|_| rng.next_f32() * 3.0).collect());
+    let x = Matrix::random_normal(&mut rng, 10, 3, 1.0);
+    let got = NativeBackend.mlp_loss(&params, &d, &x).unwrap();
+    let want = nn::mae_loss(&nn::forward(&params, &d), &x);
+    assert!(
+        (got - want).abs() < 1e-6 * (1.0 + want),
+        "loss {got} vs oracle {want}"
+    );
+}
+
+#[test]
+fn lsmds_steps_matches_explicit_gradient_descent() {
+    let n = 24;
+    let k = 3;
+    let mut rng = Rng::new(0xE);
+    let hidden = Matrix::random_normal(&mut rng, n, k, 1.0);
+    let mut delta = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            delta.set(i, j, euclidean(hidden.row(i), hidden.row(j)) as f32);
+        }
+    }
+    let mut x0 = Matrix::random_normal(&mut rng, n, k, 1.0);
+    x0.center_columns();
+    let lr = (1.0 / (2.0 * n as f64)) as f32;
+    let steps = 7;
+
+    let (x_backend, sigma_backend) =
+        NativeBackend.lsmds_steps(&x0, &delta, lr, steps).unwrap();
+
+    let mut x = x0.clone();
+    let mut sigma = f64::NAN;
+    for _ in 0..steps {
+        let (grad, s) = stress_gradient(&x, &delta);
+        sigma = s;
+        for (xi, gi) in x.data.iter_mut().zip(grad.data.iter()) {
+            *xi -= (lr as f64 * *gi as f64) as f32;
+        }
+    }
+    assert!(
+        x_backend.max_abs_diff(&x) < 1e-6,
+        "configs diverge: {}",
+        x_backend.max_abs_diff(&x)
+    );
+    assert!(
+        (sigma_backend - sigma).abs() < 1e-9 * (1.0 + sigma),
+        "sigma {sigma_backend} vs {sigma}"
+    );
+}
+
+#[test]
+fn mlp_train_step_matches_structured_adam() {
+    let mut rng = Rng::new(0xF);
+    let shape = MlpShape { input: 10, hidden: [8, 8, 8], output: 3 };
+    let init = MlpParams::init(&shape, &mut rng);
+    let lr = 1e-3f32;
+
+    // backend path: flat AdamState
+    let mut state = AdamState::new(&init);
+    // oracle path: structured params + nn::Adam
+    let mut params = init.clone();
+    let mut adam = nn::Adam::new(&shape, lr);
+
+    for step in 0..5 {
+        let d = Matrix::from_vec(
+            6,
+            10,
+            (0..60).map(|_| rng.next_f32() * 3.0).collect(),
+        );
+        let x = Matrix::random_normal(&mut rng, 6, 3, 1.0);
+        let loss_backend =
+            NativeBackend.mlp_train_step(&mut state, &d, &x, lr).unwrap() as f64;
+        let (loss_oracle, grads) = nn::backward(&params, &d, &x);
+        adam.step(&mut params, &grads);
+        assert!(
+            (loss_backend - loss_oracle).abs() < 1e-6 * (1.0 + loss_oracle),
+            "step {step}: loss {loss_backend} vs {loss_oracle}"
+        );
+        let trained = state.to_params();
+        for layer in 0..4 {
+            assert!(
+                trained.w[layer].max_abs_diff(&params.w[layer]) < 1e-6,
+                "step {step}: weights diverge at layer {layer}"
+            );
+            assert!(
+                max_abs_diff(&trained.b[layer], &params.b[layer]) < 1e-6,
+                "step {step}: biases diverge at layer {layer}"
+            );
+        }
+    }
+    assert_eq!(state.t, 5.0);
+}
+
+#[test]
+fn train_backend_native_matches_train_rust() {
+    let mut rng = Rng::new(0x10);
+    let shape = MlpShape { input: 9, hidden: [12, 8, 8], output: 2 };
+    let inputs = Matrix::from_vec(
+        50,
+        9,
+        (0..450).map(|_| rng.next_f32() * 2.0).collect(),
+    );
+    let labels = Matrix::random_normal(&mut rng, 50, 2, 1.0);
+    // no early stopping: both paths must run the same number of steps
+    let cfg = TrainConfig { epochs: 6, patience: 1000, seed: 99, ..Default::default() };
+    let backend = Backend::native();
+    let (p_backend, r_backend) =
+        train_backend(&backend, &shape, &inputs, &labels, 16, &cfg).unwrap();
+    let (p_rust, r_rust) = train_rust(&shape, &inputs, &labels, 16, &cfg);
+    assert_eq!(r_backend.epochs_run, r_rust.epochs_run);
+    for layer in 0..4 {
+        assert!(
+            p_backend.w[layer].max_abs_diff(&p_rust.w[layer]) < 1e-6,
+            "layer {layer} weights diverge"
+        );
+    }
+    let last_b = *r_backend.loss_history.last().unwrap();
+    let last_r = *r_rust.loss_history.last().unwrap();
+    assert!(
+        (last_b - last_r).abs() < 1e-5 * (1.0 + last_r),
+        "loss history diverges: {last_b} vs {last_r}"
+    );
+}

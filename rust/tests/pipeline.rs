@@ -1,10 +1,8 @@
-//! Integration: the full two-stage pipeline over the PJRT runtime,
-//! exercising landmark selection -> LSMDS artifact -> NN training artifact
-//! -> OSE artifact as one composition (plus pure-Rust parity checks).
-
-use std::sync::Mutex;
-
-use once_cell::sync::Lazy;
+//! Integration: the full two-stage pipeline through the compute-backend
+//! seam — landmark selection -> LSMDS -> (NN training | batched OSE) as
+//! one composition. Runs entirely on the native backend (no artifacts, no
+//! XLA toolchain); with `--features pjrt` an extra module exercises the
+//! PJRT backend when its artifacts are available.
 
 use lmds_ose::coordinator::embedder::{embed_dataset, OseBackend, PipelineConfig};
 use lmds_ose::coordinator::trainer::TrainConfig;
@@ -12,16 +10,9 @@ use lmds_ose::data::{Geco, GecoConfig};
 use lmds_ose::mds::dissimilarity::cross_matrix;
 use lmds_ose::mds::stress::total_error;
 use lmds_ose::mds::LsmdsConfig;
-use lmds_ose::runtime::{default_artifact_dir, RuntimeHandle, RuntimeThread};
+use lmds_ose::ose::OseMethod;
+use lmds_ose::runtime::Backend;
 use lmds_ose::strdist::Levenshtein;
-
-static RT: Lazy<Option<Mutex<RuntimeThread>>> = Lazy::new(|| {
-    RuntimeThread::spawn(&default_artifact_dir()).ok().map(Mutex::new)
-});
-
-fn handle() -> Option<RuntimeHandle> {
-    RT.as_ref().map(|m| m.lock().unwrap().handle())
-}
 
 fn smoke_cfg(backend: OseBackend) -> PipelineConfig {
     PipelineConfig {
@@ -41,21 +32,17 @@ fn names(n: usize, seed: u64) -> Vec<String> {
 }
 
 #[test]
-fn pjrt_pipeline_nn_backend_end_to_end() {
-    let Some(h) = handle() else {
-        eprintln!("skipping: artifacts not built");
-        return;
-    };
+fn native_pipeline_nn_backend_end_to_end() {
+    let backend = Backend::native();
     let names = names(150, 21);
     let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
     let mut r =
-        embed_dataset(&objs, &Levenshtein, &smoke_cfg(OseBackend::Nn), Some(&h))
+        embed_dataset(&objs, &Levenshtein, &smoke_cfg(OseBackend::Nn), &backend)
             .unwrap();
-    // the PJRT paths must actually have been taken
-    assert_eq!(r.method.name(), "nn-pjrt");
+    assert_eq!(r.method.name(), "nn-native");
     assert_eq!(r.coords.rows, 150);
     assert!(r.coords.data.iter().all(|v| v.is_finite()));
-    // the returned method serves fresh queries through the artifact
+    // the returned method serves fresh queries through the backend
     let lm_names: Vec<&str> = r.landmark_idx.iter().map(|&i| objs[i]).collect();
     let q = cross_matrix(&["john smith", "jessica nguyen"], &lm_names, &Levenshtein);
     let y = r.method.embed(&q).unwrap();
@@ -63,17 +50,14 @@ fn pjrt_pipeline_nn_backend_end_to_end() {
 }
 
 #[test]
-fn pjrt_pipeline_opt_backend_end_to_end() {
-    let Some(h) = handle() else {
-        eprintln!("skipping: artifacts not built");
-        return;
-    };
+fn native_pipeline_opt_backend_end_to_end() {
+    let backend = Backend::native();
     let names = names(150, 22);
     let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
     let mut r =
-        embed_dataset(&objs, &Levenshtein, &smoke_cfg(OseBackend::Opt), Some(&h))
+        embed_dataset(&objs, &Levenshtein, &smoke_cfg(OseBackend::Opt), &backend)
             .unwrap();
-    assert_eq!(r.method.name(), "opt-pjrt");
+    assert_eq!(r.method.name(), "opt-native");
     assert_eq!(r.coords.rows, 150);
     assert!(r.coords.data.iter().all(|v| v.is_finite()));
     let lm_names: Vec<&str> = r.landmark_idx.iter().map(|&i| objs[i]).collect();
@@ -83,54 +67,74 @@ fn pjrt_pipeline_opt_backend_end_to_end() {
 }
 
 #[test]
-fn pjrt_and_rust_opt_backends_agree_on_quality() {
-    let Some(h) = handle() else {
-        eprintln!("skipping: artifacts not built");
-        return;
-    };
+fn held_out_quality_is_finite_and_reasonable() {
+    // score the OSE on held-out queries against the pipeline's own
+    // configuration: total error must be finite and not absurd
+    let backend = Backend::native();
     let all = names(180, 23);
     let (train, test) = all.split_at(150);
     let objs: Vec<&str> = train.iter().map(|s| s.as_str()).collect();
     let cfg = smoke_cfg(OseBackend::Opt);
+    let mut r = embed_dataset(&objs, &Levenshtein, &cfg, &backend).unwrap();
 
-    let mut with_pjrt = embed_dataset(&objs, &Levenshtein, &cfg, Some(&h)).unwrap();
-    let mut rust_only = embed_dataset(&objs, &Levenshtein, &cfg, None).unwrap();
-    assert_eq!(with_pjrt.method.name(), "opt-pjrt");
-    assert_eq!(rust_only.method.name(), "opt-rust");
-
-    // score both pipelines' OSE on held-out queries against their own
-    // configurations: quality (total error) must be comparable
-    let score = |r: &mut lmds_ose::coordinator::PipelineResult| {
-        let lm_names: Vec<&str> =
-            r.landmark_idx.iter().map(|&i| objs[i]).collect();
-        let test_refs: Vec<&str> = test.iter().map(|s| s.as_str()).collect();
-        let q = cross_matrix(&test_refs, &lm_names, &Levenshtein);
-        let y = r.method.embed(&q).unwrap();
-        let delta_new = cross_matrix(
-            &test_refs,
-            &objs.iter().copied().collect::<Vec<_>>(),
-            &Levenshtein,
-        );
-        total_error(&r.coords, &delta_new, &y)
-    };
-    let e_pjrt = score(&mut with_pjrt);
-    let e_rust = score(&mut rust_only);
-    assert!(e_pjrt.is_finite() && e_rust.is_finite());
-    // different inits/configs, same algorithm family: within 2x
-    assert!(
-        e_pjrt < 2.0 * e_rust + 1.0 && e_rust < 2.0 * e_pjrt + 1.0,
-        "quality diverges: pjrt {e_pjrt} vs rust {e_rust}"
-    );
+    let lm_names: Vec<&str> = r.landmark_idx.iter().map(|&i| objs[i]).collect();
+    let test_refs: Vec<&str> = test.iter().map(|s| s.as_str()).collect();
+    let q = cross_matrix(&test_refs, &lm_names, &Levenshtein);
+    let y = r.method.embed(&q).unwrap();
+    let delta_new = cross_matrix(&test_refs, &objs, &Levenshtein);
+    let err = total_error(&r.coords, &delta_new, &y);
+    assert!(err.is_finite() && err >= 0.0, "total error {err}");
+    // 30 held-out points against 150 refs: a degenerate embedding (all
+    // points at one spot) scores in the thousands on this data
+    assert!(err < 10_000.0, "quality collapsed: Err(m) = {err}");
 }
 
 #[test]
 fn pipeline_deterministic_for_seed() {
-    // pure-Rust path: identical seeds must give identical coordinates
+    // native backend: identical seeds must give identical coordinates
+    let backend = Backend::native();
     let names = names(100, 24);
     let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
     let cfg = smoke_cfg(OseBackend::Opt);
-    let a = embed_dataset(&objs, &Levenshtein, &cfg, None).unwrap();
-    let b = embed_dataset(&objs, &Levenshtein, &cfg, None).unwrap();
+    let a = embed_dataset(&objs, &Levenshtein, &cfg, &backend).unwrap();
+    let b = embed_dataset(&objs, &Levenshtein, &cfg, &backend).unwrap();
     assert_eq!(a.landmark_idx, b.landmark_idx);
     assert_eq!(a.coords.data, b.coords.data);
+}
+
+/// PJRT backend integration (feature-gated; skips when the artifacts or
+/// real XLA bindings are unavailable, e.g. under the in-tree stub).
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use lmds_ose::runtime::default_artifact_dir;
+
+    #[test]
+    fn pjrt_pipeline_end_to_end_or_skip() {
+        let Ok(backend) = Backend::pjrt(&default_artifact_dir()) else {
+            eprintln!("skipping: PJRT backend unavailable (artifacts/bindings)");
+            return;
+        };
+        let names = names(150, 25);
+        let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let mut r =
+            embed_dataset(&objs, &Levenshtein, &smoke_cfg(OseBackend::Opt), &backend)
+                .unwrap();
+        assert_eq!(r.method.name(), "opt-pjrt");
+        assert_eq!(r.coords.rows, 150);
+        assert!(r.coords.data.iter().all(|v| v.is_finite()));
+        // quality parity with the native backend on the same config
+        let native = embed_dataset(
+            &objs,
+            &Levenshtein,
+            &smoke_cfg(OseBackend::Opt),
+            &Backend::native(),
+        )
+        .unwrap();
+        let lm_names: Vec<&str> = r.landmark_idx.iter().map(|&i| objs[i]).collect();
+        let q = cross_matrix(&["probe query"], &lm_names, &Levenshtein);
+        let y = r.method.embed(&q).unwrap();
+        assert_eq!((y.rows, y.cols), (1, 7));
+        assert!((r.landmark_stress - native.landmark_stress).abs() < 0.1);
+    }
 }

@@ -1,28 +1,20 @@
-//! Integration: the streaming OSE service over the PJRT NN method —
-//! requests flow frontend -> batcher -> PJRT executor and back.
+//! Integration: the streaming OSE service over the backend-generic NN
+//! method — requests flow frontend -> batcher -> compute backend and back.
+//! Runs on the native backend unconditionally, so CI exercises the whole
+//! serving path without artifacts.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
-use once_cell::sync::Lazy;
-
-use lmds_ose::coordinator::methods::PjrtNn;
+use lmds_ose::coordinator::methods::BackendNn;
 use lmds_ose::coordinator::{BatcherConfig, Server};
 use lmds_ose::data::{Geco, GecoConfig};
 use lmds_ose::nn::{MlpParams, MlpShape};
-use lmds_ose::runtime::{default_artifact_dir, RuntimeHandle, RuntimeThread};
+use lmds_ose::runtime::Backend;
 use lmds_ose::strdist::Levenshtein;
 use lmds_ose::util::prng::Rng;
 
-static RT: Lazy<Option<Mutex<RuntimeThread>>> = Lazy::new(|| {
-    RuntimeThread::spawn(&default_artifact_dir()).ok().map(Mutex::new)
-});
-
-fn handle() -> Option<RuntimeHandle> {
-    RT.as_ref().map(|m| m.lock().unwrap().handle())
-}
-
-fn start_pjrt_server(h: RuntimeHandle, max_batch: usize) -> Server {
+fn start_backend_server(backend: Backend, max_batch: usize) -> Server {
     let mut rng = Rng::new(31);
     let mut geco = Geco::new(GecoConfig { seed: 77, ..Default::default() });
     let landmarks = geco.generate_unique(32);
@@ -33,7 +25,7 @@ fn start_pjrt_server(h: RuntimeHandle, max_batch: usize) -> Server {
     Server::start(
         landmarks,
         Arc::new(Levenshtein),
-        Box::new(PjrtNn::new(h, &params)),
+        Box::new(BackendNn::new(backend, params)),
         BatcherConfig {
             max_batch,
             max_delay: Duration::from_millis(2),
@@ -44,12 +36,8 @@ fn start_pjrt_server(h: RuntimeHandle, max_batch: usize) -> Server {
 }
 
 #[test]
-fn pjrt_backed_service_serves_queries() {
-    let Some(h) = handle() else {
-        eprintln!("skipping: artifacts not built");
-        return;
-    };
-    let server = start_pjrt_server(h, 8);
+fn backend_service_serves_queries() {
+    let server = start_backend_server(Backend::native(), 8);
     let sh = server.handle();
     let mut geco = Geco::new(GecoConfig { seed: 78, ..Default::default() });
     let rxs: Vec<_> = (0..100)
@@ -63,21 +51,16 @@ fn pjrt_backed_service_serves_queries() {
     let snap = sh.metrics.snapshot();
     assert_eq!(snap.completed, 100);
     assert_eq!(snap.failed, 0);
-    assert!(snap.batches >= 100 / 8, "batches = {}", snap.batches);
     drop(sh);
     server.shutdown();
 }
 
 #[test]
-fn pjrt_service_batches_and_is_deterministic() {
-    let Some(h) = handle() else {
-        eprintln!("skipping: artifacts not built");
-        return;
-    };
-    let server = start_pjrt_server(h, 8);
+fn backend_service_batches_and_is_deterministic() {
+    let server = start_backend_server(Backend::native(), 8);
     let sh = server.handle();
     // identical queries must give identical coordinates regardless of the
-    // batch they landed in (padding must not leak)
+    // batch they landed in (batch composition must not leak)
     let rx1: Vec<_> = (0..16).map(|_| sh.query("anna smith".into())).collect();
     let first: Vec<Vec<f32>> = rx1
         .into_iter()
@@ -86,7 +69,7 @@ fn pjrt_service_batches_and_is_deterministic() {
     for c in &first {
         assert_eq!(c, &first[0]);
     }
-    // and a lone straggler (padded batch of 1) agrees too
+    // and a lone straggler (batch of 1) agrees too
     std::thread::sleep(Duration::from_millis(10));
     let solo = sh.query_sync("anna smith").unwrap();
     let max_diff = solo
@@ -95,7 +78,7 @@ fn pjrt_service_batches_and_is_deterministic() {
         .zip(first[0].iter())
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
-    assert!(max_diff < 1e-4, "padding leaked into results: {max_diff}");
+    assert!(max_diff < 1e-4, "batching leaked into results: {max_diff}");
     drop(sh);
     server.shutdown();
 }
@@ -104,10 +87,6 @@ fn pjrt_service_batches_and_is_deterministic() {
 fn service_single_query_latency_under_paper_bound() {
     // paper Sec. 6: NN maps a new point in < 1 ms. Measure the steady-state
     // single-query path (batcher delay excluded: use max_delay=0-ish).
-    let Some(h) = handle() else {
-        eprintln!("skipping: artifacts not built");
-        return;
-    };
     let mut rng = Rng::new(41);
     let mut geco = Geco::new(GecoConfig { seed: 79, ..Default::default() });
     let landmarks = geco.generate_unique(32);
@@ -118,7 +97,7 @@ fn service_single_query_latency_under_paper_bound() {
     let server = Server::start(
         landmarks,
         Arc::new(Levenshtein),
-        Box::new(PjrtNn::new(h, &params)),
+        Box::new(BackendNn::new(Backend::native(), params)),
         BatcherConfig {
             max_batch: 1,
             max_delay: Duration::from_micros(100),
@@ -127,7 +106,7 @@ fn service_single_query_latency_under_paper_bound() {
         },
     );
     let sh = server.handle();
-    // warm the executable
+    // warm caches and the thread pool
     for _ in 0..20 {
         sh.query_sync("warmup query").unwrap();
     }
