@@ -7,22 +7,25 @@
 //! Env knobs:
 //!   LMDS_BENCH_QUICK=1        short measurement windows (CI smoke)
 //!   LMDS_BENCH_JSON=path.json where to write the report
-//!                             (default BENCH_pr1.json in the CWD)
+//!                             (default BENCH_pr2.json in the CWD)
 
 use lmds_ose::coordinator::methods::{BackendNn, BackendOpt};
 use lmds_ose::data::{Geco, GecoConfig};
 use lmds_ose::mds::dissimilarity::{cross_matrix, full_matrix};
-use lmds_ose::mds::lsmds::stress_gradient;
+use lmds_ose::mds::lsmds::{stress_gradient, stress_gradient_blocked};
 use lmds_ose::mds::Matrix;
 use lmds_ose::nn::{forward, MlpParams, MlpShape};
+use lmds_ose::ose::pipeline::embed_stream;
 use lmds_ose::ose::{embed_point, OseMethod, OseOptConfig};
-use lmds_ose::runtime::{Backend, ComputeBackend};
+use lmds_ose::runtime::{Backend, ComputeBackend, NativeBackend};
 use lmds_ose::strdist::{
-    jaro_winkler_distance, levenshtein, levenshtein_dp, qgram_distance, Levenshtein,
+    jaro_winkler_distance, levenshtein, levenshtein_dp, qgram_distance, Euclidean,
+    Levenshtein,
 };
 use lmds_ose::util::bench::{bench, BenchConfig, BenchResult};
 use lmds_ose::util::json::Json;
 use lmds_ose::util::prng::Rng;
+use lmds_ose::util::threadpool::{default_parallelism, parallel_for_chunks, SyncSlice};
 
 /// Collects results and renders the JSON report.
 struct Report {
@@ -36,7 +39,7 @@ impl Report {
 
     fn write(&self, backend_name: &str) {
         let path = std::env::var("LMDS_BENCH_JSON")
-            .unwrap_or_else(|_| "BENCH_pr1.json".to_string());
+            .unwrap_or_else(|_| "BENCH_pr2.json".to_string());
         let rows: Vec<Json> = self
             .results
             .iter()
@@ -163,6 +166,136 @@ fn main() {
     });
     println!("{}", r.report());
     report.push(&r);
+
+    // ---- blocked kernels vs the kernels they replaced (PR 2) ----
+    // The acceptance bar: blocked stress_gradient and MLP forward at least
+    // 1.5x the old kernels at N >= 2000, recorded in the JSON report.
+    println!("\n== blocked kernels vs previous kernels (N=2000) ==");
+    {
+        let n = 2000usize;
+        let k = 7usize;
+        let pts: Vec<Vec<f32>> = {
+            let mut rng2 = Rng::new(0xb1);
+            (0..n)
+                .map(|_| (0..k).map(|_| rng2.next_normal() as f32).collect())
+                .collect()
+        };
+        let refs: Vec<&[f32]> = pts.iter().map(|p| p.as_slice()).collect();
+        let delta_big = full_matrix(&refs, &Euclidean);
+        let x_big = Matrix::from_vec(n, k, pts.iter().flatten().copied().collect());
+        // both kernels are row-parallel over the same thread budget, so
+        // this isolates the f32/fused-inner-loop + blocking gain
+        let r_old = bench("stress_gradient N=2000 K=7 (previous f64 kernel)", &quick, || {
+            stress_gradient(&x_big, &delta_big)
+        });
+        println!("{}", r_old.report());
+        report.push(&r_old);
+        let r_new = bench("stress_gradient_blocked N=2000 K=7", &quick, || {
+            stress_gradient_blocked(&x_big, &delta_big)
+        });
+        println!(
+            "{}  (speedup {:.2}x over previous kernel)",
+            r_new.report(),
+            r_old.median_s / r_new.median_s
+        );
+        report.push(&r_new);
+    }
+    {
+        // the old native mlp_fwd walked w.at(i, c) down a column per
+        // output; reproduce it here (parallel over rows, like the old
+        // backend) so the JSON keeps an honest old-vs-new comparison
+        fn forward_row_strided(params: &MlpParams, row: &[f32]) -> Vec<f32> {
+            let mut cur = row.to_vec();
+            for l in 0..4 {
+                let w = &params.w[l];
+                let b = &params.b[l];
+                let mut next = vec![0.0f32; w.cols];
+                for (c, out) in next.iter_mut().enumerate() {
+                    let mut acc = b[c];
+                    for (i, xv) in cur.iter().enumerate() {
+                        acc += xv * w.at(i, c);
+                    }
+                    *out = acc;
+                }
+                if l < 3 {
+                    for v in next.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                cur = next;
+            }
+            cur
+        }
+        let b = 256usize;
+        let input = Matrix::from_vec(
+            b,
+            300,
+            (0..b * 300).map(|_| rng.next_f32() * 5.0).collect(),
+        );
+        let r_old = bench("mlp fwd B=256 L=300 (strided row kernel)", &quick, || {
+            let k = params.shape.output;
+            let mut out = Matrix::zeros(b, k);
+            let slots = SyncSlice::new(&mut out.data);
+            parallel_for_chunks(b, 8, default_parallelism(), |start, end| {
+                for r in start..end {
+                    let y = forward_row_strided(&params, input.row(r));
+                    unsafe {
+                        for (c, v) in y.iter().enumerate() {
+                            slots.write(r * k + c, *v);
+                        }
+                    }
+                }
+            });
+            out
+        });
+        println!("{}", r_old.report());
+        report.push(&r_old);
+        let r_new = bench("mlp fwd B=256 L=300 (blocked kernel)", &quick, || {
+            NativeBackend.mlp_fwd(&params, &input).unwrap()
+        });
+        println!(
+            "{}  (speedup {:.2}x over strided kernel)",
+            r_new.report(),
+            r_old.median_s / r_new.median_s
+        );
+        report.push(&r_new);
+    }
+
+    // ---- streaming pipeline: monolithic vs overlapped chunks ----
+    println!("\n== streaming embed pipeline (N=4096, L=300) ==");
+    {
+        let n = 4096usize;
+        let stream_names = geco.generate_unique(n + 300);
+        let q_refs: Vec<&str> = stream_names[..n].iter().map(|s| s.as_str()).collect();
+        let lm_refs: Vec<&str> =
+            stream_names[n..].iter().map(|s| s.as_str()).collect();
+        let lm_cfg = Matrix::random_normal(&mut rng, 300, 7, 1.0);
+        let mk = || {
+            let mut m = BackendOpt::with_defaults(Backend::native(), lm_cfg.clone());
+            m.total_steps = 30;
+            m.rel_tol = 0.0;
+            m
+        };
+        let r_mono = bench("embed monolithic (cross_matrix + embed)", &quick, || {
+            let delta = cross_matrix(&q_refs, &lm_refs, &Levenshtein);
+            mk().embed(&delta).unwrap()
+        });
+        println!("{}  ({:.0} pts/s)", r_mono.report(), r_mono.throughput(n));
+        report.push(&r_mono);
+        let r_stream = bench("embed streaming chunk=512 (overlapped)", &quick, || {
+            let mut m = mk();
+            embed_stream(&q_refs, &lm_refs, &Levenshtein, &mut m, 512).unwrap()
+        });
+        println!(
+            "{}  ({:.0} pts/s, {:.2}x vs monolithic)",
+            r_stream.report(),
+            r_stream.throughput(n),
+            r_mono.median_s / r_stream.median_s
+        );
+        report.push(&r_stream);
+    }
 
     // Compute-backend execution (native always; PJRT when built with
     // --features pjrt and artifacts + bindings are available).

@@ -31,6 +31,10 @@ pub struct RunConfig {
     pub max_batch: usize,
     pub max_delay_ms: u64,
     pub use_pjrt: bool,
+    /// `Some(rows)`: run the pipeline's OSE stage through the bounded-
+    /// memory streaming path in chunks of this many rows (0 disables,
+    /// i.e. monolithic). See [`PipelineConfig::stream_chunk`].
+    pub stream_chunk: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -49,6 +53,7 @@ impl Default for RunConfig {
             max_batch: 64,
             max_delay_ms: 2,
             use_pjrt: true,
+            stream_chunk: None,
         }
     }
 }
@@ -121,6 +126,9 @@ impl RunConfig {
         if let Some(v) = json.get("use_pjrt").and_then(Json::as_bool) {
             self.use_pjrt = v;
         }
+        if let Some(v) = usize_of(json, "stream_chunk")? {
+            self.stream_chunk = if v == 0 { None } else { Some(v) };
+        }
         Ok(())
     }
 
@@ -153,6 +161,10 @@ impl RunConfig {
         if args.flag("no-pjrt") {
             self.use_pjrt = false;
         }
+        if args.get("stream-chunk").is_some() {
+            let v = args.usize("stream-chunk")?;
+            self.stream_chunk = if v == 0 { None } else { Some(v) };
+        }
         Ok(())
     }
 
@@ -176,6 +188,7 @@ impl RunConfig {
             },
             hidden: self.hidden,
             nn_bootstrap: true,
+            stream_chunk: self.stream_chunk,
             seed: self.seed,
         }
     }
@@ -222,6 +235,27 @@ mod tests {
         assert!(!cfg.use_pjrt);
         // untouched values survive
         assert_eq!(cfg.landmarks, 100);
+    }
+
+    #[test]
+    fn stream_chunk_round_trips_with_zero_disabling() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.stream_chunk, None);
+        cfg.apply_json(&Json::parse(r#"{"stream_chunk": 512}"#).unwrap()).unwrap();
+        assert_eq!(cfg.stream_chunk, Some(512));
+        assert_eq!(cfg.pipeline().stream_chunk, Some(512));
+
+        let specs = vec![OptSpec {
+            name: "stream-chunk",
+            help: "",
+            takes_value: true,
+            default: None,
+        }];
+        let argv: Vec<String> =
+            ["--stream-chunk", "0"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv, &specs).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.stream_chunk, None, "0 disables streaming");
     }
 
     #[test]

@@ -6,6 +6,11 @@
 //! All numeric work flows through the [`ComputeBackend`] seam, so the same
 //! pipeline runs on the pure-Rust native backend (default) or the PJRT
 //! artifact backend (`--features pjrt`) without a single branch here.
+//!
+//! With [`PipelineConfig::stream_chunk`] set, stage (2) runs through the
+//! bounded-memory streaming pipeline ([`crate::ose::pipeline`]): the
+//! `(N-L) x L` dissimilarity matrix is never materialised, and block
+//! construction overlaps embedding.
 
 use anyhow::Result;
 
@@ -58,6 +63,16 @@ pub struct PipelineConfig {
     /// two-stage pipeline where only landmarks have LSMDS coordinates.
     /// Off, the NN trains on the L landmark rows alone — much weaker.
     pub nn_bootstrap: bool,
+    /// `Some(chunk)`: drive the OSE stage through the bounded-memory
+    /// streaming pipeline ([`crate::ose::pipeline`]) in chunks of this many
+    /// rows instead of materialising the full `(N-L) x L` dissimilarity
+    /// matrix — peak transient memory becomes `O(L² + 2·chunk·L)`
+    /// regardless of N, and block construction overlaps embedding.
+    /// `Some(0)` is treated as `None` (monolithic), matching the config
+    /// layer's "0 disables" contract. In streaming mode the NN trains on
+    /// the L landmark rows only (`nn_bootstrap` is ignored: bootstrap
+    /// labels would need the full matrix the mode exists to avoid).
+    pub stream_chunk: Option<usize>,
     pub seed: u64,
 }
 
@@ -72,6 +87,7 @@ impl Default for PipelineConfig {
             train: TrainConfig::default(),
             hidden: [256, 128, 64],
             nn_bootstrap: true,
+            stream_chunk: None,
             seed: 1234,
         }
     }
@@ -174,14 +190,25 @@ pub fn embed_dataset<T: Sync + ?Sized>(
     timings.lsmds_s = t0.elapsed().as_secs_f64();
 
     // 3. distances from every object to the landmarks (training inputs for
-    //    the NN; query rows for the optimiser)
-    let t0 = std::time::Instant::now();
+    //    the NN; query rows for the optimiser). In streaming mode the
+    //    matrix is never materialised — blocks are built and embedded
+    //    chunk-by-chunk in step 5.
     let rest_idx: Vec<usize> = (0..objects.len())
         .filter(|i| landmark_idx.binary_search(i).is_err())
         .collect();
     let rest_objs: Vec<&T> = rest_idx.iter().map(|&i| objects[i]).collect();
-    let delta_ml = cross_matrix(&rest_objs, &landmark_objs, metric);
-    timings.delta_ml_s = t0.elapsed().as_secs_f64();
+    // Some(0) is normalised to monolithic here so direct PipelineConfig
+    // users get the same "0 disables" contract as the config layer
+    let stream_chunk = cfg.stream_chunk.filter(|&c| c > 0);
+    let delta_ml = match stream_chunk {
+        Some(_) => None,
+        None => {
+            let t0 = std::time::Instant::now();
+            let m = cross_matrix(&rest_objs, &landmark_objs, metric);
+            timings.delta_ml_s = t0.elapsed().as_secs_f64();
+            Some(m)
+        }
+    };
 
     // 4. build the OSE method
     let t0 = std::time::Instant::now();
@@ -196,13 +223,25 @@ pub fn embed_dataset<T: Sync + ?Sized>(
                 hidden: cfg.hidden,
                 output: cfg.dim,
             };
-            let (inputs, labels) = if cfg.nn_bootstrap && delta_ml.rows > 0 {
-                let rest_labels =
-                    BackendOpt::with_defaults(backend.clone(), landmark_config.clone())
-                        .embed(&delta_ml)?;
-                (delta_ll.vstack(&delta_ml), landmark_config.vstack(&rest_labels))
-            } else {
-                (delta_ll.clone(), landmark_config.clone())
+            let (inputs, labels) = match &delta_ml {
+                Some(dml) if cfg.nn_bootstrap && dml.rows > 0 => {
+                    let rest_labels =
+                        BackendOpt::with_defaults(backend.clone(), landmark_config.clone())
+                            .embed(dml)?;
+                    (delta_ll.vstack(dml), landmark_config.vstack(&rest_labels))
+                }
+                _ => {
+                    if cfg.nn_bootstrap && stream_chunk.is_some() && !rest_idx.is_empty() {
+                        log::warn!(
+                            "stream mode: nn_bootstrap skipped — the NN trains on the \
+                             {} landmark rows only (weaker than the bootstrapped \
+                             protocol; use the opt backend or monolithic mode if \
+                             quality matters more than memory)",
+                            delta_ll.rows
+                        );
+                    }
+                    (delta_ll.clone(), landmark_config.clone())
+                }
             };
             let (params, report) =
                 train_backend(backend, &shape, &inputs, &labels, 256, &cfg.train)?;
@@ -220,21 +259,47 @@ pub fn embed_dataset<T: Sync + ?Sized>(
         }
     };
 
-    // 5. OSE the remaining points
-    let rest_coords = if rest_idx.is_empty() {
-        Matrix::zeros(0, cfg.dim)
-    } else {
-        method.embed(&delta_ml)?
-    };
-    timings.ose_s = t0.elapsed().as_secs_f64() - timings.train_s;
-
-    // 6. assemble the full coordinate table
+    // 5. OSE the remaining points, assembling the full coordinate table
+    //    (step 6) as results arrive
     let mut coords = Matrix::zeros(objects.len(), cfg.dim);
     for (r, &i) in landmark_idx.iter().enumerate() {
         coords.row_mut(i).copy_from_slice(landmark_config.row(r));
     }
-    for (r, &i) in rest_idx.iter().enumerate() {
-        coords.row_mut(i).copy_from_slice(rest_coords.row(r));
+    match &delta_ml {
+        Some(dml) => {
+            let rest_coords = if rest_idx.is_empty() {
+                Matrix::zeros(0, cfg.dim)
+            } else {
+                method.embed(dml)?
+            };
+            timings.ose_s = t0.elapsed().as_secs_f64() - timings.train_s;
+            for (r, &i) in rest_idx.iter().enumerate() {
+                coords.row_mut(i).copy_from_slice(rest_coords.row(r));
+            }
+        }
+        None => {
+            // streaming: dissimilarity-block construction overlaps the
+            // embedding of the previous block; rows land in the output as
+            // soon as their chunk is embedded
+            let chunk = stream_chunk.expect("delta_ml is None only when streaming");
+            let stats = crate::ose::pipeline::embed_stream_with(
+                &rest_objs,
+                &landmark_objs,
+                metric,
+                &mut *method,
+                chunk,
+                |start, block| {
+                    for r in 0..block.rows {
+                        coords
+                            .row_mut(rest_idx[start + r])
+                            .copy_from_slice(block.row(r));
+                    }
+                    Ok(())
+                },
+            )?;
+            timings.delta_ml_s = stats.produce_s;
+            timings.ose_s = stats.embed_s;
+        }
     }
 
     Ok(PipelineResult {
@@ -300,6 +365,62 @@ mod tests {
         );
         let y = r.method.embed(&q).unwrap();
         assert_eq!((y.rows, y.cols), (1, 3));
+    }
+
+    #[test]
+    fn streaming_pipeline_matches_monolithic_opt() {
+        let mut geco = Geco::new(GecoConfig { seed: 14, ..Default::default() });
+        let names = geco.generate_unique(90);
+        let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let base = PipelineConfig {
+            dim: 3,
+            landmarks: 25,
+            backend: OseBackend::Opt,
+            lsmds: LsmdsConfig { max_iters: 80, dim: 3, ..Default::default() },
+            ..Default::default()
+        };
+        let mono =
+            embed_dataset(&objs, &Levenshtein, &base, &Backend::native()).unwrap();
+        let streamed_cfg = PipelineConfig { stream_chunk: Some(7), ..base };
+        let streamed =
+            embed_dataset(&objs, &Levenshtein, &streamed_cfg, &Backend::native())
+                .unwrap();
+        assert_eq!(mono.landmark_idx, streamed.landmark_idx);
+        // BackendOpt's batch-mean early stopping decides per chunk in
+        // streaming mode, so the two paths agree to convergence tolerance
+        // here; tests/streaming.rs pins the bit-exact contract for fixed
+        // step budgets.
+        assert!(
+            mono.coords.max_abs_diff(&streamed.coords) < 2e-2,
+            "streamed diverges by {}",
+            mono.coords.max_abs_diff(&streamed.coords)
+        );
+        // Some(0) is normalised to the monolithic path, not 1-row chunks
+        let zero_cfg = PipelineConfig { stream_chunk: Some(0), ..streamed_cfg };
+        let zero =
+            embed_dataset(&objs, &Levenshtein, &zero_cfg, &Backend::native()).unwrap();
+        assert_eq!(zero.coords.data, mono.coords.data);
+    }
+
+    #[test]
+    fn streaming_pipeline_runs_nn_backend() {
+        let mut geco = Geco::new(GecoConfig { seed: 15, ..Default::default() });
+        let names = geco.generate_unique(70);
+        let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let cfg = PipelineConfig {
+            dim: 2,
+            landmarks: 20,
+            backend: OseBackend::Nn,
+            hidden: [16, 8, 8],
+            train: TrainConfig { epochs: 15, ..Default::default() },
+            lsmds: LsmdsConfig { max_iters: 60, dim: 2, ..Default::default() },
+            stream_chunk: Some(16),
+            ..Default::default()
+        };
+        let r = embed_dataset(&objs, &Levenshtein, &cfg, &Backend::native()).unwrap();
+        assert_eq!(r.coords.rows, 70);
+        assert!(r.coords.data.iter().all(|v| v.is_finite()));
+        assert_eq!(r.method.name(), "nn-native");
     }
 
     #[test]

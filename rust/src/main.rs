@@ -82,6 +82,7 @@ fn common_specs() -> Vec<OptSpec> {
         OptSpec { name: "backend", help: "nn|opt", takes_value: true, default: None },
         OptSpec { name: "metric", help: "levenshtein|osa|jw|qgram", takes_value: true, default: None },
         OptSpec { name: "seed", help: "PRNG seed", takes_value: true, default: None },
+        OptSpec { name: "stream-chunk", help: "stream the OSE stage in chunks of this many rows (bounded memory; 0 = monolithic; with the nn backend this skips the bootstrap training set — landmark rows only)", takes_value: true, default: None },
         OptSpec { name: "no-pjrt", help: "force the native compute backend (skip PJRT artifacts)", takes_value: false, default: None },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ]
@@ -182,6 +183,9 @@ fn cmd_embed(argv: &[String]) -> Result<()> {
     println!("  landmarks          : {} ({:?})", cfg.landmarks, cfg.landmark_method);
     println!("  compute backend    : {}", backend.name());
     println!("  ose method         : {:?} via {}", cfg.backend, result.method.name());
+    if let Some(chunk) = cfg.stream_chunk {
+        println!("  streaming          : {chunk}-row chunks (bounded memory, overlapped)");
+    }
     println!("  landmark stress    : {:.4}", result.landmark_stress);
     let t = &result.timings;
     println!(

@@ -92,6 +92,91 @@ pub fn stress_gradient(x: &Matrix, delta: &Matrix) -> (Matrix, f64) {
     (grad, 0.5 * sres.iter().sum::<f64>())
 }
 
+/// Width of the `j`-tile in the blocked gradient kernel: a tile of `x`
+/// rows (`GRAD_TILE x K` f32, ~3.5 KB at K = 7) stays L1-resident while a
+/// block of `GRAD_ROW_BLOCK` output rows sweeps it.
+pub const GRAD_TILE: usize = 128;
+
+/// Output rows accumulated per j-tile pass (the `parallel_for_chunks` work
+/// item): each `x` tile loaded into cache is reused this many times.
+pub const GRAD_ROW_BLOCK: usize = 16;
+
+/// Cache-blocked, flat-`f32` gradient of the raw stress at `x`.
+/// Returns (grad, sigma), like [`stress_gradient`].
+///
+/// This is the production kernel behind
+/// [`ComputeBackend::lsmds_steps`](crate::runtime::ComputeBackend). Two
+/// changes over the f64 oracle: (1) the `i`/`j` loops are interchanged
+/// into `GRAD_ROW_BLOCK x GRAD_TILE` blocks, so each j-tile of `x` is
+/// loaded once per row block instead of once per row; (2) the inner loop
+/// fuses the distance and gradient passes over one stack-local diff
+/// vector (the oracle walks `xi - xj` twice) and accumulates in `f32`,
+/// which lets the `c`-loop vectorise instead of round-tripping through
+/// `f64` per element. j-tiles advance in ascending order, so each row's
+/// accumulation order matches the oracle's and per-row stress still sums
+/// in `f64` — sigma stays comparable at any N. Numerics therefore differ
+/// from [`stress_gradient`] only in the last few bits of the f32
+/// gradient; the parity contract (`tests/backend_parity.rs`) holds the
+/// two within a scale-aware 1e-3.
+pub fn stress_gradient_blocked(x: &Matrix, delta: &Matrix) -> (Matrix, f64) {
+    let n = x.rows;
+    let k = x.cols;
+    let mut grad = Matrix::zeros(n, k);
+    let mut sres = vec![0.0f64; n];
+    {
+        let gslots = SyncSlice::new(&mut grad.data);
+        let sslots = SyncSlice::new(&mut sres);
+        parallel_for_chunks(n, GRAD_ROW_BLOCK, default_parallelism(), |start, end| {
+            let rows = end - start;
+            let mut gi = vec![0.0f32; rows * k];
+            let mut si = vec![0.0f64; rows];
+            let mut diff = vec![0.0f32; k];
+            let mut t0 = 0usize;
+            while t0 < n {
+                let t1 = (t0 + GRAD_TILE).min(n);
+                for i in start..end {
+                    let xi = x.row(i);
+                    let drow = delta.row(i);
+                    let gr = &mut gi[(i - start) * k..(i - start + 1) * k];
+                    let mut s = 0.0f64;
+                    for j in t0..t1 {
+                        if j == i {
+                            continue;
+                        }
+                        let xj = x.row(j);
+                        let mut sq = 0.0f32;
+                        for c in 0..k {
+                            let d = xi[c] - xj[c];
+                            diff[c] = d;
+                            sq += d * d;
+                        }
+                        let d = sq.sqrt();
+                        let resid = d - drow[j];
+                        s += (resid as f64) * (resid as f64);
+                        if d > 1e-12 {
+                            let coef = 2.0 * resid / d;
+                            for c in 0..k {
+                                gr[c] += coef * diff[c];
+                            }
+                        }
+                    }
+                    si[i - start] += s;
+                }
+                t0 = t1;
+            }
+            unsafe {
+                for i in start..end {
+                    sslots.write(i, si[i - start]);
+                    for c in 0..k {
+                        gslots.write(i * k + c, gi[(i - start) * k + c]);
+                    }
+                }
+            }
+        });
+    }
+    (grad, 0.5 * sres.iter().sum::<f64>())
+}
+
 /// Run LSMDS from a random (centred) initial configuration.
 pub fn lsmds(delta: &Matrix, cfg: &LsmdsConfig) -> LsmdsResult {
     assert_eq!(delta.rows, delta.cols, "delta must be square");
@@ -172,6 +257,23 @@ mod tests {
                 "({r},{c}): fd={fd} grad={g}"
             );
         }
+    }
+
+    #[test]
+    fn blocked_gradient_tracks_serial_oracle() {
+        // non-realizable deltas so residuals (and the gradient) are large
+        let mut rng = Rng::new(6);
+        let x = Matrix::random_normal(&mut rng, 37, 3, 1.0);
+        let (_, delta) = realizable_delta(&mut rng, 37, 3);
+        let (gs, ss) = stress_gradient(&x, &delta);
+        let (gb, sb) = stress_gradient_blocked(&x, &delta);
+        let gmax = gs.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(
+            gs.max_abs_diff(&gb) < 1e-3 * (1.0 + gmax),
+            "grad diverges: {} (scale {gmax})",
+            gs.max_abs_diff(&gb)
+        );
+        assert!((ss - sb).abs() < 1e-5 * (1.0 + ss), "sigma {ss} vs {sb}");
     }
 
     #[test]

@@ -143,6 +143,62 @@ pub fn forward(params: &MlpParams, d: &Matrix) -> Matrix {
     affine(&h3, &params.w[3], &params.b[3])
 }
 
+/// Forward a contiguous block of input rows (flat row-major `rows x L`)
+/// through the MLP, writing predictions into `out` (flat `rows x K`).
+///
+/// This is the cache-blocked production kernel behind
+/// [`ComputeBackend::mlp_fwd`](crate::runtime::ComputeBackend): each layer
+/// accumulates `out_row += x[i] * w.row(i)` over unit-stride weight rows
+/// (row-major axpy), instead of walking `w.at(i, c)` down a column per
+/// output as the old per-row kernel did. The per-output accumulation order
+/// (ascending input index, bias first) is identical to [`forward`]'s, so
+/// the two agree to the last bit apart from `forward`'s skip of exact-zero
+/// inputs (which only flips signed-zero sums).
+pub fn forward_block(params: &MlpParams, input: &[f32], rows: usize, out: &mut [f32]) {
+    let l = params.shape.input;
+    let k = params.shape.output;
+    assert_eq!(input.len(), rows * l, "input len != rows x L");
+    assert_eq!(out.len(), rows * k, "out len != rows x K");
+    let mut cur = input.to_vec();
+    let mut width = l;
+    for layer in 0..4 {
+        let w = &params.w[layer];
+        let b = &params.b[layer];
+        let next_width = w.cols;
+        let mut next = vec![0.0f32; rows * next_width];
+        for r in 0..rows {
+            let xr = &cur[r * width..(r + 1) * width];
+            let or = &mut next[r * next_width..(r + 1) * next_width];
+            or.copy_from_slice(b);
+            for (i, &xv) in xr.iter().enumerate() {
+                let wr = w.row(i);
+                for (o, &wv) in or.iter_mut().zip(wr.iter()) {
+                    *o += xv * wv;
+                }
+            }
+            if layer < 3 {
+                for v in or.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+        cur = next;
+        width = next_width;
+    }
+    out.copy_from_slice(&cur);
+}
+
+/// Convenience wrapper over [`forward_block`] for a whole batch matrix.
+/// Single-threaded; the native backend parallelises over row blocks.
+pub fn forward_blocked(params: &MlpParams, d: &Matrix) -> Matrix {
+    assert_eq!(d.cols, params.shape.input, "input width != L");
+    let mut out = Matrix::zeros(d.rows, params.shape.output);
+    forward_block(params, &d.data, d.rows, &mut out.data);
+    out
+}
+
 /// Eq. 3 loss: mean_i ||pred_i - target_i||_2 (eps-smoothed).
 pub fn mae_loss(pred: &Matrix, target: &Matrix) -> f64 {
     assert_eq!((pred.rows, pred.cols), (target.rows, target.cols));
@@ -366,6 +422,27 @@ mod tests {
         let d = Matrix::zeros(5, 10);
         let y = forward(&p, &d);
         assert_eq!((y.rows, y.cols), (5, 3));
+    }
+
+    #[test]
+    fn forward_blocked_matches_forward() {
+        let mut rng = Rng::new(7);
+        let p = MlpParams::init(&shape(), &mut rng);
+        for b in [1usize, 2, 9, 33] {
+            let d = Matrix::from_vec(
+                b,
+                10,
+                (0..b * 10).map(|_| rng.next_f32() * 3.0).collect(),
+            );
+            let serial = forward(&p, &d);
+            let blocked = forward_blocked(&p, &d);
+            assert_eq!((blocked.rows, blocked.cols), (b, 3));
+            assert!(
+                serial.max_abs_diff(&blocked) < 1e-6,
+                "B={b}: diverges by {}",
+                serial.max_abs_diff(&blocked)
+            );
+        }
     }
 
     #[test]

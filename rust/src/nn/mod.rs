@@ -4,5 +4,6 @@
 pub mod mlp;
 
 pub use mlp::{
-    adam_update, backward, forward, mae_loss, Adam, Gradients, MlpParams, MlpShape,
+    adam_update, backward, forward, forward_block, forward_blocked, mae_loss, Adam,
+    Gradients, MlpParams, MlpShape,
 };

@@ -1,14 +1,18 @@
 //! Out-of-sample embedding methods (the paper's contribution, Sec. 4):
 //! the optimisation method (Eq. 2) and the neural-network method, behind a
-//! single [`OseMethod`] interface the coordinator routes requests to.
+//! single [`OseMethod`] interface the coordinator routes requests to, plus
+//! the bounded-memory streaming driver ([`pipeline`]) that overlaps
+//! dissimilarity-block construction with embedding.
 
 pub mod classical_ose;
 pub mod imds;
 pub mod optimise;
+pub mod pipeline;
 
 pub use classical_ose::ClassicalOse;
 pub use imds::{Imds, ImdsConfig};
 pub use optimise::{embed_batch, embed_point, OseOptConfig, OsePoint};
+pub use pipeline::{embed_stream, embed_stream_with, StreamStats, DEFAULT_STREAM_CHUNK};
 
 use crate::mds::Matrix;
 

@@ -1,0 +1,289 @@
+//! Bounded-memory streaming OSE pipeline — the stage that turns the
+//! two-phase design (paper Sec. 4) into a genuinely streaming system.
+//!
+//! The monolithic path materialises the full `N x L` out-of-sample
+//! dissimilarity matrix (`mds::dissimilarity::cross_matrix`) before the
+//! backend sees a single row, so peak memory grows linearly with N and the
+//! dissimilarity stage never overlaps the embedding stage. This module
+//! drives the same work in fixed-size chunks through a double-buffered
+//! producer/consumer instead:
+//!
+//! ```text
+//!   producer thread              rendezvous            consumer (caller)
+//!   cross_matrix(chunk c+1, L) --- send/recv ---> method.embed(chunk c)
+//!                                                 sink(start, coords)
+//! ```
+//!
+//! The channel is a rendezvous (`sync_channel(0)`): the producer computes
+//! the next `chunk x L` block while the consumer embeds the current one,
+//! and blocks in `send` until the consumer takes it. At most **two**
+//! `chunk x L` blocks are therefore alive at any instant, so transient
+//! memory is `O(2·chunk·L)` regardless of N — and the two dominant costs
+//! (Levenshtein block build, backend embedding) overlap in wall-clock.
+//!
+//! Caveat on the overlap: both stages parallelise internally over the
+//! same `default_parallelism()` budget, so when *both* are CPU-bound the
+//! machine is oversubscribed up to 2x and the wall-clock win over the
+//! monolithic path is modest (the scheduler interleaves them). The
+//! guaranteed property of this module is the memory bound; overlap pays
+//! off most when one stage underuses the CPU (string metrics with ragged
+//! costs, an accelerator-backed embed, or I/O-fed objects).
+//!
+//! Chunking is exact, not approximate: both OSE methods are row-independent
+//! (per-point majorization; per-row MLP forward), so streaming output
+//! matches the monolithic path bit-for-bit for a fixed step budget — the
+//! contract enforced by `tests/streaming.rs`. (With `BackendOpt`'s
+//! batch-mean early stopping enabled, the stopping decision is made per
+//! chunk instead of per full batch, which can change results within the
+//! convergence tolerance.)
+
+use anyhow::Result;
+
+use crate::mds::dissimilarity::cross_matrix;
+use crate::mds::Matrix;
+use crate::strdist::Dissimilarity;
+
+use super::OseMethod;
+
+/// Default rows per streamed chunk: at L = 300 landmarks two f32 blocks of
+/// this size are ~2.5 MB — safely inside last-level cache pressure limits
+/// while keeping per-chunk dispatch overhead negligible.
+pub const DEFAULT_STREAM_CHUNK: usize = 1024;
+
+/// What one streaming run did (timings are per-stage sums, so overlap
+/// shows up as `produce_s + embed_s > wall`).
+#[derive(Clone, Debug, Default)]
+pub struct StreamStats {
+    /// Total rows embedded.
+    pub rows: usize,
+    /// Number of chunks processed.
+    pub chunks: usize,
+    /// Largest chunk actually seen by the embedder (<= configured chunk;
+    /// the final chunk may be ragged).
+    pub max_chunk_rows: usize,
+    /// Seconds spent building dissimilarity blocks (producer thread).
+    pub produce_s: f64,
+    /// Seconds spent embedding blocks (consumer thread).
+    pub embed_s: f64,
+}
+
+/// Stream-embed `objects` against `landmarks` in chunks of `chunk` rows,
+/// delivering each embedded block to `sink(start_row, coords)` in order.
+///
+/// `sink` receives every chunk exactly once, in ascending `start_row`
+/// order; `coords` has one row per object of the chunk. Errors from the
+/// method or the sink abort the stream (the producer notices the hang-up
+/// and stops). Peak transient memory is two `chunk x L` blocks plus one
+/// `chunk x K` coordinate block — independent of `objects.len()`.
+pub fn embed_stream_with<T, F>(
+    objects: &[&T],
+    landmarks: &[&T],
+    metric: &dyn Dissimilarity<T>,
+    method: &mut dyn OseMethod,
+    chunk: usize,
+    mut sink: F,
+) -> Result<StreamStats>
+where
+    T: Sync + ?Sized,
+    F: FnMut(usize, &Matrix) -> Result<()>,
+{
+    let chunk = chunk.max(1);
+    let mut stats = StreamStats { rows: objects.len(), ..Default::default() };
+    if objects.is_empty() {
+        return Ok(stats);
+    }
+    anyhow::ensure!(
+        landmarks.len() == method.landmarks(),
+        "method expects {} landmarks, got {}",
+        method.landmarks(),
+        landmarks.len()
+    );
+
+    let (tx, rx) = std::sync::mpsc::sync_channel::<(usize, Matrix)>(0);
+    let mut outcome: Result<()> = Ok(());
+    let produce_s = std::thread::scope(|scope| {
+        let producer = scope.spawn(move || {
+            let mut produce_s = 0.0f64;
+            let mut start = 0usize;
+            while start < objects.len() {
+                let end = (start + chunk).min(objects.len());
+                let t0 = std::time::Instant::now();
+                let block = cross_matrix(&objects[start..end], landmarks, metric);
+                produce_s += t0.elapsed().as_secs_f64();
+                // a send error means the consumer bailed (embed/sink error
+                // dropped the receiver): stop producing, not an error here
+                if tx.send((start, block)).is_err() {
+                    break;
+                }
+                start = end;
+            }
+            produce_s
+        });
+
+        for (start, block) in rx.iter() {
+            stats.chunks += 1;
+            stats.max_chunk_rows = stats.max_chunk_rows.max(block.rows);
+            let t0 = std::time::Instant::now();
+            let coords = match method.embed(&block) {
+                Ok(c) => c,
+                Err(e) => {
+                    outcome = Err(e);
+                    break;
+                }
+            };
+            // a method that pads or drops rows (e.g. a batch-monomorphic
+            // artifact backend) would silently corrupt neighbouring chunks
+            // through the sink's start-offset arithmetic — reject it here
+            if coords.rows != block.rows {
+                outcome = Err(anyhow::anyhow!(
+                    "method returned {} rows for a {}-row chunk",
+                    coords.rows,
+                    block.rows
+                ));
+                break;
+            }
+            stats.embed_s += t0.elapsed().as_secs_f64();
+            if let Err(e) = sink(start, &coords) {
+                outcome = Err(e);
+                break;
+            }
+        }
+        drop(rx); // hang up so a producer blocked in send() exits
+
+        match producer.join() {
+            Ok(s) => s,
+            Err(panic) => std::panic::resume_unwind(panic),
+        }
+    });
+    outcome?;
+    stats.produce_s = produce_s;
+    Ok(stats)
+}
+
+/// Stream-embed all objects and collect the result into an `N x K` matrix:
+/// the drop-in bounded-memory replacement for `cross_matrix` + one
+/// monolithic `method.embed` call. Only the output and two transient
+/// `chunk x L` blocks are ever allocated — never an `N x L` matrix.
+pub fn embed_stream<T: Sync + ?Sized>(
+    objects: &[&T],
+    landmarks: &[&T],
+    metric: &dyn Dissimilarity<T>,
+    method: &mut dyn OseMethod,
+    chunk: usize,
+) -> Result<(Matrix, StreamStats)> {
+    let k = method.dim();
+    let mut out = Matrix::zeros(objects.len(), k);
+    let stats = embed_stream_with(
+        objects,
+        landmarks,
+        metric,
+        method,
+        chunk,
+        |start, coords| {
+            anyhow::ensure!(coords.cols == k, "method changed output width");
+            out.data[start * k..start * k + coords.data.len()]
+                .copy_from_slice(&coords.data);
+            Ok(())
+        },
+    )?;
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mds::Matrix;
+    use crate::ose::{OseOptConfig, RustOptimise};
+    use crate::strdist::Levenshtein;
+    use crate::util::prng::Rng;
+
+    fn setup(l: usize, k: usize) -> (Vec<String>, Matrix) {
+        let landmarks: Vec<String> = (0..l).map(|i| format!("landmark{i:02}")).collect();
+        let mut rng = Rng::new(0x57ea);
+        (landmarks, Matrix::random_normal(&mut rng, l, k, 1.0))
+    }
+
+    #[test]
+    fn streams_all_rows_in_order() {
+        let (lm_names, lm_cfg) = setup(12, 3);
+        let lm_refs: Vec<&str> = lm_names.iter().map(|s| s.as_str()).collect();
+        let names: Vec<String> = (0..41).map(|i| format!("query {i}")).collect();
+        let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let mut method =
+            RustOptimise { landmarks: lm_cfg, cfg: OseOptConfig::default() };
+        let mut seen_starts = Vec::new();
+        let stats = embed_stream_with(
+            &objs,
+            &lm_refs,
+            &Levenshtein,
+            &mut method,
+            8,
+            |start, coords| {
+                seen_starts.push(start);
+                assert_eq!(coords.cols, 3);
+                assert!(coords.data.iter().all(|v| v.is_finite()));
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(seen_starts, vec![0, 8, 16, 24, 32, 40]);
+        assert_eq!(stats.rows, 41);
+        assert_eq!(stats.chunks, 6);
+        assert_eq!(stats.max_chunk_rows, 8); // final chunk is ragged (1 row)
+    }
+
+    #[test]
+    fn empty_input_is_a_clean_no_op() {
+        let (lm_names, lm_cfg) = setup(5, 2);
+        let lm_refs: Vec<&str> = lm_names.iter().map(|s| s.as_str()).collect();
+        let mut method =
+            RustOptimise { landmarks: lm_cfg, cfg: OseOptConfig::default() };
+        let objs: Vec<&str> = Vec::new();
+        let (out, stats) =
+            embed_stream(&objs, &lm_refs, &Levenshtein, &mut method, 16).unwrap();
+        assert_eq!(out.rows, 0);
+        assert_eq!(stats.chunks, 0);
+    }
+
+    #[test]
+    fn landmark_count_mismatch_is_rejected() {
+        let (lm_names, lm_cfg) = setup(6, 2);
+        // method built for 6 landmarks, but only 4 passed in
+        let lm_refs: Vec<&str> = lm_names[..4].iter().map(|s| s.as_str()).collect();
+        let mut method =
+            RustOptimise { landmarks: lm_cfg, cfg: OseOptConfig::default() };
+        let err = embed_stream_with(
+            &["q"],
+            &lm_refs,
+            &Levenshtein,
+            &mut method,
+            4,
+            |_, _| Ok(()),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn sink_error_aborts_stream() {
+        let (lm_names, lm_cfg) = setup(6, 2);
+        let lm_refs: Vec<&str> = lm_names.iter().map(|s| s.as_str()).collect();
+        let names: Vec<String> = (0..100).map(|i| format!("q{i}")).collect();
+        let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let mut method =
+            RustOptimise { landmarks: lm_cfg, cfg: OseOptConfig::default() };
+        let mut calls = 0usize;
+        let r = embed_stream_with(
+            &objs,
+            &lm_refs,
+            &Levenshtein,
+            &mut method,
+            10,
+            |_, _| {
+                calls += 1;
+                anyhow::bail!("sink says stop")
+            },
+        );
+        assert!(r.is_err());
+        assert_eq!(calls, 1, "stream must stop at the first sink error");
+    }
+}

@@ -3,15 +3,18 @@
 //! fused MLP forward / loss / Adam train step) directly on the CPU,
 //! row-parallel where the shape allows it.
 //!
-//! Numerics deliberately mirror the serial oracles in `ose::optimise` and
-//! `nn::mlp` operation-for-operation (same accumulation order, same eps),
-//! so the dedicated cross-check tests in `tests/backend_parity.rs` hold to
-//! tight tolerances — this backend is both the default production path and
+//! Numerics mirror the serial oracles in `ose::optimise` and `nn::mlp`:
+//! the OSE majorization and train-step paths match operation-for-operation
+//! (same accumulation order, same eps), while the LSMDS and MLP-forward
+//! paths run the cache-blocked flat-`f32` kernels
+//! (`mds::lsmds::stress_gradient_blocked`, `nn::forward_block`) that the
+//! dedicated cross-check tests in `tests/backend_parity.rs` hold against
+//! those oracles — this backend is both the default production path and
 //! the reference the PJRT artifacts are validated against.
 
 use anyhow::Result;
 
-use crate::mds::lsmds::stress_gradient;
+use crate::mds::lsmds::stress_gradient_blocked;
 use crate::mds::Matrix;
 use crate::nn::{self, MlpParams};
 use crate::ose::optimise::objective_and_grad;
@@ -19,39 +22,14 @@ use crate::util::threadpool::{default_parallelism, parallel_for_chunks, SyncSlic
 
 use super::backend::{AdamState, ComputeBackend};
 
+/// Rows of the input batch forwarded per thread-pool work item in
+/// [`ComputeBackend::mlp_fwd`]: large enough that each worker amortises
+/// its activation scratch buffers, small enough to balance ragged loads.
+const FWD_BLOCK_ROWS: usize = 32;
+
 /// Pure-Rust backend. Stateless; cheap to construct.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NativeBackend;
-
-impl NativeBackend {
-    /// Forward one input row through the MLP. The per-output accumulation
-    /// order matches `nn::forward` exactly (ascending input index), so the
-    /// two paths agree to the last bit.
-    fn forward_row(params: &MlpParams, row: &[f32]) -> Vec<f32> {
-        let mut cur = row.to_vec();
-        for l in 0..4 {
-            let w = &params.w[l];
-            let b = &params.b[l];
-            let mut next = vec![0.0f32; w.cols];
-            for (c, out) in next.iter_mut().enumerate() {
-                let mut acc = b[c];
-                for (i, xv) in cur.iter().enumerate() {
-                    acc += xv * w.at(i, c);
-                }
-                *out = acc;
-            }
-            if l < 3 {
-                for v in next.iter_mut() {
-                    if *v < 0.0 {
-                        *v = 0.0;
-                    }
-                }
-            }
-            cur = next;
-        }
-        cur
-    }
-}
 
 impl ComputeBackend for NativeBackend {
     fn name(&self) -> &'static str {
@@ -71,7 +49,7 @@ impl ComputeBackend for NativeBackend {
         let mut x = x.clone();
         let mut sigma = f64::NAN;
         for _ in 0..steps {
-            let (grad, s) = stress_gradient(&x, delta);
+            let (grad, s) = stress_gradient_blocked(&x, delta);
             sigma = s;
             for (xi, gi) in x.data.iter_mut().zip(grad.data.iter()) {
                 *xi -= (lr * *gi as f64) as f32;
@@ -136,19 +114,30 @@ impl ComputeBackend for NativeBackend {
             params.shape.input
         );
         let k = params.shape.output;
+        let l = params.shape.input;
         let mut out = Matrix::zeros(d.rows, k);
         {
             let slots = SyncSlice::new(&mut out.data);
-            parallel_for_chunks(d.rows, 8, default_parallelism(), |start, end| {
-                for r in start..end {
-                    let y = Self::forward_row(params, d.row(r));
+            parallel_for_chunks(
+                d.rows,
+                FWD_BLOCK_ROWS,
+                default_parallelism(),
+                |start, end| {
+                    let rows = end - start;
+                    let mut block = vec![0.0f32; rows * k];
+                    nn::forward_block(
+                        params,
+                        &d.data[start * l..end * l],
+                        rows,
+                        &mut block,
+                    );
                     unsafe {
-                        for c in 0..k {
-                            slots.write(r * k + c, y[c]);
+                        for (i, v) in block.iter().enumerate() {
+                            slots.write(start * k + i, *v);
                         }
                     }
-                }
-            });
+                },
+            );
         }
         Ok(out)
     }

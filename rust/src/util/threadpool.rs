@@ -11,8 +11,12 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
-/// Number of worker threads to use: all cores, capped (the PJRT CPU client
-/// also spins up its own pool; leaving a little headroom avoids thrash).
+/// Number of worker threads to use: all cores, clamped to `1..=32`. The
+/// lower bound keeps degenerate `available_parallelism` results usable;
+/// the upper cap exists because the PJRT CPU client spins up its own pool
+/// and beyond ~32 threads the row-parallel kernels here are memory-bound
+/// anyway — extra workers only add scheduling thrash. Callers that know
+/// better can pass their own thread count to [`parallel_for_chunks`].
 pub fn default_parallelism() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
@@ -23,6 +27,11 @@ pub fn default_parallelism() -> usize {
 /// Run `f(start, end)` over disjoint chunks of `0..n` on `threads` threads.
 /// Work is distributed dynamically (atomic cursor) so ragged per-item costs
 /// (e.g. Levenshtein on variable-length strings) balance automatically.
+///
+/// Degenerate inputs are safe: `n == 0` runs nothing, `chunk == 0` is
+/// treated as 1 (a zero chunk would otherwise never advance the cursor),
+/// and `threads` is clamped to the number of chunks so no worker spawns
+/// with nothing to do.
 pub fn parallel_for_chunks<F>(n: usize, chunk: usize, threads: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -30,7 +39,8 @@ where
     if n == 0 {
         return;
     }
-    let threads = threads.max(1).min(n.div_ceil(chunk).max(1));
+    let chunk = chunk.max(1);
+    let threads = threads.max(1).min(n.div_ceil(chunk));
     if threads == 1 {
         let mut start = 0;
         while start < n {
@@ -196,6 +206,54 @@ mod tests {
             count.fetch_add(e - s, Ordering::Relaxed);
         });
         assert_eq!(count.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parallel_for_zero_chunk_is_treated_as_one() {
+        // chunk = 0 used to divide by zero / never advance the cursor
+        let n = 17;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_chunks(n, 0, 4, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_more_threads_than_items() {
+        // threads > n and n < chunk: single chunk, no idle-worker panics
+        for (n, chunk, threads) in [(3usize, 16usize, 64usize), (1, 1, 8), (5, 100, 3)] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            parallel_for_chunks(n, chunk, threads, |s, e| {
+                for i in s..e {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "n={n} chunk={chunk} threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_for_chunk_of_one_covers_all() {
+        // chunk = 1: every index is its own work item (max contention case)
+        let n = 257;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_chunks(n, 1, 8, |s, e| {
+            assert_eq!(e, s + 1);
+            hits[s].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn default_parallelism_honours_clamp() {
+        let p = default_parallelism();
+        assert!((1..=32).contains(&p));
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Golden-seed regression for the eval protocol: one small Figure-1-style
+//! run with pinned seeds on the native backend, asserted two ways so
+//! future kernel changes cannot silently shift numerics:
+//!
+//! 1. **Tight bands on geometry-backed runs.** On realizable synthetic
+//!    data the correct raw/normalized stress and per-point OSE error are
+//!    known a priori (≈ 0), so the bands are tight without baking in
+//!    implementation-specific constants a toolchain bump would invalidate.
+//! 2. **Bit-exact determinism.** The whole run (landmark selection, LSMDS
+//!    through the compute backend, OSE) is seeded; two executions must
+//!    agree to the last bit. Any unseeded nondeterminism a kernel rewrite
+//!    introduces (e.g. order-dependent parallel reductions) fails here.
+
+use lmds_ose::coordinator::embedder::lsmds_landmarks;
+use lmds_ose::coordinator::methods::BackendOpt;
+use lmds_ose::data::synthetic::gaussian_clusters;
+use lmds_ose::data::{Geco, GecoConfig};
+use lmds_ose::mds::dissimilarity::{cross_matrix, full_matrix};
+use lmds_ose::mds::landmarks::fps_landmarks;
+use lmds_ose::mds::stress::{normalized_stress, point_error, raw_stress};
+use lmds_ose::mds::{LsmdsConfig, Matrix};
+use lmds_ose::ose::OseMethod;
+use lmds_ose::runtime::Backend;
+use lmds_ose::strdist::{Euclidean, Levenshtein};
+use lmds_ose::util::prng::Rng;
+
+/// One pinned-seed realizable run: LSMDS on L landmark points whose
+/// dissimilarities are exact 3-D Euclidean distances, then OSE of held-out
+/// points from their exact landmark distances.
+fn realizable_run() -> (Matrix, f64, f64, Matrix, Vec<f64>) {
+    let l = 60usize;
+    let m = 10usize;
+    let dim = 3usize;
+    let mut rng = Rng::new(0x901d);
+    // a single Gaussian blob: the classic easy MDS geometry, so the run
+    // converges to ~zero stress from any seeded init (no cluster-induced
+    // local minima to make the band flaky)
+    let all = gaussian_clusters(&mut rng, l + m, dim, 1, 1.0);
+    let lm_pts: Vec<&[f32]> = all[..l].iter().map(|p| p.as_slice()).collect();
+    let new_pts: Vec<&[f32]> = all[l..].iter().map(|p| p.as_slice()).collect();
+
+    let delta_ll = full_matrix(&lm_pts, &Euclidean);
+    let lcfg = LsmdsConfig {
+        dim,
+        max_iters: 1500,
+        rel_tol: 1e-12,
+        seed: 0x5eed,
+        ..Default::default()
+    };
+    let backend = Backend::native();
+    let (config, norm_stress) = lsmds_landmarks(&delta_ll, &lcfg, &backend).unwrap();
+    let raw = raw_stress(&config, &delta_ll);
+
+    let delta_ml = cross_matrix(&new_pts, &lm_pts, &Euclidean);
+    let mut method = BackendOpt::with_defaults(backend, config.clone());
+    method.total_steps = 1000;
+    method.rel_tol = 0.0;
+    let y = method.embed(&delta_ml).unwrap();
+    let perrs: Vec<f64> = (0..m)
+        .map(|j| point_error(&config, delta_ml.row(j), y.row(j)))
+        .collect();
+    (config, raw, norm_stress, y, perrs)
+}
+
+#[test]
+fn golden_realizable_run_stays_in_band() {
+    let (_, raw, norm, y, perrs) = realizable_run();
+    // realizable deltas: LSMDS must essentially solve the problem. The
+    // bands are set by geometry + f32 precision, not by any pinned
+    // implementation constant, so they are tight AND stable.
+    assert!(norm < 0.05, "normalized stress {norm} out of band [0, 0.05)");
+    assert!(raw.is_finite() && raw >= 0.0);
+    // raw stress consistent with the normalized value (same residuals)
+    assert!(raw < 50.0, "raw stress {raw} out of band");
+    assert!(y.data.iter().all(|v| v.is_finite()));
+    // held-out points have exact landmark distances: the optimiser must
+    // place each within a small Eq.-2 residual of the landmark geometry.
+    // Zero-vector placement scores in the hundreds on this data.
+    for (j, p) in perrs.iter().enumerate() {
+        assert!(*p < 5.0, "point {j}: PErr {p} out of band [0, 5)");
+    }
+}
+
+#[test]
+fn golden_realizable_run_is_bit_deterministic() {
+    let (c1, r1, n1, y1, p1) = realizable_run();
+    let (c2, r2, n2, y2, p2) = realizable_run();
+    assert_eq!(c1.data, c2.data, "landmark config must be bit-deterministic");
+    assert_eq!(y1.data, y2.data, "OSE coords must be bit-deterministic");
+    assert!(r1 == r2 && n1 == n2, "stress must be bit-deterministic");
+    assert_eq!(p1, p2);
+}
+
+/// The Figure-1-shaped string run: Geco names, FPS landmarks, Levenshtein,
+/// LSMDS + opt-OSE of held-out names — the same composition the eval
+/// protocol uses, at smoke scale with pinned seeds.
+fn string_run() -> (Vec<usize>, Matrix, f64, Matrix) {
+    let n = 120usize;
+    let m = 20usize;
+    let l = 40usize;
+    let dim = 7usize;
+    let mut geco = Geco::new(GecoConfig { seed: 0x901e, ..Default::default() });
+    let all = geco.generate_unique(n + m);
+    let refs: Vec<&str> = all[..n].iter().map(|s| s.as_str()).collect();
+    let news: Vec<&str> = all[n..].iter().map(|s| s.as_str()).collect();
+
+    let mut rng = Rng::new(0xFA5);
+    let lm_idx = fps_landmarks(&mut rng, &refs, l, &Levenshtein);
+    let lm_objs: Vec<&str> = lm_idx.iter().map(|&i| refs[i]).collect();
+    let delta_ll = full_matrix(&lm_objs, &Levenshtein);
+    let lcfg = LsmdsConfig { dim, max_iters: 150, seed: 0x5eed, ..Default::default() };
+    let backend = Backend::native();
+    let (config, norm) = lsmds_landmarks(&delta_ll, &lcfg, &backend).unwrap();
+
+    let delta_ml = cross_matrix(&news, &lm_objs, &Levenshtein);
+    let mut method = BackendOpt::with_defaults(backend, config.clone());
+    method.rel_tol = 0.0;
+    let y = method.embed(&delta_ml).unwrap();
+    (lm_idx, config, norm, y)
+}
+
+#[test]
+fn golden_string_run_stays_in_band() {
+    let (lm_idx, config, norm, y) = string_run();
+    assert_eq!(lm_idx.len(), 40);
+    // Levenshtein on names is not realizable in R^7, but a 40-landmark
+    // LSMDS at K=7 lands well under 0.5 normalized stress on Geco data —
+    // collapse (or a sign/step regression) blows straight through this
+    assert!(
+        norm > 1e-4 && norm < 0.5,
+        "normalized stress {norm} out of band (1e-4, 0.5)"
+    );
+    let mut geco = Geco::new(GecoConfig { seed: 0x901e, ..Default::default() });
+    let all = geco.generate_unique(140);
+    let refs: Vec<&str> = all[..120].iter().map(|s| s.as_str()).collect();
+    let news: Vec<&str> = all[120..].iter().map(|s| s.as_str()).collect();
+    let lm_objs: Vec<&str> = lm_idx.iter().map(|&i| refs[i]).collect();
+    let delta_ml = cross_matrix(&news, &lm_objs, &Levenshtein);
+    let origin = vec![0.0f32; 7];
+    let mut norm_perrs = Vec::new();
+    for j in 0..y.rows {
+        let embedded = point_error(&config, delta_ml.row(j), y.row(j));
+        let at_origin = point_error(&config, delta_ml.row(j), &origin);
+        // the optimiser starts AT the origin and majorization is monotone
+        // in the Eq.-2 objective (== PErr over the landmarks), so this
+        // holds by construction; a step-sign or warm-start regression
+        // breaks it immediately
+        assert!(
+            embedded <= at_origin * (1.0 + 1e-9) + 1e-9,
+            "query {j}: PErr {embedded} worse than its own start {at_origin}"
+        );
+        let denom: f64 = delta_ml.row(j).iter().map(|d| *d as f64).sum();
+        norm_perrs.push(embedded / denom.max(1e-30));
+    }
+    // coarse normalized-PErr sanity band (string data is not realizable,
+    // so the tight bands live in the realizable golden run above): a
+    // collapsed or diverged embedding scores far outside this
+    for (j, p) in norm_perrs.iter().enumerate() {
+        assert!(p.is_finite() && *p < 5.0, "query {j}: normalized PErr {p}");
+    }
+    let mean = norm_perrs.iter().sum::<f64>() / norm_perrs.len() as f64;
+    assert!(mean < 2.0, "mean normalized PErr {mean} out of band [0, 2)");
+}
+
+#[test]
+fn golden_string_run_is_bit_deterministic() {
+    let (i1, c1, n1, y1) = string_run();
+    let (i2, c2, n2, y2) = string_run();
+    assert_eq!(i1, i2);
+    assert_eq!(c1.data, c2.data);
+    assert!(n1 == n2);
+    assert_eq!(y1.data, y2.data);
+}
+
+#[test]
+fn golden_normalized_stress_consistent_with_raw() {
+    // the two stress numbers the protocol reports must describe the same
+    // residuals: normalized == sqrt(raw / sum delta^2)
+    let (_, config, norm, _) = string_run();
+    let mut geco = Geco::new(GecoConfig { seed: 0x901e, ..Default::default() });
+    let all = geco.generate_unique(140);
+    let refs: Vec<&str> = all[..120].iter().map(|s| s.as_str()).collect();
+    let mut rng = Rng::new(0xFA5);
+    let lm_idx = fps_landmarks(&mut rng, &refs, 40, &Levenshtein);
+    let lm_objs: Vec<&str> = lm_idx.iter().map(|&i| refs[i]).collect();
+    let delta_ll = full_matrix(&lm_objs, &Levenshtein);
+    let raw = raw_stress(&config, &delta_ll);
+    let norm2 = normalized_stress(&config, &delta_ll);
+    assert!((norm - norm2).abs() < 1e-12, "{norm} vs {norm2}");
+    let mut den = 0.0f64;
+    for i in 0..delta_ll.rows {
+        for j in (i + 1)..delta_ll.cols {
+            den += (delta_ll.at(i, j) as f64).powi(2);
+        }
+    }
+    assert!(((raw / den).sqrt() - norm).abs() < 1e-12);
+}

@@ -12,7 +12,10 @@ use lmds_ose::mds::stress::{point_error, raw_stress, total_error};
 use lmds_ose::mds::Matrix;
 use lmds_ose::nn::{MlpParams, MlpShape};
 use lmds_ose::ose::{embed_point, OseOptConfig, RustNn};
-use lmds_ose::strdist::{euclidean, levenshtein, Levenshtein};
+use lmds_ose::strdist::{
+    euclidean, levenshtein, DamerauOsa, Dissimilarity, JaroWinkler, Levenshtein, QGram,
+    SoundexDist,
+};
 use lmds_ose::util::json::Json;
 use lmds_ose::util::prng::Rng;
 use lmds_ose::util::quickcheck::{prop_assert, prop_assert_close, property, Gen};
@@ -115,6 +118,126 @@ fn ose_point_error_bounded_by_objective_triangle() {
         let p = embed_point(&lm, &delta, None, &OseOptConfig::default());
         let perr = point_error(&lm, &delta, &p.coords);
         prop_assert_close(perr, p.objective, 1e-4 * (1.0 + perr), "identity")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Per-metric axiom suites: every strdist comparator must satisfy identity
+// (d(a, a) = 0), symmetry and non-negativity over ASCII and unicode-ish
+// inputs; the triangle inequality is asserted only for the metrics that
+// actually satisfy it, with documented exemptions for the rest.
+// ---------------------------------------------------------------------------
+
+fn metric_axiom_suite(metric: &dyn Dissimilarity<str>) {
+    property(
+        &format!("{}: identity + symmetry + non-negativity", metric.name()),
+        150,
+        |g| {
+            let (a, b) = if g.bool() {
+                (g.string(0, 14), g.string(0, 14))
+            } else {
+                (g.unicode_string(0, 10), g.unicode_string(0, 10))
+            };
+            prop_assert(metric.dist(&a, &a) == 0.0, &format!("identity on {a:?}"))?;
+            prop_assert(metric.dist(&b, &b) == 0.0, &format!("identity on {b:?}"))?;
+            let ab = metric.dist(&a, &b);
+            let ba = metric.dist(&b, &a);
+            prop_assert(ab == ba, &format!("symmetry {a:?}/{b:?}: {ab} vs {ba}"))?;
+            prop_assert(ab >= 0.0 && ab.is_finite(), "non-negative and finite")
+        },
+    );
+}
+
+fn metric_triangle_suite(metric: &dyn Dissimilarity<str>) {
+    property(&format!("{}: triangle inequality", metric.name()), 200, |g| {
+        let a = g.string(0, 10);
+        let b = g.string(0, 10);
+        let c = g.string(0, 10);
+        let ab = metric.dist(&a, &b);
+        let ac = metric.dist(&a, &c);
+        let cb = metric.dist(&c, &b);
+        prop_assert(
+            ab <= ac + cb + 1e-9,
+            &format!("d({a:?},{b:?})={ab} > {ac} + {cb} (via {c:?})"),
+        )
+    });
+}
+
+#[test]
+fn strdist_axioms_levenshtein() {
+    metric_axiom_suite(&Levenshtein);
+    metric_triangle_suite(&Levenshtein); // a true metric
+}
+
+#[test]
+fn strdist_axioms_damerau_osa() {
+    metric_axiom_suite(&DamerauOsa);
+    // Triangle exemption: OSA (the *restricted* Damerau variant, matching
+    // stringdist's "osa") is NOT a metric. Canonical counterexample:
+    // d("ca","abc") = 3, but d("ca","ac") + d("ac","abc") = 1 + 1 = 2.
+    // (The unrestricted Damerau-Levenshtein distance would be a metric.)
+    let d = |a: &str, b: &str| DamerauOsa.dist(a, b);
+    assert!(
+        d("ca", "abc") > d("ca", "ac") + d("ac", "abc"),
+        "OSA triangle counterexample no longer violates — metric changed?"
+    );
+}
+
+#[test]
+fn strdist_axioms_jaro_winkler() {
+    metric_axiom_suite(&JaroWinkler);
+    // Triangle exemption: Jaro(-Winkler) is a similarity-derived
+    // dissimilarity, not a metric — totally dissimilar strings saturate at
+    // distance 1.0, so two "hops" through an unrelated middle string can
+    // be cheaper than the direct comparison's structure allows, e.g.
+    // d("ab","ba") vs hops through "" are incomparable under the matching
+    // window. We pin one concrete violation so the exemption stays honest.
+    let d = |a: &str, b: &str| JaroWinkler.dist(a, b);
+    // "abcde" vs "edcba": low direct similarity; via "abcba" both hops are
+    // close, giving a strictly cheaper path
+    let direct = d("abcde", "edcba");
+    let via = d("abcde", "abcba") + d("abcba", "edcba");
+    assert!(
+        direct > via,
+        "expected JW triangle violation: direct {direct} vs via {via}"
+    );
+}
+
+#[test]
+fn strdist_axioms_qgram() {
+    for q in [2usize, 3] {
+        metric_axiom_suite(&QGram(q));
+        // q-gram distance is the L1 distance between q-gram profiles: a
+        // pseudometric on strings (identity of indiscernibles fails —
+        // strings shorter than q share the empty profile — but the
+        // triangle inequality holds)
+        metric_triangle_suite(&QGram(q));
+    }
+}
+
+#[test]
+fn strdist_axioms_soundex() {
+    metric_axiom_suite(&SoundexDist);
+    // soundex_distance = levenshtein over 4-char codes: the pullback of a
+    // metric along the encoding, hence a pseudometric — triangle holds
+    metric_triangle_suite(&SoundexDist);
+}
+
+#[test]
+fn euclidean_vector_metric_axioms() {
+    property("euclidean: axioms + triangle on vectors", 120, |g| {
+        let k = g.usize_in(1, 6);
+        let a: Vec<f32> = (0..k).map(|_| g.f32_in(-5.0, 5.0)).collect();
+        let b: Vec<f32> = (0..k).map(|_| g.f32_in(-5.0, 5.0)).collect();
+        let c: Vec<f32> = (0..k).map(|_| g.f32_in(-5.0, 5.0)).collect();
+        prop_assert(euclidean(&a, &a) == 0.0, "identity")?;
+        let ab = euclidean(&a, &b);
+        prop_assert(ab == euclidean(&b, &a), "symmetry")?;
+        prop_assert(ab >= 0.0 && ab.is_finite(), "non-negative")?;
+        prop_assert(
+            ab <= euclidean(&a, &c) + euclidean(&c, &b) + 1e-9,
+            "triangle",
+        )
     });
 }
 

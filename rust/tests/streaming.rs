@@ -1,0 +1,116 @@
+//! Chunk-invariance contract of the bounded-memory streaming pipeline:
+//! for a fixed step budget the streamed output must equal the monolithic
+//! `cross_matrix` + backend path **bit-for-bit** for the optimisation
+//! method (row-independent majorization) and to 1e-6 for the MLP method,
+//! for every chunk shape — including chunk = 1, a ragged final chunk,
+//! chunk = N and N < chunk.
+
+use lmds_ose::coordinator::methods::{BackendNn, BackendOpt};
+use lmds_ose::data::{Geco, GecoConfig};
+use lmds_ose::mds::dissimilarity::cross_matrix;
+use lmds_ose::mds::Matrix;
+use lmds_ose::nn::{MlpParams, MlpShape};
+use lmds_ose::ose::pipeline::embed_stream;
+use lmds_ose::runtime::Backend;
+use lmds_ose::strdist::Levenshtein;
+use lmds_ose::util::prng::Rng;
+
+const N: usize = 100;
+const L: usize = 20;
+const K: usize = 3;
+
+/// Chunk shapes required by the acceptance criteria: 1, a size that leaves
+/// a ragged final chunk (100 % 7 == 2), one mid-size ragged (100 % 64 ==
+/// 36), exactly N, and N < chunk.
+const CHUNKS: [usize; 5] = [1, 7, 64, N, N + 50];
+
+fn dataset() -> (Vec<String>, Vec<String>, Matrix) {
+    let mut geco = Geco::new(GecoConfig { seed: 0x5c, ..Default::default() });
+    let all = geco.generate_unique(N + L);
+    let queries = all[..N].to_vec();
+    let landmarks = all[N..].to_vec();
+    let mut rng = Rng::new(0x5d);
+    let lm_config = Matrix::random_normal(&mut rng, L, K, 1.0);
+    (queries, landmarks, lm_config)
+}
+
+#[test]
+fn opt_streaming_is_chunk_invariant_bit_for_bit() {
+    let (queries, landmarks, lm_config) = dataset();
+    let q_refs: Vec<&str> = queries.iter().map(|s| s.as_str()).collect();
+    let lm_refs: Vec<&str> = landmarks.iter().map(|s| s.as_str()).collect();
+
+    // monolithic oracle: full N x L matrix, one embed call. Fixed step
+    // budget (rel_tol = 0) so early stopping cannot depend on batch
+    // composition — the precondition for bit-exact chunk invariance.
+    let mut mono_method = BackendOpt::with_defaults(Backend::native(), lm_config.clone());
+    mono_method.total_steps = 50;
+    mono_method.rel_tol = 0.0;
+    let delta = cross_matrix(&q_refs, &lm_refs, &Levenshtein);
+    let mono = mono_method.embed(&delta).unwrap();
+
+    for chunk in CHUNKS {
+        let mut method = BackendOpt::with_defaults(Backend::native(), lm_config.clone());
+        method.total_steps = 50;
+        method.rel_tol = 0.0;
+        let (streamed, stats) =
+            embed_stream(&q_refs, &lm_refs, &Levenshtein, &mut method, chunk).unwrap();
+        assert_eq!((streamed.rows, streamed.cols), (N, K), "chunk {chunk}");
+        assert_eq!(
+            streamed.data, mono.data,
+            "chunk {chunk}: opt streaming must be bit-for-bit"
+        );
+        assert_eq!(stats.rows, N);
+        assert_eq!(stats.chunks, N.div_ceil(chunk));
+        assert!(stats.max_chunk_rows <= chunk, "chunk {chunk}");
+    }
+}
+
+#[test]
+fn nn_streaming_is_chunk_invariant() {
+    let (queries, landmarks, _) = dataset();
+    let q_refs: Vec<&str> = queries.iter().map(|s| s.as_str()).collect();
+    let lm_refs: Vec<&str> = landmarks.iter().map(|s| s.as_str()).collect();
+    let mut rng = Rng::new(0x5e);
+    let params = MlpParams::init(
+        &MlpShape { input: L, hidden: [16, 16, 8], output: K },
+        &mut rng,
+    );
+
+    let mut mono_method = BackendNn::new(Backend::native(), params.clone());
+    let delta = cross_matrix(&q_refs, &lm_refs, &Levenshtein);
+    let mono = mono_method.embed(&delta).unwrap();
+
+    for chunk in CHUNKS {
+        let mut method = BackendNn::new(Backend::native(), params.clone());
+        let (streamed, stats) =
+            embed_stream(&q_refs, &lm_refs, &Levenshtein, &mut method, chunk).unwrap();
+        let diff = mono.max_abs_diff(&streamed);
+        assert!(
+            diff < 1e-6,
+            "chunk {chunk}: nn streaming diverges by {diff}"
+        );
+        assert_eq!(stats.chunks, N.div_ceil(chunk));
+    }
+}
+
+#[test]
+fn single_object_stream_matches_monolithic() {
+    // N = 1 with every chunk shape: the smallest ragged case
+    let (queries, landmarks, lm_config) = dataset();
+    let one: Vec<&str> = vec![queries[0].as_str()];
+    let lm_refs: Vec<&str> = landmarks.iter().map(|s| s.as_str()).collect();
+    let mut mono_method = BackendOpt::with_defaults(Backend::native(), lm_config.clone());
+    mono_method.rel_tol = 0.0;
+    let delta = cross_matrix(&one, &lm_refs, &Levenshtein);
+    let mono = mono_method.embed(&delta).unwrap();
+    for chunk in [1usize, 2, 64] {
+        let mut method = BackendOpt::with_defaults(Backend::native(), lm_config.clone());
+        method.rel_tol = 0.0;
+        let (streamed, stats) =
+            embed_stream(&one, &lm_refs, &Levenshtein, &mut method, chunk).unwrap();
+        assert_eq!(streamed.data, mono.data, "chunk {chunk}");
+        assert_eq!(stats.chunks, 1);
+        assert_eq!(stats.max_chunk_rows, 1);
+    }
+}

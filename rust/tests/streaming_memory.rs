@@ -1,0 +1,150 @@
+//! Bounded-memory guarantee of the streaming OSE pipeline, enforced by a
+//! tracking global allocator: streaming N rows against L landmarks must
+//! never allocate an `N x L` block anywhere on the path, and its peak
+//! transient footprint must fit the `O(L² + 2·chunk·L)` budget (plus the
+//! `N x K` output) — a budget a monolithic `N x L` dissimilarity matrix
+//! alone could not fit in. This file holds exactly one test so the
+//! allocator counters see no concurrent neighbours.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use lmds_ose::coordinator::methods::BackendOpt;
+use lmds_ose::data::synthetic::gaussian_clusters;
+use lmds_ose::mds::dissimilarity::cross_matrix;
+use lmds_ose::mds::Matrix;
+use lmds_ose::ose::pipeline::embed_stream;
+use lmds_ose::runtime::Backend;
+use lmds_ose::strdist::Euclidean;
+use lmds_ose::util::prng::Rng;
+
+/// Live bytes, high-water mark of live bytes, and largest single
+/// allocation — updated on every alloc/dealloc in this test binary.
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+static LARGEST: AtomicUsize = AtomicUsize::new(0);
+
+struct TrackingAlloc;
+
+impl TrackingAlloc {
+    fn on_alloc(size: usize) {
+        let live = LIVE.fetch_add(size, Ordering::Relaxed) + size;
+        PEAK.fetch_max(live, Ordering::Relaxed);
+        LARGEST.fetch_max(size, Ordering::Relaxed);
+    }
+}
+
+unsafe impl GlobalAlloc for TrackingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = unsafe { System.alloc(layout) };
+        if !p.is_null() {
+            Self::on_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = unsafe { System.alloc_zeroed(layout) };
+        if !p.is_null() {
+            Self::on_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) };
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = unsafe { System.realloc(ptr, layout, new_size) };
+        if !p.is_null() {
+            LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+            Self::on_alloc(new_size);
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+#[test]
+fn streaming_embeds_within_transient_budget() {
+    // Acceptance shapes: L = 300 landmarks; N = 100k synthetic points in
+    // release (the CI `cargo test --release` job), scaled to 20k under the
+    // debug tier-1 run so `cargo test -q` stays fast. The budget maths are
+    // identical at both sizes.
+    let n: usize = if cfg!(debug_assertions) { 20_000 } else { 100_000 };
+    let l = 300usize;
+    let k = 7usize;
+    let chunk = 512usize;
+
+    // -- setup (all of this is baseline memory, allocated before the run) --
+    let mut rng = Rng::new(0xb0b);
+    let points = gaussian_clusters(&mut rng, n, 3, 8, 1.0);
+    let lm_points = gaussian_clusters(&mut rng, l, 3, 8, 1.0);
+    let objs: Vec<&[f32]> = points.iter().map(|p| p.as_slice()).collect();
+    let lm_refs: Vec<&[f32]> = lm_points.iter().map(|p| p.as_slice()).collect();
+    let lm_config = Matrix::random_normal(&mut rng, l, k, 1.0);
+    // tiny fixed step budget: the memory profile is what this test is
+    // about, and rel_tol = 0 keeps the arithmetic chunk-invariant
+    let mk_method = || {
+        let mut m = BackendOpt::with_defaults(Backend::native(), lm_config.clone());
+        m.total_steps = 2;
+        m.rel_tol = 0.0;
+        m
+    };
+
+    let monolithic_bytes = n * l * std::mem::size_of::<f32>();
+    let budget_bytes = l * l * 4            // delta_LL the full pipeline holds
+        + 2 * chunk * l * 4                 // the two in-flight stream blocks
+        + n * k * 4                         // the N x K output
+        + (8 << 20); // slack: thread-pool scratch, per-chunk coords, harness
+    assert!(
+        budget_bytes < monolithic_bytes,
+        "the test budget ({budget_bytes} B) must be smaller than one \
+         monolithic N x L matrix ({monolithic_bytes} B), or it proves nothing"
+    );
+
+    // -- measured region --
+    let baseline = LIVE.load(Ordering::Relaxed);
+    PEAK.store(baseline, Ordering::Relaxed);
+    LARGEST.store(0, Ordering::Relaxed);
+
+    let mut method = mk_method();
+    let (coords, stats) =
+        embed_stream(&objs, &lm_refs, &Euclidean, &mut method, chunk).unwrap();
+
+    let peak_extra = PEAK.load(Ordering::Relaxed).saturating_sub(baseline);
+    let largest = LARGEST.load(Ordering::Relaxed);
+    // -- end measured region --
+
+    assert_eq!((coords.rows, coords.cols), (n, k));
+    assert!(coords.data.iter().all(|v| v.is_finite()));
+    assert_eq!(stats.rows, n);
+    assert_eq!(stats.chunks, n.div_ceil(chunk));
+    assert!(stats.max_chunk_rows <= chunk);
+
+    // no N x L allocation anywhere on the path
+    assert!(
+        largest < monolithic_bytes / 2,
+        "largest single allocation {largest} B is within 2x of a \
+         monolithic N x L matrix ({monolithic_bytes} B) — something \
+         materialised the full out-of-sample block"
+    );
+    // and the whole transient footprint fits the streaming budget
+    assert!(
+        peak_extra < budget_bytes,
+        "peak transient memory {peak_extra} B exceeds the \
+         O(L^2 + 2*chunk*L) + output budget {budget_bytes} B"
+    );
+
+    // correctness spot-check: the first rows match the monolithic path
+    // bit-for-bit
+    let head: Vec<&[f32]> = objs[..5].to_vec();
+    let delta_head = cross_matrix(&head, &lm_refs, &Euclidean);
+    let mut mono_method = mk_method();
+    let mono_head = mono_method.embed(&delta_head).unwrap();
+    assert_eq!(&coords.data[..5 * k], &mono_head.data[..]);
+}
