@@ -70,16 +70,20 @@ fn main() -> anyhow::Result<()> {
     // ---- serve phase -----------------------------------------------------
     let landmark_names: Vec<String> =
         result.landmark_idx.iter().map(|&i| names[i].clone()).collect();
-    let server = Server::start(
+    // replicated executor pool: 4 panic-isolated replicas share the
+    // dispatch queue, each rebuilt from the factory if a batch poisons it
+    let server = Server::start_strings(
         landmark_names,
         Arc::new(Levenshtein),
-        result.method,
+        result.factory.clone(),
         BatcherConfig {
             max_batch: 64,
             max_delay: Duration::from_millis(2),
             queue_cap: 8192,
             frontend_threads: 8,
+            replicas: 4,
         },
+        None,
     );
     let h = server.handle();
 

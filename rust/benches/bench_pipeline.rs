@@ -58,16 +58,18 @@ fn main() {
     let result = embed_dataset(&objs, &Levenshtein, &cfg, &backend).unwrap();
     let landmark_names: Vec<String> =
         result.landmark_idx.iter().map(|&i| names[i].clone()).collect();
-    let server = Server::start(
+    let server = Server::start_strings(
         landmark_names,
         Arc::new(Levenshtein),
-        result.method,
+        result.factory.clone(),
         BatcherConfig {
             max_batch: 64,
             max_delay: Duration::from_millis(2),
             queue_cap: 8192,
             frontend_threads: 8,
+            replicas: 4,
         },
+        None,
     );
     let h = server.handle();
     for _ in 0..64 {

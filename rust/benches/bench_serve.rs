@@ -1,0 +1,151 @@
+//! Serving-core bench: throughput scaling of the replicated executor pool
+//! (1 vs 4 replicas) on the MLP OSE method, plus tail latency read from
+//! the bounded log-bucketed histograms. Writes a machine-readable JSON
+//! report for the CI perf trajectory.
+//!
+//!     cargo bench --bench bench_serve
+//!
+//! Env knobs:
+//!   LMDS_BENCH_QUICK=1        smaller query volume (CI smoke)
+//!   LMDS_BENCH_JSON=path.json where to write the report
+//!                             (default BENCH_pr3.json in the CWD)
+//!
+//! The load bypasses the frontend (`query_delta` with precomputed rows) so
+//! the numbers isolate the dispatch-queue + executor-pool path: small
+//! batches (max_batch = 8) keep each embed call on one core, which is the
+//! regime where replica-level parallelism is the only scaling lever.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lmds_ose::coordinator::methods::BackendNn;
+use lmds_ose::coordinator::{BatcherConfig, Server, Snapshot};
+use lmds_ose::nn::{MlpParams, MlpShape};
+use lmds_ose::runtime::Backend;
+use lmds_ose::strdist::Levenshtein;
+use lmds_ose::util::json::Json;
+use lmds_ose::util::prng::Rng;
+
+const L: usize = 300;
+const MAX_BATCH: usize = 8;
+
+fn run_load(
+    params: &MlpParams,
+    replicas: usize,
+    queries: usize,
+    clients: usize,
+) -> (f64, Snapshot) {
+    let landmarks: Vec<String> = (0..L).map(|i| format!("landmark{i:03}")).collect();
+    let server = Server::start_strings(
+        landmarks,
+        Arc::new(Levenshtein),
+        BackendNn::replica_factory(Backend::native(), params.clone()),
+        BatcherConfig {
+            max_batch: MAX_BATCH,
+            max_delay: Duration::from_micros(200),
+            queue_cap: 4096,
+            frontend_threads: 1,
+            replicas,
+        },
+        None,
+    );
+    let h = server.handle();
+    let mut rng = Rng::new(0x5e55);
+    let delta: Vec<f32> = (0..L).map(|_| rng.next_f32() * 5.0).collect();
+
+    // warm the executors
+    for _ in 0..64 {
+        h.query_delta(delta.clone()).unwrap().recv().unwrap().unwrap();
+    }
+    let warm = h.metrics.snapshot().completed;
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..clients {
+            let h = h.clone();
+            let delta = delta.clone();
+            scope.spawn(move || {
+                let per = queries / clients;
+                let mut pending = VecDeque::with_capacity(64);
+                for _ in 0..per {
+                    pending.push_back(h.query_delta(delta.clone()).unwrap());
+                    if pending.len() >= 64 {
+                        pending.pop_front().unwrap().recv().unwrap().unwrap();
+                    }
+                }
+                for rx in pending {
+                    rx.recv().unwrap().unwrap();
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = h.metrics.snapshot();
+    assert_eq!(snap.failed, 0, "bench load must not fail");
+    let served = snap.completed - warm;
+    drop(h);
+    server.shutdown();
+    (served as f64 / wall, snap)
+}
+
+fn main() {
+    lmds_ose::util::logging::init();
+    let quick = std::env::var("LMDS_BENCH_QUICK").is_ok();
+    let queries = if quick { 4_000 } else { 24_000 };
+    let clients = 4;
+
+    let mut rng = Rng::new(1);
+    let params = MlpParams::init(
+        &MlpShape { input: L, hidden: [256, 128, 64], output: 7 },
+        &mut rng,
+    );
+
+    println!(
+        "== serving core: replicated executor pool (MLP L={L}, \
+         max_batch={MAX_BATCH}, {queries} queries, {clients} clients) =="
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut qps_by_replicas = Vec::new();
+    for replicas in [1usize, 4] {
+        let (qps, snap) = run_load(&params, replicas, queries, clients);
+        println!(
+            "replicas={replicas}: {qps:6.0} queries/s | p50 {:.3}ms p99 {:.3}ms \
+             | mean batch {:.1} | {}",
+            snap.p50_s * 1e3,
+            snap.p99_s * 1e3,
+            snap.mean_batch_size,
+            snap.report()
+        );
+        rows.push(Json::obj(vec![
+            ("replicas", Json::Num(replicas as f64)),
+            ("qps", Json::Num(qps)),
+            ("p50_s", Json::Num(snap.p50_s)),
+            ("p95_s", Json::Num(snap.p95_s)),
+            ("p99_s", Json::Num(snap.p99_s)),
+            ("mean_batch", Json::Num(snap.mean_batch_size)),
+            ("batches", Json::Num(snap.batches as f64)),
+            ("metrics_footprint", Json::Num(snap.metrics_footprint as f64)),
+        ]));
+        qps_by_replicas.push(qps);
+    }
+    let speedup = qps_by_replicas[1] / qps_by_replicas[0];
+    println!("4-replica speedup over 1 replica: {speedup:.2}x");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("bench_serve".into())),
+        ("backend", Json::Str("native".into())),
+        ("method", Json::Str("nn".into())),
+        ("max_batch", Json::Num(MAX_BATCH as f64)),
+        ("queries", Json::Num(queries as f64)),
+        ("clients", Json::Num(clients as f64)),
+        ("results", Json::Arr(rows)),
+        ("speedup_4v1", Json::Num(speedup)),
+    ]);
+    let path = std::env::var("LMDS_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_pr3.json".to_string());
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote serving bench report to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

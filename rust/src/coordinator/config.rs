@@ -30,6 +30,10 @@ pub struct RunConfig {
     pub hidden: [usize; 3],
     pub max_batch: usize,
     pub max_delay_ms: u64,
+    /// OSE executor replicas in the serving pool (>= 1).
+    pub replicas: usize,
+    /// Drift-monitor sliding window in queries; 0 disables the monitor.
+    pub drift_window: usize,
     pub use_pjrt: bool,
     /// `Some(rows)`: run the pipeline's OSE stage through the bounded-
     /// memory streaming path in chunks of this many rows (0 disables,
@@ -52,6 +56,8 @@ impl Default for RunConfig {
             hidden: [256, 128, 64],
             max_batch: 64,
             max_delay_ms: 2,
+            replicas: 1,
+            drift_window: 256,
             use_pjrt: true,
             stream_chunk: None,
         }
@@ -123,6 +129,13 @@ impl RunConfig {
         if let Some(v) = json.get("max_delay_ms").and_then(Json::as_f64) {
             self.max_delay_ms = v as u64;
         }
+        if let Some(v) = usize_of(json, "replicas")? {
+            anyhow::ensure!(v >= 1, "config: replicas must be >= 1");
+            self.replicas = v;
+        }
+        if let Some(v) = usize_of(json, "drift_window")? {
+            self.drift_window = v;
+        }
         if let Some(v) = json.get("use_pjrt").and_then(Json::as_bool) {
             self.use_pjrt = v;
         }
@@ -157,6 +170,14 @@ impl RunConfig {
         }
         if args.get("seed").is_some() {
             self.seed = args.u64("seed")?;
+        }
+        if args.get("replicas").is_some() {
+            let v = args.usize("replicas")?;
+            anyhow::ensure!(v >= 1, "--replicas must be >= 1");
+            self.replicas = v;
+        }
+        if args.get("drift-window").is_some() {
+            self.drift_window = args.usize("drift-window")?;
         }
         if args.flag("no-pjrt") {
             self.use_pjrt = false;
@@ -197,8 +218,18 @@ impl RunConfig {
         BatcherConfig {
             max_batch: self.max_batch,
             max_delay: Duration::from_millis(self.max_delay_ms),
+            replicas: self.replicas,
             ..Default::default()
         }
+    }
+
+    /// Drift monitor settings; `None` when `drift_window` is 0 (disabled).
+    pub fn drift(&self) -> Option<crate::coordinator::stream::DriftConfig> {
+        (self.drift_window > 0).then(|| crate::coordinator::stream::DriftConfig {
+            window: self.drift_window,
+            calibration: self.drift_window,
+            ..Default::default()
+        })
     }
 }
 
@@ -274,5 +305,36 @@ mod tests {
         assert_eq!(p.landmarks, cfg.landmarks);
         let b = cfg.batcher();
         assert_eq!(b.max_batch, cfg.max_batch);
+        assert_eq!(b.replicas, cfg.replicas);
+    }
+
+    #[test]
+    fn replicas_and_drift_window_round_trip() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.replicas, 1);
+        cfg.apply_json(
+            &Json::parse(r#"{"replicas": 4, "drift_window": 128}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.replicas, 4);
+        assert_eq!(cfg.batcher().replicas, 4);
+        assert_eq!(cfg.drift().unwrap().window, 128);
+
+        let specs = vec![
+            OptSpec { name: "replicas", help: "", takes_value: true, default: None },
+            OptSpec { name: "drift-window", help: "", takes_value: true, default: None },
+        ];
+        let argv: Vec<String> = ["--replicas", "2", "--drift-window", "0"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&argv, &specs).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.replicas, 2);
+        assert!(cfg.drift().is_none(), "0 disables the drift monitor");
+        // replicas = 0 rejected
+        assert!(cfg
+            .apply_json(&Json::parse(r#"{"replicas": 0}"#).unwrap())
+            .is_err());
     }
 }

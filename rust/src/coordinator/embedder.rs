@@ -18,7 +18,7 @@ use crate::mds::dissimilarity::{cross_matrix, full_matrix};
 use crate::mds::landmarks::select_landmarks;
 use crate::mds::{LandmarkMethod, LsmdsConfig, Matrix};
 use crate::nn::MlpShape;
-use crate::ose::OseMethod;
+use crate::ose::{OseMethod, OseMethodFactory};
 use crate::runtime::{Backend, ComputeBackend};
 use crate::strdist::Dissimilarity;
 use crate::util::prng::Rng;
@@ -104,6 +104,10 @@ pub struct PipelineResult {
     pub coords: Matrix,
     /// The OSE method, ready to map future streaming queries.
     pub method: Box<dyn OseMethod>,
+    /// Replica factory over the same trained state: hand this to
+    /// [`crate::coordinator::Server`] to serve with `R` independent,
+    /// restartable executor replicas.
+    pub factory: std::sync::Arc<dyn OseMethodFactory>,
     /// Normalised stress of the landmark configuration.
     pub landmark_stress: f64,
     pub timings: PipelineTimings,
@@ -210,9 +214,10 @@ pub fn embed_dataset<T: Sync + ?Sized>(
         }
     };
 
-    // 4. build the OSE method
+    // 4. build the OSE method (as a replica factory, so serving can run
+    //    and restart R independent instances over the same trained state)
     let t0 = std::time::Instant::now();
-    let mut method: Box<dyn OseMethod> = match cfg.backend {
+    let factory: std::sync::Arc<dyn OseMethodFactory> = match cfg.backend {
         OseBackend::Nn => {
             // Training set (paper Sec. 4.2: distance rows of ALL N points):
             // landmarks carry exact LSMDS coordinates; when bootstrapping,
@@ -252,12 +257,13 @@ pub fn embed_dataset<T: Sync + ?Sized>(
                 report.wall_s
             );
             timings.train_s = report.wall_s;
-            Box::new(BackendNn::new(backend.clone(), params))
+            BackendNn::replica_factory(backend.clone(), params)
         }
         OseBackend::Opt => {
-            Box::new(BackendOpt::with_defaults(backend.clone(), landmark_config.clone()))
+            BackendOpt::replica_factory(backend.clone(), landmark_config.clone())
         }
     };
+    let mut method = factory.build();
 
     // 5. OSE the remaining points, assembling the full coordinate table
     //    (step 6) as results arrive
@@ -307,6 +313,7 @@ pub fn embed_dataset<T: Sync + ?Sized>(
         landmark_config,
         coords,
         method,
+        factory,
         landmark_stress,
         timings,
     })

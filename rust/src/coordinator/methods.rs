@@ -5,11 +5,13 @@
 //! AOT artifacts, padding/chunking and device-resident operand reuse
 //! handled inside the backend.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::mds::Matrix;
 use crate::nn::MlpParams;
-use crate::ose::OseMethod;
+use crate::ose::{factory_fn, OseMethod, OseMethodFactory};
 use crate::runtime::{Backend, ComputeBackend};
 
 /// The neural-network OSE (paper Sec. 4.2): a trained MLP maps a row of
@@ -22,6 +24,15 @@ pub struct BackendNn {
 impl BackendNn {
     pub fn new(backend: Backend, params: MlpParams) -> Self {
         Self { backend, params }
+    }
+
+    /// Replica factory for the serving executor pool: every `build()`
+    /// yields an independent instance over the same trained parameters.
+    pub fn replica_factory(
+        backend: Backend,
+        params: MlpParams,
+    ) -> Arc<dyn OseMethodFactory> {
+        factory_fn(move || Box::new(Self::new(backend.clone(), params.clone())))
     }
 }
 
@@ -76,6 +87,16 @@ impl BackendOpt {
     pub fn with_defaults(backend: Backend, landmarks: Matrix) -> Self {
         Self { backend, landmarks, total_steps: 200, lr: None, rel_tol: 1e-7 }
     }
+
+    /// Replica factory for the serving executor pool (default budget).
+    pub fn replica_factory(
+        backend: Backend,
+        landmarks: Matrix,
+    ) -> Arc<dyn OseMethodFactory> {
+        factory_fn(move || {
+            Box::new(Self::with_defaults(backend.clone(), landmarks.clone()))
+        })
+    }
 }
 
 impl OseMethod for BackendOpt {
@@ -114,8 +135,11 @@ impl OseMethod for BackendOpt {
             if self.rel_tol > 0.0 && !obj.is_empty() {
                 let mean =
                     obj.iter().map(|o| *o as f64).sum::<f64>() / obj.len() as f64;
+                // relative ABSOLUTE change, mirroring `embed_point`: an
+                // objective increase is not convergence
                 if prev.is_finite()
-                    && (prev - mean) / prev.max(1e-30) < self.rel_tol * steps as f64
+                    && (prev - mean).abs() / prev.abs().max(1e-30)
+                        < self.rel_tol * steps as f64
                 {
                     break;
                 }

@@ -1,26 +1,70 @@
-//! Serving metrics: request counters, latency distributions, queue gauges.
-//! Shared (`Arc<Metrics>`) between the frontend, batcher and executor.
+//! Serving metrics: request counters, bounded latency distributions, and
+//! the replica-supervision / drift-monitor surface. Shared (`Arc<Metrics>`)
+//! between the frontend, the executor replicas and observers.
+//!
+//! Every distribution here is FIXED-SIZE: log-bucketed histograms plus a
+//! bounded reservoir ([`BoundedDist`]) replace the old unbounded
+//! `Mutex<Vec<f64>>` sample vectors, which leaked memory for the lifetime
+//! of any long-running deployment. `footprint()` exposes the retained slot
+//! count so tests can pin memory flatness under million-request soaks.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-use crate::util::stats::{percentiles, Running};
+use crate::util::stats::{BoundedDist, Running};
 
-#[derive(Default)]
+use super::stream::DriftStatus;
+
+/// Drift status encoding for the atomic cell: 0 = no monitor attached.
+const DRIFT_NONE: u8 = 0;
+const DRIFT_WARMUP: u8 = 1;
+const DRIFT_HEALTHY: u8 = 2;
+const DRIFT_DRIFTED: u8 = 3;
+
 pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
     pub batches: AtomicU64,
     pub batched_points: AtomicU64,
-    /// per-request end-to-end latency samples (seconds)
-    latency: Mutex<Vec<f64>>,
-    /// per-batch execute latency (seconds)
-    batch_latency: Mutex<Vec<f64>>,
-    /// distance-computation latency (seconds)
-    dist_latency: Mutex<Vec<f64>>,
+    /// Batches whose embed panicked (the whole batch got error replies).
+    pub panics: AtomicU64,
+    /// Replicas rebuilt from the factory after a panic.
+    pub replica_restarts: AtomicU64,
+    /// Executor replica count (gauge, set at server start).
+    replicas: AtomicU64,
+    drift_status: AtomicU8,
+    /// Times the drift monitor reported `Drifted` (re-embed signals).
+    drift_signals: AtomicU64,
+    /// per-request end-to-end latency (seconds), bounded
+    latency: Mutex<BoundedDist>,
+    /// per-batch execute latency (seconds), bounded
+    batch_latency: Mutex<BoundedDist>,
+    /// distance-computation latency (seconds), bounded
+    dist_latency: Mutex<BoundedDist>,
     batch_sizes: Mutex<Running>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_points: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            replica_restarts: AtomicU64::new(0),
+            replicas: AtomicU64::new(1),
+            drift_status: AtomicU8::new(DRIFT_NONE),
+            drift_signals: AtomicU64::new(0),
+            latency: Mutex::new(BoundedDist::for_latency(0x1a7)),
+            batch_latency: Mutex::new(BoundedDist::for_latency(0xba7c)),
+            dist_latency: Mutex::new(BoundedDist::for_latency(0xd157)),
+            batch_sizes: Mutex::new(Running::new()),
+        }
+    }
 }
 
 impl Metrics {
@@ -52,25 +96,71 @@ impl Metrics {
         self.dist_latency.lock().unwrap().push(d.as_secs_f64());
     }
 
-    pub fn snapshot(&self) -> Snapshot {
-        let lat = self.latency.lock().unwrap().clone();
-        let (p50, p95, p99) = if lat.is_empty() {
-            (f64::NAN, f64::NAN, f64::NAN)
-        } else {
-            percentiles(&lat)
+    pub fn record_panic(&self) {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_replica_restart(&self) {
+        self.replica_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn set_replicas(&self, n: usize) {
+        self.replicas.store(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_drift(&self, status: DriftStatus) {
+        let enc = match status {
+            DriftStatus::Warmup => DRIFT_WARMUP,
+            DriftStatus::Healthy => DRIFT_HEALTHY,
+            DriftStatus::Drifted => DRIFT_DRIFTED,
         };
-        let batch_lat = self.batch_latency.lock().unwrap().clone();
+        self.drift_status.store(enc, Ordering::Relaxed);
+        if status == DriftStatus::Drifted {
+            self.drift_signals.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Total retained sample slots across every distribution — constant
+    /// after construction, whatever the request volume (the bounded-memory
+    /// guarantee the soak test pins).
+    pub fn footprint(&self) -> usize {
+        self.latency.lock().unwrap().footprint()
+            + self.batch_latency.lock().unwrap().footprint()
+            + self.dist_latency.lock().unwrap().footprint()
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let lat = self.latency.lock().unwrap();
+        let (p50, p95, p99) = lat.percentiles();
+        let mean_latency_s = lat.mean();
+        drop(lat);
+        let mean_batch_exec_s = self.batch_latency.lock().unwrap().mean();
+        let mean_dist_s = self.dist_latency.lock().unwrap().mean();
         let sizes = self.batch_sizes.lock().unwrap().clone();
+        let drift_status = match self.drift_status.load(Ordering::Relaxed) {
+            DRIFT_WARMUP => Some(DriftStatus::Warmup),
+            DRIFT_HEALTHY => Some(DriftStatus::Healthy),
+            DRIFT_DRIFTED => Some(DriftStatus::Drifted),
+            _ => None,
+        };
         Snapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            replica_restarts: self.replica_restarts.load(Ordering::Relaxed),
+            replicas: self.replicas.load(Ordering::Relaxed),
             p50_s: p50,
             p95_s: p95,
             p99_s: p99,
+            mean_latency_s,
             mean_batch_size: sizes.mean(),
-            mean_batch_exec_s: crate::util::stats::mean(&batch_lat),
+            mean_batch_exec_s,
+            mean_dist_s,
+            drift_status,
+            drift_signals: self.drift_signals.load(Ordering::Relaxed),
+            metrics_footprint: self.footprint(),
         }
     }
 }
@@ -81,19 +171,37 @@ pub struct Snapshot {
     pub completed: u64,
     pub failed: u64,
     pub batches: u64,
+    pub panics: u64,
+    pub replica_restarts: u64,
+    pub replicas: u64,
     pub p50_s: f64,
     pub p95_s: f64,
     pub p99_s: f64,
+    pub mean_latency_s: f64,
     pub mean_batch_size: f64,
     pub mean_batch_exec_s: f64,
+    pub mean_dist_s: f64,
+    /// None when no drift monitor is attached to the server.
+    pub drift_status: Option<DriftStatus>,
+    /// Cumulative count of `Drifted` observations (re-embed signals).
+    pub drift_signals: u64,
+    /// Retained metric sample slots (constant — bounded-memory guarantee).
+    pub metrics_footprint: usize,
 }
 
 impl Snapshot {
     pub fn report(&self) -> String {
+        let drift = match self.drift_status {
+            None => String::new(),
+            Some(s) => {
+                format!(" drift={} signals={}", s.as_str(), self.drift_signals)
+            }
+        };
         format!(
             "requests={} completed={} failed={} batches={} \
              latency p50={:.3}ms p95={:.3}ms p99={:.3}ms \
-             mean_batch={:.1} mean_exec={:.3}ms",
+             mean_batch={:.1} mean_exec={:.3}ms \
+             replicas={} panics={} restarts={}{drift}",
             self.requests,
             self.completed,
             self.failed,
@@ -103,6 +211,9 @@ impl Snapshot {
             self.p99_s * 1e3,
             self.mean_batch_size,
             self.mean_batch_exec_s * 1e3,
+            self.replicas,
+            self.panics,
+            self.replica_restarts,
         )
     }
 }
@@ -129,11 +240,63 @@ mod tests {
         assert!((s.mean_batch_size - 24.0).abs() < 1e-9);
         assert!(s.p50_s > 0.0 && s.p50_s <= s.p99_s);
         assert!(s.report().contains("requests=100"));
+        assert_eq!(s.panics, 0);
+        assert_eq!(s.drift_status, None);
     }
 
     #[test]
     fn empty_snapshot_is_nan_not_panic() {
         let s = Metrics::new().snapshot();
         assert!(s.p50_s.is_nan());
+    }
+
+    #[test]
+    fn million_request_soak_keeps_metrics_memory_flat() {
+        let m = Metrics::new();
+        // warm up, then pin the footprint across a 1M-request soak — the
+        // old Vec-based metrics grew by 8 bytes per request forever
+        for i in 0..1_000u64 {
+            m.record_request();
+            m.record_completed(Duration::from_micros(50 + (i % 997)));
+            m.record_dist(Duration::from_nanos(200 + (i % 101)));
+        }
+        let baseline = m.footprint();
+        for i in 0..1_000_000u64 {
+            m.record_request();
+            m.record_completed(Duration::from_micros(50 + (i % 997)));
+            if i % 8 == 0 {
+                m.record_batch(8, Duration::from_micros(300));
+            }
+            if i % 3 == 0 {
+                m.record_dist(Duration::from_nanos(200 + (i % 101)));
+            }
+        }
+        assert_eq!(m.footprint(), baseline, "metrics memory grew under soak");
+        let s = m.snapshot();
+        assert_eq!(s.completed, 1_001_000);
+        assert!(s.p50_s > 0.0 && s.p50_s <= s.p95_s && s.p95_s <= s.p99_s);
+        // percentiles stay in the pushed range (~50..1050µs)
+        assert!(s.p99_s < 2e-3, "p99 {}", s.p99_s);
+        assert_eq!(s.metrics_footprint, baseline);
+    }
+
+    #[test]
+    fn drift_and_supervision_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.set_replicas(4);
+        m.record_panic();
+        m.record_replica_restart();
+        m.record_drift(DriftStatus::Healthy);
+        assert_eq!(m.snapshot().drift_status, Some(DriftStatus::Healthy));
+        m.record_drift(DriftStatus::Drifted);
+        m.record_drift(DriftStatus::Drifted);
+        let s = m.snapshot();
+        assert_eq!(s.replicas, 4);
+        assert_eq!(s.panics, 1);
+        assert_eq!(s.replica_restarts, 1);
+        assert_eq!(s.drift_status, Some(DriftStatus::Drifted));
+        assert_eq!(s.drift_signals, 2);
+        assert!(s.report().contains("restarts=1"));
+        assert!(s.report().contains("drift=drifted"));
     }
 }

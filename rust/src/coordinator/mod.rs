@@ -15,6 +15,6 @@ pub use config::RunConfig;
 pub use embedder::{embed_dataset, OseBackend, PipelineConfig, PipelineResult};
 pub use methods::{BackendNn, BackendOpt};
 pub use metrics::{Metrics, Snapshot};
-pub use server::{BatcherConfig, QueryResult, Server, ServerHandle};
+pub use server::{BatcherConfig, DriftHook, QueryResult, Server, ServerHandle};
 pub use stream::{DriftConfig, DriftMonitor, DriftStatus};
 pub use trainer::{train_backend, train_rust, TrainConfig, TrainReport};

@@ -27,6 +27,17 @@ pub enum DriftStatus {
     Drifted,
 }
 
+impl DriftStatus {
+    /// Stable lowercase name for logs, metric reports and JSON.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DriftStatus::Warmup => "warmup",
+            DriftStatus::Healthy => "healthy",
+            DriftStatus::Drifted => "drifted",
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct DriftConfig {
     /// Sliding-window length (queries).

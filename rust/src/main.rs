@@ -14,7 +14,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use lmds_ose::coordinator::{embed_dataset, BatcherConfig, RunConfig, Server};
+use lmds_ose::coordinator::{embed_dataset, BatcherConfig, DriftHook, RunConfig, Server};
 use lmds_ose::data::{Geco, GecoConfig};
 use lmds_ose::eval::figures;
 use lmds_ose::eval::protocol::{self, Scale};
@@ -217,6 +217,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     specs.push(OptSpec { name: "n", help: "landmark-training dataset size", takes_value: true, default: Some("2000") });
     specs.push(OptSpec { name: "queries", help: "number of workload queries", takes_value: true, default: Some("10000") });
     specs.push(OptSpec { name: "clients", help: "concurrent client threads", takes_value: true, default: Some("4") });
+    specs.push(OptSpec { name: "replicas", help: "OSE executor replicas in the serving pool (panic-isolated, restartable)", takes_value: true, default: None });
+    specs.push(OptSpec { name: "drift-window", help: "drift-monitor sliding window in queries (0 = disabled)", takes_value: true, default: None });
     let args = Args::parse(argv, &specs)?;
     if args.flag("help") {
         print!("{}", usage("serve", "Streaming OSE service + query workload", &specs));
@@ -243,11 +245,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 
     let metric_arc: Arc<dyn lmds_ose::strdist::Dissimilarity<str> + Send + Sync> =
         Arc::new(lmds_ose::strdist::Levenshtein);
-    let server = Server::start(
+    let drift = cfg.drift().map(|dcfg| DriftHook {
+        landmark_config: result.landmark_config.clone(),
+        cfg: dcfg,
+    });
+    let server = Server::start_strings(
         landmark_names,
         metric_arc,
-        result.method,
+        result.factory.clone(),
         BatcherConfig { frontend_threads: clients, ..cfg.batcher() },
+        drift,
     );
     let h = server.handle();
 

@@ -36,6 +36,10 @@ pub fn random_landmarks(rng: &mut Rng, n: usize, l: usize) -> Vec<usize> {
 /// Farthest point sampling: start from a random point, then repeatedly add
 /// the point whose minimum distance to the selected set is largest.
 /// O(L·N) metric evaluations, O(N) memory.
+///
+/// Always returns exactly `l` distinct indices (duplicate objects that
+/// collapse the FPS picks are topped up from the unselected indices);
+/// `l > n` is a caller error and panics via the assert below.
 pub fn fps_landmarks<T: Sync + ?Sized>(
     rng: &mut Rng,
     objects: &[&T],
@@ -73,18 +77,30 @@ pub fn fps_landmarks<T: Sync + ?Sized>(
     }
     selected.sort_unstable();
     selected.dedup();
-    // ties on duplicate objects can collapse; top up randomly
-    let mut extra = 0;
-    while selected.len() < l {
-        let cand = rng.index(n);
-        if !selected.contains(&cand) {
-            selected.push(cand);
+    // Ties on duplicate objects can collapse FPS picks. Top up with a
+    // deterministic scan of the unselected indices starting at a random
+    // offset: since l <= n is asserted above there are always enough
+    // distinct indices, so this returns EXACTLY l landmarks (the old
+    // random-retry top-up could bail after 10n misses and silently return
+    // fewer, starving the OSE method of its expected input width).
+    if selected.len() < l {
+        let mut chosen = vec![false; n];
+        for &i in &selected {
+            chosen[i] = true;
         }
-        extra += 1;
-        if extra > 10 * n {
-            break;
+        let offset = rng.index(n);
+        for step in 0..n {
+            if selected.len() == l {
+                break;
+            }
+            let cand = (offset + step) % n;
+            if !chosen[cand] {
+                chosen[cand] = true;
+                selected.push(cand);
+            }
         }
     }
+    debug_assert_eq!(selected.len(), l);
     selected.sort_unstable();
     selected
 }
@@ -210,6 +226,23 @@ mod tests {
         let mut rng = Rng::new(5);
         let idx = fps_landmarks(&mut rng, &objs, 3, &Levenshtein);
         assert_eq!(idx.len(), 3);
+    }
+
+    #[test]
+    fn fps_returns_exactly_l_even_when_all_objects_identical() {
+        // worst case for the top-up: every FPS pick collapses onto one
+        // index, so l-1 landmarks must come from the deterministic scan
+        for l in [1usize, 7, 16] {
+            let names = vec!["same"; 16];
+            let objs: Vec<&str> = names.clone();
+            for seed in 0..20 {
+                let mut rng = Rng::new(seed);
+                let idx = fps_landmarks(&mut rng, &objs, l, &Levenshtein);
+                assert_eq!(idx.len(), l, "l={l} seed={seed}: {idx:?}");
+                assert!(idx.windows(2).all(|w| w[0] < w[1]), "distinct+sorted");
+                assert!(idx.iter().all(|&i| i < 16));
+            }
+        }
     }
 
     #[test]

@@ -32,6 +32,35 @@ pub trait OseMethod: Send {
     fn name(&self) -> &'static str;
 }
 
+/// Builds fresh, independent [`OseMethod`] replicas for the replicated
+/// serving executor pool: each executor thread owns one replica, and a
+/// replica whose `embed` panics is discarded and rebuilt from the factory
+/// (its internal state may be poisoned mid-batch).
+///
+/// Implemented for free by any `Fn() -> Box<dyn OseMethod>` closure, so a
+/// cloneable method becomes a factory with
+/// `factory_fn(move || Box::new(method.clone()))`.
+pub trait OseMethodFactory: Send + Sync {
+    fn build(&self) -> Box<dyn OseMethod>;
+}
+
+impl<F> OseMethodFactory for F
+where
+    F: Fn() -> Box<dyn OseMethod> + Send + Sync,
+{
+    fn build(&self) -> Box<dyn OseMethod> {
+        self()
+    }
+}
+
+/// Wrap a closure as a shareable replica factory.
+pub fn factory_fn<F>(f: F) -> std::sync::Arc<dyn OseMethodFactory>
+where
+    F: Fn() -> Box<dyn OseMethod> + Send + Sync + 'static,
+{
+    std::sync::Arc::new(f)
+}
+
 /// Pure-Rust optimisation method (the serial R-protocol baseline).
 pub struct RustOptimise {
     pub landmarks: Matrix,
@@ -123,6 +152,23 @@ mod tests {
             assert_eq!((y.rows, y.cols), (5, 3), "{}", m.name());
             assert!(y.data.iter().all(|v| v.is_finite()));
         }
+    }
+
+    #[test]
+    fn factory_builds_independent_replicas() {
+        let mut rng = Rng::new(3);
+        let lm = Matrix::random_normal(&mut rng, 10, 2, 1.0);
+        let factory = factory_fn(move || {
+            Box::new(RustOptimise { landmarks: lm.clone(), cfg: OseOptConfig::default() })
+                as Box<dyn OseMethod>
+        });
+        let mut a = factory.build();
+        let mut b = factory.build();
+        let deltas = Matrix::from_vec(1, 10, vec![1.0; 10]);
+        let ya = a.embed(&deltas).unwrap();
+        let yb = b.embed(&deltas).unwrap();
+        assert_eq!(ya.data, yb.data, "replicas must start from identical state");
+        assert_eq!(a.landmarks(), 10);
     }
 
     #[test]

@@ -59,6 +59,11 @@ pub struct OsePoint {
     /// Final Eq.-2 objective value.
     pub objective: f64,
     pub iters: usize,
+    /// True when the run stopped because the relative objective change
+    /// dropped below `rel_tol`; false when it exhausted `max_iters`.
+    /// Callers can use this to distinguish a converged embedding from a
+    /// stalled one that merely ran out of budget.
+    pub converged: bool,
 }
 
 /// Embed one new point. `y0 = None` uses the paper's all-zeros initial
@@ -80,11 +85,16 @@ pub fn embed_point(
     let mut prev = f64::INFINITY;
     let mut obj = 0.0;
     let mut iters = 0;
+    let mut converged = false;
     for it in 0..cfg.max_iters {
         let (o, grad) = objective_and_grad(lm, delta, &y);
         obj = o;
         iters = it + 1;
-        if prev.is_finite() && (prev - o) / prev.max(1e-30) < cfg.rel_tol {
+        // relative ABSOLUTE change: a (numerically possible) objective
+        // increase is not convergence — the old signed test treated any
+        // increase as "improvement below tol" and stopped on the spot
+        if prev.is_finite() && (prev - o).abs() / prev.abs().max(1e-30) < cfg.rel_tol {
+            converged = true;
             break;
         }
         prev = o;
@@ -92,7 +102,7 @@ pub fn embed_point(
             y[c] -= (lr * grad[c]) as f32;
         }
     }
-    OsePoint { coords: y, objective: obj, iters }
+    OsePoint { coords: y, objective: obj, iters, converged }
 }
 
 /// Embed a batch serially (the R protocol: "both methods map a single
@@ -226,5 +236,33 @@ mod tests {
         assert_ne!(from_far.coords, from_zero.coords);
         // and iters reports the single step taken
         assert_eq!(from_far.iters, 1);
+    }
+
+    #[test]
+    fn converged_flag_distinguishes_stall_from_success() {
+        let lm = landmarks(9, 30, 3);
+        // non-realisable deltas: the objective plateaus at a positive local
+        // minimum, so the relative change genuinely vanishes there
+        let delta = vec![1.0f32; 30];
+        let ok = embed_point(&lm, &delta, None, &OseOptConfig {
+            max_iters: 20_000,
+            rel_tol: 1e-8,
+        });
+        assert!(ok.converged, "should converge (iters {})", ok.iters);
+        assert!(ok.iters < 20_000);
+        // a starved budget exhausts without meeting the tolerance
+        let starved = embed_point(&lm, &delta, None, &OseOptConfig {
+            max_iters: 2,
+            rel_tol: 1e-12,
+        });
+        assert!(!starved.converged);
+        assert_eq!(starved.iters, 2);
+        // rel_tol = 0 disables the stop rule entirely (never "converged")
+        let full = embed_point(&lm, &delta, None, &OseOptConfig {
+            max_iters: 50,
+            rel_tol: 0.0,
+        });
+        assert!(!full.converged);
+        assert_eq!(full.iters, 50);
     }
 }

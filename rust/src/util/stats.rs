@@ -136,6 +136,192 @@ impl Histogram {
     }
 }
 
+/// Log-bucketed histogram over `(0, +inf)` with a fixed bucket count set at
+/// construction — the bounded-memory backbone of the serving metrics. Values
+/// below `lo` clamp into the first bucket, values at or above the top edge
+/// into the last, so nothing is dropped and the footprint never grows.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    lo: f64,
+    per_decade: usize,
+    buckets: Vec<u64>,
+    count: u64,
+}
+
+impl LogHistogram {
+    /// Buckets span `[lo, hi)` with `per_decade` geometric buckets per
+    /// factor of 10 (relative resolution `10^(1/per_decade)`).
+    pub fn new(lo: f64, hi: f64, per_decade: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && per_decade > 0);
+        let decades = (hi / lo).log10();
+        let n = (decades * per_decade as f64).ceil() as usize;
+        Self { lo, per_decade, buckets: vec![0; n.max(1)], count: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        // NaN, non-positive and sub-lo values all clamp into bucket 0
+        let idx = if x.is_nan() || x <= self.lo {
+            0
+        } else {
+            let raw = ((x / self.lo).log10() * self.per_decade as f64).floor();
+            (raw as i64).clamp(0, self.buckets.len() as i64 - 1) as usize
+        };
+        self.buckets[idx] += 1;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Fixed at construction; the histogram never reallocates.
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Geometric midpoint of bucket `i`.
+    pub fn bucket_mid(&self, i: usize) -> f64 {
+        self.lo * 10f64.powf((i as f64 + 0.5) / self.per_decade as f64)
+    }
+
+    /// Quantile estimate: the geometric midpoint of the bucket holding the
+    /// rank-`q` sample. Monotone in `q`; NaN when empty. Relative error is
+    /// bounded by half a bucket width (`10^(1/(2*per_decade))`).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (self.count - 1) as f64).floor() as u64;
+        let mut seen = 0u64;
+        let mut last = 0usize;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c > rank {
+                return self.bucket_mid(i);
+            }
+            seen += c;
+            last = i;
+        }
+        self.bucket_mid(last)
+    }
+}
+
+/// Bounded uniform sample of a stream (Vitter's Algorithm R) with its own
+/// deterministic xorshift64* state — no allocation beyond `cap` slots.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    state: u64,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Self {
+        Self {
+            cap: cap.max(1),
+            seen: 0,
+            samples: Vec::with_capacity(cap.max(1)),
+            state: seed | 1,
+        }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            let j = self.next_u64() % self.seen;
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = x;
+            }
+        }
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+}
+
+/// A bounded-memory sample distribution: Welford moments + log-bucketed
+/// histogram + uniform reservoir. Percentiles are exact while every sample
+/// still fits in the reservoir (`n <= cap`) and histogram-approximate
+/// (bounded relative error) beyond that — memory is fixed either way.
+#[derive(Clone, Debug)]
+pub struct BoundedDist {
+    run: Running,
+    hist: LogHistogram,
+    res: Reservoir,
+}
+
+impl BoundedDist {
+    pub fn new(lo: f64, hi: f64, per_decade: usize, reservoir_cap: usize, seed: u64) -> Self {
+        Self {
+            run: Running::new(),
+            hist: LogHistogram::new(lo, hi, per_decade),
+            res: Reservoir::new(reservoir_cap, seed),
+        }
+    }
+
+    /// Latency-shaped default: 1µs .. 1000s at ~12% relative resolution.
+    pub fn for_latency(seed: u64) -> Self {
+        Self::new(1e-6, 1e3, 20, 512, seed)
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.run.push(x);
+        self.hist.push(x);
+        self.res.push(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.run.count()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.run.mean()
+    }
+
+    /// (p50, p95, p99); NaN when empty.
+    pub fn percentiles(&self) -> (f64, f64, f64) {
+        if self.run.count() == 0 {
+            (f64::NAN, f64::NAN, f64::NAN)
+        } else if self.run.count() <= self.res.capacity() as u64 {
+            percentiles(self.res.samples())
+        } else {
+            (
+                self.hist.quantile(0.50),
+                self.hist.quantile(0.95),
+                self.hist.quantile(0.99),
+            )
+        }
+    }
+
+    /// Retained sample slots — fixed at construction, never grows.
+    pub fn footprint(&self) -> usize {
+        self.hist.bucket_count() + self.res.capacity()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,5 +381,68 @@ mod tests {
             h.push((i % 40) as f64 / 40.0);
         }
         assert_eq!(h.render(20).chars().count(), 20);
+    }
+
+    #[test]
+    fn log_histogram_quantiles_bounded_error() {
+        let mut h = LogHistogram::new(1e-6, 1e3, 20);
+        let n_buckets = h.bucket_count();
+        // 10k samples uniform on [1ms, 100ms) in log space
+        for i in 0..10_000 {
+            let t = i as f64 / 10_000.0;
+            h.push(1e-3 * 10f64.powf(2.0 * t));
+        }
+        assert_eq!(h.count(), 10_000);
+        assert_eq!(h.bucket_count(), n_buckets, "bucket count must not grow");
+        let (p50, p95, p99) = (h.quantile(0.5), h.quantile(0.95), h.quantile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // true p50 of the stream is 1e-3 * 10^1 = 10ms; one bucket is ~12%
+        assert!((p50 / 1e-2).ln().abs() < 0.2, "p50 {p50}");
+        assert!((p99 / 1e-3 / 10f64.powf(1.98)).ln().abs() < 0.2, "p99 {p99}");
+    }
+
+    #[test]
+    fn log_histogram_clamps_extremes_without_panic() {
+        let mut h = LogHistogram::new(1e-6, 1e3, 10);
+        for x in [0.0, -1.0, f64::NAN, 1e-12, 1e12, f64::INFINITY] {
+            h.push(x);
+        }
+        assert_eq!(h.count(), 6);
+        assert!(h.quantile(0.5).is_finite());
+        assert!(LogHistogram::new(1e-6, 1e3, 10).quantile(0.5).is_nan());
+    }
+
+    #[test]
+    fn reservoir_is_bounded_and_representative() {
+        let mut r = Reservoir::new(256, 42);
+        for i in 0..100_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.samples().len(), 256);
+        assert_eq!(r.seen(), 100_000);
+        // a uniform sample of 0..100k has mean ~50k; 3-sigma band for
+        // n=256 is ~±5.4k
+        let m = mean(r.samples());
+        assert!((m - 50_000.0).abs() < 8_000.0, "reservoir mean {m}");
+    }
+
+    #[test]
+    fn bounded_dist_exact_small_then_approx_large() {
+        let mut d = BoundedDist::new(1e-6, 1e3, 20, 100, 7);
+        for i in 0..100 {
+            d.push(1e-3 * (i + 1) as f64); // 1ms..100ms
+        }
+        // all samples retained: percentiles are exact (type-7)
+        let (p50, _, p99) = d.percentiles();
+        assert!((p50 - 0.0505).abs() < 1e-9, "exact p50 {p50}");
+        assert!((p99 - 0.09901).abs() < 1e-4, "exact p99 {p99}");
+        let fp = d.footprint();
+        for i in 0..100_000 {
+            d.push(1e-3 * ((i % 100) + 1) as f64);
+        }
+        assert_eq!(d.footprint(), fp, "footprint grew under load");
+        let (p50, p95, p99) = d.percentiles();
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!((p50 / 0.05).ln().abs() < 0.3, "approx p50 {p50}");
     }
 }

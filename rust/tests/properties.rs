@@ -11,7 +11,7 @@ use lmds_ose::mds::dissimilarity::{cross_matrix, full_matrix};
 use lmds_ose::mds::stress::{point_error, raw_stress, total_error};
 use lmds_ose::mds::Matrix;
 use lmds_ose::nn::{MlpParams, MlpShape};
-use lmds_ose::ose::{embed_point, OseOptConfig, RustNn};
+use lmds_ose::ose::{embed_point, factory_fn, OseOptConfig, RustNn};
 use lmds_ose::strdist::{
     euclidean, levenshtein, DamerauOsa, Dissimilarity, JaroWinkler, Levenshtein, QGram,
     SoundexDist,
@@ -314,16 +314,18 @@ fn server_never_drops_or_duplicates() {
         &MlpShape { input: 16, hidden: [8, 8, 8], output: 3 },
         &mut rng,
     );
-    let server = Server::start(
+    let server = Server::start_strings(
         landmarks,
         Arc::new(Levenshtein),
-        Box::new(RustNn { params }),
+        factory_fn(move || Box::new(RustNn { params: params.clone() })),
         BatcherConfig {
             max_batch: 7, // deliberately not a divisor of the load
             max_delay: Duration::from_millis(1),
             queue_cap: 32, // small: exercises backpressure
             frontend_threads: 3,
+            replicas: 3, // replicated pool must preserve exactly-once too
         },
+        None,
     );
     let sh = server.handle();
     let n = 500;

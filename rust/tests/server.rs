@@ -1,43 +1,54 @@
-//! Integration: the streaming OSE service over the backend-generic NN
-//! method — requests flow frontend -> batcher -> compute backend and back.
-//! Runs on the native backend unconditionally, so CI exercises the whole
-//! serving path without artifacts.
+//! Integration: the replicated streaming OSE service over backend-generic
+//! methods — requests flow frontend -> dispatch queue -> executor replica
+//! pool -> compute backend and back. Runs on the native backend
+//! unconditionally, so CI exercises the whole serving path without
+//! artifacts. Includes the fault-injection suite: a panicking replica must
+//! fail only its own batch, restart from the factory, and leave every
+//! handle answering.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use lmds_ose::coordinator::methods::BackendNn;
 use lmds_ose::coordinator::{BatcherConfig, Server};
 use lmds_ose::data::{Geco, GecoConfig};
+use lmds_ose::mds::Matrix;
 use lmds_ose::nn::{MlpParams, MlpShape};
+use lmds_ose::ose::{factory_fn, OseMethod, OseMethodFactory, RustOptimise};
 use lmds_ose::runtime::Backend;
-use lmds_ose::strdist::Levenshtein;
+use lmds_ose::strdist::{Euclidean, Levenshtein};
 use lmds_ose::util::prng::Rng;
 
-fn start_backend_server(backend: Backend, max_batch: usize) -> Server {
+fn test_params() -> MlpParams {
     let mut rng = Rng::new(31);
-    let mut geco = Geco::new(GecoConfig { seed: 77, ..Default::default() });
-    let landmarks = geco.generate_unique(32);
-    let params = MlpParams::init(
+    MlpParams::init(
         &MlpShape { input: 32, hidden: [32, 16, 8], output: 7 },
         &mut rng,
-    );
-    Server::start(
+    )
+}
+
+fn start_backend_server(backend: Backend, max_batch: usize, replicas: usize) -> Server<str> {
+    let mut geco = Geco::new(GecoConfig { seed: 77, ..Default::default() });
+    let landmarks = geco.generate_unique(32);
+    Server::start_strings(
         landmarks,
         Arc::new(Levenshtein),
-        Box::new(BackendNn::new(backend, params)),
+        BackendNn::replica_factory(backend, test_params()),
         BatcherConfig {
             max_batch,
             max_delay: Duration::from_millis(2),
             queue_cap: 512,
             frontend_threads: 2,
+            replicas,
         },
+        None,
     )
 }
 
 #[test]
 fn backend_service_serves_queries() {
-    let server = start_backend_server(Backend::native(), 8);
+    let server = start_backend_server(Backend::native(), 8, 1);
     let sh = server.handle();
     let mut geco = Geco::new(GecoConfig { seed: 78, ..Default::default() });
     let rxs: Vec<_> = (0..100)
@@ -57,11 +68,11 @@ fn backend_service_serves_queries() {
 
 #[test]
 fn backend_service_batches_and_is_deterministic() {
-    let server = start_backend_server(Backend::native(), 8);
+    let server = start_backend_server(Backend::native(), 8, 4);
     let sh = server.handle();
     // identical queries must give identical coordinates regardless of the
-    // batch they landed in (batch composition must not leak)
-    let rx1: Vec<_> = (0..16).map(|_| sh.query("anna smith".into())).collect();
+    // batch OR the replica they landed in (composition must not leak)
+    let rx1: Vec<_> = (0..16).map(|_| sh.query("anna smith")).collect();
     let first: Vec<Vec<f32>> = rx1
         .into_iter()
         .map(|rx| rx.recv().unwrap().unwrap().coords)
@@ -87,23 +98,20 @@ fn backend_service_batches_and_is_deterministic() {
 fn service_single_query_latency_under_paper_bound() {
     // paper Sec. 6: NN maps a new point in < 1 ms. Measure the steady-state
     // single-query path (batcher delay excluded: use max_delay=0-ish).
-    let mut rng = Rng::new(41);
     let mut geco = Geco::new(GecoConfig { seed: 79, ..Default::default() });
     let landmarks = geco.generate_unique(32);
-    let params = MlpParams::init(
-        &MlpShape { input: 32, hidden: [32, 16, 8], output: 7 },
-        &mut rng,
-    );
-    let server = Server::start(
+    let server = Server::start_strings(
         landmarks,
         Arc::new(Levenshtein),
-        Box::new(BackendNn::new(Backend::native(), params)),
+        BackendNn::replica_factory(Backend::native(), test_params()),
         BatcherConfig {
             max_batch: 1,
             max_delay: Duration::from_micros(100),
             queue_cap: 64,
             frontend_threads: 1,
+            replicas: 1,
         },
+        None,
     );
     let sh = server.handle();
     // warm caches and the thread pool
@@ -112,7 +120,7 @@ fn service_single_query_latency_under_paper_bound() {
     }
     let mut lat = Vec::new();
     for i in 0..50 {
-        let r = sh.query_sync(&format!("query {i}")).unwrap();
+        let r = sh.query_sync(format!("query {i}")).unwrap();
         lat.push(r.latency.as_secs_f64());
     }
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -120,5 +128,179 @@ fn service_single_query_latency_under_paper_bound() {
     // generous CI bound; the bench harness reports the tight number
     assert!(p50 < 0.05, "p50 single-query latency {p50}s");
     drop(sh);
+    server.shutdown();
+}
+
+/// An OSE method that panics whenever a delta row carries the poison
+/// marker (NaN in column 0) — the fault-injection vehicle.
+struct PanickyNn {
+    inner: BackendNn,
+}
+
+impl OseMethod for PanickyNn {
+    fn embed(&mut self, deltas: &Matrix) -> anyhow::Result<Matrix> {
+        for r in 0..deltas.rows {
+            if deltas.at(r, 0).is_nan() {
+                panic!("poison batch (injected fault)");
+            }
+        }
+        self.inner.embed(deltas)
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn landmarks(&self) -> usize {
+        self.inner.landmarks()
+    }
+
+    fn name(&self) -> &'static str {
+        "panicky-nn"
+    }
+}
+
+#[test]
+fn panicking_replica_fails_only_its_batch_and_restarts() {
+    let builds = Arc::new(AtomicUsize::new(0));
+    let factory: Arc<dyn OseMethodFactory> = {
+        let builds = Arc::clone(&builds);
+        let params = test_params();
+        factory_fn(move || {
+            builds.fetch_add(1, Ordering::SeqCst);
+            Box::new(PanickyNn {
+                inner: BackendNn::new(Backend::native(), params.clone()),
+            })
+        })
+    };
+    let mut geco = Geco::new(GecoConfig { seed: 80, ..Default::default() });
+    let landmarks = geco.generate_unique(32);
+    let server = Server::start_strings(
+        landmarks,
+        Arc::new(Levenshtein),
+        Arc::clone(&factory),
+        BatcherConfig {
+            max_batch: 4,
+            max_delay: Duration::from_millis(1),
+            queue_cap: 256,
+            frontend_threads: 2,
+            replicas: 4,
+        },
+        None,
+    );
+    let h = server.handle();
+    let builds_before_poison = builds.load(Ordering::SeqCst);
+    assert_eq!(builds_before_poison, 4, "one replica per executor");
+
+    // a healthy warmup round on every handle
+    for i in 0..8 {
+        assert!(h.query_sync(format!("warm {i}")).is_ok());
+    }
+
+    // inject the poison batch: only ITS callers may see errors
+    let mut poison = vec![1.0f32; 32];
+    poison[0] = f32::NAN;
+    let rx = h.query_delta(poison).unwrap();
+    let err = rx.recv().unwrap();
+    assert!(err.is_err(), "poisoned batch must get an error reply");
+    let msg = err.unwrap_err();
+    assert!(
+        msg.contains("panicked") && msg.contains("poison"),
+        "caller sees the panic reason: {msg}"
+    );
+    // the restart is recorded just after the error replies go out; give the
+    // executor a bounded moment to finish rebuilding before asserting
+    let t0 = std::time::Instant::now();
+    while h.metrics.snapshot().replica_restarts < 1 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "replica restart never recorded"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // the service keeps answering on every handle, from all client threads
+    let handles: Vec<_> = (0..4).map(|_| h.clone()).collect();
+    std::thread::scope(|scope| {
+        for (c, hc) in handles.iter().enumerate() {
+            scope.spawn(move || {
+                for i in 0..25 {
+                    let r = hc.query_sync(format!("after poison {c}-{i}"));
+                    assert!(r.is_ok(), "query after panic failed: {r:?}");
+                }
+            });
+        }
+    });
+
+    let snap = h.metrics.snapshot();
+    assert_eq!(snap.panics, 1, "exactly one poisoned batch");
+    assert_eq!(snap.replica_restarts, 1, "the poisoned replica restarted");
+    assert_eq!(
+        builds.load(Ordering::SeqCst),
+        builds_before_poison + 1,
+        "restart went through the factory"
+    );
+    assert_eq!(snap.failed, 1, "only the poisoned batch failed");
+    assert_eq!(snap.completed, 8 + 100);
+    assert_eq!(snap.replicas, 4);
+    // bounded-memory guarantee holds through the fault path too
+    assert_eq!(snap.metrics_footprint, h.metrics.footprint());
+    drop(handles);
+    drop(h);
+    server.shutdown();
+}
+
+#[test]
+fn numeric_vector_workload_serves_through_the_generic_path() {
+    // the paper's serving story for non-string objects: landmark vectors
+    // with Euclidean dissimilarity, optimisation OSE — same Server type
+    let mut rng = Rng::new(9);
+    let l = 24;
+    let k = 3;
+    let landmark_config = Matrix::random_normal(&mut rng, l, k, 1.0);
+    let landmark_vecs: Vec<Box<[f32]>> = (0..l)
+        .map(|i| landmark_config.row(i).to_vec().into_boxed_slice())
+        .collect();
+    let lm = landmark_config.clone();
+    let server: Server<[f32]> = Server::start(
+        landmark_vecs,
+        Arc::new(Euclidean),
+        factory_fn(move || {
+            Box::new(RustOptimise {
+                landmarks: lm.clone(),
+                // generous budget: the landmark self-query check below
+                // needs tight convergence, not the serving default
+                cfg: lmds_ose::ose::OseOptConfig { max_iters: 3000, rel_tol: 1e-12 },
+            })
+        }),
+        BatcherConfig { replicas: 2, ..Default::default() },
+        None,
+    );
+    let h = server.handle();
+    // query AT a landmark: the optimiser must map it near that landmark
+    let target: Vec<f32> = landmark_config.row(5).to_vec();
+    let r = h.query_sync(target.clone()).unwrap();
+    assert_eq!(r.coords.len(), k);
+    let err: f32 = r
+        .coords
+        .iter()
+        .zip(landmark_config.row(5))
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(err < 0.25, "landmark query mapped {err} away from itself");
+    // and a batch of random vector queries all complete
+    let rxs: Vec<_> = (0..20)
+        .map(|i| {
+            let q: Vec<f32> = (0..k).map(|c| (i + c) as f32 * 0.1).collect();
+            h.query(q)
+        })
+        .collect();
+    for rx in rxs {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    let snap = h.metrics.snapshot();
+    assert_eq!(snap.completed, 21);
+    assert_eq!(snap.failed, 0);
+    drop(h);
     server.shutdown();
 }
