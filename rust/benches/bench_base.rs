@@ -1,0 +1,182 @@
+//! Base-solver benchmark: monolithic LSMDS vs the divide-and-conquer
+//! solver (partitioned parallel blocks + Procrustes stitching) at
+//! L in {2k, 10k, 50k}, with solution quality (sampled normalised stress)
+//! reported next to wall-clock so speed never hides a broken stitch.
+//!
+//!     cargo bench --bench bench_base
+//!
+//! Env knobs:
+//!   LMDS_BENCH_QUICK=1        CI smoke: L in {2k, 10k}, fewer iterations,
+//!                             one sample per subject
+//!   LMDS_BENCH_JSON=path.json report path (default BENCH_pr4.json)
+//!
+//! The 50k point (full mode only) runs the divide solver alone from a
+//! matrix-free `PointsDelta` source: the monolithic path would need the
+//! 10 GB L x L matrix that the divide design exists to avoid, so it is
+//! reported as skipped rather than silently downscaled.
+
+use lmds_ose::coordinator::embedder::lsmds_landmarks_config;
+use lmds_ose::mds::divide::{
+    auto_anchors, block_seed, divide_solve_with, sampled_normalized_stress,
+    DeltaSource, DivideConfig, PointsDelta,
+};
+use lmds_ose::mds::dissimilarity::full_matrix;
+use lmds_ose::mds::{LsmdsConfig, Matrix};
+use lmds_ose::runtime::{Backend, ComputeBackend};
+use lmds_ose::strdist::Euclidean;
+use lmds_ose::util::bench::{bench, BenchConfig, BenchResult};
+use lmds_ose::util::json::Json;
+use lmds_ose::util::prng::Rng;
+
+struct Row {
+    result: BenchResult,
+    l: usize,
+    iters: usize,
+    stress: f64,
+}
+
+struct Report {
+    rows: Vec<Row>,
+}
+
+impl Report {
+    fn write(&self, backend_name: &str) {
+        let path = std::env::var("LMDS_BENCH_JSON")
+            .unwrap_or_else(|_| "BENCH_pr4.json".to_string());
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|row| {
+                Json::obj(vec![
+                    ("name", Json::Str(row.result.name.clone())),
+                    ("median_s", Json::Num(row.result.median_s)),
+                    ("mad_s", Json::Num(row.result.mad_s)),
+                    ("mean_s", Json::Num(row.result.mean_s)),
+                    ("min_s", Json::Num(row.result.min_s)),
+                    ("iters", Json::Num(row.result.iters as f64)),
+                    ("l", Json::Num(row.l as f64)),
+                    ("solve_iters", Json::Num(row.iters as f64)),
+                    ("stress", Json::Num(row.stress)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("bench_base".into())),
+            ("backend", Json::Str(backend_name.into())),
+            ("results", Json::Arr(rows)),
+        ]);
+        match std::fs::write(&path, doc.to_string_pretty()) {
+            Ok(()) => println!("\nwrote {} results to {path}", self.rows.len()),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}
+
+/// Both subjects run the production solve loop
+/// (`coordinator::embedder::lsmds_landmarks_config`, no trailing O(L^2)
+/// exact-stress pass); quality is scored separately via pair sampling so
+/// the timed region is the solve alone.
+fn solve_divide<S: DeltaSource + ?Sized>(
+    source: &S,
+    lcfg: &LsmdsConfig,
+    dcfg: &DivideConfig,
+    backend: &Backend,
+) -> Matrix {
+    divide_solve_with(source, lcfg.dim, dcfg, lcfg.seed, |b, sub| {
+        let mut c = lcfg.clone();
+        c.seed = block_seed(lcfg.seed, b as u64);
+        lsmds_landmarks_config(sub, &c, backend)
+    })
+    .unwrap()
+    .config
+}
+
+fn main() {
+    lmds_ose::util::logging::init();
+    let quick_mode = std::env::var("LMDS_BENCH_QUICK").is_ok();
+    let dim = 7usize; // paper Sec. 5.3
+    let solve_iters = if quick_mode { 20 } else { 60 };
+    let sizes: Vec<usize> =
+        if quick_mode { vec![2000, 10_000] } else { vec![2000, 10_000, 50_000] };
+    // one measured sample for the multi-second subjects; the 2k subjects
+    // are cheap enough for a few
+    let one = BenchConfig {
+        warmup: std::time::Duration::ZERO,
+        measure: std::time::Duration::ZERO,
+        max_iters: 1,
+        min_iters: 1,
+    };
+    let few = BenchConfig {
+        warmup: std::time::Duration::ZERO,
+        measure: std::time::Duration::from_secs(2),
+        max_iters: 3,
+        min_iters: if quick_mode { 1 } else { 2 },
+    };
+    let backend = Backend::native();
+    let mut report = Report { rows: Vec::new() };
+    let stress_pairs = 200_000usize;
+
+    for &l in &sizes {
+        let blocks = if l >= 50_000 { 16 } else { 8 };
+        let anchors = auto_anchors(l, dim);
+        let mut rng = Rng::new(0xBA5E ^ l as u64);
+        let points = Matrix::random_normal(&mut rng, l, dim, 1.0);
+        let source = PointsDelta { points: &points };
+        let lcfg = LsmdsConfig {
+            dim,
+            max_iters: solve_iters,
+            rel_tol: 0.0, // fixed work: comparable wall-clock across solvers
+            seed: 7,
+            ..Default::default()
+        };
+        let dcfg = DivideConfig { blocks, anchors };
+        let cfg = if l <= 2000 { &few } else { &one };
+        println!(
+            "\n== base solve L={l} K={dim} T={solve_iters} \
+             (divide: B={blocks}, A={anchors}) =="
+        );
+
+        // Monolithic: needs the materialised L x L matrix. At 50k that is
+        // 10 GB of f32 — out of reach by design, which is the point.
+        let mono = if l < 50_000 {
+            let refs: Vec<&[f32]> = (0..l).map(|i| points.row(i)).collect();
+            let delta = full_matrix(&refs, &Euclidean);
+            let mut last = Matrix::zeros(0, 0);
+            let r = bench(&format!("base monolithic L={l} T={solve_iters}"), cfg, || {
+                last = lsmds_landmarks_config(&delta, &lcfg, &backend).unwrap();
+            });
+            let stress = sampled_normalized_stress(&source, &last, stress_pairs, 3);
+            println!("{}  (sampled stress {stress:.4})", r.report());
+            report.rows.push(Row { result: r.clone(), l, iters: solve_iters, stress });
+            Some(r)
+        } else {
+            println!(
+                "base monolithic L={l}: skipped \
+                 (L x L matrix would be {:.1} GB)",
+                (l * l * 4) as f64 / 1e9
+            );
+            None
+        };
+
+        let mut last = Matrix::zeros(0, 0);
+        let r = bench(
+            &format!("base divide B={blocks} A={anchors} L={l} T={solve_iters}"),
+            cfg,
+            || {
+                last = solve_divide(&source, &lcfg, &dcfg, &backend);
+            },
+        );
+        let stress = sampled_normalized_stress(&source, &last, stress_pairs, 3);
+        match &mono {
+            Some(m) => println!(
+                "{}  (sampled stress {stress:.4}, speedup {:.2}x vs monolithic)",
+                r.report(),
+                m.median_s / r.median_s
+            ),
+            None => println!("{}  (sampled stress {stress:.4})", r.report()),
+        }
+        report.rows.push(Row { result: r, l, iters: solve_iters, stress });
+    }
+
+    report.write(backend.name());
+}

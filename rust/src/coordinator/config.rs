@@ -9,7 +9,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::embedder::{OseBackend, PipelineConfig};
+use crate::coordinator::embedder::{BaseSolver, OseBackend, PipelineConfig};
 use crate::coordinator::server::BatcherConfig;
 use crate::coordinator::trainer::TrainConfig;
 use crate::mds::{LandmarkMethod, LsmdsConfig};
@@ -39,6 +39,15 @@ pub struct RunConfig {
     /// memory streaming path in chunks of this many rows (0 disables,
     /// i.e. monolithic). See [`PipelineConfig::stream_chunk`].
     pub stream_chunk: Option<usize>,
+    /// Base-MDS solver for the landmark sample: "monolithic" (one full
+    /// O(L^2) LSMDS) or "divide" (partitioned parallel blocks stitched
+    /// with Procrustes; see [`BaseSolver`]).
+    pub base_solver: String,
+    /// Divide-and-conquer only: number of blocks B (>= 1).
+    pub base_blocks: usize,
+    /// Divide-and-conquer only: shared anchor count (0 = auto, sqrt(L)
+    /// clamped to [2(dim+1), 512]).
+    pub base_anchors: usize,
 }
 
 impl Default for RunConfig {
@@ -60,6 +69,9 @@ impl Default for RunConfig {
             drift_window: 256,
             use_pjrt: true,
             stream_chunk: None,
+            base_solver: "monolithic".into(),
+            base_blocks: 8,
+            base_anchors: 0,
         }
     }
 }
@@ -142,6 +154,20 @@ impl RunConfig {
         if let Some(v) = usize_of(json, "stream_chunk")? {
             self.stream_chunk = if v == 0 { None } else { Some(v) };
         }
+        if let Some(v) = json.get("base_solver").and_then(Json::as_str) {
+            anyhow::ensure!(
+                BaseSolver::from_name(v, 1, 0).is_some(),
+                "config: unknown base_solver {v} (monolithic|divide)"
+            );
+            self.base_solver = v.to_string();
+        }
+        if let Some(v) = usize_of(json, "base_blocks")? {
+            anyhow::ensure!(v >= 1, "config: base_blocks must be >= 1");
+            self.base_blocks = v;
+        }
+        if let Some(v) = usize_of(json, "base_anchors")? {
+            self.base_anchors = v;
+        }
         Ok(())
     }
 
@@ -186,7 +212,36 @@ impl RunConfig {
             let v = args.usize("stream-chunk")?;
             self.stream_chunk = if v == 0 { None } else { Some(v) };
         }
+        if let Some(v) = args.get("base-solver") {
+            anyhow::ensure!(
+                BaseSolver::from_name(v, 1, 0).is_some(),
+                "unknown base solver {v} (monolithic|divide)"
+            );
+            self.base_solver = v.to_string();
+        }
+        if args.get("base-blocks").is_some() {
+            let v = args.usize("base-blocks")?;
+            anyhow::ensure!(v >= 1, "--base-blocks must be >= 1");
+            self.base_blocks = v;
+        }
+        if args.get("base-anchors").is_some() {
+            self.base_anchors = args.usize("base-anchors")?;
+        }
         Ok(())
+    }
+
+    /// The typed base-solver selection. Parse paths validate the name up
+    /// front; a caller that sets the field directly with an unknown name
+    /// falls back to monolithic, loudly.
+    pub fn base(&self) -> BaseSolver {
+        BaseSolver::from_name(&self.base_solver, self.base_blocks, self.base_anchors)
+            .unwrap_or_else(|| {
+                log::warn!(
+                    "unknown base_solver {:?}; using the monolithic solver",
+                    self.base_solver
+                );
+                BaseSolver::Monolithic
+            })
     }
 
     pub fn pipeline(&self) -> PipelineConfig {
@@ -210,6 +265,7 @@ impl RunConfig {
             hidden: self.hidden,
             nn_bootstrap: true,
             stream_chunk: self.stream_chunk,
+            base_solver: self.base(),
             seed: self.seed,
         }
     }
@@ -306,6 +362,48 @@ mod tests {
         let b = cfg.batcher();
         assert_eq!(b.max_batch, cfg.max_batch);
         assert_eq!(b.replicas, cfg.replicas);
+    }
+
+    #[test]
+    fn base_solver_round_trips_and_validates() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.base(), BaseSolver::Monolithic);
+        assert_eq!(cfg.pipeline().base_solver, BaseSolver::Monolithic);
+
+        cfg.apply_json(
+            &Json::parse(
+                r#"{"base_solver": "divide", "base_blocks": 6, "base_anchors": 48}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.base(), BaseSolver::DivideConquer { blocks: 6, anchors: 48 });
+        assert_eq!(
+            cfg.pipeline().base_solver,
+            BaseSolver::DivideConquer { blocks: 6, anchors: 48 }
+        );
+
+        let specs = vec![
+            OptSpec { name: "base-solver", help: "", takes_value: true, default: None },
+            OptSpec { name: "base-blocks", help: "", takes_value: true, default: None },
+            OptSpec { name: "base-anchors", help: "", takes_value: true, default: None },
+        ];
+        let argv: Vec<String> = ["--base-solver", "monolithic", "--base-blocks", "4"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&argv, &specs).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.base(), BaseSolver::Monolithic);
+        assert_eq!(cfg.base_blocks, 4, "divide shape survives solver flips");
+
+        // bad values rejected
+        assert!(cfg
+            .apply_json(&Json::parse(r#"{"base_solver": "bogus"}"#).unwrap())
+            .is_err());
+        assert!(cfg
+            .apply_json(&Json::parse(r#"{"base_blocks": 0}"#).unwrap())
+            .is_err());
     }
 
     #[test]

@@ -12,7 +12,9 @@ pub mod stream;
 pub mod trainer;
 
 pub use config::RunConfig;
-pub use embedder::{embed_dataset, OseBackend, PipelineConfig, PipelineResult};
+pub use embedder::{
+    embed_dataset, BaseSolver, OseBackend, PipelineConfig, PipelineResult,
+};
 pub use methods::{BackendNn, BackendOpt};
 pub use metrics::{Metrics, Snapshot};
 pub use server::{BatcherConfig, DriftHook, QueryResult, Server, ServerHandle};

@@ -13,7 +13,7 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::embedder::lsmds_landmarks;
+use crate::coordinator::embedder::{solve_base, BaseSolver};
 use crate::data::{Geco, GecoConfig};
 use crate::mds::dissimilarity::{cross_matrix, full_matrix};
 use crate::mds::landmarks::fps_landmarks;
@@ -201,7 +201,16 @@ pub fn load_or_build(
             } else {
                 backend
             };
-            let (cfg, stress) = lsmds_landmarks(&delta_ref, &lcfg, solve)?;
+            // The reference solve is the one O(N^2)-per-iteration step of
+            // the protocol; LMDS_BASE_SOLVER=divide swaps in the
+            // partitioned parallel solver (coordinator::embedder::
+            // solve_base) for it, with the default divide shape.
+            let solver = match std::env::var("LMDS_BASE_SOLVER").ok().as_deref() {
+                None | Some("") => BaseSolver::Monolithic,
+                Some(name) => BaseSolver::from_name(name, 8, 0)
+                    .with_context(|| format!("LMDS_BASE_SOLVER={name}"))?,
+            };
+            let (cfg, stress) = solve_base(&delta_ref, &lcfg, solver, solve)?;
             log::info!(
                 "LSMDS done in {:.1}s (normalized stress {:.4})",
                 t0.elapsed().as_secs_f64(),

@@ -74,17 +74,31 @@ fn print_top_usage() {
 // ---------------------------------------------------------------------------
 
 fn common_specs() -> Vec<OptSpec> {
+    let opt = |name, help| OptSpec { name, help, takes_value: true, default: None };
+    let flag = |name, help| OptSpec { name, help, takes_value: false, default: None };
     vec![
-        OptSpec { name: "config", help: "JSON config file", takes_value: true, default: None },
-        OptSpec { name: "dim", help: "embedding dimension K", takes_value: true, default: None },
-        OptSpec { name: "landmarks", help: "number of landmarks L", takes_value: true, default: None },
-        OptSpec { name: "landmark-method", help: "random|fps|maxmin", takes_value: true, default: None },
-        OptSpec { name: "backend", help: "nn|opt", takes_value: true, default: None },
-        OptSpec { name: "metric", help: "levenshtein|osa|jw|qgram", takes_value: true, default: None },
-        OptSpec { name: "seed", help: "PRNG seed", takes_value: true, default: None },
-        OptSpec { name: "stream-chunk", help: "stream the OSE stage in chunks of this many rows (bounded memory; 0 = monolithic; with the nn backend this skips the bootstrap training set — landmark rows only)", takes_value: true, default: None },
-        OptSpec { name: "no-pjrt", help: "force the native compute backend (skip PJRT artifacts)", takes_value: false, default: None },
-        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+        opt("config", "JSON config file"),
+        opt("dim", "embedding dimension K"),
+        opt("landmarks", "number of landmarks L"),
+        opt("landmark-method", "random|fps|maxmin"),
+        opt("backend", "nn|opt"),
+        opt("metric", "levenshtein|osa|jw|qgram"),
+        opt("seed", "PRNG seed"),
+        opt(
+            "stream-chunk",
+            "stream the OSE stage in chunks of this many rows (bounded memory; \
+             0 = monolithic; with the nn backend this skips the bootstrap \
+             training set — landmark rows only)",
+        ),
+        opt(
+            "base-solver",
+            "landmark base-MDS solver: monolithic|divide (divide = partitioned \
+             parallel blocks + Procrustes stitching)",
+        ),
+        opt("base-blocks", "divide solver: number of blocks B"),
+        opt("base-anchors", "divide solver: shared anchors A (0 = auto, sqrt(L))"),
+        flag("no-pjrt", "force the native compute backend (skip PJRT artifacts)"),
+        flag("help", "show help"),
     ]
 }
 
@@ -124,11 +138,12 @@ fn select_backend(cfg: &RunConfig) -> Backend {
 // ---------------------------------------------------------------------------
 
 fn cmd_generate(argv: &[String]) -> Result<()> {
+    let opt = |name, help, default| OptSpec { name, help, takes_value: true, default };
     let specs = vec![
-        OptSpec { name: "n", help: "number of records", takes_value: true, default: Some("1000") },
-        OptSpec { name: "duplicate-rate", help: "fraction of corrupted duplicates", takes_value: true, default: Some("0.0") },
-        OptSpec { name: "seed", help: "PRNG seed", takes_value: true, default: Some("40246") },
-        OptSpec { name: "out", help: "output path (- = stdout)", takes_value: true, default: Some("-") },
+        opt("n", "number of records", Some("1000")),
+        opt("duplicate-rate", "fraction of corrupted duplicates", Some("0.0")),
+        opt("seed", "PRNG seed", Some("40246")),
+        opt("out", "output path (- = stdout)", Some("-")),
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
     let args = Args::parse(argv, &specs)?;
@@ -157,8 +172,18 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
 
 fn cmd_embed(argv: &[String]) -> Result<()> {
     let mut specs = common_specs();
-    specs.push(OptSpec { name: "n", help: "dataset size", takes_value: true, default: Some("2000") });
-    specs.push(OptSpec { name: "out", help: "coords output (JSON lines)", takes_value: true, default: None });
+    specs.push(OptSpec {
+        name: "n",
+        help: "dataset size",
+        takes_value: true,
+        default: Some("2000"),
+    });
+    specs.push(OptSpec {
+        name: "out",
+        help: "coords output (JSON lines)",
+        takes_value: true,
+        default: None,
+    });
     let args = Args::parse(argv, &specs)?;
     if args.flag("help") {
         print!("{}", usage("embed", "Two-stage large-scale embedding pipeline", &specs));
@@ -181,6 +206,7 @@ fn cmd_embed(argv: &[String]) -> Result<()> {
 
     println!("embedded {n} objects into {}D in {total:.2}s", cfg.dim);
     println!("  landmarks          : {} ({:?})", cfg.landmarks, cfg.landmark_method);
+    println!("  base solver        : {:?}", cfg.base());
     println!("  compute backend    : {}", backend.name());
     println!("  ose method         : {:?} via {}", cfg.backend, result.method.name());
     if let Some(chunk) = cfg.stream_chunk {
@@ -189,7 +215,8 @@ fn cmd_embed(argv: &[String]) -> Result<()> {
     println!("  landmark stress    : {:.4}", result.landmark_stress);
     let t = &result.timings;
     println!(
-        "  phases: select {:.2}s | delta_LL {:.2}s | lsmds {:.2}s | train {:.2}s | delta_ML {:.2}s | ose {:.2}s",
+        "  phases: select {:.2}s | delta_LL {:.2}s | lsmds {:.2}s | \
+         train {:.2}s | delta_ML {:.2}s | ose {:.2}s",
         t.select_s, t.delta_ll_s, t.lsmds_s, t.train_s, t.delta_ml_s, t.ose_s
     );
     if let Some(path) = args.get("out") {
@@ -214,11 +241,20 @@ fn cmd_embed(argv: &[String]) -> Result<()> {
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let mut specs = common_specs();
-    specs.push(OptSpec { name: "n", help: "landmark-training dataset size", takes_value: true, default: Some("2000") });
-    specs.push(OptSpec { name: "queries", help: "number of workload queries", takes_value: true, default: Some("10000") });
-    specs.push(OptSpec { name: "clients", help: "concurrent client threads", takes_value: true, default: Some("4") });
-    specs.push(OptSpec { name: "replicas", help: "OSE executor replicas in the serving pool (panic-isolated, restartable)", takes_value: true, default: None });
-    specs.push(OptSpec { name: "drift-window", help: "drift-monitor sliding window in queries (0 = disabled)", takes_value: true, default: None });
+    let opt = |name, help, default| OptSpec { name, help, takes_value: true, default };
+    specs.push(opt("n", "landmark-training dataset size", Some("2000")));
+    specs.push(opt("queries", "number of workload queries", Some("10000")));
+    specs.push(opt("clients", "concurrent client threads", Some("4")));
+    specs.push(opt(
+        "replicas",
+        "OSE executor replicas in the serving pool (panic-isolated, restartable)",
+        None,
+    ));
+    specs.push(opt(
+        "drift-window",
+        "drift-monitor sliding window in queries (0 = disabled)",
+        None,
+    ));
     let args = Args::parse(argv, &specs)?;
     if args.flag("help") {
         print!("{}", usage("serve", "Streaming OSE service + query workload", &specs));
@@ -267,7 +303,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             let h = h.clone();
             let names = &names;
             scope.spawn(move || {
-                let mut geco = Geco::new(GecoConfig { seed: 0xc11 + c as u64, ..Default::default() });
+                let mut geco = Geco::new(GecoConfig {
+                    seed: 0xc11 + c as u64,
+                    ..Default::default()
+                });
                 let per = queries / clients;
                 let mut pending = Vec::with_capacity(64);
                 for q in 0..per {
@@ -297,8 +336,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 
 fn cmd_eval(argv: &[String]) -> Result<()> {
     let mut specs = common_specs();
-    specs.push(OptSpec { name: "scale", help: "smoke|small|paper", takes_value: true, default: Some("small") });
-    specs.push(OptSpec { name: "epochs", help: "NN training epochs", takes_value: true, default: Some("60") });
+    specs.push(OptSpec {
+        name: "scale",
+        help: "smoke|small|paper",
+        takes_value: true,
+        default: Some("small"),
+    });
+    specs.push(OptSpec {
+        name: "epochs",
+        help: "NN training epochs",
+        takes_value: true,
+        default: Some("60"),
+    });
     let args = Args::parse(argv, &specs)?;
     if args.flag("help") {
         print!("{}", usage("eval", "Regenerate the paper's figures", &specs));
@@ -342,18 +391,29 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
             figures::fig4(&data, &backend, epochs)?;
             figures::headline(&data, &backend, epochs)?;
         }
-        other => anyhow::bail!("unknown figure {other:?} (fig1|fig23|fig4|headline|ablations|all)"),
+        other => anyhow::bail!(
+            "unknown figure {other:?} (fig1|fig23|fig4|headline|ablations|all)"
+        ),
     }
     Ok(())
 }
 
 fn cmd_info(argv: &[String]) -> Result<()> {
-    let specs = vec![OptSpec { name: "help", help: "show help", takes_value: false, default: None }];
+    let specs = vec![OptSpec {
+        name: "help",
+        help: "show help",
+        takes_value: false,
+        default: None,
+    }];
     let _ = Args::parse(argv, &specs)?;
     let dir = default_artifact_dir();
     println!(
         "compute backends: native (always){}",
-        if cfg!(feature = "pjrt") { ", pjrt (compiled in)" } else { " — rebuild with --features pjrt for artifacts" }
+        if cfg!(feature = "pjrt") {
+            ", pjrt (compiled in)"
+        } else {
+            " — rebuild with --features pjrt for artifacts"
+        }
     );
     println!("artifact dir: {dir:?}");
     match lmds_ose::runtime::Manifest::load(&dir) {
@@ -376,7 +436,12 @@ fn cmd_plot(argv: &[String]) -> Result<()> {
     use lmds_ose::util::json::Json;
     use lmds_ose::util::svgplot::Chart;
     let specs = vec![
-        OptSpec { name: "scale", help: "smoke|small|paper", takes_value: true, default: Some("small") },
+        OptSpec {
+            name: "scale",
+            help: "smoke|small|paper",
+            takes_value: true,
+            default: Some("small"),
+        },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
     let args = Args::parse(argv, &specs)?;

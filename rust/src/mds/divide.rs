@@ -1,0 +1,557 @@
+//! Divide-and-conquer base MDS (the partition-and-align family of
+//! "Multidimensional Scaling for Big Data"): partition the sample into B
+//! overlapping blocks that all share a common anchor subset, solve each
+//! block's MDS independently (fanned out across the thread pool), then
+//! stitch the blocks into one configuration by fitting an orthogonal
+//! Procrustes transform ([`super::procrustes`]) from every block's anchor
+//! coordinates onto the reference block's.
+//!
+//! Why it scales: a monolithic solve touches all L^2 dissimilarities every
+//! iteration. With B blocks over a sample of L points and A anchors, each
+//! block holds L/B + A points, so one sweep costs B·(L/B + A)^2 ≈ L^2/B
+//! pair visits — and the blocks are independent, so they run concurrently.
+//! Peak per-block working memory is O((L/B + A)^2) instead of O(L^2).
+//!
+//! The input is a [`DeltaSource`] rather than a materialised matrix, so the
+//! full L x L dissimilarity matrix never needs to exist: a source can
+//! compute entries on demand (e.g. [`PointsDelta`] for coordinate data, or
+//! a string metric over an object table), which is what lets the L = 50k
+//! bench run on hardware where the 10 GB monolithic matrix cannot.
+//!
+//! Accuracy model: every block sees the *exact* dissimilarities among its
+//! own points, so for realizable inputs each block recovers its geometry
+//! and the anchors pin the blocks together rigidly — the stitched stress
+//! stays within a small band of the monolithic solve (enforced by the
+//! partition-invariance suite in `tests/divide.rs`). For non-realizable
+//! data the blocks optimise restrictions of the true objective, so the
+//! stitched configuration is an approximation; anchor count controls the
+//! trade (more anchors = tighter stitching, more per-block cost).
+
+use anyhow::Result;
+
+use crate::strdist::euclidean;
+use crate::util::prng::Rng;
+use crate::util::threadpool::{default_parallelism, parallel_for_chunks, SyncSlice};
+
+use super::lsmds::{lsmds, LsmdsConfig};
+use super::matrix::Matrix;
+use super::procrustes::Procrustes;
+
+/// Anything that can serve dissimilarities by index pair. Implementations
+/// must be cheap to query concurrently (block solves read disjoint
+/// sub-matrices from worker threads).
+pub trait DeltaSource: Sync {
+    /// Number of objects.
+    fn len(&self) -> usize;
+
+    /// True when the source holds no objects.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dissimilarity between objects `i` and `j`.
+    fn dist(&self, i: usize, j: usize) -> f32;
+
+    /// Materialise the symmetric sub-matrix over `idx` (the per-block
+    /// input). The default computes the upper triangle and mirrors it.
+    fn sub_matrix(&self, idx: &[usize]) -> Matrix {
+        let m = idx.len();
+        let mut out = Matrix::zeros(m, m);
+        for (r, &i) in idx.iter().enumerate() {
+            for (c, &j) in idx.iter().enumerate().skip(r + 1) {
+                let d = self.dist(i, j);
+                out.set(r, c, d);
+                out.set(c, r, d);
+            }
+        }
+        out
+    }
+}
+
+/// A fully materialised dissimilarity matrix (the pipeline's `delta_LL`).
+impl DeltaSource for Matrix {
+    fn len(&self) -> usize {
+        self.rows
+    }
+
+    fn dist(&self, i: usize, j: usize) -> f32 {
+        self.at(i, j)
+    }
+
+    fn sub_matrix(&self, idx: &[usize]) -> Matrix {
+        let m = idx.len();
+        let mut out = Matrix::zeros(m, m);
+        for (r, &i) in idx.iter().enumerate() {
+            let row = self.row(i);
+            let dst = out.row_mut(r);
+            for (c, &j) in idx.iter().enumerate() {
+                dst[c] = row[j];
+            }
+        }
+        out
+    }
+}
+
+/// Euclidean dissimilarities over an N x K coordinate table, computed on
+/// demand — O(N·K) memory for any N, the matrix-free source the large-L
+/// benches use.
+pub struct PointsDelta<'a> {
+    pub points: &'a Matrix,
+}
+
+impl DeltaSource for PointsDelta<'_> {
+    fn len(&self) -> usize {
+        self.points.rows
+    }
+
+    fn dist(&self, i: usize, j: usize) -> f32 {
+        euclidean(self.points.row(i), self.points.row(j)) as f32
+    }
+}
+
+/// Divide-and-conquer shape: how many blocks, how many shared anchors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DivideConfig {
+    /// Number of blocks B (0 is treated as 1).
+    pub blocks: usize,
+    /// Shared anchor count A; 0 picks [`auto_anchors`]. Values below the
+    /// rigidity floor `dim + 1` are raised to it — fewer anchors cannot
+    /// pin rotation + translation between blocks.
+    pub anchors: usize,
+}
+
+impl Default for DivideConfig {
+    fn default() -> Self {
+        Self { blocks: 8, anchors: 0 }
+    }
+}
+
+/// Default anchor count for a sample of `l` points embedded into `dim`
+/// dimensions: sqrt(L), clamped to [2(dim+1), 512]. sqrt keeps the anchor
+/// overhead (A extra rows in every block) sublinear while growing the
+/// stitching constraint set with the sample; the floor guarantees a
+/// well-posed Procrustes fit with slack, the cap bounds per-block cost.
+pub fn auto_anchors(l: usize, dim: usize) -> usize {
+    let floor = 2 * (dim + 1);
+    let cap = 512usize.max(floor);
+    (((l as f64).sqrt()) as usize).clamp(floor, cap).min(l)
+}
+
+/// What one divide-and-conquer solve did, beyond the configuration itself.
+#[derive(Clone, Debug)]
+pub struct DivideResult {
+    /// L x K stitched configuration (centred).
+    pub config: Matrix,
+    /// Indices of the shared anchor points (ascending).
+    pub anchor_idx: Vec<usize>,
+    /// Total points per block (anchors + own chunk), per block.
+    pub block_sizes: Vec<usize>,
+    /// Per-block anchor-fit RMSD from the Procrustes stitch (block 0 is
+    /// the reference and reports 0); the stitch-quality diagnostic.
+    pub align_rmsd: Vec<f64>,
+}
+
+/// Solve with the pure-Rust [`lsmds`] block solver. The backend-aware
+/// path (blocked kernels, PJRT artifacts) lives in
+/// `coordinator::embedder::solve_base`, which routes each block through
+/// [`divide_solve_with`] and a `ComputeBackend`.
+pub fn divide_solve<S>(
+    source: &S,
+    lcfg: &LsmdsConfig,
+    dcfg: &DivideConfig,
+) -> Result<DivideResult>
+where
+    S: DeltaSource + ?Sized,
+{
+    divide_solve_with(source, lcfg.dim, dcfg, lcfg.seed, |b, sub| {
+        let mut c = lcfg.clone();
+        c.seed = block_seed(lcfg.seed, b as u64);
+        Ok(lsmds(sub, &c).config)
+    })
+}
+
+/// Derive a per-block seed: blocks must not share their random init (a
+/// deterministic function of the base seed keeps runs reproducible).
+pub fn block_seed(seed: u64, block: u64) -> u64 {
+    seed ^ (block + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xD1F1DE
+}
+
+/// Core divide-and-conquer driver, generic over the per-block solver.
+///
+/// `solve_block(b, sub_delta)` receives the block index and the block's
+/// dissimilarity sub-matrix (anchors occupy rows `0..A`, the block's own
+/// points follow) and must return a configuration with one row per input
+/// row in `dim` columns. Blocks are fanned out across the thread pool; the
+/// block solver itself may parallelise internally (the dynamic chunk
+/// cursor balances either way).
+pub fn divide_solve_with<S, F>(
+    source: &S,
+    dim: usize,
+    dcfg: &DivideConfig,
+    seed: u64,
+    solve_block: F,
+) -> Result<DivideResult>
+where
+    S: DeltaSource + ?Sized,
+    F: Fn(usize, &Matrix) -> Result<Matrix> + Sync,
+{
+    let l = source.len();
+    if l == 0 {
+        return Ok(DivideResult {
+            config: Matrix::zeros(0, dim),
+            anchor_idx: vec![],
+            block_sizes: vec![],
+            align_rmsd: vec![],
+        });
+    }
+
+    // 1. Anchor selection: farthest-point sampling on the source metric,
+    //    so the shared frame spans the configuration instead of sampling
+    //    one corner of it. Clamped to the rigidity floor dim + 1.
+    let anchors = match dcfg.anchors {
+        0 => auto_anchors(l, dim),
+        a => a.max(dim + 1),
+    }
+    .min(l);
+    let anchor_idx = fps_anchors(source, anchors, seed);
+    let mut is_anchor = vec![false; l];
+    for &i in &anchor_idx {
+        is_anchor[i] = true;
+    }
+    let rest: Vec<usize> = (0..l).filter(|&i| !is_anchor[i]).collect();
+
+    // 2. Partition the non-anchor points into B contiguous chunks.
+    let blocks = dcfg.blocks.max(1).min(rest.len().max(1));
+    let per = rest.len().div_ceil(blocks);
+    let chunks: Vec<&[usize]> = if rest.is_empty() {
+        vec![&[][..]]
+    } else {
+        rest.chunks(per).collect()
+    };
+    let b_eff = chunks.len();
+
+    // 3. Solve every block concurrently: block b = anchors ++ chunk_b.
+    let block_idx: Vec<Vec<usize>> = chunks
+        .iter()
+        .map(|chunk| {
+            let mut idx = anchor_idx.clone();
+            idx.extend_from_slice(chunk);
+            idx
+        })
+        .collect();
+    let mut solved: Vec<Option<Result<Matrix>>> = (0..b_eff).map(|_| None).collect();
+    {
+        let slots = SyncSlice::new(&mut solved);
+        let threads = default_parallelism().min(b_eff);
+        parallel_for_chunks(b_eff, 1, threads, |start, end| {
+            for b in start..end {
+                let sub = source.sub_matrix(&block_idx[b]);
+                let r = solve_block(b, &sub);
+                // SAFETY: each block index is written exactly once.
+                unsafe { slots.write(b, Some(r)) };
+            }
+        });
+    }
+
+    // 4. Stitch: block 0 is the reference frame; every other block is
+    //    mapped onto it by the rigid Procrustes fit over the shared
+    //    anchors. Anchor coordinates are averaged across all aligned
+    //    copies (they are the best-constrained points in the solve).
+    let mut aligned: Vec<Matrix> = Vec::with_capacity(b_eff);
+    let mut align_rmsd = Vec::with_capacity(b_eff);
+    let mut block_sizes = Vec::with_capacity(b_eff);
+    let mut reference: Option<Matrix> = None;
+    for (b, slot) in solved.into_iter().enumerate() {
+        let x = slot.expect("block not solved")?;
+        anyhow::ensure!(
+            x.rows == block_idx[b].len() && x.cols == dim,
+            "block {b}: solver returned {}x{}, expected {}x{dim}",
+            x.rows,
+            x.cols,
+            block_idx[b].len()
+        );
+        block_sizes.push(x.rows);
+        let anchor_rows: Vec<usize> = (0..anchors).collect();
+        if let Some(ref_anchors) = &reference {
+            let own = x.select_rows(&anchor_rows);
+            let fit = Procrustes::fit(&own, ref_anchors);
+            align_rmsd.push(fit.rmsd);
+            aligned.push(fit.apply(&x));
+        } else {
+            align_rmsd.push(0.0);
+            reference = Some(x.select_rows(&anchor_rows));
+            aligned.push(x);
+        }
+    }
+
+    // 5. Assemble the global configuration.
+    let mut config = Matrix::zeros(l, dim);
+    let inv_b = 1.0f64 / b_eff as f64;
+    for (b, x) in aligned.iter().enumerate() {
+        for (r, &i) in block_idx[b].iter().enumerate() {
+            if r < anchors {
+                // averaged across blocks
+                let dst = config.row_mut(i);
+                for c in 0..dim {
+                    dst[c] += (x.at(r, c) as f64 * inv_b) as f32;
+                }
+            } else {
+                config.row_mut(i).copy_from_slice(x.row(r));
+            }
+        }
+    }
+    config.center_columns();
+    Ok(DivideResult { config, anchor_idx, block_sizes, align_rmsd })
+}
+
+/// Farthest-point sampling of `a` anchor indices directly on a
+/// [`DeltaSource`] (the object-level FPS in [`super::landmarks`] needs the
+/// objects + metric; here only index-pair distances exist). O(A·L) `dist`
+/// calls, O(L) memory. Returns ascending indices.
+pub fn fps_anchors<S: DeltaSource + ?Sized>(source: &S, a: usize, seed: u64) -> Vec<usize> {
+    let l = source.len();
+    let a = a.min(l);
+    if a == 0 {
+        return vec![];
+    }
+    let mut rng = Rng::new(seed ^ 0xA2C4_0125);
+    let first = rng.index(l);
+    let mut selected = vec![first];
+    let mut min_dist: Vec<f32> = (0..l).map(|i| source.dist(i, first)).collect();
+    while selected.len() < a {
+        let (mut best, mut best_d) = (0usize, f32::NEG_INFINITY);
+        for (i, &d) in min_dist.iter().enumerate() {
+            if d > best_d {
+                best = i;
+                best_d = d;
+            }
+        }
+        // duplicate objects can exhaust distinct maxima; fall back to the
+        // first unselected index so exactly `a` anchors come back
+        if min_dist[best] <= 0.0 && selected.contains(&best) {
+            if let Some(i) = (0..l).find(|i| !selected.contains(i)) {
+                best = i;
+            } else {
+                break;
+            }
+        }
+        selected.push(best);
+        for i in 0..l {
+            let d = source.dist(i, best);
+            if d < min_dist[i] {
+                min_dist[i] = d;
+            }
+        }
+    }
+    selected.sort_unstable();
+    selected.dedup();
+    // top up (duplicates collapsed): deterministic ascending scan
+    let mut cursor = 0usize;
+    while selected.len() < a && cursor < l {
+        if selected.binary_search(&cursor).is_err() {
+            selected.push(cursor);
+            selected.sort_unstable();
+        }
+        cursor += 1;
+    }
+    selected
+}
+
+/// Normalised stress estimated over `pairs` sampled index pairs — the
+/// O(pairs) stand-in for the O(L^2) exact metric at scales where the full
+/// sum is itself a cost. Deterministic in `seed`.
+pub fn sampled_normalized_stress<S: DeltaSource + ?Sized>(
+    source: &S,
+    x: &Matrix,
+    pairs: usize,
+    seed: u64,
+) -> f64 {
+    let l = source.len();
+    assert_eq!(l, x.rows);
+    if l < 2 {
+        return 0.0;
+    }
+    let mut rng = Rng::new(seed ^ 0x57E5_5);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for _ in 0..pairs {
+        let i = rng.index(l);
+        let mut j = rng.index(l - 1);
+        if j >= i {
+            j += 1;
+        }
+        let delta = source.dist(i, j) as f64;
+        let d = euclidean(x.row(i), x.row(j));
+        num += (d - delta) * (d - delta);
+        den += delta * delta;
+    }
+    if den <= 0.0 {
+        return 0.0;
+    }
+    (num / den).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mds::stress::normalized_stress;
+
+    fn realizable(seed: u64, n: usize, k: usize) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::random_normal(&mut rng, n, k, 1.0);
+        let mut d = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                d.set(i, j, euclidean(x.row(i), x.row(j)) as f32);
+            }
+        }
+        (x, d)
+    }
+
+    #[test]
+    fn points_delta_matches_materialised_matrix() {
+        let (x, d) = realizable(1, 20, 3);
+        let src = PointsDelta { points: &x };
+        assert_eq!(src.len(), 20);
+        for i in 0..20 {
+            for j in 0..20 {
+                assert!((src.dist(i, j) - d.at(i, j)).abs() < 1e-6);
+            }
+        }
+        let idx = [3usize, 7, 11, 19];
+        let sub_p = src.sub_matrix(&idx);
+        let sub_m = DeltaSource::sub_matrix(&d, &idx);
+        assert!(sub_p.max_abs_diff(&sub_m) < 1e-6);
+    }
+
+    #[test]
+    fn sub_matrix_picks_the_right_entries() {
+        let (_, d) = realizable(2, 12, 2);
+        let idx = [0usize, 5, 9];
+        let sub = DeltaSource::sub_matrix(&d, &idx);
+        assert_eq!((sub.rows, sub.cols), (3, 3));
+        for (r, &i) in idx.iter().enumerate() {
+            for (c, &j) in idx.iter().enumerate() {
+                assert_eq!(sub.at(r, c), d.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn fps_anchors_spread_and_exact_count() {
+        let (_, d) = realizable(3, 40, 2);
+        for a in [3usize, 7, 15, 40] {
+            let idx = fps_anchors(&d, a, 9);
+            assert_eq!(idx.len(), a);
+            assert!(idx.windows(2).all(|w| w[0] < w[1]), "sorted distinct");
+            assert!(idx.iter().all(|&i| i < 40));
+        }
+    }
+
+    #[test]
+    fn fps_anchors_handle_duplicate_objects() {
+        // all-zero distances: every FPS pick collapses; top-up must still
+        // return exactly `a` distinct indices
+        let d = Matrix::zeros(10, 10);
+        let idx = fps_anchors(&d, 6, 4);
+        assert_eq!(idx.len(), 6);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn auto_anchors_respects_bounds() {
+        assert_eq!(auto_anchors(100, 3), 10.max(2 * 4));
+        assert!(auto_anchors(1_000_000, 3) <= 512);
+        assert!(auto_anchors(4, 7) <= 4, "never more anchors than points");
+        assert!(auto_anchors(10_000, 3) == 100);
+    }
+
+    #[test]
+    fn divide_recovers_realizable_configuration() {
+        let (_, delta) = realizable(5, 120, 3);
+        let lcfg = LsmdsConfig { dim: 3, max_iters: 2000, rel_tol: 1e-9, ..Default::default() };
+        let r = divide_solve(&delta, &lcfg, &DivideConfig { blocks: 4, anchors: 16 }).unwrap();
+        assert_eq!((r.config.rows, r.config.cols), (120, 3));
+        assert_eq!(r.anchor_idx.len(), 16);
+        assert_eq!(r.block_sizes.len(), 4);
+        let stress = normalized_stress(&r.config, &delta);
+        assert!(stress < 0.08, "stitched stress {stress}");
+        // stitch quality: anchors agreed across blocks
+        assert!(r.align_rmsd.iter().all(|&e| e < 0.2), "{:?}", r.align_rmsd);
+    }
+
+    #[test]
+    fn divide_handles_degenerate_shapes() {
+        let (_, delta) = realizable(6, 30, 2);
+        let lcfg = LsmdsConfig { dim: 2, max_iters: 300, ..Default::default() };
+        // B larger than the number of non-anchor points
+        let r = divide_solve(&delta, &lcfg, &DivideConfig { blocks: 64, anchors: 10 }).unwrap();
+        assert_eq!(r.config.rows, 30);
+        assert!(r.config.data.iter().all(|v| v.is_finite()));
+        // anchors = 0 -> auto; blocks = 0 -> 1
+        let r = divide_solve(&delta, &lcfg, &DivideConfig { blocks: 0, anchors: 0 }).unwrap();
+        assert_eq!(r.config.rows, 30);
+        assert_eq!(r.block_sizes.len(), 1);
+        // anchors >= L: single all-anchor block
+        let r = divide_solve(&delta, &lcfg, &DivideConfig { blocks: 3, anchors: 64 }).unwrap();
+        assert_eq!(r.config.rows, 30);
+        assert_eq!(r.anchor_idx.len(), 30);
+    }
+
+    #[test]
+    fn divide_empty_input() {
+        let d = Matrix::zeros(0, 0);
+        let r = divide_solve(
+            &d,
+            &LsmdsConfig { dim: 3, ..Default::default() },
+            &DivideConfig::default(),
+        )
+        .unwrap();
+        assert_eq!((r.config.rows, r.config.cols), (0, 3));
+    }
+
+    #[test]
+    fn block_solver_errors_propagate() {
+        let (_, delta) = realizable(7, 24, 2);
+        let r = divide_solve_with(
+            &delta,
+            2,
+            &DivideConfig { blocks: 3, anchors: 6 },
+            1,
+            |b, _sub| {
+                if b == 1 {
+                    anyhow::bail!("injected failure");
+                }
+                Ok(Matrix::zeros(0, 0)) // wrong shape for the others
+            },
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn sampled_stress_tracks_exact_stress() {
+        let (x, delta) = realizable(8, 60, 3);
+        // perturb so stress is non-zero
+        let mut y = x.clone();
+        for v in y.data.iter_mut() {
+            *v *= 1.3;
+        }
+        let exact = normalized_stress(&y, &delta);
+        let approx = sampled_normalized_stress(&delta, &y, 20_000, 1);
+        assert!(
+            (exact - approx).abs() < 0.05 * (1.0 + exact),
+            "exact {exact} vs sampled {approx}"
+        );
+    }
+
+    #[test]
+    fn divide_is_deterministic() {
+        let (_, delta) = realizable(9, 80, 2);
+        let lcfg = LsmdsConfig { dim: 2, max_iters: 200, ..Default::default() };
+        let dcfg = DivideConfig { blocks: 3, anchors: 8 };
+        let a = divide_solve(&delta, &lcfg, &dcfg).unwrap();
+        let b = divide_solve(&delta, &lcfg, &dcfg).unwrap();
+        assert_eq!(a.config.data, b.config.data);
+        assert_eq!(a.anchor_idx, b.anchor_idx);
+    }
+}

@@ -247,7 +247,9 @@ mod tests {
 
     #[test]
     fn pool_variant_returns_l_valid_indices() {
-        let coords: Vec<Vec<f32>> = (0..500).map(|i| vec![(i % 37) as f32, (i / 37) as f32]).collect();
+        let coords: Vec<Vec<f32>> = (0..500)
+            .map(|i| vec![(i % 37) as f32, (i / 37) as f32])
+            .collect();
         let objs: Vec<&[f32]> = coords.iter().map(|c| c.as_slice()).collect();
         let mut rng = Rng::new(6);
         let idx = maxmin_pool_landmarks(&mut rng, &objs, 25, 4, &Euclidean);

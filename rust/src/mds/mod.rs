@@ -1,17 +1,22 @@
 //! Multidimensional scaling core: dissimilarity-matrix engine, the LSMDS
 //! gradient-descent solver (paper Sec. 2.1), the SMACOF and classical-MDS
-//! baselines, landmark selection (Sec. 4), and the paper's error metrics
-//! (Eqs. 1, 4, 5).
+//! baselines, landmark selection (Sec. 4), the paper's error metrics
+//! (Eqs. 1, 4, 5), and the divide-and-conquer base solver (partitioned
+//! parallel block solves + orthogonal-Procrustes stitching).
 
 pub mod classical;
 pub mod dissimilarity;
+pub mod divide;
 pub mod landmarks;
 pub mod lsmds;
 pub mod matrix;
+pub mod procrustes;
 pub mod smacof;
 pub mod stress;
 
+pub use divide::{DeltaSource, DivideConfig, DivideResult, PointsDelta};
 pub use landmarks::LandmarkMethod;
 pub use lsmds::{lsmds, lsmds_from, LsmdsConfig, LsmdsResult};
 pub use matrix::Matrix;
+pub use procrustes::Procrustes;
 pub use smacof::{smacof, SmacofConfig};

@@ -1,0 +1,551 @@
+//! Orthogonal Procrustes alignment — the glue of the divide-and-conquer
+//! base solver ([`super::divide`]). An MDS configuration is only defined up
+//! to rotation, reflection and translation, so two independently solved
+//! blocks that share anchor points agree on the anchors' *distances* but
+//! not their coordinates. This module fits the rigid transform (orthogonal
+//! map + translation, optionally an isotropic scale) that best maps one
+//! block's anchor coordinates onto another's, in the least-squares sense:
+//!
+//! ```text
+//!   min_{R orthogonal, t}  sum_i || s * (x_i - mean_x) R + mean_y - y_i ||^2
+//! ```
+//!
+//! The classical solution is R = U V^T from the SVD of the k x k
+//! cross-covariance M = Xc^T Yc (Schönemann 1966). Like
+//! [`super::classical::symmetric_top_eigs`], the dense linear algebra is
+//! from scratch (no LAPACK in the image), but where classical MDS power-
+//! iterates an N x N Gram matrix, the matrices here are k x k (k = the
+//! embedding dimension, single digits), so a full cyclic Jacobi
+//! eigendecomposition in f64 is both simpler and numerically tighter than
+//! seeded power iteration: V comes from the eigenvectors of M^T M, U from
+//! M V / sigma, with Gram-Schmidt completion for rank-deficient fits. The
+//! whole fit is O(n k^2 + k^4) — negligible next to any block solve.
+
+use super::matrix::Matrix;
+
+/// Relative singular-value floor: directions with sigma below this times
+/// the largest sigma are treated as rank-deficient and completed by
+/// Gram-Schmidt instead of divided by ~0.
+const RANK_TOL: f64 = 1e-9;
+
+/// A fitted rigid (optionally scaled) alignment `y ≈ s·x·R + t`, stored in
+/// folded affine form so applying it is one pass over the rows.
+#[derive(Clone, Debug)]
+pub struct Procrustes {
+    /// k x k linear part (scale folded in), row-major f64.
+    linear: Vec<f64>,
+    /// k-vector offset (translation folded with the centroids).
+    offset: Vec<f64>,
+    /// Embedding dimension k.
+    pub dim: usize,
+    /// The fitted isotropic scale (1.0 for rigid fits).
+    pub scale: f64,
+    /// Root-mean-square residual of the fit points under the transform —
+    /// the stitch-quality diagnostic the divide solver reports per block.
+    pub rmsd: f64,
+}
+
+impl Procrustes {
+    /// Identity transform in `k` dimensions.
+    pub fn identity(k: usize) -> Procrustes {
+        let mut linear = vec![0.0f64; k * k];
+        for c in 0..k {
+            linear[c * k + c] = 1.0;
+        }
+        Procrustes { linear, offset: vec![0.0; k], dim: k, scale: 1.0, rmsd: 0.0 }
+    }
+
+    /// Fit the rigid transform (rotation/reflection + translation) mapping
+    /// `source` onto `target`. Both are n x k with equal shapes; n >= 1.
+    pub fn fit(source: &Matrix, target: &Matrix) -> Procrustes {
+        Procrustes::fit_impl(source, target, false)
+    }
+
+    /// Like [`Procrustes::fit`], additionally estimating an isotropic
+    /// scale (the similarity-transform variant). Not used by the divide
+    /// solver — blocks fit the same dissimilarities, so rescaling anchors
+    /// would distort every non-anchor distance — but exposed for callers
+    /// aligning configurations of different provenance.
+    pub fn fit_with_scale(source: &Matrix, target: &Matrix) -> Procrustes {
+        Procrustes::fit_impl(source, target, true)
+    }
+
+    fn fit_impl(source: &Matrix, target: &Matrix, with_scale: bool) -> Procrustes {
+        assert_eq!(
+            (source.rows, source.cols),
+            (target.rows, target.cols),
+            "procrustes: shape mismatch"
+        );
+        let (n, k) = (source.rows, source.cols);
+        if n == 0 || k == 0 {
+            return Procrustes::identity(k);
+        }
+
+        // Centroids in f64.
+        let mut ms = vec![0.0f64; k];
+        let mut mt = vec![0.0f64; k];
+        for i in 0..n {
+            for c in 0..k {
+                ms[c] += source.at(i, c) as f64;
+                mt[c] += target.at(i, c) as f64;
+            }
+        }
+        for c in 0..k {
+            ms[c] /= n as f64;
+            mt[c] /= n as f64;
+        }
+
+        // Cross-covariance M = Xc^T Yc (k x k) and the source spread.
+        let mut m = vec![0.0f64; k * k];
+        let mut src_sq = 0.0f64;
+        for i in 0..n {
+            for a in 0..k {
+                let xa = source.at(i, a) as f64 - ms[a];
+                src_sq += xa * xa;
+                for b in 0..k {
+                    let yb = target.at(i, b) as f64 - mt[b];
+                    m[a * k + b] += xa * yb;
+                }
+            }
+        }
+
+        // Eigendecomposition of A = M^T M gives V and sigma^2.
+        let mut a = vec![0.0f64; k * k];
+        for i in 0..k {
+            for j in 0..k {
+                let mut acc = 0.0;
+                for r in 0..k {
+                    acc += m[r * k + i] * m[r * k + j];
+                }
+                a[i * k + j] = acc;
+            }
+        }
+        let (evals, v) = jacobi_eigs(&a, k);
+        let sigma: Vec<f64> = evals.iter().map(|l| l.max(0.0).sqrt()).collect();
+        let sigma_max = sigma.first().copied().unwrap_or(0.0);
+
+        // U columns: M v_i / sigma_i, Gram-Schmidt completed where sigma
+        // vanishes (rank-deficient or degenerate anchor sets).
+        let mut u = vec![0.0f64; k * k];
+        for (col, s) in sigma.iter().enumerate() {
+            if *s > RANK_TOL * sigma_max.max(1e-300) {
+                for r in 0..k {
+                    let mut acc = 0.0;
+                    for c in 0..k {
+                        acc += m[r * k + c] * v[c * k + col];
+                    }
+                    u[r * k + col] = acc / s;
+                }
+            } else {
+                complete_column(&mut u, k, col);
+            }
+        }
+
+        // R = U V^T; scale = tr(Sigma) / ||Xc||^2 when requested.
+        let mut rot = vec![0.0f64; k * k];
+        for i in 0..k {
+            for j in 0..k {
+                let mut acc = 0.0;
+                for c in 0..k {
+                    acc += u[i * k + c] * v[j * k + c];
+                }
+                rot[i * k + j] = acc;
+            }
+        }
+        let scale = if with_scale && src_sq > 0.0 {
+            sigma.iter().sum::<f64>() / src_sq
+        } else {
+            1.0
+        };
+
+        // Fold: y = s * (x - ms) R + mt  =  x (sR) + (mt - s * ms R).
+        let mut linear = vec![0.0f64; k * k];
+        for i in 0..k {
+            for j in 0..k {
+                linear[i * k + j] = scale * rot[i * k + j];
+            }
+        }
+        let mut offset = mt.clone();
+        for j in 0..k {
+            let mut acc = 0.0;
+            for i in 0..k {
+                acc += ms[i] * linear[i * k + j];
+            }
+            offset[j] -= acc;
+        }
+
+        let mut t = Procrustes { linear, offset, dim: k, scale, rmsd: 0.0 };
+        // Fit residual on the fit points themselves.
+        let mut sq = 0.0f64;
+        let mut row = vec![0.0f64; k];
+        for i in 0..n {
+            t.apply_row_f64(source.row(i), &mut row);
+            for c in 0..k {
+                let r = row[c] - target.at(i, c) as f64;
+                sq += r * r;
+            }
+        }
+        t.rmsd = (sq / n as f64).sqrt();
+        t
+    }
+
+    /// Apply to every row of `x`, returning the transformed matrix.
+    pub fn apply(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.dim, "procrustes: dim mismatch");
+        let mut out = Matrix::zeros(x.rows, x.cols);
+        let mut row = vec![0.0f64; self.dim];
+        for i in 0..x.rows {
+            self.apply_row_f64(x.row(i), &mut row);
+            for (c, v) in row.iter().enumerate() {
+                out.set(i, c, *v as f32);
+            }
+        }
+        out
+    }
+
+    /// Apply to one coordinate row, accumulating in f64 into `out`.
+    fn apply_row_f64(&self, x: &[f32], out: &mut [f64]) {
+        let k = self.dim;
+        for (j, o) in out.iter_mut().enumerate() {
+            let mut acc = self.offset[j];
+            for (i, xv) in x.iter().enumerate() {
+                acc += (*xv as f64) * self.linear[i * k + j];
+            }
+            *o = acc;
+        }
+    }
+
+    /// Sign of the orthogonal part's determinant: -1.0 means the fit uses
+    /// a reflection (legitimate for MDS configurations, which are only
+    /// defined up to the full orthogonal group).
+    pub fn det_sign(&self) -> f64 {
+        let k = self.dim;
+        let mut lu: Vec<f64> = self.linear.clone();
+        let mut sign = 1.0f64;
+        for col in 0..k {
+            // partial pivot
+            let mut p = col;
+            for r in (col + 1)..k {
+                if lu[r * k + col].abs() > lu[p * k + col].abs() {
+                    p = r;
+                }
+            }
+            if lu[p * k + col] == 0.0 {
+                return 0.0;
+            }
+            if p != col {
+                for c in 0..k {
+                    lu.swap(col * k + c, p * k + c);
+                }
+                sign = -sign;
+            }
+            if lu[col * k + col] < 0.0 {
+                sign = -sign;
+            }
+            for r in (col + 1)..k {
+                let f = lu[r * k + col] / lu[col * k + col];
+                for c in col..k {
+                    lu[r * k + c] -= f * lu[col * k + c];
+                }
+            }
+        }
+        sign
+    }
+}
+
+/// Replace column `col` of `u` with a unit vector orthogonal to columns
+/// `0..col` (Gram-Schmidt over the standard basis candidates).
+fn complete_column(u: &mut [f64], k: usize, col: usize) {
+    for cand in 0..k {
+        let mut w = vec![0.0f64; k];
+        w[cand] = 1.0;
+        for prev in 0..col {
+            let mut dot = 0.0;
+            for r in 0..k {
+                dot += w[r] * u[r * k + prev];
+            }
+            for r in 0..k {
+                w[r] -= dot * u[r * k + prev];
+            }
+        }
+        let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > 1e-6 {
+            for r in 0..k {
+                u[r * k + col] = w[r] / norm;
+            }
+            return;
+        }
+    }
+    // Unreachable for col < k, but keep the column well-defined.
+    u[col * k + col] = 1.0;
+}
+
+/// Full eigendecomposition of a symmetric k x k matrix (row-major f64) by
+/// cyclic Jacobi rotations. Returns eigenvalues in descending order with
+/// the matching eigenvectors as *columns* of the returned k x k buffer.
+/// Deterministic, no seeds; k is the embedding dimension, so cost is moot.
+pub fn jacobi_eigs(a: &[f64], k: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), k * k);
+    let mut m = a.to_vec();
+    let mut v = vec![0.0f64; k * k];
+    for i in 0..k {
+        v[i * k + i] = 1.0;
+    }
+    let frob: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let tol = 1e-14 * frob.max(1e-300);
+    for _sweep in 0..64 {
+        let mut off = 0.0f64;
+        for p in 0..k {
+            for q in (p + 1)..k {
+                off += m[p * k + q] * m[p * k + q];
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..k {
+            for q in (p + 1)..k {
+                let apq = m[p * k + q];
+                if apq.abs() <= tol / (k * k) as f64 {
+                    continue;
+                }
+                let app = m[p * k + p];
+                let aqq = m[q * k + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/columns p and q of m
+                for r in 0..k {
+                    let mrp = m[r * k + p];
+                    let mrq = m[r * k + q];
+                    m[r * k + p] = c * mrp - s * mrq;
+                    m[r * k + q] = s * mrp + c * mrq;
+                }
+                for col in 0..k {
+                    let mpc = m[p * k + col];
+                    let mqc = m[q * k + col];
+                    m[p * k + col] = c * mpc - s * mqc;
+                    m[q * k + col] = s * mpc + c * mqc;
+                }
+                // accumulate the rotation into v (columns p, q)
+                for r in 0..k {
+                    let vrp = v[r * k + p];
+                    let vrq = v[r * k + q];
+                    v[r * k + p] = c * vrp - s * vrq;
+                    v[r * k + q] = s * vrp + c * vrq;
+                }
+            }
+        }
+    }
+    let mut evals: Vec<f64> = (0..k).map(|i| m[i * k + i]).collect();
+    // sort eigenpairs by descending eigenvalue (total_cmp: NaNs from a
+    // divergent caller must not turn into a sort panic here)
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&i, &j| evals[j].total_cmp(&evals[i]));
+    let sorted_vals: Vec<f64> = order.iter().map(|&i| evals[i]).collect();
+    let mut sorted_vecs = vec![0.0f64; k * k];
+    for (new_col, &old_col) in order.iter().enumerate() {
+        for r in 0..k {
+            sorted_vecs[r * k + new_col] = v[r * k + old_col];
+        }
+    }
+    evals = sorted_vals;
+    (evals, sorted_vecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strdist::euclidean;
+    use crate::util::prng::Rng;
+
+    /// Random k x k orthogonal matrix (f64, via Gram-Schmidt on a random
+    /// Gaussian matrix); `reflect` flips one column so det = -1.
+    fn random_orthogonal(rng: &mut Rng, k: usize, reflect: bool) -> Vec<f64> {
+        let mut q = vec![0.0f64; k * k];
+        for col in 0..k {
+            let mut w: Vec<f64> = (0..k).map(|_| rng.next_normal()).collect();
+            loop {
+                for prev in 0..col {
+                    let mut dot = 0.0;
+                    for r in 0..k {
+                        dot += w[r] * q[r * k + prev];
+                    }
+                    for r in 0..k {
+                        w[r] -= dot * q[r * k + prev];
+                    }
+                }
+                let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+                if norm > 1e-6 {
+                    for r in 0..k {
+                        q[r * k + col] = w[r] / norm;
+                    }
+                    break;
+                }
+                w = (0..k).map(|_| rng.next_normal()).collect();
+            }
+        }
+        if reflect {
+            for r in 0..k {
+                q[r * k] = -q[r * k];
+            }
+        }
+        q
+    }
+
+    fn transform_rows(x: &Matrix, q: &[f64], scale: f64, t: &[f64]) -> Matrix {
+        let k = x.cols;
+        let mut out = Matrix::zeros(x.rows, k);
+        for i in 0..x.rows {
+            for j in 0..k {
+                let mut acc = t[j];
+                for c in 0..k {
+                    acc += scale * x.at(i, c) as f64 * q[c * k + j];
+                }
+                out.set(i, j, acc as f32);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn jacobi_diagonalises_known_matrix() {
+        // symmetric 3x3 with known spectrum {6, 3, 1} (constructed as
+        // Q diag Q^T for a fixed rotation)
+        let mut rng = Rng::new(11);
+        let k = 3;
+        let q = random_orthogonal(&mut rng, k, false);
+        let d = [6.0f64, 3.0, 1.0];
+        let mut a = vec![0.0f64; k * k];
+        for i in 0..k {
+            for j in 0..k {
+                let mut acc = 0.0;
+                for c in 0..k {
+                    acc += q[i * k + c] * d[c] * q[j * k + c];
+                }
+                a[i * k + j] = acc;
+            }
+        }
+        let (vals, vecs) = jacobi_eigs(&a, k);
+        for (got, want) in vals.iter().zip(d.iter()) {
+            assert!((got - want).abs() < 1e-10, "{vals:?}");
+        }
+        // eigenvector property: A v = lambda v
+        for col in 0..k {
+            for r in 0..k {
+                let mut av = 0.0;
+                for c in 0..k {
+                    av += a[r * k + c] * vecs[c * k + col];
+                }
+                assert!(
+                    (av - vals[col] * vecs[r * k + col]).abs() < 1e-9,
+                    "col {col}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn recovers_rotation_translation() {
+        for (seed, k) in [(1u64, 2usize), (2, 3), (3, 7)] {
+            let mut rng = Rng::new(seed);
+            let x = Matrix::random_normal(&mut rng, 30, k, 1.0);
+            let q = random_orthogonal(&mut rng, k, false);
+            let t: Vec<f64> = (0..k).map(|_| rng.next_normal() * 3.0).collect();
+            let y = transform_rows(&x, &q, 1.0, &t);
+            let fit = Procrustes::fit(&x, &y);
+            let got = fit.apply(&x);
+            assert!(
+                got.max_abs_diff(&y) < 1e-5,
+                "k={k}: diff {} rmsd {}",
+                got.max_abs_diff(&y),
+                fit.rmsd
+            );
+            assert!(fit.rmsd < 1e-5);
+            assert!((fit.scale - 1.0).abs() < 1e-12);
+            assert!((fit.det_sign() - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn recovers_reflection() {
+        let mut rng = Rng::new(5);
+        let k = 3;
+        let x = Matrix::random_normal(&mut rng, 25, k, 1.0);
+        let q = random_orthogonal(&mut rng, k, true);
+        let t = vec![1.5f64, -2.0, 0.25];
+        let y = transform_rows(&x, &q, 1.0, &t);
+        let fit = Procrustes::fit(&x, &y);
+        assert!(fit.apply(&x).max_abs_diff(&y) < 1e-5);
+        assert!((fit.det_sign() + 1.0).abs() < 1e-6, "reflection must be allowed");
+    }
+
+    #[test]
+    fn recovers_scale_when_asked() {
+        let mut rng = Rng::new(6);
+        let k = 4;
+        let x = Matrix::random_normal(&mut rng, 40, k, 1.0);
+        let q = random_orthogonal(&mut rng, k, false);
+        let t = vec![0.0f64; k];
+        let y = transform_rows(&x, &q, 2.5, &t);
+        let rigid = Procrustes::fit(&x, &y);
+        assert!((rigid.scale - 1.0).abs() < 1e-12, "rigid fit never rescales");
+        let sim = Procrustes::fit_with_scale(&x, &y);
+        assert!((sim.scale - 2.5).abs() < 1e-4, "scale {}", sim.scale);
+        assert!(sim.apply(&x).max_abs_diff(&y) < 1e-4);
+    }
+
+    #[test]
+    fn preserves_distances_of_non_fit_points() {
+        // A rigid transform fitted on anchors must preserve ALL pairwise
+        // distances when applied to a larger configuration.
+        let mut rng = Rng::new(7);
+        let k = 3;
+        let x = Matrix::random_normal(&mut rng, 50, k, 1.0);
+        let q = random_orthogonal(&mut rng, k, true);
+        let t = vec![4.0f64, -1.0, 2.0];
+        let anchors = x.select_rows(&[0, 1, 2, 3, 4, 5, 6]);
+        let anchors_y = transform_rows(&anchors, &q, 1.0, &t);
+        let fit = Procrustes::fit(&anchors, &anchors_y);
+        let moved = fit.apply(&x);
+        for i in 0..x.rows {
+            for j in (i + 1)..x.rows {
+                let before = euclidean(x.row(i), x.row(j));
+                let after = euclidean(moved.row(i), moved.row(j));
+                assert!((before - after).abs() < 1e-4, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_fits_stay_finite() {
+        // fewer anchors than dimensions, and all-identical anchors: the
+        // transform is under-determined but must stay orthogonal + finite
+        let mut rng = Rng::new(8);
+        let k = 5;
+        let x = Matrix::random_normal(&mut rng, 2, k, 1.0);
+        let y = Matrix::random_normal(&mut rng, 2, k, 1.0);
+        let fit = Procrustes::fit(&x, &y);
+        let out = fit.apply(&x);
+        assert!(out.data.iter().all(|v| v.is_finite()));
+        assert!(fit.det_sign().abs() > 0.5, "orthogonal part stays full rank");
+
+        let same = Matrix::from_rows(&[vec![1.0f32; 3], vec![1.0f32; 3]]);
+        let tgt = Matrix::from_rows(&[vec![2.0f32; 3], vec![2.0f32; 3]]);
+        let fit = Procrustes::fit(&same, &tgt);
+        let out = fit.apply(&same);
+        assert!(out.data.iter().all(|v| v.is_finite()));
+        // centroids must still map onto each other
+        assert!((out.at(0, 0) - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn identity_is_identity() {
+        let id = Procrustes::identity(3);
+        let x = Matrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![-1.0, 0.5, 4.0]]);
+        assert_eq!(id.apply(&x).data, x.data);
+        assert_eq!(id.scale, 1.0);
+        assert_eq!(id.rmsd, 0.0);
+    }
+}

@@ -16,6 +16,17 @@ use crate::util::prng::Rng;
 
 /// One Guttman transform: X' = (1/n) B(X) X with
 /// B_ij = -delta_ij / d_ij (i != j), B_ii = sum_{j != i} delta_ij / d_ij.
+///
+/// Coincident points (d_ij ~ 0) with a positive target distance get the
+/// limit contribution delta_ij * u along a deterministic unit direction u
+/// instead of the textbook subgradient 0: with the zero convention two
+/// points seeded at the same coordinates exert no force on each other and
+/// never separate, silently pinning the configuration (the pair's stress
+/// term delta_ij^2 is frozen in). The direction is a pure function of the
+/// index pair and antisymmetric (u_ij = -u_ji), so transforms stay
+/// deterministic and the pair moves apart, not in lockstep. Coincident
+/// pairs with delta_ij = 0 (true duplicates) still contribute nothing —
+/// they belong together.
 pub fn guttman_transform(x: &Matrix, delta: &Matrix) -> Matrix {
     let n = x.rows;
     let k = x.cols;
@@ -30,10 +41,20 @@ pub fn guttman_transform(x: &Matrix, delta: &Matrix) -> Matrix {
             }
             let xj = x.row(j);
             let d = crate::strdist::euclidean(xi, xj);
-            let ratio = if d > 1e-12 { delta.at(i, j) as f64 / d } else { 0.0 };
-            diag += ratio;
-            for c in 0..k {
-                acc[c] -= ratio * xj[c] as f64;
+            let delta_ij = delta.at(i, j) as f64;
+            if d > 1e-12 {
+                let ratio = delta_ij / d;
+                diag += ratio;
+                for c in 0..k {
+                    acc[c] -= ratio * xj[c] as f64;
+                }
+            } else if delta_ij > 0.0 {
+                // limit of ratio * (x_i - x_j) as the pair separates along
+                // u: contributes delta_ij * u to this row's update only
+                let u = coincident_direction(i, j, k);
+                for c in 0..k {
+                    acc[c] += delta_ij * u[c];
+                }
             }
         }
         for c in 0..k {
@@ -41,6 +62,29 @@ pub fn guttman_transform(x: &Matrix, delta: &Matrix) -> Matrix {
         }
     }
     out
+}
+
+/// Deterministic unit direction for a coincident pair: a pure function of
+/// the unordered index pair, negated for the higher index so the two
+/// points of the pair receive equal-and-opposite pushes.
+fn coincident_direction(i: usize, j: usize, k: usize) -> Vec<f64> {
+    let (lo, hi) = (i.min(j) as u64, i.max(j) as u64);
+    let mut rng = Rng::new((lo << 32) ^ hi ^ 0xC01C_1DE5);
+    let mut u: Vec<f64> = (0..k).map(|_| rng.next_normal()).collect();
+    let norm = u.iter().map(|v| v * v).sum::<f64>().sqrt();
+    if norm > 1e-12 {
+        for v in u.iter_mut() {
+            *v /= norm;
+        }
+    } else if k > 0 {
+        u[0] = 1.0;
+    }
+    if (i as u64) == hi {
+        for v in u.iter_mut() {
+            *v = -*v;
+        }
+    }
+    u
 }
 
 #[derive(Clone, Debug)]
@@ -158,6 +202,65 @@ mod tests {
             seed: 6,
         });
         assert!(r.normalized_stress < 0.05, "sigma = {}", r.normalized_stress);
+    }
+
+    #[test]
+    fn coincident_points_separate_to_target_distance() {
+        // regression: with the old `ratio = 0` convention two points
+        // seeded at identical coordinates exerted no force on each other
+        // and never separated. For exactly two coincident points with
+        // target distance t, one transform must move them to distance t
+        // (the limit contribution is t * u with u antisymmetric).
+        let x = Matrix::from_rows(&[vec![0.5, -0.25, 1.0], vec![0.5, -0.25, 1.0]]);
+        let mut delta = Matrix::zeros(2, 2);
+        delta.set(0, 1, 3.0);
+        delta.set(1, 0, 3.0);
+        let out = guttman_transform(&x, &delta);
+        let d = euclidean(out.row(0), out.row(1));
+        assert!((d - 3.0).abs() < 1e-5, "separated to {d}, want 3");
+        // determinism: same input, same output
+        let again = guttman_transform(&x, &delta);
+        assert_eq!(out.data, again.data);
+    }
+
+    #[test]
+    fn duplicate_rows_in_larger_config_escape_and_converge() {
+        // seed two identical rows inside a realizable 12-point problem:
+        // iterating the transform must split them and still reach a low
+        // stress (the old convention froze the pair's stress term in)
+        let (x0, delta) = realizable(11, 12, 3);
+        let mut x = x0.clone();
+        let dup = x.row(4).to_vec();
+        x.row_mut(7).copy_from_slice(&dup); // rows 4 and 7 now coincide
+        assert!(euclidean(x.row(4), x.row(7)) < 1e-12);
+        assert!(delta.at(4, 7) > 0.1, "target distance must be positive");
+        for _ in 0..400 {
+            x = guttman_transform(&x, &delta);
+        }
+        let d = euclidean(x.row(4), x.row(7));
+        assert!(d > 1e-3, "duplicates never separated (d = {d})");
+        let sigma = normalized_stress(&x, &delta);
+        assert!(sigma < 0.05, "stuck at stress {sigma}");
+        assert!(x.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn true_duplicates_with_zero_delta_stay_together() {
+        // delta(0,1) = 0 and identical coordinates: the pair belongs
+        // together and must NOT be pushed apart by the coincident fix
+        let x = Matrix::from_rows(&[
+            vec![1.0, 0.0],
+            vec![1.0, 0.0],
+            vec![0.0, 2.0],
+        ]);
+        let mut delta = Matrix::zeros(3, 3);
+        let d02 = euclidean(x.row(0), x.row(2)) as f32;
+        delta.set(0, 2, d02);
+        delta.set(2, 0, d02);
+        delta.set(1, 2, d02);
+        delta.set(2, 1, d02);
+        let out = guttman_transform(&x, &delta);
+        assert!(euclidean(out.row(0), out.row(1)) < 1e-9, "zero-delta pair split");
     }
 
     #[test]

@@ -36,6 +36,14 @@
 //! batch-mean early stopping enabled, the stopping decision is made per
 //! chunk instead of per full batch, which can change results within the
 //! convergence tolerance.)
+//!
+//! This bounds stage (2). Stage (1) — the base MDS every streamed chunk
+//! is anchored on — has its own scaling escape hatch: the divide-and-
+//! conquer solver ([`crate::mds::divide`], selected via
+//! [`crate::coordinator::embedder::BaseSolver`]) replaces the monolithic
+//! O(L^2)-per-iteration landmark solve with B parallel block solves
+//! stitched by Procrustes, so both stages of the pipeline stay bounded as
+//! the sample and landmark counts grow.
 
 use anyhow::Result;
 

@@ -1,0 +1,248 @@
+//! Divide-and-conquer base-solver contracts: the Procrustes alignment
+//! property suite (rigid motions are recovered to float precision) and the
+//! partition-invariance suite (stitched stress stays within a fixed band
+//! of the monolithic solve on realizable configurations, for every block
+//! count the pipeline exposes). The large-L variant runs the production
+//! `solve_base` path at L = 10k in release builds.
+
+use lmds_ose::coordinator::embedder::{solve_base, BaseSolver};
+use lmds_ose::mds::divide::{
+    divide_solve, fps_anchors, sampled_normalized_stress, DeltaSource, DivideConfig,
+    PointsDelta,
+};
+use lmds_ose::mds::stress::normalized_stress;
+use lmds_ose::mds::{LsmdsConfig, Matrix, Procrustes};
+use lmds_ose::runtime::Backend;
+use lmds_ose::strdist::euclidean;
+use lmds_ose::util::prng::Rng;
+use lmds_ose::util::quickcheck::{prop_assert, property};
+
+/// Random k x k orthogonal matrix via Gram-Schmidt on a Gaussian sample;
+/// `reflect` negates one column so det = -1.
+fn random_orthogonal(rng: &mut Rng, k: usize, reflect: bool) -> Vec<f64> {
+    let mut q = vec![0.0f64; k * k];
+    for col in 0..k {
+        loop {
+            let mut w: Vec<f64> = (0..k).map(|_| rng.next_normal()).collect();
+            for prev in 0..col {
+                let mut dot = 0.0;
+                for r in 0..k {
+                    dot += w[r] * q[r * k + prev];
+                }
+                for r in 0..k {
+                    w[r] -= dot * q[r * k + prev];
+                }
+            }
+            let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > 1e-6 {
+                for r in 0..k {
+                    q[r * k + col] = w[r] / norm;
+                }
+                break;
+            }
+        }
+    }
+    if reflect {
+        for r in 0..k {
+            q[r * k] = -q[r * k];
+        }
+    }
+    q
+}
+
+/// y_i = x_i Q + t, f64 accumulation.
+fn rigid_motion(x: &Matrix, q: &[f64], t: &[f64]) -> Matrix {
+    let k = x.cols;
+    let mut out = Matrix::zeros(x.rows, k);
+    for i in 0..x.rows {
+        for j in 0..k {
+            let mut acc = t[j];
+            for c in 0..k {
+                acc += x.at(i, c) as f64 * q[c * k + j];
+            }
+            out.set(i, j, acc as f32);
+        }
+    }
+    out
+}
+
+fn realizable(seed: u64, n: usize, k: usize) -> (Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let x = Matrix::random_normal(&mut rng, n, k, 1.0);
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            d.set(i, j, euclidean(x.row(i), x.row(j)) as f32);
+        }
+    }
+    (x, d)
+}
+
+#[test]
+fn procrustes_recovers_random_rigid_motions() {
+    property("procrustes recovers rotation/reflection/translation", 80, |g| {
+        let k = g.usize_in(2, 8);
+        let n = g.usize_in(k + 4, 40);
+        let mut rng = Rng::new(g.u64());
+        let x = Matrix::random_normal(&mut rng, n, k, 1.0);
+        let q = random_orthogonal(&mut rng, k, g.bool());
+        let t: Vec<f64> = (0..k).map(|_| rng.next_normal() * 2.0).collect();
+        let y = rigid_motion(&x, &q, &t);
+        let fit = Procrustes::fit(&x, &y);
+        let got = fit.apply(&x);
+        let diff = got.max_abs_diff(&y) as f64;
+        prop_assert(diff <= 1e-5, &format!("recovery diff {diff} (n={n} k={k})"))?;
+        prop_assert(fit.rmsd <= 1e-5, &format!("rmsd {}", fit.rmsd))?;
+        prop_assert((fit.scale - 1.0).abs() < 1e-12, "rigid fit must not rescale")
+    });
+}
+
+#[test]
+fn procrustes_is_rigid_on_unseen_points() {
+    // fitting on a subset and applying to the rest must preserve every
+    // pairwise distance (the stitch must never distort block geometry)
+    property("procrustes transforms are isometries", 40, |g| {
+        let k = g.usize_in(2, 6);
+        let n = g.usize_in(k + 4, 30);
+        let a = g.usize_in(k + 1, n);
+        let mut rng = Rng::new(g.u64());
+        let x = Matrix::random_normal(&mut rng, n, k, 1.0);
+        let q = random_orthogonal(&mut rng, k, g.bool());
+        let t: Vec<f64> = (0..k).map(|_| rng.next_normal() * 3.0).collect();
+        let anchors: Vec<usize> = (0..a).collect();
+        let y_anchors = rigid_motion(&x.select_rows(&anchors), &q, &t);
+        let fit = Procrustes::fit(&x.select_rows(&anchors), &y_anchors);
+        let moved = fit.apply(&x);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let before = euclidean(x.row(i), x.row(j));
+                let after = euclidean(moved.row(i), moved.row(j));
+                if (before - after).abs() > 1e-4 {
+                    return Err(format!(
+                        "distance ({i},{j}) distorted: {before} -> {after}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The fixed band of the partition-invariance contract: on realizable
+/// configurations the stitched stress must land within this absolute
+/// distance of the monolithic solve's stress (both are near zero there).
+const STRESS_BAND: f64 = 0.05;
+
+#[test]
+fn partition_invariance_across_block_counts() {
+    let (_, delta) = realizable(0xD1F, 160, 3);
+    let lcfg = LsmdsConfig { dim: 3, max_iters: 2000, rel_tol: 1e-9, ..Default::default() };
+    let backend = Backend::native();
+    let (_, mono_stress) =
+        solve_base(&delta, &lcfg, BaseSolver::Monolithic, &backend).unwrap();
+    assert!(mono_stress < STRESS_BAND, "monolithic baseline itself ({mono_stress})");
+    for blocks in [1usize, 2, 4, 7] {
+        let (config, dc_stress) = solve_base(
+            &delta,
+            &lcfg,
+            BaseSolver::DivideConquer { blocks, anchors: 16 },
+            &backend,
+        )
+        .unwrap();
+        assert_eq!((config.rows, config.cols), (160, 3));
+        assert!(config.data.iter().all(|v| v.is_finite()), "B={blocks}");
+        assert!(
+            (dc_stress - mono_stress).abs() <= STRESS_BAND,
+            "B={blocks}: divide stress {dc_stress} vs monolithic {mono_stress} \
+             exceeds the {STRESS_BAND} band"
+        );
+    }
+}
+
+#[test]
+fn partition_invariance_with_auto_anchors() {
+    // the anchors = 0 auto heuristic must stay inside the same band
+    let (_, delta) = realizable(0xD2F, 140, 2);
+    let lcfg = LsmdsConfig { dim: 2, max_iters: 2000, rel_tol: 1e-9, ..Default::default() };
+    let backend = Backend::native();
+    let (_, mono) = solve_base(&delta, &lcfg, BaseSolver::Monolithic, &backend).unwrap();
+    let (_, dc) = solve_base(
+        &delta,
+        &lcfg,
+        BaseSolver::DivideConquer { blocks: 4, anchors: 0 },
+        &backend,
+    )
+    .unwrap();
+    assert!((dc - mono).abs() <= STRESS_BAND, "auto anchors: {dc} vs {mono}");
+}
+
+/// The L = 10k acceptance gate: the divide solve must stay within the
+/// stress band of the monolithic solve through the production `solve_base`
+/// path. Debug builds run the same contract at L = 1500 (the release CI
+/// job covers the full scale).
+#[test]
+fn large_scale_divide_matches_monolithic_band() {
+    let l = if cfg!(debug_assertions) { 1500 } else { 10_000 };
+    let k = 3;
+    let mut rng = Rng::new(0xB16);
+    let points = Matrix::random_normal(&mut rng, l, k, 1.0);
+    let source = PointsDelta { points: &points };
+    // materialise once for the monolithic path (the divide path would not
+    // need it — blocks pull sub-matrices straight from the source)
+    let mut delta = Matrix::zeros(l, l);
+    for i in 0..l {
+        for j in (i + 1)..l {
+            let d = source.dist(i, j);
+            delta.set(i, j, d);
+            delta.set(j, i, d);
+        }
+    }
+    let iters = 40;
+    let lcfg = LsmdsConfig { dim: k, max_iters: iters, rel_tol: 0.0, ..Default::default() };
+    let backend = Backend::native();
+    let (_, mono) = solve_base(&delta, &lcfg, BaseSolver::Monolithic, &backend).unwrap();
+    let (config, dc) = solve_base(
+        &delta,
+        &lcfg,
+        BaseSolver::DivideConquer { blocks: 8, anchors: 0 },
+        &backend,
+    )
+    .unwrap();
+    assert!(config.data.iter().all(|v| v.is_finite()));
+    // fixed per-iteration budget: every block sweep costs ~1/B of a
+    // monolithic sweep, so at equal iteration counts the divide solve has
+    // done ~B x less work — it must still land in the band (in practice
+    // the smaller per-block problems converge faster per iteration)
+    assert!(
+        dc <= mono + STRESS_BAND,
+        "L={l}: divide stress {dc} vs monolithic {mono}"
+    );
+}
+
+#[test]
+fn matrix_free_source_agrees_with_materialised() {
+    // the PointsDelta matrix-free path must give the exact same solve as
+    // the materialised matrix (same anchors, same blocks, same numbers)
+    let (x, delta) = realizable(0xD3F, 90, 2);
+    let source = PointsDelta { points: &x };
+    let lcfg = LsmdsConfig { dim: 2, max_iters: 150, ..Default::default() };
+    let dcfg = DivideConfig { blocks: 3, anchors: 10 };
+    let from_matrix = divide_solve(&delta, &lcfg, &dcfg).unwrap();
+    let from_points = divide_solve(&source, &lcfg, &dcfg).unwrap();
+    assert_eq!(from_matrix.anchor_idx, from_points.anchor_idx);
+    let diff = from_matrix.config.max_abs_diff(&from_points.config);
+    // both paths see f32 distances computed the same way
+    assert!(diff < 1e-4, "materialised vs matrix-free diverge by {diff}");
+}
+
+#[test]
+fn sampled_stress_usable_as_large_scale_metric() {
+    let (x, delta) = realizable(0xD4F, 200, 3);
+    let exact = normalized_stress(&x, &delta);
+    let approx = sampled_normalized_stress(&delta, &x, 50_000, 7);
+    assert!((exact - approx).abs() < 0.02, "exact {exact} vs sampled {approx}");
+    // anchors picked by FPS must exist and be distinct at scale too
+    let idx = fps_anchors(&delta, 24, 1);
+    assert_eq!(idx.len(), 24);
+    assert!(idx.windows(2).all(|w| w[0] < w[1]));
+}
