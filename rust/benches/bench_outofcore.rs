@@ -1,0 +1,264 @@
+//! Out-of-core end-to-end benchmark: write an N-record corpus to disk,
+//! then run BOTH pipeline stages — divide-and-conquer base solve and the
+//! streamed OSE pass — against it, at an N whose full N x N delta matrix
+//! could not exist in RAM (N = 50k ⇒ 10 GB; the full run adds N = 200k
+//! ⇒ 160 GB). A tracking allocator measures the *actual* peak heap of
+//! the embed, which is asserted (and reported) against the bounded
+//! budget O(cache + L² + stream chunks + N·K).
+//!
+//!     cargo bench --bench bench_outofcore
+//!
+//! Env knobs:
+//!   LMDS_BENCH_QUICK=1        CI smoke: N = 50k only, random landmarks
+//!   LMDS_BENCH_JSON=path.json report path (default BENCH_pr5.json)
+//!
+//! The table is opened through the pread backend so the block cache (and
+//! therefore the corpus residency) is heap-allocated where the tracking
+//! allocator can see it — the honest configuration for a memory claim.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use lmds_ose::coordinator::embedder::{
+    embed_corpus, BaseSolver, OseBackend, PipelineConfig,
+};
+use lmds_ose::data::source::{CorpusWriter, ObjectTable, TableDelta};
+use lmds_ose::data::synthetic::gaussian_clusters;
+use lmds_ose::mds::divide::sampled_normalized_stress;
+use lmds_ose::mds::{LandmarkMethod, LsmdsConfig};
+use lmds_ose::runtime::{Backend, ComputeBackend};
+use lmds_ose::strdist::Euclidean;
+use lmds_ose::util::json::Json;
+use lmds_ose::util::prng::Rng;
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+struct TrackingAlloc;
+
+unsafe impl GlobalAlloc for TrackingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = unsafe { System.alloc(layout) };
+        if !p.is_null() {
+            let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = unsafe { System.alloc_zeroed(layout) };
+        if !p.is_null() {
+            let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) };
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = unsafe { System.realloc(ptr, layout, new_size) };
+        if !p.is_null() {
+            LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+            let live = LIVE.fetch_add(new_size, Ordering::Relaxed) + new_size;
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+struct Subject {
+    n: usize,
+    l: usize,
+    blocks: usize,
+    landmark_method: LandmarkMethod,
+}
+
+struct Row {
+    name: String,
+    n: usize,
+    l: usize,
+    full_delta_gb: f64,
+    write_s: f64,
+    wall_s: f64,
+    select_s: f64,
+    base_s: f64,
+    stream_s: f64,
+    peak_mb: f64,
+    budget_mb: f64,
+    within_budget: bool,
+    stress: f64,
+}
+
+fn run_subject(s: &Subject, backend: &Backend, cache_budget: usize) -> Row {
+    let dim = 8usize;
+    let k = 7usize;
+    let chunk = 1024usize;
+
+    let mut path = std::env::temp_dir();
+    path.push(format!("lmds_bench_ooc_{}_{}", s.n, std::process::id()));
+
+    // corpus write (streamed batches; reported separately from the embed)
+    let t0 = std::time::Instant::now();
+    {
+        let mut w = CorpusWriter::create_vectors(&path, dim).unwrap();
+        let mut rng = Rng::new(0xBE2C ^ s.n as u64);
+        let mut written = 0usize;
+        while written < s.n {
+            let batch = (s.n - written).min(8192);
+            for row in gaussian_clusters(&mut rng, batch, dim, 16, 1.0) {
+                w.push_vector(&row).unwrap();
+            }
+            written += batch;
+        }
+        w.finish().unwrap();
+    }
+    let write_s = t0.elapsed().as_secs_f64();
+
+    let cfg = PipelineConfig {
+        dim: k,
+        landmarks: s.l,
+        landmark_method: s.landmark_method,
+        backend: OseBackend::Opt,
+        lsmds: LsmdsConfig { dim: k, max_iters: 60, ..Default::default() },
+        base_solver: BaseSolver::DivideConquer { blocks: s.blocks, anchors: 0 },
+        stream_chunk: Some(chunk),
+        ose_steps: Some(8),
+        ..Default::default()
+    };
+
+    let budget_bytes = cache_budget
+        + s.l * s.l * 4 * 2      // divide sub-matrices / landmark config
+        + 2 * chunk * s.l * 4    // in-flight stream blocks
+        + s.n * k * 4            // output
+        + s.n * 8                // rest-index bookkeeping
+        + (16 << 20); // slack
+
+    let baseline = LIVE.load(Ordering::Relaxed);
+    PEAK.store(baseline, Ordering::Relaxed);
+    let t0 = std::time::Instant::now();
+    let table = ObjectTable::open_pread(&path, cache_budget).unwrap();
+    let source = TableDelta::vectors(&table, &Euclidean).unwrap();
+    let result = embed_corpus(&source, &cfg, backend).unwrap();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let peak = PEAK.load(Ordering::Relaxed).saturating_sub(baseline);
+
+    assert!(result.coords.data.iter().all(|v| v.is_finite()));
+    let stress =
+        sampled_normalized_stress(&source, &result.coords, 200_000, 3);
+    std::fs::remove_file(&path).ok();
+
+    let t = &result.timings;
+    Row {
+        name: format!("outofcore embed N={} L={} ({:?})", s.n, s.l, s.landmark_method),
+        n: s.n,
+        l: s.l,
+        full_delta_gb: (s.n as f64) * (s.n as f64) * 4.0 / 1e9,
+        write_s,
+        wall_s,
+        select_s: t.select_s,
+        base_s: t.delta_ll_s + t.lsmds_s,
+        stream_s: t.delta_ml_s.max(t.ose_s),
+        peak_mb: peak as f64 / 1e6,
+        budget_mb: budget_bytes as f64 / 1e6,
+        within_budget: peak < budget_bytes,
+        stress,
+    }
+}
+
+fn main() {
+    lmds_ose::util::logging::init();
+    let quick_mode = std::env::var("LMDS_BENCH_QUICK").is_ok();
+    let backend = Backend::native();
+    let cache_budget = 32 << 20;
+
+    // N = 50k: the full N x N delta matrix would be 10 GB (> 8 GB), and
+    // even the N x L out-of-sample block is 200 MB — neither exists here.
+    let mut subjects = vec![Subject {
+        n: 50_000,
+        l: 1000,
+        blocks: 8,
+        landmark_method: if quick_mode {
+            LandmarkMethod::Random
+        } else {
+            LandmarkMethod::Fps
+        },
+    }];
+    if !quick_mode {
+        subjects.push(Subject {
+            n: 200_000,
+            l: 1000,
+            blocks: 16,
+            landmark_method: LandmarkMethod::Random,
+        });
+    }
+
+    let mut rows = Vec::new();
+    for s in &subjects {
+        println!(
+            "\n== out-of-core embed N={} L={} (full delta would be {:.1} GB) ==",
+            s.n,
+            s.l,
+            (s.n as f64) * (s.n as f64) * 4.0 / 1e9
+        );
+        let row = run_subject(s, &backend, cache_budget);
+        println!(
+            "{}: wall {:.2}s (write {:.2}s | select {:.2}s | base {:.2}s | \
+             stream {:.2}s)",
+            row.name, row.wall_s, row.write_s, row.select_s, row.base_s, row.stream_s
+        );
+        println!(
+            "   peak heap {:.1} MB vs budget {:.1} MB ({}) | sampled stress {:.4}",
+            row.peak_mb,
+            row.budget_mb,
+            if row.within_budget { "WITHIN" } else { "EXCEEDED" },
+            row.stress
+        );
+        assert!(
+            row.within_budget,
+            "peak heap {:.1} MB exceeded the bounded budget {:.1} MB",
+            row.peak_mb,
+            row.budget_mb
+        );
+        rows.push(row);
+    }
+
+    let path = std::env::var("LMDS_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_pr5.json".to_string());
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::Str(r.name.clone())),
+                ("n", Json::Num(r.n as f64)),
+                ("l", Json::Num(r.l as f64)),
+                ("full_delta_gb", Json::Num(r.full_delta_gb)),
+                ("write_s", Json::Num(r.write_s)),
+                ("wall_s", Json::Num(r.wall_s)),
+                ("select_s", Json::Num(r.select_s)),
+                ("base_s", Json::Num(r.base_s)),
+                ("stream_s", Json::Num(r.stream_s)),
+                ("peak_mb", Json::Num(r.peak_mb)),
+                ("budget_mb", Json::Num(r.budget_mb)),
+                ("within_budget", Json::Bool(r.within_budget)),
+                ("sampled_stress", Json::Num(r.stress)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("bench_outofcore".into())),
+        ("backend", Json::Str(backend.name().into())),
+        ("results", Json::Arr(results)),
+    ]);
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {} results to {path}", rows.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -17,23 +17,38 @@ use crate::util::cli::Args;
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
+/// Launcher-facing run settings: every knob the CLI and JSON config
+/// expose, with precedence defaults < JSON < flags.
 pub struct RunConfig {
+    /// Embedding dimension K.
     pub dim: usize,
+    /// Landmark count L (the base-MDS sample).
     pub landmarks: usize,
+    /// How the landmark sample is chosen.
     pub landmark_method: LandmarkMethod,
+    /// Which OSE technique maps non-landmark points.
     pub backend: OseBackend,
+    /// String-metric name (see [`crate::strdist::string_metric_by_name`]).
     pub metric: String,
+    /// Base PRNG seed for the run.
     pub seed: u64,
+    /// Iteration budget of the landmark LSMDS solve.
     pub lsmds_iters: usize,
+    /// NN backend: Adam learning rate.
     pub train_lr: f32,
+    /// NN backend: training epochs.
     pub train_epochs: usize,
+    /// NN backend: hidden-layer sizes.
     pub hidden: [usize; 3],
+    /// Serving: dispatch once this many requests are pending.
     pub max_batch: usize,
+    /// Serving: ... or once the oldest request waited this long (ms).
     pub max_delay_ms: u64,
     /// OSE executor replicas in the serving pool (>= 1).
     pub replicas: usize,
     /// Drift-monitor sliding window in queries; 0 disables the monitor.
     pub drift_window: usize,
+    /// Prefer the PJRT artifact backend when compiled in and loadable.
     pub use_pjrt: bool,
     /// `Some(rows)`: run the pipeline's OSE stage through the bounded-
     /// memory streaming path in chunks of this many rows (0 disables,
@@ -48,6 +63,21 @@ pub struct RunConfig {
     /// Divide-and-conquer only: shared anchor count (0 = auto, sqrt(L)
     /// clamped to [2(dim+1), 512]).
     pub base_anchors: usize,
+    /// Out-of-core mode: path of a corpus file written by
+    /// `lmds-ose corpus` (or [`crate::data::source::CorpusWriter`]).
+    /// When set, the embed pipeline runs
+    /// [`crate::coordinator::embedder::embed_corpus`] against the
+    /// on-disk object table instead of generating an in-memory dataset.
+    pub corpus: Option<String>,
+    /// Out-of-core mode: block-cache byte budget in MiB for the pread
+    /// storage backend (ignored under mmap, where the OS page cache
+    /// governs residency). 0 keeps the cache at its one-block floor.
+    pub corpus_cache_mb: usize,
+    /// Optimisation-OSE budget: `Some(steps)` runs a fixed number of
+    /// majorization steps per embedding with early stopping disabled
+    /// (bit-reproducible across stream chunk sizes); `None`/0 keeps the
+    /// adaptive default. See [`PipelineConfig::ose_steps`].
+    pub ose_steps: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -72,6 +102,9 @@ impl Default for RunConfig {
             base_solver: "monolithic".into(),
             base_blocks: 8,
             base_anchors: 0,
+            corpus: None,
+            corpus_cache_mb: 64,
+            ose_steps: None,
         }
     }
 }
@@ -87,6 +120,8 @@ impl RunConfig {
         Ok(cfg)
     }
 
+    /// Overlay settings from a parsed JSON document (unknown keys are
+    /// ignored; bad values are errors).
     pub fn apply_json(&mut self, json: &Json) -> Result<()> {
         let usize_of = |j: &Json, key: &str| -> Result<Option<usize>> {
             match j.get(key) {
@@ -168,6 +203,15 @@ impl RunConfig {
         if let Some(v) = usize_of(json, "base_anchors")? {
             self.base_anchors = v;
         }
+        if let Some(v) = json.get("corpus").and_then(Json::as_str) {
+            self.corpus = if v.is_empty() { None } else { Some(v.to_string()) };
+        }
+        if let Some(v) = usize_of(json, "corpus_cache_mb")? {
+            self.corpus_cache_mb = v;
+        }
+        if let Some(v) = usize_of(json, "ose_steps")? {
+            self.ose_steps = if v == 0 { None } else { Some(v) };
+        }
         Ok(())
     }
 
@@ -227,7 +271,22 @@ impl RunConfig {
         if args.get("base-anchors").is_some() {
             self.base_anchors = args.usize("base-anchors")?;
         }
+        if let Some(v) = args.get("corpus") {
+            self.corpus = if v.is_empty() { None } else { Some(v.to_string()) };
+        }
+        if args.get("corpus-cache-mb").is_some() {
+            self.corpus_cache_mb = args.usize("corpus-cache-mb")?;
+        }
+        if args.get("ose-steps").is_some() {
+            let v = args.usize("ose-steps")?;
+            self.ose_steps = if v == 0 { None } else { Some(v) };
+        }
         Ok(())
+    }
+
+    /// Block-cache byte budget for the out-of-core table's pread backend.
+    pub fn corpus_cache_bytes(&self) -> usize {
+        self.corpus_cache_mb << 20
     }
 
     /// The typed base-solver selection. Parse paths validate the name up
@@ -244,6 +303,7 @@ impl RunConfig {
             })
     }
 
+    /// Derive the embedding-pipeline configuration from this run config.
     pub fn pipeline(&self) -> PipelineConfig {
         PipelineConfig {
             dim: self.dim,
@@ -266,10 +326,12 @@ impl RunConfig {
             nn_bootstrap: true,
             stream_chunk: self.stream_chunk,
             base_solver: self.base(),
+            ose_steps: self.ose_steps,
             seed: self.seed,
         }
     }
 
+    /// Derive the serving batcher configuration from this run config.
     pub fn batcher(&self) -> BatcherConfig {
         BatcherConfig {
             max_batch: self.max_batch,
@@ -404,6 +466,62 @@ mod tests {
         assert!(cfg
             .apply_json(&Json::parse(r#"{"base_blocks": 0}"#).unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn corpus_keys_round_trip() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.corpus, None);
+        assert_eq!(cfg.corpus_cache_mb, 64);
+        cfg.apply_json(
+            &Json::parse(r#"{"corpus": "data/names.tbl", "corpus_cache_mb": 16}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.corpus.as_deref(), Some("data/names.tbl"));
+        assert_eq!(cfg.corpus_cache_bytes(), 16 << 20);
+
+        let specs = vec![
+            OptSpec { name: "corpus", help: "", takes_value: true, default: None },
+            OptSpec {
+                name: "corpus-cache-mb",
+                help: "",
+                takes_value: true,
+                default: None,
+            },
+        ];
+        let argv: Vec<String> = ["--corpus", "other.tbl", "--corpus-cache-mb", "8"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&argv, &specs).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.corpus.as_deref(), Some("other.tbl"));
+        assert_eq!(cfg.corpus_cache_mb, 8);
+        // empty string disables out-of-core mode
+        cfg.apply_json(&Json::parse(r#"{"corpus": ""}"#).unwrap()).unwrap();
+        assert_eq!(cfg.corpus, None);
+    }
+
+    #[test]
+    fn ose_steps_round_trips_with_zero_disabling() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.ose_steps, None);
+        cfg.apply_json(&Json::parse(r#"{"ose_steps": 24}"#).unwrap()).unwrap();
+        assert_eq!(cfg.ose_steps, Some(24));
+        assert_eq!(cfg.pipeline().ose_steps, Some(24));
+
+        let specs = vec![OptSpec {
+            name: "ose-steps",
+            help: "",
+            takes_value: true,
+            default: None,
+        }];
+        let argv: Vec<String> =
+            ["--ose-steps", "0"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv, &specs).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.ose_steps, None, "0 restores the adaptive default");
     }
 
     #[test]

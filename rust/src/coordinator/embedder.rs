@@ -12,13 +12,20 @@
 //! `(N-L) x L` dissimilarity matrix is never materialised, and block
 //! construction overlaps embedding.
 
+use std::borrow::Borrow;
+
 use anyhow::Result;
 
+use crate::data::source::{TableDelta, TableMetric};
 use crate::mds::dissimilarity::{cross_matrix, full_matrix};
-use crate::mds::divide::{block_seed, divide_solve_with, DivideConfig};
-use crate::mds::landmarks::select_landmarks;
+use crate::mds::divide::{
+    block_seed, divide_solve_with, fps_anchors, sampled_normalized_stress,
+    DeltaSource, DivideConfig, SubsetDelta,
+};
+use crate::mds::landmarks::{random_landmarks, select_landmarks};
 use crate::mds::{LandmarkMethod, LsmdsConfig, Matrix};
 use crate::nn::MlpShape;
+use crate::ose::pipeline::{embed_stream_blocks, StreamStats, DEFAULT_STREAM_CHUNK};
 use crate::ose::{OseMethod, OseMethodFactory};
 use crate::runtime::{Backend, ComputeBackend};
 use crate::strdist::Dissimilarity;
@@ -38,6 +45,7 @@ pub enum OseBackend {
 }
 
 impl OseBackend {
+    /// Parse the config/CLI name of an OSE backend.
     pub fn from_name(s: &str) -> Option<Self> {
         match s {
             "nn" | "neural" => Some(Self::Nn),
@@ -58,7 +66,12 @@ pub enum BaseSolver {
     /// stitched with orthogonal Procrustes fits — O(L^2/B) work per
     /// sweep, blocks in parallel. `anchors = 0` picks
     /// [`crate::mds::divide::auto_anchors`].
-    DivideConquer { blocks: usize, anchors: usize },
+    DivideConquer {
+        /// Number of blocks B (>= 1).
+        blocks: usize,
+        /// Shared anchor count A (0 = auto).
+        anchors: usize,
+    },
 }
 
 impl BaseSolver {
@@ -76,12 +89,41 @@ impl BaseSolver {
 }
 
 #[derive(Clone, Debug)]
+/// Everything the two-stage pipeline needs to run (see
+/// [`embed_dataset`] / [`embed_corpus`] for the in-memory and
+/// out-of-core drivers that consume it).
+///
+/// ```
+/// use lmds_ose::coordinator::embedder::{embed_dataset, OseBackend, PipelineConfig};
+/// use lmds_ose::mds::LsmdsConfig;
+/// use lmds_ose::runtime::Backend;
+/// use lmds_ose::strdist::Levenshtein;
+///
+/// let names = ["anna", "annie", "bob", "bobby", "carol", "carla",
+///              "dan", "danny", "erin", "erica", "frank", "frances"];
+/// let cfg = PipelineConfig {
+///     dim: 2,
+///     landmarks: 6,
+///     backend: OseBackend::Opt,
+///     lsmds: LsmdsConfig { dim: 2, max_iters: 40, ..Default::default() },
+///     ..Default::default()
+/// };
+/// let r = embed_dataset(&names, &Levenshtein, &cfg, &Backend::native()).unwrap();
+/// assert_eq!((r.coords.rows, r.coords.cols), (12, 2));
+/// assert_eq!(r.landmark_idx.len(), 6);
+/// ```
 pub struct PipelineConfig {
+    /// Embedding dimension K.
     pub dim: usize,
+    /// Landmark count L.
     pub landmarks: usize,
+    /// How the landmark sample is chosen.
     pub landmark_method: LandmarkMethod,
+    /// Which OSE technique maps non-landmark points.
     pub backend: OseBackend,
+    /// Stage-1 LSMDS solver settings (dim/seed are overridden per run).
     pub lsmds: LsmdsConfig,
+    /// NN backend: trainer settings.
     pub train: TrainConfig,
     /// Hidden sizes of the NN head.
     pub hidden: [usize; 3],
@@ -104,6 +146,16 @@ pub struct PipelineConfig {
     pub stream_chunk: Option<usize>,
     /// How the landmark base MDS (stage 1) is solved.
     pub base_solver: BaseSolver,
+    /// Optimisation-OSE budget override: `Some(steps)` runs every
+    /// embedding for exactly that many majorization steps with early
+    /// stopping disabled. Fixed work makes streamed output bit-identical
+    /// across chunk sizes (adaptive stopping decides per chunk, see
+    /// [`crate::ose::pipeline`]) and bounds per-row cost for benches;
+    /// `None` keeps the adaptive default (200 steps, rel_tol 1e-7).
+    /// Ignored by the NN backend.
+    pub ose_steps: Option<usize>,
+    /// Base PRNG seed for the run (landmark selection and solver init
+    /// streams are derived from it).
     pub seed: u64,
 }
 
@@ -120,8 +172,24 @@ impl Default for PipelineConfig {
             nn_bootstrap: true,
             stream_chunk: None,
             base_solver: BaseSolver::Monolithic,
+            ose_steps: None,
             seed: 1234,
         }
+    }
+}
+
+/// Build the optimisation-OSE replica factory honouring
+/// [`PipelineConfig::ose_steps`].
+fn opt_factory(
+    cfg: &PipelineConfig,
+    backend: &Backend,
+    landmarks: Matrix,
+) -> std::sync::Arc<dyn OseMethodFactory> {
+    match cfg.ose_steps {
+        Some(steps) => {
+            BackendOpt::replica_factory_budget(backend.clone(), landmarks, steps.max(1))
+        }
+        None => BackendOpt::replica_factory(backend.clone(), landmarks),
     }
 }
 
@@ -142,16 +210,26 @@ pub struct PipelineResult {
     pub factory: std::sync::Arc<dyn OseMethodFactory>,
     /// Normalised stress of the landmark configuration.
     pub landmark_stress: f64,
+    /// Wall-clock breakdown of the pipeline phases.
     pub timings: PipelineTimings,
 }
 
 #[derive(Clone, Debug, Default)]
+/// Per-phase wall-clock seconds of one pipeline run. In streaming mode
+/// the dissimilarity and OSE stages overlap, so their sum can exceed
+/// the end-to-end wall time.
 pub struct PipelineTimings {
+    /// Landmark selection.
     pub select_s: f64,
+    /// L x L dissimilarity build (or its out-of-core equivalent).
     pub delta_ll_s: f64,
+    /// Base MDS solve.
     pub lsmds_s: f64,
+    /// NN training (0 for the optimisation backend).
     pub train_s: f64,
+    /// Out-of-sample dissimilarity rows (producer side when streaming).
     pub delta_ml_s: f64,
+    /// OSE embedding (consumer side when streaming).
     pub ose_s: f64,
 }
 
@@ -221,22 +299,84 @@ pub fn solve_base(
     match solver {
         BaseSolver::Monolithic => lsmds_landmarks(delta, cfg, backend),
         BaseSolver::DivideConquer { blocks, anchors } => {
-            let dcfg = DivideConfig { blocks, anchors };
-            let r = divide_solve_with(delta, cfg.dim, &dcfg, cfg.seed, |b, sub| {
-                let mut c = cfg.clone();
-                c.seed = block_seed(cfg.seed, b as u64);
-                lsmds_landmarks_config(sub, &c, backend)
-            })?;
-            log::debug!(
-                "divide base solve: {} blocks (sizes {:?}), {} anchors, \
-                 stitch rmsd {:?}",
-                r.block_sizes.len(),
-                r.block_sizes,
-                r.anchor_idx.len(),
-                r.align_rmsd
+            let config = divide_base_config(delta, cfg, blocks, anchors, backend)?;
+            let stress = crate::mds::stress::normalized_stress(&config, delta);
+            Ok((config, stress))
+        }
+    }
+}
+
+/// Pairs sampled by the out-of-core quality estimate
+/// ([`crate::mds::divide::sampled_normalized_stress`]) when the exact
+/// O(L^2) stress would require materialising the matrix the out-of-core
+/// path exists to avoid.
+pub const OUT_OF_CORE_STRESS_PAIRS: usize = 100_000;
+
+/// The shared divide-and-conquer driver behind [`solve_base`] and
+/// [`solve_base_source`]: one code path, so a disk-backed source and the
+/// equivalent materialised matrix produce bit-identical configurations
+/// (the contract of the parity suite in `tests/outofcore.rs`).
+fn divide_base_config<S>(
+    source: &S,
+    cfg: &LsmdsConfig,
+    blocks: usize,
+    anchors: usize,
+    backend: &Backend,
+) -> Result<Matrix>
+where
+    S: DeltaSource + ?Sized,
+{
+    let dcfg = DivideConfig { blocks, anchors };
+    let r = divide_solve_with(source, cfg.dim, &dcfg, cfg.seed, |b, sub| {
+        let mut c = cfg.clone();
+        c.seed = block_seed(cfg.seed, b as u64);
+        lsmds_landmarks_config(sub, &c, backend)
+    })?;
+    log::debug!(
+        "divide base solve: {} blocks (sizes {:?}), {} anchors, \
+         stitch rmsd {:?}",
+        r.block_sizes.len(),
+        r.block_sizes,
+        r.anchor_idx.len(),
+        r.align_rmsd
+    );
+    Ok(r.config)
+}
+
+/// [`solve_base`] over any [`DeltaSource`] — the entry point when the
+/// landmark dissimilarities live behind a matrix-free or disk-backed
+/// source instead of a materialised `Matrix`.
+///
+/// The monolithic solver still needs the full L x L sub-matrix and
+/// materialises it here (that path is chosen for fidelity, not memory);
+/// the divide-and-conquer solver reads only per-block sub-matrices and
+/// scores quality with the sampled stress estimator
+/// ([`OUT_OF_CORE_STRESS_PAIRS`] pairs, deterministic in the seed) so no
+/// O(L^2) pass over the source is ever made.
+pub fn solve_base_source<S>(
+    source: &S,
+    cfg: &LsmdsConfig,
+    solver: BaseSolver,
+    backend: &Backend,
+) -> Result<(Matrix, f64)>
+where
+    S: DeltaSource + ?Sized,
+{
+    match solver {
+        BaseSolver::Monolithic => {
+            let all: Vec<usize> = (0..source.len()).collect();
+            let delta = source.sub_matrix(&all);
+            lsmds_landmarks(&delta, cfg, backend)
+        }
+        BaseSolver::DivideConquer { blocks, anchors } => {
+            let config = divide_base_config(source, cfg, blocks, anchors, backend)?;
+            let stress = sampled_normalized_stress(
+                source,
+                &config,
+                OUT_OF_CORE_STRESS_PAIRS,
+                cfg.seed,
             );
-            let stress = crate::mds::stress::normalized_stress(&r.config, delta);
-            Ok((r.config, stress))
+            Ok((config, stress))
         }
     }
 }
@@ -343,9 +483,7 @@ pub fn embed_dataset<T: Sync + ?Sized>(
             timings.train_s = report.wall_s;
             BackendNn::replica_factory(backend.clone(), params)
         }
-        OseBackend::Opt => {
-            BackendOpt::replica_factory(backend.clone(), landmark_config.clone())
-        }
+        OseBackend::Opt => opt_factory(cfg, backend, landmark_config.clone()),
     };
     let mut method = factory.build();
 
@@ -401,6 +539,230 @@ pub fn embed_dataset<T: Sync + ?Sized>(
         landmark_stress,
         timings,
     })
+}
+
+/// The full pipeline over an out-of-core corpus: both stages run against
+/// a [`TableDelta`] whose objects stay on disk, so peak memory is
+/// O(L² + cache budget + stream chunks + N·K output) — independent of
+/// the corpus payload size.
+///
+/// Differences from [`embed_dataset`] (which holds all N objects in
+/// RAM):
+///
+/// - **Landmark selection** runs on the [`DeltaSource`] itself:
+///   [`LandmarkMethod::Random`] samples indices without touching the
+///   data; the FPS variants use
+///   [`fps_anchors`](crate::mds::divide::fps_anchors) (O(L·N) metric
+///   evaluations at the storage layer).
+/// - **Stage 1** solves the landmark sample through
+///   [`solve_base_source`] over a [`SubsetDelta`] view — with the
+///   divide-and-conquer solver the L x L matrix is only materialised
+///   when the NN backend needs it as a training set.
+/// - **Stage 2** always streams ([`crate::ose::pipeline`]): the producer
+///   reads each chunk's rows straight from the table
+///   (`stream_chunk` rows at a time, default
+///   [`DEFAULT_STREAM_CHUNK`]), builds the chunk's dissimilarity block
+///   and hands it across the rendezvous channel while the previous
+///   block embeds. `nn_bootstrap` is skipped exactly as in streaming
+///   mode — bootstrap labels would need the full N x L matrix.
+pub fn embed_corpus(
+    source: &TableDelta<'_>,
+    cfg: &PipelineConfig,
+    backend: &Backend,
+) -> Result<PipelineResult> {
+    let table = source.table();
+    let n = table.len();
+    anyhow::ensure!(
+        cfg.landmarks <= n,
+        "more landmarks ({}) than corpus records ({n})",
+        cfg.landmarks
+    );
+    let mut timings = PipelineTimings::default();
+
+    // 1. landmark selection at the storage layer
+    let t0 = std::time::Instant::now();
+    let landmark_idx = match cfg.landmark_method {
+        LandmarkMethod::Random => {
+            random_landmarks(&mut Rng::new(cfg.seed), n, cfg.landmarks)
+        }
+        // both FPS flavours run true FPS on the source: the candidate-
+        // pool shortcut needs object refs, which is the thing we lack
+        LandmarkMethod::Fps | LandmarkMethod::MaxMinPool => {
+            fps_anchors(source, cfg.landmarks, cfg.seed)
+        }
+    };
+    timings.select_s = t0.elapsed().as_secs_f64();
+
+    // 2. base solve over the landmark subset. The L x L matrix is
+    //    materialised only when a consumer genuinely needs it (the
+    //    monolithic solver, or the NN training set); the divide solver
+    //    reads per-block sub-matrices off the source.
+    let sub = SubsetDelta::new(source, &landmark_idx);
+    let mut lcfg = cfg.lsmds.clone();
+    lcfg.dim = cfg.dim;
+    lcfg.seed = cfg.seed ^ 0x5eed;
+    let needs_delta_ll = matches!(cfg.base_solver, BaseSolver::Monolithic)
+        || cfg.backend == OseBackend::Nn;
+    let t0 = std::time::Instant::now();
+    let delta_ll: Option<Matrix> = if needs_delta_ll {
+        let all: Vec<usize> = (0..sub.len()).collect();
+        Some(sub.sub_matrix(&all))
+    } else {
+        None
+    };
+    timings.delta_ll_s = t0.elapsed().as_secs_f64();
+
+    let t0 = std::time::Instant::now();
+    let (landmark_config, landmark_stress) = match (cfg.base_solver, &delta_ll) {
+        (BaseSolver::Monolithic, Some(d)) => lsmds_landmarks(d, &lcfg, backend)?,
+        (BaseSolver::Monolithic, None) => unreachable!("needs_delta_ll is true"),
+        (BaseSolver::DivideConquer { blocks, anchors }, delta_ll) => {
+            let config = divide_base_config(&sub, &lcfg, blocks, anchors, backend)?;
+            let stress = match delta_ll {
+                Some(d) => crate::mds::stress::normalized_stress(&config, d),
+                None => sampled_normalized_stress(
+                    &sub,
+                    &config,
+                    OUT_OF_CORE_STRESS_PAIRS,
+                    lcfg.seed,
+                ),
+            };
+            (config, stress)
+        }
+    };
+    timings.lsmds_s = t0.elapsed().as_secs_f64();
+
+    // 3. OSE method factory (identical replica semantics to
+    //    embed_dataset)
+    let factory: std::sync::Arc<dyn OseMethodFactory> = match cfg.backend {
+        OseBackend::Nn => {
+            let delta_ll = delta_ll.as_ref().expect("needs_delta_ll covers Nn");
+            if cfg.nn_bootstrap && n > landmark_idx.len() {
+                log::warn!(
+                    "out-of-core mode: nn_bootstrap skipped — the NN trains on \
+                     the {} landmark rows only (weaker than the bootstrapped \
+                     protocol; use the opt backend if quality matters more \
+                     than memory)",
+                    delta_ll.rows
+                );
+            }
+            let shape = MlpShape {
+                input: cfg.landmarks,
+                hidden: cfg.hidden,
+                output: cfg.dim,
+            };
+            let (params, report) =
+                train_backend(backend, &shape, delta_ll, &landmark_config, 256, &cfg.train)?;
+            log::info!(
+                "nn-ose trained: epochs={} loss={:.4} ({:.2}s)",
+                report.epochs_run,
+                report.final_loss,
+                report.wall_s
+            );
+            timings.train_s = report.wall_s;
+            BackendNn::replica_factory(backend.clone(), params)
+        }
+        OseBackend::Opt => opt_factory(cfg, backend, landmark_config.clone()),
+    };
+    let mut method = factory.build();
+
+    // 4. landmark objects are the only rows pinned in RAM (L of them);
+    //    everything else streams through stage 2
+    let rest_idx: Vec<usize> = (0..n)
+        .filter(|i| landmark_idx.binary_search(i).is_err())
+        .collect();
+    let mut coords = Matrix::zeros(n, cfg.dim);
+    for (r, &i) in landmark_idx.iter().enumerate() {
+        coords.row_mut(i).copy_from_slice(landmark_config.row(r));
+    }
+    let chunk = cfg.stream_chunk.filter(|&c| c > 0).unwrap_or(DEFAULT_STREAM_CHUNK);
+    let stats = match source.metric() {
+        TableMetric::Text(metric) => {
+            let lm_owned = table.text_rows(&landmark_idx);
+            let lm_refs: Vec<&str> = lm_owned.iter().map(String::as_str).collect();
+            stream_corpus_chunks(
+                &rest_idx,
+                &lm_refs,
+                *metric,
+                &mut *method,
+                chunk,
+                |idx| table.text_rows(idx),
+                &mut coords,
+            )?
+        }
+        TableMetric::Vector(metric) => {
+            let lm_owned = table.vector_rows(&landmark_idx);
+            let lm_refs: Vec<&[f32]> = lm_owned.iter().map(Vec::as_slice).collect();
+            stream_corpus_chunks(
+                &rest_idx,
+                &lm_refs,
+                *metric,
+                &mut *method,
+                chunk,
+                |idx| table.vector_rows(idx),
+                &mut coords,
+            )?
+        }
+    };
+    timings.delta_ml_s = stats.produce_s;
+    timings.ose_s = stats.embed_s;
+
+    Ok(PipelineResult {
+        landmark_idx,
+        landmark_config,
+        coords,
+        method,
+        factory,
+        landmark_stress,
+        timings,
+    })
+}
+
+/// Stage-2 driver for [`embed_corpus`]: stream the non-landmark rows
+/// through the bounded-memory pipeline, fetching each chunk's objects
+/// from storage on the producer thread (`fetch` materialises at most one
+/// chunk of owned rows at a time) and scattering embedded rows into
+/// `coords` by their global index.
+fn stream_corpus_chunks<T, O, F>(
+    rest_idx: &[usize],
+    landmark_refs: &[&T],
+    metric: &dyn Dissimilarity<T>,
+    method: &mut dyn OseMethod,
+    chunk: usize,
+    fetch: F,
+    coords: &mut Matrix,
+) -> Result<StreamStats>
+where
+    T: Sync + ?Sized,
+    O: Borrow<T>,
+    F: Fn(&[usize]) -> Vec<O> + Send,
+{
+    anyhow::ensure!(
+        landmark_refs.len() == method.landmarks(),
+        "method expects {} landmarks, got {}",
+        method.landmarks(),
+        landmark_refs.len()
+    );
+    embed_stream_blocks(
+        rest_idx.len(),
+        chunk,
+        // move: the producer closure crosses into the producer thread,
+        // so it owns `fetch` (the shared refs it also captures are Copy)
+        move |start, end| {
+            let owned = fetch(&rest_idx[start..end]);
+            let refs: Vec<&T> = owned.iter().map(Borrow::borrow).collect();
+            cross_matrix(&refs, landmark_refs, metric)
+        },
+        method,
+        |start, block| {
+            for r in 0..block.rows {
+                coords
+                    .row_mut(rest_idx[start + r])
+                    .copy_from_slice(block.row(r));
+            }
+            Ok(())
+        },
+    )
 }
 
 #[cfg(test)]
@@ -544,6 +906,114 @@ mod tests {
             dc.landmark_stress,
             mono.landmark_stress
         );
+    }
+
+    fn write_name_corpus(seed: u64, n: usize) -> std::path::PathBuf {
+        let mut geco = Geco::new(GecoConfig { seed, ..Default::default() });
+        let names = geco.generate_unique(n);
+        let mut path = std::env::temp_dir();
+        path.push(format!("lmds_embedder_corpus_{seed}_{n}_{}", std::process::id()));
+        let mut w = crate::data::source::CorpusWriter::create_text(&path).unwrap();
+        for name in &names {
+            w.push_text(name).unwrap();
+        }
+        w.finish().unwrap();
+        path
+    }
+
+    #[test]
+    fn corpus_pipeline_runs_and_is_chunk_invariant() {
+        let path = write_name_corpus(21, 90);
+        let table =
+            crate::data::source::ObjectTable::open(&path, 1 << 20).unwrap();
+        let source = TableDelta::text(&table, &Levenshtein).unwrap();
+        let base = PipelineConfig {
+            dim: 3,
+            landmarks: 25,
+            backend: OseBackend::Opt,
+            lsmds: LsmdsConfig { max_iters: 80, dim: 3, ..Default::default() },
+            base_solver: BaseSolver::DivideConquer { blocks: 3, anchors: 8 },
+            stream_chunk: Some(16),
+            // fixed-work mode: adaptive early stopping decides per chunk,
+            // which would break the bit-equality assertion below
+            ose_steps: Some(12),
+            ..Default::default()
+        };
+        let a = embed_corpus(&source, &base, &Backend::native()).unwrap();
+        assert_eq!((a.coords.rows, a.coords.cols), (90, 3));
+        assert_eq!(a.landmark_idx.len(), 25);
+        assert!(a.coords.data.iter().all(|v| v.is_finite()));
+        for (row, &i) in a.landmark_idx.iter().enumerate() {
+            assert_eq!(a.coords.row(i), a.landmark_config.row(row));
+        }
+        // the opt method embeds rows independently with a fixed step
+        // budget: chunking must not change a single bit
+        let b = embed_corpus(
+            &source,
+            &PipelineConfig { stream_chunk: Some(7), ..base.clone() },
+            &Backend::native(),
+        )
+        .unwrap();
+        assert_eq!(a.landmark_idx, b.landmark_idx);
+        assert_eq!(a.coords.data, b.coords.data, "chunk size changed the result");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corpus_pipeline_monolithic_nn_and_random_selection() {
+        let path = write_name_corpus(22, 70);
+        let table =
+            crate::data::source::ObjectTable::open(&path, 1 << 20).unwrap();
+        let source = TableDelta::text(&table, &Levenshtein).unwrap();
+        let cfg = PipelineConfig {
+            dim: 2,
+            landmarks: 20,
+            landmark_method: LandmarkMethod::Random,
+            backend: OseBackend::Nn,
+            hidden: [16, 8, 8],
+            train: TrainConfig { epochs: 15, ..Default::default() },
+            lsmds: LsmdsConfig { max_iters: 60, dim: 2, ..Default::default() },
+            ..Default::default()
+        };
+        let r = embed_corpus(&source, &cfg, &Backend::native()).unwrap();
+        assert_eq!(r.coords.rows, 70);
+        assert_eq!(r.method.name(), "nn-native");
+        assert!(r.coords.data.iter().all(|v| v.is_finite()));
+        assert!(r.landmark_stress < 0.6, "stress {}", r.landmark_stress);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn solve_base_source_matches_solve_base_on_matrices() {
+        // the same divide solve through both entry points must agree on
+        // the configuration bits (stress estimators legitimately differ)
+        let mut geco = Geco::new(GecoConfig { seed: 23, ..Default::default() });
+        let names = geco.generate_unique(40);
+        let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let delta = full_matrix(&objs, &Levenshtein);
+        let lcfg = LsmdsConfig { dim: 2, max_iters: 60, ..Default::default() };
+        let solver = BaseSolver::DivideConquer { blocks: 2, anchors: 6 };
+        let (a, exact) =
+            solve_base(&delta, &lcfg, solver, &Backend::native()).unwrap();
+        let (b, sampled) =
+            solve_base_source(&delta, &lcfg, solver, &Backend::native()).unwrap();
+        assert_eq!(a.data, b.data);
+        assert!(
+            (exact - sampled).abs() < 0.1 * (1.0 + exact),
+            "exact {exact} vs sampled {sampled}"
+        );
+        // monolithic path: source version materialises, then identical
+        let (c, _) =
+            solve_base(&delta, &lcfg, BaseSolver::Monolithic, &Backend::native())
+                .unwrap();
+        let (d, _) = solve_base_source(
+            &delta,
+            &lcfg,
+            BaseSolver::Monolithic,
+            &Backend::native(),
+        )
+        .unwrap();
+        assert_eq!(c.data, d.data);
     }
 
     #[test]

@@ -17,11 +17,14 @@ use crate::runtime::{Backend, ComputeBackend};
 /// The neural-network OSE (paper Sec. 4.2): a trained MLP maps a row of
 /// landmark distances straight to coordinates.
 pub struct BackendNn {
+    /// Compute backend the forward pass runs on.
     pub backend: Backend,
+    /// Trained MLP parameters.
     pub params: MlpParams,
 }
 
 impl BackendNn {
+    /// Wrap trained parameters for serving on `backend`.
     pub fn new(backend: Backend, params: MlpParams) -> Self {
         Self { backend, params }
     }
@@ -68,7 +71,9 @@ impl OseMethod for BackendNn {
 /// stopping over the per-chunk objectives the backend reports (matching
 /// the serial oracle's `rel_tol` behaviour at batch granularity).
 pub struct BackendOpt {
+    /// Compute backend the majorization steps run on.
     pub backend: Backend,
+    /// L x K landmark configuration the objective is anchored to.
     pub landmarks: Matrix,
     /// Total majorization steps per embedding (iterated in backend-sized
     /// chunks, warm-starting each chunk from the previous iterate).
@@ -95,6 +100,28 @@ impl BackendOpt {
     ) -> Arc<dyn OseMethodFactory> {
         factory_fn(move || {
             Box::new(Self::with_defaults(backend.clone(), landmarks.clone()))
+        })
+    }
+
+    /// Replica factory with an explicit fixed budget: every embedding
+    /// runs exactly `total_steps` majorization steps (early stopping
+    /// disabled). Fixed work makes chunked/streamed embedding
+    /// bit-identical across chunk sizes — the mode the out-of-core
+    /// pipeline uses for reproducible large-N runs — and bounds
+    /// worst-case latency for benches.
+    pub fn replica_factory_budget(
+        backend: Backend,
+        landmarks: Matrix,
+        total_steps: usize,
+    ) -> Arc<dyn OseMethodFactory> {
+        factory_fn(move || {
+            Box::new(Self {
+                backend: backend.clone(),
+                landmarks: landmarks.clone(),
+                total_steps,
+                lr: None,
+                rel_tol: 0.0,
+            })
         })
     }
 }

@@ -22,11 +22,19 @@ const DRIFT_WARMUP: u8 = 1;
 const DRIFT_HEALTHY: u8 = 2;
 const DRIFT_DRIFTED: u8 = 3;
 
+/// Lock-light serving counters + bounded latency/batch distributions.
+/// Everything is safe to bump from any thread; [`Metrics::snapshot`]
+/// produces a consistent-enough point-in-time view for reporting.
 pub struct Metrics {
+    /// Requests accepted.
     pub requests: AtomicU64,
+    /// Requests answered successfully.
     pub completed: AtomicU64,
+    /// Requests answered with an error.
     pub failed: AtomicU64,
+    /// Executor batches dispatched.
     pub batches: AtomicU64,
+    /// Total points across all dispatched batches.
     pub batched_points: AtomicU64,
     /// Batches whose embed panicked (the whole batch got error replies).
     pub panics: AtomicU64,
@@ -68,23 +76,28 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Fresh, zeroed counters.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Count one accepted request.
     pub fn record_request(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one success and fold its end-to-end latency in.
     pub fn record_completed(&self, latency: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.latency.lock().unwrap().push(latency.as_secs_f64());
     }
 
+    /// Count one failed request.
     pub fn record_failed(&self) {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one dispatched batch of `size` points and its execution time.
     pub fn record_batch(&self, size: usize, exec: Duration) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_points.fetch_add(size as u64, Ordering::Relaxed);
@@ -92,22 +105,27 @@ impl Metrics {
         self.batch_sizes.lock().unwrap().push(size as f64);
     }
 
+    /// Record one frontend distance-computation duration.
     pub fn record_dist(&self, d: Duration) {
         self.dist_latency.lock().unwrap().push(d.as_secs_f64());
     }
 
+    /// Count one executor panic (the batch it poisoned was error-replied).
     pub fn record_panic(&self) {
         self.panics.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one replica rebuilt from the factory after a panic.
     pub fn record_replica_restart(&self) {
         self.replica_restarts.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record the current executor replica count.
     pub fn set_replicas(&self, n: usize) {
         self.replicas.store(n as u64, Ordering::Relaxed);
     }
 
+    /// Fold one drift-monitor status into the gauges.
     pub fn record_drift(&self, status: DriftStatus) {
         let enc = match status {
             DriftStatus::Warmup => DRIFT_WARMUP,
@@ -129,6 +147,7 @@ impl Metrics {
             + self.dist_latency.lock().unwrap().footprint()
     }
 
+    /// Point-in-time view of every counter and distribution.
     pub fn snapshot(&self) -> Snapshot {
         let lat = self.latency.lock().unwrap();
         let (p50, p95, p99) = lat.percentiles();
@@ -166,20 +185,35 @@ impl Metrics {
 }
 
 #[derive(Clone, Debug)]
+/// Point-in-time serving metrics (see [`Metrics::snapshot`]).
 pub struct Snapshot {
+    /// Requests accepted.
     pub requests: u64,
+    /// Requests answered successfully.
     pub completed: u64,
+    /// Requests answered with an error.
     pub failed: u64,
+    /// Executor batches dispatched.
     pub batches: u64,
+    /// Executor panics caught and isolated.
     pub panics: u64,
+    /// Replicas rebuilt after panics.
     pub replica_restarts: u64,
+    /// Executor replicas currently serving.
     pub replicas: u64,
+    /// Median request latency (seconds).
     pub p50_s: f64,
+    /// 95th-percentile request latency (seconds).
     pub p95_s: f64,
+    /// 99th-percentile request latency (seconds).
     pub p99_s: f64,
+    /// Mean request latency (seconds).
     pub mean_latency_s: f64,
+    /// Mean points per dispatched batch.
     pub mean_batch_size: f64,
+    /// Mean batch execution time (seconds).
     pub mean_batch_exec_s: f64,
+    /// Mean frontend distance-computation time (seconds).
     pub mean_dist_s: f64,
     /// None when no drift monitor is attached to the server.
     pub drift_status: Option<DriftStatus>,
@@ -190,6 +224,7 @@ pub struct Snapshot {
 }
 
 impl Snapshot {
+    /// One-line human-readable summary for logs and CLI output.
     pub fn report(&self) -> String {
         let drift = match self.drift_status {
             None => String::new(),

@@ -13,7 +13,8 @@ pub mod trainer;
 
 pub use config::RunConfig;
 pub use embedder::{
-    embed_dataset, BaseSolver, OseBackend, PipelineConfig, PipelineResult,
+    embed_corpus, embed_dataset, solve_base_source, BaseSolver, OseBackend,
+    PipelineConfig, PipelineResult,
 };
 pub use methods::{BackendNn, BackendOpt};
 pub use metrics::{Metrics, Snapshot};

@@ -40,6 +40,9 @@ use super::metrics::Metrics;
 use super::stream::{DriftConfig, DriftMonitor};
 
 #[derive(Clone, Debug)]
+/// Dynamic-batching shape of the serving loop: when a batch dispatches,
+/// how deep the queue may grow, and how many frontend/executor workers
+/// run.
 pub struct BatcherConfig {
     /// Dispatch as soon as this many requests are pending.
     pub max_batch: usize,
@@ -73,6 +76,7 @@ impl Default for BatcherConfig {
 pub struct DriftHook {
     /// L x K landmark configuration the monitor scores against.
     pub landmark_config: Matrix,
+    /// Monitor window/calibration settings.
     pub cfg: DriftConfig,
 }
 
@@ -84,7 +88,9 @@ struct DriftState {
 /// A completed query.
 #[derive(Clone, Debug)]
 pub struct QueryResult {
+    /// Embedded coordinates of the query (length K).
     pub coords: Vec<f32>,
+    /// End-to-end latency as measured by the server.
     pub latency: Duration,
 }
 
@@ -108,11 +114,14 @@ pub struct Server<T: ?Sized + Send + Sync + 'static> {
     _frontend: Arc<WorkerPool>,
 }
 
+/// Cheap-to-clone client handle: submits queries into the batching
+/// queue and exposes the shared [`Metrics`].
 pub struct ServerHandle<T: ?Sized + Send + Sync + 'static> {
     landmarks: Arc<Vec<Box<T>>>,
     metric: Arc<dyn Dissimilarity<T> + Send + Sync>,
     pool: Arc<WorkerPool>,
     tx: SyncSender<WorkItem>,
+    /// Shared serving counters (live; see [`Metrics::snapshot`]).
     pub metrics: Arc<Metrics>,
 }
 
@@ -222,6 +231,7 @@ impl<T: ?Sized + Send + Sync + 'static> Server<T> {
         Server { handle: Some(handle), executors, _frontend: pool }
     }
 
+    /// A new client handle onto the running server.
     pub fn handle(&self) -> ServerHandle<T> {
         self.handle.clone().expect("server already shut down")
     }

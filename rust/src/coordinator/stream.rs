@@ -39,6 +39,8 @@ impl DriftStatus {
 }
 
 #[derive(Clone, Debug)]
+/// Drift-monitor settings: window/calibration lengths and the
+/// degradation factor that flips the status.
 pub struct DriftConfig {
     /// Sliding-window length (queries).
     pub window: usize,
@@ -65,6 +67,7 @@ pub struct DriftMonitor {
 }
 
 impl DriftMonitor {
+    /// Monitor with empty calibration and window state.
     pub fn new(cfg: DriftConfig) -> Self {
         Self {
             calibration: Vec::with_capacity(cfg.calibration),
@@ -121,6 +124,7 @@ impl DriftMonitor {
         self.window.clear();
     }
 
+    /// Calibration-median baseline, once enough queries have been seen.
     pub fn baseline(&self) -> Option<f64> {
         self.baseline_median
     }

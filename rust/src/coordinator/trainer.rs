@@ -17,13 +17,18 @@ use crate::runtime::{AdamState, Backend, ComputeBackend};
 use crate::util::prng::Rng;
 
 #[derive(Clone, Debug)]
+/// NN-OSE training settings (Adam + early stopping).
 pub struct TrainConfig {
+    /// Adam learning rate.
     pub lr: f32,
+    /// Maximum training epochs.
     pub epochs: usize,
     /// Stop when the epoch loss improves less than this (relative) for
     /// `patience` consecutive epochs.
     pub rel_tol: f64,
+    /// Early stopping: epochs without improvement before giving up.
     pub patience: usize,
+    /// Seed for init and shuffling.
     pub seed: u64,
 }
 
@@ -34,10 +39,15 @@ impl Default for TrainConfig {
 }
 
 #[derive(Clone, Debug)]
+/// What one training run did.
 pub struct TrainReport {
+    /// Epochs actually executed (early stopping may cut the budget).
     pub epochs_run: usize,
+    /// Final training loss.
     pub final_loss: f64,
+    /// Per-epoch loss trajectory.
     pub loss_history: Vec<f64>,
+    /// Wall-clock seconds spent training.
     pub wall_s: f64,
 }
 

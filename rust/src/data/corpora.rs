@@ -38,6 +38,7 @@ pub const GIVEN_NAMES: &[(&str, f64)] = &[
     ("maria", 5.0), ("heather", 4.0), ("diane", 3.0), ("ruth", 2.0),
 ];
 
+/// (surname, relative frequency weight)
 pub const SURNAMES: &[(&str, f64)] = &[
     ("smith", 100.0), ("jones", 95.0), ("williams", 92.0), ("brown", 90.0),
     ("wilson", 88.0), ("taylor", 86.0), ("johnson", 82.0), ("white", 80.0),

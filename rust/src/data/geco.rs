@@ -35,6 +35,7 @@ pub enum Corruption {
     Phonetic,
 }
 
+/// Every corruption model, for uniform sampling.
 pub const ALL_CORRUPTIONS: &[Corruption] = &[
     Corruption::KeyboardSub,
     Corruption::Insert,
@@ -47,6 +48,7 @@ pub const ALL_CORRUPTIONS: &[Corruption] = &[
 /// Generator configuration (mirrors the Geco CLI knobs we need).
 #[derive(Clone, Debug)]
 pub struct GecoConfig {
+    /// PRNG seed.
     pub seed: u64,
     /// Probability that a generated record is a corrupted duplicate of an
     /// earlier record (0.0 = all unique entities, the paper's main setting).
@@ -71,11 +73,14 @@ impl Default for GecoConfig {
 /// A generated record: the name string plus provenance for evaluation.
 #[derive(Clone, Debug)]
 pub struct Record {
+    /// The (possibly corrupted) generated name.
     pub name: String,
     /// Index of the original record this is a duplicate of (None = original).
     pub duplicate_of: Option<usize>,
 }
 
+/// Geco/FEBRL-style generator of weighted name samples with optional
+/// corrupted duplicates (paper Sec. 5.1).
 pub struct Geco {
     cfg: GecoConfig,
     rng: Rng,
@@ -84,6 +89,7 @@ pub struct Geco {
 }
 
 impl Geco {
+    /// Generator over the built-in corpora with the given settings.
     pub fn new(cfg: GecoConfig) -> Self {
         let rng = Rng::new(cfg.seed);
         Self {
@@ -138,6 +144,68 @@ impl Geco {
             }
         }
         out
+    }
+
+    /// Stream `n` records through `sink` without materialising them —
+    /// the corpus-writer-facing equivalent of [`Geco::generate`] for
+    /// datasets that must never sit in memory whole.
+    ///
+    /// Uniqueness state spans the entire run (unlike calling
+    /// [`Geco::generate`] in batches, which would restart its seen-set
+    /// every batch and re-emit the same ~10^4 clean combinations):
+    /// originals are de-duplicated against the set of *base* names ever
+    /// emitted — bounded by the corpus name space, not by `n`, since
+    /// numerically disambiguated names are unique by construction — and
+    /// duplicates corrupt one of the most recent 1024 originals
+    /// (`duplicate_of` carries that original's global record index), so
+    /// memory stays O(name space + pool) for any `n`. A `sink` error
+    /// aborts the stream.
+    pub fn generate_with<E>(
+        &mut self,
+        n: usize,
+        mut sink: impl FnMut(Record) -> Result<(), E>,
+    ) -> Result<(), E> {
+        const DUP_POOL: usize = 1024;
+        let mut seen: HashSet<String> = HashSet::new();
+        let mut pool: std::collections::VecDeque<(usize, String)> =
+            std::collections::VecDeque::with_capacity(DUP_POOL);
+        let mut emitted = 0usize;
+        let mut attempts = 0usize;
+        while emitted < n {
+            attempts += 1;
+            let make_dup = !pool.is_empty()
+                && self.rng.next_f64() < self.cfg.duplicate_rate;
+            let record = if make_dup {
+                let (src, base) = &pool[self.rng.index(pool.len())];
+                let mut name = base.clone();
+                for _ in 0..self.cfg.corruptions_per_duplicate {
+                    name = self.corrupt(&name);
+                }
+                Record { name, duplicate_of: Some(*src) }
+            } else {
+                let name = self.sample_name();
+                // same retry budget as `generate`: bounded retries keep
+                // generation total; past the budget, disambiguate with
+                // the global record index (Geco's record-id suffixing)
+                if seen.contains(&name) && attempts < n.saturating_mul(20) {
+                    continue;
+                }
+                let name = if seen.contains(&name) {
+                    format!("{name} {emitted}")
+                } else {
+                    seen.insert(name.clone());
+                    name
+                };
+                if pool.len() == DUP_POOL {
+                    pool.pop_front();
+                }
+                pool.push_back((emitted, name.clone()));
+                Record { name, duplicate_of: None }
+            };
+            sink(record)?;
+            emitted += 1;
+        }
+        Ok(())
     }
 
     /// Convenience: `n` unique clean names only.
@@ -241,6 +309,65 @@ mod tests {
         let mut a = Geco::new(GecoConfig { seed: 1, ..Default::default() });
         let mut b = Geco::new(GecoConfig { seed: 1, ..Default::default() });
         assert_eq!(a.generate_unique(50), b.generate_unique(50));
+    }
+
+    #[test]
+    fn generate_with_streams_globally_unique_originals() {
+        // far beyond any batch size a batched caller would use: the
+        // streaming generator must keep its uniqueness state for the
+        // whole run, not per chunk
+        let mut g = Geco::new(GecoConfig { seed: 9, ..Default::default() });
+        let mut names = Vec::new();
+        g.generate_with(20_000, |r| {
+            assert!(r.duplicate_of.is_none(), "rate 0 means no duplicates");
+            names.push(r.name);
+            Ok::<_, ()>(())
+        })
+        .unwrap();
+        let set: HashSet<&String> = names.iter().collect();
+        assert_eq!(set.len(), names.len(), "cross-batch duplicates leaked");
+    }
+
+    #[test]
+    fn generate_with_duplicates_reference_recent_originals() {
+        let mut g = Geco::new(GecoConfig {
+            seed: 10,
+            duplicate_rate: 0.3,
+            ..Default::default()
+        });
+        let mut records = Vec::new();
+        g.generate_with(500, |r| {
+            records.push(r);
+            Ok::<_, ()>(())
+        })
+        .unwrap();
+        let dups = records.iter().filter(|r| r.duplicate_of.is_some()).count();
+        assert!(dups > 50, "expected duplicates at rate 0.3, got {dups}");
+        for (i, r) in records.iter().enumerate() {
+            if let Some(src) = r.duplicate_of {
+                assert!(src < i, "duplicate must reference an earlier record");
+                assert!(
+                    records[src].duplicate_of.is_none(),
+                    "duplicates corrupt originals, not other duplicates"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn generate_with_sink_error_aborts() {
+        let mut g = Geco::new(GecoConfig::default());
+        let mut calls = 0usize;
+        let r = g.generate_with(100, |_| {
+            calls += 1;
+            if calls == 3 {
+                Err("stop")
+            } else {
+                Ok(())
+            }
+        });
+        assert_eq!(r.unwrap_err(), "stop");
+        assert_eq!(calls, 3);
     }
 
     #[test]

@@ -1,9 +1,15 @@
 //! Dataset substrates: the Geco/FEBRL-style name generator the paper's
-//! evaluation uses (Sec. 5.1) and synthetic metric-space workloads for the
-//! examples.
+//! evaluation uses (Sec. 5.1), synthetic metric-space workloads for the
+//! examples, and the out-of-core [`source`] layer (disk-backed object
+//! tables whose dissimilarities are evaluated at the storage layer).
 
 pub mod corpora;
 pub mod geco;
+pub mod source;
 pub mod synthetic;
 
 pub use geco::{Geco, GecoConfig, Record};
+pub use source::{
+    CorpusKind, CorpusSummary, CorpusWriter, ObjectTable, TableDelta, TableMetric,
+    DEFAULT_CACHE_BUDGET,
+};

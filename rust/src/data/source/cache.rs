@@ -1,0 +1,244 @@
+//! Sharded LRU block cache with a hard byte budget — the resident-set
+//! governor of the pread storage path ([`super::table::ObjectTable`]).
+//!
+//! The out-of-core contract is that reading a corpus row costs O(row)
+//! transient memory, not O(corpus). On platforms (or callers) without
+//! mmap the table reads fixed row-groups ("blocks") through this cache:
+//! a miss loads the block from disk once, a hit hands back the resident
+//! `Arc` without touching the file, and insertion evicts
+//! least-recently-used blocks until the configured byte budget holds
+//! again. The budget is *hard* in the only sense that matters for RSS:
+//! resident bytes never exceed `budget.max(largest live block)` — a
+//! budget smaller than a single block degrades to exactly one resident
+//! block rather than failing.
+//!
+//! Concurrency: the cache is sharded by block id, each shard behind its
+//! own mutex, so the divide solver's per-block workers and the streaming
+//! producer thread do not serialise on one lock. Lookups clone the `Arc`
+//! and drop the lock before the caller touches the data, so the metric
+//! evaluation itself never holds a shard lock.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of independently locked shards. Block ids are assigned
+/// round-robin across shards (`id % SHARDS`), which for the sequential
+/// access patterns here (streaming chunks, block sub-matrix reads)
+/// spreads neighbouring blocks over different locks.
+const SHARDS: usize = 8;
+
+/// Point-in-time cache counters (see [`BlockCache::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from a resident block.
+    pub hits: u64,
+    /// Lookups that had to load the block from storage.
+    pub misses: u64,
+    /// Blocks evicted to keep the byte budget.
+    pub evictions: u64,
+    /// Bytes currently resident across all shards.
+    pub resident_bytes: usize,
+    /// Blocks currently resident across all shards.
+    pub resident_blocks: usize,
+}
+
+struct Entry<T> {
+    data: Arc<[T]>,
+    /// Last-touch tick: larger = more recently used.
+    last_used: u64,
+}
+
+struct Shard<T> {
+    map: HashMap<usize, Entry<T>>,
+    bytes: usize,
+}
+
+/// A byte-budgeted LRU cache of `Arc<[T]>` blocks keyed by block id.
+///
+/// `T` is the storage unit (`u8` for text payloads, `f32` for vector
+/// payloads — decoding to `f32` once per block keeps per-row access free
+/// of endianness work and alignment hazards).
+pub struct BlockCache<T> {
+    shards: Vec<Mutex<Shard<T>>>,
+    /// Per-shard byte budget (total budget / SHARDS, min 1).
+    shard_budget: usize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl<T> BlockCache<T> {
+    /// Create a cache that keeps at most `budget_bytes` resident across
+    /// all shards (see the module docs for the one-block floor).
+    pub fn new(budget_bytes: usize) -> Self {
+        let shard_budget = (budget_bytes / SHARDS).max(1);
+        Self {
+            shards: (0..SHARDS)
+                .map(|_| Mutex::new(Shard { map: HashMap::new(), bytes: 0 }))
+                .collect(),
+            shard_budget,
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch block `id`, loading it with `load` on a miss. The returned
+    /// `Arc` stays valid after eviction (eviction only drops the cache's
+    /// reference), so callers may hold it across further lookups.
+    pub fn get_or_load<E>(
+        &self,
+        id: usize,
+        load: impl FnOnce() -> Result<Arc<[T]>, E>,
+    ) -> Result<Arc<[T]>, E> {
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        let shard = &self.shards[id % SHARDS];
+        {
+            let mut s = shard.lock().expect("cache shard poisoned");
+            if let Some(e) = s.map.get_mut(&id) {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Arc::clone(&e.data));
+            }
+        }
+        // Load outside the lock: concurrent misses on the same block may
+        // read the file twice, but neither blocks the whole shard on I/O.
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let data = load()?;
+        let block_bytes = data.len() * std::mem::size_of::<T>();
+        let mut s = shard.lock().expect("cache shard poisoned");
+        if let Some(e) = s.map.get_mut(&id) {
+            // lost a load race; keep the resident copy
+            e.last_used = tick;
+            return Ok(Arc::clone(&e.data));
+        }
+        s.bytes += block_bytes;
+        s.map.insert(id, Entry { data: Arc::clone(&data), last_used: tick });
+        // Evict LRU blocks until the budget holds; the block just
+        // inserted is the most recently used, so it survives even when
+        // it alone exceeds the budget (the one-block floor).
+        while s.bytes > self.shard_budget && s.map.len() > 1 {
+            let (&victim, _) = s
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .expect("map.len() > 1");
+            let e = s.map.remove(&victim).expect("victim resident");
+            s.bytes -= e.data.len() * std::mem::size_of::<T>();
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(data)
+    }
+
+    /// Current counters (approximate under concurrency: each counter is
+    /// individually exact, the set is not a consistent snapshot).
+    pub fn stats(&self) -> CacheStats {
+        let mut resident_bytes = 0usize;
+        let mut resident_blocks = 0usize;
+        for shard in &self.shards {
+            let s = shard.lock().expect("cache shard poisoned");
+            resident_bytes += s.bytes;
+            resident_blocks += s.map.len();
+        }
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident_bytes,
+            resident_blocks,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(v: u8, len: usize) -> Arc<[u8]> {
+        vec![v; len].into()
+    }
+
+    #[test]
+    fn hit_after_miss_and_counters() {
+        let c: BlockCache<u8> = BlockCache::new(1 << 20);
+        let a = c.get_or_load(3, || Ok::<_, ()>(block(3, 100))).unwrap();
+        let b = c.get_or_load(3, || panic!("must be a hit")).unwrap();
+        assert_eq!(&a[..], &b[..]);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.resident_bytes, 100);
+        assert_eq!(s.resident_blocks, 1);
+    }
+
+    #[test]
+    fn budget_evicts_lru_not_mru() {
+        let c: BlockCache<u8> = BlockCache::new(0); // per-shard floor: 1 byte
+        // same shard (ids congruent mod SHARDS) so evictions interact
+        let id0 = 0;
+        let id1 = SHARDS;
+        c.get_or_load(id0, || Ok::<_, ()>(block(1, 64))).unwrap();
+        c.get_or_load(id1, || Ok::<_, ()>(block(2, 64))).unwrap();
+        // id0 was least recently used -> evicted; id1 resident
+        let s = c.stats();
+        assert_eq!(s.resident_blocks, 1);
+        assert_eq!(s.evictions, 1);
+        c.get_or_load(id1, || panic!("mru must still be resident")).unwrap();
+        // id0 must reload
+        c.get_or_load(id0, || Ok::<_, ()>(block(1, 64))).unwrap();
+        assert_eq!(c.stats().misses, 3);
+    }
+
+    #[test]
+    fn one_block_floor_keeps_oversized_block() {
+        let c: BlockCache<u8> = BlockCache::new(16);
+        let a = c.get_or_load(0, || Ok::<_, ()>(block(9, 4096))).unwrap();
+        assert_eq!(a.len(), 4096);
+        assert_eq!(c.stats().resident_blocks, 1, "oversized block stays");
+        c.get_or_load(0, || panic!("must be a hit")).unwrap();
+    }
+
+    #[test]
+    fn load_errors_propagate_and_leave_no_entry() {
+        let c: BlockCache<u8> = BlockCache::new(1 << 10);
+        let r = c.get_or_load(5, || Err::<Arc<[u8]>, &str>("io"));
+        assert_eq!(r.unwrap_err(), "io");
+        assert_eq!(c.stats().resident_blocks, 0);
+        // a later successful load works
+        c.get_or_load(5, || Ok::<_, &str>(block(1, 8))).unwrap();
+        assert_eq!(c.stats().resident_blocks, 1);
+    }
+
+    #[test]
+    fn arcs_survive_eviction() {
+        let c: BlockCache<u8> = BlockCache::new(0);
+        let kept = c.get_or_load(0, || Ok::<_, ()>(block(7, 32))).unwrap();
+        c.get_or_load(SHARDS, || Ok::<_, ()>(block(8, 32))).unwrap(); // evicts id 0
+        assert!(kept.iter().all(|&b| b == 7), "evicted Arc data still valid");
+    }
+
+    #[test]
+    fn concurrent_access_is_consistent() {
+        let c: BlockCache<u64> = BlockCache::new(1 << 12);
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let c = &c;
+                scope.spawn(move || {
+                    for i in 0..200usize {
+                        let id = (i * 7 + t) % 32;
+                        let b = c
+                            .get_or_load(id, || {
+                                Ok::<_, ()>(vec![id as u64; 16].into())
+                            })
+                            .unwrap();
+                        assert!(b.iter().all(|&v| v == id as u64));
+                    }
+                });
+            }
+        });
+        let s = c.stats();
+        assert_eq!(s.hits + s.misses, 800);
+    }
+}

@@ -1,0 +1,371 @@
+//! The on-disk corpus format and its streaming writer.
+//!
+//! A corpus file ("object table") is the unit the out-of-core pipeline
+//! consumes: a header, a payload of records, and — for variable-length
+//! records — a trailing offset index. Everything is little-endian.
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  "LMDSTBL\0"
+//! 8       4     version (u32, currently 1)
+//! 12      4     kind    (u32: 1 = fixed f32 vectors, 2 = UTF-8 text)
+//! 16      8     count   (u64, number of records)
+//! 24      8     dim     (u64, f32s per record for vectors; 0 for text)
+//! 32      8     payload_off (u64, always 64 in version 1)
+//! 40      8     index_off   (u64, text only: offset of the index; 0 for
+//!                            vectors)
+//! 48      16    reserved (zero)
+//! 64      ...   payload: vectors = count*dim f32 LE, densely packed;
+//!                        text = concatenated UTF-8 bytes
+//! index   ...   text only: (count+1) u64 LE offsets relative to
+//!               payload_off; record i spans [off[i], off[i+1])
+//! ```
+//!
+//! The fixed-record layout gives O(1) row addressing with zero index
+//! memory; the offset-indexed layout gives O(1) row addressing for
+//! ragged records at 8 bytes of index per record, read on demand (never
+//! materialised wholesale by the reader).
+//!
+//! The writer streams: records go straight through a [`std::io::BufWriter`];
+//! only the text offset list (8 bytes per record) is buffered in memory,
+//! so writing an N-record corpus needs O(N) index memory for text and
+//! O(1) for vectors — never the payload itself.
+
+use std::fs::File;
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// File magic, first 8 bytes of every corpus file.
+pub const MAGIC: [u8; 8] = *b"LMDSTBL\0";
+/// Current format version.
+pub const VERSION: u32 = 1;
+/// Header size in bytes; also the payload offset in version 1 (keeping
+/// the payload 64-byte aligned means f32 vector rows stay 4-byte aligned
+/// under mmap for free).
+pub const HEADER_LEN: u64 = 64;
+
+/// What a corpus file stores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorpusKind {
+    /// Fixed-length `[f32; dim]` records (coordinate workloads).
+    VecF32,
+    /// Variable-length UTF-8 text records (string workloads).
+    Text,
+}
+
+impl CorpusKind {
+    pub(crate) fn code(self) -> u32 {
+        match self {
+            CorpusKind::VecF32 => 1,
+            CorpusKind::Text => 2,
+        }
+    }
+
+    pub(crate) fn from_code(c: u32) -> Option<Self> {
+        match c {
+            1 => Some(CorpusKind::VecF32),
+            2 => Some(CorpusKind::Text),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed corpus header (see the module docs for the byte layout).
+#[derive(Clone, Copy, Debug)]
+pub struct Header {
+    /// Record layout stored in the file.
+    pub kind: CorpusKind,
+    /// Number of records.
+    pub count: u64,
+    /// f32s per record (vectors) or 0 (text).
+    pub dim: u64,
+    /// Byte offset of the payload section.
+    pub payload_off: u64,
+    /// Byte offset of the text offset index (0 for vectors).
+    pub index_off: u64,
+}
+
+impl Header {
+    /// Serialise to the fixed 64-byte header block.
+    pub fn to_bytes(&self) -> [u8; HEADER_LEN as usize] {
+        let mut b = [0u8; HEADER_LEN as usize];
+        b[0..8].copy_from_slice(&MAGIC);
+        b[8..12].copy_from_slice(&VERSION.to_le_bytes());
+        b[12..16].copy_from_slice(&self.kind.code().to_le_bytes());
+        b[16..24].copy_from_slice(&self.count.to_le_bytes());
+        b[24..32].copy_from_slice(&self.dim.to_le_bytes());
+        b[32..40].copy_from_slice(&self.payload_off.to_le_bytes());
+        b[40..48].copy_from_slice(&self.index_off.to_le_bytes());
+        b
+    }
+
+    /// Parse and validate a header block.
+    pub fn parse(b: &[u8]) -> Result<Header> {
+        anyhow::ensure!(b.len() >= HEADER_LEN as usize, "corpus file shorter than its header");
+        anyhow::ensure!(b[0..8] == MAGIC, "not a corpus file (bad magic)");
+        let u32_at = |o: usize| u32::from_le_bytes(b[o..o + 4].try_into().unwrap());
+        let u64_at = |o: usize| u64::from_le_bytes(b[o..o + 8].try_into().unwrap());
+        let version = u32_at(8);
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported corpus version {version} (expected {VERSION})"
+        );
+        let kind = CorpusKind::from_code(u32_at(12))
+            .with_context(|| format!("unknown corpus kind code {}", u32_at(12)))?;
+        let h = Header {
+            kind,
+            count: u64_at(16),
+            dim: u64_at(24),
+            payload_off: u64_at(32),
+            index_off: u64_at(40),
+        };
+        anyhow::ensure!(h.payload_off >= HEADER_LEN, "payload overlaps the header");
+        match kind {
+            CorpusKind::VecF32 => {
+                anyhow::ensure!(h.dim > 0, "vector corpus with dim 0");
+                anyhow::ensure!(h.payload_off % 4 == 0, "vector payload misaligned");
+            }
+            CorpusKind::Text => {
+                anyhow::ensure!(
+                    h.index_off >= h.payload_off,
+                    "text corpus index overlaps the payload"
+                );
+            }
+        }
+        Ok(h)
+    }
+}
+
+/// What [`CorpusWriter::finish`] reports about the file it produced.
+#[derive(Clone, Debug)]
+pub struct CorpusSummary {
+    /// Path the corpus was written to.
+    pub path: PathBuf,
+    /// Record layout written.
+    pub kind: CorpusKind,
+    /// Records written.
+    pub count: u64,
+    /// Total file size in bytes (header + payload + index).
+    pub bytes: u64,
+}
+
+/// Streaming corpus writer — see the module docs for the format.
+///
+/// Records are appended with [`push_vector`](CorpusWriter::push_vector)
+/// or [`push_text`](CorpusWriter::push_text) and the file becomes valid
+/// only after [`finish`](CorpusWriter::finish) patches the header (and,
+/// for text, appends the offset index). A writer dropped without
+/// `finish` leaves a file with `count = 0` that readers reject as empty
+/// rather than mis-reading a truncated payload.
+pub struct CorpusWriter {
+    out: BufWriter<File>,
+    path: PathBuf,
+    kind: CorpusKind,
+    dim: usize,
+    count: u64,
+    payload_bytes: u64,
+    /// Text only: record start offsets relative to the payload.
+    offsets: Vec<u64>,
+}
+
+impl CorpusWriter {
+    /// Create a fixed-record `[f32; dim]` corpus at `path` (truncating).
+    pub fn create_vectors(path: &Path, dim: usize) -> Result<CorpusWriter> {
+        anyhow::ensure!(dim > 0, "vector corpus needs dim >= 1");
+        Self::create(path, CorpusKind::VecF32, dim)
+    }
+
+    /// Create a variable-record UTF-8 text corpus at `path` (truncating).
+    pub fn create_text(path: &Path) -> Result<CorpusWriter> {
+        Self::create(path, CorpusKind::Text, 0)
+    }
+
+    fn create(path: &Path, kind: CorpusKind, dim: usize) -> Result<CorpusWriter> {
+        let file = File::create(path)
+            .with_context(|| format!("creating corpus {path:?}"))?;
+        let mut out = BufWriter::new(file);
+        // Placeholder header: count = 0 until finish() patches it, so a
+        // truncated write never looks like a complete corpus.
+        let h = Header {
+            kind,
+            count: 0,
+            dim: dim as u64,
+            payload_off: HEADER_LEN,
+            index_off: 0,
+        };
+        out.write_all(&h.to_bytes()).context("writing corpus header")?;
+        Ok(CorpusWriter {
+            out,
+            path: path.to_path_buf(),
+            kind,
+            dim,
+            count: 0,
+            payload_bytes: 0,
+            offsets: Vec::new(),
+        })
+    }
+
+    /// Records appended so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Append one fixed-length vector record.
+    pub fn push_vector(&mut self, row: &[f32]) -> Result<()> {
+        anyhow::ensure!(self.kind == CorpusKind::VecF32, "not a vector corpus");
+        anyhow::ensure!(
+            row.len() == self.dim,
+            "record has {} f32s, corpus dim is {}",
+            row.len(),
+            self.dim
+        );
+        for v in row {
+            self.out.write_all(&v.to_le_bytes())?;
+        }
+        self.payload_bytes += (self.dim * 4) as u64;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Append one text record.
+    pub fn push_text(&mut self, s: &str) -> Result<()> {
+        anyhow::ensure!(self.kind == CorpusKind::Text, "not a text corpus");
+        self.offsets.push(self.payload_bytes);
+        self.out.write_all(s.as_bytes())?;
+        self.payload_bytes += s.len() as u64;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Write the index (text), patch the header and flush. The file is
+    /// not a valid corpus until this returns.
+    pub fn finish(mut self) -> Result<CorpusSummary> {
+        let index_off = match self.kind {
+            CorpusKind::VecF32 => 0,
+            CorpusKind::Text => {
+                self.offsets.push(self.payload_bytes); // end sentinel
+                for off in &self.offsets {
+                    self.out.write_all(&off.to_le_bytes())?;
+                }
+                HEADER_LEN + self.payload_bytes
+            }
+        };
+        let h = Header {
+            kind: self.kind,
+            count: self.count,
+            dim: self.dim as u64,
+            payload_off: HEADER_LEN,
+            index_off,
+        };
+        let bytes = match self.kind {
+            CorpusKind::VecF32 => HEADER_LEN + self.payload_bytes,
+            CorpusKind::Text => index_off + 8 * self.offsets.len() as u64,
+        };
+        self.out.flush().context("flushing corpus payload")?;
+        let mut file = self.out.into_inner().context("flushing corpus payload")?;
+        file.seek(SeekFrom::Start(0))?;
+        file.write_all(&h.to_bytes()).context("patching corpus header")?;
+        file.sync_all().context("syncing corpus file")?;
+        Ok(CorpusSummary { path: self.path, kind: self.kind, count: self.count, bytes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("lmds_fmt_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn header_round_trips() {
+        let h = Header {
+            kind: CorpusKind::Text,
+            count: 123,
+            dim: 0,
+            payload_off: HEADER_LEN,
+            index_off: 999,
+        };
+        let b = h.to_bytes();
+        let back = Header::parse(&b).unwrap();
+        assert_eq!(back.kind, CorpusKind::Text);
+        assert_eq!(back.count, 123);
+        assert_eq!(back.index_off, 999);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Header::parse(b"short").is_err());
+        let mut b = Header {
+            kind: CorpusKind::VecF32,
+            count: 1,
+            dim: 2,
+            payload_off: HEADER_LEN,
+            index_off: 0,
+        }
+        .to_bytes();
+        b[0] = b'X'; // bad magic
+        assert!(Header::parse(&b).is_err());
+        let mut b2 = Header {
+            kind: CorpusKind::VecF32,
+            count: 1,
+            dim: 0, // invalid for vectors
+            payload_off: HEADER_LEN,
+            index_off: 0,
+        }
+        .to_bytes();
+        assert!(Header::parse(&b2).is_err());
+        b2[8..12].copy_from_slice(&7u32.to_le_bytes()); // bad version
+        assert!(Header::parse(&b2).is_err());
+    }
+
+    #[test]
+    fn writer_produces_expected_vector_bytes() {
+        let p = tmp("vec");
+        let mut w = CorpusWriter::create_vectors(&p, 2).unwrap();
+        w.push_vector(&[1.0, 2.0]).unwrap();
+        w.push_vector(&[3.0, -4.5]).unwrap();
+        assert!(w.push_vector(&[1.0]).is_err(), "wrong dim rejected");
+        assert!(w.push_text("nope").is_err(), "wrong kind rejected");
+        let s = w.finish().unwrap();
+        assert_eq!(s.count, 2);
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(bytes.len() as u64, s.bytes);
+        let h = Header::parse(&bytes).unwrap();
+        assert_eq!(h.count, 2);
+        assert_eq!(h.dim, 2);
+        let f = f32::from_le_bytes(bytes[64 + 12..64 + 16].try_into().unwrap());
+        assert_eq!(f, -4.5);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn writer_produces_expected_text_index() {
+        let p = tmp("txt");
+        let mut w = CorpusWriter::create_text(&p).unwrap();
+        w.push_text("ab").unwrap();
+        w.push_text("").unwrap(); // empty records are legal
+        w.push_text("xyz").unwrap();
+        let s = w.finish().unwrap();
+        assert_eq!(s.count, 3);
+        let bytes = std::fs::read(&p).unwrap();
+        let h = Header::parse(&bytes).unwrap();
+        assert_eq!(h.count, 3);
+        assert_eq!(h.index_off, 64 + 5);
+        let off = |i: usize| {
+            u64::from_le_bytes(
+                bytes[h.index_off as usize + 8 * i..h.index_off as usize + 8 * i + 8]
+                    .try_into()
+                    .unwrap(),
+            )
+        };
+        assert_eq!([off(0), off(1), off(2), off(3)], [0, 2, 2, 5]);
+        assert_eq!(&bytes[64..69], b"abxyz");
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,199 @@
+//! Out-of-core data sources: corpora that live on disk and are consumed
+//! by the solvers without ever materialising in RAM.
+//!
+//! This is the storage layer named by the paper's scaling story: landmark
+//! MDS plus out-of-sample embedding keeps the *algorithmic* cost linear
+//! in N, but every concrete input until this module was an in-memory
+//! `Matrix` or object slice, so N was capped by host RAM. Here the
+//! dissimilarities are evaluated *at the storage layer* instead (the
+//! reference-set design of arXiv:2408.04129): an [`ObjectTable`] holds
+//! the raw objects on disk — fixed-record `[f32]` vectors or
+//! offset-indexed UTF-8 strings ([`format`]) — and [`TableDelta`] turns
+//! it into a [`DeltaSource`](crate::mds::divide::DeltaSource) by fetching
+//! the two rows lazily (zero-copy under mmap, through a byte-budgeted
+//! LRU block cache under pread; [`cache`]) and running the configured
+//! [`Dissimilarity`] metric on them at access time.
+//!
+//! Both pipeline stages consume it: the divide-and-conquer base solver
+//! reads block sub-matrices straight off the table
+//! ([`crate::coordinator::embedder::solve_base_source`]), and the
+//! streaming OSE pass builds its dissimilarity chunks from table rows
+//! ([`crate::coordinator::embedder::embed_corpus`]). Peak resident
+//! memory is O(L² + cache budget + stream chunks + output), independent
+//! of N — the property pinned by `tests/outofcore_memory.rs` and
+//! `benches/bench_outofcore.rs`.
+
+pub mod cache;
+pub mod format;
+pub mod table;
+
+pub use cache::{BlockCache, CacheStats};
+pub use format::{CorpusKind, CorpusSummary, CorpusWriter, Header};
+pub use table::{mmap_supported, ObjectTable, DEFAULT_CACHE_BUDGET};
+
+use anyhow::Result;
+
+use crate::mds::divide::DeltaSource;
+use crate::strdist::Dissimilarity;
+
+/// The metric half of a disk-backed source: which object domain the
+/// table's rows belong to, and how to compare two of them.
+pub enum TableMetric<'a> {
+    /// String metric over text records (e.g. Levenshtein).
+    Text(&'a dyn Dissimilarity<str>),
+    /// Vector metric over `[f32]` records (e.g. Euclidean).
+    Vector(&'a dyn Dissimilarity<[f32]>),
+}
+
+impl TableMetric<'_> {
+    /// Human-readable metric name (for logs and reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TableMetric::Text(m) => m.name(),
+            TableMetric::Vector(m) => m.name(),
+        }
+    }
+}
+
+/// A disk-backed [`DeltaSource`]: `dist(i, j)` fetches rows `i` and `j`
+/// from the [`ObjectTable`] lazily and evaluates the metric at access
+/// time, so the L x L (or N x N) dissimilarity matrix never exists.
+///
+/// Bit-compatibility: the metric sees exactly the bytes that were
+/// written (f32 payloads round-trip exactly through the little-endian
+/// file format), so a `TableDelta` produces bit-identical distances to
+/// the equivalent in-memory source — the contract the disk-vs-RAM
+/// parity suite in `tests/outofcore.rs` enforces through `solve_base`.
+pub struct TableDelta<'a> {
+    table: &'a ObjectTable,
+    metric: TableMetric<'a>,
+}
+
+impl<'a> TableDelta<'a> {
+    /// Pair a table with a metric, rejecting domain mismatches (a string
+    /// metric over a vector table or vice versa).
+    pub fn new(table: &'a ObjectTable, metric: TableMetric<'a>) -> Result<TableDelta<'a>> {
+        let ok = matches!(
+            (&metric, table.kind()),
+            (TableMetric::Text(_), CorpusKind::Text)
+                | (TableMetric::Vector(_), CorpusKind::VecF32)
+        );
+        anyhow::ensure!(
+            ok,
+            "metric domain does not match corpus kind {:?}",
+            table.kind()
+        );
+        Ok(TableDelta { table, metric })
+    }
+
+    /// Shorthand for [`TableDelta::new`] over a text table.
+    pub fn text(
+        table: &'a ObjectTable,
+        metric: &'a dyn Dissimilarity<str>,
+    ) -> Result<TableDelta<'a>> {
+        Self::new(table, TableMetric::Text(metric))
+    }
+
+    /// Shorthand for [`TableDelta::new`] over a vector table.
+    pub fn vectors(
+        table: &'a ObjectTable,
+        metric: &'a dyn Dissimilarity<[f32]>,
+    ) -> Result<TableDelta<'a>> {
+        Self::new(table, TableMetric::Vector(metric))
+    }
+
+    /// The underlying object table.
+    pub fn table(&self) -> &'a ObjectTable {
+        self.table
+    }
+
+    /// The metric evaluated at the storage layer.
+    pub fn metric(&self) -> &TableMetric<'a> {
+        &self.metric
+    }
+}
+
+impl DeltaSource for TableDelta<'_> {
+    fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    fn dist(&self, i: usize, j: usize) -> f32 {
+        match &self.metric {
+            TableMetric::Text(m) => self
+                .table
+                .with_text(i, |a| self.table.with_text(j, |b| m.dist(a, b)))
+                as f32,
+            TableMetric::Vector(m) => self
+                .table
+                .with_vector(i, |a| self.table.with_vector(j, |b| m.dist(a, b)))
+                as f32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strdist::{Euclidean, Levenshtein};
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("lmds_src_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn table_delta_matches_in_memory_metric_bit_for_bit() {
+        let p = tmp("delta_vec");
+        let rows: Vec<Vec<f32>> = (0..40)
+            .map(|i| (0..3).map(|d| ((i * 7 + d * 13) % 11) as f32 * 0.37).collect())
+            .collect();
+        let mut w = CorpusWriter::create_vectors(&p, 3).unwrap();
+        for r in &rows {
+            w.push_vector(r).unwrap();
+        }
+        w.finish().unwrap();
+        let t = ObjectTable::open(&p, DEFAULT_CACHE_BUDGET).unwrap();
+        let src = TableDelta::vectors(&t, &Euclidean).unwrap();
+        assert_eq!(src.len(), 40);
+        for i in 0..40 {
+            for j in 0..40 {
+                let want = crate::strdist::euclidean(&rows[i], &rows[j]) as f32;
+                let got = src.dist(i, j);
+                assert!(got == want, "({i},{j}): {got} != {want}");
+            }
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn table_delta_text_matches_levenshtein() {
+        let p = tmp("delta_txt");
+        let names = ["anna", "bob", "carol", "dan", "anna"];
+        let mut w = CorpusWriter::create_text(&p).unwrap();
+        for n in names {
+            w.push_text(n).unwrap();
+        }
+        w.finish().unwrap();
+        let t = ObjectTable::open(&p, DEFAULT_CACHE_BUDGET).unwrap();
+        let src = TableDelta::text(&t, &Levenshtein).unwrap();
+        assert_eq!(src.dist(0, 1), 4.0);
+        assert_eq!(src.dist(0, 4), 0.0, "duplicate records are distance 0");
+        assert_eq!(src.dist(2, 3), src.dist(3, 2), "symmetric");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn metric_domain_mismatch_rejected() {
+        let p = tmp("delta_mm");
+        let mut w = CorpusWriter::create_text(&p).unwrap();
+        w.push_text("x").unwrap();
+        w.finish().unwrap();
+        let t = ObjectTable::open(&p, 1 << 10).unwrap();
+        assert!(TableDelta::vectors(&t, &Euclidean).is_err());
+        assert!(TableDelta::text(&t, &Levenshtein).is_ok());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,640 @@
+//! Read side of the corpus format: [`ObjectTable`], an out-of-core row
+//! store whose rows are handed to the string/vector metrics lazily.
+//!
+//! Two storage backends sit behind one accessor API:
+//!
+//! - **mmap** (64-bit unix): the file is mapped read-only once and every
+//!   row access is a zero-copy slice into the mapping. Residency is
+//!   managed by the OS page cache, so the process heap never grows with
+//!   the corpus.
+//! - **pread** (portable fallback, and the backend with an *explicit*
+//!   budget): rows are read in fixed row-groups through the sharded LRU
+//!   [`BlockCache`], whose byte budget bounds resident corpus data no
+//!   matter the access pattern.
+//!
+//! Open-time validation (header sanity, file-length arithmetic) makes
+//! row access infallible afterwards; an I/O error or corrupt index hit
+//! mid-run panics with context rather than silently degrading — the
+//! solvers consume distances through [`crate::mds::divide::DeltaSource`],
+//! whose `dist` has no error channel by design.
+
+use std::fs::File;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::cache::{BlockCache, CacheStats};
+use super::format::{CorpusKind, Header, HEADER_LEN};
+
+/// Default byte budget for the pread block cache (64 MiB): large enough
+/// that landmark-sized working sets stay resident, small next to any
+/// corpus worth streaming.
+pub const DEFAULT_CACHE_BUDGET: usize = 64 << 20;
+
+/// Target bytes per vector row-group block in pread mode.
+const VEC_BLOCK_BYTES: usize = 256 << 10;
+/// Maximum rows per text row-group block in pread mode.
+const TEXT_ROWS_PER_BLOCK: usize = 1024;
+/// Minimum number of row-groups a non-trivial table splits into: small
+/// corpora shrink their blocks so the LRU cache still has granularity
+/// to evict at (one giant block per corpus would make any byte budget
+/// meaningless).
+const MIN_BLOCKS: usize = 64;
+
+/// Rows per row-group for a table of `count` rows whose natural block
+/// holds `natural` rows.
+fn rows_per_block(count: usize, natural: usize) -> usize {
+    natural.max(1).min(count.div_ceil(MIN_BLOCKS).max(1))
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod mmap {
+    //! Minimal read-only mmap binding (no libc crate in the image; the
+    //! symbols come from the C runtime std already links).
+
+    use std::fs::File;
+    use std::os::raw::{c_int, c_void};
+    use std::os::unix::io::AsRawFd;
+
+    use anyhow::{Context, Result};
+
+    const PROT_READ: c_int = 1;
+    const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    /// A whole-file read-only private mapping, unmapped on drop.
+    pub struct MmapRegion {
+        ptr: *const u8,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is read-only for its whole lifetime.
+    unsafe impl Send for MmapRegion {}
+    unsafe impl Sync for MmapRegion {}
+
+    impl MmapRegion {
+        /// Map `file` in its entirety (empty files map to an empty
+        /// region without touching the syscall, which rejects len 0).
+        pub fn map(file: &File) -> Result<MmapRegion> {
+            let len = file.metadata().context("stat for mmap")?.len() as usize;
+            if len == 0 {
+                return Ok(MmapRegion { ptr: std::ptr::NonNull::<u8>::dangling().as_ptr(), len: 0 });
+            }
+            // SAFETY: fd is valid for the duration of the call; we map
+            // read-only/private so no aliasing with writers matters.
+            let p = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            anyhow::ensure!(
+                p as isize != -1,
+                "mmap failed ({})",
+                std::io::Error::last_os_error()
+            );
+            Ok(MmapRegion { ptr: p as *const u8, len })
+        }
+
+        /// The mapped bytes.
+        pub fn bytes(&self) -> &[u8] {
+            if self.len == 0 {
+                return &[];
+            }
+            // SAFETY: ptr/len describe a live read-only mapping.
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+
+    impl Drop for MmapRegion {
+        fn drop(&mut self) {
+            if self.len > 0 {
+                // SAFETY: exactly the region returned by mmap.
+                unsafe { munmap(self.ptr as *mut c_void, self.len) };
+            }
+        }
+    }
+}
+
+/// Positioned read without moving the file cursor (shared `&File`).
+fn read_exact_at(file: &File, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        file.read_exact_at(buf, off)
+    }
+    #[cfg(windows)]
+    {
+        use std::os::windows::fs::FileExt;
+        let mut done = 0usize;
+        while done < buf.len() {
+            let n = file.seek_read(&mut buf[done..], off + done as u64)?;
+            if n == 0 {
+                return Err(std::io::ErrorKind::UnexpectedEof.into());
+            }
+            done += n;
+        }
+        Ok(())
+    }
+    #[cfg(not(any(unix, windows)))]
+    {
+        let _ = (file, buf, off);
+        Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "no positioned-read primitive on this platform",
+        ))
+    }
+}
+
+enum Storage {
+    /// Zero-copy whole-file mapping.
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mmap(mmap::MmapRegion),
+    /// Positioned reads of vector row-groups through the LRU cache.
+    PreadVec {
+        file: File,
+        cache: BlockCache<f32>,
+        rows_per_block: usize,
+    },
+    /// Positioned reads of text row-groups: payload bytes and the
+    /// matching offset-index slice are cached per group.
+    PreadText {
+        file: File,
+        payload: BlockCache<u8>,
+        offsets: BlockCache<u64>,
+        rows_per_block: usize,
+    },
+}
+
+/// True when this build can mmap corpus files (64-bit unix).
+pub fn mmap_supported() -> bool {
+    cfg!(all(unix, target_pointer_width = "64"))
+}
+
+/// An open corpus file: O(1) random row access over data that never
+/// fully materialises in the process heap. See the module docs for the
+/// storage backends and [`super::format`] for the byte layout.
+pub struct ObjectTable {
+    header: Header,
+    count: usize,
+    dim: usize,
+    storage: Storage,
+}
+
+impl ObjectTable {
+    /// Open with the preferred backend: mmap where supported, otherwise
+    /// pread with `cache_budget_bytes` of block cache.
+    pub fn open(path: &Path, cache_budget_bytes: usize) -> Result<ObjectTable> {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            let _ = cache_budget_bytes;
+            Self::open_mmap(path)
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        {
+            Self::open_pread(path, cache_budget_bytes)
+        }
+    }
+
+    /// Open through the mmap backend (zero-copy rows, OS-managed
+    /// residency).
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    pub fn open_mmap(path: &Path) -> Result<ObjectTable> {
+        let file = File::open(path).with_context(|| format!("opening corpus {path:?}"))?;
+        let region = mmap::MmapRegion::map(&file)
+            .with_context(|| format!("mapping corpus {path:?}"))?;
+        let header = Header::parse(region.bytes())
+            .with_context(|| format!("reading corpus header of {path:?}"))?;
+        Self::validate_len(&header, region.bytes().len() as u64, path)?;
+        Ok(ObjectTable {
+            count: header.count as usize,
+            dim: header.dim as usize,
+            header,
+            storage: Storage::Mmap(region),
+        })
+    }
+
+    /// Open through the pread backend with an explicit cache byte
+    /// budget — the mode whose resident corpus bytes are bounded by
+    /// `cache_budget_bytes` regardless of access pattern.
+    pub fn open_pread(path: &Path, cache_budget_bytes: usize) -> Result<ObjectTable> {
+        let file = File::open(path).with_context(|| format!("opening corpus {path:?}"))?;
+        let file_len = file.metadata().context("stat corpus")?.len();
+        let mut head = [0u8; HEADER_LEN as usize];
+        read_exact_at(&file, &mut head, 0)
+            .with_context(|| format!("reading corpus header of {path:?}"))?;
+        let header = Header::parse(&head)?;
+        Self::validate_len(&header, file_len, path)?;
+        let count = header.count as usize;
+        let storage = match header.kind {
+            CorpusKind::VecF32 => {
+                let row_bytes = header.dim as usize * 4;
+                Storage::PreadVec {
+                    file,
+                    cache: BlockCache::new(cache_budget_bytes),
+                    rows_per_block: rows_per_block(count, VEC_BLOCK_BYTES / row_bytes),
+                }
+            }
+            CorpusKind::Text => Storage::PreadText {
+                file,
+                // ~7/8 of the budget for payload bytes, the rest for the
+                // 8-byte-per-row offset slices riding alongside
+                payload: BlockCache::new(cache_budget_bytes - cache_budget_bytes / 8),
+                offsets: BlockCache::new((cache_budget_bytes / 8).max(1)),
+                rows_per_block: rows_per_block(count, TEXT_ROWS_PER_BLOCK),
+            },
+        };
+        Ok(ObjectTable {
+            count: header.count as usize,
+            dim: header.dim as usize,
+            header,
+            storage,
+        })
+    }
+
+    fn validate_len(h: &Header, file_len: u64, path: &Path) -> Result<()> {
+        let need = match h.kind {
+            CorpusKind::VecF32 => h.payload_off + h.count * h.dim * 4,
+            CorpusKind::Text => h.index_off + 8 * (h.count + 1),
+        };
+        anyhow::ensure!(
+            file_len >= need,
+            "corpus {path:?} is truncated: {file_len} bytes, layout needs {need}"
+        );
+        Ok(())
+    }
+
+    /// Number of records.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    /// True when the table holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Record layout of this table.
+    pub fn kind(&self) -> CorpusKind {
+        self.header.kind
+    }
+
+    /// f32s per record (vector tables; 0 for text).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Storage backend name, for logs and reports.
+    pub fn storage_name(&self) -> &'static str {
+        match &self.storage {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Storage::Mmap(_) => "mmap",
+            Storage::PreadVec { .. } => "pread",
+            Storage::PreadText { .. } => "pread",
+        }
+    }
+
+    /// Block-cache counters (`None` under mmap, which has no cache).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        match &self.storage {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Storage::Mmap(_) => None,
+            Storage::PreadVec { cache, .. } => Some(cache.stats()),
+            Storage::PreadText { payload, offsets, .. } => {
+                let mut s = payload.stats();
+                let o = offsets.stats();
+                s.resident_bytes += o.resident_bytes;
+                s.resident_blocks += o.resident_blocks;
+                s.hits += o.hits;
+                s.misses += o.misses;
+                s.evictions += o.evictions;
+                Some(s)
+            }
+        }
+    }
+
+    /// Hand row `i` of a vector table to `f` without copying out of the
+    /// storage layer (mmap: a slice into the mapping; pread: a slice
+    /// into the resident cache block).
+    ///
+    /// # Panics
+    /// On a text table, an out-of-range index, or an I/O failure.
+    pub fn with_vector<R>(&self, i: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        assert!(self.header.kind == CorpusKind::VecF32, "with_vector on a text table");
+        assert!(i < self.count, "row {i} out of range ({} records)", self.count);
+        match &self.storage {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Storage::Mmap(region) => {
+                let start = self.header.payload_off as usize + i * self.dim * 4;
+                let bytes = &region.bytes()[start..start + self.dim * 4];
+                // SAFETY: payload_off is validated 4-aligned, the mapping
+                // is page-aligned and the slice length is dim f32s inside
+                // the validated payload; f32 has no invalid bit patterns.
+                let row = unsafe {
+                    std::slice::from_raw_parts(bytes.as_ptr() as *const f32, self.dim)
+                };
+                f(row)
+            }
+            Storage::PreadVec { file, cache, rows_per_block } => {
+                let rpb = *rows_per_block;
+                let g = i / rpb;
+                let block = cache
+                    .get_or_load(g, || self.load_vec_block(file, g, rpb))
+                    .unwrap_or_else(|e| panic!("corpus read failed: {e:#}"));
+                let local = (i - g * rpb) * self.dim;
+                f(&block[local..local + self.dim])
+            }
+            Storage::PreadText { .. } => unreachable!("kind checked above"),
+        }
+    }
+
+    /// Hand row `i` of a text table to `f` (zero-copy under mmap, a
+    /// cache-block slice under pread).
+    ///
+    /// # Panics
+    /// On a vector table, an out-of-range index, an I/O failure, or
+    /// invalid UTF-8/offsets in the file.
+    pub fn with_text<R>(&self, i: usize, f: impl FnOnce(&str) -> R) -> R {
+        assert!(self.header.kind == CorpusKind::Text, "with_text on a vector table");
+        assert!(i < self.count, "row {i} out of range ({} records)", self.count);
+        match &self.storage {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Storage::Mmap(region) => {
+                let bytes = region.bytes();
+                let idx = self.header.index_off as usize;
+                let off = |k: usize| {
+                    u64::from_le_bytes(
+                        bytes[idx + 8 * k..idx + 8 * k + 8].try_into().unwrap(),
+                    ) as usize
+                };
+                let (start, end) = (off(i), off(i + 1));
+                let payload = self.header.payload_off as usize;
+                let s = std::str::from_utf8(&bytes[payload + start..payload + end])
+                    .expect("corpus text record is not valid UTF-8");
+                f(s)
+            }
+            Storage::PreadText { file, payload, offsets, rows_per_block } => {
+                let rpb = *rows_per_block;
+                let g = i / rpb;
+                let offs = offsets
+                    .get_or_load(g, || self.load_offset_block(file, g, rpb))
+                    .unwrap_or_else(|e| panic!("corpus index read failed: {e:#}"));
+                let block = payload
+                    .get_or_load(g, || self.load_text_block(file, &offs))
+                    .unwrap_or_else(|e| panic!("corpus read failed: {e:#}"));
+                let local = i - g * rpb;
+                let base = offs[0] as usize;
+                let (start, end) = (offs[local] as usize, offs[local + 1] as usize);
+                let s = std::str::from_utf8(&block[start - base..end - base])
+                    .expect("corpus text record is not valid UTF-8");
+                f(s)
+            }
+            Storage::PreadVec { .. } => unreachable!("kind checked above"),
+        }
+    }
+
+    /// Copy row `i` of a vector table out as an owned vector.
+    pub fn vector_row(&self, i: usize) -> Vec<f32> {
+        self.with_vector(i, |r| r.to_vec())
+    }
+
+    /// Copy row `i` of a text table out as an owned string.
+    pub fn text_row(&self, i: usize) -> String {
+        self.with_text(i, str::to_owned)
+    }
+
+    /// Materialise the given rows of a vector table (e.g. the landmark
+    /// sample, or one streaming chunk).
+    pub fn vector_rows(&self, idx: &[usize]) -> Vec<Vec<f32>> {
+        idx.iter().map(|&i| self.vector_row(i)).collect()
+    }
+
+    /// Materialise the given rows of a text table.
+    pub fn text_rows(&self, idx: &[usize]) -> Vec<String> {
+        idx.iter().map(|&i| self.text_row(i)).collect()
+    }
+
+    fn load_vec_block(
+        &self,
+        file: &File,
+        g: usize,
+        rows_per_block: usize,
+    ) -> std::io::Result<Arc<[f32]>> {
+        let first = g * rows_per_block;
+        let rows = rows_per_block.min(self.count - first);
+        let mut bytes = vec![0u8; rows * self.dim * 4];
+        read_exact_at(
+            file,
+            &mut bytes,
+            self.header.payload_off + (first * self.dim * 4) as u64,
+        )?;
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(floats.into())
+    }
+
+    fn load_offset_block(
+        &self,
+        file: &File,
+        g: usize,
+        rows_per_block: usize,
+    ) -> std::io::Result<Arc<[u64]>> {
+        let first = g * rows_per_block;
+        let rows = rows_per_block.min(self.count - first);
+        let mut bytes = vec![0u8; (rows + 1) * 8];
+        read_exact_at(file, &mut bytes, self.header.index_off + (first * 8) as u64)?;
+        let offs: Vec<u64> = bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        for w in offs.windows(2) {
+            if w[1] < w[0] {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "corpus offset index is not monotonic",
+                ));
+            }
+        }
+        Ok(offs.into())
+    }
+
+    fn load_text_block(&self, file: &File, offs: &[u64]) -> std::io::Result<Arc<[u8]>> {
+        let base = offs[0];
+        let end = offs[offs.len() - 1];
+        let mut bytes = vec![0u8; (end - base) as usize];
+        read_exact_at(file, &mut bytes, self.header.payload_off + base)?;
+        Ok(bytes.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::format::CorpusWriter;
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("lmds_tbl_{name}_{}", std::process::id()));
+        p
+    }
+
+    fn write_vec_corpus(path: &Path, n: usize, dim: usize) -> Vec<Vec<f32>> {
+        let mut w = CorpusWriter::create_vectors(path, dim).unwrap();
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|i| (0..dim).map(|d| (i * dim + d) as f32 * 0.5 - 3.0).collect())
+            .collect();
+        for r in &rows {
+            w.push_vector(r).unwrap();
+        }
+        w.finish().unwrap();
+        rows
+    }
+
+    fn write_text_corpus(path: &Path, n: usize) -> Vec<String> {
+        let mut w = CorpusWriter::create_text(path).unwrap();
+        let rows: Vec<String> = (0..n)
+            .map(|i| format!("record-{i}-{}", "x".repeat(i % 17)))
+            .collect();
+        for r in &rows {
+            w.push_text(r).unwrap();
+        }
+        w.finish().unwrap();
+        rows
+    }
+
+    fn open_both(path: &Path, budget: usize) -> Vec<ObjectTable> {
+        let mut v = vec![ObjectTable::open_pread(path, budget).unwrap()];
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        v.push(ObjectTable::open_mmap(path).unwrap());
+        v
+    }
+
+    #[test]
+    fn vector_rows_round_trip_on_all_backends() {
+        let p = tmp("vec_rt");
+        let rows = write_vec_corpus(&p, 137, 5);
+        for t in open_both(&p, 1 << 20) {
+            assert_eq!(t.len(), 137);
+            assert_eq!(t.dim(), 5);
+            assert_eq!(t.kind(), CorpusKind::VecF32);
+            for (i, want) in rows.iter().enumerate() {
+                assert_eq!(&t.vector_row(i), want, "row {i} via {}", t.storage_name());
+            }
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn text_rows_round_trip_on_all_backends() {
+        let p = tmp("txt_rt");
+        let rows = write_text_corpus(&p, 211);
+        for t in open_both(&p, 1 << 20) {
+            assert_eq!(t.len(), 211);
+            assert_eq!(t.kind(), CorpusKind::Text);
+            for (i, want) in rows.iter().enumerate() {
+                assert_eq!(&t.text_row(i), want, "row {i} via {}", t.storage_name());
+            }
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn tiny_cache_budget_still_reads_correctly() {
+        let p = tmp("vec_tiny");
+        let rows = write_vec_corpus(&p, 500, 3);
+        // budget far below the payload: every stride forces eviction
+        let t = ObjectTable::open_pread(&p, 64).unwrap();
+        for i in (0..500).rev().step_by(7) {
+            assert_eq!(t.vector_row(i), rows[i]);
+        }
+        let s = t.cache_stats().expect("pread has a cache");
+        assert!(s.evictions > 0, "tiny budget must evict ({s:?})");
+        assert!(s.resident_blocks >= 1);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn repeated_scans_hit_the_cache() {
+        let p = tmp("txt_hits");
+        write_text_corpus(&p, 300);
+        let t = ObjectTable::open_pread(&p, 1 << 20).unwrap();
+        for i in 0..300 {
+            t.with_text(i, |_| ());
+        }
+        let first = t.cache_stats().unwrap();
+        assert!(first.misses > 0, "{first:?}");
+        // the corpus fits the budget, so a second scan is all hits
+        for i in 0..300 {
+            t.with_text(i, |_| ());
+        }
+        let second = t.cache_stats().unwrap();
+        assert_eq!(second.misses, first.misses, "second scan must not re-read");
+        assert_eq!(second.hits, first.hits + 2 * 300, "{second:?}");
+        assert_eq!(second.evictions, 0, "{second:?}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn truncated_file_rejected_at_open() {
+        let p = tmp("trunc");
+        write_vec_corpus(&p, 50, 4);
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 10]).unwrap();
+        assert!(ObjectTable::open_pread(&p, 1 << 20).is_err());
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        assert!(ObjectTable::open_mmap(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_table_is_valid() {
+        let p = tmp("empty");
+        CorpusWriter::create_text(&p).unwrap().finish().unwrap();
+        for t in open_both(&p, 1 << 10) {
+            assert!(t.is_empty());
+            assert_eq!(t.len(), 0);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "with_vector on a text table")]
+    fn kind_mismatch_panics() {
+        let p = tmp("kindmm");
+        write_text_corpus(&p, 3);
+        let t = ObjectTable::open_pread(&p, 1 << 10).unwrap();
+        let _ = std::fs::remove_file(&p);
+        t.with_vector(0, |_| ());
+    }
+
+    #[test]
+    fn concurrent_readers_agree() {
+        let p = tmp("conc");
+        let rows = write_vec_corpus(&p, 400, 4);
+        let t = ObjectTable::open_pread(&p, 4 << 10);
+        let t = t.unwrap();
+        std::thread::scope(|scope| {
+            for k in 0..4usize {
+                let (t, rows) = (&t, &rows);
+                scope.spawn(move || {
+                    for i in (k..400).step_by(4) {
+                        assert_eq!(t.vector_row(i), rows[i]);
+                    }
+                });
+            }
+        });
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -88,12 +88,18 @@ pub fn run_opt(
 // ---------------------------------------------------------------------------
 
 #[derive(Clone, Debug)]
+/// One Figure-1 point: total embedding error vs landmark count.
 pub struct Fig1Row {
+    /// Landmark count L.
     pub l: usize,
+    /// Err(m) (Eq. 5) of the optimisation method.
     pub err_opt: f64,
+    /// Err(m) (Eq. 5) of the NN method.
     pub err_nn: f64,
 }
 
+/// Reproduce Figure 1: Err(m) as a function of L for both OSE
+/// methods. Writes `fig1_<scale>.json` into the results directory.
 pub fn fig1(
     data: &ExperimentData,
     backend: &Backend,
@@ -148,7 +154,9 @@ pub fn fig1(
 // ---------------------------------------------------------------------------
 
 #[derive(Clone, Debug)]
+/// Per-point error distributions behind Figures 2-3, at one L.
 pub struct Fig23Result {
+    /// Landmark count L.
     pub l: usize,
     /// normalised PErr per out-of-sample point, optimisation method
     pub perr_opt: Vec<f64>,
@@ -156,6 +164,9 @@ pub struct Fig23Result {
     pub perr_nn: Vec<f64>,
 }
 
+/// Reproduce Figures 2-3: per-point normalised PErr scatter/CDF data
+/// at the scale's contrast pair of landmark counts. Writes
+/// `fig23_<scale>.json`.
 pub fn fig23(
     data: &ExperimentData,
     backend: &Backend,
@@ -250,10 +261,13 @@ pub fn fig23(
 // ---------------------------------------------------------------------------
 
 #[derive(Clone, Debug)]
+/// One Figure-4 point: single-point mapping runtime vs landmark count.
 pub struct Fig4Row {
+    /// Landmark count L.
     pub l: usize,
     /// seconds per single-point mapping
     pub rt_opt: f64,
+    /// Seconds per single-point mapping, NN method.
     pub rt_nn: f64,
 }
 
@@ -276,6 +290,8 @@ fn bench_single_point(
     .median_s
 }
 
+/// Reproduce Figure 4: serving-time per point vs L for both OSE
+/// methods. Writes `fig4_<scale>.json`.
 pub fn fig4(
     data: &ExperimentData,
     backend: &Backend,
@@ -351,6 +367,8 @@ pub fn fig4(
 // Headline numbers (Sec. 5.3.3 / Sec. 6)
 // ---------------------------------------------------------------------------
 
+/// Reproduce the headline numbers of Sec. 5.3.3 / Sec. 6 (quality and
+/// runtime of both methods at the scale's largest L).
 pub fn headline(
     data: &ExperimentData,
     backend: &Backend,

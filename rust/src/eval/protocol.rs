@@ -24,13 +24,18 @@ use crate::util::json::Json;
 use crate::util::prng::Rng;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Experiment scale: how much data the figure reproductions run on.
 pub enum Scale {
+    /// Seconds-fast sanity scale for CI.
     Smoke,
+    /// Minutes-scale default for local runs.
     Small,
+    /// The paper's full N (slow; figures-grade).
     Paper,
 }
 
 impl Scale {
+    /// Parse a scale name (smoke|small|paper).
     pub fn from_name(s: &str) -> Option<Scale> {
         match s {
             "smoke" => Some(Scale::Smoke),
@@ -70,6 +75,7 @@ impl Scale {
         }
     }
 
+    /// Canonical name (for file names and logs).
     pub fn name(self) -> &'static str {
         match self {
             Scale::Smoke => "smoke",
@@ -78,6 +84,7 @@ impl Scale {
         }
     }
 
+    /// LSMDS iteration budget appropriate to the scale.
     pub fn lsmds_iters(self) -> usize {
         match self {
             Scale::Smoke => 60,
@@ -89,8 +96,11 @@ impl Scale {
 
 /// Everything the figure harnesses consume.
 pub struct ExperimentData {
+    /// Scale this data set was built for.
     pub scale: Scale,
+    /// Reference sample (landmark pool).
     pub names_ref: Vec<String>,
+    /// Out-of-sample query set.
     pub names_new: Vec<String>,
     /// N x N reference dissimilarities (Levenshtein).
     pub delta_ref: Matrix,
@@ -100,6 +110,7 @@ pub struct ExperimentData {
     pub delta_new: Matrix,
     /// Normalised stress of the reference configuration.
     pub ref_stress: f64,
+    /// Embedding dimension K of the reference solve.
     pub dim: usize,
 }
 
@@ -147,6 +158,8 @@ impl ExperimentData {
     }
 }
 
+/// Directory figure JSON/SVG outputs are written to
+/// (`$LMDS_RESULTS` or `<repo>/results`).
 pub fn results_dir() -> PathBuf {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
     let _ = std::fs::create_dir_all(&dir);

@@ -14,10 +14,17 @@
 //!   backend is pure Rust and always available; the **pjrt** backend
 //!   (cargo feature `pjrt`) executes AOT artifacts lowered once by
 //!   `python/compile/aot.py` — Python never runs on the request path.
+//! - **Out-of-core data** ([`data::source`]): disk-backed object tables
+//!   whose dissimilarities are evaluated at the storage layer, so both
+//!   pipeline stages run against datasets that never fit in RAM.
 //!
-//! See README.md for the build matrix and DESIGN.md for the system
-//! inventory.
+//! See README.md for the build matrix and docs/ARCHITECTURE.md for the
+//! system map (pipeline stages, extension seams, per-stage memory model).
 
+// Documentation is part of the public contract: every exported item
+// carries rustdoc, enforced as an error by the CI docs job
+// (RUSTDOCFLAGS="-D warnings").
+#![warn(missing_docs)]
 // Style lints that fight the numeric-kernel idiom used throughout
 // (index-based loops over matrix rows/cols, 7-arg update kernels).
 #![allow(

@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   generate   — emit Geco-style synthetic name data
+//!   corpus     — write an out-of-core corpus file (binary object table)
 //!   embed      — run the two-stage large-scale pipeline on generated data
+//!                or, with `--corpus`, out-of-core against a corpus file
 //!   serve      — start the streaming OSE service and run a query workload
 //!   eval       — regenerate the paper's figures (fig1|fig23|fig4|headline|all)
 //!   info       — artifact/manifest inventory
@@ -14,7 +16,11 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use lmds_ose::coordinator::{embed_dataset, BatcherConfig, DriftHook, RunConfig, Server};
+use lmds_ose::coordinator::{
+    embed_corpus, embed_dataset, BatcherConfig, DriftHook, PipelineResult, RunConfig,
+    Server,
+};
+use lmds_ose::data::source::{CorpusKind, CorpusWriter, ObjectTable, TableDelta};
 use lmds_ose::data::{Geco, GecoConfig};
 use lmds_ose::eval::figures;
 use lmds_ose::eval::protocol::{self, Scale};
@@ -44,6 +50,7 @@ fn run(argv: &[String]) -> Result<()> {
     let rest = &argv[1..];
     match cmd.as_str() {
         "generate" => cmd_generate(rest),
+        "corpus" => cmd_corpus(rest),
         "embed" => cmd_embed(rest),
         "serve" => cmd_serve(rest),
         "eval" => cmd_eval(rest),
@@ -63,7 +70,9 @@ fn print_top_usage() {
          USAGE: lmds-ose <command> [options]\n\n\
          COMMANDS:\n\
          \x20 generate   emit Geco-style synthetic name data\n\
+         \x20 corpus     write an out-of-core corpus file (binary object table)\n\
          \x20 embed      two-stage pipeline: landmark LSMDS + OSE of the rest\n\
+         \x20            (out-of-core with --corpus: data never leaves disk)\n\
          \x20 serve      streaming OSE service + synthetic query workload\n\
          \x20 eval       regenerate paper figures (fig1|fig23|fig4|headline|all)\n\
          \x20 plot       render results/*.json into SVG figures\n\
@@ -97,6 +106,23 @@ fn common_specs() -> Vec<OptSpec> {
         ),
         opt("base-blocks", "divide solver: number of blocks B"),
         opt("base-anchors", "divide solver: shared anchors A (0 = auto, sqrt(L))"),
+        opt(
+            "corpus",
+            "out-of-core mode: embed a corpus file written by `lmds-ose corpus` \
+             (dissimilarities evaluated at the storage layer; data never fully \
+             materialises)",
+        ),
+        opt(
+            "corpus-cache-mb",
+            "out-of-core mode: pread block-cache budget in MiB (default 64; \
+             ignored under mmap)",
+        ),
+        opt(
+            "ose-steps",
+            "opt backend: fixed majorization steps per embedding, early \
+             stopping disabled (bit-reproducible across stream chunks; \
+             0 = adaptive default)",
+        ),
         flag("no-pjrt", "force the native compute backend (skip PJRT artifacts)"),
         flag("help", "show help"),
     ]
@@ -170,6 +196,190 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_corpus(argv: &[String]) -> Result<()> {
+    let opt = |name, help, default| OptSpec { name, help, takes_value: true, default };
+    let specs = vec![
+        opt("out", "corpus output path", None),
+        opt("kind", "record layout: text|vec", Some("text")),
+        opt("n", "number of records to generate", Some("100000")),
+        opt("seed", "PRNG seed", Some("40246")),
+        opt("from", "text: read records from this file (one per line) instead \
+             of generating Geco names", None),
+        opt("duplicate-rate", "text generation: fraction of corrupted duplicates", Some("0.0")),
+        opt("dim", "vec: f32s per record", Some("8")),
+        opt("clusters", "vec: number of Gaussian clusters", Some("8")),
+        opt("spread", "vec: within-cluster standard deviation", Some("1.0")),
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!(
+            "{}",
+            usage("corpus", "Write an out-of-core corpus file (binary object table)", &specs)
+        );
+        return Ok(());
+    }
+    let out = args
+        .get("out")
+        .context("--out is required (where to write the corpus)")?;
+    let out = std::path::Path::new(out);
+    let seed = args.u64("seed")?;
+    let summary = match args.str("kind").as_str() {
+        "text" => {
+            let mut w = CorpusWriter::create_text(out)?;
+            match args.get("from") {
+                Some(src) => {
+                    // line-by-line: the input may be bigger than RAM,
+                    // which is exactly the workload this feature serves
+                    use std::io::BufRead;
+                    let file = std::fs::File::open(src)
+                        .with_context(|| format!("reading {src}"))?;
+                    for line in std::io::BufReader::new(file).lines() {
+                        w.push_text(&line.with_context(|| format!("reading {src}"))?)?;
+                    }
+                }
+                None => {
+                    let n = args.usize("n")?;
+                    let mut geco = Geco::new(GecoConfig {
+                        seed,
+                        duplicate_rate: args.f64("duplicate-rate")?,
+                        ..Default::default()
+                    });
+                    // streaming generator: uniqueness state spans the
+                    // whole run, records go straight to disk
+                    geco.generate_with(n, |r| w.push_text(&r.name))?;
+                }
+            }
+            w.finish()?
+        }
+        "vec" => {
+            let n = args.usize("n")?;
+            let dim = args.usize("dim")?;
+            let clusters = args.usize("clusters")?;
+            let spread = args.f64("spread")?;
+            let mut w = CorpusWriter::create_vectors(out, dim)?;
+            let mut rng = lmds_ose::util::prng::Rng::new(seed);
+            for batch_start in (0..n).step_by(8192) {
+                let rows = lmds_ose::data::synthetic::gaussian_clusters(
+                    &mut rng,
+                    (n - batch_start).min(8192),
+                    dim,
+                    clusters,
+                    spread,
+                );
+                for row in &rows {
+                    w.push_vector(row)?;
+                }
+            }
+            w.finish()?
+        }
+        other => anyhow::bail!("unknown corpus kind {other:?} (text|vec)"),
+    };
+    println!(
+        "wrote {} ({} records, {:.1} MiB, {:?})",
+        summary.path.display(),
+        summary.count,
+        summary.bytes as f64 / (1 << 20) as f64,
+        summary.kind,
+    );
+    println!("embed it with: lmds-ose embed --corpus {}", summary.path.display());
+    Ok(())
+}
+
+/// The out-of-core embed path: both pipeline stages run against the
+/// on-disk object table; only landmarks, stream chunks and the N x K
+/// output ever materialise.
+fn cmd_embed_corpus(args: &Args, cfg: &RunConfig, path: &str) -> Result<()> {
+    let table = ObjectTable::open(std::path::Path::new(path), cfg.corpus_cache_bytes())?;
+    let metric_box = match table.kind() {
+        CorpusKind::Text => Some(
+            lmds_ose::strdist::string_metric_by_name(&cfg.metric)
+                .context("unknown metric")?,
+        ),
+        CorpusKind::VecF32 => {
+            if cfg.metric != RunConfig::default().metric {
+                log::warn!(
+                    "vector corpora use the euclidean metric; ignoring --metric {}",
+                    cfg.metric
+                );
+            }
+            None
+        }
+    };
+    let euclid = lmds_ose::strdist::Euclidean;
+    let source = match &metric_box {
+        Some(m) => TableDelta::text(&table, m.as_ref())?,
+        None => TableDelta::vectors(&table, &euclid)?,
+    };
+    let backend = select_backend(cfg);
+
+    let t0 = Instant::now();
+    let result = embed_corpus(&source, &cfg.pipeline(), &backend)?;
+    let total = t0.elapsed().as_secs_f64();
+
+    let n = table.len();
+    println!("embedded {n} corpus records into {}D in {total:.2}s", cfg.dim);
+    println!(
+        "  corpus             : {path} ({:?}, {} storage)",
+        table.kind(),
+        table.storage_name()
+    );
+    if let Some(s) = table.cache_stats() {
+        println!(
+            "  row cache          : {} hits / {} misses / {} evictions, {:.1} MiB resident",
+            s.hits,
+            s.misses,
+            s.evictions,
+            s.resident_bytes as f64 / (1 << 20) as f64
+        );
+    }
+    println!("  landmarks          : {} ({:?})", cfg.landmarks, cfg.landmark_method);
+    println!("  base solver        : {:?}", cfg.base());
+    println!("  compute backend    : {}", backend.name());
+    println!("  ose method         : {:?} via {}", cfg.backend, result.method.name());
+    let chunk = cfg.stream_chunk.unwrap_or(lmds_ose::ose::DEFAULT_STREAM_CHUNK);
+    println!("  streaming          : {chunk}-row chunks read straight from the table");
+    println!("  landmark stress    : {:.4}", result.landmark_stress);
+    let t = &result.timings;
+    println!(
+        "  phases: select {:.2}s | delta_LL {:.2}s | lsmds {:.2}s | \
+         train {:.2}s | delta_ML {:.2}s | ose {:.2}s",
+        t.select_s, t.delta_ll_s, t.lsmds_s, t.train_s, t.delta_ml_s, t.ose_s
+    );
+    if let Some(out) = args.get("out") {
+        write_corpus_coords(&table, &result, out)?;
+        println!("  wrote coordinates to {out}");
+    }
+    Ok(())
+}
+
+/// Stream the coordinate table to `out` as JSON lines (text corpora get
+/// their record echoed back; rows are re-read from the table one at a
+/// time, so the object set still never materialises).
+fn write_corpus_coords(table: &ObjectTable, result: &PipelineResult, out: &str) -> Result<()> {
+    use lmds_ose::util::json::Json;
+    use std::io::Write;
+    let file = std::fs::File::create(out).with_context(|| format!("creating {out}"))?;
+    let mut w = std::io::BufWriter::new(file);
+    for i in 0..table.len() {
+        let coords: Vec<String> =
+            result.coords.row(i).iter().map(|v| format!("{v}")).collect();
+        match table.kind() {
+            CorpusKind::Text => {
+                // corpus records are arbitrary user text: escape through
+                // the JSON serialiser instead of interpolating raw
+                let name = Json::Str(table.text_row(i)).to_string();
+                writeln!(w, "{{\"name\":{name},\"coords\":[{}]}}", coords.join(","))?;
+            }
+            CorpusKind::VecF32 => {
+                writeln!(w, "{{\"row\":{i},\"coords\":[{}]}}", coords.join(","))?;
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
 fn cmd_embed(argv: &[String]) -> Result<()> {
     let mut specs = common_specs();
     specs.push(OptSpec {
@@ -190,6 +400,9 @@ fn cmd_embed(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let cfg = load_config(&args)?;
+    if let Some(path) = cfg.corpus.clone() {
+        return cmd_embed_corpus(&args, &cfg, &path);
+    }
     let n = args.usize("n")?;
 
     let mut geco = Geco::new(GecoConfig { seed: cfg.seed, ..Default::default() });

@@ -40,6 +40,34 @@ use super::procrustes::Procrustes;
 /// Anything that can serve dissimilarities by index pair. Implementations
 /// must be cheap to query concurrently (block solves read disjoint
 /// sub-matrices from worker threads).
+///
+/// Implementations range from a fully materialised [`Matrix`] to the
+/// matrix-free [`PointsDelta`] and the disk-backed
+/// [`crate::data::source::TableDelta`], whose rows never enter RAM
+/// wholesale. Implementing it for a custom store takes two methods:
+///
+/// ```
+/// use lmds_ose::mds::divide::DeltaSource;
+///
+/// /// Distances derived from a rule instead of stored data.
+/// struct Ring(usize);
+///
+/// impl DeltaSource for Ring {
+///     fn len(&self) -> usize {
+///         self.0
+///     }
+///     fn dist(&self, i: usize, j: usize) -> f32 {
+///         let d = i.abs_diff(j);
+///         d.min(self.0 - d) as f32 // hop count around the ring
+///     }
+/// }
+///
+/// let ring = Ring(6);
+/// assert_eq!(ring.dist(0, 5), 1.0);
+/// let sub = ring.sub_matrix(&[0, 2, 5]);
+/// assert_eq!(sub.at(0, 1), 2.0);
+/// assert_eq!(sub.at(1, 2), sub.at(2, 1), "sub-matrix is symmetric");
+/// ```
 pub trait DeltaSource: Sync {
     /// Number of objects.
     fn len(&self) -> usize;
@@ -96,6 +124,7 @@ impl DeltaSource for Matrix {
 /// demand — O(N·K) memory for any N, the matrix-free source the large-L
 /// benches use.
 pub struct PointsDelta<'a> {
+    /// N x K coordinate table (one object per row).
     pub points: &'a Matrix,
 }
 
@@ -106,6 +135,52 @@ impl DeltaSource for PointsDelta<'_> {
 
     fn dist(&self, i: usize, j: usize) -> f32 {
         euclidean(self.points.row(i), self.points.row(j)) as f32
+    }
+}
+
+/// A view of `source` restricted to `idx`: position `p` of the subset is
+/// object `idx[p]` of the underlying source. This is how the base solve
+/// runs over a landmark sample of an out-of-core table without copying
+/// anything — `SubsetDelta` over a
+/// [`TableDelta`](crate::data::source::TableDelta) serves exactly the
+/// L x L sub-problem, still evaluated at the storage layer.
+pub struct SubsetDelta<'a, S: DeltaSource + ?Sized> {
+    source: &'a S,
+    idx: &'a [usize],
+}
+
+impl<'a, S: DeltaSource + ?Sized> SubsetDelta<'a, S> {
+    /// Restrict `source` to the objects in `idx` (indices must be in
+    /// range; duplicates are allowed and behave as coincident objects).
+    pub fn new(source: &'a S, idx: &'a [usize]) -> Self {
+        let n = source.len();
+        assert!(
+            idx.iter().all(|&i| i < n),
+            "subset index out of range (source has {n} objects)"
+        );
+        SubsetDelta { source, idx }
+    }
+
+    /// The subset indices, in subset-position order.
+    pub fn indices(&self) -> &[usize] {
+        self.idx
+    }
+}
+
+impl<S: DeltaSource + ?Sized> DeltaSource for SubsetDelta<'_, S> {
+    fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    fn dist(&self, i: usize, j: usize) -> f32 {
+        self.source.dist(self.idx[i], self.idx[j])
+    }
+
+    fn sub_matrix(&self, idx: &[usize]) -> Matrix {
+        // Delegate through the source so a specialised sub_matrix (e.g.
+        // Matrix's row-copy fast path) still kicks in.
+        let mapped: Vec<usize> = idx.iter().map(|&p| self.idx[p]).collect();
+        self.source.sub_matrix(&mapped)
     }
 }
 
@@ -184,6 +259,30 @@ pub fn block_seed(seed: u64, block: u64) -> u64 {
 /// row in `dim` columns. Blocks are fanned out across the thread pool; the
 /// block solver itself may parallelise internally (the dynamic chunk
 /// cursor balances either way).
+///
+/// ```
+/// use lmds_ose::mds::divide::{divide_solve_with, DivideConfig, PointsDelta};
+/// use lmds_ose::mds::lsmds::{lsmds, LsmdsConfig};
+/// use lmds_ose::mds::Matrix;
+/// use lmds_ose::util::prng::Rng;
+///
+/// // 60 points in R^2, served matrix-free: no 60 x 60 matrix exists.
+/// let points = Matrix::random_normal(&mut Rng::new(7), 60, 2, 1.0);
+/// let source = PointsDelta { points: &points };
+///
+/// let lcfg = LsmdsConfig { dim: 2, max_iters: 50, ..Default::default() };
+/// let r = divide_solve_with(
+///     &source,
+///     2,
+///     &DivideConfig { blocks: 3, anchors: 8 },
+///     42,
+///     |_, sub| Ok(lsmds(sub, &lcfg).config), // any per-block solver
+/// )
+/// .unwrap();
+/// assert_eq!((r.config.rows, r.config.cols), (60, 2));
+/// assert_eq!(r.block_sizes.len(), 3);
+/// assert_eq!(r.align_rmsd[0], 0.0, "block 0 is the reference frame");
+/// ```
 pub fn divide_solve_with<S, F>(
     source: &S,
     dim: usize,

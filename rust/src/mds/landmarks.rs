@@ -7,8 +7,11 @@ use crate::strdist::Dissimilarity;
 use crate::util::prng::Rng;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Landmark-selection strategy (paper Sec. 4).
 pub enum LandmarkMethod {
+    /// Uniform random distinct indices — O(L), the large-scale default.
     Random,
+    /// Farthest point sampling — O(L·N) metric calls, spread-maximising.
     Fps,
     /// FPS over a random candidate subsample of the given size factor
     /// (candidates = factor * L), trading exactness for speed.
@@ -16,6 +19,7 @@ pub enum LandmarkMethod {
 }
 
 impl LandmarkMethod {
+    /// Parse a method name (random|fps|maxmin).
     pub fn from_name(s: &str) -> Option<Self> {
         match s {
             "random" => Some(Self::Random),

@@ -15,6 +15,7 @@ use super::matrix::Matrix;
 use super::stress::raw_stress;
 
 #[derive(Clone, Debug)]
+/// LSMDS solver settings (paper Sec. 2.1).
 pub struct LsmdsConfig {
     /// Output dimension K.
     pub dim: usize,
@@ -26,6 +27,7 @@ pub struct LsmdsConfig {
     pub lr: Option<f64>,
     /// Scale of the random initial configuration.
     pub init_sigma: f32,
+    /// Seed of the random initial configuration.
     pub seed: u64,
 }
 
@@ -45,9 +47,13 @@ impl Default for LsmdsConfig {
 /// Result of an LSMDS run.
 #[derive(Clone, Debug)]
 pub struct LsmdsResult {
+    /// N x K solution configuration.
     pub config: Matrix,
+    /// Raw stress (Eq. 1) of the solution.
     pub raw_stress: f64,
+    /// Normalised stress of the solution.
     pub normalized_stress: f64,
+    /// Gradient iterations actually run.
     pub iters: usize,
 }
 

@@ -5,22 +5,29 @@
 use crate::util::prng::Rng;
 
 #[derive(Clone, Debug, PartialEq)]
+/// Dense row-major f32 matrix.
 pub struct Matrix {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
+    /// Row-major backing storage (`rows * cols` values).
     pub data: Vec<f32>,
 }
 
 impl Matrix {
+    /// All-zero matrix of the given shape.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Wrap a row-major buffer (must have `rows * cols` entries).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
         Self { rows, cols, data }
     }
 
+    /// Build from row vectors (all must share one length).
     pub fn from_rows(rows: &[Vec<f32>]) -> Self {
         let r = rows.len();
         let c = rows.first().map(|x| x.len()).unwrap_or(0);
@@ -38,23 +45,27 @@ impl Matrix {
     }
 
     #[inline]
+    /// Value at (r, c).
     pub fn at(&self, r: usize, c: usize) -> f32 {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c]
     }
 
     #[inline]
+    /// Set the value at (r, c).
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c] = v;
     }
 
     #[inline]
+    /// Row `r` as a slice.
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
     #[inline]
+    /// Row `r` as a mutable slice.
     pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
@@ -97,6 +108,7 @@ impl Matrix {
         means
     }
 
+    /// Largest element-wise absolute difference to `other` (same shape).
     pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         self.data
@@ -106,6 +118,7 @@ impl Matrix {
             .fold(0.0, f32::max)
     }
 
+    /// Frobenius norm (sqrt of the sum of squared entries), in f64.
     pub fn frobenius_norm(&self) -> f64 {
         self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
     }

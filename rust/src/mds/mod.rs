@@ -14,7 +14,7 @@ pub mod procrustes;
 pub mod smacof;
 pub mod stress;
 
-pub use divide::{DeltaSource, DivideConfig, DivideResult, PointsDelta};
+pub use divide::{DeltaSource, DivideConfig, DivideResult, PointsDelta, SubsetDelta};
 pub use landmarks::LandmarkMethod;
 pub use lsmds::{lsmds, lsmds_from, LsmdsConfig, LsmdsResult};
 pub use matrix::Matrix;

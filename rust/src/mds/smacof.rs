@@ -88,10 +88,15 @@ fn coincident_direction(i: usize, j: usize, k: usize) -> Vec<f64> {
 }
 
 #[derive(Clone, Debug)]
+/// SMACOF solver settings.
 pub struct SmacofConfig {
+    /// Embedding dimension K.
     pub dim: usize,
+    /// Maximum Guttman-transform iterations.
     pub max_iters: usize,
+    /// Stop when relative stress improvement drops below this.
     pub rel_tol: f64,
+    /// Seed of the random initial configuration.
     pub seed: u64,
 }
 
@@ -102,10 +107,15 @@ impl Default for SmacofConfig {
 }
 
 #[derive(Clone, Debug)]
+/// What one SMACOF run produced.
 pub struct SmacofResult {
+    /// N x K solution configuration.
     pub config: Matrix,
+    /// Raw stress (Eq. 1) of the solution.
     pub raw_stress: f64,
+    /// Normalised stress of the solution.
     pub normalized_stress: f64,
+    /// Guttman iterations actually run.
     pub iters: usize,
 }
 

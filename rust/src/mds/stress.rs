@@ -8,33 +8,64 @@ use crate::util::threadpool::{default_parallelism, parallel_for_chunks, SyncSlic
 
 use super::matrix::Matrix;
 
+/// Row-parallel reduction shared by the exact stress metrics: worker
+/// threads each accumulate whole rows `i` (inner `j > i` loop in
+/// ascending order, exactly the serial association), write the row sum
+/// into its slot, and the final reduction adds the per-row partials in
+/// ascending row order — so the result is bit-identical across thread
+/// counts and runs, just not to the historical fully-serial association.
+/// The triangular row costs are ragged; the dynamic chunk cursor in
+/// [`parallel_for_chunks`] balances them.
+fn row_parallel_sum(n: usize, per_row: impl Fn(usize) -> f64 + Sync) -> f64 {
+    let mut partials = vec![0.0f64; n];
+    {
+        let slots = SyncSlice::new(&mut partials);
+        parallel_for_chunks(n, 8, default_parallelism(), |start, end| {
+            for i in start..end {
+                // SAFETY: each row index is written exactly once.
+                unsafe { slots.write(i, per_row(i)) };
+            }
+        });
+    }
+    partials.iter().sum()
+}
+
 /// Raw stress (Eq. 1): sum over unordered pairs of (d_ij - delta_ij)^2.
+///
+/// Row-parallel over the thread pool (the O(L^2) pair sweep costs as
+/// much as a divide-and-conquer base solve at L = 10k when run serially)
+/// with a deterministic per-row accumulation order — repeated calls are
+/// bit-identical regardless of thread count.
 pub fn raw_stress(x: &Matrix, delta: &Matrix) -> f64 {
     assert_eq!(x.rows, delta.rows);
     assert_eq!(delta.rows, delta.cols);
     let n = x.rows;
-    let mut acc = 0.0f64;
-    for i in 0..n {
+    row_parallel_sum(n, |i| {
+        let xi = x.row(i);
+        let mut acc = 0.0f64;
         for j in (i + 1)..n {
-            let d = euclidean(x.row(i), x.row(j));
+            let d = euclidean(xi, x.row(j));
             let r = d - delta.at(i, j) as f64;
             acc += r * r;
         }
-    }
-    acc
+        acc
+    })
 }
 
 /// Normalised stress: sqrt(sigma_raw / sum_{i<j} delta_ij^2) (Sec. 2.1).
+/// Row-parallel, deterministic (see [`raw_stress`]).
 pub fn normalized_stress(x: &Matrix, delta: &Matrix) -> f64 {
     let num = raw_stress(x, delta);
     let n = delta.rows;
-    let mut den = 0.0f64;
-    for i in 0..n {
-        for j in (i + 1)..n {
-            let d = delta.at(i, j) as f64;
-            den += d * d;
+    let den = row_parallel_sum(n, |i| {
+        let row = delta.row(i);
+        let mut acc = 0.0f64;
+        for &v in &row[(i + 1)..] {
+            let d = v as f64;
+            acc += d * d;
         }
-    }
+        acc
+    });
     if den <= 0.0 {
         return 0.0;
     }
@@ -188,6 +219,44 @@ mod tests {
         let e = total_error(&config, &delta_new, &y_hat);
         assert!(e.is_finite());
         assert!(e < 1e-9); // the embedding is exact here
+    }
+
+    #[test]
+    fn parallel_stress_matches_serial_oracle_and_is_deterministic() {
+        // large enough for several parallel chunks
+        let n = 300;
+        let mut rng = crate::util::prng::Rng::new(0x57e5);
+        let x = Matrix::random_normal(&mut rng, n, 3, 1.0);
+        let mut delta = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let d = euclidean(x.row(i), x.row(j)) as f32 * 1.1 + 0.01;
+                delta.set(i, j, if i == j { 0.0 } else { d });
+            }
+        }
+        // serial oracle with the same per-row association
+        let mut want_raw = 0.0f64;
+        let mut want_den = 0.0f64;
+        for i in 0..n {
+            let mut row_raw = 0.0f64;
+            let mut row_den = 0.0f64;
+            for j in (i + 1)..n {
+                let d = euclidean(x.row(i), x.row(j));
+                let r = d - delta.at(i, j) as f64;
+                row_raw += r * r;
+                let dd = delta.at(i, j) as f64;
+                row_den += dd * dd;
+            }
+            want_raw += row_raw;
+            want_den += row_den;
+        }
+        let got_raw = raw_stress(&x, &delta);
+        assert_eq!(got_raw, want_raw, "bit-identical to the row-ordered oracle");
+        let got_norm = normalized_stress(&x, &delta);
+        assert_eq!(got_norm, (want_raw / want_den).sqrt());
+        // repeated runs are bit-identical (thread count must not leak in)
+        assert_eq!(raw_stress(&x, &delta), got_raw);
+        assert_eq!(normalized_stress(&x, &delta), got_norm);
     }
 
     #[test]

@@ -14,17 +14,22 @@
 use crate::mds::Matrix;
 use crate::util::prng::Rng;
 
+/// Numerical floor guarding divisions/sqrts in the loss and Adam math.
 pub const EPS: f32 = 1e-12;
 
 /// Layer sizes: input L -> h1 -> h2 -> h3 -> K.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct MlpShape {
+    /// Input width (the landmark count L).
     pub input: usize,
+    /// Hidden-layer widths.
     pub hidden: [usize; 3],
+    /// Output width (the embedding dimension K).
     pub output: usize,
 }
 
 impl MlpShape {
+    /// (in, out) dimensions of the four dense layers.
     pub fn layer_dims(&self) -> [(usize, usize); 4] {
         [
             (self.input, self.hidden[0]),
@@ -34,6 +39,7 @@ impl MlpShape {
         ]
     }
 
+    /// Total trainable parameter count (weights + biases).
     pub fn param_count(&self) -> usize {
         self.layer_dims()
             .iter()
@@ -45,8 +51,11 @@ impl MlpShape {
 /// Parameters: weights `w[l]` are (in x out) row-major, biases `b[l]`.
 #[derive(Clone, Debug)]
 pub struct MlpParams {
+    /// Layer shape these parameters belong to.
     pub shape: MlpShape,
+    /// Weight matrices, one per layer (in x out).
     pub w: [Matrix; 4],
+    /// Bias vectors, one per layer.
     pub b: [Vec<f32>; 4],
 }
 
@@ -216,10 +225,14 @@ pub fn mae_loss(pred: &Matrix, target: &Matrix) -> f64 {
 
 /// Gradients of the Eq.-3 loss w.r.t. every parameter (exact backprop).
 pub struct Gradients {
+    /// Weight gradients, one per layer.
     pub w: [Matrix; 4],
+    /// Bias gradients, one per layer.
     pub b: [Vec<f32>; 4],
 }
 
+/// Forward + backward pass for minibatch `d` against `target`:
+/// returns the Eq.-3 loss and the parameter gradients.
 pub fn backward(params: &MlpParams, d: &Matrix, target: &Matrix) -> (f64, Gradients) {
     let batch = d.rows as f32;
 
@@ -311,7 +324,9 @@ fn relu_backward(activated: &Matrix, delta: &mut Matrix) {
 /// Adam optimiser state (beta1 = 0.9, beta2 = 0.999, eps = 1e-7: the Keras
 /// defaults the paper used, mirrored by the JAX graph).
 pub struct Adam {
+    /// Learning rate.
     pub lr: f32,
+    /// Step counter (f32 to match the artifact scalar slot).
     pub t: f32,
     m_w: [Matrix; 4],
     v_w: [Matrix; 4],
@@ -319,11 +334,15 @@ pub struct Adam {
     v_b: [Vec<f32>; 4],
 }
 
+/// Adam first-moment decay.
 pub const BETA1: f32 = 0.9;
+/// Adam second-moment decay.
 pub const BETA2: f32 = 0.999;
+/// Adam denominator epsilon.
 pub const ADAM_EPS: f32 = 1e-7;
 
 impl Adam {
+    /// Zeroed optimiser state for the given shape.
     pub fn new(shape: &MlpShape, lr: f32) -> Self {
         let dims = shape.layer_dims();
         let zw = |i: usize| Matrix::zeros(dims[i].0, dims[i].1);
@@ -338,6 +357,7 @@ impl Adam {
         }
     }
 
+    /// Apply one Adam update to `params` from `grads`.
     pub fn step(&mut self, params: &mut MlpParams, grads: &Gradients) {
         self.t += 1.0;
         let bc1 = 1.0 - BETA1.powf(self.t);

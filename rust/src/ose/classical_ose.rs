@@ -74,6 +74,7 @@ pub struct ClassicalOse {
     /// Row means of the squared dissimilarity matrix of the configuration
     /// (precomputed from the original Delta).
     pub row_means_sq: Vec<f64>,
+    /// Grand mean of the squared dissimilarity matrix.
     pub grand_mean_sq: f64,
 }
 

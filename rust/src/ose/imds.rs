@@ -19,9 +19,11 @@ use super::optimise::{embed_point, OseOptConfig};
 use super::OseMethod;
 
 #[derive(Clone, Debug)]
+/// I-MDS settings: neighbourhood size + per-point optimiser budget.
 pub struct ImdsConfig {
     /// Number of nearest landmarks used per point.
     pub k: usize,
+    /// Per-point majorization budget of the local solve.
     pub opt: OseOptConfig,
 }
 
@@ -33,7 +35,9 @@ impl Default for ImdsConfig {
 
 /// I-MDS interpolation over a fixed landmark configuration.
 pub struct Imds {
+    /// L x K landmark configuration.
     pub landmarks: Matrix,
+    /// Interpolation settings.
     pub cfg: ImdsConfig,
 }
 

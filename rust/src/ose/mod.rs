@@ -12,7 +12,10 @@ pub mod pipeline;
 pub use classical_ose::ClassicalOse;
 pub use imds::{Imds, ImdsConfig};
 pub use optimise::{embed_batch, embed_point, OseOptConfig, OsePoint};
-pub use pipeline::{embed_stream, embed_stream_with, StreamStats, DEFAULT_STREAM_CHUNK};
+pub use pipeline::{
+    embed_stream, embed_stream_blocks, embed_stream_with, StreamStats,
+    DEFAULT_STREAM_CHUNK,
+};
 
 use crate::mds::Matrix;
 
@@ -29,6 +32,7 @@ pub trait OseMethod: Send {
     /// Number of landmarks L this method expects.
     fn landmarks(&self) -> usize;
 
+    /// Human-readable method name (for configs, logs and reports).
     fn name(&self) -> &'static str;
 }
 
@@ -41,6 +45,7 @@ pub trait OseMethod: Send {
 /// cloneable method becomes a factory with
 /// `factory_fn(move || Box::new(method.clone()))`.
 pub trait OseMethodFactory: Send + Sync {
+    /// Construct one fresh replica over the shared trained state.
     fn build(&self) -> Box<dyn OseMethod>;
 }
 
@@ -63,7 +68,9 @@ where
 
 /// Pure-Rust optimisation method (the serial R-protocol baseline).
 pub struct RustOptimise {
+    /// L x K landmark configuration.
     pub landmarks: Matrix,
+    /// Per-point majorization budget.
     pub cfg: OseOptConfig,
 }
 
@@ -93,6 +100,7 @@ impl OseMethod for RustOptimise {
 
 /// Pure-Rust NN method over trained parameters.
 pub struct RustNn {
+    /// Trained MLP parameters.
     pub params: crate::nn::MlpParams,
 }
 

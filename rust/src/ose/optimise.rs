@@ -13,6 +13,7 @@
 use crate::mds::Matrix;
 
 #[derive(Clone, Debug)]
+/// Per-point majorization budget (paper Sec. 4.1).
 pub struct OseOptConfig {
     /// Maximum majorization iterations per point.
     pub max_iters: usize,
@@ -55,9 +56,11 @@ pub fn objective_and_grad(lm: &Matrix, delta: &[f32], y: &[f32]) -> (f64, Vec<f6
 /// Result of one embedding.
 #[derive(Clone, Debug)]
 pub struct OsePoint {
+    /// Embedded coordinates (length K).
     pub coords: Vec<f32>,
     /// Final Eq.-2 objective value.
     pub objective: f64,
+    /// Majorization iterations actually run.
     pub iters: usize,
     /// True when the run stopped because the relative objective change
     /// dropped below `rel_tol`; false when it exhausted `max_iters`.

@@ -89,23 +89,60 @@ pub fn embed_stream_with<T, F>(
     metric: &dyn Dissimilarity<T>,
     method: &mut dyn OseMethod,
     chunk: usize,
-    mut sink: F,
+    sink: F,
 ) -> Result<StreamStats>
 where
     T: Sync + ?Sized,
     F: FnMut(usize, &Matrix) -> Result<()>,
 {
-    let chunk = chunk.max(1);
-    let mut stats = StreamStats { rows: objects.len(), ..Default::default() };
-    if objects.is_empty() {
-        return Ok(stats);
-    }
     anyhow::ensure!(
         landmarks.len() == method.landmarks(),
         "method expects {} landmarks, got {}",
         method.landmarks(),
         landmarks.len()
     );
+    embed_stream_blocks(
+        objects.len(),
+        chunk,
+        |start, end| cross_matrix(&objects[start..end], landmarks, metric),
+        method,
+        sink,
+    )
+}
+
+/// The generic streaming driver under [`embed_stream_with`]: the double-
+/// buffered producer/consumer over an arbitrary block producer.
+///
+/// `produce(start, end)` runs on the producer thread and must return the
+/// `(end - start) x L` dissimilarity block for rows `start..end` — built
+/// from an in-memory object slice ([`embed_stream_with`]), read out of a
+/// disk-backed [`crate::data::source::ObjectTable`]
+/// ([`crate::coordinator::embedder::embed_corpus`]), or anything else
+/// that can serve rows by range. Exactly one `produce` call is in flight
+/// at a time and calls arrive in ascending order, so a producer may keep
+/// sequential state (file cursors, decompression windows).
+///
+/// Memory contract: at most two produced blocks are alive at any instant
+/// (one being consumed, one in flight behind the rendezvous channel) —
+/// the producer's own transient allocations ride inside its `produce`
+/// call and die before the next send.
+pub fn embed_stream_blocks<P, F>(
+    rows: usize,
+    chunk: usize,
+    mut produce: P,
+    method: &mut dyn OseMethod,
+    mut sink: F,
+) -> Result<StreamStats>
+where
+    P: FnMut(usize, usize) -> Matrix + Send,
+    F: FnMut(usize, &Matrix) -> Result<()>,
+{
+    let chunk = chunk.max(1);
+    let mut stats = StreamStats { rows, ..Default::default() };
+    if rows == 0 {
+        return Ok(stats);
+    }
+    let landmarks = method.landmarks();
 
     let (tx, rx) = std::sync::mpsc::sync_channel::<(usize, Matrix)>(0);
     let mut outcome: Result<()> = Ok(());
@@ -113,10 +150,10 @@ where
         let producer = scope.spawn(move || {
             let mut produce_s = 0.0f64;
             let mut start = 0usize;
-            while start < objects.len() {
-                let end = (start + chunk).min(objects.len());
+            while start < rows {
+                let end = (start + chunk).min(rows);
                 let t0 = std::time::Instant::now();
-                let block = cross_matrix(&objects[start..end], landmarks, metric);
+                let block = produce(start, end);
                 produce_s += t0.elapsed().as_secs_f64();
                 // a send error means the consumer bailed (embed/sink error
                 // dropped the receiver): stop producing, not an error here
@@ -131,6 +168,13 @@ where
         for (start, block) in rx.iter() {
             stats.chunks += 1;
             stats.max_chunk_rows = stats.max_chunk_rows.max(block.rows);
+            if block.cols != landmarks {
+                outcome = Err(anyhow::anyhow!(
+                    "producer built a {}-column block for a {landmarks}-landmark method",
+                    block.cols
+                ));
+                break;
+            }
             let t0 = std::time::Instant::now();
             let coords = match method.embed(&block) {
                 Ok(c) => c,
@@ -269,6 +313,53 @@ mod tests {
             |_, _| Ok(()),
         );
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn blocks_driver_accepts_custom_producers() {
+        let (_, lm_cfg) = setup(5, 2);
+        let mut method =
+            RustOptimise { landmarks: lm_cfg, cfg: OseOptConfig::default() };
+        // synthetic producer: block values derived from the row index
+        // alone, no object slice anywhere
+        let mut rows_seen = 0usize;
+        let stats = embed_stream_blocks(
+            23,
+            10,
+            |start, end| {
+                let mut m = Matrix::zeros(end - start, 5);
+                for r in 0..m.rows {
+                    for c in 0..5 {
+                        m.set(r, c, 1.0 + ((start + r + c) % 7) as f32);
+                    }
+                }
+                m
+            },
+            &mut method,
+            |_, coords| {
+                rows_seen += coords.rows;
+                assert!(coords.data.iter().all(|v| v.is_finite()));
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(rows_seen, 23);
+        assert_eq!(stats.chunks, 3);
+    }
+
+    #[test]
+    fn blocks_driver_rejects_wrong_width_blocks() {
+        let (_, lm_cfg) = setup(5, 2);
+        let mut method =
+            RustOptimise { landmarks: lm_cfg, cfg: OseOptConfig::default() };
+        let r = embed_stream_blocks(
+            8,
+            4,
+            |start, end| Matrix::zeros(end - start, 3), // 3 != 5 landmarks
+            &mut method,
+            |_, _| Ok(()),
+        );
+        assert!(r.is_err());
     }
 
     #[test]

@@ -27,6 +27,7 @@ use crate::nn::{MlpParams, MlpShape};
 /// update the same representation, so training can switch backends
 /// mid-run without conversion.
 pub struct AdamState {
+    /// Layer shape the flat buffers below belong to.
     pub shape: MlpShape,
     /// Flattened parameters.
     pub params: Vec<Vec<f32>>,

@@ -21,7 +21,9 @@ use super::manifest::{ArtifactSpec, Manifest};
 
 /// An input argument for an artifact execution.
 pub enum ArgValue<'a> {
+    /// Scalar f32.
     Scalar(f32),
+    /// 2-D row-major matrix.
     Mat(&'a Matrix),
     /// 1-D vector.
     Vec1(&'a [f32]),
@@ -40,16 +42,20 @@ impl ArgValue<'_> {
 /// One output tensor: shape + row-major f32 data.
 #[derive(Clone, Debug)]
 pub struct OutValue {
+    /// Tensor shape (row-major).
     pub shape: Vec<usize>,
+    /// Flattened row-major values.
     pub data: Vec<f32>,
 }
 
 impl OutValue {
+    /// The single value of a rank-0/len-1 output.
     pub fn scalar(&self) -> f32 {
         debug_assert_eq!(self.data.len(), 1);
         self.data[0]
     }
 
+    /// Reinterpret as a matrix (rank <= 2 outputs only).
     pub fn into_matrix(self) -> Matrix {
         match self.shape.len() {
             2 => Matrix::from_vec(self.shape[0], self.shape[1], self.data),
@@ -60,7 +66,10 @@ impl OutValue {
     }
 }
 
+/// A PJRT client plus the compiled-executable and device-binding
+/// caches for one artifact directory.
 pub struct Runtime {
+    /// The artifact manifest this runtime serves.
     pub manifest: Manifest,
     client: xla::PjRtClient,
     compiled: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
@@ -87,6 +96,7 @@ impl Runtime {
         })
     }
 
+    /// Look up an artifact by name.
     pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
         self.manifest
             .artifacts
@@ -212,10 +222,12 @@ impl Runtime {
         Ok(())
     }
 
+    /// Drop a device-resident argument binding.
     pub fn unbind(&self, key: &str) {
         self.bound.borrow_mut().remove(key);
     }
 
+    /// True when `key` has a device-resident binding.
     pub fn has_binding(&self, key: &str) -> bool {
         self.bound.borrow().contains_key(key)
     }

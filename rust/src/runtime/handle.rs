@@ -17,8 +17,11 @@ use super::manifest::Manifest;
 /// Owned argument (must cross the channel).
 #[derive(Clone, Debug)]
 pub enum OwnedArg {
+    /// Scalar f32.
     Scalar(f32),
+    /// 2-D row-major matrix.
     Mat(Matrix),
+    /// 1-D vector.
     Vec1(Vec<f32>),
 }
 
@@ -65,6 +68,8 @@ pub struct RuntimeHandle {
 }
 
 // Sender<Job> is Send; Manifest is plain data.
+/// Owner of the dedicated PJRT executor thread: spawns it, hands out
+/// [`RuntimeHandle`]s, and joins it on drop.
 pub struct RuntimeThread {
     handle: Option<JoinHandle<()>>,
     tx: Sender<Job>,
@@ -128,6 +133,7 @@ impl RuntimeThread {
         Ok(RuntimeThread { handle: Some(handle), tx, manifest })
     }
 
+    /// A new clonable handle onto the executor thread.
     pub fn handle(&self) -> RuntimeHandle {
         RuntimeHandle {
             tx: self.tx.clone(),
@@ -146,6 +152,7 @@ impl Drop for RuntimeThread {
 }
 
 impl RuntimeHandle {
+    /// The artifact manifest the executor serves.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

@@ -10,42 +10,62 @@ use anyhow::{bail, Context, Result};
 use crate::util::json::Json;
 
 #[derive(Clone, Debug, PartialEq)]
+/// One artifact input argument.
 pub struct ArgSpec {
+    /// Argument name (as lowered).
     pub name: String,
+    /// Expected tensor shape.
     pub shape: Vec<usize>,
 }
 
 #[derive(Clone, Debug, PartialEq)]
+/// One artifact output tensor.
 pub struct OutSpec {
+    /// Produced tensor shape.
     pub shape: Vec<usize>,
 }
 
 #[derive(Clone, Debug)]
+/// One AOT-lowered executable: its graph, shape variant and file.
 pub struct ArtifactSpec {
+    /// Unique artifact name (`graph@scale` convention).
     pub name: String,
     /// Graph family: lsmds_steps | ose_opt | mlp_fwd | mlp_train_step | mlp_loss.
     pub graph: String,
+    /// Shape-variant tag (e.g. the unrolled batch/step sizes).
     pub scale: String,
+    /// HLO file, relative to the manifest directory at parse time.
     pub file: PathBuf,
+    /// Named dimension bindings (L, K, B, T, ...).
     pub dims: BTreeMap<String, usize>,
+    /// Input argument specs, in call order.
     pub args: Vec<ArgSpec>,
+    /// Output tensor specs, in result order.
     pub outputs: Vec<OutSpec>,
 }
 
 impl ArtifactSpec {
+    /// Named dimension value, if bound.
     pub fn dim(&self, key: &str) -> Option<usize> {
         self.dims.get(key).copied()
     }
 }
 
 #[derive(Clone, Debug)]
+/// The contract between the AOT compiler (`python/compile/aot.py`)
+/// and the artifact runtime: every lowered executable plus the model
+/// shape they were lowered for.
 pub struct Manifest {
+    /// Embedding dimension K the artifacts were lowered for.
     pub k_dim: usize,
+    /// Hidden-layer sizes of the lowered MLP graphs.
     pub hidden: Vec<usize>,
+    /// Every lowered executable.
     pub artifacts: Vec<ArtifactSpec>,
 }
 
 impl Manifest {
+    /// Read and parse `manifest.json` from an artifact directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -53,6 +73,7 @@ impl Manifest {
         Self::parse(&text, dir)
     }
 
+    /// Parse manifest JSON text (`dir` anchors relative artifact paths).
     pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
         let root = Json::parse(text).context("parsing manifest.json")?;
         let version = root

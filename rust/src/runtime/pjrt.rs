@@ -134,6 +134,8 @@ fn weight_args(
         .collect()
 }
 
+/// [`ComputeBackend`] over AOT artifacts executed through PJRT,
+/// delegating to the native backend for shapes with no artifact.
 pub struct PjrtBackend {
     /// Executor-thread owner; a fresh [`RuntimeHandle`] is cloned out per
     /// operation (the mutex makes the backend `Sync` regardless of the

@@ -23,6 +23,7 @@ pub use qgram::{qgram_cosine_distance, qgram_distance};
 /// Object-safe so heterogeneous configurations can box it; `Sync` so the
 /// parallel dissimilarity-matrix builder can share it across threads.
 pub trait Dissimilarity<T: ?Sized>: Sync {
+    /// Dissimilarity between `a` and `b` (>= 0; 0 for identical objects).
     fn dist(&self, a: &T, b: &T) -> f64;
 
     /// Human-readable name (for configs, logs and reports).

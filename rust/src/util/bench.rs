@@ -10,6 +10,7 @@ use std::time::{Duration, Instant};
 use super::stats;
 
 #[derive(Clone, Debug)]
+/// Warmup/measurement budget of one bench subject.
 pub struct BenchConfig {
     /// Minimum wall time to spend in warmup.
     pub warmup: Duration,
@@ -46,17 +47,26 @@ impl BenchConfig {
 }
 
 #[derive(Clone, Debug)]
+/// Robust timing summary of one bench subject.
 pub struct BenchResult {
+    /// Subject name.
     pub name: String,
+    /// Measured iterations.
     pub iters: usize,
+    /// Per-iteration wall times (seconds).
     pub samples_s: Vec<f64>,
+    /// Median iteration time (seconds).
     pub median_s: f64,
+    /// Median absolute deviation (seconds).
     pub mad_s: f64,
+    /// Mean iteration time (seconds).
     pub mean_s: f64,
+    /// Fastest iteration (seconds).
     pub min_s: f64,
 }
 
 impl BenchResult {
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         format!(
             "{:<48} {:>12}/iter  (median; mad {}, min {}, n={})",
@@ -74,6 +84,7 @@ impl BenchResult {
     }
 }
 
+/// Human-scale duration formatting (ns/µs/ms/s).
 pub fn fmt_duration(s: f64) -> String {
     if !s.is_finite() {
         "n/a".into()
@@ -132,14 +143,17 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start a labelled wall-clock timer.
     pub fn start(label: &str) -> Self {
         Self { label: label.to_string(), start: Instant::now() }
     }
 
+    /// Seconds elapsed so far.
     pub fn elapsed_s(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Stop, log the elapsed time, and return it in seconds.
     pub fn stop(self) -> f64 {
         let dt = self.elapsed_s();
         log::debug!("{}: {}", self.label, fmt_duration(dt));

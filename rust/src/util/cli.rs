@@ -7,9 +7,13 @@
 use std::collections::BTreeMap;
 
 #[derive(Debug)]
+/// Argument-parsing failure.
 pub enum CliError {
+    /// Flag not declared in the spec list.
     Unknown(String),
+    /// Value-taking flag given without a value.
     MissingValue(String),
+    /// Value failed to parse: (flag, value, expected type).
     BadValue(String, String, String),
 }
 
@@ -32,9 +36,13 @@ impl std::error::Error for CliError {}
 /// Declarative option spec (used for usage text + unknown-option checking).
 #[derive(Clone, Debug)]
 pub struct OptSpec {
+    /// Flag name (without the leading `--`).
     pub name: &'static str,
+    /// Help text shown by `--help`.
     pub help: &'static str,
+    /// True when the flag consumes a value.
     pub takes_value: bool,
+    /// Default value when the flag is absent.
     pub default: Option<&'static str>,
 }
 
@@ -43,6 +51,7 @@ pub struct OptSpec {
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Non-flag arguments, in order.
     pub positional: Vec<String>,
 }
 
@@ -91,26 +100,32 @@ impl Args {
         Ok(out)
     }
 
+    /// True when the boolean flag was given.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw value of a flag (or its default), if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// Value of a flag that is guaranteed present (has a default).
     pub fn str(&self, name: &str) -> String {
         self.get(name).unwrap_or_default().to_string()
     }
 
+    /// Parse a flag value as `usize`.
     pub fn usize(&self, name: &str) -> Result<usize, CliError> {
         self.typed(name, |v| v.parse::<usize>().ok())
     }
 
+    /// Parse a flag value as `u64`.
     pub fn u64(&self, name: &str) -> Result<u64, CliError> {
         self.typed(name, |v| v.parse::<u64>().ok())
     }
 
+    /// Parse a flag value as `f64`.
     pub fn f64(&self, name: &str) -> Result<f64, CliError> {
         self.typed(name, |v| v.parse::<f64>().ok())
     }

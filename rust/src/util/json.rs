@@ -8,18 +8,28 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 #[derive(Clone, Debug, PartialEq)]
+/// A JSON value (hand-rolled: the offline image vendors no serde).
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any JSON number.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys, so serialisation is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 #[derive(Debug)]
+/// Where and why parsing failed.
 pub struct ParseError {
+    /// Byte offset of the failure.
     pub pos: usize,
+    /// What was expected.
     pub msg: String,
 }
 
@@ -34,20 +44,24 @@ impl std::error::Error for ParseError {}
 impl Json {
     // -- constructors ------------------------------------------------------
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build an array of numbers.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|x| Json::Num(*x)).collect())
     }
 
+    /// Build an array of strings.
     pub fn arr_str(xs: &[String]) -> Json {
         Json::Arr(xs.iter().map(|x| Json::Str(x.clone())).collect())
     }
 
     // -- accessors ---------------------------------------------------------
 
+    /// Object field lookup (`None` on non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -55,6 +69,7 @@ impl Json {
         }
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -62,6 +77,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -69,6 +85,7 @@ impl Json {
         }
     }
 
+    /// Non-negative integral value, if representable as `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|x| {
             if x >= 0.0 && x.fract() == 0.0 {
@@ -79,6 +96,7 @@ impl Json {
         })
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -86,6 +104,7 @@ impl Json {
         }
     }
 
+    /// Array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -104,6 +123,7 @@ impl Json {
 
     // -- parse -------------------------------------------------------------
 
+    /// Parse a JSON document.
     pub fn parse(text: &str) -> Result<Json, ParseError> {
         let mut p = Parser { b: text.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -117,12 +137,14 @@ impl Json {
 
     // -- write -------------------------------------------------------------
 
+    /// Compact single-line serialisation.
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, None, 0);
         s
     }
 
+    /// Indented serialisation.
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, Some(2), 0);

@@ -25,14 +25,17 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// Generator with the given seed and size bound.
     pub fn new(seed: u64, size: usize) -> Self {
         Self { rng: Rng::new(seed), size }
     }
 
+    /// Uniform `u64`.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()
     }
 
+    /// Uniform integer in `[lo, hi]`.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         assert!(hi >= lo);
         lo + self.rng.index(hi - lo + 1)
@@ -44,14 +47,17 @@ impl Gen {
         self.usize_in(lo, hi)
     }
 
+    /// Uniform float in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         lo + self.rng.next_f64() * (hi - lo)
     }
 
+    /// Uniform float in `[lo, hi)`.
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         lo + self.rng.next_f32() * (hi - lo)
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }
@@ -73,6 +79,7 @@ impl Gen {
         (0..n).map(|_| POOL[self.rng.index(POOL.len())]).collect()
     }
 
+    /// Vector of `[lo, hi]`-length with entries in `[-scale, scale)`.
     pub fn vec_f32(&mut self, lo: usize, hi: usize, scale: f32) -> Vec<f32> {
         let n = self.len_in(lo, hi);
         (0..n)
@@ -80,6 +87,7 @@ impl Gen {
             .collect()
     }
 
+    /// Uniform pick from a non-empty slice.
     pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
         &items[self.rng.index(items.len())]
     }
@@ -88,6 +96,7 @@ impl Gen {
 /// Outcome of one property evaluation.
 pub type PropResult = Result<(), String>;
 
+/// Pass/fail check inside a property body.
 pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
     if cond {
         Ok(())
@@ -96,6 +105,7 @@ pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
     }
 }
 
+/// Approximate-equality check inside a property body.
 pub fn prop_assert_close(a: f64, b: f64, tol: f64, msg: &str) -> PropResult {
     if (a - b).abs() <= tol {
         Ok(())

@@ -13,10 +13,12 @@ pub struct Running {
 }
 
 impl Running {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one sample in.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -26,10 +28,12 @@ impl Running {
         self.max = self.max.max(x);
     }
 
+    /// Samples seen.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Sample mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 { f64::NAN } else { self.mean }
     }
@@ -39,14 +43,17 @@ impl Running {
         if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
 
+    /// Smallest sample seen.
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest sample seen.
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -75,6 +82,7 @@ pub fn percentiles(xs: &[f64]) -> (f64, f64, f64) {
     (quantile(&v, 0.5), quantile(&v, 0.95), quantile(&v, 0.99))
 }
 
+/// Mean of a slice (NaN when empty).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -82,6 +90,7 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// Median of a slice (sorts a copy).
 pub fn median(xs: &[f64]) -> f64 {
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -92,17 +101,22 @@ pub fn median(xs: &[f64]) -> f64 {
 /// edge buckets so nothing is silently dropped.
 #[derive(Clone, Debug)]
 pub struct Histogram {
+    /// Inclusive lower edge.
     pub lo: f64,
+    /// Exclusive upper edge.
     pub hi: f64,
+    /// Per-bucket counts.
     pub buckets: Vec<u64>,
 }
 
 impl Histogram {
+    /// Histogram over `[lo, hi)` with `nbuckets` equal buckets.
     pub fn new(lo: f64, hi: f64, nbuckets: usize) -> Self {
         assert!(hi > lo && nbuckets > 0);
         Self { lo, hi, buckets: vec![0; nbuckets] }
     }
 
+    /// Count one sample (out-of-range clamps to the edge buckets).
     pub fn push(&mut self, x: f64) {
         let nb = self.buckets.len();
         let t = (x - self.lo) / (self.hi - self.lo);
@@ -110,10 +124,12 @@ impl Histogram {
         self.buckets[idx as usize] += 1;
     }
 
+    /// Total samples counted.
     pub fn total(&self) -> u64 {
         self.buckets.iter().sum()
     }
 
+    /// Midpoint value of bucket `i`.
     pub fn bucket_mid(&self, i: usize) -> f64 {
         let w = (self.hi - self.lo) / self.buckets.len() as f64;
         self.lo + w * (i as f64 + 0.5)
@@ -158,6 +174,7 @@ impl LogHistogram {
         Self { lo, per_decade, buckets: vec![0; n.max(1)], count: 0 }
     }
 
+    /// Count one sample (NaN/sub-`lo` clamp into bucket 0).
     pub fn push(&mut self, x: f64) {
         // NaN, non-positive and sub-lo values all clamp into bucket 0
         let idx = if x.is_nan() || x <= self.lo {
@@ -170,6 +187,7 @@ impl LogHistogram {
         self.count += 1;
     }
 
+    /// Total samples counted.
     pub fn count(&self) -> u64 {
         self.count
     }
@@ -219,6 +237,7 @@ pub struct Reservoir {
 }
 
 impl Reservoir {
+    /// Reservoir of `cap` slots with a deterministic seed.
     pub fn new(cap: usize, seed: u64) -> Self {
         Self {
             cap: cap.max(1),
@@ -237,6 +256,7 @@ impl Reservoir {
         x.wrapping_mul(0x2545_F491_4F6C_DD1D)
     }
 
+    /// Offer one sample (kept with probability cap/seen).
     pub fn push(&mut self, x: f64) {
         self.seen += 1;
         if self.samples.len() < self.cap {
@@ -249,14 +269,17 @@ impl Reservoir {
         }
     }
 
+    /// The current sample set (unordered).
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }
 
+    /// Slot capacity.
     pub fn capacity(&self) -> usize {
         self.cap
     }
 
+    /// Samples offered so far.
     pub fn seen(&self) -> u64 {
         self.seen
     }
@@ -274,6 +297,8 @@ pub struct BoundedDist {
 }
 
 impl BoundedDist {
+    /// Distribution with the given histogram range/resolution and
+    /// reservoir capacity.
     pub fn new(lo: f64, hi: f64, per_decade: usize, reservoir_cap: usize, seed: u64) -> Self {
         Self {
             run: Running::new(),
@@ -287,16 +312,19 @@ impl BoundedDist {
         Self::new(1e-6, 1e3, 20, 512, seed)
     }
 
+    /// Fold one sample into all three summaries.
     pub fn push(&mut self, x: f64) {
         self.run.push(x);
         self.hist.push(x);
         self.res.push(x);
     }
 
+    /// Samples seen.
     pub fn count(&self) -> u64 {
         self.run.count()
     }
 
+    /// Sample mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         self.run.mean()
     }

@@ -5,18 +5,28 @@
 use std::fmt::Write as _;
 
 #[derive(Clone, Debug)]
+/// One plotted series.
 pub struct Series {
+    /// Legend label.
     pub label: String,
+    /// (x, y) samples in plot order.
     pub points: Vec<(f64, f64)>,
+    /// SVG stroke/fill colour.
     pub color: &'static str,
 }
 
 #[derive(Clone, Debug)]
+/// A minimal line/scatter chart rendered to standalone SVG.
 pub struct Chart {
+    /// Chart title.
     pub title: String,
+    /// X-axis label.
     pub x_label: String,
+    /// Y-axis label.
     pub y_label: String,
+    /// Log-scale the y axis.
     pub log_y: bool,
+    /// The plotted series.
     pub series: Vec<Series>,
     /// scatter (markers only) vs line chart
     pub scatter: bool,
@@ -30,6 +40,7 @@ const MT: f64 = 40.0;
 const MB: f64 = 55.0;
 
 impl Chart {
+    /// Empty line chart with the given labels.
     pub fn line(title: &str, x_label: &str, y_label: &str) -> Chart {
         Chart {
             title: title.into(),
@@ -41,6 +52,7 @@ impl Chart {
         }
     }
 
+    /// Append a series.
     pub fn add(&mut self, label: &str, color: &'static str, points: Vec<(f64, f64)>) {
         self.series.push(Series { label: label.into(), points, color });
     }
@@ -70,6 +82,7 @@ impl Chart {
         (x0, x1, y0 - pad, y1 + pad)
     }
 
+    /// Render to a standalone SVG document.
     pub fn render(&self) -> String {
         let (x0, x1, y0, y1) = self.bounds();
         let sx = |x: f64| ML + (x - x0) / (x1 - x0) * (W - ML - MR);

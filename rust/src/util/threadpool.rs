@@ -94,6 +94,7 @@ unsafe impl<T: Send> Sync for SyncSlice<'_, T> {}
 unsafe impl<T: Send> Send for SyncSlice<'_, T> {}
 
 impl<'a, T> SyncSlice<'a, T> {
+    /// Wrap a slice whose indices the caller partitions among threads.
     pub fn new(slice: &'a mut [T]) -> Self {
         Self {
             ptr: slice.as_mut_ptr(),
@@ -102,10 +103,12 @@ impl<'a, T> SyncSlice<'a, T> {
         }
     }
 
+    /// Slice length.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True for an empty slice.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -131,6 +134,7 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
+    /// Pool of `threads` workers (min 1).
     pub fn new(threads: usize) -> Self {
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -162,6 +166,7 @@ impl WorkerPool {
         self.queued.load(Ordering::Relaxed)
     }
 
+    /// Queue one job (FIFO).
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.queued.fetch_add(1, Ordering::Relaxed);
         self.tx

@@ -1,0 +1,279 @@
+//! Out-of-core data-source contracts: the disk-backed [`TableDelta`]
+//! must be *indistinguishable* from the in-memory sources it replaces —
+//! bit-for-bit through the base solvers — and the end-to-end corpus
+//! pipeline must agree across storage backends, cache budgets and
+//! stream chunkings.
+
+use std::path::PathBuf;
+
+use lmds_ose::coordinator::embedder::{
+    embed_corpus, solve_base, solve_base_source, BaseSolver, OseBackend,
+    PipelineConfig,
+};
+use lmds_ose::data::source::{
+    mmap_supported, CorpusWriter, ObjectTable, TableDelta, DEFAULT_CACHE_BUDGET,
+};
+use lmds_ose::data::{Geco, GecoConfig};
+use lmds_ose::mds::dissimilarity::full_matrix;
+use lmds_ose::mds::divide::{DeltaSource, PointsDelta, SubsetDelta};
+use lmds_ose::mds::{LsmdsConfig, Matrix};
+use lmds_ose::runtime::Backend;
+use lmds_ose::strdist::{Euclidean, Levenshtein};
+use lmds_ose::util::prng::Rng;
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("lmds_ooc_{name}_{}", std::process::id()));
+    p
+}
+
+/// Seeded coordinate data + its corpus file, returned as (points, path).
+fn vec_corpus(name: &str, seed: u64, n: usize, dim: usize) -> (Matrix, PathBuf) {
+    let mut rng = Rng::new(seed);
+    let points = Matrix::random_normal(&mut rng, n, dim, 1.0);
+    let path = tmp(name);
+    let mut w = CorpusWriter::create_vectors(&path, dim).unwrap();
+    for i in 0..n {
+        w.push_vector(points.row(i)).unwrap();
+    }
+    w.finish().unwrap();
+    (points, path)
+}
+
+/// Seeded Geco names + their corpus file.
+fn text_corpus(name: &str, seed: u64, n: usize) -> (Vec<String>, PathBuf) {
+    let mut geco = Geco::new(GecoConfig { seed, ..Default::default() });
+    let names = geco.generate_unique(n);
+    let path = tmp(name);
+    let mut w = CorpusWriter::create_text(&path).unwrap();
+    for s in &names {
+        w.push_text(s).unwrap();
+    }
+    w.finish().unwrap();
+    (names, path)
+}
+
+/// Every storage backend available in this build, smallest budgets last
+/// so eviction paths run under the same assertions.
+fn tables(path: &PathBuf) -> Vec<(ObjectTable, &'static str)> {
+    let mut v = vec![
+        (ObjectTable::open_pread(path, DEFAULT_CACHE_BUDGET), "pread/64MiB"),
+        (ObjectTable::open_pread(path, 4 << 10), "pread/4KiB"),
+    ];
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    v.push((ObjectTable::open_mmap(path), "mmap"));
+    assert_eq!(mmap_supported(), v.len() == 3);
+    v.into_iter().map(|(t, n)| (t.unwrap(), n)).collect()
+}
+
+#[test]
+fn disk_source_matches_points_delta_and_matrix_bitwise() {
+    let (points, path) = vec_corpus("bits", 0xD15C, 120, 4);
+    let ram = PointsDelta { points: &points };
+    let refs: Vec<&[f32]> = (0..points.rows).map(|i| points.row(i)).collect();
+    let materialised = full_matrix(&refs, &Euclidean);
+    for (table, label) in tables(&path) {
+        let disk = TableDelta::vectors(&table, &Euclidean).unwrap();
+        assert_eq!(disk.len(), 120, "{label}");
+        for i in (0..120).step_by(3) {
+            for j in (0..120).step_by(7) {
+                let d = disk.dist(i, j);
+                assert!(
+                    d == ram.dist(i, j) && d == materialised.at(i, j),
+                    "{label}: ({i},{j}) disk {d} ram {} mat {}",
+                    ram.dist(i, j),
+                    materialised.at(i, j)
+                );
+            }
+        }
+        // sub-matrices too (the unit the divide solver actually reads)
+        let idx = [0usize, 17, 33, 64, 119];
+        let a = disk.sub_matrix(&idx);
+        let b = ram.sub_matrix(&idx);
+        assert_eq!(a.data, b.data, "{label}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn disk_text_source_matches_full_matrix_bitwise() {
+    let (names, path) = text_corpus("txt_bits", 0x7e47, 90);
+    let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let materialised = full_matrix(&refs, &Levenshtein);
+    for (table, label) in tables(&path) {
+        let disk = TableDelta::text(&table, &Levenshtein).unwrap();
+        for i in (0..90).step_by(2) {
+            for j in (0..90).step_by(5) {
+                assert_eq!(disk.dist(i, j), materialised.at(i, j), "{label} ({i},{j})");
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn subset_delta_is_the_restricted_view() {
+    let (points, path) = vec_corpus("subset", 0x5b5e, 60, 3);
+    let table = ObjectTable::open(&path, DEFAULT_CACHE_BUDGET).unwrap();
+    let disk = TableDelta::vectors(&table, &Euclidean).unwrap();
+    let idx = [3usize, 9, 9, 30, 59]; // duplicates are legal
+    let sub = SubsetDelta::new(&disk, &idx);
+    assert_eq!(sub.len(), 5);
+    assert_eq!(sub.indices(), &idx);
+    for a in 0..5 {
+        for b in 0..5 {
+            assert_eq!(sub.dist(a, b), disk.dist(idx[a], idx[b]));
+        }
+    }
+    assert_eq!(sub.dist(1, 2), 0.0, "duplicate indices are coincident");
+    // sub_matrix delegates through the source with mapped indices
+    let m = sub.sub_matrix(&[0, 2, 4]);
+    let ram = PointsDelta { points: &points };
+    let want = ram.sub_matrix(&[3, 9, 59]);
+    assert_eq!(m.data, want.data);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+#[should_panic(expected = "subset index out of range")]
+fn subset_delta_rejects_out_of_range_indices() {
+    let points = Matrix::zeros(4, 2);
+    let src = PointsDelta { points: &points };
+    let idx = [0usize, 4];
+    let _ = SubsetDelta::new(&src, &idx);
+}
+
+/// The parity the whole layer hangs on: the *same* base solve fed from
+/// (a) a materialised matrix through `solve_base`, (b) the disk source
+/// through `solve_base_source`, and (c) the matrix-free `PointsDelta`,
+/// must produce bit-identical configurations — for both solvers.
+#[test]
+fn solve_base_parity_disk_vs_matrix_vs_points() {
+    let (points, path) = vec_corpus("solve_parity", 0xBA5E, 150, 3);
+    let ram = PointsDelta { points: &points };
+    // materialise exactly what the sources serve (symmetric, zero diag)
+    let all: Vec<usize> = (0..150).collect();
+    let materialised = ram.sub_matrix(&all);
+    let lcfg = LsmdsConfig { dim: 3, max_iters: 60, seed: 11, ..Default::default() };
+    let backend = Backend::native();
+    for solver in [
+        BaseSolver::DivideConquer { blocks: 4, anchors: 12 },
+        BaseSolver::Monolithic,
+    ] {
+        let (from_matrix, _) = solve_base(&materialised, &lcfg, solver, &backend).unwrap();
+        let (from_points, _) =
+            solve_base_source(&ram, &lcfg, solver, &backend).unwrap();
+        assert_eq!(
+            from_matrix.data, from_points.data,
+            "{solver:?}: PointsDelta diverged from the materialised matrix"
+        );
+        for (table, label) in tables(&path) {
+            let disk = TableDelta::vectors(&table, &Euclidean).unwrap();
+            let (from_disk, _) =
+                solve_base_source(&disk, &lcfg, solver, &backend).unwrap();
+            assert_eq!(
+                from_matrix.data, from_disk.data,
+                "{solver:?} via {label}: disk source diverged"
+            );
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Same parity over a *string* corpus and a subset view (the landmark
+/// sample shape the out-of-core pipeline actually solves).
+#[test]
+fn solve_base_parity_text_subset() {
+    let (names, path) = text_corpus("txt_parity", 0x90ab, 80);
+    let landmark_idx: Vec<usize> = (0..80).step_by(2).collect(); // 40 landmarks
+    let lm_refs: Vec<&str> = landmark_idx.iter().map(|&i| names[i].as_str()).collect();
+    let materialised = full_matrix(&lm_refs, &Levenshtein);
+    let lcfg = LsmdsConfig { dim: 2, max_iters: 50, seed: 5, ..Default::default() };
+    let backend = Backend::native();
+    let solver = BaseSolver::DivideConquer { blocks: 3, anchors: 8 };
+    let (want, _) = solve_base(&materialised, &lcfg, solver, &backend).unwrap();
+    for (table, label) in tables(&path) {
+        let disk = TableDelta::text(&table, &Levenshtein).unwrap();
+        let sub = SubsetDelta::new(&disk, &landmark_idx);
+        let (got, _) = solve_base_source(&sub, &lcfg, solver, &backend).unwrap();
+        assert_eq!(want.data, got.data, "{label}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// End-to-end: the full out-of-core pipeline must not care which storage
+/// backend serves the bytes, and its OSE stage must match a from-RAM
+/// re-embedding of the same rows bit-for-bit.
+#[test]
+fn embed_corpus_agrees_across_backends_and_with_ram_reembedding() {
+    let (points, path) = vec_corpus("e2e", 0xE2E, 400, 4);
+    let cfg = PipelineConfig {
+        dim: 3,
+        landmarks: 40,
+        backend: OseBackend::Opt,
+        lsmds: LsmdsConfig { max_iters: 60, dim: 3, ..Default::default() },
+        base_solver: BaseSolver::DivideConquer { blocks: 3, anchors: 10 },
+        stream_chunk: Some(64),
+        ose_steps: Some(10), // fixed work: chunking cannot shift a bit
+        ..Default::default()
+    };
+    let backend = Backend::native();
+    let mut reference: Option<lmds_ose::coordinator::PipelineResult> = None;
+    for (table, label) in tables(&path) {
+        let disk = TableDelta::vectors(&table, &Euclidean).unwrap();
+        let r = embed_corpus(&disk, &cfg, &backend).unwrap();
+        assert_eq!((r.coords.rows, r.coords.cols), (400, 3), "{label}");
+        assert!(r.coords.data.iter().all(|v| v.is_finite()), "{label}");
+        match &reference {
+            None => reference = Some(r),
+            Some(first) => {
+                assert_eq!(first.landmark_idx, r.landmark_idx, "{label}");
+                assert_eq!(
+                    first.coords.data, r.coords.data,
+                    "{label}: storage backend changed the embedding"
+                );
+            }
+        }
+    }
+    // re-embed the non-landmark rows from RAM through a fresh replica of
+    // the same trained state: row-independent fixed-step embedding must
+    // reproduce the streamed output exactly
+    let r = reference.unwrap();
+    let mut method = r.factory.build();
+    let lm_refs: Vec<&[f32]> =
+        r.landmark_idx.iter().map(|&i| points.row(i)).collect();
+    let rest: Vec<usize> =
+        (0..400).filter(|i| r.landmark_idx.binary_search(i).is_err()).collect();
+    let rest_refs: Vec<&[f32]> = rest.iter().map(|&i| points.row(i)).collect();
+    let block =
+        lmds_ose::mds::dissimilarity::cross_matrix(&rest_refs, &lm_refs, &Euclidean);
+    let coords = method.embed(&block).unwrap();
+    for (row, &i) in rest.iter().enumerate() {
+        assert_eq!(
+            coords.row(row),
+            r.coords.row(i),
+            "row {i}: streamed out-of-core embedding diverged from RAM"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// A cache budget far below the working set must change nothing but the
+/// eviction counters.
+#[test]
+fn starved_cache_is_slow_but_correct() {
+    let (_, path) = text_corpus("starved", 0x5740, 120);
+    let roomy = ObjectTable::open_pread(&path, DEFAULT_CACHE_BUDGET).unwrap();
+    let starved = ObjectTable::open_pread(&path, 256).unwrap();
+    let a = TableDelta::text(&roomy, &Levenshtein).unwrap();
+    let b = TableDelta::text(&starved, &Levenshtein).unwrap();
+    let lcfg = LsmdsConfig { dim: 2, max_iters: 40, ..Default::default() };
+    let solver = BaseSolver::DivideConquer { blocks: 2, anchors: 6 };
+    let backend = Backend::native();
+    let (xa, _) = solve_base_source(&a, &lcfg, solver, &backend).unwrap();
+    let (xb, _) = solve_base_source(&b, &lcfg, solver, &backend).unwrap();
+    assert_eq!(xa.data, xb.data);
+    let stats = starved.cache_stats().unwrap();
+    assert!(stats.evictions > 0, "starved cache must have evicted: {stats:?}");
+    std::fs::remove_file(&path).ok();
+}
