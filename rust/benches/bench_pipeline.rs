@@ -9,7 +9,7 @@ use std::time::{Duration, Instant};
 
 use lmds_ose::coordinator::embedder::{embed_dataset, OseBackend, PipelineConfig};
 use lmds_ose::coordinator::trainer::TrainConfig;
-use lmds_ose::coordinator::{BatcherConfig, Server};
+use lmds_ose::coordinator::{BatcherConfig, Request, ServerBuilder};
 use lmds_ose::data::{Geco, GecoConfig};
 use lmds_ose::mds::LsmdsConfig;
 use lmds_ose::ose::OseMethod;
@@ -58,22 +58,23 @@ fn main() {
     let result = embed_dataset(&objs, &Levenshtein, &cfg, &backend).unwrap();
     let landmark_names: Vec<String> =
         result.landmark_idx.iter().map(|&i| names[i].clone()).collect();
-    let server = Server::start_strings(
+    let server = ServerBuilder::strings(
         landmark_names,
         Arc::new(Levenshtein),
         result.factory.clone(),
-        BatcherConfig {
-            max_batch: 64,
-            max_delay: Duration::from_millis(2),
-            queue_cap: 8192,
-            frontend_threads: 8,
-            replicas: 4,
-        },
-        None,
-    );
+    )
+    .batcher(BatcherConfig {
+        max_batch: 64,
+        max_delay: Duration::from_millis(2),
+        queue_cap: 8192,
+        frontend_threads: 8,
+        replicas: 4,
+    })
+    .build()
+    .expect("valid server configuration");
     let h = server.handle();
     for _ in 0..64 {
-        let _ = h.query_sync("warm up");
+        let _ = h.submit(Request::object("warm up")).recv();
     }
     let queries = 10_000usize;
     let t0 = Instant::now();
@@ -87,15 +88,15 @@ fn main() {
                 let mut pending = Vec::with_capacity(64);
                 for q in 0..queries / 8 {
                     let base = &names[(q * 37 + c * 101) % names.len()];
-                    pending.push(h.query(geco.corrupt(base)));
+                    pending.push(h.submit(Request::object(geco.corrupt(base))));
                     if pending.len() >= 64 {
-                        for rx in pending.drain(..) {
-                            rx.recv().unwrap().unwrap();
+                        for t in pending.drain(..) {
+                            t.recv().unwrap();
                         }
                     }
                 }
-                for rx in pending {
-                    rx.recv().unwrap().unwrap();
+                for t in pending {
+                    t.recv().unwrap();
                 }
             });
         }

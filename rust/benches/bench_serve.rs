@@ -10,7 +10,7 @@
 //!   LMDS_BENCH_JSON=path.json where to write the report
 //!                             (default BENCH_pr3.json in the CWD)
 //!
-//! The load bypasses the frontend (`query_delta` with precomputed rows) so
+//! The load bypasses the frontend (delta requests with precomputed rows) so
 //! the numbers isolate the dispatch-queue + executor-pool path: small
 //! batches (max_batch = 8) keep each embed call on one core, which is the
 //! regime where replica-level parallelism is the only scaling lever.
@@ -20,7 +20,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use lmds_ose::coordinator::methods::BackendNn;
-use lmds_ose::coordinator::{BatcherConfig, Server, Snapshot};
+use lmds_ose::coordinator::{BatcherConfig, Request, ServerBuilder, Snapshot};
 use lmds_ose::nn::{MlpParams, MlpShape};
 use lmds_ose::runtime::Backend;
 use lmds_ose::strdist::Levenshtein;
@@ -37,26 +37,27 @@ fn run_load(
     clients: usize,
 ) -> (f64, Snapshot) {
     let landmarks: Vec<String> = (0..L).map(|i| format!("landmark{i:03}")).collect();
-    let server = Server::start_strings(
+    let server = ServerBuilder::strings(
         landmarks,
         Arc::new(Levenshtein),
         BackendNn::replica_factory(Backend::native(), params.clone()),
-        BatcherConfig {
-            max_batch: MAX_BATCH,
-            max_delay: Duration::from_micros(200),
-            queue_cap: 4096,
-            frontend_threads: 1,
-            replicas,
-        },
-        None,
-    );
+    )
+    .batcher(BatcherConfig {
+        max_batch: MAX_BATCH,
+        max_delay: Duration::from_micros(200),
+        queue_cap: 4096,
+        frontend_threads: 1,
+        replicas,
+    })
+    .build()
+    .expect("valid server configuration");
     let h = server.handle();
     let mut rng = Rng::new(0x5e55);
     let delta: Vec<f32> = (0..L).map(|_| rng.next_f32() * 5.0).collect();
 
     // warm the executors
     for _ in 0..64 {
-        h.query_delta(delta.clone()).unwrap().recv().unwrap().unwrap();
+        h.submit(Request::delta(delta.clone())).recv().unwrap();
     }
     let warm = h.metrics.snapshot().completed;
 
@@ -69,13 +70,13 @@ fn run_load(
                 let per = queries / clients;
                 let mut pending = VecDeque::with_capacity(64);
                 for _ in 0..per {
-                    pending.push_back(h.query_delta(delta.clone()).unwrap());
+                    pending.push_back(h.submit(Request::delta(delta.clone())));
                     if pending.len() >= 64 {
-                        pending.pop_front().unwrap().recv().unwrap().unwrap();
+                        pending.pop_front().unwrap().recv().unwrap();
                     }
                 }
-                for rx in pending {
-                    rx.recv().unwrap().unwrap();
+                for t in pending {
+                    t.recv().unwrap();
                 }
             });
         }

@@ -10,7 +10,9 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::coordinator::embedder::{BaseSolver, OseBackend, PipelineConfig};
+use crate::coordinator::net::NetConfig;
 use crate::coordinator::server::BatcherConfig;
+use crate::coordinator::shard::ShardConfig;
 use crate::coordinator::trainer::TrainConfig;
 use crate::mds::{LandmarkMethod, LsmdsConfig};
 use crate::util::cli::Args;
@@ -78,6 +80,19 @@ pub struct RunConfig {
     /// (bit-reproducible across stream chunk sizes); `None`/0 keeps the
     /// adaptive default. See [`PipelineConfig::ose_steps`].
     pub ose_steps: Option<usize>,
+    /// Serving shards (>= 1; 1 = the classic unsharded server). Sharded
+    /// serving partitions the landmarks and quorum-reduces per-shard
+    /// partial embeddings — see [`ShardConfig`].
+    pub shards: usize,
+    /// Network front door: `Some("host:port")` serves the binary wire
+    /// protocol over TCP there (port 0 picks an ephemeral port); `None`
+    /// keeps serving in-process only.
+    pub listen: Option<String>,
+    /// Front door: connection limit (see [`NetConfig::max_connections`]).
+    pub max_connections: usize,
+    /// Front door: bounded in-flight queue before load shedding (see
+    /// [`NetConfig::max_in_flight`]).
+    pub max_in_flight: usize,
 }
 
 impl Default for RunConfig {
@@ -105,6 +120,10 @@ impl Default for RunConfig {
             corpus: None,
             corpus_cache_mb: 64,
             ose_steps: None,
+            shards: 1,
+            listen: None,
+            max_connections: 256,
+            max_in_flight: 1024,
         }
     }
 }
@@ -212,6 +231,21 @@ impl RunConfig {
         if let Some(v) = usize_of(json, "ose_steps")? {
             self.ose_steps = if v == 0 { None } else { Some(v) };
         }
+        if let Some(v) = usize_of(json, "shards")? {
+            anyhow::ensure!(v >= 1, "config: shards must be >= 1");
+            self.shards = v;
+        }
+        if let Some(v) = json.get("listen").and_then(Json::as_str) {
+            self.listen = if v.is_empty() { None } else { Some(v.to_string()) };
+        }
+        if let Some(v) = usize_of(json, "max_connections")? {
+            anyhow::ensure!(v >= 1, "config: max_connections must be >= 1");
+            self.max_connections = v;
+        }
+        if let Some(v) = usize_of(json, "max_in_flight")? {
+            anyhow::ensure!(v >= 1, "config: max_in_flight must be >= 1");
+            self.max_in_flight = v;
+        }
         Ok(())
     }
 
@@ -281,6 +315,24 @@ impl RunConfig {
             let v = args.usize("ose-steps")?;
             self.ose_steps = if v == 0 { None } else { Some(v) };
         }
+        if args.get("shards").is_some() {
+            let v = args.usize("shards")?;
+            anyhow::ensure!(v >= 1, "--shards must be >= 1");
+            self.shards = v;
+        }
+        if let Some(v) = args.get("listen") {
+            self.listen = if v.is_empty() { None } else { Some(v.to_string()) };
+        }
+        if args.get("max-connections").is_some() {
+            let v = args.usize("max-connections")?;
+            anyhow::ensure!(v >= 1, "--max-connections must be >= 1");
+            self.max_connections = v;
+        }
+        if args.get("max-in-flight").is_some() {
+            let v = args.usize("max-in-flight")?;
+            anyhow::ensure!(v >= 1, "--max-in-flight must be >= 1");
+            self.max_in_flight = v;
+        }
         Ok(())
     }
 
@@ -339,6 +391,29 @@ impl RunConfig {
             replicas: self.replicas,
             ..Default::default()
         }
+    }
+
+    /// Derive the sharded-serving configuration from this run config
+    /// (meaningful when `shards > 1`; shards reuse the run seed, the
+    /// divide-solve anchor count and the optimisation-OSE step budget).
+    pub fn shard(&self) -> ShardConfig {
+        ShardConfig {
+            shards: self.shards,
+            anchors: self.base_anchors,
+            replicas_per_shard: self.replicas,
+            seed: self.seed,
+            opt_steps: self.ose_steps.unwrap_or(0),
+            ..Default::default()
+        }
+    }
+
+    /// Network front-door settings; `None` when `listen` is unset.
+    pub fn net(&self) -> Option<NetConfig> {
+        self.listen.as_ref().map(|addr| NetConfig {
+            addr: addr.clone(),
+            max_connections: self.max_connections,
+            max_in_flight: self.max_in_flight,
+        })
     }
 
     /// Drift monitor settings; `None` when `drift_window` is 0 (disabled).
@@ -522,6 +597,65 @@ mod tests {
         let args = Args::parse(&argv, &specs).unwrap();
         cfg.apply_args(&args).unwrap();
         assert_eq!(cfg.ose_steps, None, "0 restores the adaptive default");
+    }
+
+    #[test]
+    fn serving_shard_and_listen_keys_round_trip() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.shards, 1);
+        assert_eq!(cfg.listen, None);
+        assert!(cfg.net().is_none());
+        cfg.apply_json(
+            &Json::parse(
+                r#"{"shards": 4, "listen": "127.0.0.1:4077",
+                    "max_connections": 32, "max_in_flight": 64,
+                    "replicas": 2, "ose_steps": 40}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.shards, 4);
+        let sc = cfg.shard();
+        assert_eq!(sc.shards, 4);
+        assert_eq!(sc.replicas_per_shard, 2);
+        assert_eq!(sc.opt_steps, 40);
+        assert_eq!(sc.seed, cfg.seed);
+        let nc = cfg.net().expect("listen set");
+        assert_eq!(nc.addr, "127.0.0.1:4077");
+        assert_eq!(nc.max_connections, 32);
+        assert_eq!(nc.max_in_flight, 64);
+
+        let specs = vec![
+            OptSpec { name: "shards", help: "", takes_value: true, default: None },
+            OptSpec { name: "listen", help: "", takes_value: true, default: None },
+            OptSpec {
+                name: "max-connections",
+                help: "",
+                takes_value: true,
+                default: None,
+            },
+            OptSpec {
+                name: "max-in-flight",
+                help: "",
+                takes_value: true,
+                default: None,
+            },
+        ];
+        let argv: Vec<String> =
+            ["--shards", "2", "--listen", "", "--max-in-flight", "16"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let args = Args::parse(&argv, &specs).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.shards, 2);
+        assert!(cfg.net().is_none(), "empty --listen disables the front door");
+        assert_eq!(cfg.max_in_flight, 16);
+        // bad values rejected
+        assert!(cfg.apply_json(&Json::parse(r#"{"shards": 0}"#).unwrap()).is_err());
+        assert!(cfg
+            .apply_json(&Json::parse(r#"{"max_connections": 0}"#).unwrap())
+            .is_err());
     }
 
     #[test]

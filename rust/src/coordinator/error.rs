@@ -1,0 +1,241 @@
+//! Typed error taxonomy for the serving path.
+//!
+//! Every error a caller can observe from the serving stack — handle,
+//! shard router, network front door — is a [`ServeError`]. Each variant
+//! carries a *stable wire code* so the binary protocol
+//! ([`super::proto`]) can ship errors across the network and reconstruct
+//! an equivalent value on the client side; the codes are part of the wire
+//! contract and must never be renumbered.
+//!
+//! The enum is `#[non_exhaustive]`: future PRs may add variants (and
+//! codes) without breaking downstream matches, which is why
+//! [`ServeError::from_wire`] maps unknown codes onto
+//! [`ServeError::Internal`] instead of failing.
+
+/// A serving-path failure, with a stable wire code per variant.
+#[non_exhaustive]
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request itself is malformed (wrong delta length, bad payload).
+    BadInput {
+        /// What was wrong with the request.
+        reason: String,
+    },
+    /// The server shed this request to protect itself (in-flight cap or
+    /// queue limits reached). Retry later.
+    Overloaded,
+    /// The server is shutting down; the request was not served.
+    Shutdown,
+    /// An executor replica panicked while embedding the batch holding
+    /// this request. The replica was restarted; retry is safe.
+    ReplicaPanic {
+        /// The downcast panic payload.
+        reason: String,
+    },
+    /// A shard failed (or timed out) and the quorum reduce could not
+    /// cover for it.
+    ShardUnavailable {
+        /// Index of the first shard that failed.
+        shard: usize,
+        /// Why the shard's partial result never arrived.
+        reason: String,
+    },
+    /// The caller-side wait for a result expired.
+    Timeout,
+    /// A wire-protocol violation (bad frame type, oversized frame,
+    /// truncated payload).
+    Protocol {
+        /// What the peer sent that could not be decoded.
+        reason: String,
+    },
+    /// Anything else: internal invariant failures, unknown wire codes
+    /// from a newer peer.
+    Internal {
+        /// Diagnostic detail.
+        reason: String,
+    },
+}
+
+/// Stable wire code for [`ServeError::BadInput`].
+pub const CODE_BAD_INPUT: u16 = 1;
+/// Stable wire code for [`ServeError::Overloaded`].
+pub const CODE_OVERLOADED: u16 = 2;
+/// Stable wire code for [`ServeError::Shutdown`].
+pub const CODE_SHUTDOWN: u16 = 3;
+/// Stable wire code for [`ServeError::ReplicaPanic`].
+pub const CODE_REPLICA_PANIC: u16 = 4;
+/// Stable wire code for [`ServeError::ShardUnavailable`].
+pub const CODE_SHARD_UNAVAILABLE: u16 = 5;
+/// Stable wire code for [`ServeError::Timeout`].
+pub const CODE_TIMEOUT: u16 = 6;
+/// Stable wire code for [`ServeError::Protocol`].
+pub const CODE_PROTOCOL: u16 = 7;
+/// Stable wire code for [`ServeError::Internal`].
+pub const CODE_INTERNAL: u16 = 8;
+
+impl ServeError {
+    /// The variant's stable wire code (see the `CODE_*` constants).
+    pub fn wire_code(&self) -> u16 {
+        match self {
+            ServeError::BadInput { .. } => CODE_BAD_INPUT,
+            ServeError::Overloaded => CODE_OVERLOADED,
+            ServeError::Shutdown => CODE_SHUTDOWN,
+            ServeError::ReplicaPanic { .. } => CODE_REPLICA_PANIC,
+            ServeError::ShardUnavailable { .. } => CODE_SHARD_UNAVAILABLE,
+            ServeError::Timeout => CODE_TIMEOUT,
+            ServeError::Protocol { .. } => CODE_PROTOCOL,
+            ServeError::Internal { .. } => CODE_INTERNAL,
+        }
+    }
+
+    /// Encode as `(code, detail, message)` for an error wire frame. The
+    /// `detail` word carries variant-specific numeric payload (today: the
+    /// shard index for [`ServeError::ShardUnavailable`], 0 otherwise).
+    pub fn to_wire(&self) -> (u16, u64, String) {
+        let detail = match self {
+            ServeError::ShardUnavailable { shard, .. } => *shard as u64,
+            _ => 0,
+        };
+        let msg = match self {
+            ServeError::BadInput { reason }
+            | ServeError::ReplicaPanic { reason }
+            | ServeError::ShardUnavailable { reason, .. }
+            | ServeError::Protocol { reason }
+            | ServeError::Internal { reason } => reason.clone(),
+            ServeError::Overloaded | ServeError::Shutdown | ServeError::Timeout => {
+                String::new()
+            }
+        };
+        (self.wire_code(), detail, msg)
+    }
+
+    /// Reconstruct from a wire triple. Exactly inverts [`Self::to_wire`]
+    /// for every known code; unknown codes (a newer peer) collapse into
+    /// [`ServeError::Internal`] with the code preserved in the reason.
+    pub fn from_wire(code: u16, detail: u64, msg: String) -> ServeError {
+        match code {
+            CODE_BAD_INPUT => ServeError::BadInput { reason: msg },
+            CODE_OVERLOADED => ServeError::Overloaded,
+            CODE_SHUTDOWN => ServeError::Shutdown,
+            CODE_REPLICA_PANIC => ServeError::ReplicaPanic { reason: msg },
+            CODE_SHARD_UNAVAILABLE => ServeError::ShardUnavailable {
+                shard: detail as usize,
+                reason: msg,
+            },
+            CODE_TIMEOUT => ServeError::Timeout,
+            CODE_PROTOCOL => ServeError::Protocol { reason: msg },
+            CODE_INTERNAL => ServeError::Internal { reason: msg },
+            other => ServeError::Internal {
+                reason: format!("unknown wire error code {other}: {msg}"),
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::BadInput { reason } => write!(f, "bad input: {reason}"),
+            ServeError::Overloaded => write!(f, "server overloaded (load shed)"),
+            ServeError::Shutdown => write!(f, "server shutting down"),
+            ServeError::ReplicaPanic { reason } => {
+                write!(f, "replica panicked: {reason}")
+            }
+            ServeError::ShardUnavailable { shard, reason } => {
+                write!(f, "shard {shard} unavailable: {reason}")
+            }
+            ServeError::Timeout => write!(f, "timed out waiting for a result"),
+            ServeError::Protocol { reason } => write!(f, "protocol error: {reason}"),
+            ServeError::Internal { reason } => write!(f, "internal error: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Downcast a panic payload into a human-readable message — the plumbing
+/// that routes `catch_unwind` payloads into
+/// [`ServeError::ReplicaPanic`].
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{prop_assert, property};
+
+    fn all_variants(reason: &str, shard: usize) -> Vec<ServeError> {
+        vec![
+            ServeError::BadInput { reason: reason.into() },
+            ServeError::Overloaded,
+            ServeError::Shutdown,
+            ServeError::ReplicaPanic { reason: reason.into() },
+            ServeError::ShardUnavailable { shard, reason: reason.into() },
+            ServeError::Timeout,
+            ServeError::Protocol { reason: reason.into() },
+            ServeError::Internal { reason: reason.into() },
+        ]
+    }
+
+    #[test]
+    fn wire_codes_are_stable_and_distinct() {
+        let codes: Vec<u16> = all_variants("x", 3)
+            .iter()
+            .map(ServeError::wire_code)
+            .collect();
+        assert_eq!(codes, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn wire_round_trip_every_variant() {
+        property("serve error wire round-trip", 200, |g| {
+            let reason = g.unicode_string(0, 40);
+            let shard = g.usize_in(0, 1000);
+            for e in all_variants(&reason, shard) {
+                let (code, detail, msg) = e.to_wire();
+                let back = ServeError::from_wire(code, detail, msg);
+                if back != e {
+                    return Err(format!("{e:?} -> {back:?}"));
+                }
+            }
+            prop_assert(true, "ok")
+        });
+    }
+
+    #[test]
+    fn unknown_code_becomes_internal() {
+        let e = ServeError::from_wire(999, 7, "from the future".into());
+        match e {
+            ServeError::Internal { reason } => {
+                assert!(reason.contains("999"));
+                assert!(reason.contains("from the future"));
+            }
+            other => panic!("expected Internal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn display_mentions_the_payload() {
+        let e = ServeError::ShardUnavailable { shard: 2, reason: "timeout".into() };
+        let s = e.to_string();
+        assert!(s.contains("shard 2") && s.contains("timeout"), "{s}");
+        assert!(ServeError::Overloaded.to_string().contains("overloaded"));
+    }
+
+    #[test]
+    fn panic_message_downcasts() {
+        let boxed: Box<dyn std::any::Any + Send> = Box::new("static str");
+        assert_eq!(panic_message(boxed.as_ref()), "static str");
+        let boxed: Box<dyn std::any::Any + Send> = Box::new(String::from("owned"));
+        assert_eq!(panic_message(boxed.as_ref()), "owned");
+        let boxed: Box<dyn std::any::Any + Send> = Box::new(42u32);
+        assert_eq!(panic_message(boxed.as_ref()), "non-string panic payload");
+    }
+}

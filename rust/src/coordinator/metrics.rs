@@ -42,6 +42,21 @@ pub struct Metrics {
     pub replica_restarts: AtomicU64,
     /// Executor replica count (gauge, set at server start).
     replicas: AtomicU64,
+    /// Shard count (gauge; 1 = unsharded serving).
+    shards: AtomicU64,
+    /// Per-query shard dispatch/collect failures (timeouts, dead shards,
+    /// full shard queues). One query can contribute several.
+    pub shard_failures: AtomicU64,
+    /// Queries answered from a quorum but missing at least one shard.
+    pub degraded: AtomicU64,
+    /// Network connections accepted over the lifetime of the front door.
+    pub conns_opened: AtomicU64,
+    /// Network connections currently open (gauge).
+    conns_active: AtomicU64,
+    /// Queries refused with `Overloaded` by the front door (load shed).
+    pub shed: AtomicU64,
+    /// Malformed wire frames (each also closes its connection).
+    pub proto_errors: AtomicU64,
     drift_status: AtomicU8,
     /// Times the drift monitor reported `Drifted` (re-embed signals).
     drift_signals: AtomicU64,
@@ -65,6 +80,13 @@ impl Default for Metrics {
             panics: AtomicU64::new(0),
             replica_restarts: AtomicU64::new(0),
             replicas: AtomicU64::new(1),
+            shards: AtomicU64::new(1),
+            shard_failures: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            conns_opened: AtomicU64::new(0),
+            conns_active: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            proto_errors: AtomicU64::new(0),
             drift_status: AtomicU8::new(DRIFT_NONE),
             drift_signals: AtomicU64::new(0),
             latency: Mutex::new(BoundedDist::for_latency(0x1a7)),
@@ -125,6 +147,48 @@ impl Metrics {
         self.replicas.store(n as u64, Ordering::Relaxed);
     }
 
+    /// Record the shard count (gauge; 1 = unsharded).
+    pub fn set_shards(&self, n: usize) {
+        self.shards.store(n as u64, Ordering::Relaxed);
+    }
+
+    /// Count one failed shard dispatch/collect (timeout, dead shard or
+    /// full shard queue) for one query.
+    pub fn record_shard_failure(&self) {
+        self.shard_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one query answered degraded (quorum met, shards missing).
+    pub fn record_degraded(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one accepted network connection (bumps the active gauge).
+    pub fn record_conn_open(&self) {
+        self.conns_opened.fetch_add(1, Ordering::Relaxed);
+        self.conns_active.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one closed network connection (drops the active gauge).
+    pub fn record_conn_close(&self) {
+        // saturating: a stray double-close must not wrap the gauge
+        let _ = self.conns_active.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| v.checked_sub(1),
+        );
+    }
+
+    /// Count one query refused with `Overloaded` by the front door.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one malformed wire frame.
+    pub fn record_proto_error(&self) {
+        self.proto_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Fold one drift-monitor status into the gauges.
     pub fn record_drift(&self, status: DriftStatus) {
         let enc = match status {
@@ -170,6 +234,13 @@ impl Metrics {
             panics: self.panics.load(Ordering::Relaxed),
             replica_restarts: self.replica_restarts.load(Ordering::Relaxed),
             replicas: self.replicas.load(Ordering::Relaxed),
+            shards: self.shards.load(Ordering::Relaxed),
+            shard_failures: self.shard_failures.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+            conns_opened: self.conns_opened.load(Ordering::Relaxed),
+            conns_active: self.conns_active.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            proto_errors: self.proto_errors.load(Ordering::Relaxed),
             p50_s: p50,
             p95_s: p95,
             p99_s: p99,
@@ -201,6 +272,20 @@ pub struct Snapshot {
     pub replica_restarts: u64,
     /// Executor replicas currently serving.
     pub replicas: u64,
+    /// Shards currently serving (1 = unsharded).
+    pub shards: u64,
+    /// Per-query shard failures (timeouts, dead shards, full queues).
+    pub shard_failures: u64,
+    /// Queries answered degraded (quorum met, shards missing).
+    pub degraded: u64,
+    /// Network connections accepted over the front door's lifetime.
+    pub conns_opened: u64,
+    /// Network connections currently open.
+    pub conns_active: u64,
+    /// Queries load-shed with `Overloaded` by the front door.
+    pub shed: u64,
+    /// Malformed wire frames seen by the front door.
+    pub proto_errors: u64,
     /// Median request latency (seconds).
     pub p50_s: f64,
     /// 95th-percentile request latency (seconds).
@@ -232,11 +317,27 @@ impl Snapshot {
                 format!(" drift={} signals={}", s.as_str(), self.drift_signals)
             }
         };
+        let shard = if self.shards > 1 || self.shard_failures > 0 {
+            format!(
+                " shards={} shard_failures={} degraded={}",
+                self.shards, self.shard_failures, self.degraded
+            )
+        } else {
+            String::new()
+        };
+        let net = if self.conns_opened > 0 || self.shed > 0 || self.proto_errors > 0 {
+            format!(
+                " conns={}/{} shed={} proto_errors={}",
+                self.conns_active, self.conns_opened, self.shed, self.proto_errors
+            )
+        } else {
+            String::new()
+        };
         format!(
             "requests={} completed={} failed={} batches={} \
              latency p50={:.3}ms p95={:.3}ms p99={:.3}ms \
              mean_batch={:.1} mean_exec={:.3}ms \
-             replicas={} panics={} restarts={}{drift}",
+             replicas={} panics={} restarts={}{shard}{net}{drift}",
             self.requests,
             self.completed,
             self.failed,
@@ -313,6 +414,39 @@ mod tests {
         // percentiles stay in the pushed range (~50..1050µs)
         assert!(s.p99_s < 2e-3, "p99 {}", s.p99_s);
         assert_eq!(s.metrics_footprint, baseline);
+    }
+
+    #[test]
+    fn shard_and_net_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.shards, 1);
+        // quiet unsharded, un-networked server keeps the classic report
+        assert!(!s.report().contains("shards="));
+        assert!(!s.report().contains("conns="));
+        m.set_shards(4);
+        m.record_shard_failure();
+        m.record_degraded();
+        m.record_conn_open();
+        m.record_conn_open();
+        m.record_conn_close();
+        m.record_shed();
+        m.record_proto_error();
+        let s = m.snapshot();
+        assert_eq!(s.shards, 4);
+        assert_eq!(s.shard_failures, 1);
+        assert_eq!(s.degraded, 1);
+        assert_eq!(s.conns_opened, 2);
+        assert_eq!(s.conns_active, 1);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.proto_errors, 1);
+        let r = s.report();
+        assert!(r.contains("shards=4 shard_failures=1 degraded=1"), "{r}");
+        assert!(r.contains("conns=1/2 shed=1 proto_errors=1"), "{r}");
+        // double-close saturates instead of wrapping the gauge
+        m.record_conn_close();
+        m.record_conn_close();
+        assert_eq!(m.snapshot().conns_active, 0);
     }
 
     #[test]

@@ -1,13 +1,18 @@
 //! L3 coordinator — the paper's system layer: the two-stage large-scale
 //! embedding pipeline, the NN-OSE trainer, the streaming service with
-//! dynamic batching, run configuration and serving metrics. Every numeric
+//! dynamic batching, sharded serving behind a binary-protocol network
+//! front door, run configuration and serving metrics. Every numeric
 //! graph executes through the [`crate::runtime::ComputeBackend`] seam.
 
 pub mod config;
 pub mod embedder;
+pub mod error;
 pub mod methods;
 pub mod metrics;
+pub mod net;
+pub mod proto;
 pub mod server;
+pub mod shard;
 pub mod stream;
 pub mod trainer;
 
@@ -16,8 +21,15 @@ pub use embedder::{
     embed_corpus, embed_dataset, solve_base_source, BaseSolver, OseBackend,
     PipelineConfig, PipelineResult,
 };
+pub use error::ServeError;
 pub use methods::{BackendNn, BackendOpt};
 pub use metrics::{Metrics, Snapshot};
-pub use server::{BatcherConfig, DriftHook, QueryResult, Server, ServerHandle};
+pub use net::{NetConfig, NetServer, QueryService};
+pub use proto::{Deframer, Frame};
+pub use server::{
+    BatcherConfig, DriftHook, QueryResult, Request, Server, ServerBuilder,
+    ServerHandle, Ticket,
+};
+pub use shard::{ShardConfig, ShardedHandle, ShardedServer};
 pub use stream::{DriftConfig, DriftMonitor, DriftStatus};
 pub use trainer::{train_backend, train_rust, TrainConfig, TrainReport};

@@ -1,0 +1,599 @@
+//! Network front door: the length-prefixed binary protocol
+//! ([`super::proto`]) served over TCP by a small from-scratch
+//! nonblocking event loop — no async runtime, no poll crate, just
+//! poll(2) on std's nonblocking sockets (matching the crate's no-new-deps
+//! style; the raw syscall binding follows `data::source::table`'s mmap
+//! module).
+//!
+//! ```text
+//!  accept loop ──> per-connection state machine
+//!    Deframer ──frames──> load-shed gate ──ReplySink──> QueryService
+//!    completions <──wake pipe── executor/router threads
+//!    write buffers ──flush──> clients (Result/Error frames)
+//! ```
+//!
+//! One thread runs the whole loop. Queries hand a completion callback
+//! ([`ReplySink`]) to the serving layer, so no thread ever parks waiting
+//! for a result: executors push `(connection, request id, result)` onto a
+//! completion queue and write one byte into a wake pipe, and the loop
+//! encodes reply frames on its next turn.
+//!
+//! Overload behaviour, in order:
+//! - per-connection parse errors answer with a
+//!   [`Protocol`](super::error::ServeError::Protocol) frame and close
+//!   after flushing;
+//! - more than `max_in_flight` outstanding queries answer
+//!   [`Overloaded`](super::error::ServeError::Overloaded) immediately
+//!   (load shedding — the reply is cheap, the embed is not);
+//! - at `max_connections` the listener is simply not polled, so further
+//!   clients queue in the kernel backlog (connection limiting).
+//!
+//! Platform: the event loop needs poll(2)/pipe(2) and is compiled on
+//! Linux (the CI and serving platform). Elsewhere [`NetServer::start`]
+//! returns [`Internal`](super::error::ServeError::Internal) so callers
+//! can degrade to in-process serving.
+
+use std::sync::Arc;
+
+use super::metrics::Metrics;
+use super::server::{ReplySink, Request, ServerHandle};
+use super::shard::ShardedHandle;
+
+/// Front-door shape: where to listen and how much concurrent work to
+/// admit.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Bind address, e.g. `127.0.0.1:4077` (port 0 picks an ephemeral
+    /// port; read it back from [`NetServer::local_addr`]).
+    pub addr: String,
+    /// Connection limit: beyond this, new clients wait in the kernel
+    /// backlog until a slot frees.
+    pub max_connections: usize,
+    /// Bounded in-flight queue: queries beyond this many outstanding
+    /// embeds are answered
+    /// [`Overloaded`](super::error::ServeError::Overloaded). Keep at or below
+    /// the batcher's `queue_cap` so dispatch never blocks the loop.
+    pub max_in_flight: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            max_connections: 256,
+            max_in_flight: 1024,
+        }
+    }
+}
+
+/// The serving surface the front door needs: submit with a completion
+/// callback, expose metrics. Implemented by both the unsharded
+/// [`ServerHandle<str>`] and the sharded [`ShardedHandle<str>`], so the
+/// wire protocol is identical in front of either.
+pub trait QueryService: Send + Sync {
+    /// Submit a text-object query; `sink` fires exactly once.
+    fn submit_text(&self, text: String, sink: ReplySink);
+
+    /// Submit a precomputed delta-row query; `sink` fires exactly once.
+    fn submit_delta(&self, delta: Vec<f32>, sink: ReplySink);
+
+    /// The serving metrics the front door records shed/connection/proto
+    /// counters into.
+    fn metrics(&self) -> Arc<Metrics>;
+}
+
+impl QueryService for ServerHandle<str> {
+    fn submit_text(&self, text: String, sink: ReplySink) {
+        self.submit_sink(Request::object(text), sink);
+    }
+
+    fn submit_delta(&self, delta: Vec<f32>, sink: ReplySink) {
+        self.submit_sink(Request::Delta(delta), sink);
+    }
+
+    fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+}
+
+impl QueryService for ShardedHandle<str> {
+    fn submit_text(&self, text: String, sink: ReplySink) {
+        self.submit_sink(Request::object(text), sink);
+    }
+
+    fn submit_delta(&self, delta: Vec<f32>, sink: ReplySink) {
+        self.submit_sink(Request::Delta(delta), sink);
+    }
+
+    fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+}
+
+#[cfg(target_os = "linux")]
+pub use linux::NetServer;
+
+#[cfg(target_os = "linux")]
+mod linux {
+    //! The poll(2) event loop (no libc crate in the image; the symbols
+    //! come from the C runtime std already links).
+
+    use std::collections::HashMap;
+    use std::fs::File;
+    use std::io::{Read, Write};
+    use std::net::{SocketAddr, TcpListener, TcpStream};
+    use std::os::raw::{c_int, c_ulong};
+    use std::os::unix::io::{AsRawFd, FromRawFd};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+    use std::thread::JoinHandle;
+
+    use super::super::error::ServeError;
+    use super::super::proto::{Deframer, Frame};
+    use super::super::server::{QueryResult, ReplySink};
+    use super::{NetConfig, QueryService};
+
+    mod sys {
+        use std::os::raw::{c_int, c_ulong};
+
+        pub const POLLIN: i16 = 0x001;
+        pub const POLLOUT: i16 = 0x004;
+        pub const POLLERR: i16 = 0x008;
+        pub const POLLHUP: i16 = 0x010;
+        pub const F_SETFL: c_int = 4;
+        pub const O_NONBLOCK: c_int = 0o4000;
+
+        #[repr(C)]
+        #[derive(Clone, Copy)]
+        pub struct PollFd {
+            pub fd: c_int,
+            pub events: i16,
+            pub revents: i16,
+        }
+
+        extern "C" {
+            pub fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+            pub fn pipe(fds: *mut c_int) -> c_int;
+            pub fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+        }
+    }
+
+    /// A completed query on its way back to a connection.
+    type Completion = (u64, u64, Result<QueryResult, ServeError>);
+
+    struct Conn {
+        stream: TcpStream,
+        deframer: Deframer,
+        out: Vec<u8>,
+        out_pos: usize,
+        /// Flush the write buffer, then close (set on protocol errors).
+        closing: bool,
+    }
+
+    impl Conn {
+        fn has_output(&self) -> bool {
+            self.out_pos < self.out.len()
+        }
+    }
+
+    /// The running front door. Dropping (or [`Self::shutdown`]) stops the
+    /// event loop and closes every connection.
+    pub struct NetServer {
+        addr: SocketAddr,
+        stop: Arc<AtomicBool>,
+        wake_tx: Arc<File>,
+        thread: Option<JoinHandle<()>>,
+    }
+
+    impl NetServer {
+        /// Bind `cfg.addr` and start the event loop over `service`.
+        pub fn start(
+            service: Arc<dyn QueryService>,
+            cfg: NetConfig,
+        ) -> Result<NetServer, ServeError> {
+            let listener = TcpListener::bind(&cfg.addr).map_err(|e| {
+                ServeError::Internal { reason: format!("bind {}: {e}", cfg.addr) }
+            })?;
+            let addr = listener.local_addr().map_err(|e| ServeError::Internal {
+                reason: format!("local_addr: {e}"),
+            })?;
+            listener.set_nonblocking(true).map_err(|e| ServeError::Internal {
+                reason: format!("nonblocking listener: {e}"),
+            })?;
+
+            let mut fds = [0 as c_int; 2];
+            // SAFETY: pipe writes two fds into the array on success.
+            let rc = unsafe { sys::pipe(fds.as_mut_ptr()) };
+            if rc != 0 {
+                return Err(ServeError::Internal {
+                    reason: format!("pipe: {}", std::io::Error::last_os_error()),
+                });
+            }
+            // SAFETY: both fds are freshly created and owned here; File
+            // takes ownership and closes them on drop.
+            let wake_rx = unsafe { File::from_raw_fd(fds[0]) };
+            let wake_tx = unsafe { File::from_raw_fd(fds[1]) };
+            // Nonblocking on both ends: the loop drains the read end dry,
+            // and a full pipe must never park an executor mid-reply.
+            // SAFETY: plain fcntl on fds this function owns.
+            unsafe {
+                sys::fcntl(fds[0], sys::F_SETFL, sys::O_NONBLOCK);
+                sys::fcntl(fds[1], sys::F_SETFL, sys::O_NONBLOCK);
+            }
+
+            let stop = Arc::new(AtomicBool::new(false));
+            let wake_tx = Arc::new(wake_tx);
+            let completions: Arc<Mutex<Vec<Completion>>> =
+                Arc::new(Mutex::new(Vec::new()));
+            let loop_state = EventLoop {
+                listener,
+                wake_rx,
+                wake_tx: Arc::clone(&wake_tx),
+                completions,
+                service,
+                cfg,
+                stop: Arc::clone(&stop),
+            };
+            let thread = std::thread::Builder::new()
+                .name("ose-net".to_string())
+                .spawn(move || loop_state.run())
+                .map_err(|e| ServeError::Internal {
+                    reason: format!("spawning event loop: {e}"),
+                })?;
+            Ok(NetServer { addr, stop, wake_tx, thread: Some(thread) })
+        }
+
+        /// The bound address (resolves port 0 to the ephemeral port).
+        pub fn local_addr(&self) -> SocketAddr {
+            self.addr
+        }
+
+        /// Stop the event loop and close every connection. In-flight
+        /// embeds complete inside the serving layer; their replies are
+        /// dropped.
+        pub fn shutdown(mut self) {
+            self.stop_inner();
+        }
+
+        fn stop_inner(&mut self) {
+            self.stop.store(true, Ordering::SeqCst);
+            let _ = (&*self.wake_tx).write(&[1u8]);
+            if let Some(t) = self.thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+
+    impl Drop for NetServer {
+        fn drop(&mut self) {
+            self.stop_inner();
+        }
+    }
+
+    struct EventLoop {
+        listener: TcpListener,
+        wake_rx: File,
+        wake_tx: Arc<File>,
+        completions: Arc<Mutex<Vec<Completion>>>,
+        service: Arc<dyn QueryService>,
+        cfg: NetConfig,
+        stop: Arc<AtomicBool>,
+    }
+
+    impl EventLoop {
+        fn run(mut self) {
+            let metrics = self.service.metrics();
+            let mut conns: HashMap<u64, Conn> = HashMap::new();
+            let mut next_token: u64 = 1;
+            let mut in_flight: usize = 0;
+
+            loop {
+                if self.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                // 1. Poll: wake pipe, listener (only below the connection
+                //    limit), every connection (write interest only when
+                //    output is pending).
+                let accepting = conns.len() < self.cfg.max_connections;
+                let base = 1 + usize::from(accepting);
+                let mut fds: Vec<sys::PollFd> = Vec::with_capacity(base + conns.len());
+                let mut tokens: Vec<u64> = Vec::with_capacity(conns.len());
+                fds.push(sys::PollFd {
+                    fd: self.wake_rx.as_raw_fd(),
+                    events: sys::POLLIN,
+                    revents: 0,
+                });
+                if accepting {
+                    fds.push(sys::PollFd {
+                        fd: self.listener.as_raw_fd(),
+                        events: sys::POLLIN,
+                        revents: 0,
+                    });
+                }
+                for (&t, c) in &conns {
+                    let mut events = sys::POLLIN;
+                    if c.has_output() {
+                        events |= sys::POLLOUT;
+                    }
+                    fds.push(sys::PollFd {
+                        fd: c.stream.as_raw_fd(),
+                        events,
+                        revents: 0,
+                    });
+                    tokens.push(t);
+                }
+                // 500 ms safety timeout: a lost wake byte can only delay
+                // completions by one tick, never hang them.
+                // SAFETY: fds points at a live array of fds.len() entries.
+                let rc = unsafe {
+                    sys::poll(fds.as_mut_ptr(), fds.len() as c_ulong, 500)
+                };
+                if rc < 0 {
+                    let e = std::io::Error::last_os_error();
+                    if e.kind() == std::io::ErrorKind::Interrupted {
+                        continue;
+                    }
+                    log::error!("poll failed, front door exiting: {e}");
+                    return;
+                }
+
+                // 2. Drain the wake pipe dry (level-triggered poll would
+                //    otherwise spin on the leftover bytes).
+                if fds[0].revents != 0 {
+                    let mut sink = [0u8; 64];
+                    while matches!((&self.wake_rx).read(&mut sink), Ok(n) if n > 0) {}
+                }
+
+                // 3. Drain completions into the write buffers.
+                let done: Vec<Completion> = {
+                    let mut g = match self.completions.lock() {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                    std::mem::take(&mut *g)
+                };
+                for (token, id, result) in done {
+                    in_flight = in_flight.saturating_sub(1);
+                    // connection may have died while the query ran; the
+                    // reply is simply dropped
+                    if let Some(conn) = conns.get_mut(&token) {
+                        let frame = match result {
+                            Ok(qr) => Frame::Result {
+                                id,
+                                degraded: qr.degraded,
+                                latency_us: qr
+                                    .latency
+                                    .as_micros()
+                                    .min(u32::MAX as u128)
+                                    as u32,
+                                coords: qr.coords,
+                            },
+                            Err(e) => Frame::from_error(id, &e),
+                        };
+                        frame.encode(&mut conn.out);
+                    }
+                }
+
+                // 4. Accept new connections.
+                if accepting && fds[1].revents != 0 {
+                    loop {
+                        match self.listener.accept() {
+                            Ok((stream, _)) => {
+                                if conns.len() >= self.cfg.max_connections
+                                    || stream.set_nonblocking(true).is_err()
+                                {
+                                    continue; // dropped: limit hit mid-burst
+                                }
+                                metrics.record_conn_open();
+                                conns.insert(
+                                    next_token,
+                                    Conn {
+                                        stream,
+                                        deframer: Deframer::new(),
+                                        out: Vec::new(),
+                                        out_pos: 0,
+                                        closing: false,
+                                    },
+                                );
+                                next_token += 1;
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                break
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                            Err(e) => {
+                                log::warn!("accept failed: {e}");
+                                break;
+                            }
+                        }
+                    }
+                }
+
+                // 5. Per-connection reads (frame handling) and writes.
+                let mut dead: Vec<u64> = Vec::new();
+                for (i, &token) in tokens.iter().enumerate() {
+                    let revents = fds[base + i].revents;
+                    let conn = conns.get_mut(&token).expect("token tracked");
+                    let mut alive = true;
+                    if revents & (sys::POLLIN | sys::POLLERR | sys::POLLHUP) != 0 {
+                        alive = self.handle_readable(token, conn, &mut in_flight);
+                    }
+                    // flush whenever output is pending — POLLOUT interest
+                    // was only registered when there already was some, and
+                    // frames enqueued THIS turn should not wait a tick
+                    if alive && conn.has_output() {
+                        alive = flush(conn);
+                    } else if alive && conn.closing {
+                        alive = false;
+                    }
+                    if !alive {
+                        dead.push(token);
+                    }
+                }
+                for token in dead {
+                    conns.remove(&token);
+                    metrics.record_conn_close();
+                }
+            }
+        }
+
+        /// Read everything available, decode frames, dispatch queries.
+        /// Returns false when the connection should be dropped now.
+        fn handle_readable(
+            &mut self,
+            token: u64,
+            conn: &mut Conn,
+            in_flight: &mut usize,
+        ) -> bool {
+            let metrics = self.service.metrics();
+            let mut buf = [0u8; 16384];
+            loop {
+                match conn.stream.read(&mut buf) {
+                    Ok(0) => return false, // peer closed
+                    Ok(n) => conn.deframer.extend(&buf[..n]),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => return false,
+                }
+            }
+            while !conn.closing {
+                match conn.deframer.next() {
+                    Ok(Some(frame)) => {
+                        self.handle_frame(token, conn, frame, in_flight)
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        // poisoned stream: typed error reply, then close
+                        metrics.record_proto_error();
+                        Frame::from_error(0, &e).encode(&mut conn.out);
+                        conn.closing = true;
+                    }
+                }
+            }
+            true
+        }
+
+        fn handle_frame(
+            &mut self,
+            token: u64,
+            conn: &mut Conn,
+            frame: Frame,
+            in_flight: &mut usize,
+        ) {
+            let metrics = self.service.metrics();
+            match frame {
+                Frame::Ping { id } => {
+                    Frame::Pong { id }.encode(&mut conn.out);
+                }
+                Frame::QueryText { id, text } => {
+                    if *in_flight >= self.cfg.max_in_flight {
+                        metrics.record_shed();
+                        Frame::from_error(id, &ServeError::Overloaded)
+                            .encode(&mut conn.out);
+                    } else {
+                        *in_flight += 1;
+                        let sink = self.make_sink(token, id);
+                        self.service.submit_text(text, sink);
+                    }
+                }
+                Frame::QueryDelta { id, delta } => {
+                    if *in_flight >= self.cfg.max_in_flight {
+                        metrics.record_shed();
+                        Frame::from_error(id, &ServeError::Overloaded)
+                            .encode(&mut conn.out);
+                    } else {
+                        *in_flight += 1;
+                        let sink = self.make_sink(token, id);
+                        self.service.submit_delta(delta, sink);
+                    }
+                }
+                Frame::Result { id, .. } | Frame::Error { id, .. } | Frame::Pong { id } => {
+                    // server-to-client frames arriving AT the server are a
+                    // protocol violation
+                    metrics.record_proto_error();
+                    let e = ServeError::Protocol {
+                        reason: "client sent a server-side frame".into(),
+                    };
+                    Frame::from_error(id, &e).encode(&mut conn.out);
+                    conn.closing = true;
+                }
+            }
+        }
+
+        /// Completion callback for one request: enqueue the result and
+        /// nudge the event loop through the wake pipe.
+        fn make_sink(&self, token: u64, id: u64) -> ReplySink {
+            let completions = Arc::clone(&self.completions);
+            let wake = Arc::clone(&self.wake_tx);
+            Box::new(move |result| {
+                match completions.lock() {
+                    Ok(mut g) => g.push((token, id, result)),
+                    Err(poisoned) => poisoned.into_inner().push((token, id, result)),
+                }
+                // a full pipe (or torn-down loop) is fine: the byte is
+                // only a nudge, the 500 ms poll timeout is the backstop
+                let _ = (&*wake).write(&[1u8]);
+            })
+        }
+    }
+
+    /// Flush as much pending output as the socket accepts. Returns false
+    /// when the connection should be dropped (write error, or flush
+    /// finished on a closing connection).
+    fn flush(conn: &mut Conn) -> bool {
+        while conn.out_pos < conn.out.len() {
+            match conn.stream.write(&conn.out[conn.out_pos..]) {
+                Ok(0) => return false,
+                Ok(n) => conn.out_pos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+        conn.out.clear();
+        conn.out_pos = 0;
+        !conn.closing
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub use fallback::NetServer;
+
+#[cfg(not(target_os = "linux"))]
+mod fallback {
+    //! Non-Linux stub: same API, `start` always fails cleanly so callers
+    //! degrade to in-process serving.
+
+    use std::sync::Arc;
+
+    use super::super::error::ServeError;
+    use super::{NetConfig, QueryService};
+
+    /// Placeholder front door for platforms without the poll(2) loop.
+    pub struct NetServer {
+        never: std::convert::Infallible,
+    }
+
+    impl NetServer {
+        /// Always fails on this platform.
+        pub fn start(
+            _service: Arc<dyn QueryService>,
+            _cfg: NetConfig,
+        ) -> Result<NetServer, ServeError> {
+            Err(ServeError::Internal {
+                reason: "network front door requires Linux (poll(2) event loop)"
+                    .into(),
+            })
+        }
+
+        /// Unreachable: no instance can exist.
+        pub fn local_addr(&self) -> std::net::SocketAddr {
+            match self.never {}
+        }
+
+        /// Unreachable: no instance can exist.
+        pub fn shutdown(self) {
+            match self.never {}
+        }
+    }
+}

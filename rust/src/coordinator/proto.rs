@@ -1,0 +1,510 @@
+//! Length-prefixed binary wire protocol for the network front door.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//!  u32 payload_len | payload
+//!  payload = u8 frame_type | u64 request_id | body
+//! ```
+//!
+//! Frame types and bodies:
+//!
+//! | type | frame      | body                                         |
+//! |------|------------|----------------------------------------------|
+//! | 1    | QueryText  | UTF-8 object bytes                           |
+//! | 2    | QueryDelta | u32 count, then count x f32 delta row        |
+//! | 3    | Result     | u8 degraded, u32 latency_us, u32 k, k x f32  |
+//! | 4    | Error      | u16 code, u64 detail, UTF-8 message          |
+//! | 5    | Ping       | empty                                        |
+//! | 6    | Pong       | empty                                        |
+//!
+//! Error frames carry the stable [`ServeError`] wire codes
+//! (`to_wire`/`from_wire`), so a typed error round-trips the socket.
+//! Frames above [`MAX_FRAME`] bytes are a protocol violation — the limit
+//! bounds per-connection buffering on both sides.
+
+use super::error::ServeError;
+
+/// Hard cap on one frame's payload (1 MiB): bounds per-connection memory
+/// and rejects garbage length prefixes early.
+pub const MAX_FRAME: usize = 1 << 20;
+
+const TYPE_QUERY_TEXT: u8 = 1;
+const TYPE_QUERY_DELTA: u8 = 2;
+const TYPE_RESULT: u8 = 3;
+const TYPE_ERROR: u8 = 4;
+const TYPE_PING: u8 = 5;
+const TYPE_PONG: u8 = 6;
+
+/// One protocol frame, client- or server-originated.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Client query: embed this object (the server computes the delta).
+    QueryText {
+        /// Caller-chosen request id, echoed on the reply.
+        id: u64,
+        /// The object, UTF-8.
+        text: String,
+    },
+    /// Client query with a precomputed delta row.
+    QueryDelta {
+        /// Caller-chosen request id, echoed on the reply.
+        id: u64,
+        /// One distance per landmark.
+        delta: Vec<f32>,
+    },
+    /// Server reply: embedded coordinates.
+    Result {
+        /// Echo of the request id.
+        id: u64,
+        /// True when reduced from a partial shard quorum.
+        degraded: bool,
+        /// Server-measured latency, microseconds (saturating).
+        latency_us: u32,
+        /// Embedded coordinates (length K).
+        coords: Vec<f32>,
+    },
+    /// Server reply: the request failed (see [`ServeError::from_wire`]).
+    Error {
+        /// Echo of the request id (0 for connection-level errors).
+        id: u64,
+        /// Stable [`ServeError`] wire code.
+        code: u16,
+        /// Variant-specific numeric detail (e.g. shard index).
+        detail: u64,
+        /// Human-readable message.
+        message: String,
+    },
+    /// Liveness probe.
+    Ping {
+        /// Caller-chosen id, echoed on the pong.
+        id: u64,
+    },
+    /// Liveness reply.
+    Pong {
+        /// Echo of the ping id.
+        id: u64,
+    },
+}
+
+impl Frame {
+    /// Build an [`Frame::Error`] reply from a typed serving error.
+    pub fn from_error(id: u64, e: &ServeError) -> Frame {
+        let (code, detail, message) = e.to_wire();
+        Frame::Error { id, code, detail, message }
+    }
+
+    /// Reconstruct the typed error an [`Frame::Error`] carries.
+    /// `None` for every other frame type.
+    pub fn to_error(&self) -> Option<ServeError> {
+        match self {
+            Frame::Error { code, detail, message, .. } => {
+                Some(ServeError::from_wire(*code, *detail, message.clone()))
+            }
+            _ => None,
+        }
+    }
+
+    /// The frame's request id.
+    pub fn id(&self) -> u64 {
+        match self {
+            Frame::QueryText { id, .. }
+            | Frame::QueryDelta { id, .. }
+            | Frame::Result { id, .. }
+            | Frame::Error { id, .. }
+            | Frame::Ping { id }
+            | Frame::Pong { id } => *id,
+        }
+    }
+
+    /// Append the full frame (length prefix included) to `out`.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        let start = out.len();
+        out.extend_from_slice(&0u32.to_le_bytes()); // length, patched below
+        match self {
+            Frame::QueryText { id, text } => {
+                out.push(TYPE_QUERY_TEXT);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(text.as_bytes());
+            }
+            Frame::QueryDelta { id, delta } => {
+                out.push(TYPE_QUERY_DELTA);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&(delta.len() as u32).to_le_bytes());
+                for v in delta {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::Result { id, degraded, latency_us, coords } => {
+                out.push(TYPE_RESULT);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.push(u8::from(*degraded));
+                out.extend_from_slice(&latency_us.to_le_bytes());
+                out.extend_from_slice(&(coords.len() as u32).to_le_bytes());
+                for v in coords {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::Error { id, code, detail, message } => {
+                out.push(TYPE_ERROR);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&code.to_le_bytes());
+                out.extend_from_slice(&detail.to_le_bytes());
+                out.extend_from_slice(message.as_bytes());
+            }
+            Frame::Ping { id } => {
+                out.push(TYPE_PING);
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+            Frame::Pong { id } => {
+                out.push(TYPE_PONG);
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+        }
+        let len = (out.len() - start - 4) as u32;
+        out[start..start + 4].copy_from_slice(&len.to_le_bytes());
+    }
+
+    /// Encode into a fresh buffer.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode(&mut out);
+        out
+    }
+
+    /// Decode one payload (the bytes AFTER the length prefix).
+    pub fn decode(payload: &[u8]) -> Result<Frame, ServeError> {
+        let mut c = Cursor { buf: payload, pos: 0 };
+        let ty = c.u8()?;
+        let id = c.u64()?;
+        let frame = match ty {
+            TYPE_QUERY_TEXT => Frame::QueryText { id, text: c.rest_utf8()? },
+            TYPE_QUERY_DELTA => {
+                let n = c.u32()? as usize;
+                if n > MAX_FRAME / 4 {
+                    return Err(ServeError::Protocol {
+                        reason: format!("delta row of {n} entries exceeds the frame cap"),
+                    });
+                }
+                let mut delta = Vec::with_capacity(n);
+                for _ in 0..n {
+                    delta.push(c.f32()?);
+                }
+                Frame::QueryDelta { id, delta }
+            }
+            TYPE_RESULT => {
+                let degraded = c.u8()? != 0;
+                let latency_us = c.u32()?;
+                let n = c.u32()? as usize;
+                if n > MAX_FRAME / 4 {
+                    return Err(ServeError::Protocol {
+                        reason: format!("{n} coordinates exceed the frame cap"),
+                    });
+                }
+                let mut coords = Vec::with_capacity(n);
+                for _ in 0..n {
+                    coords.push(c.f32()?);
+                }
+                Frame::Result { id, degraded, latency_us, coords }
+            }
+            TYPE_ERROR => {
+                let code = c.u16()?;
+                let detail = c.u64()?;
+                Frame::Error { id, code, detail, message: c.rest_utf8()? }
+            }
+            TYPE_PING => Frame::Ping { id },
+            TYPE_PONG => Frame::Pong { id },
+            other => {
+                return Err(ServeError::Protocol {
+                    reason: format!("unknown frame type {other}"),
+                })
+            }
+        };
+        if !c.at_end() && !matches!(frame, Frame::QueryText { .. } | Frame::Error { .. }) {
+            return Err(ServeError::Protocol {
+                reason: format!("{} trailing bytes after the frame body", c.remaining()),
+            });
+        }
+        Ok(frame)
+    }
+}
+
+/// Byte cursor over one frame payload; every read is bounds-checked into
+/// a [`ServeError::Protocol`].
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8], ServeError> {
+        if self.pos + n > self.buf.len() {
+            return Err(ServeError::Protocol {
+                reason: format!(
+                    "truncated frame: wanted {n} bytes at offset {}, have {}",
+                    self.pos,
+                    self.buf.len()
+                ),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ServeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, ServeError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, ServeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ServeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, ServeError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn rest_utf8(&mut self) -> Result<String, ServeError> {
+        let rest = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        String::from_utf8(rest.to_vec()).map_err(|_| ServeError::Protocol {
+            reason: "frame body is not valid UTF-8".into(),
+        })
+    }
+
+    fn at_end(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Incremental frame extractor for a nonblocking byte stream: feed
+/// whatever arrived, pull out complete frames as they materialise.
+#[derive(Default)]
+pub struct Deframer {
+    buf: Vec<u8>,
+}
+
+impl Deframer {
+    /// Fresh, empty deframer.
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    /// Append newly received bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pull the next complete frame, if one is buffered. `Ok(None)` means
+    /// "need more bytes"; a protocol error poisons the connection (the
+    /// caller should reply and close).
+    pub fn next(&mut self) -> Result<Option<Frame>, ServeError> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(self.buf[..4].try_into().unwrap()) as usize;
+        if len > MAX_FRAME {
+            return Err(ServeError::Protocol {
+                reason: format!("frame of {len} bytes exceeds the {MAX_FRAME} cap"),
+            });
+        }
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        let frame = Frame::decode(&self.buf[4..4 + len])?;
+        self.buf.drain(..4 + len);
+        Ok(Some(frame))
+    }
+
+    /// Bytes currently buffered (diagnostics).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// Blocking-read one frame from a stream (the client-side helper; the
+/// server never blocks per-connection). Protocol violations surface as
+/// `InvalidData` IO errors.
+pub fn read_frame<R: std::io::Read>(r: &mut R) -> std::io::Result<Frame> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {MAX_FRAME} cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Frame::decode(&payload)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+}
+
+/// Blocking-write one frame to a stream (client-side helper).
+pub fn write_frame<W: std::io::Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&frame.to_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{prop_assert, property};
+
+    fn round_trip(f: &Frame) -> Frame {
+        let bytes = f.to_bytes();
+        let len = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+        assert_eq!(len + 4, bytes.len(), "length prefix covers the payload");
+        Frame::decode(&bytes[4..]).expect("decode")
+    }
+
+    #[test]
+    fn every_frame_type_round_trips() {
+        property("proto frame round-trip", 300, |g| {
+            let id = g.u64();
+            let frames = vec![
+                Frame::QueryText { id, text: g.unicode_string(0, 40) },
+                Frame::QueryDelta { id, delta: g.vec_f32(0, 64, 10.0) },
+                Frame::Result {
+                    id,
+                    degraded: g.bool(),
+                    latency_us: g.u64() as u32,
+                    coords: g.vec_f32(0, 16, 5.0),
+                },
+                Frame::Error {
+                    id,
+                    code: g.u64() as u16,
+                    detail: g.u64(),
+                    message: g.unicode_string(0, 40),
+                },
+                Frame::Ping { id },
+                Frame::Pong { id },
+            ];
+            for f in frames {
+                if round_trip(&f) != f {
+                    return Err(format!("{f:?} did not round-trip"));
+                }
+            }
+            prop_assert(true, "ok")
+        });
+    }
+
+    #[test]
+    fn error_frames_round_trip_typed_errors() {
+        property("proto error frame carries ServeError", 200, |g| {
+            let errors = vec![
+                ServeError::BadInput { reason: g.unicode_string(0, 30) },
+                ServeError::Overloaded,
+                ServeError::Shutdown,
+                ServeError::ReplicaPanic { reason: g.string(0, 30) },
+                ServeError::ShardUnavailable {
+                    shard: g.usize_in(0, 64),
+                    reason: g.string(0, 30),
+                },
+                ServeError::Timeout,
+                ServeError::Protocol { reason: g.string(0, 30) },
+                ServeError::Internal { reason: g.string(0, 30) },
+            ];
+            let id = g.u64();
+            for e in errors {
+                let f = Frame::from_error(id, &e);
+                let back = round_trip(&f).to_error().expect("error frame");
+                if back != e {
+                    return Err(format!("{e:?} -> {back:?}"));
+                }
+            }
+            prop_assert(true, "ok")
+        });
+    }
+
+    #[test]
+    fn deframer_reassembles_byte_dribble() {
+        property("deframer handles arbitrary splits", 100, |g| {
+            let frames = vec![
+                Frame::Ping { id: g.u64() },
+                Frame::QueryDelta { id: g.u64(), delta: g.vec_f32(1, 32, 3.0) },
+                Frame::QueryText { id: g.u64(), text: g.string(0, 20) },
+            ];
+            let mut wire = Vec::new();
+            for f in &frames {
+                f.encode(&mut wire);
+            }
+            let mut d = Deframer::new();
+            let mut got = Vec::new();
+            let mut pos = 0;
+            while pos < wire.len() {
+                let n = g.usize_in(1, 7).min(wire.len() - pos);
+                d.extend(&wire[pos..pos + n]);
+                pos += n;
+                while let Some(f) = d.next().expect("clean stream") {
+                    got.push(f);
+                }
+            }
+            prop_assert(got == frames && d.buffered() == 0, "all frames recovered")
+        });
+    }
+
+    #[test]
+    fn oversized_and_garbage_frames_are_protocol_errors() {
+        let mut d = Deframer::new();
+        d.extend(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        assert!(matches!(d.next(), Err(ServeError::Protocol { .. })));
+
+        // unknown frame type
+        let mut d = Deframer::new();
+        let payload = [99u8, 0, 0, 0, 0, 0, 0, 0, 0];
+        d.extend(&(payload.len() as u32).to_le_bytes());
+        d.extend(&payload);
+        assert!(matches!(d.next(), Err(ServeError::Protocol { .. })));
+
+        // truncated body: QueryDelta announcing more floats than present
+        let f = Frame::QueryDelta { id: 7, delta: vec![1.0, 2.0, 3.0] };
+        let bytes = f.to_bytes();
+        assert!(matches!(
+            Frame::decode(&bytes[4..bytes.len() - 2]),
+            Err(ServeError::Protocol { .. })
+        ));
+
+        // invalid UTF-8 text
+        let mut payload = vec![1u8]; // QueryText
+        payload.extend_from_slice(&7u64.to_le_bytes());
+        payload.extend_from_slice(&[0xff, 0xfe]);
+        assert!(matches!(
+            Frame::decode(&payload),
+            Err(ServeError::Protocol { .. })
+        ));
+    }
+
+    #[test]
+    fn blocking_helpers_match_the_deframer() {
+        let frames = vec![
+            Frame::Result {
+                id: 3,
+                degraded: true,
+                latency_us: 1500,
+                coords: vec![0.5, -0.25],
+            },
+            Frame::Pong { id: 3 },
+        ];
+        let mut wire = Vec::new();
+        for f in &frames {
+            write_frame(&mut wire, f).unwrap();
+        }
+        let mut r = &wire[..];
+        assert_eq!(read_frame(&mut r).unwrap(), frames[0]);
+        assert_eq!(read_frame(&mut r).unwrap(), frames[1]);
+        assert!(read_frame(&mut r).is_err(), "EOF is an error");
+    }
+}

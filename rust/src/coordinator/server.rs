@@ -3,10 +3,10 @@
 //! executor pool:
 //!
 //! ```text
-//!  clients --query--> [frontend pool: dissimilarities to landmarks]
+//!  clients --submit--> [frontend pool: dissimilarities to landmarks]
 //!          --delta row--> [bounded dispatch queue]
 //!          --batch--> [executor replica 0..R-1, each owns an OseMethod]
-//!          --coords--> per-request reply channels (+ drift monitor feed)
+//!          --coords--> per-request reply sinks (+ drift monitor feed)
 //! ```
 //!
 //! Dynamic batching: an executor dispatches a batch when it reaches
@@ -14,29 +14,39 @@
 //! first. The bounded queue applies backpressure to the frontend.
 //!
 //! Fault isolation: each executor wraps `embed` in `catch_unwind`. A
-//! poisoned batch fails *that batch* — its callers get error replies, the
-//! replica is rebuilt from the [`OseMethodFactory`] (mid-batch state may be
-//! corrupt), and every other replica keeps serving. The old single-batcher
-//! design died on the first panic and silently hung all future queries.
+//! poisoned batch fails *that batch* — its callers get
+//! [`ServeError::ReplicaPanic`] replies, the replica is rebuilt from the
+//! [`OseMethodFactory`] (mid-batch state may be corrupt), and every other
+//! replica keeps serving.
+//!
+//! The serving API (PR 6 redesign):
+//! - construction goes through [`ServerBuilder`], validated at
+//!   [`ServerBuilder::build`];
+//! - every query enters through [`ServerHandle::submit`] with a typed
+//!   [`Request`] and comes back through a [`Ticket`] (or a caller-supplied
+//!   [`ReplySink`] via [`ServerHandle::submit_sink`], the zero-thread path
+//!   the network front door uses);
+//! - every failure is a typed [`ServeError`] with a stable wire code.
 //!
 //! The server is generic over the object domain `T: ?Sized` (strings,
 //! numeric vectors, anything with a [`Dissimilarity`]), so vector
 //! workloads serve through the same path as the paper's string workloads.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
 use crate::mds::Matrix;
 use crate::ose::{OseMethod, OseMethodFactory};
+use crate::runtime::Backend;
 use crate::strdist::Dissimilarity;
 use crate::util::threadpool::WorkerPool;
 
+use super::error::{panic_message, ServeError};
 use super::metrics::Metrics;
+use super::shard::ShardConfig;
 use super::stream::{DriftConfig, DriftMonitor};
 
 #[derive(Clone, Debug)]
@@ -80,9 +90,18 @@ pub struct DriftHook {
     pub cfg: DriftConfig,
 }
 
-struct DriftState {
-    landmark_config: Matrix,
-    monitor: Mutex<DriftMonitor>,
+pub(crate) struct DriftState {
+    pub(crate) landmark_config: Matrix,
+    pub(crate) monitor: Mutex<DriftMonitor>,
+}
+
+impl DriftState {
+    pub(crate) fn from_hook(h: DriftHook) -> Self {
+        Self {
+            landmark_config: h.landmark_config,
+            monitor: Mutex::new(DriftMonitor::new(h.cfg)),
+        }
+    }
 }
 
 /// A completed query.
@@ -92,12 +111,94 @@ pub struct QueryResult {
     pub coords: Vec<f32>,
     /// End-to-end latency as measured by the server.
     pub latency: Duration,
+    /// True when the result was reduced from a partial shard quorum
+    /// (some shard's contribution is missing). Always false on the
+    /// unsharded path.
+    pub degraded: bool,
 }
 
-struct WorkItem {
-    delta: Vec<f32>,
-    started: Instant,
-    reply: Sender<Result<QueryResult, String>>,
+/// A query, either as a raw object (the frontend computes its landmark
+/// distances) or as a precomputed delta row (bypasses the frontend).
+pub enum Request<T: ?Sized> {
+    /// An object in the server's domain; distances are computed by the
+    /// frontend pool with the server's [`Dissimilarity`].
+    Object(Box<T>),
+    /// A precomputed row of distances to the landmarks (length L).
+    Delta(Vec<f32>),
+}
+
+impl<T: ?Sized> Request<T> {
+    /// Wrap any owned form of an object (`String`/`&str` for `T = str`,
+    /// `Vec<f32>`/`&[f32]` for `T = [f32]`, ...).
+    pub fn object<O: Into<Box<T>>>(obj: O) -> Request<T> {
+        Request::Object(obj.into())
+    }
+
+    /// Wrap a precomputed delta row (one distance per landmark).
+    pub fn delta(row: Vec<f32>) -> Request<T> {
+        Request::Delta(row)
+    }
+}
+
+/// Completion callback for one request: invoked exactly once, from
+/// whichever server thread finishes (or fails) the request. The
+/// thread-free alternative to [`Ticket`] — the network front door hands
+/// one of these to [`ServerHandle::submit_sink`] so no thread ever parks
+/// waiting for a result.
+pub type ReplySink = Box<dyn FnOnce(Result<QueryResult, ServeError>) + Send>;
+
+/// A pending query submitted through [`ServerHandle::submit`]: a one-shot
+/// handle the result arrives on.
+pub struct Ticket {
+    rx: Receiver<Result<QueryResult, ServeError>>,
+}
+
+impl Ticket {
+    pub(crate) fn new(rx: Receiver<Result<QueryResult, ServeError>>) -> Self {
+        Self { rx }
+    }
+
+    /// Block until the result arrives. A server torn down mid-flight
+    /// yields [`ServeError::Shutdown`].
+    pub fn recv(&self) -> Result<QueryResult, ServeError> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ServeError::Shutdown),
+        }
+    }
+
+    /// Block up to `timeout` for the result; [`ServeError::Timeout`] when
+    /// it expires.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<QueryResult, ServeError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => Err(ServeError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(ServeError::Shutdown),
+        }
+    }
+
+    /// Non-blocking poll: `None` while the query is still in flight.
+    pub fn try_recv(&self) -> Option<Result<QueryResult, ServeError>> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Consume the ticket and block for the result (the one-expression
+    /// form of a synchronous query).
+    pub fn recv_sync(self) -> Result<QueryResult, ServeError> {
+        self.recv()
+    }
+
+    /// Unwrap into the raw channel receiver (for select-style callers and
+    /// the deprecated shims).
+    pub fn into_receiver(self) -> Receiver<Result<QueryResult, ServeError>> {
+        self.rx
+    }
+}
+
+pub(crate) struct WorkItem {
+    pub(crate) delta: Vec<f32>,
+    pub(crate) started: Instant,
+    pub(crate) reply: ReplySink,
 }
 
 /// The OSE serving coordinator, generic over the object domain.
@@ -139,61 +240,121 @@ impl<T: ?Sized + Send + Sync + 'static> Clone for ServerHandle<T> {
     }
 }
 
-impl Server<str> {
-    /// Convenience constructor for the common string workload.
-    pub fn start_strings(
+/// Validated construction of a [`Server`] (and, via
+/// [`ServerBuilder::build_sharded`], of a
+/// [`ShardedServer`](super::shard::ShardedServer)): collects the batcher
+/// shape, replica count, drift hook, shard plan and limits, then checks
+/// the whole configuration once at `build()`.
+///
+/// ```ignore
+/// let server = Server::builder(landmarks, metric, factory)
+///     .batcher(cfg.batcher())
+///     .replicas(4)
+///     .build()?;
+/// ```
+pub struct ServerBuilder<T: ?Sized + Send + Sync + 'static> {
+    pub(crate) landmarks: Vec<Box<T>>,
+    pub(crate) metric: Arc<dyn Dissimilarity<T> + Send + Sync>,
+    pub(crate) factory: Arc<dyn OseMethodFactory>,
+    pub(crate) batcher: BatcherConfig,
+    pub(crate) drift: Option<DriftHook>,
+    pub(crate) landmark_config: Option<Matrix>,
+    pub(crate) shard_cfg: ShardConfig,
+    pub(crate) backend: Backend,
+}
+
+impl ServerBuilder<str> {
+    /// Builder for the common string workload.
+    pub fn strings(
         landmarks: Vec<String>,
         metric: Arc<dyn Dissimilarity<str> + Send + Sync>,
         factory: Arc<dyn OseMethodFactory>,
-        cfg: BatcherConfig,
-        drift: Option<DriftHook>,
-    ) -> Server<str> {
-        Self::start(
+    ) -> ServerBuilder<str> {
+        Server::builder(
             landmarks.into_iter().map(String::into_boxed_str).collect(),
             metric,
             factory,
-            cfg,
-            drift,
         )
     }
 }
 
-impl<T: ?Sized + Send + Sync + 'static> Server<T> {
-    /// Start the service with `cfg.replicas` executor replicas, each owning
-    /// a method instance built by `factory` (methods may hold a
-    /// [`crate::runtime::Backend`], which is Send).
-    pub fn start(
-        landmarks: Vec<Box<T>>,
-        metric: Arc<dyn Dissimilarity<T> + Send + Sync>,
-        factory: Arc<dyn OseMethodFactory>,
-        cfg: BatcherConfig,
-        drift: Option<DriftHook>,
-    ) -> Server<T> {
-        let probe = factory.build();
-        assert_eq!(
-            landmarks.len(),
-            probe.landmarks(),
-            "landmark count must match the OSE method"
-        );
-        if let Some(h) = &drift {
-            assert_eq!(
-                (h.landmark_config.rows, h.landmark_config.cols),
-                (probe.landmarks(), probe.dim()),
-                "drift hook landmark configuration must be L x K"
-            );
+impl<T: ?Sized + Send + Sync + 'static> ServerBuilder<T> {
+    /// Set the dynamic-batching shape (queue depth, batch size, delays,
+    /// worker counts). [`crate::coordinator::RunConfig::batcher`] produces
+    /// one from the shared CLI/config-file path.
+    pub fn batcher(mut self, cfg: BatcherConfig) -> Self {
+        self.batcher = cfg;
+        self
+    }
+
+    /// Set the executor replica count (shorthand for mutating the batcher
+    /// config).
+    pub fn replicas(mut self, replicas: usize) -> Self {
+        self.batcher.replicas = replicas;
+        self
+    }
+
+    /// Attach a drift monitor fed by every served query.
+    pub fn drift(mut self, hook: DriftHook) -> Self {
+        self.drift = Some(hook);
+        self
+    }
+
+    /// Provide the L x K landmark configuration. Required for
+    /// [`Self::build_sharded`] (each shard re-solves against its slice of
+    /// it); ignored by the unsharded [`Self::build`].
+    pub fn landmark_config(mut self, config: Matrix) -> Self {
+        self.landmark_config = Some(config);
+        self
+    }
+
+    /// Set the shard plan used by [`Self::build_sharded`].
+    pub fn shards(mut self, cfg: ShardConfig) -> Self {
+        self.shard_cfg = cfg;
+        self
+    }
+
+    /// Compute backend the per-shard optimisation methods run on
+    /// (sharded path only; the unsharded path uses the factory as given).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Validate the configuration and start the unsharded replicated
+    /// server.
+    pub fn build(self) -> Result<Server<T>, ServeError> {
+        let probe = self.factory.build();
+        if self.landmarks.len() != probe.landmarks() {
+            return Err(ServeError::BadInput {
+                reason: format!(
+                    "{} landmarks but the OSE method expects {}",
+                    self.landmarks.len(),
+                    probe.landmarks()
+                ),
+            });
         }
+        if let Some(h) = &self.drift {
+            let want = (probe.landmarks(), probe.dim());
+            let got = (h.landmark_config.rows, h.landmark_config.cols);
+            if got != want {
+                return Err(ServeError::BadInput {
+                    reason: format!(
+                        "drift hook landmark configuration is {}x{}, expected {}x{}",
+                        got.0, got.1, want.0, want.1
+                    ),
+                });
+            }
+        }
+        let cfg = self.batcher;
         let metrics = Arc::new(Metrics::new());
         let replicas = cfg.replicas.max(1);
         metrics.set_replicas(replicas);
-        let (tx, rx) = std::sync::mpsc::sync_channel::<WorkItem>(cfg.queue_cap);
+        let (tx, rx) = std::sync::mpsc::sync_channel::<WorkItem>(cfg.queue_cap.max(1));
         let rx = Arc::new(Mutex::new(rx));
         let pool = Arc::new(WorkerPool::new(cfg.frontend_threads));
-        let drift = drift.map(|h| {
-            Arc::new(DriftState {
-                landmark_config: h.landmark_config,
-                monitor: Mutex::new(DriftMonitor::new(h.cfg)),
-            })
-        });
+        let drift = self.drift.map(|h| Arc::new(DriftState::from_hook(h)));
+        let factory = self.factory;
 
         let mut first = Some(probe);
         let executors = (0..replicas)
@@ -222,13 +383,69 @@ impl<T: ?Sized + Send + Sync + 'static> Server<T> {
             .collect();
 
         let handle = ServerHandle {
-            landmarks: Arc::new(landmarks),
-            metric,
+            landmarks: Arc::new(self.landmarks),
+            metric: self.metric,
             pool: Arc::clone(&pool),
             tx,
             metrics,
         };
-        Server { handle: Some(handle), executors, _frontend: pool }
+        Ok(Server { handle: Some(handle), executors, _frontend: pool })
+    }
+}
+
+impl Server<str> {
+    /// Deprecated positional constructor for the string workload.
+    #[deprecated(since = "0.6.0", note = "use ServerBuilder::strings(...).build()")]
+    pub fn start_strings(
+        landmarks: Vec<String>,
+        metric: Arc<dyn Dissimilarity<str> + Send + Sync>,
+        factory: Arc<dyn OseMethodFactory>,
+        cfg: BatcherConfig,
+        drift: Option<DriftHook>,
+    ) -> Server<str> {
+        let mut b = ServerBuilder::strings(landmarks, metric, factory).batcher(cfg);
+        if let Some(h) = drift {
+            b = b.drift(h);
+        }
+        b.build().expect("invalid server configuration")
+    }
+}
+
+impl<T: ?Sized + Send + Sync + 'static> Server<T> {
+    /// Builder-style construction (see [`ServerBuilder`]). The method
+    /// instances come from `factory` (methods may hold a
+    /// [`crate::runtime::Backend`], which is Send).
+    pub fn builder(
+        landmarks: Vec<Box<T>>,
+        metric: Arc<dyn Dissimilarity<T> + Send + Sync>,
+        factory: Arc<dyn OseMethodFactory>,
+    ) -> ServerBuilder<T> {
+        ServerBuilder {
+            landmarks,
+            metric,
+            factory,
+            batcher: BatcherConfig::default(),
+            drift: None,
+            landmark_config: None,
+            shard_cfg: ShardConfig::default(),
+            backend: Backend::native(),
+        }
+    }
+
+    /// Deprecated positional constructor.
+    #[deprecated(since = "0.6.0", note = "use Server::builder(...).build()")]
+    pub fn start(
+        landmarks: Vec<Box<T>>,
+        metric: Arc<dyn Dissimilarity<T> + Send + Sync>,
+        factory: Arc<dyn OseMethodFactory>,
+        cfg: BatcherConfig,
+        drift: Option<DriftHook>,
+    ) -> Server<T> {
+        let mut b = Self::builder(landmarks, metric, factory).batcher(cfg);
+        if let Some(h) = drift {
+            b = b.drift(h);
+        }
+        b.build().expect("invalid server configuration")
     }
 
     /// A new client handle onto the running server.
@@ -257,20 +474,11 @@ impl<T: ?Sized + Send + Sync + 'static> Drop for Server<T> {
     }
 }
 
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
-    if let Some(s) = payload.downcast_ref::<&str>() {
-        s
-    } else if let Some(s) = payload.downcast_ref::<String>() {
-        s
-    } else {
-        "non-string panic payload"
-    }
-}
-
 /// One executor replica: form a batch from the shared queue, embed it, and
 /// reply — with `catch_unwind` fencing so a poisoned batch cannot take the
-/// replica (let alone the service) down.
-fn executor_loop(
+/// replica (let alone the service) down. Shared with the per-shard pools
+/// in [`super::shard`].
+pub(crate) fn executor_loop(
     rx: &Mutex<Receiver<WorkItem>>,
     mut method: Box<dyn OseMethod>,
     factory: &dyn OseMethodFactory,
@@ -326,16 +534,17 @@ fn executor_loop(
             items
         }; // lock released: embedding runs concurrently across replicas
 
-        // defensive depth check — query_delta validates at submission, so
-        // a mismatch here means a bug, but it must not poison the batch
+        // defensive depth check — submit validates at submission, so a
+        // mismatch here means a bug, but it must not poison the batch
         let (items, bad): (Vec<_>, Vec<_>) =
             items.into_iter().partition(|it| it.delta.len() == l);
         for item in bad {
             metrics.record_failed();
-            let _ = item.reply.send(Err(format!(
+            let reason = format!(
                 "delta row has {} entries, expected {l}",
                 item.delta.len()
-            )));
+            );
+            (item.reply)(Err(ServeError::BadInput { reason }));
         }
         if items.is_empty() {
             continue;
@@ -353,56 +562,63 @@ fn executor_loop(
             // a mis-shaped result would panic row() below, OUTSIDE the
             // unwind fence — demote it to a clean batch failure instead
             Ok(Ok(coords)) if coords.rows != items.len() || coords.cols != k => {
-                let msg = format!(
+                let reason = format!(
                     "embed returned {}x{}, expected {}x{k}",
                     coords.rows,
                     coords.cols,
                     items.len()
                 );
-                log::error!("{msg}");
+                log::error!("{reason}");
                 for item in items {
                     metrics.record_failed();
-                    let _ = item.reply.send(Err(msg.clone()));
+                    (item.reply)(Err(ServeError::Internal { reason: reason.clone() }));
                 }
             }
             Ok(Ok(coords)) => {
                 metrics.record_batch(items.len(), t0.elapsed());
                 // reply FIRST: drift scoring is observability, and must not
                 // sit on the callers' latency path
-                for (r, item) in items.iter().enumerate() {
+                let mut served_deltas = Vec::new();
+                for (r, item) in items.into_iter().enumerate() {
                     let latency = item.started.elapsed();
                     metrics.record_completed(latency);
-                    let _ = item.reply.send(Ok(QueryResult {
+                    (item.reply)(Ok(QueryResult {
                         coords: coords.row(r).to_vec(),
                         latency,
+                        degraded: false,
                     }));
+                    if drift.is_some() {
+                        served_deltas.push(item.delta);
+                    }
                 }
                 if let Some(ds) = drift {
-                    feed_drift(ds, &items, &coords, metrics);
+                    feed_drift(ds, &served_deltas, &coords, metrics);
                 }
             }
             Ok(Err(e)) => {
                 // clean error from the method: the batch fails, the replica
                 // state is intact — no restart needed
-                let msg = format!("embed failed: {e:#}");
-                log::error!("{msg}");
+                let reason = format!("embed failed: {e:#}");
+                log::error!("{reason}");
                 for item in items {
                     metrics.record_failed();
-                    let _ = item.reply.send(Err(msg.clone()));
+                    (item.reply)(Err(ServeError::Internal { reason: reason.clone() }));
                 }
             }
             Err(payload) => {
                 // panic: fail THIS batch only, then rebuild the replica
                 // from the factory — mid-batch state may be corrupt
-                let msg = format!(
-                    "embed panicked: {} (batch failed, replica restarted)",
+                let reason = format!(
+                    "{} (batch failed, replica restarted)",
                     panic_message(payload.as_ref())
                 );
-                log::error!("{msg}");
+                log::error!("embed panicked: {reason}");
                 metrics.record_panic();
                 for item in items {
                     metrics.record_failed();
-                    let _ = item.reply.send(Err(msg.clone()));
+                    (item.reply)(Err(ServeError::ReplicaPanic {
+                        reason: reason.clone(),
+                    }));
                 }
                 method = factory.build();
                 metrics.record_replica_restart();
@@ -416,12 +632,17 @@ fn executor_loop(
 /// Non-finite scores (NaN deltas or diverged coordinates) are dropped:
 /// they carry no drift signal, and a NaN would panic the monitor's median
 /// sort OUTSIDE the executor's unwind fence.
-fn feed_drift(ds: &DriftState, items: &[WorkItem], coords: &Matrix, metrics: &Metrics) {
-    let scores: Vec<f64> = items
+pub(crate) fn feed_drift(
+    ds: &DriftState,
+    deltas: &[Vec<f32>],
+    coords: &Matrix,
+    metrics: &Metrics,
+) {
+    let scores: Vec<f64> = deltas
         .iter()
         .enumerate()
-        .map(|(r, item)| {
-            DriftMonitor::score(&ds.landmark_config, &item.delta, coords.row(r))
+        .map(|(r, delta)| {
+            DriftMonitor::score(&ds.landmark_config, delta, coords.row(r))
         })
         .filter(|s| s.is_finite())
         .collect();
@@ -439,77 +660,114 @@ fn feed_drift(ds: &DriftState, items: &[WorkItem], coords: &Matrix, metrics: &Me
 }
 
 impl<T: ?Sized + Send + Sync + 'static> ServerHandle<T> {
-    /// Async query: returns a receiver that yields the result. Accepts any
-    /// owned form of the object (`String`/`&str` for `T = str`,
-    /// `Vec<f32>`/`&[f32]` for `T = [f32]`, ...).
-    pub fn query<O: Into<Box<T>>>(&self, obj: O) -> Receiver<Result<QueryResult, String>> {
-        let obj: Box<T> = obj.into();
+    /// Submit a query; the result arrives on the returned [`Ticket`].
+    /// This is THE query surface — object and delta requests, async and
+    /// blocking consumption, all flow through here.
+    pub fn submit(&self, req: Request<T>) -> Ticket {
         let (reply, rx) = channel();
-        let started = Instant::now();
-        self.metrics.record_request();
-        let landmarks = Arc::clone(&self.landmarks);
-        let metric = Arc::clone(&self.metric);
-        let tx = self.tx.clone();
-        let metrics = Arc::clone(&self.metrics);
-        self.pool.submit(move || {
-            let t0 = Instant::now();
-            let delta: Vec<f32> = landmarks
-                .iter()
-                .map(|lm| metric.dist(&obj, lm) as f32)
-                .collect();
-            metrics.record_dist(t0.elapsed());
-            let item = WorkItem { delta, started, reply };
-            // backpressure: block if the queue is full
-            if let Err(e) = tx.send(item) {
-                let WorkItem { reply, .. } = e.0;
-                metrics.record_failed();
-                let _ = reply.send(Err("server shutting down".into()));
-            }
-        });
-        rx
+        self.submit_sink(
+            req,
+            Box::new(move |r| {
+                let _ = reply.send(r);
+            }),
+        );
+        Ticket::new(rx)
     }
 
-    /// Query with a precomputed distance row (bypasses the frontend).
-    /// Rejects wrong-length rows at submission — a mis-sized row used to
-    /// panic `copy_from_slice` inside the batcher and kill the service.
+    /// Submit a query with a completion callback instead of a ticket: the
+    /// sink is invoked exactly once from a server thread. Invalid
+    /// requests invoke it immediately (still exactly once), so callers
+    /// have a single error surface.
+    pub fn submit_sink(&self, req: Request<T>, sink: ReplySink) {
+        self.metrics.record_request();
+        match req {
+            Request::Delta(delta) => {
+                if delta.len() != self.landmarks.len() {
+                    self.metrics.record_failed();
+                    let reason = format!(
+                        "delta row has {} entries, expected {} (one per landmark)",
+                        delta.len(),
+                        self.landmarks.len()
+                    );
+                    sink(Err(ServeError::BadInput { reason }));
+                    return;
+                }
+                let item = WorkItem { delta, started: Instant::now(), reply: sink };
+                match self.tx.try_send(item) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(item)) => {
+                        // blocking fallback under overload; the executors
+                        // can still vanish mid-wait, so the disconnect path
+                        // mirrors below
+                        if let Err(e) = self.tx.send(item) {
+                            let WorkItem { reply, .. } = e.0;
+                            self.metrics.record_failed();
+                            reply(Err(ServeError::Shutdown));
+                        }
+                    }
+                    Err(TrySendError::Disconnected(item)) => {
+                        self.metrics.record_failed();
+                        (item.reply)(Err(ServeError::Shutdown));
+                    }
+                }
+            }
+            Request::Object(obj) => {
+                let landmarks = Arc::clone(&self.landmarks);
+                let metric = Arc::clone(&self.metric);
+                let tx = self.tx.clone();
+                let metrics = Arc::clone(&self.metrics);
+                let started = Instant::now();
+                self.pool.submit(move || {
+                    let t0 = Instant::now();
+                    let delta: Vec<f32> = landmarks
+                        .iter()
+                        .map(|lm| metric.dist(&obj, lm) as f32)
+                        .collect();
+                    metrics.record_dist(t0.elapsed());
+                    let item = WorkItem { delta, started, reply: sink };
+                    // backpressure: block if the queue is full
+                    if let Err(e) = tx.send(item) {
+                        let WorkItem { reply, .. } = e.0;
+                        metrics.record_failed();
+                        reply(Err(ServeError::Shutdown));
+                    }
+                });
+            }
+        }
+    }
+
+    /// Deprecated async object query.
+    #[deprecated(since = "0.6.0", note = "use submit(Request::object(..))")]
+    pub fn query<O: Into<Box<T>>>(
+        &self,
+        obj: O,
+    ) -> Receiver<Result<QueryResult, ServeError>> {
+        self.submit(Request::object(obj)).into_receiver()
+    }
+
+    /// Deprecated delta-row query. Rejects wrong-length rows
+    /// synchronously, like the pre-PR-6 API did.
+    #[deprecated(since = "0.6.0", note = "use submit(Request::delta(..))")]
     pub fn query_delta(
         &self,
         delta: Vec<f32>,
-    ) -> Result<Receiver<Result<QueryResult, String>>, String> {
+    ) -> Result<Receiver<Result<QueryResult, ServeError>>, ServeError> {
         if delta.len() != self.landmarks.len() {
-            return Err(format!(
-                "delta row has {} entries, expected {} (one per landmark)",
-                delta.len(),
-                self.landmarks.len()
-            ));
+            return Err(ServeError::BadInput {
+                reason: format!(
+                    "delta row has {} entries, expected {} (one per landmark)",
+                    delta.len(),
+                    self.landmarks.len()
+                ),
+            });
         }
-        let (reply, rx) = channel();
-        self.metrics.record_request();
-        let item = WorkItem { delta, started: Instant::now(), reply };
-        match self.tx.try_send(item) {
-            Ok(()) => {}
-            Err(TrySendError::Full(item)) => {
-                // blocking fallback under overload; the executors can still
-                // vanish mid-wait, so the disconnect path mirrors below
-                if let Err(e) = self.tx.send(item) {
-                    let WorkItem { reply, .. } = e.0;
-                    self.metrics.record_failed();
-                    let _ = reply.send(Err("server shutting down".into()));
-                }
-            }
-            Err(TrySendError::Disconnected(item)) => {
-                self.metrics.record_failed();
-                let _ = item.reply.send(Err("server shutting down".into()));
-            }
-        }
-        Ok(rx)
+        Ok(self.submit(Request::Delta(delta)).into_receiver())
     }
 
-    /// Blocking query.
-    pub fn query_sync<O: Into<Box<T>>>(&self, obj: O) -> Result<QueryResult, String> {
-        self.query(obj)
-            .recv()
-            .map_err(|_| "server dropped the request".to_string())?
+    /// Deprecated blocking object query.
+    #[deprecated(since = "0.6.0", note = "use submit(Request::object(..)).recv()")]
+    pub fn query_sync<O: Into<Box<T>>>(&self, obj: O) -> Result<QueryResult, ServeError> {
+        self.submit(Request::object(obj)).recv()
     }
 
     /// The landmark objects this server measures queries against.
@@ -537,33 +795,35 @@ mod tests {
     fn tiny_server(max_batch: usize, delay_ms: u64, replicas: usize) -> Server<str> {
         let landmarks: Vec<String> =
             (0..16).map(|i| format!("landmark{i:02}")).collect();
-        Server::start_strings(
+        ServerBuilder::strings(
             landmarks,
             Arc::new(crate::strdist::Levenshtein),
             tiny_factory(),
-            BatcherConfig {
-                max_batch,
-                max_delay: Duration::from_millis(delay_ms),
-                queue_cap: 128,
-                frontend_threads: 2,
-                replicas,
-            },
-            None,
         )
+        .batcher(BatcherConfig {
+            max_batch,
+            max_delay: Duration::from_millis(delay_ms),
+            queue_cap: 128,
+            frontend_threads: 2,
+            replicas,
+        })
+        .build()
+        .unwrap()
     }
 
     #[test]
     fn serves_queries_end_to_end() {
         let server = tiny_server(8, 2, 1);
         let h = server.handle();
-        let mut rxs = Vec::new();
+        let mut tickets = Vec::new();
         for i in 0..40 {
-            rxs.push(h.query(format!("query name {i}")));
+            tickets.push(h.submit(Request::object(format!("query name {i}"))));
         }
-        for rx in rxs {
-            let r = rx.recv().unwrap().unwrap();
+        for t in tickets {
+            let r = t.recv().unwrap();
             assert_eq!(r.coords.len(), 3);
             assert!(r.coords.iter().all(|c| c.is_finite()));
+            assert!(!r.degraded, "unsharded path never degrades");
         }
         let snap = h.metrics.snapshot();
         assert_eq!(snap.completed, 40);
@@ -577,13 +837,13 @@ mod tests {
     fn replicated_pool_serves_everything_exactly_once() {
         let server = tiny_server(8, 1, 4);
         let h = server.handle();
-        let rxs: Vec<_> = (0..200)
-            .map(|i| h.query(format!("replicated query {i}")))
+        let tickets: Vec<_> = (0..200)
+            .map(|i| h.submit(Request::object(format!("replicated query {i}"))))
             .collect();
-        for rx in rxs {
-            let r = rx.recv().unwrap().unwrap();
+        for t in tickets {
+            let r = t.recv().unwrap();
             assert_eq!(r.coords.len(), 3);
-            assert!(rx.try_recv().is_err(), "duplicate reply");
+            assert!(t.try_recv().is_none(), "duplicate reply");
         }
         let snap = h.metrics.snapshot();
         assert_eq!(snap.completed, 200);
@@ -600,11 +860,10 @@ mod tests {
         // (the max_delay deadline), not wait for max_batch peers
         let server = tiny_server(64, 5, 1);
         let h = server.handle();
-        let rx = h.query("solo query");
-        let r = rx
+        let t = h.submit(Request::object("solo query"));
+        let r = t
             .recv_timeout(Duration::from_secs(30))
-            .expect("lone query must be dispatched by the deadline")
-            .unwrap();
+            .expect("lone query must be dispatched by the deadline");
         assert_eq!(r.coords.len(), 3);
         let snap = h.metrics.snapshot();
         assert_eq!(snap.completed, 1);
@@ -622,11 +881,11 @@ mod tests {
     fn batching_actually_batches() {
         let server = tiny_server(32, 20, 1);
         let h = server.handle();
-        let rxs: Vec<_> = (0..64)
-            .map(|_| h.query_delta(vec![1.0; 16]).unwrap())
+        let tickets: Vec<_> = (0..64)
+            .map(|_| h.submit(Request::delta(vec![1.0; 16])))
             .collect();
-        for rx in rxs {
-            rx.recv().unwrap().unwrap();
+        for t in tickets {
+            t.recv().unwrap();
         }
         let snap = h.metrics.snapshot();
         assert!(
@@ -639,19 +898,38 @@ mod tests {
     }
 
     #[test]
-    fn query_delta_rejects_wrong_length_at_submission() {
+    fn submit_rejects_wrong_length_delta() {
         let server = tiny_server(8, 2, 2);
         let h = server.handle();
-        // too short and too long both fail fast instead of panicking the
-        // executor via copy_from_slice
-        assert!(h.query_delta(vec![1.0; 3]).is_err());
-        assert!(h.query_delta(vec![1.0; 17]).is_err());
-        assert!(h.query_delta(vec![]).is_err());
+        // too short and too long both fail fast with a typed BadInput
+        // instead of panicking the executor via copy_from_slice
+        for bad in [vec![1.0; 3], vec![1.0; 17], vec![]] {
+            let r = h.submit(Request::delta(bad)).recv();
+            assert!(matches!(r, Err(ServeError::BadInput { .. })), "{r:?}");
+        }
         // the service is still healthy afterwards
-        let ok = h.query_delta(vec![1.0; 16]).unwrap();
-        assert!(ok.recv().unwrap().is_ok());
+        let ok = h.submit(Request::delta(vec![1.0; 16])).recv();
+        assert!(ok.is_ok());
         let snap = h.metrics.snapshot();
         assert_eq!(snap.completed, 1);
+        assert_eq!(snap.failed, 3);
+        drop(h);
+        server.shutdown();
+    }
+
+    #[test]
+    fn submit_sink_delivers_without_a_waiting_thread() {
+        let server = tiny_server(8, 1, 1);
+        let h = server.handle();
+        let (tx, rx) = channel();
+        h.submit_sink(
+            Request::object("sink query"),
+            Box::new(move |r| {
+                tx.send(r).unwrap();
+            }),
+        );
+        let r = rx.recv().unwrap().unwrap();
+        assert_eq!(r.coords.len(), 3);
         drop(h);
         server.shutdown();
     }
@@ -661,14 +939,58 @@ mod tests {
         // two very different queries must not get each other's coordinates
         let server = tiny_server(2, 50, 1);
         let h = server.handle();
-        let rx_a = h.query("aaaaaaaaaaaaaaaa");
-        let rx_b = h.query("zz");
-        let a = rx_a.recv().unwrap().unwrap();
-        let b = rx_b.recv().unwrap().unwrap();
+        let t_a = h.submit(Request::object("aaaaaaaaaaaaaaaa"));
+        let t_b = h.submit(Request::object("zz"));
+        let a = t_a.recv().unwrap();
+        let b = t_b.recv().unwrap();
         // deterministic MLP: same input -> same output; check self-consistency
-        let a2 = h.query_sync("aaaaaaaaaaaaaaaa").unwrap();
+        let a2 = h.submit(Request::object("aaaaaaaaaaaaaaaa")).recv_sync().unwrap();
         assert_eq!(a.coords, a2.coords);
         assert_ne!(a.coords, b.coords);
+        drop(h);
+        server.shutdown();
+    }
+
+    #[test]
+    fn builder_rejects_bad_configurations() {
+        let landmarks: Vec<String> =
+            (0..10).map(|i| format!("short{i}")).collect(); // != 16
+        let r = ServerBuilder::strings(
+            landmarks,
+            Arc::new(crate::strdist::Levenshtein),
+            tiny_factory(),
+        )
+        .build();
+        assert!(matches!(r, Err(ServeError::BadInput { .. })), "{r:?}");
+
+        let landmarks: Vec<String> =
+            (0..16).map(|i| format!("landmark{i:02}")).collect();
+        let r = ServerBuilder::strings(
+            landmarks,
+            Arc::new(crate::strdist::Levenshtein),
+            tiny_factory(),
+        )
+        .drift(DriftHook {
+            landmark_config: Matrix::zeros(4, 4), // wrong shape (want 16x3)
+            cfg: DriftConfig::default(),
+        })
+        .build();
+        assert!(matches!(r, Err(ServeError::BadInput { .. })), "{r:?}");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_serve() {
+        // the pre-PR-6 call shapes must keep compiling and answering
+        // through the transition
+        let server = tiny_server(8, 2, 1);
+        let h = server.handle();
+        let rx = h.query("legacy query");
+        assert!(rx.recv().unwrap().is_ok());
+        assert!(h.query_delta(vec![1.0; 3]).is_err());
+        let rx = h.query_delta(vec![1.0; 16]).unwrap();
+        assert!(rx.recv().unwrap().is_ok());
+        assert!(h.query_sync("legacy sync").is_ok());
         drop(h);
         server.shutdown();
     }
@@ -678,22 +1000,24 @@ mod tests {
         let mut rng = Rng::new(5);
         let landmarks: Vec<String> =
             (0..16).map(|i| format!("landmark{i:02}")).collect();
-        let server = Server::start_strings(
+        let server = ServerBuilder::strings(
             landmarks,
             Arc::new(crate::strdist::Levenshtein),
             tiny_factory(),
-            BatcherConfig { replicas: 2, ..Default::default() },
-            Some(DriftHook {
-                landmark_config: Matrix::random_normal(&mut rng, 16, 3, 1.0),
-                cfg: DriftConfig { window: 8, calibration: 8, degrade_factor: 1e9 },
-            }),
-        );
+        )
+        .batcher(BatcherConfig { replicas: 2, ..Default::default() })
+        .drift(DriftHook {
+            landmark_config: Matrix::random_normal(&mut rng, 16, 3, 1.0),
+            cfg: DriftConfig { window: 8, calibration: 8, degrade_factor: 1e9 },
+        })
+        .build()
+        .unwrap();
         let h = server.handle();
-        let rxs: Vec<_> = (0..40)
-            .map(|i| h.query(format!("drift query {i}")))
+        let tickets: Vec<_> = (0..40)
+            .map(|i| h.submit(Request::object(format!("drift query {i}"))))
             .collect();
-        for rx in rxs {
-            rx.recv().unwrap().unwrap();
+        for t in tickets {
+            t.recv().unwrap();
         }
         assert_eq!(h.metrics.snapshot().completed, 40);
         // calibration (8) + half-window fill done after 40 queries; an

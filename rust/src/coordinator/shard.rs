@@ -1,0 +1,512 @@
+//! Sharded serving: partition the landmark set across S shards, each
+//! owning one block of the divide solve ([`partition_blocks`] — shared
+//! FPS anchors plus a contiguous chunk, exactly the plan
+//! `mds::divide` stitches with), and route every query across them:
+//!
+//! ```text
+//!  clients --submit--> [frontend pool: full delta row]
+//!      --sub-rows--> [shard 0: replicas over block-0 landmarks]
+//!                    [shard 1: replicas over block-1 landmarks]  ...
+//!      --partials--> [quorum reduce: landmark-weighted mean]
+//!      --coords (degraded flag when a shard missed)--> reply sink
+//! ```
+//!
+//! Each shard runs its own replicated executor pool (the same
+//! `executor_loop` as the unsharded server) over a [`BackendOpt`] method
+//! anchored to the shard's slice of the landmark configuration. Because
+//! every block of the divide solve already lives in the global stitched
+//! frame, the per-shard partial solutions are estimates of the same
+//! coordinates and reduce by a weighted mean — no per-query Procrustes.
+//!
+//! Graceful degradation: the router waits `shard_timeout` for the shard
+//! partials. If at least `quorum` arrive the query succeeds — flagged
+//! [`QueryResult::degraded`] when any shard missed — otherwise it fails
+//! with [`ServeError::ShardUnavailable`]. A dead shard (see
+//! [`ShardedHandle::stop_shard`]) therefore costs accuracy, not
+//! availability.
+//!
+//! Scope: sharding is for the *optimisation* OSE, whose objective
+//! decomposes over landmarks. The NN OSE needs the full L-length delta
+//! row as MLP input and cannot decompose, so a sharded build always uses
+//! [`BackendOpt`] over the landmark configuration (the builder's factory
+//! is only used by the unsharded path).
+
+use std::sync::mpsc::{channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::mds::divide::{partition_blocks, DivideConfig, PointsDelta};
+use crate::strdist::Dissimilarity;
+use crate::util::threadpool::WorkerPool;
+
+use super::error::ServeError;
+use super::methods::BackendOpt;
+use super::metrics::{Metrics, Snapshot};
+use super::server::{
+    executor_loop, feed_drift, DriftState, QueryResult, ReplySink, Request,
+    ServerBuilder, Ticket, WorkItem,
+};
+
+/// Shard plan: how many shards, how they share anchors, and how the
+/// router behaves when shards are slow or dead.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// Number of shards S (0 and 1 both mean a single shard).
+    pub shards: usize,
+    /// Shared anchor count per shard; 0 picks
+    /// [`crate::mds::divide::auto_anchors`].
+    pub anchors: usize,
+    /// Executor replicas per shard.
+    pub replicas_per_shard: usize,
+    /// Minimum shard partials for a successful reduce; 0 = majority
+    /// (S/2 + 1).
+    pub quorum: usize,
+    /// How long the router waits for shard partials before treating the
+    /// stragglers as failed.
+    pub shard_timeout: Duration,
+    /// Partition seed (anchor FPS); deterministic plans per seed.
+    pub seed: u64,
+    /// Majorization budget per shard solve; 0 = the serving default
+    /// (200 steps with early stopping).
+    pub opt_steps: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        Self {
+            shards: 1,
+            anchors: 0,
+            replicas_per_shard: 1,
+            quorum: 0,
+            shard_timeout: Duration::from_secs(5),
+            seed: 42,
+            opt_steps: 0,
+        }
+    }
+}
+
+struct ShardSlot {
+    /// Global landmark indices this shard owns (anchors first).
+    idx: Vec<usize>,
+    /// Reduce weight: the landmark count backing this shard's estimate.
+    weight: f64,
+    /// Dispatch queue sender; `None` once the shard is stopped.
+    tx: Mutex<Option<SyncSender<WorkItem>>>,
+    /// Per-shard serving counters (separate from the router's, so shard
+    /// fan-out does not inflate the global request/batch counts).
+    metrics: Arc<Metrics>,
+}
+
+impl ShardSlot {
+    fn take_tx(&self) -> Option<SyncSender<WorkItem>> {
+        match self.tx.lock() {
+            Ok(mut g) => g.take(),
+            Err(poisoned) => poisoned.into_inner().take(),
+        }
+    }
+}
+
+/// The sharded OSE serving coordinator.
+///
+/// Shutdown joins the per-shard executor pools after withdrawing every
+/// dispatch queue; caller handles must be dropped first or queries
+/// submitted during teardown simply fail with
+/// [`ServeError::ShardUnavailable`].
+pub struct ShardedServer<T: ?Sized + Send + Sync + 'static> {
+    handle: Option<ShardedHandle<T>>,
+    slots: Arc<Vec<ShardSlot>>,
+    executors: Vec<JoinHandle<()>>,
+    _frontend: Arc<WorkerPool>,
+}
+
+/// Cheap-to-clone client handle onto a [`ShardedServer`]: same submit
+/// surface as the unsharded [`super::ServerHandle`].
+pub struct ShardedHandle<T: ?Sized + Send + Sync + 'static> {
+    landmarks: Arc<Vec<Box<T>>>,
+    metric: Arc<dyn Dissimilarity<T> + Send + Sync>,
+    pool: Arc<WorkerPool>,
+    slots: Arc<Vec<ShardSlot>>,
+    drift: Option<Arc<DriftState>>,
+    dim: usize,
+    quorum: usize,
+    timeout: Duration,
+    /// Router-level serving counters (live; see [`Metrics::snapshot`]).
+    pub metrics: Arc<Metrics>,
+}
+
+impl<T: ?Sized + Send + Sync + 'static> Clone for ShardedHandle<T> {
+    fn clone(&self) -> Self {
+        Self {
+            landmarks: Arc::clone(&self.landmarks),
+            metric: Arc::clone(&self.metric),
+            pool: Arc::clone(&self.pool),
+            slots: Arc::clone(&self.slots),
+            drift: self.drift.clone(),
+            dim: self.dim,
+            quorum: self.quorum,
+            timeout: self.timeout,
+            metrics: Arc::clone(&self.metrics),
+        }
+    }
+}
+
+impl<T: ?Sized + Send + Sync + 'static> ServerBuilder<T> {
+    /// Validate the configuration and start the sharded server. Requires
+    /// [`Self::landmark_config`]; the per-shard solvers are
+    /// [`BackendOpt`] methods over its block slices, running on the
+    /// builder's backend.
+    pub fn build_sharded(self) -> Result<ShardedServer<T>, ServeError> {
+        let config = match self.landmark_config {
+            Some(c) => c,
+            None => {
+                return Err(ServeError::BadInput {
+                    reason: "build_sharded requires landmark_config (L x K)".into(),
+                })
+            }
+        };
+        let l = self.landmarks.len();
+        if config.rows != l || config.cols == 0 {
+            return Err(ServeError::BadInput {
+                reason: format!(
+                    "landmark_config is {}x{}, expected {l} rows and K >= 1",
+                    config.rows, config.cols
+                ),
+            });
+        }
+        if l == 0 {
+            return Err(ServeError::BadInput {
+                reason: "cannot shard an empty landmark set".into(),
+            });
+        }
+        let k = config.cols;
+        if let Some(h) = &self.drift {
+            if (h.landmark_config.rows, h.landmark_config.cols) != (l, k) {
+                return Err(ServeError::BadInput {
+                    reason: format!(
+                        "drift hook landmark configuration is {}x{}, expected {l}x{k}",
+                        h.landmark_config.rows, h.landmark_config.cols
+                    ),
+                });
+            }
+        }
+
+        let scfg = self.shard_cfg;
+        let shards = scfg.shards.max(1);
+        let part = partition_blocks(
+            &PointsDelta { points: &config },
+            k,
+            &DivideConfig { blocks: shards, anchors: scfg.anchors },
+            scfg.seed,
+        );
+        let s_eff = part.blocks();
+        let quorum = match scfg.quorum {
+            0 => s_eff / 2 + 1,
+            q => q.min(s_eff),
+        };
+        let replicas = scfg.replicas_per_shard.max(1);
+        let bcfg = self.batcher;
+
+        let metrics = Arc::new(Metrics::new());
+        metrics.set_shards(s_eff);
+        metrics.set_replicas(s_eff * replicas);
+
+        let mut slots = Vec::with_capacity(s_eff);
+        let mut executors = Vec::with_capacity(s_eff * replicas);
+        for (s, idx) in part.block_idx.iter().enumerate() {
+            let sub = config.select_rows(idx);
+            let factory = match scfg.opt_steps {
+                0 => BackendOpt::replica_factory(self.backend.clone(), sub),
+                steps => BackendOpt::replica_factory_budget(
+                    self.backend.clone(),
+                    sub,
+                    steps,
+                ),
+            };
+            let (tx, rx) =
+                std::sync::mpsc::sync_channel::<WorkItem>(bcfg.queue_cap.max(1));
+            let rx = Arc::new(Mutex::new(rx));
+            let shard_metrics = Arc::new(Metrics::new());
+            shard_metrics.set_replicas(replicas);
+            for r in 0..replicas {
+                let method = factory.build();
+                let rx = Arc::clone(&rx);
+                let factory = Arc::clone(&factory);
+                let shard_metrics = Arc::clone(&shard_metrics);
+                let ecfg = bcfg.clone();
+                let t = std::thread::Builder::new()
+                    .name(format!("ose-shard-{s}-{r}"))
+                    .spawn(move || {
+                        executor_loop(
+                            &rx,
+                            method,
+                            factory.as_ref(),
+                            &ecfg,
+                            &shard_metrics,
+                            None,
+                        )
+                    })
+                    .expect("spawning shard executor");
+                executors.push(t);
+            }
+            slots.push(ShardSlot {
+                idx: idx.clone(),
+                weight: idx.len() as f64,
+                tx: Mutex::new(Some(tx)),
+                metrics: shard_metrics,
+            });
+        }
+
+        let slots = Arc::new(slots);
+        let pool = Arc::new(WorkerPool::new(bcfg.frontend_threads));
+        let handle = ShardedHandle {
+            landmarks: Arc::new(self.landmarks),
+            metric: self.metric,
+            pool: Arc::clone(&pool),
+            slots: Arc::clone(&slots),
+            drift: self.drift.map(|h| Arc::new(DriftState::from_hook(h))),
+            dim: k,
+            quorum,
+            timeout: scfg.shard_timeout,
+            metrics,
+        };
+        Ok(ShardedServer {
+            handle: Some(handle),
+            slots,
+            executors,
+            _frontend: pool,
+        })
+    }
+}
+
+impl<T: ?Sized + Send + Sync + 'static> ShardedServer<T> {
+    /// A new client handle onto the running sharded server.
+    pub fn handle(&self) -> ShardedHandle<T> {
+        self.handle.clone().expect("server already shut down")
+    }
+
+    /// Graceful shutdown: withdraws every shard queue, then joins the
+    /// executor pools. In-flight queries drain; late submissions fail
+    /// with [`ServeError::ShardUnavailable`].
+    pub fn shutdown(mut self) {
+        self.join_inner();
+    }
+
+    fn join_inner(&mut self) {
+        self.handle.take();
+        for slot in self.slots.iter() {
+            slot.take_tx();
+        }
+        for h in self.executors.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<T: ?Sized + Send + Sync + 'static> Drop for ShardedServer<T> {
+    fn drop(&mut self) {
+        self.join_inner();
+    }
+}
+
+impl<T: ?Sized + Send + Sync + 'static> ShardedHandle<T> {
+    /// Submit a query; the result arrives on the returned [`Ticket`].
+    pub fn submit(&self, req: Request<T>) -> Ticket {
+        let (reply, rx) = channel();
+        self.submit_sink(
+            req,
+            Box::new(move |r| {
+                let _ = reply.send(r);
+            }),
+        );
+        Ticket::new(rx)
+    }
+
+    /// Submit a query with a completion callback (see
+    /// [`super::ServerHandle::submit_sink`]): invoked exactly once from a
+    /// router thread after the quorum reduce settles.
+    pub fn submit_sink(&self, req: Request<T>, sink: ReplySink) {
+        self.metrics.record_request();
+        let started = Instant::now();
+        match req {
+            Request::Delta(delta) => {
+                if delta.len() != self.landmarks.len() {
+                    self.metrics.record_failed();
+                    let reason = format!(
+                        "delta row has {} entries, expected {} (one per landmark)",
+                        delta.len(),
+                        self.landmarks.len()
+                    );
+                    sink(Err(ServeError::BadInput { reason }));
+                    return;
+                }
+                let router = self.router_state();
+                self.pool.submit(move || {
+                    route_and_reduce(&router, delta, started, sink);
+                });
+            }
+            Request::Object(obj) => {
+                let landmarks = Arc::clone(&self.landmarks);
+                let metric = Arc::clone(&self.metric);
+                let metrics = Arc::clone(&self.metrics);
+                let router = self.router_state();
+                self.pool.submit(move || {
+                    let t0 = Instant::now();
+                    let delta: Vec<f32> = landmarks
+                        .iter()
+                        .map(|lm| metric.dist(&obj, lm) as f32)
+                        .collect();
+                    metrics.record_dist(t0.elapsed());
+                    route_and_reduce(&router, delta, started, sink);
+                });
+            }
+        }
+    }
+
+    /// Stop one shard's dispatch queue (the chaos/maintenance hook): its
+    /// executors drain and exit, and subsequent queries reduce without it
+    /// — degraded while the quorum holds. Returns false when the shard
+    /// index is out of range or already stopped.
+    pub fn stop_shard(&self, shard: usize) -> bool {
+        match self.slots.get(shard) {
+            Some(slot) => slot.take_tx().is_some(),
+            None => false,
+        }
+    }
+
+    /// Number of shards in the plan.
+    pub fn shards(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The landmark indices shard `s` owns (anchors first).
+    pub fn shard_landmarks(&self, s: usize) -> Option<&[usize]> {
+        self.slots.get(s).map(|slot| slot.idx.as_slice())
+    }
+
+    /// Per-shard metric snapshots (executor-pool view: batches, latency,
+    /// panics — the router's own counters live on [`Self::metrics`]).
+    pub fn shard_snapshots(&self) -> Vec<Snapshot> {
+        self.slots.iter().map(|s| s.metrics.snapshot()).collect()
+    }
+
+    /// The landmark objects this server measures queries against.
+    pub fn landmark_objects(&self) -> &[Box<T>] {
+        &self.landmarks
+    }
+
+    fn router_state(&self) -> RouterState {
+        RouterState {
+            slots: Arc::clone(&self.slots),
+            metrics: Arc::clone(&self.metrics),
+            drift: self.drift.clone(),
+            dim: self.dim,
+            quorum: self.quorum,
+            timeout: self.timeout,
+        }
+    }
+}
+
+/// Everything the fan-out/reduce path needs, detached from `T` so the
+/// router closure stays object-free.
+struct RouterState {
+    slots: Arc<Vec<ShardSlot>>,
+    metrics: Arc<Metrics>,
+    drift: Option<Arc<DriftState>>,
+    dim: usize,
+    quorum: usize,
+    timeout: Duration,
+}
+
+/// Fan a full delta row out to every live shard, collect partials until
+/// the deadline, and reduce. Runs on a frontend pool thread; the reply
+/// sink fires exactly once.
+fn route_and_reduce(rs: &RouterState, delta: Vec<f32>, started: Instant, sink: ReplySink) {
+    let s_count = rs.slots.len();
+    let mut pending: Vec<(usize, Receiver<Result<QueryResult, ServeError>>)> =
+        Vec::with_capacity(s_count);
+    let mut failures: Vec<(usize, ServeError)> = Vec::new();
+    for (s, slot) in rs.slots.iter().enumerate() {
+        let sub: Vec<f32> = slot.idx.iter().map(|&i| delta[i]).collect();
+        let (rtx, rrx) = channel();
+        let item = WorkItem {
+            delta: sub,
+            started,
+            reply: Box::new(move |r| {
+                let _ = rtx.send(r);
+            }),
+        };
+        // Dispatch must never block the router: a full or withdrawn queue
+        // counts as a shard failure for THIS query and the quorum decides.
+        let outcome = {
+            let guard = match slot.tx.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            match guard.as_ref() {
+                Some(tx) => tx.try_send(item).map_err(|e| match e {
+                    TrySendError::Full(_) => ServeError::Overloaded,
+                    TrySendError::Disconnected(_) => ServeError::Shutdown,
+                }),
+                None => Err(ServeError::Shutdown),
+            }
+        };
+        match outcome {
+            Ok(()) => {
+                slot.metrics.record_request();
+                pending.push((s, rrx));
+            }
+            Err(e) => failures.push((s, e)),
+        }
+    }
+
+    let deadline = Instant::now() + rs.timeout;
+    let mut partials: Vec<(usize, Vec<f32>)> = Vec::with_capacity(pending.len());
+    for (s, rrx) in pending {
+        let remain = deadline.saturating_duration_since(Instant::now());
+        match rrx.recv_timeout(remain) {
+            Ok(Ok(qr)) => partials.push((s, qr.coords)),
+            Ok(Err(e)) => failures.push((s, e)),
+            Err(_) => failures.push((s, ServeError::Timeout)),
+        }
+    }
+    for _ in &failures {
+        rs.metrics.record_shard_failure();
+    }
+
+    if partials.len() >= rs.quorum && !partials.is_empty() {
+        // landmark-count-weighted mean: a shard's estimate is as
+        // constrained as the number of distances behind it
+        let mut acc = vec![0.0f64; rs.dim];
+        let mut wsum = 0.0f64;
+        for (s, coords) in &partials {
+            let w = rs.slots[*s].weight;
+            for (c, v) in coords.iter().enumerate() {
+                acc[c] += w * *v as f64;
+            }
+            wsum += w;
+        }
+        let coords: Vec<f32> = acc.iter().map(|a| (a / wsum) as f32).collect();
+        let degraded = partials.len() < s_count;
+        let latency = started.elapsed();
+        rs.metrics.record_completed(latency);
+        if degraded {
+            rs.metrics.record_degraded();
+        }
+        let drift_coords = rs.drift.as_ref().map(|_| coords.clone());
+        sink(Ok(QueryResult { coords, latency, degraded }));
+        // drift scoring AFTER the reply (observability off the hot path),
+        // against the full landmark configuration
+        if let (Some(ds), Some(coords)) = (rs.drift.as_deref(), drift_coords) {
+            let row = crate::mds::Matrix::from_vec(1, rs.dim, coords);
+            feed_drift(ds, std::slice::from_ref(&delta), &row, &rs.metrics);
+        }
+    } else {
+        rs.metrics.record_failed();
+        let (shard, cause) = match failures.first() {
+            Some((s, e)) => (*s, e.to_string()),
+            None => (0, "no shards configured".to_string()),
+        };
+        sink(Err(ServeError::ShardUnavailable { shard, reason: cause }));
+    }
+}

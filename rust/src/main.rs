@@ -17,8 +17,8 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use lmds_ose::coordinator::{
-    embed_corpus, embed_dataset, BatcherConfig, DriftHook, PipelineResult, RunConfig,
-    Server,
+    embed_corpus, embed_dataset, BatcherConfig, DriftHook, Frame, NetServer,
+    PipelineResult, QueryService, RunConfig, Server, ServerBuilder, ShardedServer,
 };
 use lmds_ose::data::source::{CorpusKind, CorpusWriter, ObjectTable, TableDelta};
 use lmds_ose::data::{Geco, GecoConfig};
@@ -468,6 +468,24 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "drift-monitor sliding window in queries (0 = disabled)",
         None,
     ));
+    specs.push(opt(
+        "shards",
+        "serving shards (1 = classic unsharded; >1 partitions the landmarks \
+         and quorum-reduces per-shard partial embeddings)",
+        None,
+    ));
+    specs.push(opt(
+        "listen",
+        "serve the binary wire protocol over TCP at host:port (port 0 = \
+         ephemeral); the workload then runs over real sockets",
+        None,
+    ));
+    specs.push(opt("max-connections", "front door: connection limit", None));
+    specs.push(opt(
+        "max-in-flight",
+        "front door: in-flight query cap before load shedding",
+        None,
+    ));
     let args = Args::parse(argv, &specs)?;
     if args.flag("help") {
         print!("{}", usage("serve", "Streaming OSE service + query workload", &specs));
@@ -494,27 +512,81 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 
     let metric_arc: Arc<dyn lmds_ose::strdist::Dissimilarity<str> + Send + Sync> =
         Arc::new(lmds_ose::strdist::Levenshtein);
-    let drift = cfg.drift().map(|dcfg| DriftHook {
-        landmark_config: result.landmark_config.clone(),
-        cfg: dcfg,
-    });
-    let server = Server::start_strings(
+    let mut builder = ServerBuilder::strings(
         landmark_names,
         metric_arc,
         result.factory.clone(),
-        BatcherConfig { frontend_threads: clients, ..cfg.batcher() },
-        drift,
-    );
-    let h = server.handle();
+    )
+    .batcher(BatcherConfig { frontend_threads: clients, ..cfg.batcher() })
+    .landmark_config(result.landmark_config.clone())
+    .backend(backend.clone());
+    if let Some(dcfg) = cfg.drift() {
+        builder = builder.drift(DriftHook {
+            landmark_config: result.landmark_config.clone(),
+            cfg: dcfg,
+        });
+    }
+
+    // either serving topology exposes the same QueryService surface
+    enum Serving {
+        Flat(Server<str>),
+        Sharded(ShardedServer<str>),
+    }
+    let (serving, service): (Serving, Arc<dyn QueryService>) = if cfg.shards > 1 {
+        let s = builder
+            .shards(cfg.shard())
+            .build_sharded()
+            .map_err(|e| anyhow::anyhow!("starting sharded server: {e}"))?;
+        let h = s.handle();
+        log::info!("sharded serving: {} shards", h.shards());
+        (Serving::Sharded(s), Arc::new(h))
+    } else {
+        let s = builder
+            .build()
+            .map_err(|e| anyhow::anyhow!("starting server: {e}"))?;
+        let h = s.handle();
+        (Serving::Flat(s), Arc::new(h))
+    };
+    let metrics = service.metrics();
 
     // synthetic query workload (corrupted copies of known names = realistic
-    // near-duplicate queries)
+    // near-duplicate queries), in-process or over real loopback sockets
     log::info!("running {queries} queries from {clients} client threads");
     let t0 = Instant::now();
+    match cfg.net() {
+        Some(netcfg) => {
+            let front = NetServer::start(Arc::clone(&service), netcfg)
+                .map_err(|e| anyhow::anyhow!("starting network front door: {e}"))?;
+            let addr = front.local_addr();
+            println!("serving the wire protocol on {addr}");
+            run_net_workload(addr, queries, clients, &names)?;
+            front.shutdown();
+        }
+        None => run_local_workload(&service, queries, clients, &names),
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = metrics.snapshot();
+    println!("workload done in {wall:.2}s  ({:.0} queries/s)", snap.completed as f64 / wall);
+    println!("  {}", snap.report());
+    drop(service);
+    match serving {
+        Serving::Flat(s) => s.shutdown(),
+        Serving::Sharded(s) => s.shutdown(),
+    }
+    Ok(())
+}
+
+/// In-process serve workload: pipelined submissions straight into the
+/// handle, 64 in flight per client.
+fn run_local_workload(
+    service: &Arc<dyn QueryService>,
+    queries: usize,
+    clients: usize,
+    names: &[String],
+) {
     std::thread::scope(|scope| {
         for c in 0..clients {
-            let h = h.clone();
-            let names = &names;
+            let service = Arc::clone(service);
             scope.spawn(move || {
                 let mut geco = Geco::new(GecoConfig {
                     seed: 0xc11 + c as u64,
@@ -525,7 +597,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                 for q in 0..per {
                     let base = &names[(q * 31 + c) % names.len()];
                     let query = geco.corrupt(base);
-                    pending.push(h.query(query));
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    service.submit_text(
+                        query,
+                        Box::new(move |r| {
+                            let _ = tx.send(r);
+                        }),
+                    );
+                    pending.push(rx);
                     if pending.len() >= 64 {
                         for rx in pending.drain(..) {
                             let _ = rx.recv();
@@ -538,12 +617,81 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             });
         }
     });
-    let wall = t0.elapsed().as_secs_f64();
-    let snap = h.metrics.snapshot();
-    println!("workload done in {wall:.2}s  ({:.0} queries/s)", snap.completed as f64 / wall);
-    println!("  {}", snap.report());
-    drop(h);
-    server.shutdown();
+}
+
+/// Wire-protocol serve workload: each client opens a TCP connection and
+/// pipelines QueryText frames, 64 in flight.
+fn run_net_workload(
+    addr: std::net::SocketAddr,
+    queries: usize,
+    clients: usize,
+    names: &[String],
+) -> Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    use lmds_ose::coordinator::proto::{read_frame, write_frame};
+
+    let degraded_total = AtomicU64::new(0);
+    let error_total = AtomicU64::new(0);
+    std::thread::scope(|scope| -> Result<()> {
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let degraded_total = &degraded_total;
+            let error_total = &error_total;
+            joins.push(scope.spawn(move || -> Result<()> {
+                let mut stream = std::net::TcpStream::connect(addr)
+                    .context("connecting to the front door")?;
+                let mut geco = Geco::new(GecoConfig {
+                    seed: 0xc11 + c as u64,
+                    ..Default::default()
+                });
+                let mut read_one = |stream: &mut std::net::TcpStream| -> Result<()> {
+                    match read_frame(stream).context("reading a reply frame")? {
+                        Frame::Result { degraded, .. } => {
+                            if degraded {
+                                degraded_total.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Frame::Error { .. } => {
+                            error_total.fetch_add(1, Ordering::Relaxed);
+                        }
+                        other => anyhow::bail!("unexpected reply frame {other:?}"),
+                    }
+                    Ok(())
+                };
+                let per = queries / clients;
+                let mut inflight = 0usize;
+                for q in 0..per {
+                    let base = &names[(q * 31 + c) % names.len()];
+                    let query = geco.corrupt(base);
+                    write_frame(
+                        &mut stream,
+                        &Frame::QueryText { id: q as u64, text: query },
+                    )
+                    .context("writing a query frame")?;
+                    inflight += 1;
+                    if inflight >= 64 {
+                        read_one(&mut stream)?;
+                        inflight -= 1;
+                    }
+                }
+                while inflight > 0 {
+                    read_one(&mut stream)?;
+                    inflight -= 1;
+                }
+                Ok(())
+            }));
+        }
+        for j in joins {
+            j.join().expect("client thread panicked")?;
+        }
+        Ok(())
+    })?;
+    let degraded = degraded_total.into_inner();
+    let errors = error_total.into_inner();
+    if degraded > 0 || errors > 0 {
+        println!("  degraded replies: {degraded}  error replies: {errors}");
+    }
     Ok(())
 }
 

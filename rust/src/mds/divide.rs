@@ -251,6 +251,80 @@ pub fn block_seed(seed: u64, block: u64) -> u64 {
     seed ^ (block + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xD1F1DE
 }
 
+/// The anchor/block split a divide-and-conquer solve runs over — also the
+/// shard plan the serving layer partitions its landmarks with (each shard
+/// owns one block of the divide solve).
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// Indices of the shared anchor points (ascending).
+    pub anchor_idx: Vec<usize>,
+    /// Per-block index lists: block `b` is `anchor_idx ++ chunk_b`, so
+    /// positions `0..anchor_idx.len()` of every block are the anchors.
+    pub block_idx: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    /// Number of shared anchors (the prefix length of every block).
+    pub fn anchors(&self) -> usize {
+        self.anchor_idx.len()
+    }
+
+    /// Number of blocks actually formed (`<= DivideConfig::blocks`).
+    pub fn blocks(&self) -> usize {
+        self.block_idx.len()
+    }
+}
+
+/// Split `source` into the anchor set and B overlapping blocks: FPS
+/// anchors shared by every block, non-anchor points in B contiguous
+/// chunks. Deterministic in `seed`. This is step 1+2 of
+/// [`divide_solve_with`], exposed so the serving layer can shard its
+/// landmark set with the exact same plan.
+pub fn partition_blocks<S: DeltaSource + ?Sized>(
+    source: &S,
+    dim: usize,
+    dcfg: &DivideConfig,
+    seed: u64,
+) -> Partition {
+    let l = source.len();
+    if l == 0 {
+        return Partition { anchor_idx: vec![], block_idx: vec![] };
+    }
+
+    // 1. Anchor selection: farthest-point sampling on the source metric,
+    //    so the shared frame spans the configuration instead of sampling
+    //    one corner of it. Clamped to the rigidity floor dim + 1.
+    let anchors = match dcfg.anchors {
+        0 => auto_anchors(l, dim),
+        a => a.max(dim + 1),
+    }
+    .min(l);
+    let anchor_idx = fps_anchors(source, anchors, seed);
+    let mut is_anchor = vec![false; l];
+    for &i in &anchor_idx {
+        is_anchor[i] = true;
+    }
+    let rest: Vec<usize> = (0..l).filter(|&i| !is_anchor[i]).collect();
+
+    // 2. Partition the non-anchor points into B contiguous chunks.
+    let blocks = dcfg.blocks.max(1).min(rest.len().max(1));
+    let per = rest.len().div_ceil(blocks);
+    let chunks: Vec<&[usize]> = if rest.is_empty() {
+        vec![&[][..]]
+    } else {
+        rest.chunks(per).collect()
+    };
+    let block_idx: Vec<Vec<usize>> = chunks
+        .iter()
+        .map(|chunk| {
+            let mut idx = anchor_idx.clone();
+            idx.extend_from_slice(chunk);
+            idx
+        })
+        .collect();
+    Partition { anchor_idx, block_idx }
+}
+
 /// Core divide-and-conquer driver, generic over the per-block solver.
 ///
 /// `solve_block(b, sub_delta)` receives the block index and the block's
@@ -304,40 +378,14 @@ where
         });
     }
 
-    // 1. Anchor selection: farthest-point sampling on the source metric,
-    //    so the shared frame spans the configuration instead of sampling
-    //    one corner of it. Clamped to the rigidity floor dim + 1.
-    let anchors = match dcfg.anchors {
-        0 => auto_anchors(l, dim),
-        a => a.max(dim + 1),
-    }
-    .min(l);
-    let anchor_idx = fps_anchors(source, anchors, seed);
-    let mut is_anchor = vec![false; l];
-    for &i in &anchor_idx {
-        is_anchor[i] = true;
-    }
-    let rest: Vec<usize> = (0..l).filter(|&i| !is_anchor[i]).collect();
-
-    // 2. Partition the non-anchor points into B contiguous chunks.
-    let blocks = dcfg.blocks.max(1).min(rest.len().max(1));
-    let per = rest.len().div_ceil(blocks);
-    let chunks: Vec<&[usize]> = if rest.is_empty() {
-        vec![&[][..]]
-    } else {
-        rest.chunks(per).collect()
-    };
-    let b_eff = chunks.len();
+    // 1+2. Anchor selection and block partition (shared with the serving
+    //      layer's shard planner; see `partition_blocks`).
+    let part = partition_blocks(source, dim, dcfg, seed);
+    let Partition { anchor_idx, block_idx } = part;
+    let anchors = anchor_idx.len();
+    let b_eff = block_idx.len();
 
     // 3. Solve every block concurrently: block b = anchors ++ chunk_b.
-    let block_idx: Vec<Vec<usize>> = chunks
-        .iter()
-        .map(|chunk| {
-            let mut idx = anchor_idx.clone();
-            idx.extend_from_slice(chunk);
-            idx
-        })
-        .collect();
     let mut solved: Vec<Option<Result<Matrix>>> = (0..b_eff).map(|_| None).collect();
     {
         let slots = SyncSlice::new(&mut solved);
@@ -641,6 +689,38 @@ mod tests {
             (exact - approx).abs() < 0.05 * (1.0 + exact),
             "exact {exact} vs sampled {approx}"
         );
+    }
+
+    #[test]
+    fn partition_blocks_covers_every_index_once() {
+        let (_, delta) = realizable(11, 50, 2);
+        let dcfg = DivideConfig { blocks: 4, anchors: 8 };
+        let p = partition_blocks(&delta, 2, &dcfg, 33);
+        assert_eq!(p.anchors(), 8);
+        assert_eq!(p.blocks(), 4);
+        // every block starts with the shared anchors
+        for b in &p.block_idx {
+            assert_eq!(&b[..p.anchors()], &p.anchor_idx[..]);
+        }
+        // non-anchor indices land in exactly one block
+        let mut seen = vec![0usize; 50];
+        for b in &p.block_idx {
+            for &i in &b[p.anchors()..] {
+                seen[i] += 1;
+            }
+        }
+        for &i in &p.anchor_idx {
+            assert_eq!(seen[i], 0, "anchor {i} duplicated in a chunk");
+            seen[i] = 1;
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+        // deterministic in the seed
+        let q = partition_blocks(&delta, 2, &dcfg, 33);
+        assert_eq!(p.anchor_idx, q.anchor_idx);
+        assert_eq!(p.block_idx, q.block_idx);
+        // empty source degenerates cleanly
+        let p = partition_blocks(&Matrix::zeros(0, 0), 2, &dcfg, 33);
+        assert_eq!(p.blocks(), 0);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use lmds_ose::coordinator::{BatcherConfig, Server};
+use lmds_ose::coordinator::{BatcherConfig, Request, ServerBuilder};
 use lmds_ose::data::{Geco, GecoConfig};
 use lmds_ose::mds::dissimilarity::{cross_matrix, full_matrix};
 use lmds_ose::mds::stress::{point_error, raw_stress, total_error};
@@ -314,29 +314,31 @@ fn server_never_drops_or_duplicates() {
         &MlpShape { input: 16, hidden: [8, 8, 8], output: 3 },
         &mut rng,
     );
-    let server = Server::start_strings(
+    let server = ServerBuilder::strings(
         landmarks,
         Arc::new(Levenshtein),
         factory_fn(move || Box::new(RustNn { params: params.clone() })),
-        BatcherConfig {
-            max_batch: 7, // deliberately not a divisor of the load
-            max_delay: Duration::from_millis(1),
-            queue_cap: 32, // small: exercises backpressure
-            frontend_threads: 3,
-            replicas: 3, // replicated pool must preserve exactly-once too
-        },
-        None,
-    );
+    )
+    .batcher(BatcherConfig {
+        max_batch: 7, // deliberately not a divisor of the load
+        max_delay: Duration::from_millis(1),
+        queue_cap: 32, // small: exercises backpressure
+        frontend_threads: 3,
+        replicas: 3, // replicated pool must preserve exactly-once too
+    })
+    .build()
+    .expect("valid server configuration");
     let sh = server.handle();
     let n = 500;
-    let rxs: Vec<_> = (0..n).map(|i| sh.query(format!("query {i}"))).collect();
+    let tickets: Vec<_> = (0..n)
+        .map(|i| sh.submit(Request::object(format!("query {i}"))))
+        .collect();
     let mut ok = 0;
-    for rx in rxs {
-        // every receiver yields exactly one result
-        let r = rx.recv().expect("reply must arrive");
-        assert!(r.is_ok());
+    for t in tickets {
+        // every ticket yields exactly one result
+        t.recv().expect("reply must arrive");
         ok += 1;
-        assert!(rx.try_recv().is_err(), "duplicate reply");
+        assert!(t.try_recv().is_none(), "duplicate reply");
     }
     assert_eq!(ok, n);
     let snap = sh.metrics.snapshot();

@@ -1,0 +1,306 @@
+//! Integration: the binary wire protocol and the network front door.
+//! Portable tests pin the public framing API (round trips through the
+//! `Deframer`, stable error codes); the Linux-gated suite runs the whole
+//! stack over real loopback sockets — queries, pipelining, protocol
+//! violations, and deterministic load shedding.
+
+use lmds_ose::coordinator::error::{
+    CODE_BAD_INPUT, CODE_OVERLOADED, CODE_PROTOCOL,
+};
+use lmds_ose::coordinator::{Deframer, Frame, ServeError};
+use lmds_ose::util::quickcheck::{prop_assert, property};
+
+#[test]
+fn public_framing_api_round_trips_through_byte_dribble() {
+    property("public deframer round-trip", 60, |g| {
+        let frames = vec![
+            Frame::Ping { id: g.u64() },
+            Frame::QueryText { id: g.u64(), text: g.unicode_string(0, 32) },
+            Frame::QueryDelta { id: g.u64(), delta: g.vec_f32(0, 48, 8.0) },
+            Frame::Result {
+                id: g.u64(),
+                degraded: g.bool(),
+                latency_us: g.u64() as u32,
+                coords: g.vec_f32(1, 8, 3.0),
+            },
+            Frame::from_error(
+                g.u64(),
+                &ServeError::ShardUnavailable {
+                    shard: g.usize_in(0, 7),
+                    reason: g.string(0, 12),
+                },
+            ),
+        ];
+        let mut wire = Vec::new();
+        for f in &frames {
+            f.encode(&mut wire);
+        }
+        let mut d = Deframer::new();
+        let mut got = Vec::new();
+        let mut off = 0;
+        while off < wire.len() {
+            let step = g.usize_in(1, 9).min(wire.len() - off);
+            d.extend(&wire[off..off + step]);
+            off += step;
+            while let Some(f) = d.next().map_err(|e| e.to_string())? {
+                got.push(f);
+            }
+        }
+        if got != frames {
+            return Err(format!("dribbled {} frames, got {}", frames.len(), got.len()));
+        }
+        prop_assert(d.buffered() == 0, "no leftover bytes")
+    });
+}
+
+#[test]
+fn wire_error_codes_are_stable_across_the_public_api() {
+    // the code table is wire ABI: clients hard-code these numbers
+    let table = [
+        (ServeError::BadInput { reason: "x".into() }, 1u16),
+        (ServeError::Overloaded, 2),
+        (ServeError::Shutdown, 3),
+        (ServeError::ReplicaPanic { reason: "x".into() }, 4),
+        (ServeError::ShardUnavailable { shard: 9, reason: "x".into() }, 5),
+        (ServeError::Timeout, 6),
+        (ServeError::Protocol { reason: "x".into() }, 7),
+        (ServeError::Internal { reason: "x".into() }, 8),
+    ];
+    for (e, want) in table {
+        assert_eq!(e.wire_code(), want, "{e:?}");
+        let f = Frame::from_error(3, &e);
+        match &f {
+            Frame::Error { code, .. } => assert_eq!(*code, want),
+            other => panic!("expected an error frame, got {other:?}"),
+        }
+        assert_eq!(f.to_error(), Some(e));
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod loopback {
+    use std::io::Write as _;
+    use std::net::TcpStream;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use lmds_ose::coordinator::methods::BackendOpt;
+    use lmds_ose::coordinator::proto::{read_frame, write_frame, MAX_FRAME};
+    use lmds_ose::coordinator::{
+        BatcherConfig, Frame, NetConfig, NetServer, Server, ServerBuilder,
+        ServerHandle,
+    };
+    use lmds_ose::mds::Matrix;
+    use lmds_ose::runtime::Backend;
+    use lmds_ose::strdist::Levenshtein;
+    use lmds_ose::util::prng::Rng;
+
+    use super::{CODE_BAD_INPUT, CODE_OVERLOADED, CODE_PROTOCOL};
+
+    const L: usize = 16;
+    const K: usize = 3;
+
+    /// A small str server: Levenshtein deltas into an optimisation OSE
+    /// over a random landmark configuration (frame flow is under test,
+    /// not embedding quality).
+    fn start_server() -> (Server<str>, ServerHandle<str>) {
+        let mut rng = Rng::new(0x9e7);
+        let config = Matrix::random_normal(&mut rng, L, K, 1.0);
+        let landmarks: Vec<String> = (0..L).map(|i| format!("landmark{i:02}")).collect();
+        let server = ServerBuilder::strings(
+            landmarks,
+            Arc::new(Levenshtein),
+            BackendOpt::replica_factory_budget(Backend::native(), config, 60),
+        )
+        .batcher(BatcherConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(1),
+            queue_cap: 1024,
+            frontend_threads: 2,
+            replicas: 1,
+        })
+        .build()
+        .expect("valid server configuration");
+        let h = server.handle();
+        (server, h)
+    }
+
+    fn connect(front: &NetServer) -> TcpStream {
+        let conn = TcpStream::connect(front.local_addr()).expect("connect");
+        conn.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+        conn.set_nodelay(true).ok();
+        conn
+    }
+
+    #[test]
+    fn wire_protocol_serves_queries_over_loopback() {
+        let (server, h) = start_server();
+        let front = NetServer::start(
+            Arc::new(h.clone()),
+            NetConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .expect("front door starts");
+        let mut conn = connect(&front);
+
+        write_frame(&mut conn, &Frame::Ping { id: 7 }).unwrap();
+        assert_eq!(read_frame(&mut conn).unwrap(), Frame::Pong { id: 7 });
+
+        write_frame(&mut conn, &Frame::QueryText { id: 1, text: "anna".into() })
+            .unwrap();
+        match read_frame(&mut conn).unwrap() {
+            Frame::Result { id, degraded, coords, .. } => {
+                assert_eq!(id, 1);
+                assert!(!degraded);
+                assert_eq!(coords.len(), K);
+                assert!(coords.iter().all(|c| c.is_finite()));
+            }
+            other => panic!("expected a result frame, got {other:?}"),
+        }
+
+        write_frame(&mut conn, &Frame::QueryDelta { id: 2, delta: vec![1.5; L] })
+            .unwrap();
+        match read_frame(&mut conn).unwrap() {
+            Frame::Result { id, coords, .. } => {
+                assert_eq!(id, 2);
+                assert_eq!(coords.len(), K);
+            }
+            other => panic!("expected a result frame, got {other:?}"),
+        }
+
+        // invalid query: typed error frame, connection stays usable
+        write_frame(&mut conn, &Frame::QueryDelta { id: 3, delta: vec![1.0; L + 2] })
+            .unwrap();
+        match read_frame(&mut conn).unwrap() {
+            Frame::Error { id, code, message, .. } => {
+                assert_eq!(id, 3);
+                assert_eq!(code, CODE_BAD_INPUT);
+                assert!(message.contains("one per landmark"), "{message}");
+            }
+            other => panic!("expected an error frame, got {other:?}"),
+        }
+        write_frame(&mut conn, &Frame::Ping { id: 8 }).unwrap();
+        assert_eq!(read_frame(&mut conn).unwrap(), Frame::Pong { id: 8 });
+
+        let snap = h.metrics.snapshot();
+        assert!(snap.conns_opened >= 1);
+        assert_eq!(snap.proto_errors, 0);
+        front.shutdown();
+        drop(conn);
+        drop(h);
+        server.shutdown();
+    }
+
+    #[test]
+    fn pipelined_queries_over_one_connection_all_answer() {
+        let (server, h) = start_server();
+        let front = NetServer::start(
+            Arc::new(h.clone()),
+            NetConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .expect("front door starts");
+        let mut conn = connect(&front);
+        let n = 200u64;
+        for id in 0..n {
+            write_frame(&mut conn, &Frame::QueryDelta { id, delta: vec![1.0; L] })
+                .unwrap();
+        }
+        // completion order is the batcher's business; ids must form the
+        // exact request set
+        let mut seen: Vec<u64> = (0..n)
+            .map(|_| match read_frame(&mut conn).unwrap() {
+                Frame::Result { id, coords, .. } => {
+                    assert_eq!(coords.len(), K);
+                    id
+                }
+                other => panic!("expected a result frame, got {other:?}"),
+            })
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n).collect::<Vec<_>>(), "every id exactly once");
+        assert_eq!(h.metrics.snapshot().completed, n);
+        front.shutdown();
+        drop(conn);
+        drop(h);
+        server.shutdown();
+    }
+
+    #[test]
+    fn protocol_violations_get_a_typed_reply_then_the_connection_closes() {
+        let (server, h) = start_server();
+        let front = NetServer::start(
+            Arc::new(h.clone()),
+            NetConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .expect("front door starts");
+
+        // oversized length prefix
+        let mut conn = connect(&front);
+        conn.write_all(&((MAX_FRAME as u32) + 1).to_le_bytes()).unwrap();
+        match read_frame(&mut conn).unwrap() {
+            Frame::Error { code, .. } => assert_eq!(code, CODE_PROTOCOL),
+            other => panic!("expected a protocol error frame, got {other:?}"),
+        }
+        assert!(
+            read_frame(&mut conn).is_err(),
+            "server must close after a framing violation"
+        );
+
+        // a client sending a server-side frame is also a violation
+        let mut conn = connect(&front);
+        write_frame(&mut conn, &Frame::Pong { id: 4 }).unwrap();
+        match read_frame(&mut conn).unwrap() {
+            Frame::Error { id, code, .. } => {
+                assert_eq!(id, 4);
+                assert_eq!(code, CODE_PROTOCOL);
+            }
+            other => panic!("expected a protocol error frame, got {other:?}"),
+        }
+        assert!(read_frame(&mut conn).is_err());
+
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while h.metrics.snapshot().proto_errors < 2 {
+            assert!(deadline > std::time::Instant::now(), "proto errors uncounted");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        front.shutdown();
+        drop(h);
+        server.shutdown();
+    }
+
+    #[test]
+    fn saturated_front_door_sheds_load_with_overloaded_replies() {
+        let (server, h) = start_server();
+        // max_in_flight 0: every query is load-shed — the deterministic
+        // worst case of the backpressure path
+        let front = NetServer::start(
+            Arc::new(h.clone()),
+            NetConfig {
+                addr: "127.0.0.1:0".into(),
+                max_in_flight: 0,
+                ..Default::default()
+            },
+        )
+        .expect("front door starts");
+        let mut conn = connect(&front);
+        for id in 0..5u64 {
+            write_frame(&mut conn, &Frame::QueryDelta { id, delta: vec![1.0; L] })
+                .unwrap();
+            match read_frame(&mut conn).unwrap() {
+                Frame::Error { id: rid, code, .. } => {
+                    assert_eq!(rid, id);
+                    assert_eq!(code, CODE_OVERLOADED);
+                }
+                other => panic!("expected an overloaded reply, got {other:?}"),
+            }
+        }
+        // shedding is cheap rejection, not failure: pings still flow
+        write_frame(&mut conn, &Frame::Ping { id: 99 }).unwrap();
+        assert_eq!(read_frame(&mut conn).unwrap(), Frame::Pong { id: 99 });
+        let snap = h.metrics.snapshot();
+        assert_eq!(snap.shed, 5);
+        assert_eq!(snap.completed, 0);
+        front.shutdown();
+        drop(h);
+        server.shutdown();
+    }
+}

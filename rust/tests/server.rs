@@ -11,7 +11,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use lmds_ose::coordinator::methods::BackendNn;
-use lmds_ose::coordinator::{BatcherConfig, Server};
+use lmds_ose::coordinator::{
+    BatcherConfig, Request, ServeError, Server, ServerBuilder,
+};
 use lmds_ose::data::{Geco, GecoConfig};
 use lmds_ose::mds::Matrix;
 use lmds_ose::nn::{MlpParams, MlpShape};
@@ -31,19 +33,20 @@ fn test_params() -> MlpParams {
 fn start_backend_server(backend: Backend, max_batch: usize, replicas: usize) -> Server<str> {
     let mut geco = Geco::new(GecoConfig { seed: 77, ..Default::default() });
     let landmarks = geco.generate_unique(32);
-    Server::start_strings(
+    ServerBuilder::strings(
         landmarks,
         Arc::new(Levenshtein),
         BackendNn::replica_factory(backend, test_params()),
-        BatcherConfig {
-            max_batch,
-            max_delay: Duration::from_millis(2),
-            queue_cap: 512,
-            frontend_threads: 2,
-            replicas,
-        },
-        None,
     )
+    .batcher(BatcherConfig {
+        max_batch,
+        max_delay: Duration::from_millis(2),
+        queue_cap: 512,
+        frontend_threads: 2,
+        replicas,
+    })
+    .build()
+    .expect("valid server configuration")
 }
 
 #[test]
@@ -51,13 +54,14 @@ fn backend_service_serves_queries() {
     let server = start_backend_server(Backend::native(), 8, 1);
     let sh = server.handle();
     let mut geco = Geco::new(GecoConfig { seed: 78, ..Default::default() });
-    let rxs: Vec<_> = (0..100)
-        .map(|_| sh.query(geco.sample_name()))
+    let tickets: Vec<_> = (0..100)
+        .map(|_| sh.submit(Request::object(geco.sample_name())))
         .collect();
-    for rx in rxs {
-        let r = rx.recv().unwrap().unwrap();
+    for t in tickets {
+        let r = t.recv().unwrap();
         assert_eq!(r.coords.len(), 7);
         assert!(r.coords.iter().all(|c| c.is_finite()));
+        assert!(!r.degraded, "unsharded serving never degrades");
     }
     let snap = sh.metrics.snapshot();
     assert_eq!(snap.completed, 100);
@@ -72,17 +76,17 @@ fn backend_service_batches_and_is_deterministic() {
     let sh = server.handle();
     // identical queries must give identical coordinates regardless of the
     // batch OR the replica they landed in (composition must not leak)
-    let rx1: Vec<_> = (0..16).map(|_| sh.query("anna smith")).collect();
-    let first: Vec<Vec<f32>> = rx1
+    let t1: Vec<_> = (0..16).map(|_| sh.submit(Request::object("anna smith"))).collect();
+    let first: Vec<Vec<f32>> = t1
         .into_iter()
-        .map(|rx| rx.recv().unwrap().unwrap().coords)
+        .map(|t| t.recv().unwrap().coords)
         .collect();
     for c in &first {
         assert_eq!(c, &first[0]);
     }
     // and a lone straggler (batch of 1) agrees too
     std::thread::sleep(Duration::from_millis(10));
-    let solo = sh.query_sync("anna smith").unwrap();
+    let solo = sh.submit(Request::object("anna smith")).recv().unwrap();
     let max_diff = solo
         .coords
         .iter()
@@ -100,27 +104,28 @@ fn service_single_query_latency_under_paper_bound() {
     // single-query path (batcher delay excluded: use max_delay=0-ish).
     let mut geco = Geco::new(GecoConfig { seed: 79, ..Default::default() });
     let landmarks = geco.generate_unique(32);
-    let server = Server::start_strings(
+    let server = ServerBuilder::strings(
         landmarks,
         Arc::new(Levenshtein),
         BackendNn::replica_factory(Backend::native(), test_params()),
-        BatcherConfig {
-            max_batch: 1,
-            max_delay: Duration::from_micros(100),
-            queue_cap: 64,
-            frontend_threads: 1,
-            replicas: 1,
-        },
-        None,
-    );
+    )
+    .batcher(BatcherConfig {
+        max_batch: 1,
+        max_delay: Duration::from_micros(100),
+        queue_cap: 64,
+        frontend_threads: 1,
+        replicas: 1,
+    })
+    .build()
+    .expect("valid server configuration");
     let sh = server.handle();
     // warm caches and the thread pool
     for _ in 0..20 {
-        sh.query_sync("warmup query").unwrap();
+        sh.submit(Request::object("warmup query")).recv().unwrap();
     }
     let mut lat = Vec::new();
     for i in 0..50 {
-        let r = sh.query_sync(format!("query {i}")).unwrap();
+        let r = sh.submit(Request::object(format!("query {i}"))).recv().unwrap();
         lat.push(r.latency.as_secs_f64());
     }
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -175,39 +180,37 @@ fn panicking_replica_fails_only_its_batch_and_restarts() {
     };
     let mut geco = Geco::new(GecoConfig { seed: 80, ..Default::default() });
     let landmarks = geco.generate_unique(32);
-    let server = Server::start_strings(
-        landmarks,
-        Arc::new(Levenshtein),
-        Arc::clone(&factory),
-        BatcherConfig {
+    let server = ServerBuilder::strings(landmarks, Arc::new(Levenshtein), factory)
+        .batcher(BatcherConfig {
             max_batch: 4,
             max_delay: Duration::from_millis(1),
             queue_cap: 256,
             frontend_threads: 2,
             replicas: 4,
-        },
-        None,
-    );
+        })
+        .build()
+        .expect("valid server configuration");
     let h = server.handle();
     let builds_before_poison = builds.load(Ordering::SeqCst);
     assert_eq!(builds_before_poison, 4, "one replica per executor");
 
     // a healthy warmup round on every handle
     for i in 0..8 {
-        assert!(h.query_sync(format!("warm {i}")).is_ok());
+        assert!(h.submit(Request::object(format!("warm {i}"))).recv().is_ok());
     }
 
     // inject the poison batch: only ITS callers may see errors
     let mut poison = vec![1.0f32; 32];
     poison[0] = f32::NAN;
-    let rx = h.query_delta(poison).unwrap();
-    let err = rx.recv().unwrap();
-    assert!(err.is_err(), "poisoned batch must get an error reply");
-    let msg = err.unwrap_err();
-    assert!(
-        msg.contains("panicked") && msg.contains("poison"),
-        "caller sees the panic reason: {msg}"
-    );
+    let err = h.submit(Request::delta(poison)).recv();
+    let e = err.expect_err("poisoned batch must get an error reply");
+    match &e {
+        ServeError::ReplicaPanic { reason } => {
+            assert!(reason.contains("poison"), "caller sees the panic reason: {reason}");
+        }
+        other => panic!("expected ReplicaPanic, got {other:?}"),
+    }
+    assert!(e.to_string().contains("panicked"), "{e}");
     // the restart is recorded just after the error replies go out; give the
     // executor a bounded moment to finish rebuilding before asserting
     let t0 = std::time::Instant::now();
@@ -225,7 +228,7 @@ fn panicking_replica_fails_only_its_batch_and_restarts() {
         for (c, hc) in handles.iter().enumerate() {
             scope.spawn(move || {
                 for i in 0..25 {
-                    let r = hc.query_sync(format!("after poison {c}-{i}"));
+                    let r = hc.submit(Request::object(format!("after poison {c}-{i}"))).recv();
                     assert!(r.is_ok(), "query after panic failed: {r:?}");
                 }
             });
@@ -262,7 +265,7 @@ fn numeric_vector_workload_serves_through_the_generic_path() {
         .map(|i| landmark_config.row(i).to_vec().into_boxed_slice())
         .collect();
     let lm = landmark_config.clone();
-    let server: Server<[f32]> = Server::start(
+    let server: Server<[f32]> = Server::builder(
         landmark_vecs,
         Arc::new(Euclidean),
         factory_fn(move || {
@@ -273,13 +276,14 @@ fn numeric_vector_workload_serves_through_the_generic_path() {
                 cfg: lmds_ose::ose::OseOptConfig { max_iters: 3000, rel_tol: 1e-12 },
             })
         }),
-        BatcherConfig { replicas: 2, ..Default::default() },
-        None,
-    );
+    )
+    .replicas(2)
+    .build()
+    .expect("valid server configuration");
     let h = server.handle();
     // query AT a landmark: the optimiser must map it near that landmark
     let target: Vec<f32> = landmark_config.row(5).to_vec();
-    let r = h.query_sync(target.clone()).unwrap();
+    let r = h.submit(Request::object(target.clone())).recv().unwrap();
     assert_eq!(r.coords.len(), k);
     let err: f32 = r
         .coords
@@ -289,14 +293,14 @@ fn numeric_vector_workload_serves_through_the_generic_path() {
         .fold(0.0, f32::max);
     assert!(err < 0.25, "landmark query mapped {err} away from itself");
     // and a batch of random vector queries all complete
-    let rxs: Vec<_> = (0..20)
+    let tickets: Vec<_> = (0..20)
         .map(|i| {
             let q: Vec<f32> = (0..k).map(|c| (i + c) as f32 * 0.1).collect();
-            h.query(q)
+            h.submit(Request::object(q))
         })
         .collect();
-    for rx in rxs {
-        assert!(rx.recv().unwrap().is_ok());
+    for t in tickets {
+        assert!(t.recv().is_ok());
     }
     let snap = h.metrics.snapshot();
     assert_eq!(snap.completed, 21);

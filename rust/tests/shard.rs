@@ -1,0 +1,286 @@
+//! Integration: sharded serving. Partition parity — the quorum-reduced
+//! sharded embedding must land within the divide-solve partition-
+//! invariance band of the unsharded optimisation OSE for S in {1, 2, 4} —
+//! plus the chaos suite: killing a shard mid-soak must cost accuracy
+//! (degraded flag), never availability, and losing the quorum must fail
+//! queries with a typed error instead of hanging.
+
+use std::time::Duration;
+
+use std::sync::Arc;
+
+use lmds_ose::coordinator::methods::BackendOpt;
+use lmds_ose::coordinator::{
+    BatcherConfig, Request, ServeError, Server, ServerBuilder, ShardConfig,
+};
+use lmds_ose::mds::Matrix;
+use lmds_ose::runtime::Backend;
+use lmds_ose::strdist::Euclidean;
+use lmds_ose::util::prng::Rng;
+
+const K: usize = 3;
+const L: usize = 48;
+/// Fixed majorization budget: deterministic work on every path.
+const STEPS: usize = 1500;
+
+/// A realizable serving problem: the landmark configuration IS a set of
+/// points in R^K, and query deltas are exact Euclidean distances, so the
+/// optimiser can recover the query position on any landmark subset.
+fn landmark_setup() -> (Matrix, Vec<Box<[f32]>>) {
+    let mut rng = Rng::new(0x5a4d);
+    let config = Matrix::random_normal(&mut rng, L, K, 1.0);
+    let vecs = (0..L)
+        .map(|i| config.row(i).to_vec().into_boxed_slice())
+        .collect();
+    (config, vecs)
+}
+
+fn delta_to(config: &Matrix, q: &[f32]) -> Vec<f32> {
+    (0..config.rows)
+        .map(|i| {
+            config
+                .row(i)
+                .iter()
+                .zip(q)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt()
+        })
+        .collect()
+}
+
+fn builder(config: &Matrix, steps: usize) -> ServerBuilder<[f32]> {
+    let (_, vecs) = landmark_setup();
+    Server::builder(
+        vecs,
+        Arc::new(Euclidean),
+        BackendOpt::replica_factory_budget(Backend::native(), config.clone(), steps),
+    )
+    .landmark_config(config.clone())
+    .batcher(BatcherConfig {
+        max_batch: 8,
+        max_delay: Duration::from_millis(1),
+        queue_cap: 256,
+        frontend_threads: 2,
+        replicas: 1,
+    })
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[test]
+fn sharded_serving_matches_unsharded_within_partition_band() {
+    let (config, _) = landmark_setup();
+    let mut rng = Rng::new(0xbead);
+    let queries: Vec<Vec<f32>> = (0..10)
+        .map(|_| (0..K).map(|_| rng.next_f32() * 2.0 - 1.0).collect())
+        .collect();
+
+    // unsharded reference embeddings
+    let reference = builder(&config, STEPS).build().expect("valid configuration");
+    let href = reference.handle();
+    let ref_coords: Vec<Vec<f32>> = queries
+        .iter()
+        .map(|q| {
+            href.submit(Request::delta(delta_to(&config, q)))
+                .recv()
+                .expect("reference query")
+                .coords
+        })
+        .collect();
+    drop(href);
+    reference.shutdown();
+
+    for shards in [1usize, 2, 4] {
+        let server = builder(&config, STEPS)
+            .shards(ShardConfig {
+                shards,
+                anchors: 12,
+                opt_steps: STEPS,
+                ..Default::default()
+            })
+            .build_sharded()
+            .expect("valid sharded configuration");
+        let h = server.handle();
+        assert_eq!(h.shards(), shards, "L=48 splits cleanly into {shards}");
+        // every landmark is owned by some shard; anchors lead each block
+        let owned: std::collections::BTreeSet<usize> = (0..h.shards())
+            .flat_map(|s| h.shard_landmarks(s).unwrap().to_vec())
+            .collect();
+        assert_eq!(owned.len(), L, "shards cover the landmark set");
+        // S=1 is the whole landmark set in anchor-first order; S>1 pays
+        // the divide-solve partition tolerance on top of that
+        let band = if shards == 1 { 0.05 } else { 0.25 };
+        for (q, want) in queries.iter().zip(&ref_coords) {
+            let r = h
+                .submit(Request::delta(delta_to(&config, q)))
+                .recv()
+                .expect("sharded query");
+            assert!(!r.degraded, "all shards healthy: no degradation");
+            let vs_ref = max_abs_diff(&r.coords, want);
+            assert!(
+                vs_ref < band,
+                "S={shards}: sharded embedding {vs_ref} off the unsharded \
+                 reference (band {band})"
+            );
+            let vs_true = max_abs_diff(&r.coords, q);
+            assert!(
+                vs_true < 0.35,
+                "S={shards}: embedding {vs_true} away from the true point"
+            );
+        }
+        let snap = h.metrics.snapshot();
+        assert_eq!(snap.completed, queries.len() as u64);
+        assert_eq!(snap.failed, 0);
+        assert_eq!(snap.shards, shards as u64);
+        assert_eq!(snap.degraded, 0);
+        // per-shard pools actually did the solves
+        let per_shard = h.shard_snapshots();
+        assert_eq!(per_shard.len(), shards);
+        for s in &per_shard {
+            assert_eq!(s.completed, queries.len() as u64);
+        }
+        drop(h);
+        server.shutdown();
+    }
+}
+
+#[test]
+fn killing_a_shard_mid_soak_degrades_but_keeps_serving() {
+    let (config, _) = landmark_setup();
+    let server = builder(&config, 120)
+        .shards(ShardConfig {
+            shards: 4,
+            anchors: 12,
+            opt_steps: 120,
+            quorum: 2,
+            shard_timeout: Duration::from_secs(10),
+            ..Default::default()
+        })
+        .build_sharded()
+        .expect("valid sharded configuration");
+    let h = server.handle();
+    let q = vec![0.3f32, -0.2, 0.5];
+    let delta = delta_to(&config, &q);
+
+    // concurrent soak; one shard dies partway through
+    std::thread::scope(|scope| {
+        for _ in 0..3 {
+            let h = h.clone();
+            let delta = delta.clone();
+            scope.spawn(move || {
+                for _ in 0..40 {
+                    let r = h
+                        .submit(Request::delta(delta.clone()))
+                        .recv()
+                        .expect("soak query must keep succeeding");
+                    assert!(r.coords.iter().all(|c| c.is_finite()));
+                }
+            });
+        }
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(h.stop_shard(1), "first stop takes the queue");
+        assert!(!h.stop_shard(1), "second stop is a no-op");
+    });
+
+    // steady state after the kill: still answering, flagged degraded
+    for _ in 0..5 {
+        let r = h
+            .submit(Request::delta(delta.clone()))
+            .recv()
+            .expect("three live shards hold the quorum");
+        assert!(r.degraded, "missing shard must flag degradation");
+        assert!(max_abs_diff(&r.coords, &q) < 0.5, "estimate stays sane");
+    }
+    let snap = h.metrics.snapshot();
+    assert_eq!(snap.completed, 3 * 40 + 5, "no query lost to the dead shard");
+    assert_eq!(snap.failed, 0, "quorum held: accuracy cost, not availability");
+    assert!(snap.degraded >= 5, "degraded replies surface in metrics");
+    assert!(snap.shard_failures >= 5, "dead-shard dispatches are counted");
+    drop(h);
+    server.shutdown();
+}
+
+#[test]
+fn losing_the_quorum_fails_with_a_typed_error_not_a_hang() {
+    let (config, _) = landmark_setup();
+    let server = builder(&config, 80)
+        .shards(ShardConfig {
+            shards: 3,
+            anchors: 12,
+            opt_steps: 80,
+            quorum: 2,
+            shard_timeout: Duration::from_secs(5),
+            ..Default::default()
+        })
+        .build_sharded()
+        .expect("valid sharded configuration");
+    let h = server.handle();
+    let delta = delta_to(&config, &[0.1, 0.2, -0.3]);
+    assert!(h.submit(Request::delta(delta.clone())).recv().is_ok());
+    assert!(h.stop_shard(0));
+    assert!(h.stop_shard(2));
+    // one live shard < quorum of 2: fast typed failure
+    let err = h.submit(Request::delta(delta)).recv();
+    match err {
+        Err(ServeError::ShardUnavailable { .. }) => {}
+        other => panic!("expected ShardUnavailable, got {other:?}"),
+    }
+    let snap = h.metrics.snapshot();
+    assert_eq!(snap.failed, 1);
+    assert!(snap.shard_failures >= 2);
+    drop(h);
+    server.shutdown();
+}
+
+#[test]
+fn object_queries_route_through_the_shards() {
+    let (config, _) = landmark_setup();
+    let server = builder(&config, STEPS)
+        .shards(ShardConfig {
+            shards: 2,
+            anchors: 12,
+            opt_steps: STEPS,
+            ..Default::default()
+        })
+        .build_sharded()
+        .expect("valid sharded configuration");
+    let h = server.handle();
+    // the frontend computes the delta row from the raw object
+    let q = vec![0.4f32, -0.1, 0.2];
+    let r = h.submit(Request::object(q.clone())).recv().expect("object query");
+    assert!(!r.degraded);
+    assert!(max_abs_diff(&r.coords, &q) < 0.35);
+    // malformed deltas are rejected with a typed error, not dispatched
+    let err = h.submit(Request::delta(vec![1.0; L + 1])).recv();
+    match err {
+        Err(ServeError::BadInput { reason }) => {
+            assert!(reason.contains("one per landmark"), "{reason}");
+        }
+        other => panic!("expected BadInput, got {other:?}"),
+    }
+    drop(h);
+    server.shutdown();
+}
+
+#[test]
+fn build_sharded_requires_a_landmark_configuration() {
+    let (config, vecs) = landmark_setup();
+    let b = Server::builder(
+        vecs,
+        Arc::new(Euclidean),
+        BackendOpt::replica_factory_budget(Backend::native(), config, 50),
+    );
+    match b.build_sharded() {
+        Err(ServeError::BadInput { reason }) => {
+            assert!(reason.contains("landmark_config"), "{reason}");
+        }
+        Ok(_) => panic!("sharding without a landmark configuration must fail"),
+        Err(other) => panic!("expected BadInput, got {other:?}"),
+    }
+}
