@@ -5,19 +5,29 @@
 //!     cargo bench --bench bench_micro
 //!
 //! Env knobs:
-//!   LMDS_BENCH_QUICK=1        short measurement windows (CI smoke)
-//!   LMDS_BENCH_JSON=path.json where to write the report
-//!                             (default BENCH_pr2.json in the CWD)
+//!   LMDS_BENCH_QUICK=1            short measurement windows (CI smoke)
+//!   LMDS_BENCH_JSON=path.json     where to write the report
+//!                                 (default BENCH_pr2.json in the CWD)
+//!   LMDS_BENCH_JSON_PR7=path.json where to write the kernel-tier report
+//!                                 (default BENCH_pr7.json in the CWD)
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Duration;
 
 use lmds_ose::coordinator::methods::{BackendNn, BackendOpt};
+use lmds_ose::coordinator::{BatcherConfig, Request, ServerBuilder};
 use lmds_ose::data::{Geco, GecoConfig};
 use lmds_ose::mds::dissimilarity::{cross_matrix, full_matrix};
 use lmds_ose::mds::lsmds::{stress_gradient, stress_gradient_blocked};
 use lmds_ose::mds::Matrix;
-use lmds_ose::nn::{forward, MlpParams, MlpShape};
+use lmds_ose::nn::{forward, forward_blocked, MlpParams, MlpShape};
 use lmds_ose::ose::pipeline::embed_stream;
 use lmds_ose::ose::{embed_point, OseMethod, OseOptConfig};
-use lmds_ose::runtime::{Backend, ComputeBackend, NativeBackend};
+use lmds_ose::runtime::simd::{
+    self, euclidean_sq_scalar, euclidean_sq_vector, set_kernel_tier,
+};
+use lmds_ose::runtime::{Backend, ComputeBackend, KernelTier, NativeBackend};
 use lmds_ose::strdist::{
     jaro_winkler_distance, levenshtein, levenshtein_dp, qgram_distance, Euclidean,
     Levenshtein,
@@ -38,8 +48,12 @@ impl Report {
     }
 
     fn write(&self, backend_name: &str) {
-        let path = std::env::var("LMDS_BENCH_JSON")
-            .unwrap_or_else(|_| "BENCH_pr2.json".to_string());
+        self.write_to(backend_name, "LMDS_BENCH_JSON", "BENCH_pr2.json");
+    }
+
+    fn write_to(&self, backend_name: &str, env_key: &str, default_path: &str) {
+        let path =
+            std::env::var(env_key).unwrap_or_else(|_| default_path.to_string());
         let rows: Vec<Json> = self
             .results
             .iter()
@@ -64,6 +78,46 @@ impl Report {
             Err(e) => eprintln!("could not write {path}: {e}"),
         }
     }
+}
+
+/// Closed-loop serving load (64 in-flight requests) against a fresh
+/// string server embedding through `backend`'s MLP forward path; returns
+/// the measured p99 latency in seconds.
+fn serving_p99(
+    landmarks: &[String],
+    backend: &Backend,
+    params: &MlpParams,
+    queries: usize,
+) -> f64 {
+    let server = ServerBuilder::strings(
+        landmarks.to_vec(),
+        Arc::new(Levenshtein),
+        BackendNn::replica_factory(backend.clone(), params.clone()),
+    )
+    .batcher(BatcherConfig {
+        max_batch: 8,
+        max_delay: Duration::from_micros(200),
+        queue_cap: 4096,
+        frontend_threads: 1,
+        replicas: 2,
+    })
+    .build()
+    .expect("valid server configuration");
+    let h = server.handle();
+    let mut pending = VecDeque::new();
+    for i in 0..queries {
+        pending.push_back(h.submit(Request::object(format!("query {i}"))));
+        if pending.len() >= 64 {
+            pending.pop_front().unwrap().recv().expect("reply must arrive");
+        }
+    }
+    while let Some(t) = pending.pop_front() {
+        t.recv().expect("reply must arrive");
+    }
+    let p99 = h.metrics.snapshot().p99_s;
+    drop(h);
+    server.shutdown();
+    p99
 }
 
 fn main() {
@@ -335,4 +389,222 @@ fn main() {
     }
 
     report.write(backend.name());
+
+    // ---- kernel tier: simd vs scalar vs serial (PR 7) ----
+    // The acceptance bar: the vector tier beats the scalar tier on all
+    // three vectorised kernels, and the end-to-end A/B rows (stage 1 base
+    // solve, stage 2 streamed embedding, serving p99) record the carry-
+    // through. Written to a second report (BENCH_pr7.json) so the per-PR
+    // perf trajectories stay separable.
+    let mut report7 = Report { results: Vec::new() };
+    println!(
+        "\n== kernel tier A/B (auto resolves to: {}, vector ISA: {}) ==",
+        simd::active_tier_name(),
+        simd::simd_supported()
+    );
+    {
+        // (a) storage-layer metric kernel (strdist::metric euclidean_sq)
+        let va: Vec<f32> = (0..300).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let vb: Vec<f32> = (0..300).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        // the historical pre-tier kernel: a serial left-fold
+        fn serial_sq(a: &[f32], b: &[f32]) -> f64 {
+            let mut acc = 0.0f64;
+            for (x, y) in a.iter().zip(b.iter()) {
+                let d = (x - y) as f64;
+                acc += d * d;
+            }
+            acc
+        }
+        let r_ser = bench("euclidean_sq d=300 (serial left-fold)", &cfg, || {
+            serial_sq(&va, &vb)
+        });
+        println!("{}", r_ser.report());
+        report7.push(&r_ser);
+        let r_sc = bench("euclidean_sq d=300 (scalar tier)", &cfg, || {
+            euclidean_sq_scalar(&va, &vb)
+        });
+        println!("{}", r_sc.report());
+        report7.push(&r_sc);
+        let r_vec = bench("euclidean_sq d=300 (simd tier)", &cfg, || {
+            euclidean_sq_vector(&va, &vb)
+        });
+        println!(
+            "{}  (simd {:.2}x over scalar, {:.2}x over serial)",
+            r_vec.report(),
+            r_sc.median_s / r_vec.median_s,
+            r_ser.median_s / r_vec.median_s
+        );
+        report7.push(&r_vec);
+    }
+    let (x7, delta7) = {
+        // shared N=1200 K=7 problem for the stress and stage-1 rows
+        let n = 1200usize;
+        let k = 7usize;
+        let pts: Vec<Vec<f32>> = {
+            let mut rng2 = Rng::new(0xc7);
+            (0..n)
+                .map(|_| (0..k).map(|_| rng2.next_normal() as f32).collect())
+                .collect()
+        };
+        let refs: Vec<&[f32]> = pts.iter().map(|p| p.as_slice()).collect();
+        let delta = full_matrix(&refs, &Euclidean);
+        let x = Matrix::from_vec(n, k, pts.iter().flatten().copied().collect());
+        (x, delta)
+    };
+    {
+        // (b) LSMDS stress/gradient kernel (mds::lsmds stress_row_tile)
+        let r_ser = bench("stress_gradient N=1200 K=7 (serial oracle)", &quick, || {
+            stress_gradient(&x7, &delta7)
+        });
+        println!("{}", r_ser.report());
+        report7.push(&r_ser);
+        set_kernel_tier(KernelTier::Scalar);
+        let r_sc =
+            bench("stress_gradient_blocked N=1200 K=7 (scalar tier)", &quick, || {
+                stress_gradient_blocked(&x7, &delta7)
+            });
+        println!("{}", r_sc.report());
+        report7.push(&r_sc);
+        set_kernel_tier(KernelTier::Simd);
+        let r_vec =
+            bench("stress_gradient_blocked N=1200 K=7 (simd tier)", &quick, || {
+                stress_gradient_blocked(&x7, &delta7)
+            });
+        println!(
+            "{}  (simd {:.2}x over scalar, {:.2}x over serial)",
+            r_vec.report(),
+            r_sc.median_s / r_vec.median_s,
+            r_ser.median_s / r_vec.median_s
+        );
+        report7.push(&r_vec);
+    }
+    {
+        // (c) MLP forward microkernel (nn::forward_block affine_into)
+        let b = 256usize;
+        let input = Matrix::from_vec(
+            b,
+            300,
+            (0..b * 300).map(|_| rng.next_f32() * 5.0).collect(),
+        );
+        let r_ser = bench("mlp forward B=256 L=300 (serial oracle)", &quick, || {
+            forward(&params, &input)
+        });
+        println!("{}", r_ser.report());
+        report7.push(&r_ser);
+        set_kernel_tier(KernelTier::Scalar);
+        let r_sc = bench("forward_blocked B=256 L=300 (scalar tier)", &quick, || {
+            forward_blocked(&params, &input)
+        });
+        println!("{}", r_sc.report());
+        report7.push(&r_sc);
+        set_kernel_tier(KernelTier::Simd);
+        let r_vec = bench("forward_blocked B=256 L=300 (simd tier)", &quick, || {
+            forward_blocked(&params, &input)
+        });
+        println!(
+            "{}  (simd {:.2}x over scalar, {:.2}x over serial)",
+            r_vec.report(),
+            r_sc.median_s / r_vec.median_s,
+            r_ser.median_s / r_vec.median_s
+        );
+        report7.push(&r_vec);
+    }
+    {
+        // (d) stage 1 A/B: the base solve carry-through
+        let native = NativeBackend;
+        set_kernel_tier(KernelTier::Scalar);
+        let r_sc = bench("lsmds_steps N=1200 T=5 (scalar tier)", &quick, || {
+            native.lsmds_steps(&x7, &delta7, 1.0 / 2400.0, 5).unwrap()
+        });
+        println!("{}", r_sc.report());
+        report7.push(&r_sc);
+        set_kernel_tier(KernelTier::Simd);
+        let r_vec = bench("lsmds_steps N=1200 T=5 (simd tier)", &quick, || {
+            native.lsmds_steps(&x7, &delta7, 1.0 / 2400.0, 5).unwrap()
+        });
+        println!(
+            "{}  (simd {:.2}x over scalar)",
+            r_vec.report(),
+            r_sc.median_s / r_vec.median_s
+        );
+        report7.push(&r_vec);
+    }
+    {
+        // (e) stage 2 A/B: vector-metric cross_matrix + streamed-equivalent
+        // batch embedding over the solved landmarks
+        let lm_cfg = Matrix::random_normal(&mut rng, 300, 7, 1.0);
+        let q_pts: Vec<Vec<f32>> = {
+            let mut rng2 = Rng::new(0xd2);
+            (0..1024)
+                .map(|_| (0..7).map(|_| rng2.next_normal() as f32).collect())
+                .collect()
+        };
+        let lm_pts: Vec<Vec<f32>> = {
+            let mut rng2 = Rng::new(0xd3);
+            (0..300)
+                .map(|_| (0..7).map(|_| rng2.next_normal() as f32).collect())
+                .collect()
+        };
+        let q_refs: Vec<&[f32]> = q_pts.iter().map(|p| p.as_slice()).collect();
+        let lm_refs: Vec<&[f32]> = lm_pts.iter().map(|p| p.as_slice()).collect();
+        let run = |label: &str| {
+            bench(label, &quick, || {
+                let delta = cross_matrix(&q_refs, &lm_refs, &Euclidean);
+                let mut m =
+                    BackendOpt::with_defaults(Backend::native(), lm_cfg.clone());
+                m.total_steps = 20;
+                m.rel_tol = 0.0;
+                m.embed(&delta).unwrap()
+            })
+        };
+        set_kernel_tier(KernelTier::Scalar);
+        let r_sc = run("stage2 embed B=1024 L=300 (scalar tier)");
+        println!("{}", r_sc.report());
+        report7.push(&r_sc);
+        set_kernel_tier(KernelTier::Simd);
+        let r_vec = run("stage2 embed B=1024 L=300 (simd tier)");
+        println!(
+            "{}  (simd {:.2}x over scalar)",
+            r_vec.report(),
+            r_sc.median_s / r_vec.median_s
+        );
+        report7.push(&r_vec);
+    }
+    {
+        // (f) serving p99 A/B: one closed-loop run per tier, recorded as a
+        // single-sample row (median == the measured p99 seconds)
+        let lm_names: Vec<String> = names[..300].to_vec();
+        let queries = if quick_mode { 400 } else { 3000 };
+        let backend = Backend::native();
+        let mut p99_row = |label: &str, p99: f64| {
+            let r = BenchResult {
+                name: label.to_string(),
+                iters: queries,
+                samples_s: vec![p99],
+                median_s: p99,
+                mad_s: 0.0,
+                mean_s: p99,
+                min_s: p99,
+            };
+            println!("{label}: p99 {:.3} ms", p99 * 1e3);
+            report7.push(&r);
+            r
+        };
+        set_kernel_tier(KernelTier::Scalar);
+        let r_sc = p99_row(
+            "serving p99 seconds (scalar tier)",
+            serving_p99(&lm_names, &backend, &params, queries),
+        );
+        set_kernel_tier(KernelTier::Simd);
+        let r_vec = p99_row(
+            "serving p99 seconds (simd tier)",
+            serving_p99(&lm_names, &backend, &params, queries),
+        );
+        println!(
+            "  (simd p99 {:.2}x over scalar)",
+            r_sc.median_s / r_vec.median_s
+        );
+    }
+    set_kernel_tier(KernelTier::Auto);
+    report7.write_to(backend.name(), "LMDS_BENCH_JSON_PR7", "BENCH_pr7.json");
 }

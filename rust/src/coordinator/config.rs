@@ -15,6 +15,7 @@ use crate::coordinator::server::BatcherConfig;
 use crate::coordinator::shard::ShardConfig;
 use crate::coordinator::trainer::TrainConfig;
 use crate::mds::{LandmarkMethod, LsmdsConfig};
+use crate::runtime::simd::KernelTier;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -93,6 +94,12 @@ pub struct RunConfig {
     /// Front door: bounded in-flight queue before load shedding (see
     /// [`NetConfig::max_in_flight`]).
     pub max_in_flight: usize,
+    /// Compute kernel tier: "auto" (the `LMDS_KERNEL_TIER` environment
+    /// variable if set, else CPU feature detection), "simd" (force the
+    /// vector kernels; falls back loudly when unsupported) or "scalar"
+    /// (the portable reference kernels). All tiers are bit-identical —
+    /// see [`crate::runtime::simd`].
+    pub kernel_tier: String,
 }
 
 impl Default for RunConfig {
@@ -124,6 +131,7 @@ impl Default for RunConfig {
             listen: None,
             max_connections: 256,
             max_in_flight: 1024,
+            kernel_tier: "auto".into(),
         }
     }
 }
@@ -246,6 +254,11 @@ impl RunConfig {
             anyhow::ensure!(v >= 1, "config: max_in_flight must be >= 1");
             self.max_in_flight = v;
         }
+        if let Some(v) = json.get("kernel_tier").and_then(Json::as_str) {
+            v.parse::<KernelTier>()
+                .map_err(|e| anyhow::anyhow!("config: {e}"))?;
+            self.kernel_tier = v.to_string();
+        }
         Ok(())
     }
 
@@ -333,6 +346,10 @@ impl RunConfig {
             anyhow::ensure!(v >= 1, "--max-in-flight must be >= 1");
             self.max_in_flight = v;
         }
+        if let Some(v) = args.get("kernel-tier") {
+            v.parse::<KernelTier>().map_err(anyhow::Error::msg)?;
+            self.kernel_tier = v.to_string();
+        }
         Ok(())
     }
 
@@ -353,6 +370,19 @@ impl RunConfig {
                 );
                 BaseSolver::Monolithic
             })
+    }
+
+    /// The typed kernel-tier selection. Parse paths validate the name up
+    /// front; a caller that sets the field directly with an unknown name
+    /// falls back to auto, loudly.
+    pub fn tier(&self) -> KernelTier {
+        self.kernel_tier.parse().unwrap_or_else(|_| {
+            log::warn!(
+                "unknown kernel_tier {:?}; using auto detection",
+                self.kernel_tier
+            );
+            KernelTier::Auto
+        })
     }
 
     /// Derive the embedding-pipeline configuration from this run config.
@@ -541,6 +571,41 @@ mod tests {
         assert!(cfg
             .apply_json(&Json::parse(r#"{"base_blocks": 0}"#).unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn kernel_tier_round_trips_and_validates() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.kernel_tier, "auto");
+        assert_eq!(cfg.tier(), KernelTier::Auto);
+
+        cfg.apply_json(&Json::parse(r#"{"kernel_tier": "scalar"}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.tier(), KernelTier::Scalar);
+
+        let specs = vec![OptSpec {
+            name: "kernel-tier",
+            help: "",
+            takes_value: true,
+            default: None,
+        }];
+        let argv: Vec<String> =
+            ["--kernel-tier", "simd"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv, &specs).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.tier(), KernelTier::Simd);
+
+        // bad values rejected by both parse paths; a directly-set bad
+        // field falls back to auto
+        assert!(cfg
+            .apply_json(&Json::parse(r#"{"kernel_tier": "avx512"}"#).unwrap())
+            .is_err());
+        let argv: Vec<String> =
+            ["--kernel-tier", "fast"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv, &specs).unwrap();
+        assert!(cfg.apply_args(&args).is_err());
+        cfg.kernel_tier = "bogus".into();
+        assert_eq!(cfg.tier(), KernelTier::Auto);
     }
 
     #[test]

@@ -123,6 +123,12 @@ fn common_specs() -> Vec<OptSpec> {
              stopping disabled (bit-reproducible across stream chunks; \
              0 = adaptive default)",
         ),
+        opt(
+            "kernel-tier",
+            "compute kernel tier: auto|simd|scalar (auto = the \
+             LMDS_KERNEL_TIER env var if set, else CPU detection; all \
+             tiers are bit-identical)",
+        ),
         flag("no-pjrt", "force the native compute backend (skip PJRT artifacts)"),
         flag("help", "show help"),
     ]
@@ -134,6 +140,13 @@ fn load_config(args: &Args) -> Result<RunConfig> {
         None => RunConfig::default(),
     };
     cfg.apply_args(args)?;
+    // Pin the kernel tier before any backend spins up; the default
+    // "auto" still defers to LMDS_KERNEL_TIER / CPU detection.
+    lmds_ose::runtime::simd::set_kernel_tier(cfg.tier());
+    log::debug!(
+        "kernel tier: {}",
+        lmds_ose::runtime::simd::active_tier_name()
+    );
     Ok(cfg)
 }
 

@@ -114,16 +114,17 @@ pub const GRAD_ROW_BLOCK: usize = 16;
 /// [`ComputeBackend::lsmds_steps`](crate::runtime::ComputeBackend). Two
 /// changes over the f64 oracle: (1) the `i`/`j` loops are interchanged
 /// into `GRAD_ROW_BLOCK x GRAD_TILE` blocks, so each j-tile of `x` is
-/// loaded once per row block instead of once per row; (2) the inner loop
-/// fuses the distance and gradient passes over one stack-local diff
-/// vector (the oracle walks `xi - xj` twice) and accumulates in `f32`,
-/// which lets the `c`-loop vectorise instead of round-tripping through
-/// `f64` per element. j-tiles advance in ascending order, so each row's
-/// accumulation order matches the oracle's and per-row stress still sums
-/// in `f64` — sigma stays comparable at any N. Numerics therefore differ
-/// from [`stress_gradient`] only in the last few bits of the f32
-/// gradient; the parity contract (`tests/backend_parity.rs`) holds the
-/// two within a scale-aware 1e-3.
+/// loaded once per row block instead of once per row; (2) the per-row
+/// inner loop is the kernel-tier
+/// [`stress_row_tile`](crate::runtime::simd::stress_row_tile) — a fused
+/// distance + gradient pass over one stack-local diff vector that
+/// accumulates the f32 squared distance in the canonical 8-lane tile
+/// order (explicitly vectorised under `--kernel-tier simd`, identical
+/// bits from the scalar tier). j-tiles advance in ascending order and
+/// per-row stress still sums in `f64` — sigma stays comparable at any
+/// N. Numerics therefore differ from [`stress_gradient`] only in the
+/// last few bits of the f32 gradient; the parity contract
+/// (`tests/backend_parity.rs`) holds the two within a scale-aware 1e-3.
 pub fn stress_gradient_blocked(x: &Matrix, delta: &Matrix) -> (Matrix, f64) {
     let n = x.rows;
     let k = x.cols;
@@ -144,29 +145,9 @@ pub fn stress_gradient_blocked(x: &Matrix, delta: &Matrix) -> (Matrix, f64) {
                     let xi = x.row(i);
                     let drow = delta.row(i);
                     let gr = &mut gi[(i - start) * k..(i - start + 1) * k];
-                    let mut s = 0.0f64;
-                    for j in t0..t1 {
-                        if j == i {
-                            continue;
-                        }
-                        let xj = x.row(j);
-                        let mut sq = 0.0f32;
-                        for c in 0..k {
-                            let d = xi[c] - xj[c];
-                            diff[c] = d;
-                            sq += d * d;
-                        }
-                        let d = sq.sqrt();
-                        let resid = d - drow[j];
-                        s += (resid as f64) * (resid as f64);
-                        if d > 1e-12 {
-                            let coef = 2.0 * resid / d;
-                            for c in 0..k {
-                                gr[c] += coef * diff[c];
-                            }
-                        }
-                    }
-                    si[i - start] += s;
+                    si[i - start] += crate::runtime::simd::stress_row_tile(
+                        xi, x, t0, t1, i, drow, gr, &mut diff,
+                    );
                 }
                 t0 = t1;
             }

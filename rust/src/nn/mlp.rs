@@ -158,7 +158,10 @@ pub fn forward(params: &MlpParams, d: &Matrix) -> Matrix {
 /// This is the cache-blocked production kernel behind
 /// [`ComputeBackend::mlp_fwd`](crate::runtime::ComputeBackend): each layer
 /// accumulates `out_row += x[i] * w.row(i)` over unit-stride weight rows
-/// (row-major axpy), instead of walking `w.at(i, c)` down a column per
+/// (row-major axpy) through the kernel-tier
+/// [`affine_into`](crate::runtime::simd::affine_into) microkernel —
+/// explicitly vectorised under `--kernel-tier simd`, identical bits from
+/// the scalar tier — instead of walking `w.at(i, c)` down a column per
 /// output as the old per-row kernel did. The per-output accumulation order
 /// (ascending input index, bias first) is identical to [`forward`]'s, so
 /// the two agree to the last bit apart from `forward`'s skip of exact-zero
@@ -178,13 +181,7 @@ pub fn forward_block(params: &MlpParams, input: &[f32], rows: usize, out: &mut [
         for r in 0..rows {
             let xr = &cur[r * width..(r + 1) * width];
             let or = &mut next[r * next_width..(r + 1) * next_width];
-            or.copy_from_slice(b);
-            for (i, &xv) in xr.iter().enumerate() {
-                let wr = w.row(i);
-                for (o, &wv) in or.iter_mut().zip(wr.iter()) {
-                    *o += xv * wv;
-                }
-            }
+            crate::runtime::simd::affine_into(xr, w, b, or);
             if layer < 3 {
                 for v in or.iter_mut() {
                     if *v < 0.0 {

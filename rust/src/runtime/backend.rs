@@ -146,6 +146,10 @@ impl Backend {
 
     /// The pure-Rust native backend (always available).
     pub fn native() -> Backend {
+        log::debug!(
+            "native backend kernel tier: {}",
+            super::simd::active_tier_name()
+        );
         Backend(Arc::new(super::native::NativeBackend::default()))
     }
 

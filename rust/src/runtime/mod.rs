@@ -10,10 +10,17 @@
 //! [`manifest`] (always compiled — it is plain data + hand-rolled JSON) is
 //! the contract between the AOT compiler and the artifact runtime; the
 //! `lmds-ose info` subcommand reads it without any PJRT dependency.
+//!
+//! [`simd`] is the explicit kernel tier underneath the native backend:
+//! runtime-dispatched AVX2/NEON/scalar kernels for the hot per-row inner
+//! loops (vector metrics, the blocked stress-gradient tile, the MLP
+//! affine microkernel), bit-identical across tiers by construction and
+//! pinned process-wide via [`simd::set_kernel_tier`] (`--kernel-tier`).
 
 pub mod backend;
 pub mod manifest;
 pub mod native;
+pub mod simd;
 
 #[cfg(feature = "pjrt")]
 pub mod client;
@@ -25,6 +32,7 @@ pub mod pjrt;
 pub use backend::{AdamState, Backend, ComputeBackend};
 pub use manifest::{ArtifactSpec, Manifest};
 pub use native::NativeBackend;
+pub use simd::KernelTier;
 
 #[cfg(feature = "pjrt")]
 pub use client::{ArgValue, OutValue, Runtime};

@@ -11,6 +11,13 @@
 //! dedicated cross-check tests in `tests/backend_parity.rs` hold against
 //! those oracles — this backend is both the default production path and
 //! the reference the PJRT artifacts are validated against.
+//!
+//! The blocked kernels themselves dispatch through the explicit SIMD
+//! kernel tier ([`crate::runtime::simd`], `--kernel-tier`), so every
+//! caller of this backend — monolithic and divide base solves, in-RAM
+//! and out-of-core pipelines, unsharded and sharded serving — inherits
+//! the vector kernels with no wiring of its own, and all tiers produce
+//! bit-identical results.
 
 use anyhow::Result;
 

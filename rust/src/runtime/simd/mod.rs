@@ -1,0 +1,586 @@
+//! Explicit SIMD kernel tier: runtime-dispatched vector kernels for the
+//! three per-row inner loops that dominate both pipeline stages and
+//! serving p99 — the `strdist::metric` vector metrics, the blocked LSMDS
+//! stress-gradient tile, and the MLP affine microkernel.
+//!
+//! # Tiers and dispatch
+//!
+//! Three tiers exist; one is pinned per process and every kernel call
+//! dispatches through it:
+//!
+//! | kernel                | x86_64 tier     | aarch64 tier  | everywhere  |
+//! |-----------------------|-----------------|---------------|-------------|
+//! | [`euclidean_sq`]      | AVX2 f32x8→f64x4| NEON 2×f32x4  | scalar tile |
+//! | [`manhattan`]         | AVX2 f32x8→f64x4| NEON 2×f32x4  | scalar tile |
+//! | [`stress_row_tile`]   | AVX2 f32x8      | NEON 2×f32x4  | scalar tile |
+//! | [`affine_into`]       | AVX2 f32x8      | NEON f32x4    | scalar tile |
+//!
+//! The tier resolves lazily on the first kernel call: `auto` consults the
+//! `LMDS_KERNEL_TIER` environment variable (`auto|simd|scalar`) and then
+//! CPU feature detection (`is_x86_feature_detected!("avx2")` on x86_64,
+//! NEON detection on aarch64). [`set_kernel_tier`] — driven by the
+//! `--kernel-tier` flag / `kernel_tier` config key — pins the tier for
+//! the whole process and wins over the environment. Under Miri the
+//! scalar tier is always selected, so the whole module is
+//! Miri-checkable. AVX2 CPUs without FMA are not a practical concern
+//! (every AVX2 part ships FMA), but FMA is deliberately *unused* — see
+//! below — so detection gates on AVX2 alone.
+//!
+//! # Numerics: one canonical accumulation order, bit-equal tiers
+//!
+//! Every tier accumulates reductions in the same **8-lane tile order**:
+//! element `j` contributes to lane `j % 8`, and the eight lane sums
+//! combine with the fixed stride-4 pairwise tree
+//! `((l0+l4) + (l2+l6)) + ((l1+l5) + (l3+l7))` ([`tree8_f32`] /
+//! [`tree8_f64`]) — the natural register layout of an 8-wide vector
+//! accumulator. No FMA contraction is used anywhere (multiply, then add:
+//! two roundings), and remainder lanes contribute exact `+0.0` no-ops,
+//! so the vector tiers are **bit-identical** to the scalar tier by
+//! construction, not merely close: `--kernel-tier` is unobservable
+//! except in speed, and `tests/kernel_parity.rs` asserts exact equality.
+//! The historical strictly-serial summation orders differ from the
+//! canonical order by ordinary rounding; parity suites hold them within
+//! documented 1e-6 (metrics, MLP) and scale-aware 1e-3 (stress
+//! gradient) bands.
+//!
+//! # Adding a kernel
+//!
+//! 1. Write the **scalar tile** version in `scalar.rs` first, using
+//!    `lanes[j % 8]` accumulators and [`tree8_f32`]/[`tree8_f64`]; it is
+//!    the semantics, so keep it boring.
+//! 2. Mirror it in `x86.rs` (`#[target_feature(enable = "avx2")]`,
+//!    masked loads for the tail, multiply-then-add only) and `neon.rs`
+//!    (scalar tail into the extracted lane array).
+//! 3. Add a dispatching wrapper here with a hard length assert, plus
+//!    `_scalar`/`_vector` pinned twins for the differential tests.
+//! 4. Pin vector-vs-scalar bit equality in `tests/kernel_parity.rs`
+//!    over lengths covering every `len % 8` remainder, and a band vs
+//!    any pre-existing serial oracle.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::mds::Matrix;
+
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+#[cfg(target_arch = "x86_64")]
+use x86 as arch;
+
+#[cfg(target_arch = "aarch64")]
+use neon as arch;
+
+// ---------------------------------------------------------------------------
+// Tier selection
+
+/// Kernel-tier selection knob (`--kernel-tier`, `kernel_tier`,
+/// `LMDS_KERNEL_TIER`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Resolve from the `LMDS_KERNEL_TIER` environment variable if set,
+    /// else from CPU feature detection (the default).
+    Auto,
+    /// Force the vector kernels (falls back to scalar, loudly, when the
+    /// CPU/build has no vector path).
+    Simd,
+    /// Force the portable scalar reference kernels.
+    Scalar,
+}
+
+impl std::str::FromStr for KernelTier {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(KernelTier::Auto),
+            "simd" => Ok(KernelTier::Simd),
+            "scalar" => Ok(KernelTier::Scalar),
+            other => Err(format!("unknown kernel tier {other:?} (auto|simd|scalar)")),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            KernelTier::Auto => "auto",
+            KernelTier::Simd => "simd",
+            KernelTier::Scalar => "scalar",
+        })
+    }
+}
+
+const TIER_UNSET: u8 = 0;
+const TIER_SCALAR: u8 = 1;
+const TIER_SIMD: u8 = 2;
+
+/// Pinned tier: resolved lazily on first use, overridden by
+/// [`set_kernel_tier`]. Relaxed ordering suffices — the resolved value
+/// is a pure function of the environment, so racing initialisers agree.
+static TIER: AtomicU8 = AtomicU8::new(TIER_UNSET);
+
+#[cfg(target_arch = "x86_64")]
+fn detect_simd() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_simd() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_simd() -> bool {
+    false
+}
+
+/// Whether this CPU/build has a vector tier at all (AVX2 on x86_64, NEON
+/// on aarch64). Always false under Miri, which cannot execute vendor
+/// intrinsics — the scalar tier keeps the module Miri-checkable.
+pub fn simd_supported() -> bool {
+    !cfg!(miri) && detect_simd()
+}
+
+/// `LMDS_KERNEL_TIER` environment override; unset/invalid = Auto (an
+/// invalid value warns rather than erroring so a stale environment can
+/// never take the service down).
+fn env_tier() -> KernelTier {
+    match std::env::var("LMDS_KERNEL_TIER") {
+        Ok(v) => v.parse().unwrap_or_else(|e: String| {
+            log::warn!("ignoring LMDS_KERNEL_TIER: {e}");
+            KernelTier::Auto
+        }),
+        Err(_) => KernelTier::Auto,
+    }
+}
+
+fn resolve(requested: KernelTier) -> u8 {
+    let effective = match requested {
+        KernelTier::Auto => env_tier(),
+        pinned => pinned,
+    };
+    match effective {
+        KernelTier::Scalar => TIER_SCALAR,
+        KernelTier::Simd if simd_supported() => TIER_SIMD,
+        KernelTier::Simd => {
+            log::warn!(
+                "kernel tier \"simd\" requested but this CPU/build has no vector \
+                 path; using the scalar tier"
+            );
+            TIER_SCALAR
+        }
+        KernelTier::Auto => {
+            if simd_supported() {
+                TIER_SIMD
+            } else {
+                TIER_SCALAR
+            }
+        }
+    }
+}
+
+/// Pin the process-wide kernel tier (config/CLI override; wins over the
+/// `LMDS_KERNEL_TIER` environment variable except under `Auto`, which
+/// re-reads it). Safe to call at any time: all tiers are bit-identical,
+/// so a mid-run switch changes speed only.
+pub fn set_kernel_tier(tier: KernelTier) {
+    TIER.store(resolve(tier), Ordering::Relaxed);
+}
+
+fn simd_active() -> bool {
+    match TIER.load(Ordering::Relaxed) {
+        TIER_SIMD => true,
+        TIER_SCALAR => false,
+        _ => {
+            let resolved = resolve(KernelTier::Auto);
+            TIER.store(resolved, Ordering::Relaxed);
+            resolved == TIER_SIMD
+        }
+    }
+}
+
+/// Human-readable name of the tier kernels currently dispatch to
+/// (resolving it first if needed): `"scalar"`, `"simd-avx2"` or
+/// `"simd-neon"`.
+pub fn active_tier_name() -> &'static str {
+    if simd_active() {
+        if cfg!(target_arch = "x86_64") {
+            "simd-avx2"
+        } else {
+            "simd-neon"
+        }
+    } else {
+        "scalar"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The canonical reduction tree
+
+/// Combine eight f32 lane sums in the canonical stride-4 pairwise tree:
+/// `((l0+l4) + (l2+l6)) + ((l1+l5) + (l3+l7))`. Every tier funnels its
+/// reductions through this exact shape, which is what makes them
+/// bit-comparable.
+#[inline]
+pub fn tree8_f32(l: &[f32; 8]) -> f32 {
+    let a = [l[0] + l[4], l[1] + l[5], l[2] + l[6], l[3] + l[7]];
+    (a[0] + a[2]) + (a[1] + a[3])
+}
+
+/// f64 counterpart of [`tree8_f32`] (same tree shape).
+#[inline]
+pub fn tree8_f64(l: &[f64; 8]) -> f64 {
+    let a = [l[0] + l[4], l[1] + l[5], l[2] + l[6], l[3] + l[7]];
+    (a[0] + a[2]) + (a[1] + a[3])
+}
+
+// ---------------------------------------------------------------------------
+// Dispatching kernels
+
+/// Squared Euclidean distance in f64, canonical 8-lane tile order
+/// (differences are formed in f32, squared and accumulated in f64 —
+/// the historical `strdist::metric` contract).
+///
+/// Panics if the operand lengths differ (the pre-SIMD kernels silently
+/// truncated in release builds; an unsafe vector path must not).
+pub fn euclidean_sq(a: &[f32], b: &[f32]) -> f64 {
+    if simd_active() {
+        euclidean_sq_vector(a, b)
+    } else {
+        euclidean_sq_scalar(a, b)
+    }
+}
+
+/// Manhattan distance in f64, canonical 8-lane tile order. Panics on
+/// length mismatch.
+pub fn manhattan(a: &[f32], b: &[f32]) -> f64 {
+    if simd_active() {
+        manhattan_vector(a, b)
+    } else {
+        manhattan_scalar(a, b)
+    }
+}
+
+/// Fused distance + stress + gradient kernel for one output row of the
+/// blocked LSMDS gradient: sweeps `x` rows `t0..t1` (skipping `skip`,
+/// the output row itself) against the row coordinates `xi`, writing the
+/// coordinate differences into the `diff` scratch, accumulating the
+/// gradient into `gr`, and returning the row's raw-stress contribution
+/// `sum_j (d_ij - delta_ij)^2` in f64.
+///
+/// `drow` is the dissimilarity row `delta[i][..]` (indexed by absolute
+/// `j`). `xi`, `gr` and `diff` must all have length `x.cols`. The f32
+/// squared distance accumulates in the canonical 8-lane tile order; the
+/// gradient update `gr[c] += coef * diff[c]` is elementwise and
+/// order-free.
+pub fn stress_row_tile(
+    xi: &[f32],
+    x: &Matrix,
+    t0: usize,
+    t1: usize,
+    skip: usize,
+    drow: &[f32],
+    gr: &mut [f32],
+    diff: &mut [f32],
+) -> f64 {
+    if simd_active() {
+        stress_row_tile_vector(xi, x, t0, t1, skip, drow, gr, diff)
+    } else {
+        stress_row_tile_scalar(xi, x, t0, t1, skip, drow, gr, diff)
+    }
+}
+
+/// Affine microkernel of the blocked MLP forward pass: `out = b`, then
+/// `out += x[i] * w.row(i)` for ascending `i` (row-major axpy). The
+/// accumulation order per output is bias first, then ascending input
+/// index, multiply-then-add — identical to the serial `nn::forward`
+/// oracle apart from its skip of exact-zero inputs.
+pub fn affine_into(x: &[f32], w: &Matrix, b: &[f32], out: &mut [f32]) {
+    if simd_active() {
+        affine_into_vector(x, w, b, out)
+    } else {
+        affine_into_scalar(x, w, b, out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tier-pinned twins (differential tests and benches)
+
+fn assert_metric_operands(a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "metric operands must have equal length");
+}
+
+fn assert_stress_operands(
+    xi: &[f32],
+    x: &Matrix,
+    t1: usize,
+    drow: &[f32],
+    gr: &[f32],
+    diff: &[f32],
+) {
+    let k = x.cols;
+    assert_eq!(xi.len(), k, "xi length != K");
+    assert_eq!(gr.len(), k, "gradient row length != K");
+    assert_eq!(diff.len(), k, "diff scratch length != K");
+    assert!(t1 <= x.rows, "tile end out of bounds");
+    assert!(t1 <= drow.len(), "delta row shorter than tile end");
+}
+
+fn assert_affine_operands(x: &[f32], w: &Matrix, b: &[f32], out: &[f32]) {
+    assert_eq!(x.len(), w.rows, "input length != weight rows");
+    assert_eq!(b.len(), w.cols, "bias length != weight cols");
+    assert_eq!(out.len(), w.cols, "output length != weight cols");
+}
+
+/// [`euclidean_sq`] pinned to the scalar tier.
+pub fn euclidean_sq_scalar(a: &[f32], b: &[f32]) -> f64 {
+    assert_metric_operands(a, b);
+    scalar::euclidean_sq(a, b)
+}
+
+/// [`euclidean_sq`] pinned to the vector tier (falls back to the scalar
+/// tier when the CPU/build has none, so it is always safe to call).
+pub fn euclidean_sq_vector(a: &[f32], b: &[f32]) -> f64 {
+    assert_metric_operands(a, b);
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if simd_supported() {
+        // SAFETY: simd_supported() verified the target feature at runtime.
+        return unsafe { arch::euclidean_sq(a, b) };
+    }
+    scalar::euclidean_sq(a, b)
+}
+
+/// [`manhattan`] pinned to the scalar tier.
+pub fn manhattan_scalar(a: &[f32], b: &[f32]) -> f64 {
+    assert_metric_operands(a, b);
+    scalar::manhattan(a, b)
+}
+
+/// [`manhattan`] pinned to the vector tier (scalar fallback as
+/// [`euclidean_sq_vector`]).
+pub fn manhattan_vector(a: &[f32], b: &[f32]) -> f64 {
+    assert_metric_operands(a, b);
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if simd_supported() {
+        // SAFETY: simd_supported() verified the target feature at runtime.
+        return unsafe { arch::manhattan(a, b) };
+    }
+    scalar::manhattan(a, b)
+}
+
+/// [`stress_row_tile`] pinned to the scalar tier.
+pub fn stress_row_tile_scalar(
+    xi: &[f32],
+    x: &Matrix,
+    t0: usize,
+    t1: usize,
+    skip: usize,
+    drow: &[f32],
+    gr: &mut [f32],
+    diff: &mut [f32],
+) -> f64 {
+    assert_stress_operands(xi, x, t1, drow, gr, diff);
+    scalar::stress_row_tile(xi, x, t0, t1, skip, drow, gr, diff)
+}
+
+/// [`stress_row_tile`] pinned to the vector tier (scalar fallback as
+/// [`euclidean_sq_vector`]).
+pub fn stress_row_tile_vector(
+    xi: &[f32],
+    x: &Matrix,
+    t0: usize,
+    t1: usize,
+    skip: usize,
+    drow: &[f32],
+    gr: &mut [f32],
+    diff: &mut [f32],
+) -> f64 {
+    assert_stress_operands(xi, x, t1, drow, gr, diff);
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if simd_supported() {
+        // SAFETY: simd_supported() verified the target feature at runtime;
+        // the asserts above pin every slice length the kernel reads.
+        return unsafe { arch::stress_row_tile(xi, x, t0, t1, skip, drow, gr, diff) };
+    }
+    scalar::stress_row_tile(xi, x, t0, t1, skip, drow, gr, diff)
+}
+
+/// [`affine_into`] pinned to the scalar tier.
+pub fn affine_into_scalar(x: &[f32], w: &Matrix, b: &[f32], out: &mut [f32]) {
+    assert_affine_operands(x, w, b, out);
+    scalar::affine_into(x, w, b, out);
+}
+
+/// [`affine_into`] pinned to the vector tier (scalar fallback as
+/// [`euclidean_sq_vector`]).
+pub fn affine_into_vector(x: &[f32], w: &Matrix, b: &[f32], out: &mut [f32]) {
+    assert_affine_operands(x, w, b, out);
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if simd_supported() {
+        // SAFETY: simd_supported() verified the target feature at runtime;
+        // the asserts above pin every slice length the kernel reads.
+        unsafe { arch::affine_into(x, w, b, out) };
+        return;
+    }
+    scalar::affine_into(x, w, b, out);
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    // These unit tests are the Miri surface for the module (CI runs
+    // `cargo miri test ... runtime::simd`): under Miri every dispatch
+    // resolves to the scalar tier, so the canonical kernels get a full
+    // UB check while the intrinsic tiers are covered by the ASan job and
+    // `tests/kernel_parity.rs`.
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_f32() * 4.0 - 2.0).collect()
+    }
+
+    #[test]
+    fn tier_parses_and_prints() {
+        for (s, t) in [
+            ("auto", KernelTier::Auto),
+            ("simd", KernelTier::Simd),
+            ("scalar", KernelTier::Scalar),
+            (" SIMD ", KernelTier::Simd),
+        ] {
+            assert_eq!(s.parse::<KernelTier>().unwrap(), t);
+        }
+        assert!("avx512".parse::<KernelTier>().is_err());
+        assert_eq!(KernelTier::Simd.to_string(), "simd");
+    }
+
+    #[test]
+    fn tier_pinning_round_trips() {
+        set_kernel_tier(KernelTier::Scalar);
+        assert_eq!(active_tier_name(), "scalar");
+        set_kernel_tier(KernelTier::Simd);
+        if simd_supported() {
+            assert_ne!(active_tier_name(), "scalar");
+        } else {
+            // no vector path (e.g. under Miri): simd falls back, loudly
+            assert_eq!(active_tier_name(), "scalar");
+        }
+        set_kernel_tier(KernelTier::Auto);
+    }
+
+    #[test]
+    fn tree8_matches_plain_sum_on_exact_inputs() {
+        // powers of two sum exactly in any order, so tree == serial
+        let l = [1.0f32, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+        assert_eq!(tree8_f32(&l), 255.0);
+        let d = [1.0f64, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+        assert_eq!(tree8_f64(&d), 255.0);
+    }
+
+    #[test]
+    fn scalar_metric_matches_serial_oracle_band() {
+        let mut rng = Rng::new(0x51);
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 40] {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            let serial_sq: f64 = a
+                .iter()
+                .zip(b.iter())
+                .map(|(x, y)| {
+                    let d = (*x - *y) as f64;
+                    d * d
+                })
+                .sum();
+            let got = euclidean_sq_scalar(&a, &b);
+            assert!(
+                (got - serial_sq).abs() <= 1e-6 * (1.0 + serial_sq),
+                "n={n}: canonical {got} vs serial {serial_sq}"
+            );
+            let serial_l1: f64 =
+                a.iter().zip(b.iter()).map(|(x, y)| ((*x - *y) as f64).abs()).sum();
+            let got = manhattan_scalar(&a, &b);
+            assert!((got - serial_l1).abs() <= 1e-6 * (1.0 + serial_l1));
+        }
+    }
+
+    #[test]
+    fn scalar_stress_tile_matches_inline_reference() {
+        let mut rng = Rng::new(0x52);
+        let n = 9;
+        for k in [1usize, 2, 7, 8, 11] {
+            let x = Matrix::from_vec(n, k, rand_vec(&mut rng, n * k));
+            let delta = Matrix::from_vec(n, n, rand_vec(&mut rng, n * n));
+            let i = 4;
+            let mut gr = vec![0.0f32; k];
+            let mut diff = vec![0.0f32; k];
+            let s = stress_row_tile_scalar(
+                x.row(i),
+                &x,
+                0,
+                n,
+                i,
+                delta.row(i),
+                &mut gr,
+                &mut diff,
+            );
+            // reference: same tile order, written independently
+            let mut s_ref = 0.0f64;
+            let mut gr_ref = vec![0.0f32; k];
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let mut lanes = [0.0f32; 8];
+                let mut dv = vec![0.0f32; k];
+                for c in 0..k {
+                    let d = x.at(i, c) - x.at(j, c);
+                    dv[c] = d;
+                    lanes[c & 7] += d * d;
+                }
+                let d = tree8_f32(&lanes).sqrt();
+                let resid = d - delta.at(i, j);
+                s_ref += (resid as f64) * (resid as f64);
+                if d > 1e-12 {
+                    let coef = 2.0 * resid / d;
+                    for c in 0..k {
+                        gr_ref[c] += coef * dv[c];
+                    }
+                }
+            }
+            assert_eq!(s.to_bits(), s_ref.to_bits(), "k={k}");
+            assert_eq!(gr, gr_ref, "k={k}");
+        }
+    }
+
+    #[test]
+    fn scalar_affine_matches_inline_reference() {
+        let mut rng = Rng::new(0x53);
+        for (n_in, n_out) in [(1usize, 1usize), (3, 7), (8, 8), (5, 17)] {
+            let w = Matrix::from_vec(n_in, n_out, rand_vec(&mut rng, n_in * n_out));
+            let b = rand_vec(&mut rng, n_out);
+            let x = rand_vec(&mut rng, n_in);
+            let mut out = vec![0.0f32; n_out];
+            affine_into_scalar(&x, &w, &b, &mut out);
+            for c in 0..n_out {
+                let mut acc = b[c];
+                for i in 0..n_in {
+                    acc += x[i] * w.at(i, c);
+                }
+                assert_eq!(out[c].to_bits(), acc.to_bits(), "({n_in},{n_out}) col {c}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "equal length")]
+    fn metric_length_mismatch_panics() {
+        euclidean_sq(&[1.0, 2.0], &[1.0]);
+    }
+}

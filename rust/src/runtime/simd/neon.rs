@@ -1,0 +1,199 @@
+//! NEON tier (aarch64). Always compiled on aarch64; executed only after
+//! NEON feature detection succeeded at dispatch time (NEON is baseline
+//! on aarch64, so this is effectively always).
+//!
+//! Same bit-equality contract as the AVX2 tier (see `x86.rs`): no FMA
+//! (multiply then add), the scalar tier's `j % 8` lane mapping — held
+//! here as pairs of 4-wide registers — and the shared `tree8_*`
+//! combine. NEON has no masked loads, so remainder elements are
+//! processed scalar-wise *into the extracted lane array* (for lane-
+//! mapped reductions) or elementwise (for the order-free axpy updates);
+//! both append the tail contributions after the vector tiles, exactly
+//! like the scalar tier does, so results stay bit-identical.
+
+use std::arch::aarch64::*;
+
+use crate::mds::Matrix;
+
+use super::{tree8_f32, tree8_f64};
+
+/// NEON [`super::euclidean_sq`]: two f32x4 loads per 8-tile, widened to
+/// four f64x2 accumulators (lane pairs 0-1 / 2-3 / 4-5 / 6-7), scalar
+/// tail into the extracted lane array, tree-combined.
+///
+/// # Safety
+/// Caller must have verified NEON support; `a.len() == b.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn euclidean_sq(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len();
+    let n8 = n - (n % 8);
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    let mut acc45 = vdupq_n_f64(0.0);
+    let mut acc67 = vdupq_n_f64(0.0);
+    let mut j = 0;
+    while j < n8 {
+        let da = vsubq_f32(vld1q_f32(ap.add(j)), vld1q_f32(bp.add(j)));
+        let db = vsubq_f32(vld1q_f32(ap.add(j + 4)), vld1q_f32(bp.add(j + 4)));
+        let d01 = vcvt_f64_f32(vget_low_f32(da));
+        let d23 = vcvt_f64_f32(vget_high_f32(da));
+        let d45 = vcvt_f64_f32(vget_low_f32(db));
+        let d67 = vcvt_f64_f32(vget_high_f32(db));
+        acc01 = vaddq_f64(acc01, vmulq_f64(d01, d01));
+        acc23 = vaddq_f64(acc23, vmulq_f64(d23, d23));
+        acc45 = vaddq_f64(acc45, vmulq_f64(d45, d45));
+        acc67 = vaddq_f64(acc67, vmulq_f64(d67, d67));
+        j += 8;
+    }
+    let mut lanes = [0.0f64; 8];
+    vst1q_f64(lanes.as_mut_ptr(), acc01);
+    vst1q_f64(lanes.as_mut_ptr().add(2), acc23);
+    vst1q_f64(lanes.as_mut_ptr().add(4), acc45);
+    vst1q_f64(lanes.as_mut_ptr().add(6), acc67);
+    while j < n {
+        let d = (*ap.add(j) - *bp.add(j)) as f64;
+        lanes[j & 7] += d * d;
+        j += 1;
+    }
+    tree8_f64(&lanes)
+}
+
+/// NEON [`super::manhattan`]: as [`euclidean_sq`] with f64 `abs`
+/// instead of the square.
+///
+/// # Safety
+/// Caller must have verified NEON support; `a.len() == b.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn manhattan(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len();
+    let n8 = n - (n % 8);
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    let mut acc45 = vdupq_n_f64(0.0);
+    let mut acc67 = vdupq_n_f64(0.0);
+    let mut j = 0;
+    while j < n8 {
+        let da = vsubq_f32(vld1q_f32(ap.add(j)), vld1q_f32(bp.add(j)));
+        let db = vsubq_f32(vld1q_f32(ap.add(j + 4)), vld1q_f32(bp.add(j + 4)));
+        acc01 = vaddq_f64(acc01, vabsq_f64(vcvt_f64_f32(vget_low_f32(da))));
+        acc23 = vaddq_f64(acc23, vabsq_f64(vcvt_f64_f32(vget_high_f32(da))));
+        acc45 = vaddq_f64(acc45, vabsq_f64(vcvt_f64_f32(vget_low_f32(db))));
+        acc67 = vaddq_f64(acc67, vabsq_f64(vcvt_f64_f32(vget_high_f32(db))));
+        j += 8;
+    }
+    let mut lanes = [0.0f64; 8];
+    vst1q_f64(lanes.as_mut_ptr(), acc01);
+    vst1q_f64(lanes.as_mut_ptr().add(2), acc23);
+    vst1q_f64(lanes.as_mut_ptr().add(4), acc45);
+    vst1q_f64(lanes.as_mut_ptr().add(6), acc67);
+    while j < n {
+        lanes[j & 7] += ((*ap.add(j) - *bp.add(j)) as f64).abs();
+        j += 1;
+    }
+    tree8_f64(&lanes)
+}
+
+/// NEON [`super::stress_row_tile`]: 8-wide distance tiles into a pair
+/// of f32x4 accumulators (lanes 0-3 / 4-7), scalar tail into the
+/// extracted lane array, 4-wide gradient axpy with an elementwise tail.
+///
+/// # Safety
+/// Caller must have verified NEON support and the slice-length contract
+/// of [`super::stress_row_tile`].
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn stress_row_tile(
+    xi: &[f32],
+    x: &Matrix,
+    t0: usize,
+    t1: usize,
+    skip: usize,
+    drow: &[f32],
+    gr: &mut [f32],
+    diff: &mut [f32],
+) -> f64 {
+    let k = xi.len();
+    let k8 = k - (k % 8);
+    let k4 = k - (k % 4);
+    let xip = xi.as_ptr();
+    let dp = diff.as_mut_ptr();
+    let gp = gr.as_mut_ptr();
+    let mut s = 0.0f64;
+    for j in t0..t1 {
+        if j == skip {
+            continue;
+        }
+        let xjp = x.row(j).as_ptr();
+        let mut acc_a = vdupq_n_f32(0.0);
+        let mut acc_b = vdupq_n_f32(0.0);
+        let mut c = 0;
+        while c < k8 {
+            let da = vsubq_f32(vld1q_f32(xip.add(c)), vld1q_f32(xjp.add(c)));
+            let db = vsubq_f32(vld1q_f32(xip.add(c + 4)), vld1q_f32(xjp.add(c + 4)));
+            vst1q_f32(dp.add(c), da);
+            vst1q_f32(dp.add(c + 4), db);
+            acc_a = vaddq_f32(acc_a, vmulq_f32(da, da));
+            acc_b = vaddq_f32(acc_b, vmulq_f32(db, db));
+            c += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), acc_a);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc_b);
+        while c < k {
+            let d = *xip.add(c) - *xjp.add(c);
+            *dp.add(c) = d;
+            lanes[c & 7] += d * d;
+            c += 1;
+        }
+        let d = tree8_f32(&lanes).sqrt();
+        let resid = d - drow[j];
+        s += (resid as f64) * (resid as f64);
+        if d > 1e-12 {
+            let coef = 2.0 * resid / d;
+            let vcoef = vdupq_n_f32(coef);
+            let mut c = 0;
+            while c < k4 {
+                let g = vaddq_f32(vld1q_f32(gp.add(c)), vmulq_f32(vcoef, vld1q_f32(dp.add(c))));
+                vst1q_f32(gp.add(c), g);
+                c += 4;
+            }
+            while c < k {
+                *gp.add(c) += coef * *dp.add(c);
+                c += 1;
+            }
+        }
+    }
+    s
+}
+
+/// NEON [`super::affine_into`]: broadcast `x[i]`, 4-wide axpy down the
+/// weight row, elementwise tail (the update is order-free per element).
+///
+/// # Safety
+/// Caller must have verified NEON support and the slice-length contract
+/// of [`super::affine_into`].
+#[target_feature(enable = "neon")]
+pub unsafe fn affine_into(x: &[f32], w: &Matrix, b: &[f32], out: &mut [f32]) {
+    let k = out.len();
+    let k4 = k - (k % 4);
+    out.copy_from_slice(b);
+    let op = out.as_mut_ptr();
+    for (i, &xv) in x.iter().enumerate() {
+        let wp = w.row(i).as_ptr();
+        let vx = vdupq_n_f32(xv);
+        let mut c = 0;
+        while c < k4 {
+            let o = vaddq_f32(vld1q_f32(op.add(c)), vmulq_f32(vx, vld1q_f32(wp.add(c))));
+            vst1q_f32(op.add(c), o);
+            c += 4;
+        }
+        while c < k {
+            *op.add(c) += xv * *wp.add(c);
+            c += 1;
+        }
+    }
+}

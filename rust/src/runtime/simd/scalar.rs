@@ -1,0 +1,85 @@
+//! Portable scalar tier: the canonical 8-lane tile kernels.
+//!
+//! These functions *define* the numerics of the kernel tier — the vector
+//! tiers in `x86.rs`/`neon.rs` must match them bit-for-bit (asserted by
+//! `tests/kernel_parity.rs`) — so they are written to be boring and
+//! obviously correct: a `[_; 8]` lane array indexed by `j % 8`, combined
+//! with the canonical stride-4 pairwise tree, multiply-then-add only.
+
+use crate::mds::Matrix;
+
+use super::{tree8_f32, tree8_f64};
+
+/// Canonical squared Euclidean distance: f32 differences, squared and
+/// accumulated per-lane in f64, tree-combined.
+pub fn euclidean_sq(a: &[f32], b: &[f32]) -> f64 {
+    let mut lanes = [0.0f64; 8];
+    for j in 0..a.len() {
+        let d = (a[j] - b[j]) as f64;
+        lanes[j & 7] += d * d;
+    }
+    tree8_f64(&lanes)
+}
+
+/// Canonical Manhattan distance: f32 differences, absolute values
+/// accumulated per-lane in f64, tree-combined.
+pub fn manhattan(a: &[f32], b: &[f32]) -> f64 {
+    let mut lanes = [0.0f64; 8];
+    for j in 0..a.len() {
+        lanes[j & 7] += ((a[j] - b[j]) as f64).abs();
+    }
+    tree8_f64(&lanes)
+}
+
+/// Canonical fused distance/stress/gradient tile (see
+/// [`super::stress_row_tile`] for the contract). The f32 squared
+/// distance uses the lane tile; per-row stress stays f64; the gradient
+/// update is elementwise.
+pub fn stress_row_tile(
+    xi: &[f32],
+    x: &Matrix,
+    t0: usize,
+    t1: usize,
+    skip: usize,
+    drow: &[f32],
+    gr: &mut [f32],
+    diff: &mut [f32],
+) -> f64 {
+    let k = xi.len();
+    let mut s = 0.0f64;
+    for j in t0..t1 {
+        if j == skip {
+            continue;
+        }
+        let xj = x.row(j);
+        let mut lanes = [0.0f32; 8];
+        for c in 0..k {
+            let d = xi[c] - xj[c];
+            diff[c] = d;
+            lanes[c & 7] += d * d;
+        }
+        let d = tree8_f32(&lanes).sqrt();
+        let resid = d - drow[j];
+        s += (resid as f64) * (resid as f64);
+        if d > 1e-12 {
+            let coef = 2.0 * resid / d;
+            for c in 0..k {
+                gr[c] += coef * diff[c];
+            }
+        }
+    }
+    s
+}
+
+/// Canonical affine microkernel (see [`super::affine_into`] for the
+/// contract): bias first, then `out += x[i] * w.row(i)` for ascending
+/// `i` — exactly the pre-SIMD `nn::forward_block` inner loop.
+pub fn affine_into(x: &[f32], w: &Matrix, b: &[f32], out: &mut [f32]) {
+    out.copy_from_slice(b);
+    for (i, &xv) in x.iter().enumerate() {
+        let wr = w.row(i);
+        for (o, &wv) in out.iter_mut().zip(wr.iter()) {
+            *o += xv * wv;
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! AVX2 tier (x86_64). Always compiled on x86_64; executed only after
+//! `is_x86_feature_detected!("avx2")` succeeded at dispatch time.
+//!
+//! Bit-equality with the scalar tier is a hard contract, kept by three
+//! rules:
+//!
+//! - **No FMA.** Every accumulation multiplies then adds (two
+//!   roundings), exactly like the scalar tier. FMA's single rounding
+//!   would change low bits, so the `fma` target feature is deliberately
+//!   not enabled here even though every AVX2 CPU has it.
+//! - **Same lane mapping.** An 8-wide accumulator register *is* the
+//!   scalar tier's `[_; 8]` lane array: element `j` lands in lane
+//!   `j % 8`, tiles advance in ascending order, and the final combine
+//!   stores the register and applies the same `tree8_*` reduction.
+//! - **Exact no-op tails.** Remainder lanes use AVX2 masked
+//!   loads/stores: masked-off lanes read as `+0.0`, so they contribute
+//!   `+0.0` to the accumulators — an exact no-op, because squared /
+//!   absolute contributions keep every accumulator lane `>= +0.0` (or
+//!   NaN, which propagates identically in all tiers) and
+//!   `x + (+0.0) == x` bit-for-bit for such `x`.
+//!
+//! Safety: all functions are `unsafe fn` (MSRV 1.74 has no safe
+//! `target_feature`); callers must have verified AVX2 support. Pointer
+//! arithmetic never leaves the operand slices — masked ops take a
+//! pointer to the first tail element and touch only the masked-on
+//! lanes, all of which are in bounds.
+
+use std::arch::x86_64::*;
+
+use crate::mds::Matrix;
+
+use super::{tree8_f32, tree8_f64};
+
+/// Row `r` enables the first `r` of 8 lanes (i32 -1 = high bit set =
+/// lane on) for `_mm256_maskload_ps` / `_mm256_maskstore_ps`.
+#[rustfmt::skip]
+const TAIL_MASKS: [[i32; 8]; 8] = [
+    [ 0,  0,  0,  0,  0,  0,  0,  0],
+    [-1,  0,  0,  0,  0,  0,  0,  0],
+    [-1, -1,  0,  0,  0,  0,  0,  0],
+    [-1, -1, -1,  0,  0,  0,  0,  0],
+    [-1, -1, -1, -1,  0,  0,  0,  0],
+    [-1, -1, -1, -1, -1,  0,  0,  0],
+    [-1, -1, -1, -1, -1, -1,  0,  0],
+    [-1, -1, -1, -1, -1, -1, -1,  0],
+];
+
+/// Load the lane mask enabling the first `r` lanes (`r < 8`).
+///
+/// # Safety
+/// Requires AVX2 (caller-verified, as for every function here).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn tail_mask(r: usize) -> __m256i {
+    _mm256_loadu_si256(TAIL_MASKS[r].as_ptr() as *const __m256i)
+}
+
+/// AVX2 [`super::euclidean_sq`]: f32x8 differences widened to two f64x4
+/// accumulators (lanes 0-3 / 4-7), masked tail, tree-combined.
+///
+/// # Safety
+/// Caller must have verified AVX2 support; `a.len() == b.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn euclidean_sq(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len();
+    let n8 = n - (n % 8);
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc_lo = _mm256_setzero_pd();
+    let mut acc_hi = _mm256_setzero_pd();
+    let mut j = 0;
+    while j < n8 {
+        let d = _mm256_sub_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j)));
+        let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
+        let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d));
+        acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(dlo, dlo));
+        acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(dhi, dhi));
+        j += 8;
+    }
+    if n8 < n {
+        let m = tail_mask(n - n8);
+        let d = _mm256_sub_ps(
+            _mm256_maskload_ps(ap.add(n8), m),
+            _mm256_maskload_ps(bp.add(n8), m),
+        );
+        let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
+        let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d));
+        acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(dlo, dlo));
+        acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(dhi, dhi));
+    }
+    let mut lanes = [0.0f64; 8];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc_lo);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc_hi);
+    tree8_f64(&lanes)
+}
+
+/// AVX2 [`super::manhattan`]: as [`euclidean_sq`] with a sign-bit clear
+/// (f64 `abs`) instead of the square.
+///
+/// # Safety
+/// Caller must have verified AVX2 support; `a.len() == b.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn manhattan(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len();
+    let n8 = n - (n % 8);
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let sign = _mm256_set1_pd(-0.0);
+    let mut acc_lo = _mm256_setzero_pd();
+    let mut acc_hi = _mm256_setzero_pd();
+    let mut j = 0;
+    while j < n8 {
+        let d = _mm256_sub_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j)));
+        let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
+        let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d));
+        acc_lo = _mm256_add_pd(acc_lo, _mm256_andnot_pd(sign, dlo));
+        acc_hi = _mm256_add_pd(acc_hi, _mm256_andnot_pd(sign, dhi));
+        j += 8;
+    }
+    if n8 < n {
+        let m = tail_mask(n - n8);
+        let d = _mm256_sub_ps(
+            _mm256_maskload_ps(ap.add(n8), m),
+            _mm256_maskload_ps(bp.add(n8), m),
+        );
+        let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
+        let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d));
+        acc_lo = _mm256_add_pd(acc_lo, _mm256_andnot_pd(sign, dlo));
+        acc_hi = _mm256_add_pd(acc_hi, _mm256_andnot_pd(sign, dhi));
+    }
+    let mut lanes = [0.0f64; 8];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc_lo);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc_hi);
+    tree8_f64(&lanes)
+}
+
+/// AVX2 [`super::stress_row_tile`]: the distance, the diff-scratch
+/// store and the gradient axpy are all 8-wide with a shared tail mask
+/// hoisted out of the `j` loop (K is loop-invariant).
+///
+/// # Safety
+/// Caller must have verified AVX2 support and the slice-length contract
+/// of [`super::stress_row_tile`] (`xi`/`gr`/`diff` of length `x.cols`,
+/// `t1 <= x.rows`, `t1 <= drow.len()`).
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn stress_row_tile(
+    xi: &[f32],
+    x: &Matrix,
+    t0: usize,
+    t1: usize,
+    skip: usize,
+    drow: &[f32],
+    gr: &mut [f32],
+    diff: &mut [f32],
+) -> f64 {
+    let k = xi.len();
+    let k8 = k - (k % 8);
+    let tail = k - k8;
+    let m = tail_mask(tail);
+    let xip = xi.as_ptr();
+    let dp = diff.as_mut_ptr();
+    let gp = gr.as_mut_ptr();
+    let mut s = 0.0f64;
+    for j in t0..t1 {
+        if j == skip {
+            continue;
+        }
+        let xjp = x.row(j).as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut c = 0;
+        while c < k8 {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(xip.add(c)), _mm256_loadu_ps(xjp.add(c)));
+            _mm256_storeu_ps(dp.add(c), d);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+            c += 8;
+        }
+        if tail > 0 {
+            let d = _mm256_sub_ps(
+                _mm256_maskload_ps(xip.add(k8), m),
+                _mm256_maskload_ps(xjp.add(k8), m),
+            );
+            _mm256_maskstore_ps(dp.add(k8), m, d);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let d = tree8_f32(&lanes).sqrt();
+        let resid = d - drow[j];
+        s += (resid as f64) * (resid as f64);
+        if d > 1e-12 {
+            let coef = _mm256_set1_ps(2.0 * resid / d);
+            let mut c = 0;
+            while c < k8 {
+                let g = _mm256_add_ps(
+                    _mm256_loadu_ps(gp.add(c)),
+                    _mm256_mul_ps(coef, _mm256_loadu_ps(dp.add(c))),
+                );
+                _mm256_storeu_ps(gp.add(c), g);
+                c += 8;
+            }
+            if tail > 0 {
+                let g = _mm256_add_ps(
+                    _mm256_maskload_ps(gp.add(k8), m),
+                    _mm256_mul_ps(coef, _mm256_maskload_ps(dp.add(k8), m)),
+                );
+                _mm256_maskstore_ps(gp.add(k8), m, g);
+            }
+        }
+    }
+    s
+}
+
+/// AVX2 [`super::affine_into`]: broadcast `x[i]`, 8-wide axpy down the
+/// weight row, masked tail. Addition order per output element is
+/// identical to the scalar tier (`out + x[i] * w`), so results are
+/// bit-equal.
+///
+/// # Safety
+/// Caller must have verified AVX2 support and the slice-length contract
+/// of [`super::affine_into`] (`x.len() == w.rows`,
+/// `b.len() == out.len() == w.cols`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn affine_into(x: &[f32], w: &Matrix, b: &[f32], out: &mut [f32]) {
+    let k = out.len();
+    let k8 = k - (k % 8);
+    let tail = k - k8;
+    let m = tail_mask(tail);
+    out.copy_from_slice(b);
+    let op = out.as_mut_ptr();
+    for (i, &xv) in x.iter().enumerate() {
+        let wp = w.row(i).as_ptr();
+        let vx = _mm256_set1_ps(xv);
+        let mut c = 0;
+        while c < k8 {
+            let o = _mm256_add_ps(
+                _mm256_loadu_ps(op.add(c)),
+                _mm256_mul_ps(vx, _mm256_loadu_ps(wp.add(c))),
+            );
+            _mm256_storeu_ps(op.add(c), o);
+            c += 8;
+        }
+        if tail > 0 {
+            let o = _mm256_add_ps(
+                _mm256_maskload_ps(op.add(k8), m),
+                _mm256_mul_ps(vx, _mm256_maskload_ps(wp.add(k8), m)),
+            );
+            _mm256_maskstore_ps(op.add(k8), m, o);
+        }
+    }
+}

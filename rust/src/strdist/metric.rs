@@ -1,39 +1,40 @@
 //! Minkowski metrics on coordinate vectors (paper Sec. 2.2): the metric-
 //! space counterpart of the string comparators, used for the sensor-network
 //! example and any pre-vectorised input data.
+//!
+//! The Euclidean and Manhattan metrics are the hot path — they are what
+//! the storage layer evaluates per landmark in
+//! [`crate::data::source::TableDelta`] and what the LSMDS/OSE solvers
+//! call per row pair — so they dispatch through the kernel tier
+//! ([`crate::runtime::simd`]). Their f64 accumulation order is
+//! **explicit and canonical**: element `j` contributes to lane `j % 8`
+//! and the lanes combine in the fixed stride-4 pairwise tree, on every
+//! tier (AVX2, NEON, scalar) — bit-identical results by construction,
+//! pinned by the `canonical_reduction_order_is_pinned` regression test
+//! below. The historical strictly-serial sum differs from the canonical
+//! order only by ordinary f64 rounding.
 
 /// Euclidean distance (p = 2) — the paper's metric-space default.
+/// Canonical 8-lane tile reduction via the kernel tier; panics if the
+/// operand lengths differ.
 #[inline]
 pub fn euclidean(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f64;
-    for (x, y) in a.iter().zip(b.iter()) {
-        let d = (*x - *y) as f64;
-        acc += d * d;
-    }
-    acc.sqrt()
+    crate::runtime::simd::euclidean_sq(a, b).sqrt()
 }
 
 /// Squared Euclidean distance (avoids the sqrt on hot comparison paths).
+/// Canonical 8-lane tile reduction via the kernel tier; panics if the
+/// operand lengths differ.
 #[inline]
 pub fn euclidean_sq(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f64;
-    for (x, y) in a.iter().zip(b.iter()) {
-        let d = (*x - *y) as f64;
-        acc += d * d;
-    }
-    acc
+    crate::runtime::simd::euclidean_sq(a, b)
 }
 
-/// Manhattan distance (p = 1).
+/// Manhattan distance (p = 1). Canonical 8-lane tile reduction via the
+/// kernel tier; panics if the operand lengths differ.
 #[inline]
 pub fn manhattan(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    a.iter()
-        .zip(b.iter())
-        .map(|(x, y)| ((*x - *y) as f64).abs())
-        .sum()
+    crate::runtime::simd::manhattan(a, b)
 }
 
 /// Chebyshev distance (p = inf).
@@ -80,6 +81,50 @@ mod tests {
         assert_eq!(manhattan(&a, &b), 7.0);
         assert_eq!(chebyshev(&a, &b), 4.0);
         assert!((minkowski(&a, &b, 3.0) - 91.0f64.powf(1.0 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn canonical_reduction_order_is_pinned() {
+        // Absorption-prone input: one huge square (2^54, whose f64 ulp is
+        // 4) among eighteen 1.0 squares. A strictly serial sum absorbs
+        // every +1.0 into the huge partial sum (each is below half an
+        // ulp), giving exactly 2^54; the canonical order accumulates the
+        // ones in big-free lanes first, so they survive (2^54 + 12). The
+        // result *depends* on summation order, and this pins the
+        // documented canonical one — lane j % 8, then the stride-4
+        // pairwise tree — to the exact bit.
+        let n = 19; // covers a remainder tile (19 % 8 = 3)
+        let a: Vec<f32> =
+            (0..n).map(|j| if j == 0 { 134217728.0 } else { 1.0 }).collect(); // 2^27
+        let b = vec![0.0f32; n];
+        let mut lanes = [0.0f64; 8];
+        for j in 0..n {
+            let d = (a[j] - b[j]) as f64;
+            lanes[j & 7] += d * d;
+        }
+        let t = [
+            lanes[0] + lanes[4],
+            lanes[1] + lanes[5],
+            lanes[2] + lanes[6],
+            lanes[3] + lanes[7],
+        ];
+        let expected = (t[0] + t[2]) + (t[1] + t[3]);
+        assert_eq!(euclidean_sq(&a, &b).to_bits(), expected.to_bits());
+        assert_eq!(euclidean(&a, &b).to_bits(), expected.sqrt().to_bits());
+        // ... the input really is order-sensitive (a regression to the
+        // serial order cannot sneak past the bit assert above) ...
+        let serial: f64 = a
+            .iter()
+            .zip(b.iter())
+            .map(|(x, y)| {
+                let d = (*x - *y) as f64;
+                d * d
+            })
+            .sum();
+        assert_ne!(expected.to_bits(), serial.to_bits());
+        // ... and the canonical order stays within the documented 1e-6
+        // relative band of the historical serial sum
+        assert!((expected - serial).abs() <= 1e-6 * serial.abs());
     }
 
     #[test]

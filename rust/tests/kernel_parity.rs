@@ -1,0 +1,339 @@
+//! Differential kernel-parity suite for the explicit SIMD tier: every
+//! vector kernel against its serial oracle and its scalar twin, over
+//! adversarial shapes.
+//!
+//! Tolerance policy (documented in docs/ARCHITECTURE.md):
+//!
+//! - **vector tier vs scalar tier: bit-exact (0 ULP).** Both implement
+//!   the same canonical 8-lane tile reduction with no FMA, so equality
+//!   is by construction — asserted with `to_bits()` everywhere,
+//!   including remainder lanes `len % 8 ∈ {0..7}`, empty/single-row
+//!   inputs, unaligned sub-slices, denormals and NaN/±inf (NaN compared
+//!   by NaN-ness, not payload).
+//! - **canonical order vs historical serial order: 1e-6 relative** on
+//!   non-cancelling inputs (pure f64 rounding differences from
+//!   regrouping), and scale-aware 1e-3 for the f32 stress-gradient
+//!   tile against the f64 serial oracle (the band `backend_parity.rs`
+//!   has always used).
+//!
+//! On machines without a vector tier (and under Miri) the `_vector`
+//! twins fall back to scalar and the bit-equality asserts hold
+//! trivially; CI's x86_64 runners exercise the AVX2 tier for real.
+
+use std::sync::Mutex;
+
+use lmds_ose::mds::lsmds::{stress_gradient, stress_gradient_blocked};
+use lmds_ose::mds::Matrix;
+use lmds_ose::nn::{forward, forward_blocked, MlpParams, MlpShape};
+use lmds_ose::runtime::simd::{
+    affine_into_scalar, affine_into_vector, euclidean_sq_scalar, euclidean_sq_vector,
+    manhattan_scalar, manhattan_vector, set_kernel_tier, simd_supported,
+    stress_row_tile_scalar, stress_row_tile_vector, KernelTier,
+};
+use lmds_ose::util::prng::Rng;
+
+/// End-to-end tests that flip the process-wide tier hold this lock so
+/// their scalar and simd runs cannot interleave with each other. (The
+/// tier-pinned `_scalar`/`_vector` twins used everywhere else never
+/// touch global state.)
+static TIER_LOCK: Mutex<()> = Mutex::new(());
+
+fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect()
+}
+
+/// Every remainder class twice, plus empty/single and multi-tile sizes.
+const LENS: [usize; 16] = [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17, 24, 40, 65];
+
+#[test]
+fn metric_vector_matches_scalar_bit_for_bit() {
+    let mut rng = Rng::new(0xA11);
+    for &n in &LENS {
+        let a = rand_vec(&mut rng, n, 2.0);
+        let b = rand_vec(&mut rng, n, 2.0);
+        let (s, v) = (euclidean_sq_scalar(&a, &b), euclidean_sq_vector(&a, &b));
+        assert_eq!(s.to_bits(), v.to_bits(), "euclidean_sq n={n}");
+        let (s, v) = (manhattan_scalar(&a, &b), manhattan_vector(&a, &b));
+        assert_eq!(s.to_bits(), v.to_bits(), "manhattan n={n}");
+    }
+}
+
+#[test]
+fn metric_unaligned_subslices_match() {
+    // Sub-slices of Matrix rows are the production shape (row k = 7 puts
+    // successive rows at every 4-byte alignment); offset slices of a
+    // shared buffer push it further.
+    let mut rng = Rng::new(0xA12);
+    let buf = rand_vec(&mut rng, 200, 2.0);
+    for off in 0..8 {
+        for &n in &[7usize, 16, 33] {
+            let a = &buf[off..off + n];
+            let b = &buf[off + 71..off + 71 + n];
+            assert_eq!(
+                euclidean_sq_scalar(a, b).to_bits(),
+                euclidean_sq_vector(a, b).to_bits(),
+                "off={off} n={n}"
+            );
+        }
+    }
+    let x = Matrix::from_vec(6, 7, rand_vec(&mut rng, 42, 2.0));
+    for i in 0..6 {
+        for j in 0..6 {
+            assert_eq!(
+                euclidean_sq_scalar(x.row(i), x.row(j)).to_bits(),
+                euclidean_sq_vector(x.row(i), x.row(j)).to_bits()
+            );
+            assert_eq!(
+                manhattan_scalar(x.row(i), x.row(j)).to_bits(),
+                manhattan_vector(x.row(i), x.row(j)).to_bits()
+            );
+        }
+    }
+}
+
+#[test]
+fn metric_denormals_nan_inf_propagate_identically() {
+    // denormal f32 inputs: squares land around 1e-84, comfortably inside
+    // f64 range — both tiers must agree exactly
+    let tiny = vec![1.0e-42f32; 19];
+    let zero = vec![0.0f32; 19];
+    let s = euclidean_sq_scalar(&tiny, &zero);
+    assert!(s > 0.0, "denormal differences must not flush to zero in f64");
+    assert_eq!(s.to_bits(), euclidean_sq_vector(&tiny, &zero).to_bits());
+    assert_eq!(
+        manhattan_scalar(&tiny, &zero).to_bits(),
+        manhattan_vector(&tiny, &zero).to_bits()
+    );
+
+    // NaN in any lane position poisons the result on every tier
+    for pos in [0usize, 3, 8, 12] {
+        let mut a = vec![1.0f32; 13];
+        a[pos] = f32::NAN;
+        let b = vec![0.5f32; 13];
+        assert!(euclidean_sq_scalar(&a, &b).is_nan(), "pos={pos}");
+        assert!(euclidean_sq_vector(&a, &b).is_nan(), "pos={pos}");
+        assert!(manhattan_scalar(&a, &b).is_nan(), "pos={pos}");
+        assert!(manhattan_vector(&a, &b).is_nan(), "pos={pos}");
+    }
+
+    // ±inf: squares/abs give +inf, identical bits on every tier
+    for inf in [f32::INFINITY, f32::NEG_INFINITY] {
+        let mut a = vec![1.0f32; 11];
+        a[9] = inf;
+        let b = vec![-2.0f32; 11];
+        let s = euclidean_sq_scalar(&a, &b);
+        assert_eq!(s, f64::INFINITY);
+        assert_eq!(s.to_bits(), euclidean_sq_vector(&a, &b).to_bits());
+        let s = manhattan_scalar(&a, &b);
+        assert_eq!(s, f64::INFINITY);
+        assert_eq!(s.to_bits(), manhattan_vector(&a, &b).to_bits());
+    }
+}
+
+#[test]
+fn metric_canonical_tracks_serial_oracle_band() {
+    let mut rng = Rng::new(0xA13);
+    for &n in &LENS {
+        let a = rand_vec(&mut rng, n, 5.0);
+        let b = rand_vec(&mut rng, n, 5.0);
+        let serial: f64 = a
+            .iter()
+            .zip(b.iter())
+            .map(|(x, y)| {
+                let d = (*x - *y) as f64;
+                d * d
+            })
+            .sum();
+        let got = euclidean_sq_vector(&a, &b);
+        assert!(
+            (got - serial).abs() <= 1e-6 * (1.0 + serial.abs()),
+            "n={n}: {got} vs serial {serial}"
+        );
+    }
+}
+
+#[test]
+fn stress_tile_vector_matches_scalar_bit_for_bit() {
+    let mut rng = Rng::new(0xA14);
+    let n = 23;
+    for k in [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 16, 17] {
+        let x = Matrix::from_vec(n, k, rand_vec(&mut rng, n * k, 1.0));
+        let delta = Matrix::from_vec(n, n, rand_vec(&mut rng, n * n, 1.0));
+        for i in [0usize, 7, 22] {
+            // start both tiers from the same nonzero gradient so the
+            // accumulate-into contract is covered too
+            let g0 = rand_vec(&mut rng, k, 0.5);
+            let mut gs = g0.clone();
+            let mut gv = g0.clone();
+            let mut ds = vec![0.0f32; k];
+            let mut dv = vec![0.0f32; k];
+            let ss = stress_row_tile_scalar(
+                x.row(i),
+                &x,
+                0,
+                n,
+                i,
+                delta.row(i),
+                &mut gs,
+                &mut ds,
+            );
+            let sv = stress_row_tile_vector(
+                x.row(i),
+                &x,
+                0,
+                n,
+                i,
+                delta.row(i),
+                &mut gv,
+                &mut dv,
+            );
+            assert_eq!(ss.to_bits(), sv.to_bits(), "stress k={k} i={i}");
+            for c in 0..k {
+                assert_eq!(gs[c].to_bits(), gv[c].to_bits(), "grad k={k} i={i} c={c}");
+                assert_eq!(ds[c].to_bits(), dv[c].to_bits(), "diff k={k} i={i} c={c}");
+            }
+        }
+    }
+}
+
+#[test]
+fn stress_tile_empty_and_degenerate_tiles() {
+    let mut rng = Rng::new(0xA15);
+    let k = 7;
+    let x = Matrix::from_vec(4, k, rand_vec(&mut rng, 4 * k, 1.0));
+    let delta = Matrix::from_vec(4, 4, rand_vec(&mut rng, 16, 1.0));
+    let g0 = rand_vec(&mut rng, k, 0.5);
+
+    // empty tile: zero stress, gradient untouched
+    for f in [stress_row_tile_scalar, stress_row_tile_vector] {
+        let mut g = g0.clone();
+        let mut d = vec![0.0f32; k];
+        let s = f(x.row(0), &x, 2, 2, 0, delta.row(0), &mut g, &mut d);
+        assert_eq!(s, 0.0);
+        assert_eq!(g, g0);
+    }
+
+    // single-row tile that is the skipped row itself: also a no-op
+    for f in [stress_row_tile_scalar, stress_row_tile_vector] {
+        let mut g = g0.clone();
+        let mut d = vec![0.0f32; k];
+        let s = f(x.row(1), &x, 1, 2, 1, delta.row(1), &mut g, &mut d);
+        assert_eq!(s, 0.0);
+        assert_eq!(g, g0);
+    }
+
+    // coincident rows (d == 0): stress counts the residual, gradient
+    // guard leaves g untouched — identically on both tiers
+    let mut xx = x.clone();
+    xx.row_mut(2).copy_from_slice(x.row(3));
+    let mut results = Vec::new();
+    for f in [stress_row_tile_scalar, stress_row_tile_vector] {
+        let mut g = g0.clone();
+        let mut d = vec![0.0f32; k];
+        let s = f(xx.row(2), &xx, 3, 4, 2, delta.row(2), &mut g, &mut d);
+        assert_eq!(g, g0, "zero distance must not touch the gradient");
+        results.push(s);
+    }
+    assert_eq!(results[0].to_bits(), results[1].to_bits());
+}
+
+#[test]
+fn affine_vector_matches_scalar_bit_for_bit() {
+    let mut rng = Rng::new(0xA16);
+    for &(n_in, n_out) in &[
+        (1usize, 1usize),
+        (1, 7),
+        (3, 8),
+        (7, 9),
+        (8, 16),
+        (5, 17),
+        (300, 33),
+        (0, 5), // empty input: out == bias
+    ] {
+        let w = Matrix::from_vec(n_in, n_out, rand_vec(&mut rng, n_in * n_out, 1.0));
+        let b = rand_vec(&mut rng, n_out, 1.0);
+        let x = rand_vec(&mut rng, n_in, 1.0);
+        let mut os = vec![0.0f32; n_out];
+        let mut ov = vec![0.0f32; n_out];
+        affine_into_scalar(&x, &w, &b, &mut os);
+        affine_into_vector(&x, &w, &b, &mut ov);
+        for c in 0..n_out {
+            assert_eq!(os[c].to_bits(), ov[c].to_bits(), "({n_in},{n_out}) col {c}");
+        }
+        if n_in == 0 {
+            assert_eq!(os, b);
+        }
+    }
+}
+
+#[test]
+fn forward_blocked_is_tier_invariant_and_tracks_forward() {
+    let _guard = TIER_LOCK.lock().unwrap();
+    let mut rng = Rng::new(0xA17);
+    let shape = MlpShape { input: 31, hidden: [16, 12, 8], output: 7 };
+    let p = MlpParams::init(&shape, &mut rng);
+    let d = Matrix::from_vec(9, 31, rand_vec(&mut rng, 9 * 31, 1.0));
+
+    set_kernel_tier(KernelTier::Scalar);
+    let scalar = forward_blocked(&p, &d);
+    set_kernel_tier(KernelTier::Simd);
+    let simd = forward_blocked(&p, &d);
+    set_kernel_tier(KernelTier::Auto);
+
+    assert_eq!(scalar.data.len(), simd.data.len());
+    for (a, b) in scalar.data.iter().zip(simd.data.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "forward_blocked must be tier-invariant");
+    }
+    // ... and both track the serial per-row oracle within the documented
+    // 1e-6 band (identical accumulation order, zero-skip aside)
+    let oracle = forward(&p, &d);
+    let diff = oracle.max_abs_diff(&scalar);
+    assert!(diff <= 1e-6, "blocked vs serial forward: {diff}");
+}
+
+#[test]
+fn blocked_gradient_is_tier_invariant_and_tracks_oracle() {
+    let _guard = TIER_LOCK.lock().unwrap();
+    let mut rng = Rng::new(0xA18);
+    let n = 120;
+    let k = 7;
+    let x = Matrix::from_vec(n, k, rand_vec(&mut rng, n * k, 1.0));
+    let mut delta = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                let v = lmds_ose::strdist::euclidean(x.row(i), x.row(j)) as f32;
+                delta.set(i, j, v * 1.1 + 0.05);
+            }
+        }
+    }
+
+    set_kernel_tier(KernelTier::Scalar);
+    let (gs, ss) = stress_gradient_blocked(&x, &delta);
+    set_kernel_tier(KernelTier::Simd);
+    let (gv, sv) = stress_gradient_blocked(&x, &delta);
+    set_kernel_tier(KernelTier::Auto);
+
+    assert_eq!(ss.to_bits(), sv.to_bits(), "sigma must be tier-invariant");
+    for (a, b) in gs.data.iter().zip(gv.data.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "gradient must be tier-invariant");
+    }
+
+    // scale-aware band vs the f64 serial oracle (as backend_parity.rs)
+    let (go, so) = stress_gradient(&x, &delta);
+    let gmax = go.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let diff = go.max_abs_diff(&gs);
+    assert!(diff <= 1e-3 * (1.0 + gmax), "blocked vs oracle gradient: {diff}");
+    assert!((so - ss).abs() <= 1e-5 * (1.0 + so.abs()), "sigma band: {so} vs {ss}");
+}
+
+#[test]
+fn vector_tier_present_on_x86_ci() {
+    // Not an assert — a loud marker in the test output so a CI log shows
+    // which tier the bit-equality suites actually exercised.
+    println!(
+        "kernel parity ran with simd_supported = {} on {}",
+        simd_supported(),
+        std::env::consts::ARCH
+    );
+}

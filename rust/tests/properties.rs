@@ -2,16 +2,23 @@
 //! span the dissimilarity engine, the MDS metrics, the OSE methods, the
 //! Geco generator and the serving path.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use lmds_ose::coordinator::{BatcherConfig, Request, ServerBuilder};
+use lmds_ose::coordinator::embedder::solve_base;
+use lmds_ose::coordinator::{
+    BackendOpt, BaseSolver, BatcherConfig, Request, ServerBuilder,
+};
 use lmds_ose::data::{Geco, GecoConfig};
 use lmds_ose::mds::dissimilarity::{cross_matrix, full_matrix};
 use lmds_ose::mds::stress::{point_error, raw_stress, total_error};
-use lmds_ose::mds::Matrix;
+use lmds_ose::mds::{LsmdsConfig, Matrix};
 use lmds_ose::nn::{MlpParams, MlpShape};
-use lmds_ose::ose::{embed_point, factory_fn, OseOptConfig, RustNn};
+use lmds_ose::ose::{
+    embed_point, embed_stream_blocks, factory_fn, OseOptConfig, RustNn,
+};
+use lmds_ose::runtime::simd::set_kernel_tier;
+use lmds_ose::runtime::{Backend, KernelTier};
 use lmds_ose::strdist::{
     euclidean, levenshtein, DamerauOsa, Dissimilarity, JaroWinkler, Levenshtein, QGram,
     SoundexDist,
@@ -346,6 +353,92 @@ fn server_never_drops_or_duplicates() {
     assert_eq!(snap.failed, 0);
     drop(sh);
     server.shutdown();
+}
+
+/// Serialises the tests in this file that flip the process-global kernel
+/// tier, so a concurrently running test cannot observe a half-flipped
+/// tier (which could mask a real divergence between the tiers).
+static TIER_LOCK: Mutex<()> = Mutex::new(());
+
+#[test]
+fn kernel_tier_dispatch_invariance_end_to_end() {
+    // `--kernel-tier simd` and `--kernel-tier scalar` must produce
+    // bit-identical results end-to-end: the vector kernels preserve the
+    // scalar tier's canonical reduction order (see runtime::simd), so this
+    // is exact `Vec<f32>` equality, not a tolerance band. On hosts without
+    // the vector ISA the simd request resolves to scalar and the assertion
+    // is trivially true — the x86_64 CI runners exercise the real case.
+    let _guard = TIER_LOCK.lock().unwrap();
+    let mut rng = Rng::new(41);
+    let hidden = Matrix::random_normal(&mut rng, 40, 3, 1.0);
+    let delta = distances_of(&hidden);
+    let queries = Matrix::random_normal(&mut rng, 24, 3, 1.2);
+    let cfg = LsmdsConfig {
+        dim: 3,
+        max_iters: 20,
+        rel_tol: 0.0,
+        seed: 11,
+        ..Default::default()
+    };
+
+    let mut configs: Vec<Matrix> = Vec::new();
+    let mut streams: Vec<Matrix> = Vec::new();
+    for tier in [KernelTier::Scalar, KernelTier::Simd] {
+        set_kernel_tier(tier);
+        let backend = Backend::native();
+
+        // Stage 1: the monolithic base solve (stress_gradient_blocked).
+        let (config, sigma) =
+            solve_base(&delta, &cfg, BaseSolver::Monolithic, &backend)
+                .expect("base solve succeeds on both tiers");
+        assert!(sigma.is_finite());
+
+        // Stage 2: the streamed OSE pipeline over the solved landmarks.
+        let mut qd = Matrix::zeros(queries.rows, hidden.rows);
+        for q in 0..queries.rows {
+            for i in 0..hidden.rows {
+                qd.set(q, i, euclidean(queries.row(q), hidden.row(i)) as f32);
+            }
+        }
+        let mut method = BackendOpt {
+            total_steps: 12,
+            rel_tol: 0.0,
+            ..BackendOpt::with_defaults(backend, config.clone())
+        };
+        let mut out = Matrix::zeros(queries.rows, cfg.dim);
+        embed_stream_blocks(
+            queries.rows,
+            7, // deliberately not a divisor of the row count
+            |start, end| {
+                Matrix::from_vec(
+                    end - start,
+                    qd.cols,
+                    qd.data[start * qd.cols..end * qd.cols].to_vec(),
+                )
+            },
+            &mut method,
+            |start, block| {
+                for r in 0..block.rows {
+                    out.row_mut(start + r).copy_from_slice(block.row(r));
+                }
+                Ok(())
+            },
+        )
+        .expect("streamed embedding succeeds on both tiers");
+
+        configs.push(config);
+        streams.push(out);
+    }
+    set_kernel_tier(KernelTier::Auto);
+
+    assert_eq!(
+        configs[0].data, configs[1].data,
+        "solve_base diverged between kernel tiers"
+    );
+    assert_eq!(
+        streams[0].data, streams[1].data,
+        "embed_stream_blocks diverged between kernel tiers"
+    );
 }
 
 #[test]
