@@ -295,6 +295,8 @@ fn main() {
             parallel_for_chunks(b, 8, default_parallelism(), |start, end| {
                 for r in start..end {
                     let y = forward_row_strided(&params, input.row(r));
+                    // SAFETY: row r is owned by this chunk; each output
+                    // cell is written exactly once.
                     unsafe {
                         for (c, v) in y.iter().enumerate() {
                             slots.write(r * k + c, *v);

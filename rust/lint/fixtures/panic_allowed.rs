@@ -1,0 +1,28 @@
+//! Known-good fixture: serving-path code that propagates typed errors
+//! instead of panicking. The no-panic rule must stay silent here.
+//! Never compiled — read as text by the tests in `src/rules.rs`.
+
+pub enum ServeError {
+    BadInput,
+}
+
+pub fn parse(v: Option<u8>) -> Result<u8, ServeError> {
+    v.ok_or(ServeError::BadInput)
+}
+
+pub fn header(buf: &[u8]) -> Result<u8, ServeError> {
+    match buf.first() {
+        Some(b) => Ok(*b),
+        None => Err(ServeError::BadInput),
+    }
+}
+
+pub fn fallback(v: Option<u8>) -> u8 {
+    // Non-panicking relatives are fine: unwrap_or, unwrap_or_default…
+    v.unwrap_or(0)
+}
+
+pub fn log_line() -> &'static str {
+    // Banned tokens inside string literals are not code.
+    "refusing to .unwrap() or panic! on the serving path"
+}

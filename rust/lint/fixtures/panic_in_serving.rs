@@ -1,0 +1,33 @@
+//! Known-bad fixture for the no-panic rule (the tests pass it under a
+//! serving-path name). Marker comments tag the expected findings.
+//! Never compiled — read as text by the tests in `src/rules.rs`.
+
+pub fn parse(v: Option<u8>) -> u8 {
+    v.unwrap() // MARK
+}
+
+pub fn header(buf: &[u8]) -> u8 {
+    let b = buf.first().expect("empty buffer"); // MARK
+    *b
+}
+
+pub fn fail() -> u8 {
+    panic!("boom") // MARK
+}
+
+pub fn later() {
+    todo!() // MARK
+}
+
+pub fn startup(v: Option<u8>) -> u8 {
+    // LINT-ALLOW(panic): construction-time invariant, not a request path.
+    v.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn panics_inside_cfg_test_are_fine() {
+        Some(1u8).unwrap();
+    }
+}

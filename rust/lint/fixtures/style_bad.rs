@@ -1,0 +1,25 @@
+//! Known-bad fixture for the style rule. Marker comments tag the
+//! lines the rule must report.
+//! Never compiled — read as text by the tests in `src/rules.rs`.
+
+pub fn run() -> Result<(), String> { // MARK
+    Err("stringly typed".to_string())
+}
+
+fn bail() {
+    std::process::exit(3); // MARK
+}
+
+pub fn typed() -> Result<(), std::io::Error> {
+    Ok(())
+}
+
+pub fn ok_string_payload() -> Result<String, std::io::Error> {
+    // String as the Ok type is fine; only stringly-typed errors are banned.
+    Ok(String::new())
+}
+
+// LINT-ALLOW(style): exercised by the fixture tests.
+pub fn allowed() -> Result<(), String> {
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Known-good fixture: every `unsafe` site carries an annotation the
+//! unsafe-audit rule accepts (same-line comment, preceding comment,
+//! comment above attributes, or a `# Safety` doc section).
+//! Never compiled — read as text by the tests in `src/rules.rs`.
+
+fn read_first(bytes: &[u8]) -> u8 {
+    let p = bytes.as_ptr();
+    // SAFETY: `bytes` is non-empty at every call site in this fixture.
+    unsafe { *p }
+}
+
+struct Wrapper(*mut u8);
+
+// SAFETY: the pointer is only dereferenced behind a lock.
+unsafe impl Send for Wrapper {}
+
+/// Reads a byte without bounds checking.
+///
+/// # Safety
+/// `i` must be in bounds for `bytes`.
+#[inline]
+pub unsafe fn get_unchecked(bytes: &[u8], i: usize) -> u8 {
+    // SAFETY: the caller upholds the `# Safety` contract above.
+    unsafe { *bytes.as_ptr().add(i) }
+}
+
+fn tail() -> u8 {
+    let arr = [1u8, 2];
+    unsafe { get_unchecked(&arr, 0) } // SAFETY: index 0 is in bounds.
+}

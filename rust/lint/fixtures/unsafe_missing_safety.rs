@@ -1,0 +1,13 @@
+//! Known-bad fixture: `unsafe` sites with no SAFETY annotation.
+//! Marker comments tag the lines the unsafe-audit rule must report.
+//! Never compiled — read as text by the tests in `src/rules.rs`.
+
+fn read_first(bytes: &[u8]) -> u8 {
+    let p = bytes.as_ptr();
+    unsafe { *p } // MARK
+}
+
+struct Wrapper(*mut u8);
+
+// A comment that is not a safety argument does not count.
+unsafe impl Send for Wrapper {} // MARK

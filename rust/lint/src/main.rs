@@ -1,0 +1,160 @@
+//! `lmds-lint` — the in-tree invariant linter for the lmds-ose workspace.
+//!
+//! Run locally with `cargo run -p lmds-lint` (from anywhere inside the
+//! repo); CI runs it as the blocking `lint-invariants` job. It scans the
+//! `.rs` tree with a comment/string-aware token scanner ([`scan`]) and
+//! enforces five project invariants the compiler can't ([`rules`]):
+//! unsafe-audit, no-panic serving paths, wire-stability, config/docs
+//! drift, and style bans. Exit status 0 means clean; 1 means findings
+//! (printed as `path:line: [rule] message`) or an I/O / setup error.
+//!
+//! See docs/ARCHITECTURE.md, "Static analysis & sanitizers", for the
+//! rule table, override syntax, and the add-a-rule checklist.
+
+mod rules;
+mod scan;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use rules::{Allowlist, Finding};
+use scan::LineView;
+
+/// Directories scanned for `.rs` files (repo-relative). `fixtures/`
+/// subtrees are excluded — they hold known-bad lint test inputs.
+const SCAN_ROOTS: &[&str] = &[
+    "rust/src",
+    "rust/lint/src",
+    "rust/xla-stub/src",
+    "rust/tests",
+    "rust/benches",
+    "examples",
+];
+
+const ALLOWLIST_PATH: &str = "rust/lint/lint-allow.txt";
+const GOLDEN_PATH: &str = "rust/lint/golden/wire_abi.txt";
+const ERROR_RS: &str = "rust/src/coordinator/error.rs";
+const PROTO_RS: &str = "rust/src/coordinator/proto.rs";
+const CONFIG_RS: &str = "rust/src/coordinator/config.rs";
+
+fn main() -> ExitCode {
+    match run() {
+        Ok((scanned, findings)) if findings.is_empty() => {
+            println!("lmds-lint: {scanned} files scanned, clean");
+            ExitCode::SUCCESS
+        }
+        Ok((scanned, findings)) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            println!("lmds-lint: {scanned} files scanned, {} finding(s)", findings.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("lmds-lint: error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> Result<(usize, Vec<Finding>), String> {
+    let root = find_root()?;
+    let allow_text = read_rel(&root, ALLOWLIST_PATH)?;
+    let allow = Allowlist::parse(&allow_text)?;
+
+    let mut files: Vec<PathBuf> = Vec::new();
+    for sub in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut views: BTreeMap<String, Vec<LineView>> = BTreeMap::new();
+    for path in &files {
+        let rel = rel_path(&root, path);
+        let src = fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let lines = scan::scan(&src);
+        findings.extend(rules::rule_unsafe_audit(&rel, &lines, &allow));
+        findings.extend(rules::rule_no_panic(&rel, &lines));
+        findings.extend(rules::rule_style(&rel, &lines));
+        views.insert(rel, lines);
+    }
+
+    let golden = read_rel(&root, GOLDEN_PATH)?;
+    match (views.get(ERROR_RS), views.get(PROTO_RS)) {
+        (Some(error_lines), Some(proto_lines)) => {
+            findings.extend(rules::rule_wire_stability(
+                ERROR_RS,
+                error_lines,
+                PROTO_RS,
+                proto_lines,
+                &golden,
+                GOLDEN_PATH,
+            ));
+        }
+        _ => return Err(format!("{ERROR_RS} / {PROTO_RS} not found in the scanned tree")),
+    }
+
+    let readme = read_rel(&root, "README.md")?;
+    let arch = read_rel(&root, "docs/ARCHITECTURE.md")?;
+    match views.get(CONFIG_RS) {
+        Some(config_lines) => {
+            findings.extend(rules::rule_config_drift(CONFIG_RS, config_lines, &readme, &arch));
+        }
+        None => return Err(format!("{CONFIG_RS} not found in the scanned tree")),
+    }
+
+    findings.sort_by(|a, b| a.path.cmp(&b.path).then(a.line.cmp(&b.line)));
+    Ok((files.len(), findings))
+}
+
+/// Repo root: `$LMDS_LINT_ROOT` if set, else the nearest ancestor of the
+/// working directory containing `rust/src/lib.rs`.
+fn find_root() -> Result<PathBuf, String> {
+    if let Ok(root) = std::env::var("LMDS_LINT_ROOT") {
+        return Ok(PathBuf::from(root));
+    }
+    let mut dir = std::env::current_dir().map_err(|e| format!("current_dir: {e}"))?;
+    loop {
+        if dir.join("rust/src/lib.rs").is_file() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            return Err("repo root not found (no rust/src/lib.rs in any ancestor of the \
+                        working directory); set LMDS_LINT_ROOT"
+                .to_string());
+        }
+    }
+}
+
+fn read_rel(root: &Path, rel: &str) -> Result<String, String> {
+    let path = root.join(rel);
+    fs::read_to_string(&path).map_err(|e| format!("read {rel}: {e}"))
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root).unwrap_or(path).display().to_string()
+}
+
+/// Recursively collect `.rs` files, skipping `fixtures/` directories.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            if path.file_name().is_some_and(|n| n == "fixtures") {
+                continue;
+            }
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

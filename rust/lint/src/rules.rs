@@ -1,0 +1,816 @@
+//! The five project-invariant rules enforced by `lmds-lint`.
+//!
+//! Every rule works on the aligned [`LineView`] views produced by
+//! [`crate::scan::scan`], so substring matches never fire inside
+//! comments or string literals. The rules, their diagnostics tags, and
+//! the override syntax are documented for humans in
+//! `docs/ARCHITECTURE.md` ("Static analysis & sanitizers"); this module
+//! is the single source of truth for the machine behaviour.
+
+use std::fmt;
+
+use crate::scan::{contains_word, LineView};
+
+/// One diagnostic: `path:line: [rule] message`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Repo-relative path with `/` separators.
+    pub path: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Stable rule tag (`unsafe-audit`, `no-panic`, `wire-stability`,
+    /// `config-drift`, `style`) — the CI self-test greps for these.
+    pub rule: &'static str,
+    /// Human-readable explanation with the fix path.
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// The machine-readable per-file exception list (`rust/lint/lint-allow.txt`):
+/// one `<path> <rule> <reason…>` entry per line, `#` comments allowed. An
+/// entry without a reason is a parse error — exceptions must be argued.
+pub struct Allowlist {
+    entries: Vec<(String, String)>,
+}
+
+impl Allowlist {
+    /// An allowlist with no entries (used by tests).
+    pub fn empty() -> Self {
+        Allowlist { entries: Vec::new() }
+    }
+
+    /// Parse the allowlist file contents; malformed lines are hard errors.
+    // LINT-ALLOW(style): dependency-free tool; the one error path goes to stderr.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut entries = Vec::new();
+        for (no, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let (Some(path), Some(rule)) = (parts.next(), parts.next()) else {
+                return Err(format!(
+                    "lint-allow.txt:{}: malformed entry; expected `<path> <rule> <reason>`",
+                    no + 1
+                ));
+            };
+            if parts.next().is_none() {
+                return Err(format!(
+                    "lint-allow.txt:{}: entry for {path} needs a reason after the rule name",
+                    no + 1
+                ));
+            }
+            entries.push((path.to_string(), rule.to_string()));
+        }
+        Ok(Allowlist { entries })
+    }
+
+    /// True when `path` carries an exception for `rule`.
+    pub fn is_allowed(&self, path: &str, rule: &str) -> bool {
+        self.entries.iter().any(|(p, r)| p == path && r == rule)
+    }
+}
+
+fn ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// `// LINT-ALLOW(<tag>): <reason>` on the same line or the line above.
+fn has_allow(lines: &[LineView], i: usize, tag: &str) -> bool {
+    let pat = format!("LINT-ALLOW({tag}):");
+    lines[i].comment.contains(&pat) || (i > 0 && lines[i - 1].comment.contains(&pat))
+}
+
+/// Per-line map of `#[cfg(test)]` item spans, found by brace counting on
+/// the code views from each `#[cfg(…test…)]` attribute (a top-level `;`
+/// before any `{` bounds attributes on brace-less items). `not(test)`
+/// spans are production code and are deliberately NOT marked.
+pub fn test_spans(lines: &[LineView]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        let code = &lines[i].code;
+        let is_cfg_test = code.trim_start().starts_with("#[cfg(")
+            && contains_word(code, "test")
+            && !code.contains("not(test)");
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i32;
+        let mut started = false;
+        let mut end = i;
+        'span: for (j, line) in lines.iter().enumerate().skip(i) {
+            for c in line.code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        started = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if started && depth == 0 {
+                            end = j;
+                            break 'span;
+                        }
+                    }
+                    ';' if !started && depth == 0 => {
+                        end = j;
+                        break 'span;
+                    }
+                    _ => {}
+                }
+            }
+            end = j;
+        }
+        for flag in in_test.iter_mut().take(end + 1).skip(i) {
+            *flag = true;
+        }
+        i = end + 1;
+    }
+    in_test
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: unsafe-audit
+// ---------------------------------------------------------------------------
+
+fn has_safety(comment: &str) -> bool {
+    comment.contains("SAFETY:") || comment.contains("# Safety")
+}
+
+/// Walk upward from the `unsafe` site through the contiguous run of
+/// blank lines, attributes, and comment lines; true if the site's own
+/// line or any comment in that run carries `SAFETY:` or a `# Safety`
+/// doc heading. The first real code line ends the run, so two adjacent
+/// `unsafe` lines each need their own annotation.
+fn safety_annotated(lines: &[LineView], i: usize) -> bool {
+    const MAX_WALK: usize = 40;
+    if has_safety(&lines[i].comment) {
+        return true;
+    }
+    let mut j = i;
+    for _ in 0..MAX_WALK {
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+        let l = &lines[j];
+        if has_safety(&l.comment) {
+            return true;
+        }
+        let code_t = l.code.trim();
+        let is_attr = code_t.starts_with("#[") || code_t.starts_with("#!");
+        if code_t.is_empty() || is_attr {
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+/// Rule 1: every `unsafe` keyword (block, fn, impl) needs a preceding
+/// `// SAFETY:` comment or `# Safety` doc section, unless the whole file
+/// carries an `unsafe-audit` allowlist entry.
+pub fn rule_unsafe_audit(path: &str, lines: &[LineView], allow: &Allowlist) -> Vec<Finding> {
+    if allow.is_allowed(path, "unsafe-audit") {
+        return Vec::new();
+    }
+    let mut findings = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        if !contains_word(&l.code, "unsafe") {
+            continue;
+        }
+        if safety_annotated(lines, i) {
+            continue;
+        }
+        findings.push(Finding {
+            path: path.to_string(),
+            line: i + 1,
+            rule: "unsafe-audit",
+            msg: "`unsafe` without a preceding `// SAFETY:` comment (or `# Safety` doc \
+                  section); justify it or add a rust/lint/lint-allow.txt entry"
+                .to_string(),
+        });
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: no-panic serving paths
+// ---------------------------------------------------------------------------
+
+/// Files on the serving request path: a panic here kills an executor or
+/// drops a connection, so these must return typed `ServeError`s.
+pub const SERVING_PATHS: &[&str] = &[
+    "rust/src/coordinator/server.rs",
+    "rust/src/coordinator/shard.rs",
+    "rust/src/coordinator/net.rs",
+    "rust/src/coordinator/proto.rs",
+    "rust/src/coordinator/error.rs",
+    "rust/src/ose/pipeline.rs",
+];
+
+const BANNED_PANICS: &[&str] = &[".unwrap()", ".expect(", "panic!", "todo!", "unimplemented!"];
+
+fn banned_at(code: &str, pat: &str) -> bool {
+    code.match_indices(pat).any(|(idx, _)| {
+        if pat.starts_with('.') {
+            return true;
+        }
+        let prev = code[..idx].chars().next_back();
+        !matches!(prev, Some(p) if ident_char(p))
+    })
+}
+
+/// Rule 2: `.unwrap()` / `.expect(` / `panic!` / `todo!` /
+/// `unimplemented!` are forbidden in [`SERVING_PATHS`] outside
+/// `#[cfg(test)]` spans; `// LINT-ALLOW(panic): <reason>` overrides a
+/// single site.
+pub fn rule_no_panic(path: &str, lines: &[LineView]) -> Vec<Finding> {
+    if !SERVING_PATHS.contains(&path) {
+        return Vec::new();
+    }
+    let in_test = test_spans(lines);
+    let mut findings = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        if in_test[i] {
+            continue;
+        }
+        for pat in BANNED_PANICS {
+            if !banned_at(&l.code, pat) {
+                continue;
+            }
+            if has_allow(lines, i, "panic") {
+                continue;
+            }
+            findings.push(Finding {
+                path: path.to_string(),
+                line: i + 1,
+                rule: "no-panic",
+                msg: format!(
+                    "`{pat}` on a serving path; return a typed ServeError or annotate \
+                     `// LINT-ALLOW(panic): <reason>`"
+                ),
+            });
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: style bans
+// ---------------------------------------------------------------------------
+
+/// True when some `Result<…>` on the line has `String` as its full
+/// second (error) type argument. `Result<Vec<String>, E>` does not
+/// match; `Result<(), String>` does.
+fn result_err_is_string(code: &str) -> bool {
+    for (idx, _) in code.match_indices("Result<") {
+        let prev = code[..idx].chars().next_back();
+        if matches!(prev, Some(p) if ident_char(p)) {
+            continue;
+        }
+        let args = &code[idx + "Result<".len()..];
+        let mut depth = 1i32;
+        let mut top_comma = None;
+        let mut close = None;
+        for (j, c) in args.char_indices() {
+            match c {
+                '<' => depth += 1,
+                '>' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = Some(j);
+                        break;
+                    }
+                }
+                ',' if depth == 1 && top_comma.is_none() => top_comma = Some(j),
+                _ => {}
+            }
+        }
+        if let (Some(cm), Some(cl)) = (top_comma, close) {
+            if args[cm + 1..cl].trim() == "String" {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Rule 5 ("style"): no `Result<_, String>` in `pub` signatures (typed
+/// errors only) and no `std::process::exit` outside a `main.rs`.
+/// `// LINT-ALLOW(style): <reason>` overrides a single site.
+pub fn rule_style(path: &str, lines: &[LineView]) -> Vec<Finding> {
+    let basename = path.rsplit('/').next().unwrap_or(path);
+    let in_test = test_spans(lines);
+    let mut findings = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        if in_test[i] || has_allow(lines, i, "style") {
+            continue;
+        }
+        if contains_word(&l.code, "pub") && result_err_is_string(&l.code) {
+            findings.push(Finding {
+                path: path.to_string(),
+                line: i + 1,
+                rule: "style",
+                msg: "public API uses Result<_, String>; define a typed error enum \
+                      (see coordinator::error) or annotate `// LINT-ALLOW(style): <reason>`"
+                    .to_string(),
+            });
+        }
+        if l.code.contains("process::exit") && basename != "main.rs" {
+            findings.push(Finding {
+                path: path.to_string(),
+                line: i + 1,
+                rule: "style",
+                msg: "std::process::exit outside main.rs; bubble the error up to the \
+                      binary entry point instead"
+                    .to_string(),
+            });
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: wire-stability
+// ---------------------------------------------------------------------------
+
+/// One `const NAME: TY = VALUE;` extracted from a code view.
+pub struct WireConst {
+    /// Constant name as written in source.
+    pub name: String,
+    /// Declared type (`u16`, `u8`, `usize`).
+    pub ty: String,
+    /// Initialiser expression, verbatim (`6`, `1 << 20`).
+    pub value: String,
+    /// 1-based source line.
+    pub line: usize,
+}
+
+/// Extract `[pub] const <prefix>…: TY = VALUE;` declarations whose name
+/// starts with one of `prefixes`.
+pub fn extract_wire_consts(lines: &[LineView], prefixes: &[&str]) -> Vec<WireConst> {
+    let mut out = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        let t = l.code.trim();
+        let t = t.strip_prefix("pub ").unwrap_or(t);
+        let Some(rest) = t.strip_prefix("const ") else {
+            continue;
+        };
+        let Some((name, rest)) = rest.split_once(':') else {
+            continue;
+        };
+        let name = name.trim();
+        if !prefixes.iter().any(|p| name.starts_with(p)) {
+            continue;
+        }
+        let Some((ty, rest)) = rest.split_once('=') else {
+            continue;
+        };
+        let Some((value, _)) = rest.split_once(';') else {
+            continue;
+        };
+        out.push(WireConst {
+            name: name.to_string(),
+            ty: ty.trim().to_string(),
+            value: value.trim().to_string(),
+            line: i + 1,
+        });
+    }
+    out
+}
+
+/// Rule 3 ("wire-stability"): the `ServeError` u16 codes, the proto
+/// frame-type tags, and `MAX_FRAME` must match the committed golden
+/// table exactly — silent renumbering is a wire-ABI break.
+pub fn rule_wire_stability(
+    error_path: &str,
+    error_lines: &[LineView],
+    proto_path: &str,
+    proto_lines: &[LineView],
+    golden_text: &str,
+    golden_path: &str,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut extracted: Vec<(String, WireConst, String)> = Vec::new();
+    for c in extract_wire_consts(error_lines, &["CODE_"]) {
+        extracted.push((format!("error.{}", c.name), c, error_path.to_string()));
+    }
+    for c in extract_wire_consts(proto_lines, &["TYPE_", "MAX_FRAME"]) {
+        extracted.push((format!("proto.{}", c.name), c, proto_path.to_string()));
+    }
+
+    let mut golden: Vec<(String, String, String, usize)> = Vec::new();
+    for (no, raw) in golden_text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(name), Some(ty)) = (parts.next(), parts.next()) else {
+            findings.push(Finding {
+                path: golden_path.to_string(),
+                line: no + 1,
+                rule: "wire-stability",
+                msg: "malformed golden entry; expected `<name> <type> <value>`".to_string(),
+            });
+            continue;
+        };
+        let value = parts.collect::<Vec<_>>().join(" ");
+        if value.is_empty() {
+            findings.push(Finding {
+                path: golden_path.to_string(),
+                line: no + 1,
+                rule: "wire-stability",
+                msg: "malformed golden entry; expected `<name> <type> <value>`".to_string(),
+            });
+            continue;
+        }
+        golden.push((name.to_string(), ty.to_string(), value, no + 1));
+    }
+
+    for (name, c, path) in &extracted {
+        match golden.iter().find(|g| &g.0 == name) {
+            None => findings.push(Finding {
+                path: path.clone(),
+                line: c.line,
+                rule: "wire-stability",
+                msg: format!(
+                    "wire constant {name} is not in the golden table; add it to {golden_path}"
+                ),
+            }),
+            Some((_, gty, gval, _)) => {
+                if gty != &c.ty || gval != &c.value {
+                    findings.push(Finding {
+                        path: path.clone(),
+                        line: c.line,
+                        rule: "wire-stability",
+                        msg: format!(
+                            "wire constant {name}: source says `{}: {}` but the golden table \
+                             says `{gty}: {gval}` — renumbering breaks deployed clients; if \
+                             deliberate, update {golden_path}",
+                            c.ty, c.value
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    for (name, _, _, gline) in &golden {
+        if !extracted.iter().any(|(n, _, _)| n == name) {
+            findings.push(Finding {
+                path: golden_path.to_string(),
+                line: *gline,
+                rule: "wire-stability",
+                msg: format!("golden wire constant {name} no longer exists in source"),
+            });
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: config/docs drift
+// ---------------------------------------------------------------------------
+
+/// Extract config keys from the `stripped` views of `config.rs`: the
+/// string arguments of `json.get("…")` and `usize_of(json, "…")`.
+/// (The CLI layer reuses the same keys in kebab-case, so the JSON
+/// accessors are the single source of truth.)
+pub fn extract_config_keys(lines: &[LineView]) -> Vec<(String, usize)> {
+    const PATS: &[&str] = &["json.get(\"", "usize_of(json, \""];
+    let mut out: Vec<(String, usize)> = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        for pat in PATS {
+            for (idx, _) in l.stripped.match_indices(pat) {
+                let rest = &l.stripped[idx + pat.len()..];
+                let Some(end) = rest.find('"') else {
+                    continue;
+                };
+                let key = &rest[..end];
+                if !key.is_empty() && out.iter().all(|(k, _)| k != key) {
+                    out.push((key.to_string(), i + 1));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Rule 4 ("config-drift"): every config key read in
+/// `coordinator/config.rs` must appear backtick-quoted in both the
+/// README flag table and `docs/ARCHITECTURE.md`.
+pub fn rule_config_drift(
+    config_path: &str,
+    config_lines: &[LineView],
+    readme_text: &str,
+    arch_text: &str,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for (key, line) in extract_config_keys(config_lines) {
+        let quoted = format!("`{key}`");
+        for (doc, text) in [("README.md", readme_text), ("docs/ARCHITECTURE.md", arch_text)] {
+            if !text.contains(&quoted) {
+                findings.push(Finding {
+                    path: config_path.to_string(),
+                    line,
+                    rule: "config-drift",
+                    msg: format!("config key `{key}` is not documented in {doc}"),
+                });
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::scan;
+    use std::path::Path;
+
+    fn fixture(name: &str) -> Vec<LineView> {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name);
+        let src = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read fixture {}: {e}", path.display()));
+        scan(&src)
+    }
+
+    fn manifest_relative(rel: &str) -> String {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join(rel);
+        std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+    }
+
+    // -- allowlist ----------------------------------------------------------
+
+    #[test]
+    fn allowlist_parses_and_matches() {
+        let a = Allowlist::parse(
+            "# comment\n\nrust/tests/x.rs unsafe-audit GlobalAlloc shim, delegates to System\n",
+        )
+        .unwrap();
+        assert!(a.is_allowed("rust/tests/x.rs", "unsafe-audit"));
+        assert!(!a.is_allowed("rust/tests/x.rs", "no-panic"));
+        assert!(!a.is_allowed("rust/tests/y.rs", "unsafe-audit"));
+    }
+
+    #[test]
+    fn allowlist_rejects_entry_without_reason() {
+        assert!(Allowlist::parse("rust/tests/x.rs unsafe-audit\n").is_err());
+        assert!(Allowlist::parse("just-a-path\n").is_err());
+    }
+
+    // -- unsafe-audit -------------------------------------------------------
+
+    #[test]
+    fn unsafe_audit_fires_on_fixture() {
+        let lines = fixture("unsafe_missing_safety.rs");
+        let f = rule_unsafe_audit("fixtures/unsafe_missing_safety.rs", &lines, &Allowlist::empty());
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "unsafe-audit"));
+        // The fixture marks expected-finding lines with `MARK` comments.
+        let marked: Vec<usize> = lines
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.comment.contains("MARK"))
+            .map(|(i, _)| i + 1)
+            .collect();
+        let found: Vec<usize> = f.iter().map(|x| x.line).collect();
+        assert_eq!(found, marked);
+    }
+
+    #[test]
+    fn unsafe_audit_silent_on_annotated_fixture() {
+        let lines = fixture("unsafe_annotated.rs");
+        let f = rule_unsafe_audit("fixtures/unsafe_annotated.rs", &lines, &Allowlist::empty());
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn unsafe_audit_respects_allowlist() {
+        let lines = fixture("unsafe_missing_safety.rs");
+        let allow = Allowlist::parse("fixtures/unsafe_missing_safety.rs unsafe-audit test shim\n")
+            .unwrap();
+        assert!(rule_unsafe_audit("fixtures/unsafe_missing_safety.rs", &lines, &allow).is_empty());
+    }
+
+    #[test]
+    fn adjacent_unsafe_impls_need_individual_comments() {
+        let lines = scan(
+            "// SAFETY: T is Send.\nunsafe impl<T: Send> Send for W<T> {}\nunsafe impl<T: Send> Sync for W<T> {}\n",
+        );
+        let f = rule_unsafe_audit("x.rs", &lines, &Allowlist::empty());
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn doc_safety_section_counts_through_attributes() {
+        let lines = scan(
+            "/// Does things.\n///\n/// # Safety\n/// Caller checks avx2.\n#[target_feature(enable = \"avx2\")]\npub unsafe fn f() {}\n",
+        );
+        assert!(rule_unsafe_audit("x.rs", &lines, &Allowlist::empty()).is_empty());
+    }
+
+    #[test]
+    fn safety_in_string_literal_does_not_count() {
+        let lines = scan("let m = \"SAFETY: not a comment\";\nunsafe { op() };\n");
+        let f = rule_unsafe_audit("x.rs", &lines, &Allowlist::empty());
+        assert_eq!(f.len(), 1);
+    }
+
+    // -- no-panic -----------------------------------------------------------
+
+    #[test]
+    fn no_panic_fires_on_fixture() {
+        let lines = fixture("panic_in_serving.rs");
+        // The rule is path-gated; fixtures borrow a serving path name.
+        let f = rule_no_panic("rust/src/coordinator/server.rs", &lines);
+        let marked: Vec<usize> = lines
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.comment.contains("MARK"))
+            .map(|(i, _)| i + 1)
+            .collect();
+        let found: Vec<usize> = f.iter().map(|x| x.line).collect();
+        assert_eq!(found, marked, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "no-panic"));
+    }
+
+    #[test]
+    fn no_panic_silent_on_clean_fixture() {
+        let lines = fixture("panic_allowed.rs");
+        let f = rule_no_panic("rust/src/coordinator/server.rs", &lines);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn no_panic_ignores_non_serving_files() {
+        let lines = scan("fn f(v: Option<u8>) -> u8 {\n    v.unwrap()\n}\n");
+        assert!(rule_no_panic("rust/src/mds/lsmds.rs", &lines).is_empty());
+        assert_eq!(rule_no_panic("rust/src/coordinator/net.rs", &lines).len(), 1);
+    }
+
+    #[test]
+    fn no_panic_skips_cfg_test_spans() {
+        let src = concat!(
+            "fn ok() {}\n\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() {\n",
+            "        Some(1).unwrap();\n",
+            "    }\n",
+            "}\n"
+        );
+        assert!(rule_no_panic("rust/src/coordinator/proto.rs", &scan(src)).is_empty());
+    }
+
+    #[test]
+    fn no_panic_does_not_match_unwrap_or_and_strings() {
+        let src = concat!(
+            "fn f(v: Option<u8>) -> u8 {\n",
+            "    log(\"never .unwrap() here\");\n",
+            "    v.unwrap_or(0)\n}\n"
+        );
+        assert!(rule_no_panic("rust/src/coordinator/proto.rs", &scan(src)).is_empty());
+    }
+
+    #[test]
+    fn cfg_not_test_is_production_code() {
+        let src = "#[cfg(not(test))]\nfn f(v: Option<u8>) -> u8 {\n    v.unwrap()\n}\n";
+        assert_eq!(rule_no_panic("rust/src/coordinator/proto.rs", &scan(src)).len(), 1);
+    }
+
+    // -- style --------------------------------------------------------------
+
+    #[test]
+    fn style_fires_on_fixture() {
+        let lines = fixture("style_bad.rs");
+        let f = rule_style("fixtures/style_bad.rs", &lines);
+        let marked: Vec<usize> = lines
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.comment.contains("MARK"))
+            .map(|(i, _)| i + 1)
+            .collect();
+        let found: Vec<usize> = f.iter().map(|x| x.line).collect();
+        assert_eq!(found, marked, "{f:?}");
+    }
+
+    #[test]
+    fn result_string_matcher_is_precise() {
+        assert!(result_err_is_string("pub fn f() -> Result<(), String> {"));
+        assert!(result_err_is_string("pub type R = Result<Vec<u8>, String>;"));
+        assert!(!result_err_is_string("pub fn f() -> Result<String, Error> {"));
+        assert!(!result_err_is_string("pub fn f() -> Result<Vec<String>, Error> {"));
+        assert!(!result_err_is_string("pub fn f() -> anyhow::Result<String> {"));
+    }
+
+    #[test]
+    fn process_exit_allowed_only_in_main_rs() {
+        let lines = scan("fn die() {\n    std::process::exit(2);\n}\n");
+        assert_eq!(rule_style("rust/src/util/mod.rs", &lines).len(), 1);
+        assert!(rule_style("rust/src/main.rs", &lines).is_empty());
+        assert!(rule_style("rust/lint/src/main.rs", &lines).is_empty());
+    }
+
+    // -- wire-stability -----------------------------------------------------
+
+    fn wire_findings(golden: &str) -> Vec<Finding> {
+        let error_lines = scan(&manifest_relative("../src/coordinator/error.rs"));
+        let proto_lines = scan(&manifest_relative("../src/coordinator/proto.rs"));
+        rule_wire_stability(
+            "rust/src/coordinator/error.rs",
+            &error_lines,
+            "rust/src/coordinator/proto.rs",
+            &proto_lines,
+            golden,
+            "rust/lint/golden/wire_abi.txt",
+        )
+    }
+
+    #[test]
+    fn wire_golden_round_trips_against_source() {
+        let golden = manifest_relative("golden/wire_abi.txt");
+        let f = wire_findings(&golden);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn wire_renumbering_is_detected() {
+        let golden = manifest_relative("golden/wire_abi.txt");
+        let tampered = golden.replace("error.CODE_TIMEOUT u16 6", "error.CODE_TIMEOUT u16 60");
+        let f = wire_findings(&tampered);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].msg.contains("CODE_TIMEOUT"));
+    }
+
+    #[test]
+    fn wire_removed_const_is_detected() {
+        let golden = manifest_relative("golden/wire_abi.txt");
+        let extended = format!("{golden}proto.TYPE_GONE u8 9\n");
+        let f = wire_findings(&extended);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].msg.contains("no longer exists"));
+    }
+
+    #[test]
+    fn wire_extractor_reads_consts() {
+        let lines = scan("/// Doc.\npub const CODE_X: u16 = 3;\nconst OTHER: u8 = 1;\n");
+        let consts = extract_wire_consts(&lines, &["CODE_"]);
+        assert_eq!(consts.len(), 1);
+        assert_eq!(consts[0].name, "CODE_X");
+        assert_eq!(consts[0].ty, "u16");
+        assert_eq!(consts[0].value, "3");
+        assert_eq!(consts[0].line, 2);
+    }
+
+    // -- config-drift -------------------------------------------------------
+
+    #[test]
+    fn config_keys_extracted_from_strings_not_comments() {
+        let src = concat!(
+            "fn apply(json: &Json) {\n",
+            "    // json.get(\"ghost\") stays undocumented\n",
+            "    let _ = json.get(\"dim\");\n",
+            "    let _ = usize_of(json, \"landmarks\");\n}\n"
+        );
+        let keys = extract_config_keys(&scan(src));
+        let names: Vec<&str> = keys.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(names, ["dim", "landmarks"]);
+    }
+
+    #[test]
+    fn config_drift_reports_each_missing_doc() {
+        let src = concat!(
+            "fn apply(json: &Json) {\n",
+            "    let _ = json.get(\"alpha\");\n",
+            "    let _ = json.get(\"beta\");\n}\n"
+        );
+        let lines = scan(src);
+        let f = rule_config_drift("c.rs", &lines, "has `alpha` only", "has `alpha` and `beta`");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].msg.contains("`beta`"));
+        assert!(f[0].msg.contains("README.md"));
+    }
+
+    #[test]
+    fn repo_config_keys_are_documented() {
+        let config = scan(&manifest_relative("../src/coordinator/config.rs"));
+        let readme = manifest_relative("../../README.md");
+        let arch = manifest_relative("../../docs/ARCHITECTURE.md");
+        let f = rule_config_drift("rust/src/coordinator/config.rs", &config, &readme, &arch);
+        assert!(f.is_empty(), "{f:?}");
+        // Sanity: the extractor sees the full key set, not a subset.
+        assert!(extract_config_keys(&config).len() >= 25);
+    }
+}

@@ -1,0 +1,388 @@
+//! A minimal comment/string-aware scanner over Rust source text.
+//!
+//! The linter does not parse Rust; it tokenises just enough to know, for
+//! every character, whether it sits in code, in a comment, or inside a
+//! string/char literal. Each source line is split into three *aligned*
+//! views (same length, same columns) so the rules can do plain substring
+//! searches without ever matching text inside a comment or a literal:
+//!
+//! * [`LineView::code`] — comments and string *contents* blanked to
+//!   spaces (the quotes themselves are kept). `.unwrap()` inside a log
+//!   message cannot fire the no-panic rule here.
+//! * [`LineView::stripped`] — comments blanked, string contents kept.
+//!   Used where the interesting token *is* a string literal, e.g. the
+//!   config keys in `json.get("dim")`.
+//! * [`LineView::comment`] — comment text only. `SAFETY:` and
+//!   `LINT-ALLOW(...)` annotations are looked up here, so a string
+//!   containing the word `SAFETY:` can never satisfy the unsafe audit.
+//!
+//! Handled syntax: line comments, nested block comments, string
+//! literals with escapes, raw strings (`r"…"`, `r#"…"#`, `br"…"`), byte
+//! strings, char literals, and the char-literal/lifetime ambiguity
+//! (`'a'` vs `'a`). That is the full set of Rust constructs that can
+//! embed a quote or a `//` and fool a naive grep.
+
+/// One source line split into three aligned views; see the module docs.
+#[derive(Debug, Clone)]
+pub struct LineView {
+    /// Comments and string contents blanked; quotes kept.
+    pub code: String,
+    /// Comments blanked; string contents kept.
+    pub stripped: String,
+    /// Comment text only; everything else blanked.
+    pub comment: String,
+}
+
+/// Scanner state carried across lines (block comments and multi-line
+/// strings continue onto the next line).
+#[derive(Clone, Copy)]
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+/// Accumulates the three per-line buffers and finished lines.
+struct Builder {
+    code: String,
+    stripped: String,
+    comment: String,
+    lines: Vec<LineView>,
+}
+
+impl Builder {
+    fn new() -> Self {
+        Builder {
+            code: String::new(),
+            stripped: String::new(),
+            comment: String::new(),
+            lines: Vec::new(),
+        }
+    }
+
+    /// Emit one character into the three views (aligned columns).
+    fn put(&mut self, code: char, stripped: char, comment: char) {
+        self.code.push(code);
+        self.stripped.push(stripped);
+        self.comment.push(comment);
+    }
+
+    /// A character that is plain code: visible in `code` and `stripped`.
+    fn put_code(&mut self, c: char) {
+        self.put(c, c, ' ');
+    }
+
+    /// A character inside a comment: visible only in `comment`.
+    fn put_comment(&mut self, c: char) {
+        self.put(' ', ' ', c);
+    }
+
+    /// String *content*: blanked in `code`, kept in `stripped`.
+    fn put_str_content(&mut self, c: char) {
+        self.put(' ', c, ' ');
+    }
+
+    fn end_line(&mut self) {
+        self.lines.push(LineView {
+            code: std::mem::take(&mut self.code),
+            stripped: std::mem::take(&mut self.stripped),
+            comment: std::mem::take(&mut self.comment),
+        });
+    }
+
+    fn finish(mut self) -> Vec<LineView> {
+        if !self.code.is_empty() || !self.comment.is_empty() {
+            self.end_line();
+        }
+        self.lines
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Try to recognise a raw-string opener (`r"`, `r#"`, `br##"` …) at
+/// position `i`. Returns `(hash_count, index_past_opening_quote)`.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+/// Split `src` into per-line code/stripped/comment views.
+pub fn scan(src: &str) -> Vec<LineView> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut b = Builder::new();
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if let State::LineComment = state {
+                state = State::Code;
+            }
+            b.end_line();
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    b.put_comment('/');
+                    b.put_comment('/');
+                    i += 2;
+                    state = State::LineComment;
+                } else if c == '/' && next == Some('*') {
+                    b.put_comment('/');
+                    b.put_comment('*');
+                    i += 2;
+                    state = State::BlockComment(1);
+                } else if (c == 'r' || c == 'b')
+                    && (i == 0 || !is_ident(chars[i - 1]))
+                    && raw_string_open(&chars, i).is_some()
+                {
+                    // Prefix (`r`, `b`, hashes) and the opening quote are
+                    // code tokens; contents follow in RawStr state.
+                    if let Some((hashes, past_quote)) = raw_string_open(&chars, i) {
+                        for k in i..past_quote {
+                            b.put_code(chars[k]);
+                        }
+                        i = past_quote;
+                        state = State::RawStr(hashes);
+                    }
+                } else if c == '"' {
+                    b.put_code('"');
+                    i += 1;
+                    state = State::Str;
+                } else if c == '\'' {
+                    if next == Some('\\') {
+                        // Escaped char literal: consume until the
+                        // closing quote.
+                        b.put_code('\'');
+                        i += 1;
+                        while i < chars.len() && chars[i] != '\'' {
+                            if chars[i] == '\\' && i + 1 < chars.len() {
+                                b.put_str_content(chars[i]);
+                                b.put_str_content(chars[i + 1]);
+                                i += 2;
+                            } else {
+                                b.put_str_content(chars[i]);
+                                i += 1;
+                            }
+                        }
+                        if i < chars.len() {
+                            b.put_code('\'');
+                            i += 1;
+                        }
+                    } else if chars.get(i + 2) == Some(&'\'') && next != Some('\'') {
+                        // Simple char literal: 'x'.
+                        b.put_code('\'');
+                        b.put_str_content(chars[i + 1]);
+                        b.put_code('\'');
+                        i += 3;
+                    } else {
+                        // A lifetime tick ('a, '_, 'static).
+                        b.put_code('\'');
+                        i += 1;
+                    }
+                } else {
+                    b.put_code(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                b.put_comment(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    b.put_comment('/');
+                    b.put_comment('*');
+                    i += 2;
+                    state = State::BlockComment(depth + 1);
+                } else if c == '*' && next == Some('/') {
+                    b.put_comment('*');
+                    b.put_comment('/');
+                    i += 2;
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                } else {
+                    b.put_comment(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' && i + 1 < chars.len() {
+                    b.put_str_content(c);
+                    if chars[i + 1] != '\n' {
+                        b.put_str_content(chars[i + 1]);
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    b.put_code('"');
+                    i += 1;
+                    state = State::Code;
+                } else {
+                    b.put_str_content(c);
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let closes = (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'));
+                    if closes {
+                        b.put_code('"');
+                        for _ in 0..hashes {
+                            b.put_code('#');
+                        }
+                        i += 1 + hashes as usize;
+                        state = State::Code;
+                    } else {
+                        b.put_str_content(c);
+                        i += 1;
+                    }
+                } else {
+                    b.put_str_content(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    b.finish()
+}
+
+/// True when `needle` occurs in `haystack` with non-identifier characters
+/// (or the line boundary) on both sides.
+pub fn contains_word(haystack: &str, needle: &str) -> bool {
+    let hay: Vec<char> = haystack.chars().collect();
+    let ned: Vec<char> = needle.chars().collect();
+    if ned.is_empty() || hay.len() < ned.len() {
+        return false;
+    }
+    for start in 0..=hay.len() - ned.len() {
+        if hay[start..start + ned.len()] != ned[..] {
+            continue;
+        }
+        let before_ok = start == 0 || !is_ident(hay[start - 1]);
+        let after = start + ned.len();
+        let after_ok = after == hay.len() || !is_ident(hay[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(src: &str) -> Vec<LineView> {
+        scan(src)
+    }
+
+    #[test]
+    fn line_comment_is_blanked_from_code() {
+        let v = views("let x = 1; // unsafe unwrap()\n");
+        assert!(!v[0].code.contains("unsafe"));
+        assert!(v[0].code.contains("let x = 1;"));
+        assert!(v[0].comment.contains("unsafe unwrap()"));
+    }
+
+    #[test]
+    fn string_contents_blanked_in_code_kept_in_stripped() {
+        let v = views("let s = \"call .unwrap() now\";\n");
+        assert!(!v[0].code.contains(".unwrap()"));
+        assert!(v[0].stripped.contains(".unwrap()"));
+        // The quotes themselves stay visible in the code view.
+        assert_eq!(v[0].code.matches('"').count(), 2);
+    }
+
+    #[test]
+    fn nested_block_comment_spans_lines() {
+        let v = views("/* outer /* inner */ still comment */ let y = 2;\nlet z = 3;\n");
+        assert!(v[0].code.contains("let y = 2;"));
+        assert!(!v[0].code.contains("inner"));
+        assert!(v[0].comment.contains("inner"));
+        assert!(v[1].code.contains("let z = 3;"));
+    }
+
+    #[test]
+    fn raw_string_with_hashes() {
+        let v = views("let r = r#\"has \"quotes\" and // no comment\"#; // real\n");
+        assert!(!v[0].code.contains("quotes"));
+        assert!(v[0].stripped.contains("has \"quotes\""));
+        assert!(v[0].comment.contains("real"));
+        assert!(!v[0].comment.contains("no comment"));
+    }
+
+    #[test]
+    fn char_literal_quote_does_not_open_string() {
+        let v = views("let c = '\"'; let d = 1; // tail\n");
+        assert!(v[0].code.contains("let d = 1;"));
+        assert!(v[0].comment.contains("tail"));
+    }
+
+    #[test]
+    fn lifetime_tick_is_not_a_char_literal() {
+        let v = views("fn f<'a>(x: &'a str) -> &'a str { x } // ok\n");
+        assert!(v[0].code.contains("fn f<"));
+        assert!(v[0].comment.contains("ok"));
+    }
+
+    #[test]
+    fn escaped_char_literal() {
+        let v = views("let n = '\\n'; let q = '\\''; // c\n");
+        assert!(v[0].comment.contains('c'));
+        assert!(v[0].code.contains("let q ="));
+    }
+
+    #[test]
+    fn multi_line_string_continues() {
+        let v = views("let s = \"first\nsecond // not a comment\";\nlet t = 4;\n");
+        assert!(!v[1].code.contains("second"));
+        assert!(v[1].comment.trim().is_empty());
+        assert!(v[2].code.contains("let t = 4;"));
+    }
+
+    #[test]
+    fn views_stay_column_aligned() {
+        for line in views("let s = \"x\"; // c\nunsafe { /* b */ }\n") {
+            assert_eq!(line.code.chars().count(), line.stripped.chars().count());
+            assert_eq!(line.code.chars().count(), line.comment.chars().count());
+        }
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(contains_word("unsafe { }", "unsafe"));
+        assert!(contains_word("(unsafe)", "unsafe"));
+        assert!(!contains_word("deny(unsafe_op_in_unsafe_fn)", "unsafe"));
+        assert!(!contains_word("not_unsafe", "unsafe"));
+    }
+}

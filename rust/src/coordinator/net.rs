@@ -209,9 +209,11 @@ mod linux {
                     reason: format!("pipe: {}", std::io::Error::last_os_error()),
                 });
             }
-            // SAFETY: both fds are freshly created and owned here; File
-            // takes ownership and closes them on drop.
+            // SAFETY: fds[0] is the freshly created read end, owned by
+            // nothing else; File takes ownership and closes it on drop.
             let wake_rx = unsafe { File::from_raw_fd(fds[0]) };
+            // SAFETY: likewise fds[1], the write end — each fd is wrapped
+            // exactly once, so no double-close can occur.
             let wake_tx = unsafe { File::from_raw_fd(fds[1]) };
             // Nonblocking on both ends: the loop drains the read end dry,
             // and a full pipe must never park an executor mid-reply.
@@ -413,7 +415,13 @@ mod linux {
                 let mut dead: Vec<u64> = Vec::new();
                 for (i, &token) in tokens.iter().enumerate() {
                     let revents = fds[base + i].revents;
-                    let conn = conns.get_mut(&token).expect("token tracked");
+                    // tokens was snapshotted from conns above; a missing
+                    // entry would be a bookkeeping bug, but dropping the
+                    // poll turn is strictly safer than panicking the
+                    // event loop.
+                    let Some(conn) = conns.get_mut(&token) else {
+                        continue;
+                    };
                     let mut alive = true;
                     if revents & (sys::POLLIN | sys::POLLERR | sys::POLLHUP) != 0 {
                         alive = self.handle_readable(token, conn, &mut in_flight);

@@ -252,24 +252,34 @@ impl Cursor<'_> {
         Ok(s)
     }
 
+    /// Fixed-size read: `take` has already bounds-checked the slice, so
+    /// the copy into the array cannot fail (no panicking `try_into` here —
+    /// this is a no-panic serving path).
+    fn array<const N: usize>(&mut self) -> Result<[u8; N], ServeError> {
+        let s = self.take(N)?;
+        let mut out = [0u8; N];
+        out.copy_from_slice(s);
+        Ok(out)
+    }
+
     fn u8(&mut self) -> Result<u8, ServeError> {
         Ok(self.take(1)?[0])
     }
 
     fn u16(&mut self) -> Result<u16, ServeError> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(u16::from_le_bytes(self.array()?))
     }
 
     fn u32(&mut self) -> Result<u32, ServeError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.array()?))
     }
 
     fn u64(&mut self) -> Result<u64, ServeError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.array()?))
     }
 
     fn f32(&mut self) -> Result<f32, ServeError> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(f32::from_le_bytes(self.array()?))
     }
 
     fn rest_utf8(&mut self) -> Result<String, ServeError> {
@@ -314,7 +324,8 @@ impl Deframer {
         if self.buf.len() < 4 {
             return Ok(None);
         }
-        let len = u32::from_le_bytes(self.buf[..4].try_into().unwrap()) as usize;
+        let len =
+            u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
         if len > MAX_FRAME {
             return Err(ServeError::Protocol {
                 reason: format!("frame of {len} bytes exceeds the {MAX_FRAME} cap"),

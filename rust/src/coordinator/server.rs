@@ -357,30 +357,31 @@ impl<T: ?Sized + Send + Sync + 'static> ServerBuilder<T> {
         let factory = self.factory;
 
         let mut first = Some(probe);
-        let executors = (0..replicas)
-            .map(|i| {
-                let method =
-                    first.take().unwrap_or_else(|| factory.build());
-                let rx = Arc::clone(&rx);
-                let factory = Arc::clone(&factory);
-                let metrics = Arc::clone(&metrics);
-                let drift = drift.clone();
-                let ecfg = cfg.clone();
-                std::thread::Builder::new()
-                    .name(format!("ose-exec-{i}"))
-                    .spawn(move || {
-                        executor_loop(
-                            &rx,
-                            method,
-                            factory.as_ref(),
-                            &ecfg,
-                            &metrics,
-                            drift.as_deref(),
-                        )
-                    })
-                    .expect("spawning executor replica")
-            })
-            .collect();
+        let mut executors = Vec::with_capacity(replicas);
+        for i in 0..replicas {
+            let method = first.take().unwrap_or_else(|| factory.build());
+            let rx = Arc::clone(&rx);
+            let factory = Arc::clone(&factory);
+            let metrics = Arc::clone(&metrics);
+            let drift = drift.clone();
+            let ecfg = cfg.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ose-exec-{i}"))
+                .spawn(move || {
+                    executor_loop(
+                        &rx,
+                        method,
+                        factory.as_ref(),
+                        &ecfg,
+                        &metrics,
+                        drift.as_deref(),
+                    )
+                })
+                .map_err(|e| ServeError::Internal {
+                    reason: format!("spawning executor replica {i}: {e}"),
+                })?;
+            executors.push(handle);
+        }
 
         let handle = ServerHandle {
             landmarks: Arc::new(self.landmarks),
@@ -407,6 +408,7 @@ impl Server<str> {
         if let Some(h) = drift {
             b = b.drift(h);
         }
+        // LINT-ALLOW(panic): deprecated infallible-signature shim; build() is the fix.
         b.build().expect("invalid server configuration")
     }
 }
@@ -445,11 +447,16 @@ impl<T: ?Sized + Send + Sync + 'static> Server<T> {
         if let Some(h) = drift {
             b = b.drift(h);
         }
+        // LINT-ALLOW(panic): deprecated infallible-signature shim; build() is the fix.
         b.build().expect("invalid server configuration")
     }
 
     /// A new client handle onto the running server.
+    ///
+    /// # Panics
+    /// After [`Server::shutdown`] has consumed the handle.
     pub fn handle(&self) -> ServerHandle<T> {
+        // LINT-ALLOW(panic): documented contract; use after shutdown is a caller bug.
         self.handle.clone().expect("server already shut down")
     }
 

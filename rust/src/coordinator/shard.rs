@@ -246,7 +246,9 @@ impl<T: ?Sized + Send + Sync + 'static> ServerBuilder<T> {
                             None,
                         )
                     })
-                    .expect("spawning shard executor");
+                    .map_err(|e| ServeError::Internal {
+                        reason: format!("spawning shard {s} executor {r}: {e}"),
+                    })?;
                 executors.push(t);
             }
             slots.push(ShardSlot {
@@ -281,7 +283,11 @@ impl<T: ?Sized + Send + Sync + 'static> ServerBuilder<T> {
 
 impl<T: ?Sized + Send + Sync + 'static> ShardedServer<T> {
     /// A new client handle onto the running sharded server.
+    ///
+    /// # Panics
+    /// After [`ShardedServer::shutdown`] has consumed the handle.
     pub fn handle(&self) -> ShardedHandle<T> {
+        // LINT-ALLOW(panic): documented contract; use after shutdown is a caller bug.
         self.handle.clone().expect("server already shut down")
     }
 

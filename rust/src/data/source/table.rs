@@ -80,8 +80,11 @@ mod mmap {
         len: usize,
     }
 
-    // SAFETY: the mapping is read-only for its whole lifetime.
+    // SAFETY: the mapping is read-only for its whole lifetime, so the
+    // owning handle can move to another thread freely.
     unsafe impl Send for MmapRegion {}
+    // SAFETY: likewise for shared references — no interior mutability,
+    // every access path is a plain read of immutable pages.
     unsafe impl Sync for MmapRegion {}
 
     impl MmapRegion {

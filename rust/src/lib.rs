@@ -25,6 +25,10 @@
 // carries rustdoc, enforced as an error by the CI docs job
 // (RUSTDOCFLAGS="-D warnings").
 #![warn(missing_docs)]
+// Every unsafe operation must sit in its own `unsafe {}` block with a
+// SAFETY comment, even inside `unsafe fn` — the per-block granularity is
+// what lmds-lint's unsafe-audit rule keys on (`cargo run -p lmds-lint`).
+#![deny(unsafe_op_in_unsafe_fn)]
 // Style lints that fight the numeric-kernel idiom used throughout
 // (index-based loops over matrix rows/cols, 7-arg update kernels).
 #![allow(

@@ -51,6 +51,8 @@ pub fn cross_matrix<T: Sync + ?Sized>(
             for i in start..end {
                 for j in 0..nc {
                     let d = metric.dist(rows[i], cols[j]) as f32;
+                    // SAFETY: row i is owned by this chunk; cell (i, j) is
+                    // written exactly once.
                     unsafe { slots.write(i * nc + j, d) };
                 }
             }

@@ -86,6 +86,8 @@ pub fn stress_gradient(x: &Matrix, delta: &Matrix) -> (Matrix, f64) {
                         gi[c] += 2.0 * coef * (xi[c] as f64 - xj[c] as f64);
                     }
                 }
+                // SAFETY: row i belongs to exactly one chunk owner, so
+                // sres[i] and grad row i are each written once.
                 unsafe {
                     sslots.write(i, s);
                     for c in 0..k {
@@ -151,6 +153,8 @@ pub fn stress_gradient_blocked(x: &Matrix, delta: &Matrix) -> (Matrix, f64) {
                 }
                 t0 = t1;
             }
+            // SAFETY: rows start..end belong to this chunk owner alone,
+            // so sres[i] and grad row i are each written exactly once.
             unsafe {
                 for i in start..end {
                     sslots.write(i, si[i - start]);

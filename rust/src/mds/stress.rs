@@ -126,6 +126,8 @@ pub fn total_error(config: &Matrix, delta_new: &Matrix, y_hat: &Matrix) -> f64 {
                     let r = delta - d;
                     acc += if delta > 0.0 { r * r / delta } else { r * r };
                 }
+                // SAFETY: column j is written exactly once, by the one
+                // chunk owner that covers it.
                 unsafe { slots.write(j, acc) };
             }
         });

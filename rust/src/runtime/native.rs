@@ -101,6 +101,8 @@ impl ComputeBackend for NativeBackend {
                         }
                     }
                     let (o, _) = objective_and_grad(landmarks, deltas.row(r), &yr);
+                    // SAFETY: row r is owned by this chunk; obj[r] and the
+                    // output row are each written exactly once.
                     unsafe {
                         oslots.write(r, o as f32);
                         for c in 0..k {
@@ -138,6 +140,8 @@ impl ComputeBackend for NativeBackend {
                         rows,
                         &mut block,
                     );
+                    // SAFETY: rows start..end belong to this chunk alone, so
+                    // the output cells are each written exactly once.
                     unsafe {
                         for (i, v) in block.iter().enumerate() {
                             slots.write(start * k + i, *v);

@@ -25,39 +25,45 @@ use super::{tree8_f32, tree8_f64};
 /// Caller must have verified NEON support; `a.len() == b.len()`.
 #[target_feature(enable = "neon")]
 pub unsafe fn euclidean_sq(a: &[f32], b: &[f32]) -> f64 {
-    let n = a.len();
-    let n8 = n - (n % 8);
-    let ap = a.as_ptr();
-    let bp = b.as_ptr();
-    let mut acc01 = vdupq_n_f64(0.0);
-    let mut acc23 = vdupq_n_f64(0.0);
-    let mut acc45 = vdupq_n_f64(0.0);
-    let mut acc67 = vdupq_n_f64(0.0);
-    let mut j = 0;
-    while j < n8 {
-        let da = vsubq_f32(vld1q_f32(ap.add(j)), vld1q_f32(bp.add(j)));
-        let db = vsubq_f32(vld1q_f32(ap.add(j + 4)), vld1q_f32(bp.add(j + 4)));
-        let d01 = vcvt_f64_f32(vget_low_f32(da));
-        let d23 = vcvt_f64_f32(vget_high_f32(da));
-        let d45 = vcvt_f64_f32(vget_low_f32(db));
-        let d67 = vcvt_f64_f32(vget_high_f32(db));
-        acc01 = vaddq_f64(acc01, vmulq_f64(d01, d01));
-        acc23 = vaddq_f64(acc23, vmulq_f64(d23, d23));
-        acc45 = vaddq_f64(acc45, vmulq_f64(d45, d45));
-        acc67 = vaddq_f64(acc67, vmulq_f64(d67, d67));
-        j += 8;
+    // SAFETY: caller upholds the `# Safety` contract above. Vector
+    // tiles read lanes j..j+8 with j + 8 <= n8 <= n, the scalar tail
+    // reads single in-bounds elements n8..n, and the stores hit a
+    // local [f64; 8] — nothing leaves the operand slices.
+    unsafe {
+        let n = a.len();
+        let n8 = n - (n % 8);
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        let mut acc45 = vdupq_n_f64(0.0);
+        let mut acc67 = vdupq_n_f64(0.0);
+        let mut j = 0;
+        while j < n8 {
+            let da = vsubq_f32(vld1q_f32(ap.add(j)), vld1q_f32(bp.add(j)));
+            let db = vsubq_f32(vld1q_f32(ap.add(j + 4)), vld1q_f32(bp.add(j + 4)));
+            let d01 = vcvt_f64_f32(vget_low_f32(da));
+            let d23 = vcvt_f64_f32(vget_high_f32(da));
+            let d45 = vcvt_f64_f32(vget_low_f32(db));
+            let d67 = vcvt_f64_f32(vget_high_f32(db));
+            acc01 = vaddq_f64(acc01, vmulq_f64(d01, d01));
+            acc23 = vaddq_f64(acc23, vmulq_f64(d23, d23));
+            acc45 = vaddq_f64(acc45, vmulq_f64(d45, d45));
+            acc67 = vaddq_f64(acc67, vmulq_f64(d67, d67));
+            j += 8;
+        }
+        let mut lanes = [0.0f64; 8];
+        vst1q_f64(lanes.as_mut_ptr(), acc01);
+        vst1q_f64(lanes.as_mut_ptr().add(2), acc23);
+        vst1q_f64(lanes.as_mut_ptr().add(4), acc45);
+        vst1q_f64(lanes.as_mut_ptr().add(6), acc67);
+        while j < n {
+            let d = (*ap.add(j) - *bp.add(j)) as f64;
+            lanes[j & 7] += d * d;
+            j += 1;
+        }
+        tree8_f64(&lanes)
     }
-    let mut lanes = [0.0f64; 8];
-    vst1q_f64(lanes.as_mut_ptr(), acc01);
-    vst1q_f64(lanes.as_mut_ptr().add(2), acc23);
-    vst1q_f64(lanes.as_mut_ptr().add(4), acc45);
-    vst1q_f64(lanes.as_mut_ptr().add(6), acc67);
-    while j < n {
-        let d = (*ap.add(j) - *bp.add(j)) as f64;
-        lanes[j & 7] += d * d;
-        j += 1;
-    }
-    tree8_f64(&lanes)
 }
 
 /// NEON [`super::manhattan`]: as [`euclidean_sq`] with f64 `abs`
@@ -67,34 +73,39 @@ pub unsafe fn euclidean_sq(a: &[f32], b: &[f32]) -> f64 {
 /// Caller must have verified NEON support; `a.len() == b.len()`.
 #[target_feature(enable = "neon")]
 pub unsafe fn manhattan(a: &[f32], b: &[f32]) -> f64 {
-    let n = a.len();
-    let n8 = n - (n % 8);
-    let ap = a.as_ptr();
-    let bp = b.as_ptr();
-    let mut acc01 = vdupq_n_f64(0.0);
-    let mut acc23 = vdupq_n_f64(0.0);
-    let mut acc45 = vdupq_n_f64(0.0);
-    let mut acc67 = vdupq_n_f64(0.0);
-    let mut j = 0;
-    while j < n8 {
-        let da = vsubq_f32(vld1q_f32(ap.add(j)), vld1q_f32(bp.add(j)));
-        let db = vsubq_f32(vld1q_f32(ap.add(j + 4)), vld1q_f32(bp.add(j + 4)));
-        acc01 = vaddq_f64(acc01, vabsq_f64(vcvt_f64_f32(vget_low_f32(da))));
-        acc23 = vaddq_f64(acc23, vabsq_f64(vcvt_f64_f32(vget_high_f32(da))));
-        acc45 = vaddq_f64(acc45, vabsq_f64(vcvt_f64_f32(vget_low_f32(db))));
-        acc67 = vaddq_f64(acc67, vabsq_f64(vcvt_f64_f32(vget_high_f32(db))));
-        j += 8;
+    // SAFETY: same access pattern as `euclidean_sq` — vector tiles end
+    // at n8 <= n, the scalar tail stays below n, stores hit a local
+    // [f64; 8].
+    unsafe {
+        let n = a.len();
+        let n8 = n - (n % 8);
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        let mut acc45 = vdupq_n_f64(0.0);
+        let mut acc67 = vdupq_n_f64(0.0);
+        let mut j = 0;
+        while j < n8 {
+            let da = vsubq_f32(vld1q_f32(ap.add(j)), vld1q_f32(bp.add(j)));
+            let db = vsubq_f32(vld1q_f32(ap.add(j + 4)), vld1q_f32(bp.add(j + 4)));
+            acc01 = vaddq_f64(acc01, vabsq_f64(vcvt_f64_f32(vget_low_f32(da))));
+            acc23 = vaddq_f64(acc23, vabsq_f64(vcvt_f64_f32(vget_high_f32(da))));
+            acc45 = vaddq_f64(acc45, vabsq_f64(vcvt_f64_f32(vget_low_f32(db))));
+            acc67 = vaddq_f64(acc67, vabsq_f64(vcvt_f64_f32(vget_high_f32(db))));
+            j += 8;
+        }
+        let mut lanes = [0.0f64; 8];
+        vst1q_f64(lanes.as_mut_ptr(), acc01);
+        vst1q_f64(lanes.as_mut_ptr().add(2), acc23);
+        vst1q_f64(lanes.as_mut_ptr().add(4), acc45);
+        vst1q_f64(lanes.as_mut_ptr().add(6), acc67);
+        while j < n {
+            lanes[j & 7] += ((*ap.add(j) - *bp.add(j)) as f64).abs();
+            j += 1;
+        }
+        tree8_f64(&lanes)
     }
-    let mut lanes = [0.0f64; 8];
-    vst1q_f64(lanes.as_mut_ptr(), acc01);
-    vst1q_f64(lanes.as_mut_ptr().add(2), acc23);
-    vst1q_f64(lanes.as_mut_ptr().add(4), acc45);
-    vst1q_f64(lanes.as_mut_ptr().add(6), acc67);
-    while j < n {
-        lanes[j & 7] += ((*ap.add(j) - *bp.add(j)) as f64).abs();
-        j += 1;
-    }
-    tree8_f64(&lanes)
 }
 
 /// NEON [`super::stress_row_tile`]: 8-wide distance tiles into a pair
@@ -116,58 +127,67 @@ pub unsafe fn stress_row_tile(
     gr: &mut [f32],
     diff: &mut [f32],
 ) -> f64 {
-    let k = xi.len();
-    let k8 = k - (k % 8);
-    let k4 = k - (k % 4);
-    let xip = xi.as_ptr();
-    let dp = diff.as_mut_ptr();
-    let gp = gr.as_mut_ptr();
-    let mut s = 0.0f64;
-    for j in t0..t1 {
-        if j == skip {
-            continue;
-        }
-        let xjp = x.row(j).as_ptr();
-        let mut acc_a = vdupq_n_f32(0.0);
-        let mut acc_b = vdupq_n_f32(0.0);
-        let mut c = 0;
-        while c < k8 {
-            let da = vsubq_f32(vld1q_f32(xip.add(c)), vld1q_f32(xjp.add(c)));
-            let db = vsubq_f32(vld1q_f32(xip.add(c + 4)), vld1q_f32(xjp.add(c + 4)));
-            vst1q_f32(dp.add(c), da);
-            vst1q_f32(dp.add(c + 4), db);
-            acc_a = vaddq_f32(acc_a, vmulq_f32(da, da));
-            acc_b = vaddq_f32(acc_b, vmulq_f32(db, db));
-            c += 8;
-        }
-        let mut lanes = [0.0f32; 8];
-        vst1q_f32(lanes.as_mut_ptr(), acc_a);
-        vst1q_f32(lanes.as_mut_ptr().add(4), acc_b);
-        while c < k {
-            let d = *xip.add(c) - *xjp.add(c);
-            *dp.add(c) = d;
-            lanes[c & 7] += d * d;
-            c += 1;
-        }
-        let d = tree8_f32(&lanes).sqrt();
-        let resid = d - drow[j];
-        s += (resid as f64) * (resid as f64);
-        if d > 1e-12 {
-            let coef = 2.0 * resid / d;
-            let vcoef = vdupq_n_f32(coef);
-            let mut c = 0;
-            while c < k4 {
-                let g = vaddq_f32(vld1q_f32(gp.add(c)), vmulq_f32(vcoef, vld1q_f32(dp.add(c))));
-                vst1q_f32(gp.add(c), g);
-                c += 4;
+    // SAFETY: caller upholds the `# Safety` contract above, so `xi`,
+    // each `x.row(j)` (j < t1 <= x.rows), `gr` and `diff` all have
+    // length k = x.cols; vector tiles end at k8/k4 <= k and the scalar
+    // tails stay below k.
+    unsafe {
+        let k = xi.len();
+        let k8 = k - (k % 8);
+        let k4 = k - (k % 4);
+        let xip = xi.as_ptr();
+        let dp = diff.as_mut_ptr();
+        let gp = gr.as_mut_ptr();
+        let mut s = 0.0f64;
+        for j in t0..t1 {
+            if j == skip {
+                continue;
             }
+            let xjp = x.row(j).as_ptr();
+            let mut acc_a = vdupq_n_f32(0.0);
+            let mut acc_b = vdupq_n_f32(0.0);
+            let mut c = 0;
+            while c < k8 {
+                let da = vsubq_f32(vld1q_f32(xip.add(c)), vld1q_f32(xjp.add(c)));
+                let db = vsubq_f32(vld1q_f32(xip.add(c + 4)), vld1q_f32(xjp.add(c + 4)));
+                vst1q_f32(dp.add(c), da);
+                vst1q_f32(dp.add(c + 4), db);
+                acc_a = vaddq_f32(acc_a, vmulq_f32(da, da));
+                acc_b = vaddq_f32(acc_b, vmulq_f32(db, db));
+                c += 8;
+            }
+            let mut lanes = [0.0f32; 8];
+            vst1q_f32(lanes.as_mut_ptr(), acc_a);
+            vst1q_f32(lanes.as_mut_ptr().add(4), acc_b);
             while c < k {
-                *gp.add(c) += coef * *dp.add(c);
+                let d = *xip.add(c) - *xjp.add(c);
+                *dp.add(c) = d;
+                lanes[c & 7] += d * d;
                 c += 1;
             }
+            let d = tree8_f32(&lanes).sqrt();
+            let resid = d - drow[j];
+            s += (resid as f64) * (resid as f64);
+            if d > 1e-12 {
+                let coef = 2.0 * resid / d;
+                let vcoef = vdupq_n_f32(coef);
+                let mut c = 0;
+                while c < k4 {
+                    let g = vaddq_f32(
+                        vld1q_f32(gp.add(c)),
+                        vmulq_f32(vcoef, vld1q_f32(dp.add(c))),
+                    );
+                    vst1q_f32(gp.add(c), g);
+                    c += 4;
+                }
+                while c < k {
+                    *gp.add(c) += coef * *dp.add(c);
+                    c += 1;
+                }
+            }
         }
+        s
     }
-    s
 }
 
 /// NEON [`super::affine_into`]: broadcast `x[i]`, 4-wide axpy down the
@@ -178,22 +198,28 @@ pub unsafe fn stress_row_tile(
 /// of [`super::affine_into`].
 #[target_feature(enable = "neon")]
 pub unsafe fn affine_into(x: &[f32], w: &Matrix, b: &[f32], out: &mut [f32]) {
-    let k = out.len();
-    let k4 = k - (k % 4);
-    out.copy_from_slice(b);
-    let op = out.as_mut_ptr();
-    for (i, &xv) in x.iter().enumerate() {
-        let wp = w.row(i).as_ptr();
-        let vx = vdupq_n_f32(xv);
-        let mut c = 0;
-        while c < k4 {
-            let o = vaddq_f32(vld1q_f32(op.add(c)), vmulq_f32(vx, vld1q_f32(wp.add(c))));
-            vst1q_f32(op.add(c), o);
-            c += 4;
-        }
-        while c < k {
-            *op.add(c) += xv * *wp.add(c);
-            c += 1;
+    // SAFETY: caller upholds the `# Safety` contract above, so `out`
+    // and every `w.row(i)` (i < x.len() == w.rows) have length
+    // k = w.cols; vector tiles end at k4 <= k and the elementwise tail
+    // stays below k.
+    unsafe {
+        let k = out.len();
+        let k4 = k - (k % 4);
+        out.copy_from_slice(b);
+        let op = out.as_mut_ptr();
+        for (i, &xv) in x.iter().enumerate() {
+            let wp = w.row(i).as_ptr();
+            let vx = vdupq_n_f32(xv);
+            let mut c = 0;
+            while c < k4 {
+                let o = vaddq_f32(vld1q_f32(op.add(c)), vmulq_f32(vx, vld1q_f32(wp.add(c))));
+                vst1q_f32(op.add(c), o);
+                c += 4;
+            }
+            while c < k {
+                *op.add(c) += xv * *wp.add(c);
+                c += 1;
+            }
         }
     }
 }

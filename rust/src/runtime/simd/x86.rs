@@ -52,7 +52,9 @@ const TAIL_MASKS: [[i32; 8]; 8] = [
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn tail_mask(r: usize) -> __m256i {
-    _mm256_loadu_si256(TAIL_MASKS[r].as_ptr() as *const __m256i)
+    // SAFETY: caller verified AVX2; the unaligned load reads exactly the
+    // 32 bytes of `TAIL_MASKS[r]` (r < 8 is indexed safely above).
+    unsafe { _mm256_loadu_si256(TAIL_MASKS[r].as_ptr() as *const __m256i) }
 }
 
 /// AVX2 [`super::euclidean_sq`]: f32x8 differences widened to two f64x4
@@ -62,36 +64,42 @@ unsafe fn tail_mask(r: usize) -> __m256i {
 /// Caller must have verified AVX2 support; `a.len() == b.len()`.
 #[target_feature(enable = "avx2")]
 pub unsafe fn euclidean_sq(a: &[f32], b: &[f32]) -> f64 {
-    let n = a.len();
-    let n8 = n - (n % 8);
-    let ap = a.as_ptr();
-    let bp = b.as_ptr();
-    let mut acc_lo = _mm256_setzero_pd();
-    let mut acc_hi = _mm256_setzero_pd();
-    let mut j = 0;
-    while j < n8 {
-        let d = _mm256_sub_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j)));
-        let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
-        let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d));
-        acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(dlo, dlo));
-        acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(dhi, dhi));
-        j += 8;
+    // SAFETY: caller upholds the `# Safety` contract above. Full tiles
+    // read lanes j..j+8 with j + 8 <= n8 <= n, the masked tail reads
+    // only the first n - n8 (< 8) lanes at offset n8, and the final
+    // stores hit a local [f64; 8] — nothing leaves the operand slices.
+    unsafe {
+        let n = a.len();
+        let n8 = n - (n % 8);
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        let mut j = 0;
+        while j < n8 {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j)));
+            let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
+            let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(dlo, dlo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(dhi, dhi));
+            j += 8;
+        }
+        if n8 < n {
+            let m = tail_mask(n - n8);
+            let d = _mm256_sub_ps(
+                _mm256_maskload_ps(ap.add(n8), m),
+                _mm256_maskload_ps(bp.add(n8), m),
+            );
+            let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
+            let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(dlo, dlo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(dhi, dhi));
+        }
+        let mut lanes = [0.0f64; 8];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc_lo);
+        _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc_hi);
+        tree8_f64(&lanes)
     }
-    if n8 < n {
-        let m = tail_mask(n - n8);
-        let d = _mm256_sub_ps(
-            _mm256_maskload_ps(ap.add(n8), m),
-            _mm256_maskload_ps(bp.add(n8), m),
-        );
-        let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
-        let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d));
-        acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(dlo, dlo));
-        acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(dhi, dhi));
-    }
-    let mut lanes = [0.0f64; 8];
-    _mm256_storeu_pd(lanes.as_mut_ptr(), acc_lo);
-    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc_hi);
-    tree8_f64(&lanes)
 }
 
 /// AVX2 [`super::manhattan`]: as [`euclidean_sq`] with a sign-bit clear
@@ -101,37 +109,42 @@ pub unsafe fn euclidean_sq(a: &[f32], b: &[f32]) -> f64 {
 /// Caller must have verified AVX2 support; `a.len() == b.len()`.
 #[target_feature(enable = "avx2")]
 pub unsafe fn manhattan(a: &[f32], b: &[f32]) -> f64 {
-    let n = a.len();
-    let n8 = n - (n % 8);
-    let ap = a.as_ptr();
-    let bp = b.as_ptr();
-    let sign = _mm256_set1_pd(-0.0);
-    let mut acc_lo = _mm256_setzero_pd();
-    let mut acc_hi = _mm256_setzero_pd();
-    let mut j = 0;
-    while j < n8 {
-        let d = _mm256_sub_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j)));
-        let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
-        let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d));
-        acc_lo = _mm256_add_pd(acc_lo, _mm256_andnot_pd(sign, dlo));
-        acc_hi = _mm256_add_pd(acc_hi, _mm256_andnot_pd(sign, dhi));
-        j += 8;
+    // SAFETY: same access pattern as `euclidean_sq` — full tiles end at
+    // n8 <= n, the masked tail touches only in-bounds lanes, and the
+    // final stores hit a local [f64; 8].
+    unsafe {
+        let n = a.len();
+        let n8 = n - (n % 8);
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let sign = _mm256_set1_pd(-0.0);
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        let mut j = 0;
+        while j < n8 {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j)));
+            let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
+            let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_andnot_pd(sign, dlo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_andnot_pd(sign, dhi));
+            j += 8;
+        }
+        if n8 < n {
+            let m = tail_mask(n - n8);
+            let d = _mm256_sub_ps(
+                _mm256_maskload_ps(ap.add(n8), m),
+                _mm256_maskload_ps(bp.add(n8), m),
+            );
+            let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
+            let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_andnot_pd(sign, dlo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_andnot_pd(sign, dhi));
+        }
+        let mut lanes = [0.0f64; 8];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc_lo);
+        _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc_hi);
+        tree8_f64(&lanes)
     }
-    if n8 < n {
-        let m = tail_mask(n - n8);
-        let d = _mm256_sub_ps(
-            _mm256_maskload_ps(ap.add(n8), m),
-            _mm256_maskload_ps(bp.add(n8), m),
-        );
-        let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
-        let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d));
-        acc_lo = _mm256_add_pd(acc_lo, _mm256_andnot_pd(sign, dlo));
-        acc_hi = _mm256_add_pd(acc_hi, _mm256_andnot_pd(sign, dhi));
-    }
-    let mut lanes = [0.0f64; 8];
-    _mm256_storeu_pd(lanes.as_mut_ptr(), acc_lo);
-    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc_hi);
-    tree8_f64(&lanes)
 }
 
 /// AVX2 [`super::stress_row_tile`]: the distance, the diff-scratch
@@ -154,61 +167,67 @@ pub unsafe fn stress_row_tile(
     gr: &mut [f32],
     diff: &mut [f32],
 ) -> f64 {
-    let k = xi.len();
-    let k8 = k - (k % 8);
-    let tail = k - k8;
-    let m = tail_mask(tail);
-    let xip = xi.as_ptr();
-    let dp = diff.as_mut_ptr();
-    let gp = gr.as_mut_ptr();
-    let mut s = 0.0f64;
-    for j in t0..t1 {
-        if j == skip {
-            continue;
-        }
-        let xjp = x.row(j).as_ptr();
-        let mut acc = _mm256_setzero_ps();
-        let mut c = 0;
-        while c < k8 {
-            let d = _mm256_sub_ps(_mm256_loadu_ps(xip.add(c)), _mm256_loadu_ps(xjp.add(c)));
-            _mm256_storeu_ps(dp.add(c), d);
-            acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
-            c += 8;
-        }
-        if tail > 0 {
-            let d = _mm256_sub_ps(
-                _mm256_maskload_ps(xip.add(k8), m),
-                _mm256_maskload_ps(xjp.add(k8), m),
-            );
-            _mm256_maskstore_ps(dp.add(k8), m, d);
-            acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
-        }
-        let mut lanes = [0.0f32; 8];
-        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
-        let d = tree8_f32(&lanes).sqrt();
-        let resid = d - drow[j];
-        s += (resid as f64) * (resid as f64);
-        if d > 1e-12 {
-            let coef = _mm256_set1_ps(2.0 * resid / d);
+    // SAFETY: caller upholds the `# Safety` contract above, so `xi`,
+    // each `x.row(j)` (j < t1 <= x.rows), `gr` and `diff` all have
+    // length k = x.cols; full tiles end at k8 <= k and the shared mask
+    // covers exactly the k - k8 (< 8) tail lanes of each slice.
+    unsafe {
+        let k = xi.len();
+        let k8 = k - (k % 8);
+        let tail = k - k8;
+        let m = tail_mask(tail);
+        let xip = xi.as_ptr();
+        let dp = diff.as_mut_ptr();
+        let gp = gr.as_mut_ptr();
+        let mut s = 0.0f64;
+        for j in t0..t1 {
+            if j == skip {
+                continue;
+            }
+            let xjp = x.row(j).as_ptr();
+            let mut acc = _mm256_setzero_ps();
             let mut c = 0;
             while c < k8 {
-                let g = _mm256_add_ps(
-                    _mm256_loadu_ps(gp.add(c)),
-                    _mm256_mul_ps(coef, _mm256_loadu_ps(dp.add(c))),
-                );
-                _mm256_storeu_ps(gp.add(c), g);
+                let d = _mm256_sub_ps(_mm256_loadu_ps(xip.add(c)), _mm256_loadu_ps(xjp.add(c)));
+                _mm256_storeu_ps(dp.add(c), d);
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
                 c += 8;
             }
             if tail > 0 {
-                let g = _mm256_add_ps(
-                    _mm256_maskload_ps(gp.add(k8), m),
-                    _mm256_mul_ps(coef, _mm256_maskload_ps(dp.add(k8), m)),
+                let d = _mm256_sub_ps(
+                    _mm256_maskload_ps(xip.add(k8), m),
+                    _mm256_maskload_ps(xjp.add(k8), m),
                 );
-                _mm256_maskstore_ps(gp.add(k8), m, g);
+                _mm256_maskstore_ps(dp.add(k8), m, d);
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+            }
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+            let d = tree8_f32(&lanes).sqrt();
+            let resid = d - drow[j];
+            s += (resid as f64) * (resid as f64);
+            if d > 1e-12 {
+                let coef = _mm256_set1_ps(2.0 * resid / d);
+                let mut c = 0;
+                while c < k8 {
+                    let g = _mm256_add_ps(
+                        _mm256_loadu_ps(gp.add(c)),
+                        _mm256_mul_ps(coef, _mm256_loadu_ps(dp.add(c))),
+                    );
+                    _mm256_storeu_ps(gp.add(c), g);
+                    c += 8;
+                }
+                if tail > 0 {
+                    let g = _mm256_add_ps(
+                        _mm256_maskload_ps(gp.add(k8), m),
+                        _mm256_mul_ps(coef, _mm256_maskload_ps(dp.add(k8), m)),
+                    );
+                    _mm256_maskstore_ps(gp.add(k8), m, g);
+                }
             }
         }
+        s
     }
-    s
 }
 
 /// AVX2 [`super::affine_into`]: broadcast `x[i]`, 8-wide axpy down the
@@ -222,30 +241,36 @@ pub unsafe fn stress_row_tile(
 /// `b.len() == out.len() == w.cols`).
 #[target_feature(enable = "avx2")]
 pub unsafe fn affine_into(x: &[f32], w: &Matrix, b: &[f32], out: &mut [f32]) {
-    let k = out.len();
-    let k8 = k - (k % 8);
-    let tail = k - k8;
-    let m = tail_mask(tail);
-    out.copy_from_slice(b);
-    let op = out.as_mut_ptr();
-    for (i, &xv) in x.iter().enumerate() {
-        let wp = w.row(i).as_ptr();
-        let vx = _mm256_set1_ps(xv);
-        let mut c = 0;
-        while c < k8 {
-            let o = _mm256_add_ps(
-                _mm256_loadu_ps(op.add(c)),
-                _mm256_mul_ps(vx, _mm256_loadu_ps(wp.add(c))),
-            );
-            _mm256_storeu_ps(op.add(c), o);
-            c += 8;
-        }
-        if tail > 0 {
-            let o = _mm256_add_ps(
-                _mm256_maskload_ps(op.add(k8), m),
-                _mm256_mul_ps(vx, _mm256_maskload_ps(wp.add(k8), m)),
-            );
-            _mm256_maskstore_ps(op.add(k8), m, o);
+    // SAFETY: caller upholds the `# Safety` contract above, so `out`
+    // and every `w.row(i)` (i < x.len() == w.rows) have length
+    // k = w.cols; full tiles end at k8 <= k and the mask covers exactly
+    // the k - k8 (< 8) tail lanes.
+    unsafe {
+        let k = out.len();
+        let k8 = k - (k % 8);
+        let tail = k - k8;
+        let m = tail_mask(tail);
+        out.copy_from_slice(b);
+        let op = out.as_mut_ptr();
+        for (i, &xv) in x.iter().enumerate() {
+            let wp = w.row(i).as_ptr();
+            let vx = _mm256_set1_ps(xv);
+            let mut c = 0;
+            while c < k8 {
+                let o = _mm256_add_ps(
+                    _mm256_loadu_ps(op.add(c)),
+                    _mm256_mul_ps(vx, _mm256_loadu_ps(wp.add(c))),
+                );
+                _mm256_storeu_ps(op.add(c), o);
+                c += 8;
+            }
+            if tail > 0 {
+                let o = _mm256_add_ps(
+                    _mm256_maskload_ps(op.add(k8), m),
+                    _mm256_mul_ps(vx, _mm256_maskload_ps(wp.add(k8), m)),
+                );
+                _mm256_maskstore_ps(op.add(k8), m, o);
+            }
         }
     }
 }

@@ -94,6 +94,7 @@ impl Gen {
 }
 
 /// Outcome of one property evaluation.
+// LINT-ALLOW(style): the String is a human-readable counterexample message.
 pub type PropResult = Result<(), String>;
 
 /// Pass/fail check inside a property body.

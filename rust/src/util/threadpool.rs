@@ -90,7 +90,13 @@ pub struct SyncSlice<'a, T> {
     _marker: std::marker::PhantomData<&'a mut [T]>,
 }
 
+// SAFETY: `write` is the only mutation and its contract (each index
+// written by at most one thread, no concurrent reads) makes the shared
+// reference race-free; T: Send lets the written values cross threads.
 unsafe impl<T: Send> Sync for SyncSlice<'_, T> {}
+// SAFETY: the wrapper is only a raw pointer + length view of a `&mut
+// [T]` with T: Send; moving the view to another thread moves nothing
+// that the origin thread still aliases mutably.
 unsafe impl<T: Send> Send for SyncSlice<'_, T> {}
 
 impl<'a, T> SyncSlice<'a, T> {
@@ -118,6 +124,8 @@ impl<'a, T> SyncSlice<'a, T> {
     /// the parallel section is live.
     pub unsafe fn write(&self, i: usize, value: T) {
         debug_assert!(i < self.len);
+        // SAFETY: the caller upholds the `# Safety` contract (exclusive
+        // index ownership), and i < len keeps the write in bounds.
         unsafe { self.ptr.add(i).write(value) };
     }
 }
