@@ -1,0 +1,213 @@
+//! Query-path bench: dense all-landmark OSE vs the sparse `query_k` path
+//! through the landmark small-world graph (docs/QUERY_PATH.md), plus
+//! graph-assisted landmark selection vs the exact FPS scan. Writes a
+//! machine-readable JSON report for the CI perf trajectory.
+//!
+//!     cargo bench --bench bench_query
+//!
+//! Env knobs:
+//!   LMDS_BENCH_QUICK=1        fewer queries / steps (CI smoke)
+//!   LMDS_BENCH_JSON=path.json where to write the report
+//!                             (default BENCH_pr9.json in the CWD)
+//!
+//! Per-query latency is measured on the method itself (one delta row per
+//! `embed` call, no serving queue in the way), with a fixed majorization
+//! budget so dense and sparse run the same number of steps — the
+//! difference is purely O(L·steps) vs O(k log L + k·steps) work. The
+//! sampled residual stress of both paths is reported next to the
+//! latencies so a speedup can never silently buy a quality regression.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use lmds_ose::coordinator::methods::BackendOpt;
+use lmds_ose::mds::divide::{fps_anchors, PointsDelta};
+use lmds_ose::mds::graph::{graph_landmarks, GraphConfig, LandmarkGraph};
+use lmds_ose::mds::Matrix;
+use lmds_ose::ose::OseMethod;
+use lmds_ose::runtime::Backend;
+use lmds_ose::util::json::Json;
+use lmds_ose::util::prng::Rng;
+
+const K: usize = 8;
+const QUERY_K: usize = 32;
+
+fn delta_to(config: &Matrix, q: &[f32]) -> Vec<f32> {
+    (0..config.rows)
+        .map(|i| {
+            config
+                .row(i)
+                .iter()
+                .zip(q)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt()
+        })
+        .collect()
+}
+
+fn opt_method(
+    config: &Matrix,
+    steps: usize,
+    query_k: usize,
+    graph: Option<Arc<LandmarkGraph>>,
+) -> BackendOpt {
+    BackendOpt {
+        backend: Backend::native(),
+        landmarks: config.clone(),
+        total_steps: steps,
+        lr: None,
+        rel_tol: 0.0,
+        query_k,
+        graph,
+    }
+}
+
+/// Per-query latencies (seconds, one embed call per row), plus the
+/// sampled residual stress of the produced embeddings: for each query,
+/// `sample` landmark distances are re-predicted from the embedding and
+/// compared against the true delta row.
+fn run_queries(
+    method: &mut BackendOpt,
+    config: &Matrix,
+    deltas: &[Vec<f32>],
+    sample: usize,
+) -> (Vec<f64>, f64) {
+    let l = config.rows;
+    let mut lat = Vec::with_capacity(deltas.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    let mut rng = Rng::new(0x57e5);
+    for delta in deltas {
+        let row = Matrix::from_vec(1, l, delta.clone());
+        let t0 = Instant::now();
+        let y = method.embed(&row).expect("bench embed");
+        lat.push(t0.elapsed().as_secs_f64());
+        for _ in 0..sample {
+            let j = rng.index(l);
+            let d_hat = config
+                .row(j)
+                .iter()
+                .zip(y.row(0))
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            num += (d_hat - delta[j] as f64).powi(2);
+            den += (delta[j] as f64).powi(2);
+        }
+    }
+    (lat, (num / den).sqrt())
+}
+
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+fn main() {
+    lmds_ose::util::logging::init();
+    let quick = std::env::var("LMDS_BENCH_QUICK").is_ok();
+    let steps = if quick { 24 } else { 60 };
+    let queries = if quick { 24 } else { 120 };
+    let stress_sample = 2000usize;
+
+    let mut scales: Vec<Json> = Vec::new();
+    println!(
+        "== query path: dense vs query_k={QUERY_K} (dim {K}, {steps} steps, \
+         {queries} queries per scale) =="
+    );
+    for l in [10_000usize, 100_000] {
+        let mut rng = Rng::new(0x9a27 ^ l as u64);
+        let config = Matrix::random_normal(&mut rng, l, K, 1.0);
+        let t0 = Instant::now();
+        let graph = Arc::new(LandmarkGraph::build(&config, &GraphConfig::default()));
+        let build_s = t0.elapsed().as_secs_f64();
+
+        let deltas: Vec<Vec<f32>> = (0..queries)
+            .map(|_| {
+                let q: Vec<f32> = (0..K).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+                delta_to(&config, &q)
+            })
+            .collect();
+
+        let mut dense = opt_method(&config, steps, 0, None);
+        let (mut lat_d, stress_d) =
+            run_queries(&mut dense, &config, &deltas, stress_sample);
+        lat_d.sort_by(f64::total_cmp);
+
+        let mut sparse =
+            opt_method(&config, steps, QUERY_K, Some(Arc::clone(&graph)));
+        let (mut lat_s, stress_s) =
+            run_queries(&mut sparse, &config, &deltas, stress_sample);
+        lat_s.sort_by(f64::total_cmp);
+
+        let speedup = pct(&lat_d, 0.5) / pct(&lat_s, 0.5).max(1e-12);
+        println!(
+            "L={l:6}: dense p50 {:8.3}ms p99 {:8.3}ms | sparse p50 {:8.3}ms \
+             p99 {:8.3}ms | p50 speedup {speedup:6.1}x | stress {stress_d:.4} \
+             -> {stress_s:.4} | graph build {build_s:.2}s",
+            pct(&lat_d, 0.5) * 1e3,
+            pct(&lat_d, 0.99) * 1e3,
+            pct(&lat_s, 0.5) * 1e3,
+            pct(&lat_s, 0.99) * 1e3,
+        );
+        scales.push(Json::obj(vec![
+            ("l", Json::Num(l as f64)),
+            ("query_k", Json::Num(QUERY_K as f64)),
+            ("dense_p50_s", Json::Num(pct(&lat_d, 0.5))),
+            ("dense_p99_s", Json::Num(pct(&lat_d, 0.99))),
+            ("sparse_p50_s", Json::Num(pct(&lat_s, 0.5))),
+            ("sparse_p99_s", Json::Num(pct(&lat_s, 0.99))),
+            ("speedup_p50", Json::Num(speedup)),
+            ("stress_dense", Json::Num(stress_d)),
+            ("stress_sparse", Json::Num(stress_s)),
+            ("graph_build_s", Json::Num(build_s)),
+        ]));
+    }
+
+    // landmark selection: exact FPS scan vs graph-assisted maxmin
+    let n = if quick { 20_000 } else { 100_000 };
+    let l_sel = 128usize;
+    let mut rng = Rng::new(0x5e1ec7);
+    let points = Matrix::random_normal(&mut rng, n, K, 1.0);
+    let source = PointsDelta { points: &points };
+    let t0 = Instant::now();
+    let picked_fps = fps_anchors(&source, l_sel, 7);
+    let fps_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let picked_graph = graph_landmarks(&source, l_sel, &GraphConfig::default(), 7);
+    let graph_s = t0.elapsed().as_secs_f64();
+    assert_eq!(picked_fps.len(), l_sel);
+    assert_eq!(picked_graph.len(), l_sel);
+    let sel_speedup = fps_s / graph_s.max(1e-12);
+    println!(
+        "selection N={n} l={l_sel}: fps {fps_s:.3}s | graph {graph_s:.3}s \
+         | {sel_speedup:.1}x"
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("bench_query".into())),
+        ("backend", Json::Str("native".into())),
+        ("method", Json::Str("opt".into())),
+        ("dim", Json::Num(K as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("queries", Json::Num(queries as f64)),
+        ("scales", Json::Arr(scales)),
+        (
+            "selection",
+            Json::obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("l", Json::Num(l_sel as f64)),
+                ("fps_s", Json::Num(fps_s)),
+                ("graph_s", Json::Num(graph_s)),
+                ("speedup", Json::Num(sel_speedup)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("LMDS_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_pr9.json".to_string());
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote query bench report to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

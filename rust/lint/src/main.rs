@@ -3,9 +3,10 @@
 //! Run locally with `cargo run -p lmds-lint` (from anywhere inside the
 //! repo); CI runs it as the blocking `lint-invariants` job. It scans the
 //! `.rs` tree with a comment/string-aware token scanner ([`scan`]) and
-//! enforces five project invariants the compiler can't ([`rules`]):
+//! enforces six project invariants the compiler can't ([`rules`]):
 //! unsafe-audit, no-panic serving paths, wire-stability, config/docs
-//! drift, and style bans. Exit status 0 means clean; 1 means findings
+//! drift, doc-link integrity of the user-facing markdown, and style
+//! bans. Exit status 0 means clean; 1 means findings
 //! (printed as `path:line: [rule] message`) or an I/O / setup error.
 //!
 //! See docs/ARCHITECTURE.md, "Static analysis & sanitizers", for the
@@ -107,6 +108,18 @@ fn run() -> Result<(usize, Vec<Finding>), String> {
             findings.extend(rules::rule_config_drift(CONFIG_RS, config_lines, &readme, &arch));
         }
         None => return Err(format!("{CONFIG_RS} not found in the scanned tree")),
+    }
+
+    // doc-link: the user-facing markdown set must not reference paths
+    // that do not exist in the tree
+    let query_path = read_rel(&root, "docs/QUERY_PATH.md")?;
+    let exists = |p: &str| root.join(p).exists();
+    for (doc, text) in [
+        ("README.md", &readme),
+        ("docs/ARCHITECTURE.md", &arch),
+        ("docs/QUERY_PATH.md", &query_path),
+    ] {
+        findings.extend(rules::rule_doc_links(doc, text, &exists));
     }
 
     findings.sort_by(|a, b| a.path.cmp(&b.path).then(a.line.cmp(&b.line)));

@@ -1,4 +1,4 @@
-//! The five project-invariant rules enforced by `lmds-lint`.
+//! The six project-invariant rules enforced by `lmds-lint`.
 //!
 //! Every rule works on the aligned [`LineView`] views produced by
 //! [`crate::scan::scan`], so substring matches never fire inside
@@ -19,7 +19,8 @@ pub struct Finding {
     /// 1-based source line.
     pub line: usize,
     /// Stable rule tag (`unsafe-audit`, `no-panic`, `wire-stability`,
-    /// `config-drift`, `style`) — the CI self-test greps for these.
+    /// `config-drift`, `doc-link`, `style`) — the CI self-test greps for
+    /// these.
     pub rule: &'static str,
     /// Human-readable explanation with the fix path.
     pub msg: String,
@@ -531,6 +532,159 @@ pub fn rule_config_drift(
     findings
 }
 
+// ---------------------------------------------------------------------------
+// Rule 6: doc-link
+// ---------------------------------------------------------------------------
+
+/// Lexically join `base` (the linking doc's directory, repo-relative,
+/// `""` for the repo root) with a relative `target`, normalising `.` and
+/// `..` segments. `None` when the path escapes the repo root — such
+/// links point out of tree and are not checkable.
+fn resolve_relative(base: &str, target: &str) -> Option<String> {
+    let mut parts: Vec<&str> =
+        if base.is_empty() { Vec::new() } else { base.split('/').collect() };
+    for seg in target.split('/') {
+        match seg {
+            "" | "." => {}
+            ".." => {
+                parts.pop()?;
+            }
+            s => parts.push(s),
+        }
+    }
+    Some(parts.join("/"))
+}
+
+fn path_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || matches!(c, '/' | '.' | '_' | '-')
+}
+
+/// Targets of inline markdown links `[text](target)` on one line.
+/// External (`scheme://`, `mailto:`) and fragment-only (`#…`) targets
+/// are dropped; a `#fragment` suffix and an optional `"title"` after the
+/// path are stripped.
+fn inline_link_targets(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for (idx, _) in line.match_indices("](") {
+        let rest = &line[idx + 2..];
+        let Some(end) = rest.find(')') else {
+            continue;
+        };
+        let Some(raw) = rest[..end].split_whitespace().next() else {
+            continue;
+        };
+        if raw.contains("://") || raw.starts_with("mailto:") || raw.starts_with('#') {
+            continue;
+        }
+        let target = raw.split('#').next().unwrap_or("");
+        if !target.is_empty() {
+            out.push(target.to_string());
+        }
+    }
+    out
+}
+
+/// Bare `docs/*.md` path mentions in prose (outside link syntax), e.g.
+/// ``see `docs/QUERY_PATH.md` ``. Always repo-root-relative.
+fn bare_doc_mentions(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for (idx, _) in line.match_indices("docs/") {
+        // a path character just before means this is a longer path
+        // (`../docs/…`, `foo/docs/…`) handled by the inline extractor
+        if matches!(line[..idx].chars().next_back(), Some(p) if path_char(p)) {
+            continue;
+        }
+        let rest = &line[idx..];
+        let len = rest.chars().take_while(|c| path_char(*c)).count();
+        let mut token = &rest[..len];
+        // trim trailing punctuation the char class over-captures (`.`,
+        // `..`) down to the `.md` suffix
+        while !token.is_empty() && !token.ends_with(".md") {
+            token = &token[..token.len() - 1];
+        }
+        if token.len() > "docs/".len() {
+            out.push(token.to_string());
+        }
+    }
+    out
+}
+
+/// Rule 6 ("doc-link"): every relative `[text](path)` link and every
+/// bare `docs/*.md` mention in the checked documentation set must point
+/// at a file that exists in the tree. Inline links are accepted if they
+/// resolve either relative to the linking doc's directory or from the
+/// repo root (both conventions appear in the tree); bare mentions are
+/// repo-root-relative. A line containing `LINT-ALLOW(doc-link)` is
+/// skipped (HTML-comment form: `<!-- LINT-ALLOW(doc-link): reason -->`).
+pub fn rule_doc_links(
+    doc_path: &str,
+    doc_text: &str,
+    exists: &dyn Fn(&str) -> bool,
+) -> Vec<Finding> {
+    let base = match doc_path.rfind('/') {
+        Some(i) => &doc_path[..i],
+        None => "",
+    };
+    let mut findings = Vec::new();
+    for (i, line) in doc_text.lines().enumerate() {
+        if line.contains("LINT-ALLOW(doc-link)") {
+            continue;
+        }
+        // target -> candidate resolutions; merged so an inline link and
+        // a bare mention of the same path yield one diagnostic
+        let mut cands: Vec<(String, Vec<String>)> = Vec::new();
+        let merge = |cands: &mut Vec<(String, Vec<String>)>,
+                     target: String,
+                     res: Vec<String>| {
+            match cands.iter_mut().find(|(t, _)| *t == target) {
+                Some((_, existing)) => {
+                    for r in res {
+                        if !existing.contains(&r) {
+                            existing.push(r);
+                        }
+                    }
+                }
+                None => cands.push((target, res)),
+            }
+        };
+        for target in inline_link_targets(line) {
+            let mut res = Vec::new();
+            if let Some(p) = resolve_relative(base, &target) {
+                res.push(p);
+            }
+            if let Some(p) = resolve_relative("", &target) {
+                if !res.contains(&p) {
+                    res.push(p);
+                }
+            }
+            if res.is_empty() {
+                continue; // escapes the repo root: out of tree, unchecked
+            }
+            merge(&mut cands, target, res);
+        }
+        for target in bare_doc_mentions(line) {
+            let res = vec![target.clone()];
+            merge(&mut cands, target, res);
+        }
+        for (target, res) in cands {
+            if res.iter().any(|p| exists(p)) {
+                continue;
+            }
+            findings.push(Finding {
+                path: doc_path.to_string(),
+                line: i + 1,
+                rule: "doc-link",
+                msg: format!(
+                    "link target `{target}` does not exist in the tree; fix the \
+                     path or annotate the line with \
+                     `<!-- LINT-ALLOW(doc-link): <reason> -->`"
+                ),
+            });
+        }
+    }
+    findings
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -801,6 +955,70 @@ mod tests {
         assert_eq!(f.len(), 1, "{f:?}");
         assert!(f[0].msg.contains("`beta`"));
         assert!(f[0].msg.contains("README.md"));
+    }
+
+    // -- doc-link -----------------------------------------------------------
+
+    fn fixture_text(name: &str) -> String {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name);
+        std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read fixture {}: {e}", path.display()))
+    }
+
+    #[test]
+    fn doc_links_fire_on_fixture() {
+        let text = fixture_text("doclink_bad.md");
+        let exists =
+            |p: &str| matches!(p, "README.md" | "docs/ARCHITECTURE.md");
+        let f = rule_doc_links("docs/fixture.md", &text, &exists);
+        let marked: Vec<usize> = text
+            .lines()
+            .enumerate()
+            .filter(|(_, l)| l.contains("<!-- MARK -->"))
+            .map(|(i, _)| i + 1)
+            .collect();
+        let found: Vec<usize> = f.iter().map(|x| x.line).collect();
+        assert_eq!(found, marked, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "doc-link"));
+    }
+
+    #[test]
+    fn doc_relative_and_root_relative_resolutions_both_count() {
+        let exists = |p: &str| p == "docs/GUIDE.md";
+        // from the repo root, plain form
+        assert!(rule_doc_links("README.md", "[g](docs/GUIDE.md)", &exists).is_empty());
+        // from inside docs/, doc-relative form
+        assert!(rule_doc_links("docs/OTHER.md", "[g](GUIDE.md)", &exists).is_empty());
+        // from inside docs/, root-relative form (the fallback resolution)
+        assert!(rule_doc_links("docs/OTHER.md", "[g](docs/GUIDE.md)", &exists).is_empty());
+        // a genuinely missing target fails from anywhere
+        assert_eq!(rule_doc_links("docs/OTHER.md", "[g](NOPE.md)", &exists).len(), 1);
+    }
+
+    #[test]
+    fn resolve_relative_normalises_and_bounds() {
+        assert_eq!(resolve_relative("docs", "../README.md"), Some("README.md".into()));
+        assert_eq!(resolve_relative("", "docs/./X.md"), Some("docs/X.md".into()));
+        assert_eq!(resolve_relative("docs", "../../outside.md"), None);
+    }
+
+    #[test]
+    fn bare_mentions_respect_token_boundaries() {
+        assert_eq!(bare_doc_mentions("see docs/A.md and `docs/B.md`."), ["docs/A.md", "docs/B.md"]);
+        // part of a longer path: the inline extractor's job, not this one
+        assert!(bare_doc_mentions("at rust/docs/C.md").is_empty());
+        assert!(bare_doc_mentions("the docs/ directory").is_empty());
+    }
+
+    #[test]
+    fn repo_docs_have_no_broken_links() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+        let exists = |p: &str| root.join(p).exists();
+        for doc in ["README.md", "docs/ARCHITECTURE.md", "docs/QUERY_PATH.md"] {
+            let text = manifest_relative(&format!("../../{doc}"));
+            let f = rule_doc_links(doc, &text, &exists);
+            assert!(f.is_empty(), "{doc}: {f:?}");
+        }
     }
 
     #[test]

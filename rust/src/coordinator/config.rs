@@ -14,6 +14,7 @@ use crate::coordinator::net::NetConfig;
 use crate::coordinator::server::BatcherConfig;
 use crate::coordinator::shard::ShardConfig;
 use crate::coordinator::trainer::TrainConfig;
+use crate::mds::graph::GraphConfig;
 use crate::mds::{LandmarkMethod, LsmdsConfig};
 use crate::runtime::simd::KernelTier;
 use crate::util::cli::Args;
@@ -100,6 +101,17 @@ pub struct RunConfig {
     /// (the portable reference kernels). All tiers are bit-identical —
     /// see [`crate::runtime::simd`].
     pub kernel_tier: String,
+    /// Sparse OSE queries: majorize each embedding against only its k
+    /// nearest landmarks, found through the landmark small-world graph
+    /// (docs/QUERY_PATH.md). 0 = dense (every landmark, the classic
+    /// path, bit-identical to pre-graph behaviour).
+    pub query_k: usize,
+    /// Landmark graph: neighbours per node per layer (HNSW `M`). Higher
+    /// is denser/slower to build, higher recall.
+    pub graph_m: usize,
+    /// Landmark graph: query-time beam width (HNSW `ef`). Raised to
+    /// `query_k` automatically when smaller.
+    pub graph_ef: usize,
 }
 
 impl Default for RunConfig {
@@ -132,6 +144,9 @@ impl Default for RunConfig {
             max_connections: 256,
             max_in_flight: 1024,
             kernel_tier: "auto".into(),
+            query_k: 0,
+            graph_m: 12,
+            graph_ef: 48,
         }
     }
 }
@@ -259,6 +274,17 @@ impl RunConfig {
                 .map_err(|e| anyhow::anyhow!("config: {e}"))?;
             self.kernel_tier = v.to_string();
         }
+        if let Some(v) = usize_of(json, "query_k")? {
+            self.query_k = v;
+        }
+        if let Some(v) = usize_of(json, "graph_m")? {
+            anyhow::ensure!(v >= 2, "config: graph_m must be >= 2");
+            self.graph_m = v;
+        }
+        if let Some(v) = usize_of(json, "graph_ef")? {
+            anyhow::ensure!(v >= 1, "config: graph_ef must be >= 1");
+            self.graph_ef = v;
+        }
         Ok(())
     }
 
@@ -350,6 +376,19 @@ impl RunConfig {
             v.parse::<KernelTier>().map_err(anyhow::Error::msg)?;
             self.kernel_tier = v.to_string();
         }
+        if args.get("query-k").is_some() {
+            self.query_k = args.usize("query-k")?;
+        }
+        if args.get("graph-m").is_some() {
+            let v = args.usize("graph-m")?;
+            anyhow::ensure!(v >= 2, "--graph-m must be >= 2");
+            self.graph_m = v;
+        }
+        if args.get("graph-ef").is_some() {
+            let v = args.usize("graph-ef")?;
+            anyhow::ensure!(v >= 1, "--graph-ef must be >= 1");
+            self.graph_ef = v;
+        }
         Ok(())
     }
 
@@ -385,6 +424,19 @@ impl RunConfig {
         })
     }
 
+    /// Derive the landmark-graph construction/search parameters from this
+    /// run config. The graph seed is a dedicated stream off the run seed,
+    /// so the same run config always builds the same graph.
+    pub fn graph(&self) -> GraphConfig {
+        let defaults = GraphConfig::default();
+        GraphConfig {
+            m: self.graph_m.max(2),
+            ef_construction: defaults.ef_construction.max(self.graph_ef),
+            ef_search: self.graph_ef.max(1),
+            seed: self.seed ^ 0x6E57_1A97,
+        }
+    }
+
     /// Derive the embedding-pipeline configuration from this run config.
     pub fn pipeline(&self) -> PipelineConfig {
         PipelineConfig {
@@ -410,6 +462,8 @@ impl RunConfig {
             base_solver: self.base(),
             ose_steps: self.ose_steps,
             seed: self.seed,
+            query_k: self.query_k,
+            graph: self.graph(),
         }
     }
 
@@ -433,6 +487,8 @@ impl RunConfig {
             replicas_per_shard: self.replicas,
             seed: self.seed,
             opt_steps: self.ose_steps.unwrap_or(0),
+            query_k: self.query_k,
+            graph: self.graph(),
             ..Default::default()
         }
     }
@@ -721,6 +777,48 @@ mod tests {
         assert!(cfg
             .apply_json(&Json::parse(r#"{"max_connections": 0}"#).unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn query_k_and_graph_keys_round_trip() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.query_k, 0, "dense by default");
+        assert_eq!(cfg.graph_m, 12);
+        assert_eq!(cfg.graph_ef, 48);
+        cfg.apply_json(
+            &Json::parse(r#"{"query_k": 32, "graph_m": 16, "graph_ef": 96}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.query_k, 32);
+        assert_eq!(cfg.pipeline().query_k, 32);
+        assert_eq!(cfg.shard().query_k, 32);
+        let g = cfg.graph();
+        assert_eq!(g.m, 16);
+        assert_eq!(g.ef_search, 96);
+        assert!(g.ef_construction >= 96, "build beam at least the query beam");
+        assert_eq!(cfg.pipeline().graph, g);
+        assert_eq!(cfg.shard().graph, g);
+        // the graph seed is a dedicated stream off the run seed
+        let other = RunConfig { seed: cfg.seed ^ 1, ..RunConfig::default() };
+        assert_ne!(cfg.graph().seed, other.graph().seed);
+
+        let specs = vec![
+            OptSpec { name: "query-k", help: "", takes_value: true, default: None },
+            OptSpec { name: "graph-m", help: "", takes_value: true, default: None },
+            OptSpec { name: "graph-ef", help: "", takes_value: true, default: None },
+        ];
+        let argv: Vec<String> = ["--query-k", "0", "--graph-m", "8"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&argv, &specs).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.query_k, 0, "0 restores the dense path");
+        assert_eq!(cfg.graph_m, 8);
+        // bad values rejected
+        assert!(cfg.apply_json(&Json::parse(r#"{"graph_m": 1}"#).unwrap()).is_err());
+        assert!(cfg.apply_json(&Json::parse(r#"{"graph_ef": 0}"#).unwrap()).is_err());
     }
 
     #[test]

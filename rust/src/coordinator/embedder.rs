@@ -22,6 +22,7 @@ use crate::mds::divide::{
     block_seed, divide_solve_with, fps_anchors, sampled_normalized_stress,
     DeltaSource, DivideConfig, SubsetDelta,
 };
+use crate::mds::graph::{graph_landmarks, GraphConfig};
 use crate::mds::landmarks::{random_landmarks, select_landmarks};
 use crate::mds::{LandmarkMethod, LsmdsConfig, Matrix};
 use crate::nn::MlpShape;
@@ -157,6 +158,16 @@ pub struct PipelineConfig {
     /// Base PRNG seed for the run (landmark selection and solver init
     /// streams are derived from it).
     pub seed: u64,
+    /// Optimisation OSE only: majorize each embedding against only its
+    /// `query_k` nearest landmarks, located through the landmark
+    /// small-world graph ([`crate::mds::graph`], docs/QUERY_PATH.md).
+    /// 0 = dense (bit-identical to the classic all-landmark path).
+    /// Ignored by the NN backend.
+    pub query_k: usize,
+    /// Landmark-graph construction/search parameters, used when
+    /// `query_k > 0` (replica-side k-nearest search) and by the
+    /// graph-assisted out-of-core landmark selector.
+    pub graph: GraphConfig,
 }
 
 impl Default for PipelineConfig {
@@ -174,17 +185,28 @@ impl Default for PipelineConfig {
             base_solver: BaseSolver::Monolithic,
             ose_steps: None,
             seed: 1234,
+            query_k: 0,
+            graph: GraphConfig::default(),
         }
     }
 }
 
 /// Build the optimisation-OSE replica factory honouring
-/// [`PipelineConfig::ose_steps`].
+/// [`PipelineConfig::ose_steps`] and [`PipelineConfig::query_k`].
 fn opt_factory(
     cfg: &PipelineConfig,
     backend: &Backend,
     landmarks: Matrix,
 ) -> std::sync::Arc<dyn OseMethodFactory> {
+    if cfg.query_k > 0 {
+        return BackendOpt::replica_factory_sparse(
+            backend.clone(),
+            landmarks,
+            cfg.ose_steps.map_or(0, |s| s.max(1)),
+            cfg.query_k,
+            &cfg.graph,
+        );
+    }
     match cfg.ose_steps {
         Some(steps) => {
             BackendOpt::replica_factory_budget(backend.clone(), landmarks, steps.max(1))
@@ -551,9 +573,13 @@ pub fn embed_dataset<T: Sync + ?Sized>(
 ///
 /// - **Landmark selection** runs on the [`DeltaSource`] itself:
 ///   [`LandmarkMethod::Random`] samples indices without touching the
-///   data; the FPS variants use
+///   data; [`LandmarkMethod::Fps`] uses exact
 ///   [`fps_anchors`](crate::mds::divide::fps_anchors) (O(L·N) metric
-///   evaluations at the storage layer).
+///   evaluations at the storage layer); [`LandmarkMethod::MaxMinPool`]
+///   uses the graph-assisted selector
+///   [`graph_landmarks`](crate::mds::graph::graph_landmarks), which
+///   bounds the scan to a candidate pool navigated through a
+///   small-world graph.
 /// - **Stage 1** solves the landmark sample through
 ///   [`solve_base_source`] over a [`SubsetDelta`] view — with the
 ///   divide-and-conquer solver the L x L matrix is only materialised
@@ -585,10 +611,12 @@ pub fn embed_corpus(
         LandmarkMethod::Random => {
             random_landmarks(&mut Rng::new(cfg.seed), n, cfg.landmarks)
         }
-        // both FPS flavours run true FPS on the source: the candidate-
-        // pool shortcut needs object refs, which is the thing we lack
-        LandmarkMethod::Fps | LandmarkMethod::MaxMinPool => {
-            fps_anchors(source, cfg.landmarks, cfg.seed)
+        LandmarkMethod::Fps => fps_anchors(source, cfg.landmarks, cfg.seed),
+        // the pooled flavour gets the graph-assisted selector: a bounded
+        // candidate pool with a small-world graph standing in for the
+        // O(N·L) full scan (docs/QUERY_PATH.md "landmark selection")
+        LandmarkMethod::MaxMinPool => {
+            graph_landmarks(source, cfg.landmarks, &cfg.graph, cfg.seed)
         }
     };
     timings.select_s = t0.elapsed().as_secs_f64();

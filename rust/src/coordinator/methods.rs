@@ -9,6 +9,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::mds::graph::{nearest_k, GraphConfig, LandmarkGraph};
 use crate::mds::Matrix;
 use crate::nn::MlpParams;
 use crate::ose::{factory_fn, OseMethod, OseMethodFactory};
@@ -84,13 +85,30 @@ pub struct BackendOpt {
     /// (relative, scaled by the steps per chunk). 0.0 disables early
     /// stopping (always run `total_steps`).
     pub rel_tol: f64,
+    /// Sparse query restriction: majorize each embedding against only its
+    /// `query_k` nearest landmarks (docs/QUERY_PATH.md). `0` — or any
+    /// value ≥ L — takes the dense path, bit-identical to a `BackendOpt`
+    /// without the restriction.
+    pub query_k: usize,
+    /// Landmark graph used to find the k nearest landmarks in O(k log L).
+    /// `None` with `query_k > 0` falls back to the exact O(L) row scan
+    /// ([`nearest_k`]) — same per-step sparsity, no sub-linear selection.
+    pub graph: Option<Arc<LandmarkGraph>>,
 }
 
 impl BackendOpt {
     /// Defaults matching the serial oracle's convergence budget
     /// (`OseOptConfig::default()`: 200 steps, rel_tol 1e-7).
     pub fn with_defaults(backend: Backend, landmarks: Matrix) -> Self {
-        Self { backend, landmarks, total_steps: 200, lr: None, rel_tol: 1e-7 }
+        Self {
+            backend,
+            landmarks,
+            total_steps: 200,
+            lr: None,
+            rel_tol: 1e-7,
+            query_k: 0,
+            graph: None,
+        }
     }
 
     /// Replica factory for the serving executor pool (default budget).
@@ -121,21 +139,57 @@ impl BackendOpt {
                 total_steps,
                 lr: None,
                 rel_tol: 0.0,
+                query_k: 0,
+                graph: None,
             })
         })
     }
-}
 
-impl OseMethod for BackendOpt {
-    fn embed(&mut self, deltas: &Matrix) -> Result<Matrix> {
-        anyhow::ensure!(
-            deltas.cols == self.landmarks.rows,
-            "expected {} landmark distances, got {}",
-            self.landmarks.rows,
-            deltas.cols
-        );
-        let l = self.landmarks.rows;
-        let k = self.landmarks.cols;
+    /// Replica factory with the sparse `query_k` restriction: each
+    /// embedding majorizes against only its `query_k` nearest landmarks,
+    /// found through a [`LandmarkGraph`] built once here and shared
+    /// (read-only) by every replica. `total_steps = 0` keeps the adaptive
+    /// default budget (200 steps, rel_tol 1e-7); a positive value fixes
+    /// the budget with early stopping disabled, exactly like
+    /// [`replica_factory_budget`](Self::replica_factory_budget).
+    /// `query_k = 0` (or ≥ L) degenerates to the corresponding dense
+    /// factory, bit-identically — no graph is built.
+    pub fn replica_factory_sparse(
+        backend: Backend,
+        landmarks: Matrix,
+        total_steps: usize,
+        query_k: usize,
+        gcfg: &GraphConfig,
+    ) -> Arc<dyn OseMethodFactory> {
+        let graph = (query_k > 0 && query_k < landmarks.rows)
+            .then(|| Arc::new(LandmarkGraph::build(&landmarks, gcfg)));
+        factory_fn(move || {
+            let mut m = match total_steps {
+                0 => Self::with_defaults(backend.clone(), landmarks.clone()),
+                steps => Self {
+                    backend: backend.clone(),
+                    landmarks: landmarks.clone(),
+                    total_steps: steps,
+                    lr: None,
+                    rel_tol: 0.0,
+                    query_k: 0,
+                    graph: None,
+                },
+            };
+            m.query_k = query_k;
+            m.graph = graph.clone();
+            Box::new(m)
+        })
+    }
+
+    /// The dense chunked majorization loop over an explicit landmark
+    /// block — the pre-`query_k` `embed` body verbatim, shared by the
+    /// dense path (full landmark matrix) and the sparse path (per-query
+    /// k-row gather), so `query_k ∈ {0, L}` stays bit-identical to the
+    /// historical dense behaviour.
+    fn optimise_block(&self, landmarks: &Matrix, deltas: &Matrix) -> Result<Matrix> {
+        let l = landmarks.rows;
+        let k = landmarks.cols;
         let lr = self.lr.unwrap_or(1.0 / (2.0 * l as f64)) as f32;
         let total = self.total_steps.max(1);
         // chunk = the backend's natural granularity (PJRT: the artifact's
@@ -155,8 +209,7 @@ impl OseMethod for BackendOpt {
         while done < total {
             let steps = chunk.min(total - done);
             let (y2, obj) =
-                self.backend
-                    .ose_opt_steps(&self.landmarks, deltas, &y, lr, steps)?;
+                self.backend.ose_opt_steps(landmarks, deltas, &y, lr, steps)?;
             y = y2;
             done += steps;
             if self.rel_tol > 0.0 && !obj.is_empty() {
@@ -174,6 +227,47 @@ impl OseMethod for BackendOpt {
             }
         }
         Ok(y)
+    }
+
+    /// Sparse `query_k` path: per query row, find the k nearest landmarks
+    /// (graph search when one is attached, exact row scan otherwise),
+    /// gather the k x K sub-problem, and run the same chunked majorization
+    /// on it. `optimise_block` derives lr = 1/(2k) from the gathered block,
+    /// matching the restricted Eq.-2 majorization step.
+    fn embed_sparse(&self, deltas: &Matrix) -> Result<Matrix> {
+        let k = self.query_k;
+        let mut out = Matrix::zeros(deltas.rows, self.landmarks.cols);
+        for r in 0..deltas.rows {
+            let row = deltas.row(r);
+            let idx = match &self.graph {
+                Some(g) => g.knn_delta(row, k),
+                None => nearest_k(row, k),
+            };
+            let sub = self.landmarks.select_rows(&idx);
+            let dsub = Matrix::from_vec(
+                1,
+                idx.len(),
+                idx.iter().map(|&i| row[i]).collect(),
+            );
+            let y = self.optimise_block(&sub, &dsub)?;
+            out.row_mut(r).copy_from_slice(y.row(0));
+        }
+        Ok(out)
+    }
+}
+
+impl OseMethod for BackendOpt {
+    fn embed(&mut self, deltas: &Matrix) -> Result<Matrix> {
+        anyhow::ensure!(
+            deltas.cols == self.landmarks.rows,
+            "expected {} landmark distances, got {}",
+            self.landmarks.rows,
+            deltas.cols
+        );
+        if self.query_k > 0 && self.query_k < self.landmarks.rows {
+            return self.embed_sparse(deltas);
+        }
+        Self::optimise_block(&*self, &self.landmarks, deltas)
     }
 
     fn dim(&self) -> usize {
@@ -255,6 +349,61 @@ mod tests {
             "early stop diverged: {}",
             ye.max_abs_diff(&yf)
         );
+    }
+
+    #[test]
+    fn sparse_query_k_zero_and_full_l_take_the_dense_path_bit_identically() {
+        let mut rng = Rng::new(17);
+        let lm = Matrix::random_normal(&mut rng, 24, 3, 1.0);
+        let deltas = Matrix::from_vec(
+            3,
+            24,
+            (0..72).map(|_| rng.next_f32() * 2.0 + 0.5).collect(),
+        );
+        let mut dense = BackendOpt::with_defaults(Backend::native(), lm.clone());
+        let y_dense = dense.embed(&deltas).unwrap();
+        for query_k in [0usize, 24, 500] {
+            let mut m = BackendOpt {
+                query_k,
+                ..BackendOpt::with_defaults(Backend::native(), lm.clone())
+            };
+            let y = m.embed(&deltas).unwrap();
+            assert_eq!(y.data, y_dense.data, "query_k={query_k} diverged");
+        }
+    }
+
+    #[test]
+    fn sparse_query_k_stays_close_to_dense_on_realisable_deltas() {
+        use crate::mds::graph::{GraphConfig, LandmarkGraph};
+        let mut rng = Rng::new(19);
+        let lm = Matrix::random_normal(&mut rng, 64, 3, 1.0);
+        let targets = Matrix::random_normal(&mut rng, 6, 3, 0.5);
+        let mut deltas = Matrix::zeros(6, 64);
+        for r in 0..6 {
+            for i in 0..64 {
+                let d = crate::strdist::euclidean(lm.row(i), targets.row(r));
+                deltas.set(r, i, d as f32);
+            }
+        }
+        let mut dense = BackendOpt::with_defaults(Backend::native(), lm.clone());
+        let y_dense = dense.embed(&deltas).unwrap();
+        let graph =
+            Arc::new(LandmarkGraph::build(&lm, &GraphConfig::default()));
+        for (query_k, graph) in
+            [(16usize, None), (16, Some(graph.clone())), (32, Some(graph))]
+        {
+            let mut m = BackendOpt {
+                query_k,
+                graph,
+                ..BackendOpt::with_defaults(Backend::native(), lm.clone())
+            };
+            let y = m.embed(&deltas).unwrap();
+            assert_eq!((y.rows, y.cols), (6, 3));
+            for r in 0..6 {
+                let d = crate::strdist::euclidean(y.row(r), y_dense.row(r));
+                assert!(d < 0.15, "query_k={query_k} row {r}: off by {d}");
+            }
+        }
     }
 
     #[test]

@@ -31,6 +31,16 @@
 //! The server is generic over the object domain `T: ?Sized` (strings,
 //! numeric vectors, anything with a [`Dissimilarity`]), so vector
 //! workloads serve through the same path as the paper's string workloads.
+//!
+//! Per-query solve cost is set by the replica method the factory builds:
+//! dense [`super::methods::BackendOpt`] majorizes against all L landmarks,
+//! while a `query_k`-restricted factory
+//! ([`super::methods::BackendOpt::replica_factory_sparse`]) first walks
+//! the landmark small-world graph ([`crate::mds::graph`]) to the query's
+//! k nearest landmarks and solves the k-row sub-problem —
+//! O(k log L + k·steps) instead of O(L·steps) per query. The full
+//! front-door-to-kernel anatomy of one query, including this choice, is
+//! documented in docs/QUERY_PATH.md.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};

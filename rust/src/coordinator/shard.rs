@@ -30,6 +30,12 @@
 //! row as MLP input and cannot decompose, so a sharded build always uses
 //! [`BackendOpt`] over the landmark configuration (the builder's factory
 //! is only used by the unsharded path).
+//!
+//! With [`ShardConfig::query_k`] set, each shard additionally restricts
+//! every solve to the query's `query_k` nearest landmarks within its own
+//! slice, located through a shard-local small-world graph built once at
+//! startup ([`crate::mds::graph`]; walk-through in docs/QUERY_PATH.md).
+//! Per-query shard work then drops from O(L/S) to O(k log(L/S)).
 
 use std::sync::mpsc::{channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -37,6 +43,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::mds::divide::{partition_blocks, DivideConfig, PointsDelta};
+use crate::mds::graph::GraphConfig;
 use crate::strdist::Dissimilarity;
 use crate::util::threadpool::WorkerPool;
 
@@ -70,6 +77,15 @@ pub struct ShardConfig {
     /// Majorization budget per shard solve; 0 = the serving default
     /// (200 steps with early stopping).
     pub opt_steps: usize,
+    /// Per-replica sparse-query restriction: each shard executor
+    /// majorizes against only the `query_k` nearest landmarks of its
+    /// slice, found through a shard-local small-world graph
+    /// ([`crate::mds::graph`], docs/QUERY_PATH.md). 0 = dense;
+    /// `query_k >=` slice length also falls back to dense per shard.
+    pub query_k: usize,
+    /// Landmark-graph parameters for the shard-local graphs (only read
+    /// when `query_k > 0`).
+    pub graph: GraphConfig,
 }
 
 impl Default for ShardConfig {
@@ -82,6 +98,8 @@ impl Default for ShardConfig {
             shard_timeout: Duration::from_secs(5),
             seed: 42,
             opt_steps: 0,
+            query_k: 0,
+            graph: GraphConfig::default(),
         }
     }
 }
@@ -215,13 +233,26 @@ impl<T: ?Sized + Send + Sync + 'static> ServerBuilder<T> {
         let mut executors = Vec::with_capacity(s_eff * replicas);
         for (s, idx) in part.block_idx.iter().enumerate() {
             let sub = config.select_rows(idx);
-            let factory = match scfg.opt_steps {
-                0 => BackendOpt::replica_factory(self.backend.clone(), sub),
-                steps => BackendOpt::replica_factory_budget(
+            let factory = if scfg.query_k > 0 {
+                // sparse queries: each replica restricts the majorization
+                // to the query's query_k nearest landmarks within this
+                // shard's slice, located through a shard-local graph
+                BackendOpt::replica_factory_sparse(
                     self.backend.clone(),
                     sub,
-                    steps,
-                ),
+                    scfg.opt_steps,
+                    scfg.query_k,
+                    &scfg.graph,
+                )
+            } else {
+                match scfg.opt_steps {
+                    0 => BackendOpt::replica_factory(self.backend.clone(), sub),
+                    steps => BackendOpt::replica_factory_budget(
+                        self.backend.clone(),
+                        sub,
+                        steps,
+                    ),
+                }
             };
             let (tx, rx) =
                 std::sync::mpsc::sync_channel::<WorkItem>(bcfg.queue_cap.max(1));

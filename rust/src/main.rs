@@ -129,6 +129,18 @@ fn common_specs() -> Vec<OptSpec> {
              LMDS_KERNEL_TIER env var if set, else CPU detection; all \
              tiers are bit-identical)",
         ),
+        opt(
+            "query-k",
+            "opt backend: majorize each query against only its k nearest \
+             landmarks via the landmark small-world graph (0 = dense, \
+             bit-identical to the classic all-landmark path)",
+        ),
+        opt("graph-m", "landmark graph: links per node per layer (min 2)"),
+        opt(
+            "graph-ef",
+            "landmark graph: search beam width ef (min 1; construction \
+             beam is max(64, ef))",
+        ),
         flag("no-pjrt", "force the native compute backend (skip PJRT artifacts)"),
         flag("help", "show help"),
     ]

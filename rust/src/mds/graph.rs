@@ -1,0 +1,941 @@
+//! Layered small-world (HNSW-style) graph over landmark embeddings —
+//! the index behind sub-O(L) OSE queries and graph-assisted landmark
+//! selection (docs/QUERY_PATH.md walks one query through it).
+//!
+//! The graph is dependency-free and deterministic: node levels come from
+//! a seeded geometric lottery ([`util::prng::Rng`](crate::util::prng::Rng)),
+//! nodes are inserted in index order, and every tie is broken by node id,
+//! so the same input and [`GraphConfig`] always produce a byte-identical
+//! structure ([`LandmarkGraph::to_bytes`]). Search is the classic two-act
+//! descent: greedy hops through the sparse upper layers to land near the
+//! query, then a best-first beam of width `ef` on the dense bottom layer —
+//! O(log L) hops instead of an O(L) scan.
+//!
+//! Two consumers in this crate:
+//!
+//! * **Sparse OSE queries** — `BackendOpt` with `query_k > 0` asks
+//!   [`LandmarkGraph::knn_delta`] for each query's k nearest landmarks and
+//!   majorizes against only those rows (`docs/QUERY_PATH.md`).
+//! * **Landmark selection** — [`graph_landmarks`] replaces the O(N·L)
+//!   farthest-point scan for out-of-core corpora with a graph-pruned
+//!   maxmin sweep over a bounded candidate pool, seeded from the upper
+//!   layers of the hierarchy (the free subsample the level lottery gives
+//!   us — the annembed idiom).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::mds::divide::DeltaSource;
+use crate::mds::matrix::Matrix;
+use crate::strdist::euclidean;
+use crate::util::prng::Rng;
+
+/// Hard ceiling on the level lottery (2^16 nodes per expected top-level
+/// occupant is far beyond any L this crate targets).
+const MAX_LEVEL: usize = 16;
+
+/// Candidate-pool multiple used by [`graph_landmarks`]: the maxmin sweep
+/// runs over `POOL_FACTOR * l` corpus objects instead of all N.
+pub const GRAPH_POOL_FACTOR: usize = 4;
+
+/// Construction / search parameters for the landmark graph.
+///
+/// `m` is the neighbour budget per node per layer (the bottom layer keeps
+/// up to `2m`); `ef_construction` and `ef_search` are the beam widths used
+/// while building and querying. All randomness flows from `seed`, so equal
+/// configs over equal inputs build byte-identical graphs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GraphConfig {
+    /// Neighbours per node per layer (bottom layer caps at `2m`).
+    pub m: usize,
+    /// Beam width while inserting nodes (recall of the build itself).
+    pub ef_construction: usize,
+    /// Default beam width at query time (raised to `k` when smaller).
+    pub ef_search: usize,
+    /// Seed for the level lottery; equal seeds give equal graphs.
+    pub seed: u64,
+}
+
+impl Default for GraphConfig {
+    fn default() -> Self {
+        GraphConfig { m: 12, ef_construction: 64, ef_search: 48, seed: 0x9A27 }
+    }
+}
+
+/// Search candidate ordered by distance, ties broken by node id so heap
+/// order (and therefore every result) is deterministic.
+#[derive(Clone, Copy, Debug)]
+struct Cand {
+    d: f32,
+    id: u32,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Cand {}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.d.total_cmp(&other.d).then(self.id.cmp(&other.id))
+    }
+}
+
+/// The layered topology alone, built over any symmetric distance oracle —
+/// no coordinates stored. [`LandmarkGraph`] pairs it with an owned
+/// coordinate table; [`graph_landmarks`] runs it directly over a
+/// [`DeltaSource`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SmallWorld {
+    m: usize,
+    levels: Vec<u8>,
+    /// `layers[layer][node]` → neighbour ids; empty for nodes whose level
+    /// is below `layer`. `layers[0]` covers every node.
+    layers: Vec<Vec<Vec<u32>>>,
+    entry: usize,
+}
+
+impl SmallWorld {
+    /// Build over `n` objects using the symmetric oracle `dist(i, j)`.
+    /// Deterministic for a given `(n, cfg)`: levels come from the seeded
+    /// lottery, insertion follows index order, ties break by id.
+    pub fn build_with<F>(n: usize, cfg: &GraphConfig, dist: F) -> SmallWorld
+    where
+        F: Fn(usize, usize) -> f32,
+    {
+        let m = cfg.m.max(2);
+        let ef_c = cfg.ef_construction.max(m);
+        let mut rng = Rng::new(cfg.seed);
+        let inv_ln_m = 1.0 / (m as f64).ln();
+        let levels: Vec<u8> = (0..n)
+            .map(|_| {
+                let u = 1.0 - rng.next_f64(); // (0, 1]
+                ((-u.ln() * inv_ln_m) as usize).min(MAX_LEVEL) as u8
+            })
+            .collect();
+        let top = levels.iter().copied().max().unwrap_or(0) as usize;
+        let mut layers: Vec<Vec<Vec<u32>>> =
+            (0..=top).map(|_| vec![Vec::new(); n]).collect();
+        if n == 0 {
+            return SmallWorld { m, levels, layers, entry: 0 };
+        }
+
+        let mut entry = 0usize;
+        let mut cur_top = levels[0] as usize;
+        for i in 1..n {
+            let li = levels[i] as usize;
+            let dist_to = |j: usize| dist(i, j);
+            let mut cur = entry;
+            let mut layer = cur_top;
+            while layer > li {
+                cur = greedy_descent(&layers[layer], cur, &dist_to);
+                layer -= 1;
+            }
+            let mut eps = vec![cur];
+            for layer in (0..=li.min(cur_top)).rev() {
+                let cands = search_layer(&layers[layer], &eps, ef_c, &dist_to);
+                let cap = if layer == 0 { 2 * m } else { m };
+                for c in cands.iter().take(m) {
+                    let j = c.id as usize;
+                    layers[layer][i].push(c.id);
+                    layers[layer][j].push(i as u32);
+                    if layers[layer][j].len() > cap {
+                        prune_neighbours(&mut layers[layer][j], cap, &|v| {
+                            dist(j, v)
+                        });
+                    }
+                }
+                eps = cands.iter().map(|c| c.id as usize).collect();
+            }
+            if li > cur_top {
+                cur_top = li;
+                entry = i;
+            }
+        }
+        SmallWorld { m, levels, layers, entry }
+    }
+
+    /// Number of indexed objects.
+    pub fn len(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// True when the graph indexes nothing.
+    pub fn is_empty(&self) -> bool {
+        self.levels.is_empty()
+    }
+
+    /// Highest layer present (0 for a flat or empty graph).
+    pub fn max_level(&self) -> usize {
+        self.layers.len().saturating_sub(1)
+    }
+
+    /// The global entry node (top of the level hierarchy).
+    pub fn entry(&self) -> usize {
+        self.entry
+    }
+
+    /// Nodes whose level is at least `layer`, ascending by id.
+    pub fn layer_nodes(&self, layer: usize) -> Vec<usize> {
+        (0..self.levels.len())
+            .filter(|&i| self.levels[i] as usize >= layer)
+            .collect()
+    }
+
+    /// The upper-layer nodes (level ≥ 1): a free, geometry-independent
+    /// ~1/m subsample the level lottery already paid for. The annembed
+    /// trick — [`graph_landmarks`] seeds its maxmin sweep from these
+    /// instead of drawing a fresh sample.
+    pub fn subsample(&self) -> Vec<usize> {
+        self.layer_nodes(1)
+    }
+
+    /// k-nearest search with the oracle `dist_to(node)`: greedy descent
+    /// through the upper layers, then an `ef`-wide beam on layer 0.
+    /// Returns up to `k` `(node, distance)` pairs, nearest first.
+    pub fn search<F>(&self, k: usize, ef: usize, dist_to: F) -> Vec<(usize, f32)>
+    where
+        F: Fn(usize) -> f32,
+    {
+        if self.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        let mut cur = self.entry;
+        for layer in (1..self.layers.len()).rev() {
+            cur = greedy_descent(&self.layers[layer], cur, &dist_to);
+        }
+        let mut cands =
+            search_layer(&self.layers[0], &[cur], ef.max(k), &dist_to);
+        cands.truncate(k);
+        cands.into_iter().map(|c| (c.id as usize, c.d)).collect()
+    }
+}
+
+/// Move to the neighbour closest to the query until no neighbour improves.
+fn greedy_descent(
+    adj: &[Vec<u32>],
+    start: usize,
+    dist_to: &dyn Fn(usize) -> f32,
+) -> usize {
+    let mut cur = start;
+    let mut best = dist_to(cur);
+    loop {
+        let before = cur;
+        for &nb in &adj[before] {
+            let d = dist_to(nb as usize);
+            if d < best {
+                best = d;
+                cur = nb as usize;
+            }
+        }
+        if cur == before {
+            return cur;
+        }
+    }
+}
+
+/// Best-first beam search on one layer: expand the nearest unexpanded
+/// candidate until the beam's worst member beats everything left. Returns
+/// up to `ef` candidates, nearest first.
+fn search_layer(
+    adj: &[Vec<u32>],
+    eps: &[usize],
+    ef: usize,
+    dist_to: &dyn Fn(usize) -> f32,
+) -> Vec<Cand> {
+    let mut visited: HashSet<u32> = HashSet::new();
+    let mut frontier: BinaryHeap<Reverse<Cand>> = BinaryHeap::new();
+    let mut beam: BinaryHeap<Cand> = BinaryHeap::new();
+    for &e in eps {
+        let id = e as u32;
+        if visited.insert(id) {
+            let c = Cand { d: dist_to(e), id };
+            frontier.push(Reverse(c));
+            beam.push(c);
+        }
+    }
+    while beam.len() > ef {
+        beam.pop();
+    }
+    while let Some(Reverse(c)) = frontier.pop() {
+        if beam.len() >= ef {
+            let worst = beam.peek().map(|b| b.d).unwrap_or(f32::INFINITY);
+            if c.d > worst {
+                break;
+            }
+        }
+        for &nb in &adj[c.id as usize] {
+            if !visited.insert(nb) {
+                continue;
+            }
+            let d = dist_to(nb as usize);
+            let admit = beam.len() < ef
+                || d < beam.peek().map(|b| b.d).unwrap_or(f32::INFINITY);
+            if admit {
+                let nc = Cand { d, id: nb };
+                frontier.push(Reverse(nc));
+                beam.push(nc);
+                if beam.len() > ef {
+                    beam.pop();
+                }
+            }
+        }
+    }
+    beam.into_sorted_vec()
+}
+
+/// Keep the `cap` neighbours nearest to the owning node, dropping the rest.
+fn prune_neighbours(list: &mut Vec<u32>, cap: usize, dist_to: &dyn Fn(usize) -> f32) {
+    let mut scored: Vec<Cand> =
+        list.iter().map(|&v| Cand { d: dist_to(v as usize), id: v }).collect();
+    scored.sort_unstable();
+    scored.truncate(cap);
+    list.clear();
+    list.extend(scored.into_iter().map(|c| c.id));
+}
+
+/// Indices of the `k` smallest entries of `values` (ties broken by index),
+/// returned in ascending index order — the exact O(L) fallback used when no
+/// landmark graph is attached to a sparse query path.
+pub fn nearest_k(values: &[f32], k: usize) -> Vec<usize> {
+    let l = values.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    if k >= l {
+        return (0..l).collect();
+    }
+    let mut idx: Vec<usize> = (0..l).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        values[a].total_cmp(&values[b]).then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
+/// A small-world graph paired with the L x K landmark configuration it
+/// indexes — the artifact serialised alongside the base solve so serving
+/// replicas can answer k-nearest-landmark queries without rebuilding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LandmarkGraph {
+    cfg: GraphConfig,
+    points: Matrix,
+    core: SmallWorld,
+}
+
+impl LandmarkGraph {
+    /// Build the graph over an L x K landmark configuration (one landmark
+    /// per row, Euclidean metric). Deterministic: the same `points` and
+    /// `cfg` always produce a byte-identical graph.
+    ///
+    /// ```
+    /// use lmds_ose::mds::graph::{GraphConfig, LandmarkGraph};
+    /// use lmds_ose::mds::Matrix;
+    /// use lmds_ose::util::prng::Rng;
+    ///
+    /// let mut rng = Rng::new(7);
+    /// let landmarks = Matrix::random_normal(&mut rng, 500, 4, 1.0);
+    /// let graph = LandmarkGraph::build(&landmarks, &GraphConfig::default());
+    /// assert_eq!(graph.len(), 500);
+    /// // Same seed, same input => byte-identical index.
+    /// let again = LandmarkGraph::build(&landmarks, &GraphConfig::default());
+    /// assert_eq!(graph.to_bytes(), again.to_bytes());
+    /// ```
+    pub fn build(points: &Matrix, cfg: &GraphConfig) -> LandmarkGraph {
+        let core = SmallWorld::build_with(points.rows, cfg, |i, j| {
+            euclidean(points.row(i), points.row(j)) as f32
+        });
+        LandmarkGraph { cfg: cfg.clone(), points: points.clone(), core }
+    }
+
+    /// Number of indexed landmarks.
+    pub fn len(&self) -> usize {
+        self.points.rows
+    }
+
+    /// True when the graph indexes no landmarks.
+    pub fn is_empty(&self) -> bool {
+        self.points.rows == 0
+    }
+
+    /// Embedding dimension of the indexed landmarks.
+    pub fn dim(&self) -> usize {
+        self.points.cols
+    }
+
+    /// The indexed landmark configuration (L x K).
+    pub fn points(&self) -> &Matrix {
+        &self.points
+    }
+
+    /// The layered topology (for layer inspection / the free subsample).
+    pub fn core(&self) -> &SmallWorld {
+        &self.core
+    }
+
+    /// k nearest landmarks to a query coordinate, nearest first, as
+    /// `(landmark index, distance)` pairs.
+    ///
+    /// ```
+    /// use lmds_ose::mds::graph::{GraphConfig, LandmarkGraph};
+    /// use lmds_ose::mds::Matrix;
+    /// use lmds_ose::util::prng::Rng;
+    ///
+    /// let mut rng = Rng::new(11);
+    /// let landmarks = Matrix::random_normal(&mut rng, 800, 3, 1.0);
+    /// let graph = LandmarkGraph::build(&landmarks, &GraphConfig::default());
+    /// let hits = graph.knn(landmarks.row(42), 5);
+    /// assert_eq!(hits.len(), 5);
+    /// assert_eq!(hits[0].0, 42); // a landmark's own row is its nearest hit
+    /// assert!(hits.windows(2).all(|w| w[0].1 <= w[1].1));
+    /// ```
+    pub fn knn(&self, query: &[f32], k: usize) -> Vec<(usize, f32)> {
+        assert_eq!(query.len(), self.points.cols, "query dimension mismatch");
+        self.knn_ef(query, k, self.cfg.ef_search)
+    }
+
+    /// [`knn`](Self::knn) with an explicit beam width (recall knob).
+    pub fn knn_ef(&self, query: &[f32], k: usize, ef: usize) -> Vec<(usize, f32)> {
+        self.core.search(k, ef, |i| euclidean(query, self.points.row(i)) as f32)
+    }
+
+    /// k nearest landmarks for an OSE query given its dissimilarity row
+    /// (`delta[i]` = distance from the query object to landmark `i`),
+    /// ascending by landmark index. The row itself is the distance oracle,
+    /// so the search reads only the O(k log L) entries it visits; if the
+    /// graph walk comes back short (disconnected fringe), the exact
+    /// [`nearest_k`] scan takes over so the result always has
+    /// `min(k, L)` indices.
+    pub fn knn_delta(&self, delta: &[f32], k: usize) -> Vec<usize> {
+        assert_eq!(delta.len(), self.len(), "delta row length mismatch");
+        let k = k.min(self.len());
+        let hits =
+            self.core.search(k, self.cfg.ef_search.max(k), |i| delta[i]);
+        if hits.len() < k {
+            return nearest_k(delta, k);
+        }
+        let mut idx: Vec<usize> = hits.into_iter().map(|(i, _)| i).collect();
+        idx.sort_unstable();
+        idx
+    }
+
+    /// Serialise to a versioned little-endian byte blob (stored alongside
+    /// the base solve). Byte-stable across runs for equal inputs.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"LMG1");
+        push_u32(&mut out, self.points.rows as u32);
+        push_u32(&mut out, self.points.cols as u32);
+        for v in &self.points.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        push_u32(&mut out, self.cfg.m as u32);
+        push_u32(&mut out, self.cfg.ef_construction as u32);
+        push_u32(&mut out, self.cfg.ef_search as u32);
+        out.extend_from_slice(&self.cfg.seed.to_le_bytes());
+        push_u32(&mut out, self.core.entry as u32);
+        push_u32(&mut out, self.core.layers.len() as u32);
+        out.extend_from_slice(&self.core.levels);
+        for layer in &self.core.layers {
+            for list in layer {
+                push_u32(&mut out, list.len() as u32);
+                for &v in list {
+                    push_u32(&mut out, v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Deserialise a blob written by [`to_bytes`](Self::to_bytes).
+    pub fn from_bytes(bytes: &[u8]) -> Result<LandmarkGraph> {
+        let mut cur = Cursor { bytes, pos: 0 };
+        let magic = cur.take(4)?;
+        if magic != b"LMG1" {
+            bail!("landmark graph blob: bad magic {magic:?}");
+        }
+        let rows = cur.u32()? as usize;
+        let cols = cur.u32()? as usize;
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(f32::from_le_bytes(cur.take(4)?.try_into().unwrap()));
+        }
+        let points = Matrix::from_vec(rows, cols, data);
+        let m = cur.u32()? as usize;
+        let ef_construction = cur.u32()? as usize;
+        let ef_search = cur.u32()? as usize;
+        let seed = u64::from_le_bytes(cur.take(8)?.try_into().unwrap());
+        let entry = cur.u32()? as usize;
+        let n_layers = cur.u32()? as usize;
+        if rows > 0 && entry >= rows {
+            bail!("landmark graph blob: entry {entry} out of range (L={rows})");
+        }
+        if n_layers == 0 || n_layers > MAX_LEVEL + 1 {
+            bail!("landmark graph blob: implausible layer count {n_layers}");
+        }
+        let levels = cur.take(rows)?.to_vec();
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let mut layer = Vec::with_capacity(rows);
+            for _ in 0..rows {
+                let deg = cur.u32()? as usize;
+                let mut list = Vec::with_capacity(deg);
+                for _ in 0..deg {
+                    let v = cur.u32()?;
+                    if v as usize >= rows {
+                        bail!("landmark graph blob: neighbour {v} out of range");
+                    }
+                    list.push(v);
+                }
+                layer.push(list);
+            }
+            layers.push(layer);
+        }
+        if cur.pos != bytes.len() {
+            bail!(
+                "landmark graph blob: {} trailing bytes",
+                bytes.len() - cur.pos
+            );
+        }
+        Ok(LandmarkGraph {
+            cfg: GraphConfig { m, ef_construction, ef_search, seed },
+            points,
+            core: SmallWorld { m: m.max(2), levels, layers, entry },
+        })
+    }
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!("landmark graph blob: truncated at byte {}", self.pos);
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+/// Graph-assisted landmark selection for out-of-core corpora: an
+/// approximate farthest-point (maxmin) sweep whose per-pick update walks
+/// the small-world graph instead of rescanning every object — the
+/// replacement for the O(N·L) [`fps_anchors`](crate::mds::divide::fps_anchors)
+/// scan when the corpus never fits in memory.
+///
+/// The sweep runs over a bounded candidate pool ([`GRAPH_POOL_FACTOR`]` * l`
+/// objects, deterministically sampled), builds a [`SmallWorld`] over it with
+/// `source.dist` as the oracle, seeds the selection from the hierarchy's
+/// entry node plus the upper-layer free subsample ([`SmallWorld::subsample`],
+/// capped at `l/4`), then picks the remaining landmarks maxmin-style: each
+/// new pick relaxes `min_dist` only inside its own graph neighbourhood
+/// (a pruned flood stopping where distances stop improving), so selection
+/// cost is O(pool · m) distance calls instead of O(N · L).
+///
+/// Returns exactly `min(l, source.len())` distinct indices, ascending.
+/// Deterministic for a given `(source, l, cfg, seed)`.
+///
+/// ```
+/// use lmds_ose::mds::graph::{graph_landmarks, GraphConfig};
+/// use lmds_ose::mds::{Matrix, PointsDelta};
+/// use lmds_ose::util::prng::Rng;
+///
+/// let mut rng = Rng::new(3);
+/// let corpus = Matrix::random_normal(&mut rng, 2000, 3, 1.0);
+/// let source = PointsDelta { points: &corpus };
+/// let idx = graph_landmarks(&source, 50, &GraphConfig::default(), 99);
+/// assert_eq!(idx.len(), 50);
+/// assert!(idx.windows(2).all(|w| w[0] < w[1])); // sorted, distinct
+/// ```
+pub fn graph_landmarks<S: DeltaSource + ?Sized>(
+    source: &S,
+    l: usize,
+    cfg: &GraphConfig,
+    seed: u64,
+) -> Vec<usize> {
+    let n = source.len();
+    let l = l.min(n);
+    if l == 0 {
+        return Vec::new();
+    }
+    if l == n {
+        return (0..n).collect();
+    }
+
+    // Bounded candidate pool, deterministically sampled.
+    let mut rng = Rng::new(seed ^ 0x6_1A9D);
+    let pool_n = (GRAPH_POOL_FACTOR * l).max(l + 1).min(n);
+    let pool: Vec<usize> = if pool_n == n {
+        (0..n).collect()
+    } else {
+        let mut p = rng.sample_indices(n, pool_n);
+        p.sort_unstable();
+        p
+    };
+
+    let gcfg = GraphConfig { seed: cfg.seed ^ seed, ..cfg.clone() };
+    let core =
+        SmallWorld::build_with(pool_n, &gcfg, |a, b| source.dist(pool[a], pool[b]));
+
+    let mut chosen = vec![false; pool_n];
+    let mut min_d = vec![f32::INFINITY; pool_n];
+    let mut heap: BinaryHeap<Cand> = BinaryHeap::new();
+    let mut selected: Vec<usize> = Vec::with_capacity(l);
+
+    // Seeds: the hierarchy entry plus the upper-layer free subsample.
+    let mut seeds = vec![core.entry()];
+    for v in core.subsample() {
+        if seeds.len() >= (l / 4).max(1) {
+            break;
+        }
+        if v != core.entry() {
+            seeds.push(v);
+        }
+    }
+    // One dense pass from the first seed pins min_d everywhere …
+    chosen[seeds[0]] = true;
+    min_d[seeds[0]] = 0.0;
+    selected.push(seeds[0]);
+    for v in 0..pool_n {
+        if !chosen[v] {
+            min_d[v] = source.dist(pool[v], pool[seeds[0]]);
+        }
+    }
+    // … then every further seed and pick relaxes only its neighbourhood.
+    for s in 1..seeds.len() {
+        let v = seeds[s];
+        if chosen[v] || selected.len() >= l {
+            continue;
+        }
+        chosen[v] = true;
+        min_d[v] = 0.0;
+        selected.push(v);
+        relax_from(source, &pool, &core, v, &chosen, &mut min_d, &mut heap);
+    }
+    for v in 0..pool_n {
+        if !chosen[v] {
+            heap.push(Cand { d: min_d[v], id: v as u32 });
+        }
+    }
+
+    while selected.len() < l {
+        let v = match heap.pop() {
+            Some(c) => {
+                let v = c.id as usize;
+                // Lazy invalidation: stale entries (relaxed since pushed,
+                // or already selected) are skipped.
+                if chosen[v] || c.d != min_d[v] {
+                    continue;
+                }
+                v
+            }
+            // Disconnected fringe: fall back to a direct argmax scan.
+            None => match argmax_min_dist(&chosen, &min_d) {
+                Some(v) => v,
+                None => break,
+            },
+        };
+        chosen[v] = true;
+        min_d[v] = 0.0;
+        selected.push(v);
+        relax_from(source, &pool, &core, v, &chosen, &mut min_d, &mut heap);
+    }
+    // Top up (duplicate-heavy metrics can exhaust distinct candidates).
+    for v in 0..pool_n {
+        if selected.len() >= l {
+            break;
+        }
+        if !chosen[v] {
+            chosen[v] = true;
+            selected.push(v);
+        }
+    }
+
+    let mut out: Vec<usize> = selected.into_iter().map(|v| pool[v]).collect();
+    out.sort_unstable();
+    out
+}
+
+/// Pruned flood from a newly selected pool node: follow layer-0 edges
+/// while `min_d` keeps improving, pushing each improvement for the maxmin
+/// heap. Distances are measured to the new pick only, so the walk stays
+/// inside the pick's neighbourhood.
+fn relax_from<S: DeltaSource + ?Sized>(
+    source: &S,
+    pool: &[usize],
+    core: &SmallWorld,
+    from: usize,
+    chosen: &[bool],
+    min_d: &mut [f32],
+    heap: &mut BinaryHeap<Cand>,
+) {
+    let mut visited: HashSet<u32> = HashSet::new();
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    visited.insert(from as u32);
+    queue.push_back(from);
+    while let Some(u) = queue.pop_front() {
+        for &nb in &core.layers[0][u] {
+            if !visited.insert(nb) {
+                continue;
+            }
+            let w = nb as usize;
+            if chosen[w] {
+                continue;
+            }
+            let d = source.dist(pool[w], pool[from]);
+            if d < min_d[w] {
+                min_d[w] = d;
+                heap.push(Cand { d, id: nb });
+                queue.push_back(w);
+            }
+        }
+    }
+}
+
+/// Unchosen pool node with the largest `min_d` (ties → lowest index).
+fn argmax_min_dist(chosen: &[bool], min_d: &[f32]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for v in 0..chosen.len() {
+        if chosen[v] {
+            continue;
+        }
+        match best {
+            None => best = Some(v),
+            Some(b) if min_d[v] > min_d[b] => best = Some(v),
+            _ => {}
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mds::divide::PointsDelta;
+
+    fn gaussians(seed: u64, n: usize, k: usize) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::random_normal(&mut rng, n, k, 1.0)
+    }
+
+    fn brute_knn(points: &Matrix, query: &[f32], k: usize) -> Vec<usize> {
+        let d: Vec<f32> = (0..points.rows)
+            .map(|i| euclidean(query, points.row(i)) as f32)
+            .collect();
+        nearest_k(&d, k)
+    }
+
+    #[test]
+    fn empty_and_singleton_graphs() {
+        let empty = Matrix::zeros(0, 3);
+        let g = LandmarkGraph::build(&empty, &GraphConfig::default());
+        assert!(g.is_empty());
+        assert!(g.knn(&[0.0, 0.0, 0.0], 4).is_empty());
+
+        let one = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let g = LandmarkGraph::build(&one, &GraphConfig::default());
+        let hits = g.knn(&[1.0, 2.0], 3);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0, 0);
+    }
+
+    #[test]
+    fn upper_layer_subsample_fraction_tracks_level_lottery() {
+        let pts = gaussians(5, 4000, 3);
+        let g = LandmarkGraph::build(&pts, &GraphConfig::default());
+        let upper = g.core().subsample().len() as f64 / 4000.0;
+        // Expected fraction is 1/m = 1/12 ≈ 0.083.
+        assert!((0.03..0.20).contains(&upper), "upper fraction {upper}");
+    }
+
+    #[test]
+    fn knn_matches_brute_force_on_a_line() {
+        // Points on a line: the graph search has an unambiguous answer.
+        let n = 200;
+        let pts = Matrix::from_vec(n, 1, (0..n).map(|i| i as f32).collect());
+        let g = LandmarkGraph::build(&pts, &GraphConfig::default());
+        for q in [0.2f32, 57.6, 103.4, 198.9] {
+            let got: Vec<usize> =
+                g.knn(&[q], 3).into_iter().map(|(i, _)| i).collect();
+            let mut got = got;
+            got.sort_unstable();
+            assert_eq!(got, brute_knn(&pts, &[q], 3), "query {q}");
+        }
+    }
+
+    #[test]
+    fn recall_is_high_on_gaussian_clouds() {
+        let pts = gaussians(9, 600, 4);
+        let g = LandmarkGraph::build(&pts, &GraphConfig::default());
+        let queries = gaussians(10, 50, 4);
+        let k = 5;
+        let mut hit = 0usize;
+        for q in 0..queries.rows {
+            let exact = brute_knn(&pts, queries.row(q), k);
+            let approx: HashSet<usize> = g
+                .knn(queries.row(q), k)
+                .into_iter()
+                .map(|(i, _)| i)
+                .collect();
+            hit += exact.iter().filter(|i| approx.contains(i)).count();
+        }
+        let recall = hit as f64 / (50 * k) as f64;
+        assert!(recall >= 0.9, "recall {recall}");
+    }
+
+    #[test]
+    fn construction_is_deterministic_and_seed_sensitive() {
+        let pts = gaussians(21, 400, 3);
+        let a = LandmarkGraph::build(&pts, &GraphConfig::default());
+        let b = LandmarkGraph::build(&pts, &GraphConfig::default());
+        assert_eq!(a.to_bytes(), b.to_bytes());
+        let other =
+            GraphConfig { seed: 0xDEAD, ..GraphConfig::default() };
+        let c = LandmarkGraph::build(&pts, &other);
+        assert_ne!(a.to_bytes(), c.to_bytes());
+    }
+
+    #[test]
+    fn serialisation_round_trips() {
+        let pts = gaussians(33, 300, 5);
+        let g = LandmarkGraph::build(&pts, &GraphConfig::default());
+        let blob = g.to_bytes();
+        let back = LandmarkGraph::from_bytes(&blob).unwrap();
+        assert_eq!(back, g);
+        assert_eq!(back.to_bytes(), blob);
+    }
+
+    #[test]
+    fn serialisation_rejects_corrupt_blobs() {
+        let pts = gaussians(34, 50, 2);
+        let g = LandmarkGraph::build(&pts, &GraphConfig::default());
+        let blob = g.to_bytes();
+        assert!(LandmarkGraph::from_bytes(&blob[..blob.len() - 3]).is_err());
+        let mut bad_magic = blob.clone();
+        bad_magic[0] = b'X';
+        assert!(LandmarkGraph::from_bytes(&bad_magic).is_err());
+        let mut trailing = blob;
+        trailing.push(0);
+        assert!(LandmarkGraph::from_bytes(&trailing).is_err());
+    }
+
+    #[test]
+    fn knn_delta_agrees_with_coordinate_knn() {
+        let pts = gaussians(40, 500, 3);
+        let g = LandmarkGraph::build(&pts, &GraphConfig::default());
+        let queries = gaussians(41, 20, 3);
+        for q in 0..queries.rows {
+            let row = queries.row(q);
+            let delta: Vec<f32> = (0..pts.rows)
+                .map(|i| euclidean(row, pts.row(i)) as f32)
+                .collect();
+            let mut via_coords: Vec<usize> =
+                g.knn(row, 8).into_iter().map(|(i, _)| i).collect();
+            via_coords.sort_unstable();
+            assert_eq!(g.knn_delta(&delta, 8), via_coords, "query {q}");
+        }
+    }
+
+    #[test]
+    fn nearest_k_selects_smallest_with_index_ties() {
+        let v = [3.0f32, 1.0, 2.0, 1.0, 5.0];
+        assert_eq!(nearest_k(&v, 2), vec![1, 3]);
+        assert_eq!(nearest_k(&v, 3), vec![1, 2, 3]);
+        assert_eq!(nearest_k(&v, 0), Vec::<usize>::new());
+        assert_eq!(nearest_k(&v, 9), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn graph_landmarks_degenerate_sizes() {
+        let pts = gaussians(50, 30, 2);
+        let src = PointsDelta { points: &pts };
+        assert!(graph_landmarks(&src, 0, &GraphConfig::default(), 1).is_empty());
+        assert_eq!(
+            graph_landmarks(&src, 30, &GraphConfig::default(), 1),
+            (0..30).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            graph_landmarks(&src, 99, &GraphConfig::default(), 1),
+            (0..30).collect::<Vec<_>>()
+        );
+        let idx = graph_landmarks(&src, 7, &GraphConfig::default(), 1);
+        assert_eq!(idx.len(), 7);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn graph_landmarks_is_deterministic() {
+        let pts = gaussians(51, 900, 3);
+        let src = PointsDelta { points: &pts };
+        let a = graph_landmarks(&src, 40, &GraphConfig::default(), 7);
+        let b = graph_landmarks(&src, 40, &GraphConfig::default(), 7);
+        assert_eq!(a, b);
+    }
+
+    /// Max over all objects of the distance to its closest selected
+    /// landmark — the coverage radius of a selection.
+    fn fill_distance(pts: &Matrix, idx: &[usize]) -> f32 {
+        let mut worst = 0.0f32;
+        for i in 0..pts.rows {
+            let best = idx
+                .iter()
+                .map(|&j| euclidean(pts.row(i), pts.row(j)) as f32)
+                .fold(f32::INFINITY, f32::min);
+            worst = worst.max(best);
+        }
+        worst
+    }
+
+    #[test]
+    fn graph_landmarks_cover_clusters_like_fps() {
+        // Four well-separated clusters: a maxmin-style selector must put
+        // landmarks in all of them, and its coverage radius must stay
+        // within a small factor of the exact farthest-point sweep.
+        let per = 200;
+        let centers = [(-50.0f32, -50.0), (-50.0, 50.0), (50.0, -50.0), (50.0, 50.0)];
+        let mut rng = Rng::new(61);
+        let mut data = Vec::new();
+        for &(cx, cy) in &centers {
+            for _ in 0..per {
+                data.push(cx + rng.next_normal() as f32);
+                data.push(cy + rng.next_normal() as f32);
+            }
+        }
+        let pts = Matrix::from_vec(4 * per, 2, data);
+        let src = PointsDelta { points: &pts };
+        let idx = graph_landmarks(&src, 8, &GraphConfig::default(), 3);
+        assert_eq!(idx.len(), 8);
+        for c in 0..4 {
+            let lo = c * per;
+            let hi = lo + per;
+            assert!(
+                idx.iter().any(|&i| i >= lo && i < hi),
+                "cluster {c} got no landmark: {idx:?}"
+            );
+        }
+        let exact = crate::mds::divide::fps_anchors(&src, 8, 3);
+        let ratio = fill_distance(&pts, &idx) / fill_distance(&pts, &exact);
+        assert!(ratio <= 3.0, "coverage ratio vs exact FPS: {ratio}");
+    }
+}

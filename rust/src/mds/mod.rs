@@ -1,12 +1,15 @@
 //! Multidimensional scaling core: dissimilarity-matrix engine, the LSMDS
 //! gradient-descent solver (paper Sec. 2.1), the SMACOF and classical-MDS
 //! baselines, landmark selection (Sec. 4), the paper's error metrics
-//! (Eqs. 1, 4, 5), and the divide-and-conquer base solver (partitioned
-//! parallel block solves + orthogonal-Procrustes stitching).
+//! (Eqs. 1, 4, 5), the divide-and-conquer base solver (partitioned
+//! parallel block solves + orthogonal-Procrustes stitching), and the
+//! layered small-world landmark graph behind sub-O(L) OSE queries and
+//! graph-assisted landmark selection.
 
 pub mod classical;
 pub mod dissimilarity;
 pub mod divide;
+pub mod graph;
 pub mod landmarks;
 pub mod lsmds;
 pub mod matrix;
@@ -15,6 +18,7 @@ pub mod smacof;
 pub mod stress;
 
 pub use divide::{DeltaSource, DivideConfig, DivideResult, PointsDelta, SubsetDelta};
+pub use graph::{graph_landmarks, GraphConfig, LandmarkGraph, SmallWorld};
 pub use landmarks::LandmarkMethod;
 pub use lsmds::{lsmds, lsmds_from, LsmdsConfig, LsmdsResult};
 pub use matrix::Matrix;

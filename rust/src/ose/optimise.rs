@@ -120,6 +120,30 @@ pub fn embed_batch(lm: &Matrix, deltas: &Matrix, cfg: &OseOptConfig) -> Matrix {
     out
 }
 
+/// Embed one point against only the `idx`-selected landmark rows — the
+/// sparse `query_k` restriction of Eq. 2 (docs/QUERY_PATH.md). The
+/// majorization runs on the gathered k x K sub-problem, so the step size
+/// becomes 1/(2k) and each iteration costs O(k·K) instead of O(L·K).
+/// With `idx = 0..L` the gather is the identity and the result is
+/// bit-identical to [`embed_point`].
+///
+/// `idx` entries must be in-range; callers get them from
+/// [`LandmarkGraph::knn_delta`](crate::mds::graph::LandmarkGraph::knn_delta)
+/// (O(k log L) graph search) or [`nearest_k`](crate::mds::graph::nearest_k)
+/// (exact O(L) scan).
+pub fn embed_point_k(
+    lm: &Matrix,
+    delta: &[f32],
+    idx: &[usize],
+    y0: Option<&[f32]>,
+    cfg: &OseOptConfig,
+) -> OsePoint {
+    assert_eq!(lm.rows, delta.len());
+    let sub = lm.select_rows(idx);
+    let dsub: Vec<f32> = idx.iter().map(|&i| delta[i]).collect();
+    embed_point(&sub, &dsub, y0, cfg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -239,6 +263,43 @@ mod tests {
         assert_ne!(from_far.coords, from_zero.coords);
         // and iters reports the single step taken
         assert_eq!(from_far.iters, 1);
+    }
+
+    #[test]
+    fn sparse_embed_with_full_index_set_is_bit_identical() {
+        let lm = landmarks(11, 40, 5);
+        let mut rng = Rng::new(12);
+        let delta: Vec<f32> = (0..40).map(|_| rng.next_f32() * 2.0 + 0.5).collect();
+        let cfg = OseOptConfig::default();
+        let dense = embed_point(&lm, &delta, None, &cfg);
+        let idx: Vec<usize> = (0..40).collect();
+        let sparse = embed_point_k(&lm, &delta, &idx, None, &cfg);
+        assert_eq!(dense.coords, sparse.coords);
+        assert_eq!(dense.objective.to_bits(), sparse.objective.to_bits());
+        assert_eq!(dense.iters, sparse.iters);
+    }
+
+    #[test]
+    fn sparse_embed_recovers_realisable_target_from_k_nearest() {
+        let lm = landmarks(13, 60, 4);
+        let mut rng = Rng::new(14);
+        let target: Vec<f32> = (0..4).map(|_| rng.next_normal() as f32).collect();
+        let delta: Vec<f32> = (0..60)
+            .map(|i| euclidean(lm.row(i), &target) as f32)
+            .collect();
+        let idx = crate::mds::graph::nearest_k(&delta, 16);
+        let p = embed_point_k(&lm, &delta, &idx, None, &OseOptConfig {
+            max_iters: 3000,
+            rel_tol: 1e-14,
+        });
+        for c in 0..4 {
+            assert!(
+                (p.coords[c] - target[c]).abs() < 0.05,
+                "coord {c}: {} vs {}",
+                p.coords[c],
+                target[c]
+            );
+        }
     }
 
     #[test]

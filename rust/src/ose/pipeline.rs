@@ -35,7 +35,10 @@
 //! contract enforced by `tests/streaming.rs`. (With `BackendOpt`'s
 //! batch-mean early stopping enabled, the stopping decision is made per
 //! chunk instead of per full batch, which can change results within the
-//! convergence tolerance.)
+//! convergence tolerance.) Row independence is also what lets the sparse
+//! `query_k` path (`BackendOpt` over the landmark small-world graph,
+//! [`crate::mds::graph`]; see docs/QUERY_PATH.md) drop in per row without
+//! touching this module: chunked streaming composes with any `OseMethod`.
 //!
 //! This bounds stage (2). Stage (1) — the base MDS every streamed chunk
 //! is anchored on — has its own scaling escape hatch: the divide-and-

@@ -1,0 +1,260 @@
+//! Integration: the sparse `query_k` OSE path and its landmark
+//! small-world graph (docs/QUERY_PATH.md).
+//!
+//! Guardrails enforced here, end to end:
+//! - graph k-nearest recall@k stays >= 0.95 against the brute-force scan
+//!   at a realistic landmark scale (quality of the ANN structure);
+//! - `query_k in {8, 32, L}` embeddings stay inside a sampled-stress band
+//!   of the dense all-landmark solve (quality of the sparse objective);
+//! - `query_k in {0, L}` are *bit-identical* to the dense path through
+//!   the public replica factories (the "sparse off == exactly the old
+//!   code" contract);
+//! - a sharded server with `query_k` set keeps recovering realizable
+//!   query positions through shard-local graphs and the quorum reduce.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use lmds_ose::coordinator::methods::BackendOpt;
+use lmds_ose::coordinator::{
+    BatcherConfig, Request, Server, ServerBuilder, ShardConfig,
+};
+use lmds_ose::mds::graph::{nearest_k, GraphConfig, LandmarkGraph};
+use lmds_ose::mds::Matrix;
+use lmds_ose::ose::OseMethod;
+use lmds_ose::runtime::Backend;
+use lmds_ose::strdist::Euclidean;
+use lmds_ose::util::prng::Rng;
+
+/// Fixed majorization budget: deterministic work on every path.
+const STEPS: usize = 1500;
+
+/// Exact Euclidean delta row from a query point to every landmark row.
+fn delta_to(config: &Matrix, q: &[f32]) -> Vec<f32> {
+    (0..config.rows)
+        .map(|i| {
+            config
+                .row(i)
+                .iter()
+                .zip(q)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt()
+        })
+        .collect()
+}
+
+/// Normalized residual stress of embeddings `y` against their full delta
+/// rows: sqrt(sum (d_hat - delta)^2 / sum delta^2) over all Q x L pairs.
+fn query_stress(config: &Matrix, deltas: &Matrix, y: &Matrix) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for r in 0..y.rows {
+        let d_hat = delta_to(config, y.row(r));
+        for (dh, d) in d_hat.iter().zip(deltas.row(r)) {
+            num += (*dh as f64 - *d as f64).powi(2);
+            den += (*d as f64).powi(2);
+        }
+    }
+    (num / den).sqrt()
+}
+
+fn opt_method(
+    config: &Matrix,
+    query_k: usize,
+    graph: Option<Arc<LandmarkGraph>>,
+) -> BackendOpt {
+    BackendOpt {
+        backend: Backend::native(),
+        landmarks: config.clone(),
+        total_steps: STEPS,
+        lr: None,
+        rel_tol: 0.0,
+        query_k,
+        graph,
+    }
+}
+
+#[test]
+fn graph_knn_recall_at_k_is_high_at_scale() {
+    const L: usize = 2000;
+    const K: usize = 6;
+    const TOP: usize = 10;
+    let mut rng = Rng::new(0x9ec4);
+    let config = Matrix::random_normal(&mut rng, L, K, 1.0);
+    let graph = LandmarkGraph::build(&config, &GraphConfig::default());
+
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for _ in 0..100 {
+        let q: Vec<f32> = (0..K).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let delta = delta_to(&config, &q);
+        let approx = graph.knn_delta(&delta, TOP);
+        let exact = nearest_k(&delta, TOP);
+        assert_eq!(approx.len(), TOP);
+        // both sides come back sorted ascending: sorted intersection
+        let (mut i, mut j) = (0, 0);
+        while i < approx.len() && j < exact.len() {
+            match approx[i].cmp(&exact[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    hit += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        total += TOP;
+    }
+    let recall = hit as f64 / total as f64;
+    assert!(
+        recall >= 0.95,
+        "graph kNN recall@{TOP} = {recall} over 100 queries at L={L} \
+         (want >= 0.95)"
+    );
+}
+
+#[test]
+fn sparse_query_k_stays_in_the_stress_band_of_dense() {
+    const L: usize = 256;
+    const K: usize = 3;
+    let mut rng = Rng::new(0x51ab);
+    let config = Matrix::random_normal(&mut rng, L, K, 1.0);
+    let graph =
+        Arc::new(LandmarkGraph::build(&config, &GraphConfig::default()));
+
+    // realizable queries: points from the same cloud, so every restricted
+    // solve is still solving for an exactly-representable position
+    let queries: Vec<Vec<f32>> = (0..20)
+        .map(|_| (0..K).map(|_| rng.next_f32() * 2.0 - 1.0).collect())
+        .collect();
+    let mut rows = Vec::with_capacity(queries.len() * L);
+    for q in &queries {
+        rows.extend(delta_to(&config, q));
+    }
+    let deltas = Matrix::from_vec(queries.len(), L, rows);
+
+    let y_dense = opt_method(&config, 0, None).embed(&deltas).unwrap();
+    let stress_dense = query_stress(&config, &deltas, &y_dense);
+    assert!(
+        stress_dense < 0.05,
+        "dense solve should nail realizable queries (stress {stress_dense})"
+    );
+
+    for k in [8usize, 32] {
+        let y = opt_method(&config, k, Some(Arc::clone(&graph)))
+            .embed(&deltas)
+            .unwrap();
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        let stress = query_stress(&config, &deltas, &y);
+        // 5% relative band plus a small absolute floor: near-zero dense
+        // stress must not turn the band into a zero-tolerance equality
+        assert!(
+            stress <= 1.05 * stress_dense + 0.02,
+            "query_k={k}: sparse stress {stress} outside the band of \
+             dense {stress_dense}"
+        );
+    }
+
+    // query_k = L short-circuits to the dense code path: bit-equal
+    let y_full = opt_method(&config, L, None).embed(&deltas).unwrap();
+    assert_eq!(y_full.data, y_dense.data, "query_k=L must be bit-identical");
+}
+
+#[test]
+fn sparse_factories_at_query_k_zero_and_l_are_bit_identical_to_dense() {
+    const L: usize = 64;
+    const K: usize = 3;
+    let mut rng = Rng::new(0x7d0c);
+    let config = Matrix::random_normal(&mut rng, L, K, 1.0);
+    let queries: Vec<Vec<f32>> = (0..6)
+        .map(|_| (0..K).map(|_| rng.next_f32() * 2.0 - 1.0).collect())
+        .collect();
+    let mut rows = Vec::with_capacity(queries.len() * L);
+    for q in &queries {
+        rows.extend(delta_to(&config, q));
+    }
+    let deltas = Matrix::from_vec(queries.len(), L, rows);
+    let gcfg = GraphConfig::default();
+
+    let dense =
+        BackendOpt::replica_factory_budget(Backend::native(), config.clone(), STEPS);
+    let want = dense.build().embed(&deltas).unwrap();
+
+    for query_k in [0usize, L, L + 7] {
+        let sparse = BackendOpt::replica_factory_sparse(
+            Backend::native(),
+            config.clone(),
+            STEPS,
+            query_k,
+            &gcfg,
+        );
+        let got = sparse.build().embed(&deltas).unwrap();
+        assert_eq!(
+            got.data, want.data,
+            "query_k={query_k} must take the dense path bit-identically"
+        );
+    }
+}
+
+#[test]
+fn sharded_serving_with_query_k_recovers_realizable_queries() {
+    const L: usize = 48;
+    const K: usize = 3;
+    let mut rng = Rng::new(0x5a4d);
+    let config = Matrix::random_normal(&mut rng, L, K, 1.0);
+    let vecs: Vec<Box<[f32]>> = (0..L)
+        .map(|i| config.row(i).to_vec().into_boxed_slice())
+        .collect();
+
+    let builder: ServerBuilder<[f32]> = Server::builder(
+        vecs,
+        Arc::new(Euclidean),
+        BackendOpt::replica_factory_budget(Backend::native(), config.clone(), STEPS),
+    )
+    .landmark_config(config.clone())
+    .batcher(BatcherConfig {
+        max_batch: 8,
+        max_delay: Duration::from_millis(1),
+        queue_cap: 256,
+        frontend_threads: 2,
+        replicas: 1,
+    })
+    .shards(ShardConfig {
+        shards: 2,
+        anchors: 12,
+        opt_steps: STEPS,
+        query_k: 8,
+        graph: GraphConfig::default(),
+        ..Default::default()
+    });
+    let server = builder.build_sharded().expect("valid sharded configuration");
+    let h = server.handle();
+
+    let mut rng = Rng::new(0xbead);
+    for _ in 0..8 {
+        let q: Vec<f32> = (0..K).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let r = h
+            .submit(Request::delta(delta_to(&config, q.as_slice())))
+            .recv()
+            .expect("sharded sparse query");
+        assert!(!r.degraded, "all shards healthy: no degradation");
+        assert!(r.coords.iter().all(|v| v.is_finite()));
+        // each shard solves q from its 8 nearest slice landmarks (exact
+        // distances, realizable point), so the quorum mean recovers q up
+        // to the usual partition band
+        let err = r
+            .coords
+            .iter()
+            .zip(&q)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            err < 0.3,
+            "sparse sharded embedding {err} off the true query position"
+        );
+    }
+    drop(h);
+    server.shutdown();
+}
