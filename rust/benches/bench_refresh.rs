@@ -1,0 +1,210 @@
+//! Refresh-loop bench: cost of closing the streaming loop. Embeds a Geco
+//! corpus, serves it with the drift monitor armed, pushes an
+//! out-of-distribution storm through the handle and measures the hot
+//! refresh end to end — time to the drift signal, the shadow
+//! solve + swap wall time, and the drain of the retired generation —
+//! plus serving latency before and after the swap.
+//!
+//!     cargo bench --bench bench_refresh
+//!
+//! Env knobs:
+//!   LMDS_BENCH_QUICK=1        smaller corpus + query volume (CI smoke)
+//!   LMDS_BENCH_JSON=path.json where to write the report
+//!                             (default BENCH_pr10.json in the CWD)
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lmds_ose::coordinator::{
+    embed_corpus, BaseSolver, BatcherConfig, DriftConfig, DriftHook, OseBackend,
+    PipelineConfig, RefreshConfig, RefreshController, Request, ServerBuilder,
+    ServerHandle,
+};
+use lmds_ose::data::source::{
+    CorpusWriter, ObjectTable, TableDelta, DEFAULT_CACHE_BUDGET,
+};
+use lmds_ose::data::{Geco, GecoConfig};
+use lmds_ose::mds::{LandmarkMethod, LsmdsConfig};
+use lmds_ose::runtime::Backend;
+use lmds_ose::strdist::Levenshtein;
+use lmds_ose::util::json::Json;
+
+const SEED: u64 = 40246;
+
+fn run_queries(h: &ServerHandle<str>, queries: impl IntoIterator<Item = String>) -> usize {
+    let tickets: Vec<_> = queries
+        .into_iter()
+        .map(|q| h.submit(Request::object(q)))
+        .collect();
+    let n = tickets.len();
+    for t in tickets {
+        t.recv().expect("bench load must not fail");
+    }
+    n
+}
+
+fn main() {
+    lmds_ose::util::logging::init();
+    let quick = std::env::var("LMDS_BENCH_QUICK").is_ok();
+    let n = if quick { 1_500 } else { 10_000 };
+    let landmarks = if quick { 64 } else { 200 };
+    let in_dist = if quick { 200 } else { 1_000 };
+
+    // corpus on disk: the refresh appends ingested queries to it
+    let mut geco = Geco::new(GecoConfig { seed: SEED, ..Default::default() });
+    let names = geco.generate_unique(n);
+    let path = std::env::temp_dir()
+        .join(format!("lmds_bench_refresh_{}", std::process::id()));
+    let mut w = CorpusWriter::create_text(&path).unwrap();
+    for name in &names {
+        w.push_text(name).unwrap();
+    }
+    w.finish().unwrap();
+
+    let pcfg = PipelineConfig {
+        dim: 3,
+        landmarks,
+        landmark_method: LandmarkMethod::Random,
+        backend: OseBackend::Opt,
+        base_solver: BaseSolver::DivideConquer { blocks: 4, anchors: 0 },
+        lsmds: LsmdsConfig { dim: 3, max_iters: 200, ..Default::default() },
+        ose_steps: Some(6),
+        seed: SEED,
+        ..Default::default()
+    };
+    let backend = Backend::native();
+
+    println!("== refresh loop: N={n}, L={landmarks}, opt OSE, divide base ==");
+    let t0 = Instant::now();
+    let (r, landmark_objs) = {
+        let table = ObjectTable::open(&path, DEFAULT_CACHE_BUDGET).unwrap();
+        let source = TableDelta::text(&table, &Levenshtein).unwrap();
+        let r = embed_corpus(&source, &pcfg, &backend).unwrap();
+        let objs = table.text_rows(&r.landmark_idx);
+        (r, objs)
+    };
+    let embed_s = t0.elapsed().as_secs_f64();
+    println!("initial embed: {embed_s:.2}s (landmark stress {:.4})", r.landmark_stress);
+
+    let server = ServerBuilder::strings(
+        landmark_objs,
+        Arc::new(Levenshtein),
+        Arc::clone(&r.factory),
+    )
+    .batcher(BatcherConfig {
+        max_delay: Duration::from_micros(200),
+        replicas: 2,
+        ..Default::default()
+    })
+    .landmark_config(r.landmark_config.clone())
+    .backend(backend.clone())
+    .drift(DriftHook {
+        landmark_config: r.landmark_config.clone(),
+        cfg: DriftConfig { window: 64, calibration: 64, degrade_factor: 1.3 },
+    })
+    .build()
+    .expect("valid server configuration");
+    let h = server.handle();
+    let ctl = RefreshController::start(
+        h.clone(),
+        path.clone(),
+        pcfg,
+        backend,
+        r.landmark_idx.clone(),
+        r.landmark_config.clone(),
+        // manual refresh: the bench times run_once itself
+        RefreshConfig { poll: Duration::from_secs(3600), ..Default::default() },
+    )
+    .expect("starting the refresh controller");
+
+    // phase 1 — in-distribution traffic: calibrates the monitor, fills
+    // the ingest buffer, gives a pre-drift latency baseline
+    let mut geco = Geco::new(GecoConfig { seed: SEED ^ 0xA, ..Default::default() });
+    let t0 = Instant::now();
+    run_queries(&h, (0..in_dist).map(|q| geco.corrupt(&names[(q * 31) % n])));
+    let baseline_wall = t0.elapsed().as_secs_f64();
+    let pre = h.metrics.snapshot();
+    println!(
+        "in-distribution: {in_dist} queries in {baseline_wall:.2}s \
+         (p50 {:.3}ms, drift signals {})",
+        pre.p50_s * 1e3,
+        pre.drift_signals
+    );
+
+    // phase 2 — OOD storm until the monitor signals
+    let t0 = Instant::now();
+    let mut storm = 0usize;
+    while h.metrics.snapshot().drift_signals == 0 {
+        storm += run_queries(
+            &h,
+            (0..32).map(|k| format!("qqqqqqqqqqqqqqqqqqqqqqqqqqqq{:04}", storm + k)),
+        );
+        assert!(storm < 1_000_000, "drift monitor never signalled");
+    }
+    let signal_wall = t0.elapsed().as_secs_f64();
+    println!("OOD storm: drift signalled after {storm} queries ({signal_wall:.2}s)");
+
+    // phase 3 — the refresh itself: ingest + shadow solve + align + swap
+    let t0 = Instant::now();
+    let report = ctl.run_once().expect("refresh must complete");
+    let refresh_wall = t0.elapsed().as_secs_f64();
+    println!(
+        "refresh: {refresh_wall:.2}s wall | ingested {} | landmark stress {:.4} \
+         | align rmsd {:.4} | swap drain {:?}",
+        report.ingested, report.landmark_stress, report.align_rmsd, report.swap_drain
+    );
+
+    // phase 4 — post-swap traffic on the new generation
+    let t0 = Instant::now();
+    run_queries(
+        &h,
+        (0..in_dist).map(|k| format!("qqqqqqqqqqqqqqqqqqqqqqqqqqqq{:04}", 500_000 + k)),
+    );
+    let post_wall = t0.elapsed().as_secs_f64();
+    let snap = h.metrics.snapshot();
+    assert_eq!(snap.failed, 0, "bench load must not fail");
+    assert_eq!(snap.generation, 1);
+    println!(
+        "post-refresh: {in_dist} queries in {post_wall:.2}s \
+         (cumulative p50 {:.3}ms, footprint {} slots)",
+        snap.p50_s * 1e3,
+        snap.metrics_footprint
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("bench_refresh".into())),
+        ("backend", Json::Str("native".into())),
+        ("method", Json::Str("opt".into())),
+        ("n", Json::Num(n as f64)),
+        ("landmarks", Json::Num(landmarks as f64)),
+        ("initial_embed_s", Json::Num(embed_s)),
+        ("initial_stress", Json::Num(r.landmark_stress)),
+        ("baseline_qps", Json::Num(in_dist as f64 / baseline_wall)),
+        ("storm_queries_to_signal", Json::Num(storm as f64)),
+        ("refresh_wall_s", Json::Num(refresh_wall)),
+        ("refresh_ingested", Json::Num(report.ingested as f64)),
+        ("refresh_stress", Json::Num(report.landmark_stress)),
+        // NaN means the alignment was skipped (thin landmark overlap);
+        // encode it as -1 so the report stays valid JSON
+        (
+            "align_rmsd",
+            Json::Num(if report.align_rmsd.is_finite() { report.align_rmsd } else { -1.0 }),
+        ),
+        ("swap_drain_ms", Json::Num(report.swap_drain.as_millis() as f64)),
+        ("post_refresh_qps", Json::Num(in_dist as f64 / post_wall)),
+        ("p50_s", Json::Num(snap.p50_s)),
+        ("p99_s", Json::Num(snap.p99_s)),
+        ("metrics_footprint", Json::Num(snap.metrics_footprint as f64)),
+    ]);
+    let path_json = std::env::var("LMDS_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_pr10.json".to_string());
+    match std::fs::write(&path_json, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote refresh bench report to {path_json}"),
+        Err(e) => eprintln!("could not write {path_json}: {e}"),
+    }
+
+    ctl.stop();
+    drop(h);
+    server.shutdown();
+    std::fs::remove_file(&path).ok();
+}

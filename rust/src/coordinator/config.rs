@@ -112,6 +112,18 @@ pub struct RunConfig {
     /// Landmark graph: query-time beam width (HNSW `ef`). Raised to
     /// `query_k` automatically when smaller.
     pub graph_ef: usize,
+    /// Enable the drift-triggered hot-refresh controller
+    /// ([`crate::coordinator::refresh`]): on a drift signal, recent
+    /// queries are ingested into the corpus, the landmark base is
+    /// re-solved in a shadow generation and the serving model is
+    /// hot-swapped. Requires the opt backend, an unsharded server and a
+    /// drift monitor (`drift_window > 0`).
+    pub refresh: bool,
+    /// Minimum spacing between two drift-triggered refreshes (ms).
+    pub refresh_cooldown_ms: usize,
+    /// Capacity of the refresh controller's recent-query ingest buffer
+    /// (oldest entries evicted first).
+    pub ingest_buffer: usize,
 }
 
 impl Default for RunConfig {
@@ -147,6 +159,9 @@ impl Default for RunConfig {
             query_k: 0,
             graph_m: 12,
             graph_ef: 48,
+            refresh: false,
+            refresh_cooldown_ms: 5000,
+            ingest_buffer: 4096,
         }
     }
 }
@@ -285,6 +300,16 @@ impl RunConfig {
             anyhow::ensure!(v >= 1, "config: graph_ef must be >= 1");
             self.graph_ef = v;
         }
+        if let Some(v) = json.get("refresh").and_then(Json::as_bool) {
+            self.refresh = v;
+        }
+        if let Some(v) = usize_of(json, "refresh_cooldown")? {
+            self.refresh_cooldown_ms = v;
+        }
+        if let Some(v) = usize_of(json, "ingest_buffer")? {
+            anyhow::ensure!(v >= 1, "config: ingest_buffer must be >= 1");
+            self.ingest_buffer = v;
+        }
         Ok(())
     }
 
@@ -388,6 +413,17 @@ impl RunConfig {
             let v = args.usize("graph-ef")?;
             anyhow::ensure!(v >= 1, "--graph-ef must be >= 1");
             self.graph_ef = v;
+        }
+        if args.flag("refresh") {
+            self.refresh = true;
+        }
+        if args.get("refresh-cooldown").is_some() {
+            self.refresh_cooldown_ms = args.usize("refresh-cooldown")?;
+        }
+        if args.get("ingest-buffer").is_some() {
+            let v = args.usize("ingest-buffer")?;
+            anyhow::ensure!(v >= 1, "--ingest-buffer must be >= 1");
+            self.ingest_buffer = v;
         }
         Ok(())
     }
@@ -508,6 +544,18 @@ impl RunConfig {
             window: self.drift_window,
             calibration: self.drift_window,
             ..Default::default()
+        })
+    }
+
+    /// Refresh-controller settings; `None` when `refresh` is off or the
+    /// drift monitor is disabled (no signal to subscribe to).
+    pub fn refresh_cfg(&self) -> Option<crate::coordinator::refresh::RefreshConfig> {
+        (self.refresh && self.drift_window > 0).then(|| {
+            crate::coordinator::refresh::RefreshConfig {
+                cooldown: Duration::from_millis(self.refresh_cooldown_ms as u64),
+                ingest_buffer: self.ingest_buffer,
+                ..Default::default()
+            }
         })
     }
 }
@@ -819,6 +867,60 @@ mod tests {
         // bad values rejected
         assert!(cfg.apply_json(&Json::parse(r#"{"graph_m": 1}"#).unwrap()).is_err());
         assert!(cfg.apply_json(&Json::parse(r#"{"graph_ef": 0}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn refresh_keys_round_trip() {
+        let mut cfg = RunConfig::default();
+        assert!(!cfg.refresh, "refresh is opt-in");
+        assert!(cfg.refresh_cfg().is_none());
+        cfg.apply_json(
+            &Json::parse(
+                r#"{"refresh": true, "refresh_cooldown": 750, "ingest_buffer": 128}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(cfg.refresh);
+        let rc = cfg.refresh_cfg().expect("refresh + drift enabled");
+        assert_eq!(rc.cooldown, Duration::from_millis(750));
+        assert_eq!(rc.ingest_buffer, 128);
+
+        // refresh without a drift monitor has no signal to act on
+        cfg.drift_window = 0;
+        assert!(cfg.refresh_cfg().is_none());
+        cfg.drift_window = 256;
+
+        let specs = vec![
+            OptSpec { name: "refresh", help: "", takes_value: false, default: None },
+            OptSpec {
+                name: "refresh-cooldown",
+                help: "",
+                takes_value: true,
+                default: None,
+            },
+            OptSpec {
+                name: "ingest-buffer",
+                help: "",
+                takes_value: true,
+                default: None,
+            },
+        ];
+        let argv: Vec<String> =
+            ["--refresh", "--refresh-cooldown", "250", "--ingest-buffer", "64"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let args = Args::parse(&argv, &specs).unwrap();
+        let mut cli = RunConfig::default();
+        cli.apply_args(&args).unwrap();
+        assert!(cli.refresh);
+        assert_eq!(cli.refresh_cooldown_ms, 250);
+        assert_eq!(cli.ingest_buffer, 64);
+        // bad values rejected
+        assert!(cli
+            .apply_json(&Json::parse(r#"{"ingest_buffer": 0}"#).unwrap())
+            .is_err());
     }
 
     #[test]

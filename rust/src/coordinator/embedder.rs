@@ -19,8 +19,8 @@ use anyhow::Result;
 use crate::data::source::{TableDelta, TableMetric};
 use crate::mds::dissimilarity::{cross_matrix, full_matrix};
 use crate::mds::divide::{
-    block_seed, divide_solve_with, fps_anchors, sampled_normalized_stress,
-    DeltaSource, DivideConfig, SubsetDelta,
+    block_seed, divide_solve_with, fps_anchors, partition_blocks,
+    sampled_normalized_stress, DeltaSource, DivideConfig, SubsetDelta,
 };
 use crate::mds::graph::{graph_landmarks, GraphConfig};
 use crate::mds::landmarks::{random_landmarks, select_landmarks};
@@ -192,8 +192,10 @@ impl Default for PipelineConfig {
 }
 
 /// Build the optimisation-OSE replica factory honouring
-/// [`PipelineConfig::ose_steps`] and [`PipelineConfig::query_k`].
-fn opt_factory(
+/// [`PipelineConfig::ose_steps`] and [`PipelineConfig::query_k`]
+/// (shared with the refresh controller, which rebuilds the factory —
+/// landmark graph included — around a re-solved configuration).
+pub(crate) fn opt_factory(
     cfg: &PipelineConfig,
     backend: &Backend,
     landmarks: Matrix,
@@ -266,10 +268,46 @@ pub fn lsmds_landmarks_config(
     cfg: &LsmdsConfig,
     backend: &Backend,
 ) -> Result<Matrix> {
-    let n = delta.rows;
     let mut rng = Rng::new(cfg.seed);
-    let mut x = Matrix::random_normal(&mut rng, n, cfg.dim, cfg.init_sigma);
+    let mut x = Matrix::random_normal(&mut rng, delta.rows, cfg.dim, cfg.init_sigma);
     x.center_columns();
+    lsmds_iterate(x, delta, cfg, backend)
+}
+
+/// [`lsmds_landmarks_config`] warm-started from `init` instead of a
+/// fresh random configuration. The refresh controller's shadow solve
+/// seeds each re-solve with the previous generation's coordinates, so
+/// the majorization resumes near the old optimum instead of restarting
+/// from noise. `init` is used as-is — no re-centering, the caller's
+/// frame is preserved (the refresh path Procrustes-aligns afterwards
+/// anyway, which absorbs any residual translation).
+pub fn lsmds_landmarks_config_from(
+    delta: &Matrix,
+    cfg: &LsmdsConfig,
+    backend: &Backend,
+    init: Matrix,
+) -> Result<Matrix> {
+    anyhow::ensure!(
+        init.rows == delta.rows && init.cols == cfg.dim,
+        "warm init is {}x{}, expected {}x{}",
+        init.rows,
+        init.cols,
+        delta.rows,
+        cfg.dim
+    );
+    lsmds_iterate(init, delta, cfg, backend)
+}
+
+/// The chunked backend-stepped majorization loop shared by the cold-
+/// and warm-started entry points: step `x` against `delta` until the
+/// relative stress change flattens or `max_iters` is exhausted.
+fn lsmds_iterate(
+    mut x: Matrix,
+    delta: &Matrix,
+    cfg: &LsmdsConfig,
+    backend: &Backend,
+) -> Result<Matrix> {
+    let n = delta.rows;
     let lr = cfg.lr.unwrap_or(1.0 / (2.0 * n as f64)) as f32;
     let chunk = backend.lsmds_step_chunk(n).max(1);
     let mut prev = f64::INFINITY;
@@ -399,6 +437,65 @@ where
                 cfg.seed,
             );
             Ok((config, stress))
+        }
+    }
+}
+
+/// [`solve_base_source`] warm-started from a full `L x K` initial
+/// configuration (row `i` of `init` seeds source row `i`). This is the
+/// refresh controller's shadow solve: after drift, the landmark base is
+/// re-solved against the updated corpus starting from the previous
+/// generation's coordinates, so most of the majorization budget goes to
+/// absorbing the drift rather than rediscovering the old structure.
+///
+/// With the divide-and-conquer solver the block partition is recomputed
+/// with [`partition_blocks`] — deterministic in `(dim, shape, seed)`, so
+/// it reproduces exactly the layout [`divide_solve_with`] uses — and
+/// each block's warm rows are gathered from `init` by the block's
+/// global indices. Stress comes from the same estimators as the
+/// cold-start path (exact for monolithic, sampled for divide).
+pub fn solve_base_source_warm<S>(
+    source: &S,
+    cfg: &LsmdsConfig,
+    solver: BaseSolver,
+    backend: &Backend,
+    init: &Matrix,
+) -> Result<(Matrix, f64)>
+where
+    S: DeltaSource + ?Sized,
+{
+    anyhow::ensure!(
+        init.rows == source.len() && init.cols == cfg.dim,
+        "warm init is {}x{}, expected {}x{}",
+        init.rows,
+        init.cols,
+        source.len(),
+        cfg.dim
+    );
+    match solver {
+        BaseSolver::Monolithic => {
+            let all: Vec<usize> = (0..source.len()).collect();
+            let delta = source.sub_matrix(&all);
+            let x = lsmds_landmarks_config_from(&delta, cfg, backend, init.clone())?;
+            let stress = crate::mds::stress::normalized_stress(&x, &delta);
+            Ok((x, stress))
+        }
+        BaseSolver::DivideConquer { blocks, anchors } => {
+            let dcfg = DivideConfig { blocks, anchors };
+            let part = partition_blocks(source, cfg.dim, &dcfg, cfg.seed);
+            let r = divide_solve_with(source, cfg.dim, &dcfg, cfg.seed, |b, sub| {
+                let mut c = cfg.clone();
+                c.seed = block_seed(cfg.seed, b as u64);
+                let warm = init.select_rows(&part.block_idx[b]);
+                lsmds_landmarks_config_from(sub, &c, backend, warm)
+            })?;
+            let stress = sampled_normalized_stress(
+                source,
+                &r.config,
+                OUT_OF_CORE_STRESS_PAIRS,
+                cfg.seed,
+            );
+            Ok((r.config, stress))
         }
     }
 }
@@ -1042,6 +1139,61 @@ mod tests {
         )
         .unwrap();
         assert_eq!(c.data, d.data);
+    }
+
+    #[test]
+    fn warm_started_base_solve_stays_near_its_init_optimum() {
+        let mut geco = Geco::new(GecoConfig { seed: 24, ..Default::default() });
+        let names = geco.generate_unique(50);
+        let objs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let delta = full_matrix(&objs, &Levenshtein);
+        let lcfg = LsmdsConfig { dim: 3, max_iters: 150, ..Default::default() };
+        let (cold, cold_stress) =
+            solve_base(&delta, &lcfg, BaseSolver::Monolithic, &Backend::native())
+                .unwrap();
+
+        // warm-started from the converged optimum, a short budget must
+        // not walk away from it
+        let short = LsmdsConfig { max_iters: 10, ..lcfg.clone() };
+        let (warm, warm_stress) = solve_base_source_warm(
+            &delta,
+            &short,
+            BaseSolver::Monolithic,
+            &Backend::native(),
+            &cold,
+        )
+        .unwrap();
+        assert_eq!((warm.rows, warm.cols), (50, 3));
+        assert!(warm.data.iter().all(|v| v.is_finite()));
+        assert!(
+            warm_stress <= cold_stress + 0.05,
+            "warm restart degraded stress: {warm_stress} vs {cold_stress}"
+        );
+
+        // the divide flavour gathers per-block warm rows from the global
+        // init and must come back finite with a sensible sampled stress
+        let (dc, dc_stress) = solve_base_source_warm(
+            &delta,
+            &lcfg,
+            BaseSolver::DivideConquer { blocks: 3, anchors: 8 },
+            &Backend::native(),
+            &cold,
+        )
+        .unwrap();
+        assert_eq!((dc.rows, dc.cols), (50, 3));
+        assert!(dc.data.iter().all(|v| v.is_finite()));
+        assert!(dc_stress.is_finite() && dc_stress >= 0.0);
+
+        // a mis-shaped init is rejected, not silently truncated
+        let bad = Matrix::zeros(10, 3);
+        assert!(solve_base_source_warm(
+            &delta,
+            &lcfg,
+            BaseSolver::Monolithic,
+            &Backend::native(),
+            &bad
+        )
+        .is_err());
     }
 
     #[test]

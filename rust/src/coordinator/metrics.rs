@@ -60,6 +60,16 @@ pub struct Metrics {
     drift_status: AtomicU8,
     /// Times the drift monitor reported `Drifted` (re-embed signals).
     drift_signals: AtomicU64,
+    /// Serving model generation (gauge; 0 = boot generation, bumped by
+    /// every successful hot-refresh swap).
+    generation: AtomicU64,
+    /// Successful drift-triggered refreshes (shadow solve + swap).
+    pub refreshes: AtomicU64,
+    /// Refresh attempts that failed, leaving the old generation serving.
+    pub refresh_failures: AtomicU64,
+    /// Milliseconds the latest generation swap spent draining in-flight
+    /// work on the old executors (gauge).
+    swap_drain_ms: AtomicU64,
     /// per-request end-to-end latency (seconds), bounded
     latency: Mutex<BoundedDist>,
     /// per-batch execute latency (seconds), bounded
@@ -89,6 +99,10 @@ impl Default for Metrics {
             proto_errors: AtomicU64::new(0),
             drift_status: AtomicU8::new(DRIFT_NONE),
             drift_signals: AtomicU64::new(0),
+            generation: AtomicU64::new(0),
+            refreshes: AtomicU64::new(0),
+            refresh_failures: AtomicU64::new(0),
+            swap_drain_ms: AtomicU64::new(0),
             latency: Mutex::new(BoundedDist::for_latency(0x1a7)),
             batch_latency: Mutex::new(BoundedDist::for_latency(0xba7c)),
             dist_latency: Mutex::new(BoundedDist::for_latency(0xd157)),
@@ -202,6 +216,27 @@ impl Metrics {
         }
     }
 
+    /// Record the serving model generation after a successful swap.
+    pub fn set_generation(&self, g: u64) {
+        self.generation.store(g, Ordering::Relaxed);
+    }
+
+    /// Count one successful hot refresh (shadow solve + swap).
+    pub fn record_refresh(&self) {
+        self.refreshes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one failed refresh attempt (old generation kept serving).
+    pub fn record_refresh_failure(&self) {
+        self.refresh_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record how long the latest generation swap drained in-flight work
+    /// on the old executors.
+    pub fn record_swap_drain(&self, drain: Duration) {
+        self.swap_drain_ms.store(drain.as_millis() as u64, Ordering::Relaxed);
+    }
+
     /// Total retained sample slots across every distribution — constant
     /// after construction, whatever the request volume (the bounded-memory
     /// guarantee the soak test pins).
@@ -250,6 +285,10 @@ impl Metrics {
             mean_dist_s,
             drift_status,
             drift_signals: self.drift_signals.load(Ordering::Relaxed),
+            generation: self.generation.load(Ordering::Relaxed),
+            refreshes: self.refreshes.load(Ordering::Relaxed),
+            refresh_failures: self.refresh_failures.load(Ordering::Relaxed),
+            swap_drain_ms: self.swap_drain_ms.load(Ordering::Relaxed),
             metrics_footprint: self.footprint(),
         }
     }
@@ -304,6 +343,14 @@ pub struct Snapshot {
     pub drift_status: Option<DriftStatus>,
     /// Cumulative count of `Drifted` observations (re-embed signals).
     pub drift_signals: u64,
+    /// Serving model generation (0 = boot; bumped per successful swap).
+    pub generation: u64,
+    /// Successful hot refreshes over the server's lifetime.
+    pub refreshes: u64,
+    /// Failed refresh attempts (old generation kept serving).
+    pub refresh_failures: u64,
+    /// Drain time of the latest generation swap, in milliseconds.
+    pub swap_drain_ms: u64,
     /// Retained metric sample slots (constant — bounded-memory guarantee).
     pub metrics_footprint: usize,
 }
@@ -333,11 +380,19 @@ impl Snapshot {
         } else {
             String::new()
         };
+        let refresh = if self.refreshes > 0 || self.refresh_failures > 0 {
+            format!(
+                " gen={} refreshes={} refresh_failures={} swap_drain={}ms",
+                self.generation, self.refreshes, self.refresh_failures, self.swap_drain_ms
+            )
+        } else {
+            String::new()
+        };
         format!(
             "requests={} completed={} failed={} batches={} \
              latency p50={:.3}ms p95={:.3}ms p99={:.3}ms \
              mean_batch={:.1} mean_exec={:.3}ms \
-             replicas={} panics={} restarts={}{shard}{net}{drift}",
+             replicas={} panics={} restarts={}{shard}{net}{refresh}{drift}",
             self.requests,
             self.completed,
             self.failed,
@@ -447,6 +502,33 @@ mod tests {
         m.record_conn_close();
         m.record_conn_close();
         assert_eq!(m.snapshot().conns_active, 0);
+    }
+
+    #[test]
+    fn refresh_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.generation, s.refreshes, s.refresh_failures), (0, 0, 0));
+        // a server that never refreshed keeps the classic report line
+        assert!(!s.report().contains("gen="));
+        let baseline = m.footprint();
+        m.record_refresh_failure();
+        m.set_generation(1);
+        m.record_refresh();
+        m.record_swap_drain(Duration::from_millis(37));
+        let s = m.snapshot();
+        assert_eq!(s.generation, 1);
+        assert_eq!(s.refreshes, 1);
+        assert_eq!(s.refresh_failures, 1);
+        assert_eq!(s.swap_drain_ms, 37);
+        let r = s.report();
+        assert!(
+            r.contains("gen=1 refreshes=1 refresh_failures=1 swap_drain=37ms"),
+            "{r}"
+        );
+        // plain atomics: the new counters retain no samples, so the
+        // flat-footprint guarantee of the 1M-request soak is untouched
+        assert_eq!(m.footprint(), baseline);
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub mod methods;
 pub mod metrics;
 pub mod net;
 pub mod proto;
+pub mod refresh;
 pub mod server;
 pub mod shard;
 pub mod stream;
@@ -18,14 +19,15 @@ pub mod trainer;
 
 pub use config::RunConfig;
 pub use embedder::{
-    embed_corpus, embed_dataset, solve_base_source, BaseSolver, OseBackend,
-    PipelineConfig, PipelineResult,
+    embed_corpus, embed_dataset, solve_base_source, solve_base_source_warm,
+    BaseSolver, OseBackend, PipelineConfig, PipelineResult,
 };
 pub use error::ServeError;
 pub use methods::{BackendNn, BackendOpt};
 pub use metrics::{Metrics, Snapshot};
 pub use net::{NetConfig, NetServer, QueryService};
 pub use proto::{Deframer, Frame};
+pub use refresh::{RefreshConfig, RefreshController, RefreshReport};
 pub use server::{
     BatcherConfig, DriftHook, QueryResult, Request, Server, ServerBuilder,
     ServerHandle, Ticket,

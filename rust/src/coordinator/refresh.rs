@@ -1,0 +1,582 @@
+//! Drift-triggered hot re-embedding: the control loop that closes the
+//! paper's streaming story.
+//!
+//! The drift monitor ([`super::stream`]) answers *when* the landmark
+//! configuration has gone stale; this module answers *what to do about
+//! it* — without taking the service down:
+//!
+//! ```text
+//!  DriftMonitor signal ──> ingest buffered queries into the corpus
+//!                          (CorpusWriter::append; crash-safe)
+//!                     ──> shadow solve: re-select landmarks, warm-start
+//!                          the base solve from the old configuration
+//!                     ──> Procrustes-align the new base to the old
+//!                          frame (overlapping landmarks as the fit set)
+//!                     ──> rebuild the OSE factory (+ landmark graph)
+//!                     ──> ServerHandle::swap_generation (atomic;
+//!                          in-flight queries drain on the old engine)
+//! ```
+//!
+//! Everything up to the swap happens in a *shadow generation* on the
+//! controller's own thread: the serving path never blocks on the solve,
+//! and a refresh that dies mid-solve (crash, chaos kill) leaves the old
+//! generation serving and the corpus valid — the append is finished (or
+//! cleanly empty) before the solve starts. See docs/ARCHITECTURE.md
+//! ("Refresh loop") for the consistency guarantees.
+
+use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::data::source::{
+    CorpusWriter, ObjectTable, TableDelta, DEFAULT_CACHE_BUDGET,
+};
+use crate::mds::divide::fps_anchors;
+use crate::mds::landmarks::random_landmarks;
+use crate::mds::{graph_landmarks, LandmarkMethod, Matrix, Procrustes, SubsetDelta};
+use crate::runtime::Backend;
+use crate::strdist::Dissimilarity;
+use crate::util::prng::Rng;
+
+use super::embedder::{opt_factory, solve_base_source_warm, OseBackend, PipelineConfig};
+use super::server::ServerHandle;
+
+/// Refresh-controller knobs (see the `refresh`, `refresh_cooldown` and
+/// `ingest_buffer` config keys).
+#[derive(Clone, Debug)]
+pub struct RefreshConfig {
+    /// Minimum spacing between two drift-triggered refreshes. A signal
+    /// arriving inside the cooldown is deferred, not dropped: the poll
+    /// loop re-checks it once the cooldown expires.
+    pub cooldown: Duration,
+    /// Capacity of the recent-query ingest buffer (oldest entries are
+    /// evicted first). These are the queries a refresh appends to the
+    /// corpus, so the re-solve sees the drifted distribution.
+    pub ingest_buffer: usize,
+    /// How often the poll loop samples the drift signal.
+    pub poll: Duration,
+}
+
+impl Default for RefreshConfig {
+    fn default() -> Self {
+        Self {
+            cooldown: Duration::from_millis(5000),
+            ingest_buffer: 4096,
+            poll: Duration::from_millis(200),
+        }
+    }
+}
+
+/// Outcome of one completed refresh.
+#[derive(Clone, Debug)]
+pub struct RefreshReport {
+    /// Generation tag now serving (old + 1).
+    pub generation: u64,
+    /// Buffered queries appended to the corpus by this refresh.
+    pub ingested: usize,
+    /// Normalised stress of the re-solved landmark base (exact for the
+    /// monolithic solver, sampled for divide-and-conquer).
+    pub landmark_stress: f64,
+    /// RMSD of the Procrustes fit aligning the new base to the old
+    /// frame over the overlapping landmarks. NaN when fewer than
+    /// `dim + 1` landmarks survived and the alignment was skipped.
+    pub align_rmsd: f64,
+    /// How long the retired generation took to drain its in-flight work.
+    pub swap_drain: Duration,
+}
+
+/// Mutable controller state: the landmark set/configuration of the
+/// generation currently serving, the drift signals already consumed,
+/// and the last completed report.
+struct RefreshState {
+    landmark_idx: Vec<usize>,
+    landmark_config: Matrix,
+    consumed_signals: u64,
+    last: Option<RefreshReport>,
+}
+
+struct RefreshShared {
+    handle: ServerHandle<str>,
+    corpus: PathBuf,
+    pipeline: PipelineConfig,
+    backend: Backend,
+    cfg: RefreshConfig,
+    buffer: Mutex<VecDeque<String>>,
+    state: Mutex<RefreshState>,
+    /// Test hook: fail the next refresh after the corpus append but
+    /// before the shadow solve (the crash point the chaos suite probes).
+    chaos_kill: AtomicBool,
+    stop: AtomicBool,
+}
+
+/// Lock a mutex tolerating poisoning: the ingest tap runs on the
+/// serving path (must not panic) and controller state stays consistent
+/// under panicking writers (every update is a whole-value replace).
+fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Background refresh controller for a string-domain [`super::Server`]:
+/// subscribes to the drift signal, ingests recent queries into the
+/// out-of-core corpus, re-solves the landmark base in a shadow
+/// generation (warm-started from the serving configuration), aligns it
+/// to the old frame and hot-swaps the serving model. Built by
+/// [`RefreshController::start`]; stopped by [`RefreshController::stop`]
+/// or drop.
+pub struct RefreshController {
+    shared: Arc<RefreshShared>,
+    poller: Option<JoinHandle<()>>,
+}
+
+impl RefreshController {
+    /// Install the ingest tap on `handle` and spawn the poll loop.
+    ///
+    /// `corpus` is the text corpus the server was embedded from (the
+    /// refresh appends ingested queries to it); `landmark_idx` /
+    /// `landmark_config` describe the currently-serving generation
+    /// (row `r` of the config is corpus row `landmark_idx[r]`).
+    ///
+    /// Only the optimisation OSE backend is refreshable — the NN
+    /// backend would need a full retrain, which is a re-embed, not a
+    /// hot refresh — and `pipeline.backend` is validated here.
+    pub fn start(
+        handle: ServerHandle<str>,
+        corpus: PathBuf,
+        pipeline: PipelineConfig,
+        backend: Backend,
+        landmark_idx: Vec<usize>,
+        landmark_config: Matrix,
+        cfg: RefreshConfig,
+    ) -> Result<RefreshController> {
+        anyhow::ensure!(
+            pipeline.backend == OseBackend::Opt,
+            "hot refresh supports the opt OSE backend only (nn needs a retrain)"
+        );
+        anyhow::ensure!(
+            landmark_idx.len() == landmark_config.rows
+                && landmark_config.cols == pipeline.dim,
+            "landmark config is {}x{}, expected {}x{}",
+            landmark_config.rows,
+            landmark_config.cols,
+            landmark_idx.len(),
+            pipeline.dim
+        );
+        // fail fast on an unreadable corpus instead of at the first drift
+        let table = ObjectTable::open(&corpus, DEFAULT_CACHE_BUDGET)?;
+        anyhow::ensure!(
+            landmark_idx.iter().all(|&i| i < table.len()),
+            "landmark index out of corpus bounds ({} records)",
+            table.len()
+        );
+        drop(table);
+
+        let consumed = handle.metrics.snapshot().drift_signals;
+        let shared = Arc::new(RefreshShared {
+            handle,
+            corpus,
+            pipeline,
+            backend,
+            cfg,
+            buffer: Mutex::new(VecDeque::new()),
+            state: Mutex::new(RefreshState {
+                landmark_idx,
+                landmark_config,
+                consumed_signals: consumed,
+                last: None,
+            }),
+            chaos_kill: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
+        });
+
+        // The tap holds a Weak so a dropped controller can never keep
+        // the shared state alive through the server.
+        let tap = Arc::downgrade(&shared);
+        shared.handle.set_ingest_tap(Some(Arc::new(move |q: &str| {
+            if let Some(s) = tap.upgrade() {
+                let mut buf = relock(&s.buffer);
+                if buf.len() >= s.cfg.ingest_buffer.max(1) {
+                    buf.pop_front();
+                }
+                buf.push_back(q.to_string());
+            }
+        })));
+
+        let s = Arc::clone(&shared);
+        let poller = std::thread::Builder::new()
+            .name("ose-refresh".into())
+            .spawn(move || poll_loop(&s))
+            .map_err(|e| anyhow::anyhow!("spawning refresh poller: {e}"))?;
+        Ok(RefreshController { shared, poller: Some(poller) })
+    }
+
+    /// Run one refresh cycle synchronously, regardless of the drift
+    /// signal (the poll loop calls this on signal; tests and benches
+    /// call it directly). Updates the `refreshes` / `refresh_failures`
+    /// counters.
+    pub fn run_once(&self) -> Result<RefreshReport> {
+        let r = run_refresh(&self.shared);
+        match &r {
+            Ok(_) => self.shared.handle.metrics.record_refresh(),
+            Err(_) => self.shared.handle.metrics.record_refresh_failure(),
+        }
+        r
+    }
+
+    /// The last completed refresh, if any.
+    pub fn last_report(&self) -> Option<RefreshReport> {
+        relock(&self.shared.state).last.clone()
+    }
+
+    /// Landmark configuration of the generation currently serving
+    /// (aligned to the original frame).
+    pub fn landmark_config(&self) -> Matrix {
+        relock(&self.shared.state).landmark_config.clone()
+    }
+
+    /// Corpus row indices of the landmarks currently serving.
+    pub fn landmark_idx(&self) -> Vec<usize> {
+        relock(&self.shared.state).landmark_idx.clone()
+    }
+
+    /// Test hook: when set, the next refresh dies after the corpus
+    /// append but before the shadow solve — the crash point the chaos
+    /// suite uses to prove a killed refresh leaves the old generation
+    /// serving and the corpus readable.
+    pub fn set_chaos_kill(&self, on: bool) {
+        self.shared.chaos_kill.store(on, Ordering::Release);
+    }
+
+    /// Stop the poll loop, uninstall the ingest tap and join the
+    /// controller thread. Idempotent with drop.
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        self.shared.handle.set_ingest_tap(None);
+        if let Some(h) = self.poller.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RefreshController {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+/// Poll the drift signal and fire refreshes, one at a time, honouring
+/// the cooldown. Signals that arrive during a cooldown or a running
+/// refresh are not lost: the counter comparison re-fires once allowed.
+fn poll_loop(s: &Arc<RefreshShared>) {
+    let mut last_fire: Option<Instant> = None;
+    while !s.stop.load(Ordering::Acquire) {
+        std::thread::sleep(s.cfg.poll);
+        if s.stop.load(Ordering::Acquire) {
+            return;
+        }
+        let signals = s.handle.metrics.snapshot().drift_signals;
+        let consumed = relock(&s.state).consumed_signals;
+        if signals <= consumed {
+            continue;
+        }
+        if let Some(t) = last_fire {
+            if t.elapsed() < s.cfg.cooldown {
+                continue;
+            }
+        }
+        last_fire = Some(Instant::now());
+        match run_refresh(s) {
+            Ok(r) => {
+                s.handle.metrics.record_refresh();
+                log::info!(
+                    "refresh: generation {} live (ingested {}, stress {:.4}, \
+                     align rmsd {:.4}, drain {:?})",
+                    r.generation,
+                    r.ingested,
+                    r.landmark_stress,
+                    r.align_rmsd,
+                    r.swap_drain
+                );
+            }
+            Err(e) => {
+                s.handle.metrics.record_refresh_failure();
+                // the old generation keeps serving; consume the signal so
+                // a permanently-failing refresh cannot hot-loop faster
+                // than the cooldown
+                relock(&s.state).consumed_signals =
+                    s.handle.metrics.snapshot().drift_signals;
+                log::error!("refresh failed (old generation keeps serving): {e:#}");
+            }
+        }
+    }
+}
+
+/// One refresh cycle: ingest, shadow solve, align, swap. Every step
+/// before [`ServerHandle::swap_generation`] runs on the controller
+/// thread against shadow state — a failure anywhere leaves the serving
+/// generation untouched.
+fn run_refresh(s: &Arc<RefreshShared>) -> Result<RefreshReport> {
+    // 1. Drain the ingest buffer and append it to the corpus. The append
+    //    is finished (header patched) before anything else happens, so a
+    //    later failure cannot leave a torn corpus.
+    let drained: Vec<String> = relock(&s.buffer).drain(..).collect();
+    if !drained.is_empty() {
+        let mut w = CorpusWriter::append(&s.corpus)?;
+        for q in &drained {
+            w.push_text(q)?;
+        }
+        w.finish()?;
+    }
+
+    // 2. Chaos checkpoint: the corpus is valid, the swap has not begun.
+    if s.chaos_kill.load(Ordering::Acquire) {
+        anyhow::bail!("chaos: refresh killed mid-solve (corpus append completed)");
+    }
+
+    // 3. Reopen the corpus and re-select landmarks over the grown record
+    //    set, mirroring embed_corpus exactly (same selectors, same seeds).
+    let p = &s.pipeline;
+    let table = ObjectTable::open(&s.corpus, DEFAULT_CACHE_BUDGET)?;
+    let metric_arc = s.handle.metric();
+    let metric: &dyn Dissimilarity<str> = metric_arc.as_ref();
+    let source = TableDelta::text(&table, metric)?;
+    let n = table.len();
+    anyhow::ensure!(
+        p.landmarks <= n,
+        "more landmarks ({}) than corpus records ({n})",
+        p.landmarks
+    );
+    let new_idx = match p.landmark_method {
+        LandmarkMethod::Random => {
+            random_landmarks(&mut Rng::new(p.seed), n, p.landmarks)
+        }
+        LandmarkMethod::Fps => fps_anchors(&source, p.landmarks, p.seed),
+        LandmarkMethod::MaxMinPool => {
+            graph_landmarks(&source, p.landmarks, &p.graph, p.seed)
+        }
+    };
+
+    // 4. Warm init: landmarks that survive the re-selection carry their
+    //    serving coordinates; fresh landmarks start from the seeded
+    //    random stream. The overlap doubles as the Procrustes fit set.
+    let (old_idx, old_config) = {
+        let st = relock(&s.state);
+        (st.landmark_idx.clone(), st.landmark_config.clone())
+    };
+    let mut lcfg = p.lsmds.clone();
+    lcfg.dim = p.dim;
+    lcfg.seed = p.seed ^ 0x5eed;
+    let old_pos: HashMap<usize, usize> =
+        old_idx.iter().enumerate().map(|(r, &i)| (i, r)).collect();
+    let mut rng = Rng::new(lcfg.seed);
+    let mut init =
+        Matrix::random_normal(&mut rng, new_idx.len(), p.dim, lcfg.init_sigma);
+    let mut overlap_new: Vec<usize> = Vec::new();
+    let mut overlap_old: Vec<usize> = Vec::new();
+    for (r, &i) in new_idx.iter().enumerate() {
+        if let Some(&or) = old_pos.get(&i) {
+            init.row_mut(r).copy_from_slice(old_config.row(or));
+            overlap_new.push(r);
+            overlap_old.push(or);
+        }
+    }
+
+    // 5. Shadow solve, warm-started.
+    let sub = SubsetDelta::new(&source, &new_idx);
+    let (config, landmark_stress) =
+        solve_base_source_warm(&sub, &lcfg, p.base_solver, &s.backend, &init)?;
+
+    // 6. Align the new base to the OLD frame over the overlap, so the
+    //    coordinate space clients observe stays continuous across the
+    //    swap. Under dim + 1 overlapping landmarks the fit is
+    //    under-determined; serve the unaligned base instead.
+    let (aligned, align_rmsd) = if overlap_new.len() >= p.dim + 1 {
+        let src = config.select_rows(&overlap_new);
+        let dst = old_config.select_rows(&overlap_old);
+        let fit = Procrustes::fit(&src, &dst);
+        (fit.apply(&config), fit.rmsd)
+    } else {
+        log::warn!(
+            "refresh: only {} overlapping landmarks (< {}), serving unaligned",
+            overlap_new.len(),
+            p.dim + 1
+        );
+        (config, f64::NAN)
+    };
+
+    // 7. Rebuild the OSE factory around the new base (the query_k
+    //    landmark graph is rebuilt inside) and swap the generation. The
+    //    swap is the single commit point: everything above is shadow.
+    let factory = opt_factory(p, &s.backend, aligned.clone());
+    let objs: Vec<Box<str>> = table
+        .text_rows(&new_idx)
+        .into_iter()
+        .map(String::into_boxed_str)
+        .collect();
+    let (generation, swap_drain) =
+        s.handle
+            .swap_generation(objs, factory, Some(aligned.clone()))?;
+
+    // 8. Publish the new state and consume the signals that triggered us
+    //    (later signals re-fire after the cooldown).
+    let report = RefreshReport {
+        generation,
+        ingested: drained.len(),
+        landmark_stress,
+        align_rmsd,
+        swap_drain,
+    };
+    let mut st = relock(&s.state);
+    st.landmark_idx = new_idx;
+    st.landmark_config = aligned;
+    st.consumed_signals = s.handle.metrics.snapshot().drift_signals;
+    st.last = Some(report.clone());
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::embedder::embed_corpus;
+    use crate::coordinator::server::{BatcherConfig, Request, ServerBuilder};
+    use crate::data::{Geco, GecoConfig};
+    use crate::mds::LsmdsConfig;
+    use crate::strdist::Levenshtein;
+
+    fn corpus_with_names(seed: u64, n: usize) -> (PathBuf, Vec<String>) {
+        let mut geco = Geco::new(GecoConfig { seed, ..Default::default() });
+        let names = geco.generate_unique(n);
+        let mut path = std::env::temp_dir();
+        path.push(format!("lmds_refresh_{seed}_{n}_{}", std::process::id()));
+        let mut w = CorpusWriter::create_text(&path).unwrap();
+        for name in &names {
+            w.push_text(name).unwrap();
+        }
+        w.finish().unwrap();
+        (path, names)
+    }
+
+    fn tiny_pipeline() -> PipelineConfig {
+        PipelineConfig {
+            dim: 2,
+            landmarks: 20,
+            landmark_method: LandmarkMethod::Random,
+            backend: OseBackend::Opt,
+            lsmds: LsmdsConfig { dim: 2, max_iters: 60, ..Default::default() },
+            ose_steps: Some(8),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn manual_refresh_swaps_generation_and_updates_state() {
+        let (path, _) = corpus_with_names(31, 60);
+        let pcfg = tiny_pipeline();
+        let backend = Backend::native();
+        let table = ObjectTable::open(&path, DEFAULT_CACHE_BUDGET).unwrap();
+        let source = TableDelta::text(&table, &Levenshtein).unwrap();
+        let r = embed_corpus(&source, &pcfg, &backend).unwrap();
+        drop(table);
+
+        let landmark_objs: Vec<String> = {
+            let t = ObjectTable::open(&path, DEFAULT_CACHE_BUDGET).unwrap();
+            t.text_rows(&r.landmark_idx)
+        };
+        let server = ServerBuilder::strings(
+            landmark_objs,
+            Arc::new(Levenshtein),
+            Arc::clone(&r.factory),
+        )
+        .batcher(BatcherConfig { replicas: 1, ..Default::default() })
+        .build()
+        .unwrap();
+        let h = server.handle();
+        let ctl = RefreshController::start(
+            h.clone(),
+            path.clone(),
+            pcfg,
+            backend,
+            r.landmark_idx.clone(),
+            r.landmark_config.clone(),
+            RefreshConfig {
+                poll: Duration::from_secs(3600), // manual control only
+                ..Default::default()
+            },
+        )
+        .unwrap();
+
+        // route some traffic so the ingest buffer has content
+        for i in 0..10 {
+            h.submit(Request::object(format!("fresh query {i}")))
+                .recv()
+                .unwrap();
+        }
+        let report = ctl.run_once().unwrap();
+        assert_eq!(report.generation, 1);
+        assert_eq!(h.generation(), 1);
+        assert!(report.ingested > 0, "buffered queries must be ingested");
+        assert!(report.landmark_stress.is_finite());
+        assert!(
+            report.align_rmsd.is_finite(),
+            "full overlap must produce a real alignment"
+        );
+        let snap = h.metrics.snapshot();
+        assert_eq!(snap.refreshes, 1);
+        assert_eq!(snap.generation, 1);
+
+        // the corpus grew by exactly the ingested queries and stays valid
+        let t = ObjectTable::open(&path, DEFAULT_CACHE_BUDGET).unwrap();
+        assert_eq!(t.len(), 60 + report.ingested);
+
+        // post-swap serving still works
+        let q = h.submit(Request::object("post refresh query")).recv().unwrap();
+        assert!(q.coords.iter().all(|c| c.is_finite()));
+
+        ctl.stop();
+        drop(h);
+        server.shutdown();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn refresh_rejects_nn_backend() {
+        let (path, _) = corpus_with_names(32, 30);
+        let pcfg = tiny_pipeline();
+        let backend = Backend::native();
+        let table = ObjectTable::open(&path, DEFAULT_CACHE_BUDGET).unwrap();
+        let source = TableDelta::text(&table, &Levenshtein).unwrap();
+        let r = embed_corpus(&source, &pcfg, &backend).unwrap();
+        let landmark_objs = table.text_rows(&r.landmark_idx);
+        drop(table);
+        let server = ServerBuilder::strings(
+            landmark_objs,
+            Arc::new(Levenshtein),
+            Arc::clone(&r.factory),
+        )
+        .build()
+        .unwrap();
+        let res = RefreshController::start(
+            server.handle(),
+            path.clone(),
+            PipelineConfig { backend: OseBackend::Nn, ..tiny_pipeline() },
+            backend,
+            r.landmark_idx.clone(),
+            r.landmark_config.clone(),
+            RefreshConfig::default(),
+        );
+        assert!(res.is_err(), "nn backend must be rejected");
+        server.shutdown();
+        std::fs::remove_file(&path).ok();
+    }
+}

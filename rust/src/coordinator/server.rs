@@ -44,7 +44,7 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -211,27 +211,80 @@ pub(crate) struct WorkItem {
     pub(crate) reply: ReplySink,
 }
 
+/// Callback the refresh controller installs on the query path: every raw
+/// [`Request::Object`] submission is offered to it (before the frontend
+/// computes distances), which is how recent queries end up in the ingest
+/// buffer a refresh appends to the corpus.
+pub(crate) type IngestTap<T> = Arc<dyn Fn(&T) + Send + Sync>;
+
+/// One serving generation: the landmark objects queries are measured
+/// against, the dispatch queue feeding that generation's executor
+/// replicas, and the generation tag. A hot refresh builds a successor
+/// and swaps it in under the core's engine lock; dropping the old `tx`
+/// here is exactly what lets the retired executors drain and exit.
+struct Engine<T: ?Sized> {
+    landmarks: Arc<Vec<Box<T>>>,
+    tx: SyncSender<WorkItem>,
+    generation: u64,
+}
+
+/// State shared by every handle clone (and the [`Server`] itself): the
+/// current [`Engine`], the executor threads of the live generation, and
+/// everything needed to spawn a successor generation at swap time.
+struct ServerCore<T: ?Sized + Send + Sync + 'static> {
+    engine: RwLock<Engine<T>>,
+    metric: Arc<dyn Dissimilarity<T> + Send + Sync>,
+    pool: Arc<WorkerPool>,
+    metrics: Arc<Metrics>,
+    batcher: BatcherConfig,
+    /// Drift-monitor settings carried across generations (each swap arms
+    /// a FRESH monitor that recalibrates on post-swap traffic).
+    drift_cfg: Option<DriftConfig>,
+    /// Executor join handles of the live generation; a swap replaces the
+    /// set and joins the retired one (measuring the drain).
+    executors: Mutex<Vec<JoinHandle<()>>>,
+    ingest: RwLock<Option<IngestTap<T>>>,
+}
+
+impl<T: ?Sized + Send + Sync + 'static> ServerCore<T> {
+    /// Read the live engine. Lock poisoning is tolerated (the engine is
+    /// only ever written by swap/shutdown, and a panicked writer leaves
+    /// it in a consistent state): the serving path must not panic.
+    fn engine_read(&self) -> std::sync::RwLockReadGuard<'_, Engine<T>> {
+        match self.engine.read() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    fn engine_write(&self) -> std::sync::RwLockWriteGuard<'_, Engine<T>> {
+        match self.engine.write() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+}
+
 /// The OSE serving coordinator, generic over the object domain.
 ///
-/// Shutdown semantics: the executor replicas exit when every sender into
-/// the dispatch queue is gone — i.e. when the server's own handle AND all
-/// caller-held clones have been dropped. `shutdown()`/`Drop` releases the
-/// server's handle and joins; callers must drop their clones first (or the
-/// join blocks until they do).
+/// Shutdown semantics: `shutdown()`/`Drop` disconnects the dispatch
+/// queue (late submits get [`ServeError::Shutdown`]) and joins the
+/// executors once queued and in-flight work has drained. Caller-held
+/// handle clones stay valid pointers but every submission through them
+/// fails with `Shutdown` afterwards.
 pub struct Server<T: ?Sized + Send + Sync + 'static> {
     handle: Option<ServerHandle<T>>,
-    executors: Vec<JoinHandle<()>>,
+    core: Arc<ServerCore<T>>,
     // keep the pool alive; dropped (and joined) after the executors
     _frontend: Arc<WorkerPool>,
 }
 
 /// Cheap-to-clone client handle: submits queries into the batching
-/// queue and exposes the shared [`Metrics`].
+/// queue of the current serving generation and exposes the shared
+/// [`Metrics`]. A hot refresh (`coordinator::refresh`) swaps the
+/// generation underneath all clones atomically.
 pub struct ServerHandle<T: ?Sized + Send + Sync + 'static> {
-    landmarks: Arc<Vec<Box<T>>>,
-    metric: Arc<dyn Dissimilarity<T> + Send + Sync>,
-    pool: Arc<WorkerPool>,
-    tx: SyncSender<WorkItem>,
+    core: Arc<ServerCore<T>>,
     /// Shared serving counters (live; see [`Metrics::snapshot`]).
     pub metrics: Arc<Metrics>,
 }
@@ -241,10 +294,7 @@ pub struct ServerHandle<T: ?Sized + Send + Sync + 'static> {
 impl<T: ?Sized + Send + Sync + 'static> Clone for ServerHandle<T> {
     fn clone(&self) -> Self {
         Self {
-            landmarks: Arc::clone(&self.landmarks),
-            metric: Arc::clone(&self.metric),
-            pool: Arc::clone(&self.pool),
-            tx: self.tx.clone(),
+            core: Arc::clone(&self.core),
             metrics: Arc::clone(&self.metrics),
         }
     }
@@ -358,50 +408,76 @@ impl<T: ?Sized + Send + Sync + 'static> ServerBuilder<T> {
         }
         let cfg = self.batcher;
         let metrics = Arc::new(Metrics::new());
-        let replicas = cfg.replicas.max(1);
-        metrics.set_replicas(replicas);
-        let (tx, rx) = std::sync::mpsc::sync_channel::<WorkItem>(cfg.queue_cap.max(1));
-        let rx = Arc::new(Mutex::new(rx));
+        metrics.set_replicas(cfg.replicas.max(1));
         let pool = Arc::new(WorkerPool::new(cfg.frontend_threads));
+        let drift_cfg = self.drift.as_ref().map(|h| h.cfg.clone());
         let drift = self.drift.map(|h| Arc::new(DriftState::from_hook(h)));
-        let factory = self.factory;
 
-        let mut first = Some(probe);
-        let mut executors = Vec::with_capacity(replicas);
-        for i in 0..replicas {
-            let method = first.take().unwrap_or_else(|| factory.build());
-            let rx = Arc::clone(&rx);
-            let factory = Arc::clone(&factory);
-            let metrics = Arc::clone(&metrics);
-            let drift = drift.clone();
-            let ecfg = cfg.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("ose-exec-{i}"))
-                .spawn(move || {
-                    executor_loop(
-                        &rx,
-                        method,
-                        factory.as_ref(),
-                        &ecfg,
-                        &metrics,
-                        drift.as_deref(),
-                    )
-                })
-                .map_err(|e| ServeError::Internal {
-                    reason: format!("spawning executor replica {i}: {e}"),
-                })?;
-            executors.push(handle);
-        }
+        let (tx, executors) =
+            spawn_generation(Arc::clone(&self.factory), Some(probe), &cfg, &metrics, drift, 0)?;
 
-        let handle = ServerHandle {
-            landmarks: Arc::new(self.landmarks),
+        let core = Arc::new(ServerCore {
+            engine: RwLock::new(Engine {
+                landmarks: Arc::new(self.landmarks),
+                tx,
+                generation: 0,
+            }),
             metric: self.metric,
             pool: Arc::clone(&pool),
-            tx,
-            metrics,
-        };
-        Ok(Server { handle: Some(handle), executors, _frontend: pool })
+            metrics: Arc::clone(&metrics),
+            batcher: cfg,
+            drift_cfg,
+            executors: Mutex::new(executors),
+            ingest: RwLock::new(None),
+        });
+        let handle = ServerHandle { core: Arc::clone(&core), metrics };
+        Ok(Server { handle: Some(handle), core, _frontend: pool })
     }
+}
+
+/// Spawn one generation's executor replica pool: a fresh bounded
+/// dispatch queue plus `cfg.replicas` threads running [`executor_loop`].
+/// The first replica reuses `first` (the builder's validation probe, or
+/// the refresh controller's); the rest are built from the factory. The
+/// replicas exit once every clone of the returned sender is gone —
+/// which is exactly how a generation swap retires them.
+fn spawn_generation(
+    factory: Arc<dyn OseMethodFactory>,
+    mut first: Option<Box<dyn OseMethod>>,
+    cfg: &BatcherConfig,
+    metrics: &Arc<Metrics>,
+    drift: Option<Arc<DriftState>>,
+    generation: u64,
+) -> Result<(SyncSender<WorkItem>, Vec<JoinHandle<()>>), ServeError> {
+    let replicas = cfg.replicas.max(1);
+    let (tx, rx) = std::sync::mpsc::sync_channel::<WorkItem>(cfg.queue_cap.max(1));
+    let rx = Arc::new(Mutex::new(rx));
+    let mut executors = Vec::with_capacity(replicas);
+    for i in 0..replicas {
+        let method = first.take().unwrap_or_else(|| factory.build());
+        let rx = Arc::clone(&rx);
+        let factory = Arc::clone(&factory);
+        let metrics = Arc::clone(metrics);
+        let drift = drift.clone();
+        let ecfg = cfg.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("ose-exec-g{generation}-{i}"))
+            .spawn(move || {
+                executor_loop(
+                    &rx,
+                    method,
+                    factory.as_ref(),
+                    &ecfg,
+                    &metrics,
+                    drift.as_deref(),
+                )
+            })
+            .map_err(|e| ServeError::Internal {
+                reason: format!("spawning executor replica {i}: {e}"),
+            })?;
+        executors.push(handle);
+    }
+    Ok((tx, executors))
 }
 
 impl Server<str> {
@@ -470,16 +546,29 @@ impl<T: ?Sized + Send + Sync + 'static> Server<T> {
         self.handle.clone().expect("server already shut down")
     }
 
-    /// Graceful shutdown: waits for in-flight work to drain. All caller
-    /// handles must be dropped first, or this blocks until they are.
+    /// Graceful shutdown: disconnects the dispatch queue (late submits
+    /// get [`ServeError::Shutdown`]) and waits for queued and in-flight
+    /// work to drain.
     pub fn shutdown(mut self) {
         self.join_inner();
     }
 
     fn join_inner(&mut self) {
-        // Release our sender; the executors exit once all handles are gone.
         self.handle.take();
-        for h in self.executors.drain(..) {
+        // Swap the live sender for one whose receiver is already gone:
+        // the executors drain the queue and exit, and any submission
+        // racing the shutdown fails cleanly with Shutdown instead of
+        // blocking on a queue nobody serves.
+        let (dead_tx, _) = std::sync::mpsc::sync_channel::<WorkItem>(1);
+        self.core.engine_write().tx = dead_tx;
+        let handles: Vec<JoinHandle<()>> = {
+            let mut ex = match self.core.executors.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            ex.drain(..).collect()
+        };
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -697,26 +786,34 @@ impl<T: ?Sized + Send + Sync + 'static> ServerHandle<T> {
     /// have a single error surface.
     pub fn submit_sink(&self, req: Request<T>, sink: ReplySink) {
         self.metrics.record_request();
+        // Pin the current generation for this request: the landmark set
+        // and the queue sender are read together under the engine lock,
+        // so a concurrent swap can never mix one generation's distances
+        // with the other's executors.
+        let (landmarks, tx) = {
+            let engine = self.core.engine_read();
+            (Arc::clone(&engine.landmarks), engine.tx.clone())
+        };
         match req {
             Request::Delta(delta) => {
-                if delta.len() != self.landmarks.len() {
+                if delta.len() != landmarks.len() {
                     self.metrics.record_failed();
                     let reason = format!(
                         "delta row has {} entries, expected {} (one per landmark)",
                         delta.len(),
-                        self.landmarks.len()
+                        landmarks.len()
                     );
                     sink(Err(ServeError::BadInput { reason }));
                     return;
                 }
                 let item = WorkItem { delta, started: Instant::now(), reply: sink };
-                match self.tx.try_send(item) {
+                match tx.try_send(item) {
                     Ok(()) => {}
                     Err(TrySendError::Full(item)) => {
                         // blocking fallback under overload; the executors
                         // can still vanish mid-wait, so the disconnect path
                         // mirrors below
-                        if let Err(e) = self.tx.send(item) {
+                        if let Err(e) = tx.send(item) {
                             let WorkItem { reply, .. } = e.0;
                             self.metrics.record_failed();
                             reply(Err(ServeError::Shutdown));
@@ -729,12 +826,22 @@ impl<T: ?Sized + Send + Sync + 'static> ServerHandle<T> {
                 }
             }
             Request::Object(obj) => {
-                let landmarks = Arc::clone(&self.landmarks);
-                let metric = Arc::clone(&self.metric);
-                let tx = self.tx.clone();
+                // Offer the raw object to the refresh controller's
+                // ingest tap (cheap clone into a bounded buffer) before
+                // it moves into the frontend closure.
+                {
+                    let tap = match self.core.ingest.read() {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                    if let Some(t) = tap.as_ref() {
+                        t(&obj);
+                    }
+                }
+                let metric = Arc::clone(&self.core.metric);
                 let metrics = Arc::clone(&self.metrics);
                 let started = Instant::now();
-                self.pool.submit(move || {
+                self.core.pool.submit(move || {
                     let t0 = Instant::now();
                     let delta: Vec<f32> = landmarks
                         .iter()
@@ -769,12 +876,12 @@ impl<T: ?Sized + Send + Sync + 'static> ServerHandle<T> {
         &self,
         delta: Vec<f32>,
     ) -> Result<Receiver<Result<QueryResult, ServeError>>, ServeError> {
-        if delta.len() != self.landmarks.len() {
+        let expect = self.landmark_objects().len();
+        if delta.len() != expect {
             return Err(ServeError::BadInput {
                 reason: format!(
-                    "delta row has {} entries, expected {} (one per landmark)",
+                    "delta row has {} entries, expected {expect} (one per landmark)",
                     delta.len(),
-                    self.landmarks.len()
                 ),
             });
         }
@@ -787,9 +894,117 @@ impl<T: ?Sized + Send + Sync + 'static> ServerHandle<T> {
         self.submit(Request::object(obj)).recv()
     }
 
-    /// The landmark objects this server measures queries against.
-    pub fn landmark_objects(&self) -> &[Box<T>] {
-        &self.landmarks
+    /// The landmark objects of the CURRENT serving generation. The
+    /// returned `Arc` is a stable snapshot: a concurrent refresh swap
+    /// never mutates it, it installs a successor set.
+    pub fn landmark_objects(&self) -> Arc<Vec<Box<T>>> {
+        Arc::clone(&self.core.engine_read().landmarks)
+    }
+
+    /// Generation tag of the engine currently serving: 0 at build, +1
+    /// per successful [`swap_generation`](Self::swap_generation).
+    pub fn generation(&self) -> u64 {
+        self.core.engine_read().generation
+    }
+
+    /// The dissimilarity metric the frontend measures queries with
+    /// (shared with the refresh controller, which evaluates the same
+    /// metric at the storage layer when re-solving the base).
+    pub(crate) fn metric(&self) -> Arc<dyn Dissimilarity<T> + Send + Sync> {
+        Arc::clone(&self.core.metric)
+    }
+
+    /// Install (or clear) the refresh controller's ingest tap on the
+    /// object-query path.
+    pub(crate) fn set_ingest_tap(&self, tap: Option<IngestTap<T>>) {
+        let mut slot = match self.core.ingest.write() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        *slot = tap;
+    }
+
+    /// Atomically replace the serving generation: spawn a fresh executor
+    /// pool from `factory`, install `landmarks` plus the new dispatch
+    /// queue under the engine write lock, then join the retired
+    /// executors. The retired pool drains its queued work before
+    /// exiting, so every in-flight query completes on the generation it
+    /// was submitted against — never a mixed one — and no submission
+    /// window exists in which requests fail. When the server was built
+    /// with a drift hook and `landmark_config` is provided, the new
+    /// generation gets a FRESH monitor (same [`DriftConfig`]) that
+    /// recalibrates on post-swap traffic.
+    ///
+    /// Returns the new generation tag and the measured drain time of the
+    /// retired executors. The refresh controller is the only caller and
+    /// serialises swaps.
+    pub(crate) fn swap_generation(
+        &self,
+        landmarks: Vec<Box<T>>,
+        factory: Arc<dyn OseMethodFactory>,
+        landmark_config: Option<Matrix>,
+    ) -> Result<(u64, Duration), ServeError> {
+        let probe = factory.build();
+        if landmarks.len() != probe.landmarks() {
+            return Err(ServeError::BadInput {
+                reason: format!(
+                    "swap offers {} landmarks but the OSE method expects {}",
+                    landmarks.len(),
+                    probe.landmarks()
+                ),
+            });
+        }
+        let drift = match (&self.core.drift_cfg, landmark_config) {
+            (Some(cfg), Some(config)) => {
+                if (config.rows, config.cols) != (probe.landmarks(), probe.dim()) {
+                    return Err(ServeError::BadInput {
+                        reason: format!(
+                            "swap landmark configuration is {}x{}, expected {}x{}",
+                            config.rows,
+                            config.cols,
+                            probe.landmarks(),
+                            probe.dim()
+                        ),
+                    });
+                }
+                Some(Arc::new(DriftState::from_hook(DriftHook {
+                    landmark_config: config,
+                    cfg: cfg.clone(),
+                })))
+            }
+            _ => None,
+        };
+        let generation = self.core.engine_read().generation + 1;
+        let (tx, new_execs) = spawn_generation(
+            factory,
+            Some(probe),
+            &self.core.batcher,
+            &self.core.metrics,
+            drift,
+            generation,
+        )?;
+        {
+            let mut engine = self.core.engine_write();
+            engine.landmarks = Arc::new(landmarks);
+            engine.tx = tx;
+            engine.generation = generation;
+            // the old tx drops here: the retired executors drain and exit
+        }
+        let old = {
+            let mut ex = match self.core.executors.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            std::mem::replace(&mut *ex, new_execs)
+        };
+        let t0 = Instant::now();
+        for h in old {
+            let _ = h.join();
+        }
+        let drain = t0.elapsed();
+        self.metrics.set_generation(generation);
+        self.metrics.record_swap_drain(drain);
+        Ok((generation, drain))
     }
 }
 
@@ -1008,6 +1223,51 @@ mod tests {
         let rx = h.query_delta(vec![1.0; 16]).unwrap();
         assert!(rx.recv().unwrap().is_ok());
         assert!(h.query_sync("legacy sync").is_ok());
+        drop(h);
+        server.shutdown();
+    }
+
+    #[test]
+    fn generation_swap_keeps_serving_and_drains_cleanly() {
+        let server = tiny_server(8, 2, 2);
+        let h = server.handle();
+        let r = h.submit(Request::object("pre-swap query")).recv().unwrap();
+        assert_eq!(r.coords.len(), 3);
+        assert_eq!(h.generation(), 0);
+
+        let swapped: Vec<Box<str>> = (0..16)
+            .map(|i| format!("swapped{i:02}").into_boxed_str())
+            .collect();
+        let (gen, drain) = h
+            .swap_generation(swapped, tiny_factory(), None)
+            .expect("healthy swap");
+        assert_eq!(gen, 1);
+        assert_eq!(h.generation(), 1);
+
+        let r = h.submit(Request::object("post-swap query")).recv().unwrap();
+        assert_eq!(r.coords.len(), 3);
+        assert!(!r.degraded, "a healthy swap must never degrade results");
+        assert_eq!(&*h.landmark_objects()[0], "swapped00");
+
+        let snap = h.metrics.snapshot();
+        assert_eq!(snap.failed, 0, "no request may fail across a swap");
+        assert_eq!(snap.generation, 1);
+        assert_eq!(snap.swap_drain_ms, drain.as_millis() as u64);
+        drop(h);
+        server.shutdown();
+    }
+
+    #[test]
+    fn generation_swap_rejects_mismatched_landmarks() {
+        let server = tiny_server(8, 2, 1);
+        let h = server.handle();
+        let wrong: Vec<Box<str>> =
+            (0..10).map(|i| format!("short{i}").into_boxed_str()).collect();
+        let r = h.swap_generation(wrong, tiny_factory(), None);
+        assert!(matches!(r, Err(ServeError::BadInput { .. })), "{r:?}");
+        assert_eq!(h.generation(), 0, "failed swap leaves the old generation");
+        let ok = h.submit(Request::object("still serving")).recv();
+        assert!(ok.is_ok(), "old generation must keep serving after a failed swap");
         drop(h);
         server.shutdown();
     }

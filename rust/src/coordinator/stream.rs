@@ -91,7 +91,17 @@ impl DriftMonitor {
     }
 
     /// Feed one query's score; returns the current status.
+    ///
+    /// Non-finite scores are dropped without touching any monitor state:
+    /// a NaN admitted into the calibration set would poison the baseline
+    /// median permanently (every later comparison against it is false,
+    /// so the monitor could never signal again), and a NaN in the window
+    /// would panic the median sort. Either way the caller just sees the
+    /// status unchanged.
     pub fn push(&mut self, score: f64) -> DriftStatus {
+        if !score.is_finite() {
+            return self.status();
+        }
         if self.baseline_median.is_none() {
             self.calibration.push(score);
             if self.calibration.len() >= self.cfg.calibration {
@@ -104,12 +114,21 @@ impl DriftMonitor {
             self.window.pop_front();
         }
         self.window.push_back(score);
+        self.status()
+    }
+
+    /// Current status without feeding a sample: `Warmup` until the
+    /// baseline is armed and the window half-full, then the window-median
+    /// vs baseline comparison.
+    pub fn status(&self) -> DriftStatus {
+        let Some(base) = self.baseline_median else {
+            return DriftStatus::Warmup;
+        };
         if self.window.len() < self.cfg.window / 2 {
             return DriftStatus::Warmup;
         }
         let recent: Vec<f64> = self.window.iter().copied().collect();
         let med = crate::util::stats::median(&recent);
-        let base = self.baseline_median.unwrap();
         if med > base * self.cfg.degrade_factor {
             DriftStatus::Drifted
         } else {
@@ -117,7 +136,11 @@ impl DriftMonitor {
         }
     }
 
-    /// Reset after a re-embedding (new landmarks => new baseline).
+    /// Reset after a re-embedding (new landmarks => new baseline). The
+    /// calibration set, baseline median and window are all discarded, so
+    /// the next `cfg.calibration` pushes re-arm the baseline from fresh
+    /// post-refresh samples — the stale pre-drift median is never
+    /// carried across a signal.
     pub fn reset(&mut self) {
         self.calibration.clear();
         self.baseline_median = None;
@@ -180,6 +203,75 @@ mod tests {
         }
         let mut rng2 = Rng::new(4);
         assert_eq!(m.push(0.3 + rng2.next_f64() * 0.02), DriftStatus::Healthy);
+    }
+
+    #[test]
+    fn signal_reset_resignal_cycle_rearms_baseline_from_fresh_samples() {
+        let mut m = DriftMonitor::new(cfg());
+        // calibrate at 0.3, then drift to 0.65 until the signal fires
+        for _ in 0..100 {
+            m.push(0.3);
+        }
+        let mut last = DriftStatus::Healthy;
+        for _ in 0..60 {
+            last = m.push(0.65);
+        }
+        assert_eq!(last, DriftStatus::Drifted);
+
+        // the refresh consumed the signal: reset re-arms from the NEW
+        // distribution, so 0.65 must now read Healthy, not Drifted —
+        // i.e. the stale 0.3 baseline is gone
+        m.reset();
+        assert_eq!(m.baseline(), None);
+        for _ in 0..100 {
+            m.push(0.65);
+        }
+        assert!(
+            (m.baseline().unwrap() - 0.65).abs() < 1e-12,
+            "baseline must re-arm from post-reset samples, got {:?}",
+            m.baseline()
+        );
+        assert_eq!(m.status(), DriftStatus::Healthy);
+
+        // a second drift on top of the re-armed baseline signals again
+        let mut last = DriftStatus::Healthy;
+        for _ in 0..60 {
+            last = m.push(1.3);
+        }
+        assert_eq!(last, DriftStatus::Drifted, "second cycle must re-signal");
+    }
+
+    #[test]
+    fn non_finite_scores_are_ignored_during_calibration() {
+        let mut m = DriftMonitor::new(cfg());
+        // NaN/inf interleaved with real samples must not enter the
+        // calibration set (a NaN baseline would disarm the monitor
+        // forever: every median-vs-baseline comparison would be false)
+        for _ in 0..50 {
+            m.push(f64::NAN);
+            m.push(f64::INFINITY);
+            m.push(0.3);
+        }
+        assert!((m.baseline().unwrap() - 0.3).abs() < 1e-12);
+        for _ in 0..60 {
+            m.push(0.65);
+        }
+        assert_eq!(m.status(), DriftStatus::Drifted);
+    }
+
+    #[test]
+    fn non_finite_scores_are_ignored_in_the_window() {
+        let mut m = DriftMonitor::new(cfg());
+        for _ in 0..100 {
+            m.push(0.3);
+        }
+        assert_eq!(m.status(), DriftStatus::Healthy);
+        // a burst of NaNs must neither panic the median sort nor change
+        // the reported status
+        for _ in 0..200 {
+            assert_eq!(m.push(f64::NAN), DriftStatus::Healthy);
+        }
+        assert_eq!(m.push(0.3), DriftStatus::Healthy);
     }
 
     #[test]

@@ -32,7 +32,7 @@
 //! O(1) for vectors — never the payload itself.
 
 use std::fs::File;
-use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
@@ -207,6 +207,86 @@ impl CorpusWriter {
         })
     }
 
+    /// Reopen a *finished* corpus at `path` for appending — the refresh
+    /// loop's ingest path. The header is parsed and validated, existing
+    /// records are preserved, and new records continue after the current
+    /// payload (for text, overwriting the old offset index, which
+    /// [`finish`](CorpusWriter::finish) rewrites past the grown payload).
+    ///
+    /// Crash safety mirrors [`create`](CorpusWriter::create_text): the
+    /// header is re-set to the `count = 0` placeholder while the writer
+    /// is open, so a writer dropped mid-append leaves a file readers
+    /// treat as empty rather than one whose stale index points into
+    /// overwritten bytes. `finish` must be called again to make the file
+    /// valid; reopening and finishing with no records appended rewrites
+    /// a byte-identical file.
+    pub fn append(path: &Path) -> Result<CorpusWriter> {
+        let mut file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("reopening corpus {path:?}"))?;
+        let file_len = file.metadata().context("stat corpus")?.len();
+        let mut head = [0u8; HEADER_LEN as usize];
+        file.read_exact(&mut head)
+            .with_context(|| format!("reading corpus header of {path:?}"))?;
+        let h = Header::parse(&head)?;
+        anyhow::ensure!(
+            h.payload_off == HEADER_LEN,
+            "cannot append to corpus {path:?}: non-standard payload offset {}",
+            h.payload_off
+        );
+        let (payload_bytes, offsets) = match h.kind {
+            CorpusKind::VecF32 => {
+                let payload = h.count * h.dim * 4;
+                let need = h.payload_off + payload;
+                anyhow::ensure!(
+                    file_len >= need,
+                    "corpus {path:?} is truncated: {file_len} bytes, layout needs {need}"
+                );
+                (payload, Vec::new())
+            }
+            CorpusKind::Text => {
+                let need = h.index_off + 8 * (h.count + 1);
+                anyhow::ensure!(
+                    file_len >= need,
+                    "corpus {path:?} is truncated: {file_len} bytes, layout needs {need}"
+                );
+                // Recover the per-record offsets; the end sentinel is
+                // dropped (push_text re-derives it from payload_bytes).
+                file.seek(SeekFrom::Start(h.index_off))?;
+                let mut idx = vec![0u8; 8 * (h.count as usize + 1)];
+                file.read_exact(&mut idx).context("reading corpus text index")?;
+                let offs: Vec<u64> = idx
+                    .chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let payload = *offs.last().unwrap_or(&0);
+                (payload, offs[..h.count as usize].to_vec())
+            }
+        };
+        // Placeholder header for the duration of the append (see above).
+        let placeholder = Header {
+            kind: h.kind,
+            count: 0,
+            dim: h.dim,
+            payload_off: HEADER_LEN,
+            index_off: 0,
+        };
+        file.seek(SeekFrom::Start(0))?;
+        file.write_all(&placeholder.to_bytes()).context("arming corpus append header")?;
+        file.seek(SeekFrom::Start(h.payload_off + payload_bytes))?;
+        Ok(CorpusWriter {
+            out: BufWriter::new(file),
+            path: path.to_path_buf(),
+            kind: h.kind,
+            dim: h.dim as usize,
+            count: h.count,
+            payload_bytes,
+            offsets,
+        })
+    }
+
     /// Records appended so far.
     pub fn count(&self) -> u64 {
         self.count
@@ -367,5 +447,111 @@ mod tests {
         assert_eq!([off(0), off(1), off(2), off(3)], [0, 2, 2, 5]);
         assert_eq!(&bytes[64..69], b"abxyz");
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn text_append_round_trips_across_reopens() {
+        let p = tmp("txt_append");
+        let mut w = CorpusWriter::create_text(&p).unwrap();
+        w.push_text("alpha").unwrap();
+        w.push_text("").unwrap();
+        w.finish().unwrap();
+
+        // reopen-finish-reopen: two append generations
+        let mut w = CorpusWriter::append(&p).unwrap();
+        assert_eq!(w.count(), 2);
+        w.push_text("beta").unwrap();
+        let s = w.finish().unwrap();
+        assert_eq!(s.count, 3);
+        let mut w = CorpusWriter::append(&p).unwrap();
+        w.push_text("gamma-longer-record").unwrap();
+        w.push_text("d").unwrap();
+        let s = w.finish().unwrap();
+        assert_eq!(s.count, 5);
+
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(bytes.len() as u64, s.bytes);
+        let h = Header::parse(&bytes).unwrap();
+        assert_eq!(h.count, 5);
+        let payload = &bytes[HEADER_LEN as usize..h.index_off as usize];
+        assert_eq!(payload, b"alphabetagamma-longer-recordd");
+        let off = |i: usize| {
+            u64::from_le_bytes(
+                bytes[h.index_off as usize + 8 * i..h.index_off as usize + 8 * i + 8]
+                    .try_into()
+                    .unwrap(),
+            )
+        };
+        assert_eq!(
+            [off(0), off(1), off(2), off(3), off(4), off(5)],
+            [0, 5, 5, 9, 28, 29]
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn vector_append_round_trips_across_reopens() {
+        let p = tmp("vec_append");
+        let mut w = CorpusWriter::create_vectors(&p, 2).unwrap();
+        w.push_vector(&[1.0, 2.0]).unwrap();
+        w.finish().unwrap();
+        let mut w = CorpusWriter::append(&p).unwrap();
+        assert_eq!(w.count(), 1);
+        w.push_vector(&[3.0, 4.0]).unwrap();
+        let s = w.finish().unwrap();
+        assert_eq!(s.count, 2);
+        let bytes = std::fs::read(&p).unwrap();
+        let h = Header::parse(&bytes).unwrap();
+        assert_eq!((h.count, h.dim), (2, 2));
+        let f = f32::from_le_bytes(bytes[64 + 12..64 + 16].try_into().unwrap());
+        assert_eq!(f, 4.0);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn append_header_patch_is_idempotent() {
+        // reopening a finished corpus and finishing without appending
+        // anything must rewrite a byte-identical file
+        let p = tmp("txt_idem");
+        let mut w = CorpusWriter::create_text(&p).unwrap();
+        w.push_text("one").unwrap();
+        w.push_text("two-longer").unwrap();
+        w.finish().unwrap();
+        let before = std::fs::read(&p).unwrap();
+        CorpusWriter::append(&p).unwrap().finish().unwrap();
+        let after = std::fs::read(&p).unwrap();
+        assert_eq!(before, after);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn append_dropped_without_finish_leaves_empty_readable_file() {
+        let p = tmp("txt_drop");
+        let mut w = CorpusWriter::create_text(&p).unwrap();
+        w.push_text("seed-record").unwrap();
+        w.finish().unwrap();
+        {
+            let mut w = CorpusWriter::append(&p).unwrap();
+            w.push_text("lost-on-drop").unwrap();
+            // dropped without finish
+        }
+        let bytes = std::fs::read(&p).unwrap();
+        let h = Header::parse(&bytes).unwrap();
+        assert_eq!(h.count, 0, "torn append must read as empty, not corrupt");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn append_rejects_unfinished_and_missing_files() {
+        let p = tmp("txt_badappend");
+        {
+            let mut w = CorpusWriter::create_text(&p).unwrap();
+            w.push_text("never finished").unwrap();
+            // dropped: placeholder header has index_off = 0, which the
+            // text-kind header validation rejects at reopen
+        }
+        assert!(CorpusWriter::append(&p).is_err());
+        std::fs::remove_file(&p).ok();
+        assert!(CorpusWriter::append(&p).is_err(), "missing file");
     }
 }

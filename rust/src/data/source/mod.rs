@@ -29,7 +29,7 @@ pub mod table;
 
 pub use cache::{BlockCache, CacheStats};
 pub use format::{CorpusKind, CorpusSummary, CorpusWriter, Header};
-pub use table::{mmap_supported, ObjectTable, DEFAULT_CACHE_BUDGET};
+pub use table::{mmap_supported, CorpusTruncated, ObjectTable, DEFAULT_CACHE_BUDGET};
 
 use anyhow::Result;
 

@@ -19,7 +19,7 @@
 //! whose `dist` has no error channel by design.
 
 use std::fs::File;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
@@ -183,6 +183,34 @@ pub fn mmap_supported() -> bool {
     cfg!(all(unix, target_pointer_width = "64"))
 }
 
+/// Typed open-time failure: the file is shorter than the layout its
+/// header describes — a torn or truncated write (e.g. a crash mid-way
+/// through a [`super::format::CorpusWriter`] append). Every `open*`
+/// path returns it inside the [`anyhow::Error`] chain, so callers that
+/// need to distinguish torn writes from other I/O failures can
+/// `err.downcast_ref::<CorpusTruncated>()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CorpusTruncated {
+    /// The offending corpus file.
+    pub path: PathBuf,
+    /// Actual file length in bytes.
+    pub file_len: u64,
+    /// Minimum length the header's layout requires.
+    pub need: u64,
+}
+
+impl std::fmt::Display for CorpusTruncated {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "corpus {:?} is truncated: {} bytes, layout needs {}",
+            self.path, self.file_len, self.need
+        )
+    }
+}
+
+impl std::error::Error for CorpusTruncated {}
+
 /// An open corpus file: O(1) random row access over data that never
 /// fully materialises in the process heap. See the module docs for the
 /// storage backends and [`super::format`] for the byte layout.
@@ -269,10 +297,14 @@ impl ObjectTable {
             CorpusKind::VecF32 => h.payload_off + h.count * h.dim * 4,
             CorpusKind::Text => h.index_off + 8 * (h.count + 1),
         };
-        anyhow::ensure!(
-            file_len >= need,
-            "corpus {path:?} is truncated: {file_len} bytes, layout needs {need}"
-        );
+        if file_len < need {
+            return Err(CorpusTruncated {
+                path: path.to_path_buf(),
+                file_len,
+                need,
+            }
+            .into());
+        }
         Ok(())
     }
 
@@ -598,6 +630,29 @@ mod tests {
         assert!(ObjectTable::open_pread(&p, 1 << 20).is_err());
         #[cfg(all(unix, target_pointer_width = "64"))]
         assert!(ObjectTable::open_mmap(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn torn_write_surfaces_typed_error_on_all_backends() {
+        // a tail record torn off a text corpus (crash mid-write) must be
+        // detected at open with the typed CorpusTruncated error — not a
+        // panic, and not a generic string error
+        let p = tmp("torn");
+        write_text_corpus(&p, 40);
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 6]).unwrap();
+        let mut errs = vec![ObjectTable::open_pread(&p, 1 << 20).unwrap_err()];
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        errs.push(ObjectTable::open_mmap(&p).unwrap_err());
+        for e in errs {
+            let t = e
+                .downcast_ref::<CorpusTruncated>()
+                .expect("torn write must yield CorpusTruncated");
+            assert_eq!(t.path, p);
+            assert_eq!(t.file_len, full.len() as u64 - 6);
+            assert_eq!(t.need, full.len() as u64);
+        }
         std::fs::remove_file(&p).ok();
     }
 

@@ -18,7 +18,8 @@ use anyhow::{Context, Result};
 
 use lmds_ose::coordinator::{
     embed_corpus, embed_dataset, BatcherConfig, DriftHook, Frame, NetServer,
-    PipelineResult, QueryService, RunConfig, Server, ServerBuilder, ShardedServer,
+    OseBackend, PipelineResult, QueryService, RefreshController, RunConfig, Server,
+    ServerBuilder, ShardedServer,
 };
 use lmds_ose::data::source::{CorpusKind, CorpusWriter, ObjectTable, TableDelta};
 use lmds_ose::data::{Geco, GecoConfig};
@@ -511,6 +512,24 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "front door: in-flight query cap before load shedding",
         None,
     ));
+    specs.push(OptSpec {
+        name: "refresh",
+        help: "close the streaming loop: buffer recent queries and hot \
+               re-embed the landmark base when the drift monitor fires \
+               (needs --drift-window > 0, the opt backend and --shards 1)",
+        takes_value: false,
+        default: None,
+    });
+    specs.push(opt(
+        "refresh-cooldown",
+        "minimum milliseconds between two drift-triggered refreshes",
+        None,
+    ));
+    specs.push(opt(
+        "ingest-buffer",
+        "recent-query buffer capacity feeding refresh ingestion (min 1)",
+        None,
+    ));
     let args = Args::parse(argv, &specs)?;
     if args.flag("help") {
         print!("{}", usage("serve", "Streaming OSE service + query workload", &specs));
@@ -557,22 +576,31 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         Flat(Server<str>),
         Sharded(ShardedServer<str>),
     }
-    let (serving, service): (Serving, Arc<dyn QueryService>) = if cfg.shards > 1 {
+    let (serving, service, flat_handle): (
+        Serving,
+        Arc<dyn QueryService>,
+        Option<lmds_ose::coordinator::ServerHandle<str>>,
+    ) = if cfg.shards > 1 {
         let s = builder
             .shards(cfg.shard())
             .build_sharded()
             .map_err(|e| anyhow::anyhow!("starting sharded server: {e}"))?;
         let h = s.handle();
         log::info!("sharded serving: {} shards", h.shards());
-        (Serving::Sharded(s), Arc::new(h))
+        (Serving::Sharded(s), Arc::new(h), None)
     } else {
         let s = builder
             .build()
             .map_err(|e| anyhow::anyhow!("starting server: {e}"))?;
         let h = s.handle();
-        (Serving::Flat(s), Arc::new(h))
+        (Serving::Flat(s), Arc::new(h.clone()), Some(h))
     };
     let metrics = service.metrics();
+
+    // drift-triggered hot refresh: buffer live queries, re-solve the
+    // landmark base in a shadow generation and swap it in when the
+    // drift monitor fires
+    let refresher = start_refresher(&cfg, flat_handle, &result, &backend, &names)?;
 
     // synthetic query workload (corrupted copies of known names = realistic
     // near-duplicate queries), in-process or over real loopback sockets
@@ -593,12 +621,86 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let snap = metrics.snapshot();
     println!("workload done in {wall:.2}s  ({:.0} queries/s)", snap.completed as f64 / wall);
     println!("  {}", snap.report());
+    if let Some((ctl, ingest_corpus)) = refresher {
+        if let Some(r) = ctl.last_report() {
+            println!(
+                "  refresh: now generation {} ({} queries ingested, landmark \
+                 stress {:.4}, drain {}ms)",
+                r.generation,
+                r.ingested,
+                r.landmark_stress,
+                r.swap_drain.as_millis()
+            );
+        }
+        ctl.stop();
+        let _ = std::fs::remove_file(&ingest_corpus);
+    }
     drop(service);
     match serving {
         Serving::Flat(s) => s.shutdown(),
         Serving::Sharded(s) => s.shutdown(),
     }
     Ok(())
+}
+
+/// Arm the drift-triggered refresh loop when `--refresh` asked for it and
+/// the topology supports it (unsharded, opt backend, drift monitor on).
+///
+/// The serve workload embeds generated names rather than an on-disk
+/// corpus, so the controller gets a temporary corpus written in the same
+/// row order — `landmark_idx` then addresses it directly, and ingested
+/// queries append behind the original rows. The temp file is removed
+/// after the controller stops.
+fn start_refresher(
+    cfg: &RunConfig,
+    handle: Option<lmds_ose::coordinator::ServerHandle<str>>,
+    result: &PipelineResult,
+    backend: &Backend,
+    names: &[String],
+) -> Result<Option<(RefreshController, std::path::PathBuf)>> {
+    let Some(rcfg) = cfg.refresh_cfg() else {
+        if cfg.refresh {
+            log::warn!(
+                "--refresh needs the drift monitor; pass --drift-window > 0"
+            );
+        }
+        return Ok(None);
+    };
+    let Some(handle) = handle else {
+        log::warn!("--refresh supports unsharded serving only; pass --shards 1");
+        return Ok(None);
+    };
+    if cfg.backend != OseBackend::Opt {
+        log::warn!(
+            "--refresh supports the opt OSE backend only (nn needs a retrain)"
+        );
+        return Ok(None);
+    }
+    let path = std::env::temp_dir()
+        .join(format!("lmds-serve-ingest-{}.corpus", std::process::id()));
+    let mut w = CorpusWriter::create_text(&path)
+        .context("writing the refresh ingest corpus")?;
+    for name in names {
+        w.push_text(name)?;
+    }
+    w.finish()?;
+    let ctl = RefreshController::start(
+        handle,
+        path.clone(),
+        cfg.pipeline(),
+        backend.clone(),
+        result.landmark_idx.clone(),
+        result.landmark_config.clone(),
+        rcfg.clone(),
+    )
+    .context("starting the refresh controller")?;
+    log::info!(
+        "refresh armed: cooldown {}ms, ingest buffer {} (corpus {})",
+        rcfg.cooldown.as_millis(),
+        rcfg.ingest_buffer,
+        path.display()
+    );
+    Ok(Some((ctl, path)))
 }
 
 /// In-process serve workload: pipelined submissions straight into the

@@ -1,0 +1,382 @@
+//! Chaos/soak: the drift-triggered refresh loop, end to end.
+//!
+//! The suite drives a live server through the full closed loop — calibrate
+//! on in-distribution traffic, inject an out-of-distribution query storm,
+//! watch the drift monitor fire, the controller ingest + shadow-solve +
+//! swap — and then asserts the loop's contract:
+//!
+//! - exactly ONE refresh fires per drift episode (cooldown respected; the
+//!   fresh post-swap monitor recalibrates on the new traffic);
+//! - zero error replies and zero degraded replies across the whole soak,
+//!   including the queries in flight during the generation swap;
+//! - the warm-started shadow solve lands within 0.05 normalised stress of
+//!   a from-scratch re-solve over the same grown corpus;
+//! - a refresh killed mid-cycle (chaos hook) leaves the old generation
+//!   serving and the corpus readable, and the next attempt recovers;
+//! - serving is bit-reproducible: identical queries get bit-identical
+//!   coordinates across repeats, server restarts, and the dense
+//!   (`query_k = 0`) vs graph-assisted (`query_k >= L`) paths.
+//!
+//! Determinism: every PRNG stream derives from one seed, overridable with
+//! `LMDS_SOAK_SEED` (CI pins it). Debug builds run a smaller soak so the
+//! suite stays fast without `--release`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lmds_ose::coordinator::{
+    embed_corpus, solve_base_source, BaseSolver, BatcherConfig, DriftConfig,
+    DriftHook, OseBackend, PipelineConfig, PipelineResult, RefreshConfig,
+    RefreshController, Request, Server, ServerBuilder,
+};
+use lmds_ose::data::source::{
+    CorpusWriter, ObjectTable, TableDelta, DEFAULT_CACHE_BUDGET,
+};
+use lmds_ose::data::{Geco, GecoConfig};
+use lmds_ose::mds::{LandmarkMethod, LsmdsConfig, SubsetDelta};
+use lmds_ose::runtime::Backend;
+use lmds_ose::strdist::Levenshtein;
+
+/// Soak seed: `LMDS_SOAK_SEED` if set (CI pins it), a fixed default
+/// otherwise. Every stream in the suite derives from this.
+fn soak_seed() -> u64 {
+    std::env::var("LMDS_SOAK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40246)
+}
+
+/// Corpus size: debug builds soak a smaller corpus so `cargo test`
+/// without `--release` stays quick; CI's soak job runs the full size.
+fn soak_n() -> usize {
+    if cfg!(debug_assertions) {
+        400
+    } else {
+        1200
+    }
+}
+
+fn write_corpus(tag: &str, seed: u64, n: usize) -> (std::path::PathBuf, Vec<String>) {
+    let mut geco = Geco::new(GecoConfig { seed, ..Default::default() });
+    let names = geco.generate_unique(n);
+    let path = std::env::temp_dir().join(format!(
+        "lmds_chaos_{tag}_{seed}_{n}_{}",
+        std::process::id()
+    ));
+    let mut w = CorpusWriter::create_text(&path).unwrap();
+    for name in &names {
+        w.push_text(name).unwrap();
+    }
+    w.finish().unwrap();
+    (path, names)
+}
+
+fn soak_pipeline(seed: u64) -> PipelineConfig {
+    PipelineConfig {
+        dim: 3,
+        landmarks: 48,
+        landmark_method: LandmarkMethod::Random,
+        backend: OseBackend::Opt,
+        base_solver: BaseSolver::DivideConquer { blocks: 4, anchors: 0 },
+        lsmds: LsmdsConfig { dim: 3, max_iters: 200, ..Default::default() },
+        // fixed majorization budget: bit-reproducible replies
+        ose_steps: Some(6),
+        seed,
+        ..Default::default()
+    }
+}
+
+fn embed(path: &std::path::Path, pcfg: &PipelineConfig, backend: &Backend) -> PipelineResult {
+    let table = ObjectTable::open(path, DEFAULT_CACHE_BUDGET).unwrap();
+    let source = TableDelta::text(&table, &Levenshtein).unwrap();
+    embed_corpus(&source, pcfg, backend).unwrap()
+}
+
+fn start_server(
+    path: &std::path::Path,
+    r: &PipelineResult,
+    backend: &Backend,
+    drift: Option<DriftConfig>,
+) -> Server<str> {
+    let landmark_objs: Vec<String> = {
+        let t = ObjectTable::open(path, DEFAULT_CACHE_BUDGET).unwrap();
+        t.text_rows(&r.landmark_idx)
+    };
+    let mut b = ServerBuilder::strings(
+        landmark_objs,
+        Arc::new(Levenshtein),
+        Arc::clone(&r.factory),
+    )
+    .batcher(BatcherConfig {
+        max_delay: Duration::from_millis(1),
+        replicas: 2,
+        ..Default::default()
+    })
+    .landmark_config(r.landmark_config.clone())
+    .backend(backend.clone());
+    if let Some(cfg) = drift {
+        b = b.drift(DriftHook { landmark_config: r.landmark_config.clone(), cfg });
+    }
+    b.build().unwrap()
+}
+
+/// Submit a batch, wait for every reply, and enforce the soak-wide
+/// serving contract: no errors, no degraded replies, finite coordinates.
+fn run_batch(
+    h: &lmds_ose::coordinator::ServerHandle<str>,
+    queries: impl IntoIterator<Item = String>,
+) {
+    let tickets: Vec<_> = queries
+        .into_iter()
+        .map(|q| h.submit(Request::object(q)))
+        .collect();
+    for t in tickets {
+        let r = t.recv().expect("soak contract: zero error replies");
+        assert!(!r.degraded, "soak contract: healthy swaps never degrade");
+        assert!(r.coords.iter().all(|c| c.is_finite()));
+    }
+}
+
+fn ood_query(i: usize) -> String {
+    // a long different-alphabet string: far from every Geco landmark, so
+    // its normalised OSE objective sits well above the calibrated
+    // baseline and the drift monitor trips deterministically
+    format!("qqqqqqqqqqqqqqqqqqqqqqqqqqqq{i:04}")
+}
+
+/// The headline soak: calibrate, drift, refresh exactly once, keep serving.
+#[test]
+fn drift_triggers_exactly_one_refresh_and_serving_stays_healthy() {
+    let seed = soak_seed();
+    let n = soak_n();
+    let (path, names) = write_corpus("soak", seed, n);
+    let pcfg = soak_pipeline(seed);
+    let backend = Backend::native();
+    let r = embed(&path, &pcfg, &backend);
+
+    let drift = DriftConfig { window: 40, calibration: 40, degrade_factor: 1.3 };
+    let server = start_server(&path, &r, &backend, Some(drift));
+    let h = server.handle();
+    let ctl = RefreshController::start(
+        h.clone(),
+        path.clone(),
+        pcfg.clone(),
+        backend.clone(),
+        r.landmark_idx.clone(),
+        r.landmark_config.clone(),
+        RefreshConfig {
+            cooldown: Duration::from_millis(400),
+            ingest_buffer: 512,
+            poll: Duration::from_millis(20),
+        },
+    )
+    .unwrap();
+
+    // Phase A — in-distribution soak: corrupted copies of corpus names
+    // calibrate the monitor (40 samples) and fill the window behind it.
+    let mut geco = Geco::new(GecoConfig { seed: seed ^ 0xA, ..Default::default() });
+    run_batch(
+        &h,
+        (0..100).map(|q| geco.corrupt(&names[(q * 31) % names.len()])),
+    );
+    assert_eq!(h.metrics.snapshot().refreshes, 0, "no drift yet");
+    assert_eq!(h.generation(), 0);
+
+    // Phase B — OOD storm: keep injecting until the monitor fires and the
+    // controller completes a refresh. Bounded, not timed: the signal is
+    // deterministic, the wall clock is not.
+    let t0 = Instant::now();
+    let mut injected = 0usize;
+    while h.metrics.snapshot().refreshes == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(120),
+            "drift storm never triggered a refresh \
+             (signals={}, failures={})",
+            h.metrics.snapshot().drift_signals,
+            h.metrics.snapshot().refresh_failures,
+        );
+        run_batch(&h, (0..10).map(|k| ood_query(injected + k)));
+        injected += 10;
+    }
+
+    // Phase C — keep the storm going well past the cooldown: the refresh
+    // consumed its signals and the post-swap monitor recalibrated on the
+    // new traffic mix, so this episode fires exactly once.
+    run_batch(&h, (0..80).map(|k| ood_query(10_000 + k)));
+
+    let snap = h.metrics.snapshot();
+    assert_eq!(snap.refreshes, 1, "exactly one refresh per drift episode");
+    assert_eq!(snap.refresh_failures, 0);
+    assert_eq!(snap.generation, 1);
+    assert_eq!(h.generation(), 1);
+    assert_eq!(snap.failed, 0, "zero error replies across the soak");
+    assert_eq!(snap.degraded, 0);
+    assert!(snap.drift_signals >= 1);
+
+    let report = ctl.last_report().expect("a refresh completed");
+    assert_eq!(report.generation, 1);
+    assert!(report.ingested > 0, "the storm was ingested into the corpus");
+    assert!(report.landmark_stress.is_finite());
+    assert!(report.swap_drain < Duration::from_secs(30));
+    assert_eq!(snap.swap_drain_ms, report.swap_drain.as_millis() as u64);
+    // the alignment is either a real fit or explicitly skipped (NaN when
+    // the re-selection kept fewer than dim+1 old landmarks)
+    assert!(report.align_rmsd.is_nan() || report.align_rmsd >= 0.0);
+
+    // The corpus grew by exactly the ingested queries and reopens clean.
+    let table = ObjectTable::open(&path, DEFAULT_CACHE_BUDGET).unwrap();
+    assert!(table.len() >= n + report.ingested);
+
+    // Shadow-solve quality: the warm-started base must match a
+    // from-scratch re-solve over the same grown corpus and landmark set
+    // to within 0.05 normalised stress.
+    let source = TableDelta::text(&table, &Levenshtein).unwrap();
+    let new_idx = ctl.landmark_idx();
+    let sub = SubsetDelta::new(&source, &new_idx);
+    let mut lcfg = pcfg.lsmds.clone();
+    lcfg.dim = pcfg.dim;
+    lcfg.seed = pcfg.seed ^ 0x5eed;
+    let (_, cold_stress) =
+        solve_base_source(&sub, &lcfg, pcfg.base_solver, &backend).unwrap();
+    assert!(
+        (report.landmark_stress - cold_stress).abs() <= 0.05,
+        "warm stress {} vs from-scratch {}",
+        report.landmark_stress,
+        cold_stress
+    );
+    drop(table);
+
+    ctl.stop();
+    drop(h);
+    server.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+/// Chaos: a refresh killed between the corpus append and the shadow solve
+/// must leave the old generation serving and the corpus valid — and the
+/// next attempt must recover.
+#[test]
+fn killed_refresh_leaves_old_generation_serving_and_recovers() {
+    let seed = soak_seed() ^ 0x0BAD;
+    let (path, names) = write_corpus("kill", seed, 60);
+    let pcfg = PipelineConfig {
+        dim: 2,
+        landmarks: 20,
+        landmark_method: LandmarkMethod::Random,
+        backend: OseBackend::Opt,
+        lsmds: LsmdsConfig { dim: 2, max_iters: 60, ..Default::default() },
+        ose_steps: Some(8),
+        seed,
+        ..Default::default()
+    };
+    let backend = Backend::native();
+    let r = embed(&path, &pcfg, &backend);
+    let server = start_server(&path, &r, &backend, None);
+    let h = server.handle();
+    let ctl = RefreshController::start(
+        h.clone(),
+        path.clone(),
+        pcfg,
+        backend,
+        r.landmark_idx.clone(),
+        r.landmark_config.clone(),
+        // manual control only: the poll loop must stay out of the way
+        RefreshConfig { poll: Duration::from_secs(3600), ..Default::default() },
+    )
+    .unwrap();
+
+    // buffer exactly 10 queries (the tap fires at submission, so every
+    // acknowledged reply is a buffered query)
+    run_batch(&h, (0..10).map(|q| format!("{} x{q}", names[q])));
+
+    ctl.set_chaos_kill(true);
+    let err = ctl.run_once().expect_err("the chaos hook kills this refresh");
+    assert!(err.to_string().contains("chaos"), "{err:#}");
+
+    // old generation intact, failure counted, serving untouched
+    let snap = h.metrics.snapshot();
+    assert_eq!(snap.refreshes, 0);
+    assert_eq!(snap.refresh_failures, 1);
+    assert_eq!(snap.generation, 0);
+    assert_eq!(h.generation(), 0);
+    run_batch(&h, ["still serving after the kill".to_string()]);
+
+    // the append finished before the kill: the corpus reopens valid with
+    // all 10 ingested records behind the original rows
+    let table = ObjectTable::open(&path, DEFAULT_CACHE_BUDGET).unwrap();
+    assert_eq!(table.len(), 70);
+    drop(table);
+
+    // recovery: the next cycle completes (nothing left to ingest — the
+    // killed attempt already drained the buffer into the corpus)
+    ctl.set_chaos_kill(false);
+    let report = ctl.run_once().unwrap();
+    assert_eq!(report.generation, 1);
+    assert_eq!(report.ingested, 0);
+    assert_eq!(h.generation(), 1);
+    assert_eq!(h.metrics.snapshot().refreshes, 1);
+    run_batch(&h, ["serving on the recovered generation".to_string()]);
+
+    ctl.stop();
+    drop(h);
+    server.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+/// No drift injected: replies are bit-identical across repeats, across a
+/// server rebuilt from the same pipeline result (a restarted generation),
+/// and across the dense (`query_k = 0`) vs graph-assisted
+/// (`query_k >= L`) query paths.
+#[test]
+fn queries_are_bit_identical_across_restarts_and_query_k_modes() {
+    let seed = soak_seed() ^ 0xB17;
+    let (path, names) = write_corpus("bitid", seed, 80);
+    let backend = Backend::native();
+    let queries: Vec<String> = (0..12).map(|q| format!("{} probe", names[q * 5])).collect();
+
+    let mut per_mode: Vec<Vec<Vec<f32>>> = Vec::new();
+    for query_k in [0usize, 24] {
+        let pcfg = PipelineConfig {
+            dim: 2,
+            landmarks: 24,
+            landmark_method: LandmarkMethod::Random,
+            backend: OseBackend::Opt,
+            lsmds: LsmdsConfig { dim: 2, max_iters: 80, ..Default::default() },
+            ose_steps: Some(8),
+            seed,
+            query_k,
+            ..Default::default()
+        };
+        let r = embed(&path, &pcfg, &backend);
+        let mut runs: Vec<Vec<Vec<f32>>> = Vec::new();
+        // two servers from the same result = two serving generations of
+        // the same model; two passes within each = repeat determinism
+        for _ in 0..2 {
+            let server = start_server(&path, &r, &backend, None);
+            let h = server.handle();
+            for _ in 0..2 {
+                let coords: Vec<Vec<f32>> = queries
+                    .iter()
+                    .map(|q| {
+                        let reply =
+                            h.submit(Request::object(q.clone())).recv().unwrap();
+                        assert!(reply.coords.iter().all(|c| c.is_finite()));
+                        reply.coords
+                    })
+                    .collect();
+                runs.push(coords);
+            }
+            drop(h);
+            server.shutdown();
+        }
+        for run in &runs[1..] {
+            assert_eq!(run, &runs[0], "replies drifted across runs (query_k={query_k})");
+        }
+        per_mode.push(runs.into_iter().next().unwrap());
+    }
+    assert_eq!(
+        per_mode[0], per_mode[1],
+        "query_k >= L must be bit-identical to the dense path"
+    );
+    std::fs::remove_file(&path).ok();
+}
